@@ -1,0 +1,104 @@
+//! Chaos demo (§6): concurrent failures on a 4-server cluster — disjoint
+//! rails on adjacent nodes, bandwidth spectrum, repair mid-run — exercising
+//! logical re-ranking, recursive decomposition and successive failovers,
+//! with the data plane verified after every scenario.
+//!
+//!     cargo run --release --example chaos_multifailure -- [--seed 7] [--rounds 6]
+
+use r2ccl::collectives::exec::{
+    ChannelRouting, ExecOptions, Executor, FaultAction, FaultEvent,
+};
+use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
+use r2ccl::collectives::{PhantomPlane, RealPlane};
+use r2ccl::config::TimingConfig;
+use r2ccl::netsim::{self, FaultPlane};
+use r2ccl::schedule::{min_edge_capacity, rail_sets, recursive_allreduce, reranked_server_order};
+use r2ccl::topology::{Topology, TopologyConfig};
+use r2ccl::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.get_u64("seed", 7);
+    let rounds = args.get_usize("rounds", 6);
+    let topo = Topology::build(&TopologyConfig::simai_a100(4));
+    let timing = TimingConfig::default();
+    let channels = 2;
+    let mut rng = Rng::new(seed);
+
+    println!("== chaos: 4×8-A100 cluster, random concurrent NIC failures ==\n");
+    for round in 0..rounds {
+        // Random failure pattern: 2–6 NICs, at most 5 per server.
+        let k = rng.range(2, 7);
+        let nics = rng.sample_indices(topo.n_nics(), k);
+        let mut eng = netsim::engine_for(&topo);
+        let mut faults = FaultPlane::new(&topo);
+        let mut per_server = vec![0usize; topo.n_servers()];
+        let mut applied = Vec::new();
+        for n in nics {
+            let s = topo.server_of_nic(n);
+            if per_server[s] >= 5 {
+                continue;
+            }
+            per_server[s] += 1;
+            faults.fail_nic(&topo, &mut eng, n);
+            applied.push(n);
+        }
+        let rem: Vec<f64> = (0..topo.n_servers())
+            .map(|s| 1.0 - faults.lost_bandwidth_fraction(&topo, s))
+            .collect();
+        let order = reranked_server_order(&topo, &faults);
+        let sets = rail_sets(&topo, &faults);
+        let default_order: Vec<usize> = (0..topo.n_servers()).collect();
+        println!(
+            "round {round}: failed NICs {applied:?}  rem/server {:?}",
+            rem.iter().map(|r| format!("{:.0}%", r * 100.0)).collect::<Vec<_>>()
+        );
+        println!(
+            "  re-ranked server order {order:?} (min shared rails {} → {})",
+            min_edge_capacity(&default_order, &sets),
+            min_edge_capacity(&order, &sets)
+        );
+
+        // Recursive R²CCL-AllReduce with the data plane verified.
+        let elems = 192 * 2 * channels * 4; // aligned to all level units
+        let bytes = (elems * 4) as u64;
+        let routing = ChannelRouting::default_rails(&topo, channels);
+        let sched = recursive_allreduce(&topo, &faults, &routing, bytes, elems, channels);
+        let mut plane = RealPlane::new(topo.n_gpus(), elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let initial: Vec<(usize, FaultAction)> =
+            applied.iter().map(|&n| (n, FaultAction::FailNic)).collect();
+        let rep = Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .with_initial_faults(&initial)
+            .run(&sched, &mut plane);
+        assert!(!rep.crashed, "recursive schedule crashed");
+        plane.assert_all_equal(&expected);
+
+        // Compare against the plain ring under the same chaos, plus one
+        // *additional* failure + repair injected mid-flight (hot repair).
+        let spec = nccl_rings(&topo, channels);
+        let plain = ring_allreduce(&spec, 64 << 20, 0);
+        let base = Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .run(&plain, &mut PhantomPlane)
+            .completion_or_panic();
+        let healthy_nics: Vec<usize> =
+            (0..topo.n_nics()).filter(|n| faults.is_usable(*n)).collect();
+        let extra = *rng.choose(&healthy_nics);
+        let script = vec![
+            FaultEvent { at: base * 0.3, nic: extra, action: FaultAction::FailNic },
+            FaultEvent { at: base * 0.8, nic: extra, action: FaultAction::Repair },
+        ];
+        let rep2 = Executor::new(&topo, &timing, routing, ExecOptions::default(), script)
+            .with_initial_faults(&initial)
+            .run(&plain, &mut PhantomPlane);
+        assert!(!rep2.crashed);
+        println!(
+            "  recursive AR verified ✓ | plain ring + live failure of nic {extra}: {} migrations, {:.2}ms vs {:.2}ms healthy\n",
+            rep2.migrations.len(),
+            rep2.completion.unwrap() * 1e3,
+            base * 1e3
+        );
+    }
+    println!("chaos_multifailure OK: every scenario recovered and verified");
+}

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO *text* artifacts for the
+Rust PJRT runtime.
+
+HLO text — not serialized HloModuleProto — is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit
+instruction ids); the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (under artifacts/):
+  model_grad.hlo.txt    (params..., tokens, targets) -> (loss, grads...)
+  model_update.hlo.txt  (params..., grads..., lr)    -> (params'...)
+  reduce_chunks.hlo.txt (chunks[K, N])               -> (sum[N],)
+  meta.json             ordered parameter names/shapes + model config
+
+Usage: python -m compile.aot --out-dir ../artifacts --preset small \
+           --batch 4 [--k 8 --n 65536]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import reduce_chunks
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg, batch):
+    shapes = M.param_shapes(cfg)
+    names = list(shapes.keys())
+    p_spec = {k: jax.ShapeDtypeStruct(v, jnp.float32) for k, v in shapes.items()}
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg["seq"]), jnp.int32)
+
+    # grad_step over the flat name-sorted tuple of params (stable ABI).
+    def grad_flat(*args):
+        params = dict(zip(names, args[: len(names)]))
+        tokens, targets = args[len(names)], args[len(names) + 1]
+        loss, grads = M.grad_step(params, tokens, targets, cfg)
+        return (loss, *[grads[k] for k in names])
+
+    def update_flat(*args):
+        params = dict(zip(names, args[: len(names)]))
+        grads = dict(zip(names, args[len(names) : 2 * len(names)]))
+        lr = args[2 * len(names)]
+        new = M.apply_update(params, grads, lr)
+        return tuple(new[k] for k in names)
+
+    p_args = [p_spec[k] for k in names]
+    lowered_grad = jax.jit(grad_flat).lower(*p_args, tok_spec, tok_spec)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered_update = jax.jit(update_flat).lower(*p_args, *p_args, lr_spec)
+    return names, shapes, lowered_grad, lowered_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--k", type=int, default=8, help="reduce_chunks peers")
+    ap.add_argument("--n", type=int, default=65536, help="reduce_chunks elems")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg = M.preset(args.preset)
+
+    print(f"[aot] preset={args.preset} params={M.n_params(cfg)/1e6:.1f}M batch={args.batch}")
+    names, shapes, lowered_grad, lowered_update = lower_model(cfg, args.batch)
+
+    grad_path = os.path.join(args.out_dir, "model_grad.hlo.txt")
+    with open(grad_path, "w") as f:
+        f.write(to_hlo_text(lowered_grad))
+    print(f"[aot] wrote {grad_path}")
+
+    update_path = os.path.join(args.out_dir, "model_update.hlo.txt")
+    with open(update_path, "w") as f:
+        f.write(to_hlo_text(lowered_update))
+    print(f"[aot] wrote {update_path}")
+
+    # Standalone L1 kernel artifact (the collective data plane's reducer).
+    red_spec = jax.ShapeDtypeStruct((args.k, args.n), jnp.float32)
+    lowered_red = jax.jit(lambda x: (reduce_chunks(x),)).lower(red_spec)
+    red_path = os.path.join(args.out_dir, "reduce_chunks.hlo.txt")
+    with open(red_path, "w") as f:
+        f.write(to_hlo_text(lowered_red))
+    print(f"[aot] wrote {red_path}")
+
+    meta = {
+        "preset": args.preset,
+        "config": cfg,
+        "batch": args.batch,
+        "n_params": int(M.n_params(cfg)),
+        "params": [{"name": n, "shape": list(shapes[n])} for n in names],
+        "reduce_chunks": {"k": args.k, "n": args.n},
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret=True on CPU; Mosaic on real TPUs)."""
+
+from .fused_linear import fused_linear, matmul
+from .reduce_chunks import reduce_chunks
+
+__all__ = ["fused_linear", "matmul", "reduce_chunks"]

@@ -1,0 +1,133 @@
+"""L1 Pallas kernels: tiled matmul and fused linear+bias+GELU.
+
+The transformer's MLP hot spot. GPU systems stage tiles through shared
+memory per threadblock and drive tensor cores; the TPU re-think
+(DESIGN.md §2) expresses the same dataflow as BlockSpecs: each (i, j) grid
+step keeps an (TM × K) row panel and a (K × TN) column panel in VMEM and
+feeds the MXU-shaped `jnp.dot`; the bias add and GELU fuse into the same
+VMEM residency (no extra HBM round trip — the entire point of fusion).
+
+Tiles are 128×128: the MXU systolic array is 128×128, so TM=TN=128 gives
+full occupancy; VMEM per step = (TM·K + K·TN + TM·TN)·4 B — for K ≤ 4096
+that is ≤ 4.2 MiB, within budget with double buffering.
+
+Autodiff: `pallas_call` has no automatic VJP, so `fused_linear` carries a
+`custom_vjp` whose backward pass reuses the same Pallas matmul kernel
+(dx = dz @ wᵀ, dw = xᵀ @ dz) — the backward hot path runs on the kernel
+too, not on a jnp fallback.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM = 128
+TN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _fused_kernel(x_ref, w_ref, b_ref, o_ref):
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...].astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    o_ref[...] = (0.5 * z * (1.0 + jnp.tanh(c * (z + 0.044715 * z**3)))).astype(
+        o_ref.dtype
+    )
+
+
+def _pad2(a, m, n):
+    return jnp.pad(a, ((0, m - a.shape[0]), (0, n - a.shape[1])))
+
+
+def _ceil_to(v, t):
+    return (v + t - 1) // t * t
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    mp, np_ = _ceil_to(m, TM), _ceil_to(n, TN)
+    xp, wp = _pad2(x, mp, k), _pad2(w, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // TM, np_ // TN),
+        in_specs=[
+            pl.BlockSpec((TM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _fused_fwd_impl(x, w, b):
+    m, k = x.shape
+    _, n = w.shape
+    mp, np_ = _ceil_to(m, TM), _ceil_to(n, TN)
+    xp, wp = _pad2(x, mp, k), _pad2(w, k, np_)
+    bp = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=(mp // TM, np_ // TN),
+        in_specs=[
+            pl.BlockSpec((TM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TN), lambda i, j: (0, j)),
+            pl.BlockSpec((1, TN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _gelu_and_grad(z):
+    zf = z.astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    inner = c * (zf + 0.044715 * zf**3)
+    t = jnp.tanh(inner)
+    gelu = 0.5 * zf * (1.0 + t)
+    dgelu = 0.5 * (1.0 + t) + 0.5 * zf * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * zf**2)
+    return gelu, dgelu
+
+
+@jax.custom_vjp
+def fused_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """gelu(x @ w + b) with the Pallas fused kernel."""
+    return _fused_fwd_impl(x, w, b)
+
+
+def _fused_fwd(x, w, b):
+    # Recompute-friendly: save x, w and the pre-activation z.
+    z = matmul(x, w) + b[None, :]
+    gelu, _ = _gelu_and_grad(z)
+    return gelu.astype(x.dtype), (x, w, z)
+
+
+def _fused_bwd(res, dy):
+    x, w, z = res
+    _, dgelu = _gelu_and_grad(z)
+    dz = (dy.astype(jnp.float32) * dgelu).astype(x.dtype)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz.astype(jnp.float32), axis=0).astype(x.dtype)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.jit)
+def fused_linear_jit(x, w, b):
+    return fused_linear(x, w, b)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: chunk reduction — the collective data plane's hot loop.
+
+The paper's system reduces arriving chunks into the accumulation buffer
+inside NCCL's fused CUDA kernels. Re-thought for the TPU model
+(DESIGN.md §2 Hardware-Adaptation): instead of a threadblock per chunk
+striding over global memory, we tile the element axis with a BlockSpec so
+each grid step stages a (K × TILE) slab HBM→VMEM and the VPU accumulates
+across the K peers; K is folded into the block (peers are contiguous in
+VMEM) rather than into a CUDA grid dimension.
+
+VMEM footprint per grid step: (K+1) × TILE × 4 B (f32). With K=8 peers and
+TILE=2048 that is 72 KiB — comfortably inside the ~16 MiB VMEM budget, so
+the schedule could double-buffer 100+ steps ahead on real hardware.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated through the interpreter and the
+lowered HLO is what the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Element-axis tile. 2048 f32 = 8 KiB per peer row: VPU-lane aligned (128)
+# and large enough to amortise the HBM→VMEM transfer.
+TILE = 2048
+
+
+def _reduce_kernel(x_ref, o_ref):
+    # x_ref: (K, TILE) slab in VMEM; o_ref: (TILE,) accumulator tile.
+    o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def reduce_chunks(chunks: jnp.ndarray) -> jnp.ndarray:
+    """Sum K peer buffers elementwise: (K, N) -> (N,).
+
+    Pads N up to a TILE multiple, runs the Pallas grid, slices back.
+    """
+    k, n = chunks.shape
+    n_pad = (n + TILE - 1) // TILE * TILE
+    x = jnp.pad(chunks, ((0, 0), (0, n_pad - n)))
+    out = pl.pallas_call(
+        _reduce_kernel,
+        grid=(n_pad // TILE,),
+        in_specs=[pl.BlockSpec((k, TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), chunks.dtype),
+        interpret=True,
+    )(x)
+    return out[:n]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package has a reference implementation here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts `assert_allclose(kernel(...), ref(...))`.
+"""
+
+import jax.numpy as jnp
+
+
+def reduce_chunks_ref(chunks: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise sum over K peer chunk buffers: (K, N) -> (N,).
+
+    This is the arithmetic of ReduceScatter/AllReduce — what NCCL's fused
+    CUDA reduce kernels do on arrival, and what R2CCL's data plane applies
+    per completed chunk.
+    """
+    return jnp.sum(chunks.astype(jnp.float32), axis=0).astype(chunks.dtype)
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle: (M, K) @ (K, N) -> (M, N), f32 accumulation."""
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def gelu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the kernel's formula exactly)."""
+    xf = x.astype(jnp.float32)
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    out = 0.5 * xf * (1.0 + jnp.tanh(c * (xf + 0.044715 * xf**3)))
+    return out.astype(x.dtype)
+
+
+def fused_linear_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fused linear + bias + GELU oracle: gelu(x @ w + b)."""
+    z = matmul_ref(x, w).astype(jnp.float32) + b.astype(jnp.float32)
+    return gelu_ref(z).astype(x.dtype)

@@ -1,0 +1,193 @@
+"""L2: GPT-style transformer language model in JAX, calling the L1 Pallas
+kernels, with a training step (loss + grads) and an SGD update step.
+
+The parameter tree is a flat, *name-sorted* dict so the Rust runtime and
+this module agree on argument order without pickling anything: aot.py dumps
+``meta.json`` with the ordered (name, shape) list and the Rust side feeds
+PJRT buffers in exactly that order.
+
+Sizes are presets; "d100m" is the ~100M-parameter end-to-end validation
+model, "small" (~26M) is the default example model (CPU-friendly), "tiny"
+is for tests.
+"""
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear
+
+Params = Dict[str, jnp.ndarray]
+
+
+PRESETS = {
+    # name: (layers, d_model, n_heads, d_ff, vocab, seq)
+    "tiny": (2, 128, 4, 512, 512, 64),
+    "small": (8, 512, 8, 2048, 8192, 128),
+    "d100m": (12, 768, 12, 3072, 32768, 256),
+}
+
+
+def preset(name: str):
+    layers, d, h, ff, vocab, seq = PRESETS[name]
+    return dict(layers=layers, d_model=d, n_heads=h, d_ff=ff, vocab=vocab, seq=seq)
+
+
+def param_shapes(cfg) -> Dict[str, Tuple[int, ...]]:
+    """Flat parameter dict (iteration order = sorted names)."""
+    d, ff, v, layers = cfg["d_model"], cfg["d_ff"], cfg["vocab"], cfg["layers"]
+    shapes = {
+        "embed": (v, d),
+        "pos_embed": (cfg["seq"], d),
+        "ln_f.bias": (d,),
+        "ln_f.scale": (d,),
+    }
+    for i in range(layers):
+        p = f"layer{i:02d}."
+        shapes.update(
+            {
+                p + "ln1.scale": (d,),
+                p + "ln1.bias": (d,),
+                p + "attn.qkv": (d, 3 * d),
+                p + "attn.qkv_bias": (3 * d,),
+                p + "attn.out": (d, d),
+                p + "attn.out_bias": (d,),
+                p + "ln2.scale": (d,),
+                p + "ln2.bias": (d,),
+                p + "mlp.fc": (d, ff),
+                p + "mlp.fc_bias": (ff,),
+                p + "mlp.proj": (ff, d),
+                p + "mlp.proj_bias": (d,),
+            }
+        )
+    return dict(sorted(shapes.items()))
+
+
+def init_params(cfg, key) -> Params:
+    shapes = param_shapes(cfg)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("bias",)) or ".ln" in name or name.startswith("ln_f"):
+            init = jnp.ones(shape) if name.endswith("scale") else jnp.zeros(shape)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            init = jax.random.normal(sub, shape) * (0.02 if "embed" in name else fan_in**-0.5)
+        params[name] = init.astype(jnp.float32)
+    return params
+
+
+def n_params(cfg) -> int:
+    return sum(
+        int(jnp.prod(jnp.array(s))) for s in param_shapes(cfg).values()
+    )
+
+
+def _layer_norm(x, scale, bias):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + 1e-5) * scale + bias
+
+
+def _attention(x, qkv, qkv_b, out, out_b, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+    y = jnp.einsum("bsd,de->bse", x, qkv) + qkv_b
+    q, k, v = jnp.split(y, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(hd).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return jnp.einsum("bsd,de->bse", o, out) + out_b
+
+
+def _mlp(x, fc, fc_b, proj, proj_b):
+    b, s, d = x.shape
+    # The Pallas fused linear kernel (matmul+bias+GELU in one VMEM pass).
+    h = fused_linear(x.reshape(b * s, d), fc, fc_b)
+    return (h @ proj + proj_b).reshape(b, s, d)
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Logits for a [B, S] int32 token batch."""
+    b, s = tokens.shape
+    x = params["embed"][tokens] + params["pos_embed"][:s]
+    for i in range(cfg["layers"]):
+        p = f"layer{i:02d}."
+        h = _layer_norm(x, params[p + "ln1.scale"], params[p + "ln1.bias"])
+        x = x + _attention(
+            h,
+            params[p + "attn.qkv"],
+            params[p + "attn.qkv_bias"],
+            params[p + "attn.out"],
+            params[p + "attn.out_bias"],
+            cfg["n_heads"],
+        )
+        h = _layer_norm(x, params[p + "ln2.scale"], params[p + "ln2.bias"])
+        x = x + _mlp(
+            h,
+            params[p + "mlp.fc"],
+            params[p + "mlp.fc_bias"],
+            params[p + "mlp.proj"],
+            params[p + "mlp.proj_bias"],
+        )
+    x = _layer_norm(x, params["ln_f.scale"], params["ln_f.bias"])
+    return x @ params["embed"].T  # tied embedding
+
+
+def loss_fn(params: Params, tokens, targets, cfg) -> jnp.ndarray:
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def grad_step(params: Params, tokens, targets, cfg):
+    """One training step: (loss, grads) — the artifact the Rust trainer
+    executes per rank; gradients then flow through the simulated R²CCL
+    AllReduce before `apply_update`."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets, cfg)
+    return loss, grads
+
+
+def apply_update(params: Params, grads: Params, lr: jnp.ndarray) -> Params:
+    """Plain SGD (momentum would double the artifact's state tensors)."""
+    return {k: params[k] - lr * grads[k] for k in params}
+
+
+def make_jitted(cfg):
+    """Jitted (grad_step, apply_update) closures over the config."""
+
+    @functools.partial(jax.jit)
+    def _grad(params, tokens, targets):
+        return grad_step(params, tokens, targets, cfg)
+
+    @functools.partial(jax.jit)
+    def _update(params, grads, lr):
+        return apply_update(params, grads, lr)
+
+    return _grad, _update
+
+
+def synthetic_batch(key, cfg, batch):
+    """Markov-ish synthetic corpus: next token depends on current one, so
+    the model has real structure to learn (loss decreases measurably)."""
+    vocab, seq = cfg["vocab"], cfg["seq"]
+    k1, k2 = jax.random.split(key)
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    steps = jax.random.randint(k2, (batch, seq), 0, 7)
+    toks = (start + jnp.cumsum(steps, axis=1)) % vocab
+    tokens = toks[:, :-1] if seq > 1 else toks
+    targets = toks[:, 1:] if seq > 1 else toks
+    # Keep [B, S] static: pad back to seq by rolling.
+    tokens = jnp.pad(tokens, ((0, 0), (0, 1)))[:, :seq]
+    targets = jnp.pad(targets, ((0, 0), (0, 1)))[:, :seq]
+    return tokens.astype(jnp.int32), targets.astype(jnp.int32)

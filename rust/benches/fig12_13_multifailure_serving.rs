@@ -1,0 +1,86 @@
+//! Figures 12 & 13: serving under *multiple* NIC failures (405B, TP8+PP2).
+//! Fig 12: TTFT & TPOT percentiles vs number of failed NICs at QPS=0.1 —
+//! overheads stay within 0–5% even when most of one node's bandwidth is
+//! gone. Fig 13: TPOT p50/p95 vs QPS with multiple failures.
+
+use r2ccl::bench::Table;
+use r2ccl::sim::{serve_sim, InferModel, ServeCfg, ServeFailure, ServeStrategy};
+
+fn main() {
+    let model = InferModel::llama405b();
+
+    // Fig 12: sweep failed-NIC count at fixed low load.
+    let cfg = ServeCfg::paper_default(0.1);
+    let base = serve_sim(&model, &cfg, ServeStrategy::NoFailure, None, 1);
+    let (mut bt, mut bp) = (base.ttft(), base.tpot());
+    let mut t12 = Table::new(
+        "Fig 12 — 405B TP8 PP2, QPS=0.1: percentiles vs #NIC failures on one node",
+        &["nics failed", "TTFT p50", "TTFT p95", "TPOT p50", "TPOT p95", "TPOT p95 ovh"],
+    );
+    t12.row(vec![
+        "0".into(),
+        format!("{:.3}s", bt.p50()),
+        format!("{:.3}s", bt.p95()),
+        format!("{:.1}ms", bp.p50() * 1e3),
+        format!("{:.1}ms", bp.p95() * 1e3),
+        "—".into(),
+    ]);
+    for nics in 1..=6usize {
+        let fail = Some(ServeFailure { at: 50.0, nics });
+        let r = serve_sim(&model, &cfg, ServeStrategy::R2Balance, fail, 1);
+        let (mut t, mut p) = (r.ttft(), r.tpot());
+        let ovh = (p.p95() - bp.p95()) / bp.p95();
+        t12.row(vec![
+            nics.to_string(),
+            format!("{:.3}s", t.p50()),
+            format!("{:.3}s", t.p95()),
+            format!("{:.1}ms", p.p50() * 1e3),
+            format!("{:.1}ms", p.p95() * 1e3),
+            format!("{:+.2}%", ovh * 100.0),
+        ]);
+        assert!(ovh < 0.05, "{nics} failures: TPOT overhead {ovh} must stay <5%");
+    }
+    t12.print();
+    t12.save("fig12_multifailure_serving");
+
+    // Fig 13: TPOT vs QPS under 2 and 4 failures.
+    let mut t13 = Table::new(
+        "Fig 13 — 405B TPOT (ms) vs QPS under multiple NIC failures",
+        &["qps", "p50 none", "p95 none", "p50 2fail", "p95 2fail", "p50 4fail", "p95 4fail"],
+    );
+    for &qps in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+        let cfg = ServeCfg::paper_default(qps);
+        let mut none = serve_sim(&model, &cfg, ServeStrategy::NoFailure, None, 1).tpot();
+        let mut f2 = serve_sim(
+            &model,
+            &cfg,
+            ServeStrategy::R2Balance,
+            Some(ServeFailure { at: 50.0, nics: 2 }),
+            1,
+        )
+        .tpot();
+        let mut f4 = serve_sim(
+            &model,
+            &cfg,
+            ServeStrategy::R2Balance,
+            Some(ServeFailure { at: 50.0, nics: 4 }),
+            1,
+        )
+        .tpot();
+        t13.row(vec![
+            format!("{qps}"),
+            format!("{:.1}", none.p50() * 1e3),
+            format!("{:.1}", none.p95() * 1e3),
+            format!("{:.1}", f2.p50() * 1e3),
+            format!("{:.1}", f2.p95() * 1e3),
+            format!("{:.1}", f4.p50() * 1e3),
+            format!("{:.1}", f4.p95() * 1e3),
+        ]);
+        if qps <= 0.2 {
+            assert!(f4.p95() < none.p95() * 1.06, "4-failure TPOT within ~5% @ {qps}");
+        }
+    }
+    t13.print();
+    t13.save("fig13_tpot_vs_qps");
+    println!("\nfig12/13 OK");
+}

@@ -1,0 +1,59 @@
+//! Figure 14: single-request cumulative latency vs DéjàVu and a
+//! non-fault-tolerant baseline — OPT-66B and BLOOM-176B, 500-token prompt,
+//! 1500-token generation, failure at decode step 800 (DéjàVu's own
+//! methodology, application stack unchanged, only the comm layer varies).
+//!
+//! Paper: non-FT inflates 1.62×/1.79×; DéjàVu 1.14–1.33×; R²CCL under
+//! DéjàVu's stack 0.71–1.58% — 8.6×/47× lower recovery overhead.
+
+use r2ccl::bench::Table;
+use r2ccl::sim::{single_request_latency, InferModel, ServeStrategy};
+
+fn main() {
+    let mut table = Table::new(
+        "Fig 14 — cumulative request latency, failure at decode step 800",
+        &["model", "no-failure", "non-FT", "dejavu", "dejavu+r2ccl", "nft ×", "dv ×", "r2 ovh"],
+    );
+    for model in [InferModel::opt66b(), InferModel::bloom176b()] {
+        let base = single_request_latency(&model, ServeStrategy::NoFailure, 500, 1500, None);
+        let dv_base = single_request_latency(&model, ServeStrategy::DejaVu, 500, 1500, None);
+        let nft = single_request_latency(
+            &model,
+            ServeStrategy::Restart { outage: 35.0 },
+            500,
+            1500,
+            Some(800),
+        );
+        let dv = single_request_latency(&model, ServeStrategy::DejaVu, 500, 1500, Some(800));
+        let r2 = single_request_latency(&model, ServeStrategy::DejaVuR2, 500, 1500, Some(800));
+        let nft_ratio = nft / base;
+        let dv_ratio = dv / dv_base;
+        let r2_ovh = r2 / dv_base - 1.0;
+        table.row(vec![
+            model.name.to_string(),
+            format!("{base:.1}s"),
+            format!("{nft:.1}s"),
+            format!("{dv:.1}s"),
+            format!("{r2:.1}s"),
+            format!("{nft_ratio:.2}×"),
+            format!("{dv_ratio:.2}×"),
+            format!("{:+.2}%", r2_ovh * 100.0),
+        ]);
+        // Shape assertions (paper ordering and magnitudes).
+        assert!(nft_ratio > 1.4, "{}: non-FT ≥1.4× (paper 1.62–1.79×)", model.name);
+        assert!(
+            dv_ratio > 1.03 && dv_ratio < nft_ratio,
+            "{}: DéjàVu between R² and non-FT",
+            model.name
+        );
+        assert!(r2_ovh < 0.05, "{}: R²CCL overhead ≈0 (paper 0.71–1.58%)", model.name);
+        let improvement = (dv - dv_base) / (r2 - dv_base).max(1e-9);
+        println!(
+            "{}: R²CCL recovery overhead {:.1}× lower than DéjàVu (paper: 8.6×/47×)",
+            model.name, improvement
+        );
+    }
+    table.print();
+    table.save("fig14_dejavu");
+    println!("\nfig14 OK");
+}

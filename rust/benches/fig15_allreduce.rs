@@ -1,0 +1,83 @@
+//! Figure 15: AllReduce bus bandwidth vs message size (8B – 16GB) on the
+//! 2×8-H100 testbed, four configurations: vanilla NCCL (no failure),
+//! R²CCL-HotRepair, R²CCL-Balance, R²CCL-AllReduce — plus the planner's
+//! auto pick, showing the α-β crossover.
+//!
+//! Paper shape to reproduce: HotRepair ≈ −46% at large sizes; Balance wins
+//! small/medium (≈92%); R²-AllReduce wins large (≈93% vs 83%).
+
+use r2ccl::bench::{gbps, Table};
+use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::collectives::{busbw, CollKind};
+use r2ccl::config::Preset;
+use r2ccl::schedule::Strategy;
+use r2ccl::util::stats::fmt_bytes;
+
+fn main() {
+    let preset = Preset::testbed();
+    let healthy = Communicator::new(&preset, 8);
+    let mut degraded = Communicator::new(&preset, 8);
+    degraded.note_failure(0, FaultAction::FailNic);
+    let n = healthy.topo.n_gpus();
+
+    let mut table = Table::new(
+        "Fig 15 — AllReduce busbw (GB/s), 2×8 H100, 1 NIC failed (X=12.5%)",
+        &["size", "no-failure", "hotrepair", "balance", "r2-allreduce", "auto", "auto picks"],
+    );
+
+    // 8B → 16GB, ×4 steps (paper's nccl-tests sweep).
+    let mut sizes: Vec<u64> = Vec::new();
+    let mut s = 8u64;
+    while s <= (16u64 << 30) {
+        sizes.push(s);
+        s *= 4;
+    }
+    for &bytes in &sizes {
+        let t0 = healthy.time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto);
+        let hot = degraded.time_collective(CollKind::AllReduce, bytes, StrategyChoice::HotRepairOnly);
+        let bal = degraded.time_collective(
+            CollKind::AllReduce,
+            bytes,
+            StrategyChoice::Force(Strategy::Balance),
+        );
+        let r2 = degraded.time_collective(
+            CollKind::AllReduce,
+            bytes,
+            StrategyChoice::Force(Strategy::R2AllReduce),
+        );
+        let auto = degraded.time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto);
+        let (_, strat) = degraded.compile(CollKind::AllReduce, bytes, 0, StrategyChoice::Auto);
+        let bw = |t: Option<f64>| t.map(|t| busbw(CollKind::AllReduce, n, bytes, t)).unwrap_or(0.0);
+        table.row(vec![
+            fmt_bytes(bytes),
+            gbps(bw(t0)),
+            gbps(bw(hot)),
+            gbps(bw(bal)),
+            gbps(bw(r2)),
+            gbps(bw(auto)),
+            format!("{strat:?}"),
+        ]);
+    }
+    table.print();
+    table.save("fig15_allreduce");
+
+    // Shape assertions (the reproduction claims).
+    let big = 1u64 << 30;
+    let t0 = healthy.time_collective(CollKind::AllReduce, big, StrategyChoice::Auto).unwrap();
+    let hot = degraded
+        .time_collective(CollKind::AllReduce, big, StrategyChoice::HotRepairOnly)
+        .unwrap();
+    let bal = degraded
+        .time_collective(CollKind::AllReduce, big, StrategyChoice::Force(Strategy::Balance))
+        .unwrap();
+    let r2 = degraded
+        .time_collective(CollKind::AllReduce, big, StrategyChoice::Force(Strategy::R2AllReduce))
+        .unwrap();
+    let (rh, rb, rr) = (t0 / hot, t0 / bal, t0 / r2);
+    println!("\nlarge-message retention: hotrepair {:.0}%, balance {:.0}%, r2-allreduce {:.0}%", rh * 100.0, rb * 100.0, rr * 100.0);
+    assert!(rh < 0.65, "hotrepair should lose ~half: {rh}");
+    assert!(rb > 0.8, "balance retains ≥80%: {rb}");
+    assert!(rr > rb, "r2-allreduce beats balance at 1GB");
+    println!("fig15 OK");
+}

@@ -1,0 +1,55 @@
+//! Figure 8: SimAI-scale training of a 7B model (GBS=512) across 4→64
+//! servers of 8×A100, single NIC failure (12.5% bandwidth loss on one
+//! server). Paper shape: R²-AllReduce stays <1.5% overhead at every scale;
+//! Balance rises to ~5% at 64 servers; the communication ratio grows with
+//! scale (fig 8d).
+
+use r2ccl::bench::{pct, Table};
+use r2ccl::config::GpuComputeConfig;
+use r2ccl::schedule::PlanInput;
+use r2ccl::sim::{overhead_vs, simai_iteration, ModelConfig, ParallelConfig, TrainMethod};
+
+fn main() {
+    let model = ModelConfig::gpt_7b();
+    let gpu = GpuComputeConfig::a100();
+    let mut table = Table::new(
+        "Fig 8 — 7B training, GBS=512, 1 NIC failed, 4→64 servers (8×A100 each)",
+        &["servers", "gpus", "comm ratio", "balance ovh", "r2-allreduce ovh", "hotrepair ovh"],
+    );
+    for n in [4usize, 8, 16, 32, 64] {
+        let par = ParallelConfig { dp: n * 4, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+        let mut input = PlanInput::uniform(n, 8, 25.0e9 * 8.0, 5e-6);
+        input.rem[0] = 0.875;
+        let base = simai_iteration(&model, &par, &gpu, &input, TrainMethod::NoFailure);
+        let bal = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2Balance);
+        let r2 = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2AllReduce);
+        let hot = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2HotRepair);
+        let ratio = base.comm_time / (base.comm_time + base.compute_time);
+        table.row(vec![
+            n.to_string(),
+            (n * 8).to_string(),
+            format!("{:.1}%", ratio * 100.0),
+            pct(overhead_vs(&bal, &base)),
+            pct(overhead_vs(&r2, &base)),
+            pct(overhead_vs(&hot, &base)),
+        ]);
+        assert!(overhead_vs(&r2, &base) < 0.035, "n={n}: r2 bound");
+        assert!(overhead_vs(&r2, &base) <= overhead_vs(&bal, &base) + 1e-9);
+        assert!(overhead_vs(&hot, &base) > overhead_vs(&bal, &base));
+    }
+    table.print();
+    table.save("fig8_training_scale");
+
+    // fig 8d: comm ratio must grow with scale.
+    let ratios: Vec<f64> = [4usize, 16, 64]
+        .iter()
+        .map(|&n| {
+            let par = ParallelConfig { dp: n * 4, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+            let input = PlanInput::uniform(n, 8, 25.0e9 * 8.0, 5e-6);
+            let b = simai_iteration(&model, &par, &gpu, &input, TrainMethod::NoFailure);
+            b.comm_time / (b.comm_time + b.compute_time)
+        })
+        .collect();
+    assert!(ratios[0] < ratios[1] && ratios[1] < ratios[2], "comm ratio grows: {ratios:?}");
+    println!("\nfig8 OK (comm ratios {ratios:?})");
+}

@@ -1,0 +1,89 @@
+//! Wallclock microbenchmarks of the L3 hot paths (the §Perf targets):
+//!   * fluid-engine rate recomputation (progressive filling) under churn;
+//!   * ring-AllReduce schedule compilation (16 and 512 ranks);
+//!   * end-to-end executor run of a testbed AllReduce (the inner loop of
+//!     every figure bench);
+//!   * data-plane reduce_add throughput;
+//!   * Balance / R²-AllReduce schedule rewriting.
+//!
+//! Before/after numbers for the optimization pass live in
+//! EXPERIMENTS.md §Perf.
+
+use r2ccl::bench::time;
+use r2ccl::collectives::dataplane::reduce_add;
+use r2ccl::collectives::exec::{ChannelRouting, ExecOptions, Executor};
+use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
+use r2ccl::collectives::PhantomPlane;
+use r2ccl::config::TimingConfig;
+use r2ccl::netsim::{self, FaultPlane};
+use r2ccl::schedule::{apply_balance, r2_allreduce_schedule};
+use r2ccl::topology::{Topology, TopologyConfig};
+
+fn main() {
+    let topo = Topology::build(&TopologyConfig::testbed_h100());
+    let timing = TimingConfig::default();
+    println!("== L3 hot-path wallclock microbenchmarks ==\n");
+
+    // 1. Fluid engine under flow churn: 128 concurrent flows, staggered.
+    let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
+    time("netsim: 512-flow churn (add/complete, max-min recompute)", 3, 20, || {
+        let mut e = netsim::Engine::new(&caps);
+        for i in 0..512 {
+            let r = i % topo.n_resources();
+            e.add_flow(vec![r, (r + 7) % topo.n_resources()], 1.0e6, (i as f64) * 1e-6, 0);
+        }
+        let mut n = 0;
+        while e.next_event().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 512);
+    });
+
+    // 2. Schedule compilation.
+    let spec16 = nccl_rings(&topo, 8);
+    time("compile: ring-allreduce schedule, 16 ranks × 8 channels", 3, 50, || {
+        let s = ring_allreduce(&spec16, 1 << 30, 0);
+        assert!(!s.is_empty());
+    });
+    let big = Topology::build(&TopologyConfig::simai_a100(8));
+    let spec64 = nccl_rings(&big, 4);
+    time("compile: ring-allreduce schedule, 64 ranks × 4 channels", 1, 10, || {
+        let s = ring_allreduce(&spec64, 1 << 30, 0);
+        assert!(!s.is_empty());
+    });
+
+    // 3. End-to-end executor (the inner loop of every figure bench).
+    let sched = ring_allreduce(&spec16, 1 << 28, 0);
+    let routing = ChannelRouting::default_rails(&topo, 8);
+    time("execute: testbed AllReduce 256MB, 8 channels (3840 groups)", 2, 10, || {
+        let rep = Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .run(&sched, &mut PhantomPlane);
+        assert!(rep.completion.is_some());
+    });
+
+    // 4. Data-plane reduction throughput (the L1-kernel-equivalent loop).
+    let src = vec![1.0f32; 1 << 22];
+    let mut dst = vec![0.0f32; 1 << 22];
+    let t = time("dataplane: reduce_add 16 MiB", 3, 30, || {
+        reduce_add(&src, &mut dst);
+    });
+    println!(
+        "  -> reduce_add throughput {:.2} GB/s",
+        (1u64 << 24) as f64 / t.mean / 1e9
+    );
+
+    // 5. Schedule rewriting (Balance, R²-AllReduce).
+    let mut eng = netsim::engine_for(&topo);
+    let mut faults = FaultPlane::new(&topo);
+    faults.fail_nic(&topo, &mut eng, 0);
+    time("rewrite: apply_balance on 3840-group schedule", 2, 20, || {
+        let s = apply_balance(&topo, &faults, &routing, &sched);
+        assert_eq!(s.len(), sched.len());
+    });
+    time("rewrite: r2-allreduce decomposition (Y=0.25)", 2, 20, || {
+        let s = r2_allreduce_schedule(&topo, &faults, &routing, 1 << 28, 0, 0, 0.25, 8);
+        assert!(!s.is_empty());
+    });
+
+    println!("\nperf_hotpath OK");
+}

@@ -1,0 +1,82 @@
+//! AdapCC (Zhao et al., ICDCS 2024) behavioural model, per the paper's
+//! §2.1/§8.2 characterisation:
+//!
+//! * a coordinator collects heartbeats *before each collective* to decide
+//!   which ranks participate — adding a per-collective reconfiguration
+//!   overhead;
+//! * failed GPUs are *excluded*, shrinking compute capacity (and losing
+//!   those ranks' gradients);
+//! * faults that strike *mid-collective* still crash the job (no in-flight
+//!   failover);
+//! * removing a rank violates TP/PP partitioning → cannot operate there.
+
+/// Model parameters.
+#[derive(Debug, Clone)]
+pub struct AdapCcModel {
+    /// Heartbeat + topology-rebuild cost charged to every collective.
+    pub heartbeat_overhead: f64,
+    /// Probability that a fault lands mid-collective (and thus still
+    /// crashes the job) rather than between collectives. Communication
+    /// occupies a large share of iteration wall-time at scale.
+    pub mid_collective_fraction: f64,
+}
+
+impl Default for AdapCcModel {
+    fn default() -> Self {
+        AdapCcModel { heartbeat_overhead: 2.0e-3, mid_collective_fraction: 0.3 }
+    }
+}
+
+impl AdapCcModel {
+    /// Per-collective reconfiguration overhead (heartbeat round).
+    pub fn per_collective_overhead(&self) -> f64 {
+        self.heartbeat_overhead
+    }
+
+    /// Remaining compute capacity after excluding the GPUs attached to
+    /// `failed_units` failure domains (1 GPU per failed NIC here).
+    pub fn capacity_factor(&self, n_gpus: usize, failed_units: usize) -> f64 {
+        ((n_gpus - failed_units.min(n_gpus)) as f64 / n_gpus as f64).max(0.0)
+    }
+
+    /// Whether AdapCC can keep the job alive for a fault in this
+    /// parallelism layout.
+    pub fn supports(&self, tp: usize, pp: usize) -> bool {
+        tp == 1 && pp == 1
+    }
+
+    /// Expected extra time per fault, combining the crash path (checkpoint
+    /// recovery when mid-collective) and the exclusion path.
+    pub fn expected_fault_cost(&self, checkpoint_recovery: f64, reconfigure: f64) -> f64 {
+        self.mid_collective_fraction * checkpoint_recovery
+            + (1.0 - self.mid_collective_fraction) * reconfigure
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusion_shrinks_capacity() {
+        let m = AdapCcModel::default();
+        assert!((m.capacity_factor(16, 1) - 15.0 / 16.0).abs() < 1e-12);
+        assert_eq!(m.capacity_factor(4, 8), 0.0);
+    }
+
+    #[test]
+    fn tp_pp_unsupported() {
+        let m = AdapCcModel::default();
+        assert!(m.supports(1, 1));
+        assert!(!m.supports(8, 1));
+        assert!(!m.supports(1, 2));
+    }
+
+    #[test]
+    fn mid_collective_faults_cost_like_crashes() {
+        let m = AdapCcModel::default();
+        let cost = m.expected_fault_cost(4080.0, 5.0);
+        assert!(cost > 1000.0); // dominated by the crash path
+        assert!(cost < 4080.0);
+    }
+}

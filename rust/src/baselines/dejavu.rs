@@ -1,0 +1,81 @@
+//! DéjàVu (Strati et al., ICML 2024) behavioural model per §8.3: KV-cache
+//! streaming/replication to host memory or a neighbour GPU, with recovery
+//! by restarting the worker and reconstructing state from the replica —
+//! trading steady-state bandwidth/memory for bounded recovery.
+
+/// Model parameters (derived from the paper's measured 14–33% failure
+/// penalty and worker-restart-dominated recovery).
+#[derive(Debug, Clone)]
+pub struct DejaVuModel {
+    /// Steady-state slowdown factor from continuous KV replication
+    /// (bandwidth stolen from the decode path).
+    pub replication_slowdown: f64,
+    /// Worker restart + reconnection delay on failure (s).
+    pub worker_restart: f64,
+    /// Fraction of KV state replicated at failure time (the rest is
+    /// recomputed).
+    pub replicated_fraction: f64,
+    /// Bandwidth for fetching the replicated KV cache (bytes/s) —
+    /// host-memory / neighbour-GPU path.
+    pub fetch_bw: f64,
+}
+
+impl Default for DejaVuModel {
+    fn default() -> Self {
+        DejaVuModel {
+            replication_slowdown: 1.03,
+            worker_restart: 12.0,
+            replicated_fraction: 0.9,
+            fetch_bw: 20.0e9,
+        }
+    }
+}
+
+impl DejaVuModel {
+    /// Per-token decode latency including the replication tax.
+    pub fn decode_latency(&self, base: f64) -> f64 {
+        base * self.replication_slowdown
+    }
+
+    /// Recovery time at failure: restart + fetch replicated KV + recompute
+    /// the non-replicated suffix.
+    ///
+    /// `kv_bytes` is the KV cache size of in-flight requests;
+    /// `recompute_per_token` × `tokens_generated` approximates the prefill
+    /// recomputation of the non-replicated tail.
+    pub fn recovery_time(&self, kv_bytes: f64, tokens_generated: usize, recompute_per_token: f64) -> f64 {
+        let fetch = kv_bytes * self.replicated_fraction / self.fetch_bw;
+        let recompute =
+            (1.0 - self.replicated_fraction) * tokens_generated as f64 * recompute_per_token;
+        self.worker_restart + fetch + recompute
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replication_taxes_steady_state() {
+        let m = DejaVuModel::default();
+        assert!(m.decode_latency(0.05) > 0.05);
+    }
+
+    #[test]
+    fn recovery_restart_dominated() {
+        // §8.3: "recovery is dominated by worker restart and reconnection".
+        let m = DejaVuModel::default();
+        let t = m.recovery_time(8.0e9, 800, 0.002);
+        assert!(t > m.worker_restart);
+        assert!(m.worker_restart / t > 0.5, "restart share {}", m.worker_restart / t);
+    }
+
+    #[test]
+    fn less_replication_means_more_recompute() {
+        let mut m = DejaVuModel::default();
+        let t_hi = m.recovery_time(8.0e9, 800, 0.01);
+        m.replicated_fraction = 0.5;
+        let t_lo = m.recovery_time(8.0e9, 800, 0.01);
+        assert!(t_lo > t_hi - 8.0e9 * 0.4 / m.fetch_bw); // recompute grows
+    }
+}

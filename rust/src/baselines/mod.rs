@@ -1,0 +1,44 @@
+//! Baseline systems the paper compares against: vanilla NCCL with
+//! checkpoint-restart, AdapCC (ICDCS'24) and DéjàVu (ICML'24), plus the
+//! restart / reroute serving strategies.
+
+pub mod adapcc;
+pub mod dejavu;
+
+pub use adapcc::AdapCcModel;
+pub use dejavu::DejaVuModel;
+
+use crate::config::CheckpointCostModel;
+
+/// Vanilla NCCL + checkpointing: every unhandled network failure aborts the
+/// job and pays the full §2.2 recovery pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct VanillaCheckpointModel {
+    pub costs: CheckpointCostModel,
+}
+
+impl VanillaCheckpointModel {
+    /// Total training time over a horizon with `failures` network faults:
+    /// useful time + one full recovery per fault.
+    pub fn total_time(&self, useful_time: f64, failures: usize) -> f64 {
+        useful_time + failures as f64 * self.costs.total()
+    }
+
+    /// Extra (wasted) time attributable to failures.
+    pub fn extra_time(&self, failures: usize) -> f64 {
+        failures as f64 * self.costs.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_recovery_dominates_failures() {
+        let m = VanillaCheckpointModel::default();
+        let useful = 24.0 * 3600.0;
+        let with_failures = m.total_time(useful, 3);
+        assert!(with_failures > useful + 3.0 * 60.0 * 60.0); // >1h each
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Two modes:
+//! * `time(name, iters, f)` — wallclock microbenchmarks of real hot paths
+//!   (used by `perf_hotpath`), with warmup and mean/p50/p95 reporting;
+//! * [`Table`] — paper-style result tables printed by the figure benches
+//!   (simulation studies report simulated quantities, not wallclock).
+//!
+//! Every bench also appends a JSON record to `bench_results/` so
+//! EXPERIMENTS.md can cite exact numbers.
+
+use std::time::Instant;
+
+use crate::util::{Json, Samples};
+
+/// Wallclock measurement of a closure.
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+}
+
+/// Measure `f` for `iters` iterations after `warmup` runs.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let t = Timing {
+        name: name.to_string(),
+        iters,
+        mean: samples.mean(),
+        p50: samples.p50(),
+        p95: samples.p95(),
+        min: samples.min(),
+    };
+    println!(
+        "{:<44} {:>10} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+        t.name,
+        t.iters,
+        crate::util::stats::fmt_time(t.mean),
+        crate::util::stats::fmt_time(t.p50),
+        crate::util::stats::fmt_time(t.p95),
+    );
+    t
+}
+
+/// A paper-style table: header + aligned rows, also serialisable.
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    /// Print aligned.
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.columns));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+
+    /// Append as JSON to `bench_results/<slug>.json`.
+    pub fn save(&self, slug: &str) {
+        let _ = std::fs::create_dir_all("bench_results");
+        let mut rows = Json::arr();
+        for r in &self.rows {
+            let mut row = Json::arr();
+            for c in r {
+                row.push(c.as_str());
+            }
+            rows.push(row);
+        }
+        let mut cols = Json::arr();
+        for c in &self.columns {
+            cols.push(c.as_str());
+        }
+        let j = Json::obj()
+            .set("title", self.title.as_str())
+            .set("columns", cols)
+            .set("rows", rows);
+        let _ = std::fs::write(format!("bench_results/{slug}.json"), j.pretty());
+    }
+}
+
+/// Percentage formatting helper.
+pub fn pct(x: f64) -> String {
+    format!("{:+.2}%", 100.0 * x)
+}
+
+/// GB/s formatting helper.
+pub fn gbps(x: f64) -> String {
+    format!("{:.1}", x / 1e9)
+}

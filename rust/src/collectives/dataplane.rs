@@ -1,0 +1,163 @@
+//! Data plane: what the bytes *are*.
+//!
+//! The time plane (netsim) decides *when* a transfer completes; the data
+//! plane decides what lands in the destination buffer. Correctness tests
+//! run collectives over real `f32` rank buffers and assert bit-exact
+//! results even with failures injected mid-collective — the "lossless"
+//! claim of hot repair. Benchmarks use the no-op plane.
+
+use super::schedule::DataOp;
+
+/// Pluggable data plane.
+pub trait DataPlane {
+    /// Apply a completed group's op: move `src` rank's `[off, off+len)`
+    /// into `dst` rank's same range.
+    fn apply(&mut self, src: usize, dst: usize, op: DataOp);
+}
+
+/// Timing-only plane: does nothing (benchmarks, large messages).
+#[derive(Debug, Default)]
+pub struct PhantomPlane;
+
+impl DataPlane for PhantomPlane {
+    fn apply(&mut self, _src: usize, _dst: usize, _op: DataOp) {}
+}
+
+/// Real rank buffers.
+#[derive(Debug, Clone)]
+pub struct RealPlane {
+    /// One flat f32 buffer per rank (GPU).
+    pub ranks: Vec<Vec<f32>>,
+}
+
+impl RealPlane {
+    pub fn new(n_ranks: usize, elems: usize) -> Self {
+        RealPlane { ranks: vec![vec![0.0; elems]; n_ranks] }
+    }
+
+    /// Initialise each rank with a deterministic distinct pattern.
+    pub fn fill_pattern(&mut self) {
+        for (r, buf) in self.ranks.iter_mut().enumerate() {
+            for (i, v) in buf.iter_mut().enumerate() {
+                *v = (r + 1) as f32 * 0.25 + i as f32 * 0.5;
+            }
+        }
+    }
+
+    pub fn from_data(data: Vec<Vec<f32>>) -> Self {
+        RealPlane { ranks: data }
+    }
+
+    /// The AllReduce ground truth: elementwise sum over ranks.
+    pub fn expected_allreduce(&self) -> Vec<f32> {
+        let elems = self.ranks[0].len();
+        let mut out = vec![0.0f32; elems];
+        for buf in &self.ranks {
+            for (o, v) in out.iter_mut().zip(buf.iter()) {
+                *o += *v;
+            }
+        }
+        out
+    }
+
+    /// Assert every rank holds `expected` exactly (bitwise would be too
+    /// strict across reassociation; we require exact f32 equality because
+    /// every strategy applies reductions in the same ring order).
+    pub fn assert_all_equal(&self, expected: &[f32]) {
+        for (r, buf) in self.ranks.iter().enumerate() {
+            assert_eq!(buf.len(), expected.len(), "rank {r} length");
+            for (i, (a, b)) in buf.iter().zip(expected.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                    "rank {r} elem {i}: got {a}, want {b}"
+                );
+            }
+        }
+    }
+}
+
+impl DataPlane for RealPlane {
+    fn apply(&mut self, src: usize, dst: usize, op: DataOp) {
+        match op {
+            DataOp::None => {}
+            DataOp::Copy { off, len } => {
+                let (s, d) = two_ranks(&mut self.ranks, src, dst);
+                d[off..off + len].copy_from_slice(&s[off..off + len]);
+            }
+            DataOp::Reduce { off, len } => {
+                let (s, d) = two_ranks(&mut self.ranks, src, dst);
+                reduce_add(&s[off..off + len], &mut d[off..off + len]);
+            }
+        }
+    }
+}
+
+/// The reduction inner loop — the data-plane hot path. In the real system
+/// this is the L1 Pallas kernel (`python/compile/kernels/reduce_chunks.py`);
+/// on the Rust side the same arithmetic runs either natively (here) or via
+/// the AOT-compiled artifact (see `runtime::kernels`), and tests assert the
+/// two agree.
+#[inline]
+pub fn reduce_add(src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d += *s;
+    }
+}
+
+/// Split-borrow two distinct rank buffers.
+fn two_ranks(ranks: &mut [Vec<f32>], src: usize, dst: usize) -> (&[f32], &mut [f32]) {
+    assert_ne!(src, dst);
+    if src < dst {
+        let (a, b) = ranks.split_at_mut(dst);
+        (&a[src], &mut b[0])
+    } else {
+        let (a, b) = ranks.split_at_mut(src);
+        (&b[0], &mut a[dst])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_moves_range_only() {
+        let mut p = RealPlane::from_data(vec![vec![1.0, 2.0, 3.0], vec![9.0, 9.0, 9.0]]);
+        p.apply(0, 1, DataOp::Copy { off: 1, len: 1 });
+        assert_eq!(p.ranks[1], vec![9.0, 2.0, 9.0]);
+    }
+
+    #[test]
+    fn reduce_accumulates() {
+        let mut p = RealPlane::from_data(vec![vec![1.0, 2.0], vec![10.0, 20.0]]);
+        p.apply(0, 1, DataOp::Reduce { off: 0, len: 2 });
+        assert_eq!(p.ranks[1], vec![11.0, 22.0]);
+        // Source untouched.
+        assert_eq!(p.ranks[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn reduce_dst_lower_index() {
+        let mut p = RealPlane::from_data(vec![vec![1.0], vec![10.0]]);
+        p.apply(1, 0, DataOp::Reduce { off: 0, len: 1 });
+        assert_eq!(p.ranks[0], vec![11.0]);
+    }
+
+    #[test]
+    fn expected_allreduce_sums_ranks() {
+        let mut p = RealPlane::new(3, 4);
+        p.fill_pattern();
+        let e = p.expected_allreduce();
+        assert_eq!(e.len(), 4);
+        let manual: f32 = (0..3).map(|r| (r + 1) as f32 * 0.25).sum();
+        assert!((e[0] - manual).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_all_equal_catches_mismatch() {
+        let p = RealPlane::from_data(vec![vec![1.0], vec![2.0]]);
+        p.assert_all_equal(&[1.0]);
+    }
+}

@@ -1,0 +1,722 @@
+//! Schedule executor: runs a collective DAG over the fluid-flow engine,
+//! injecting failures from a script and performing the full R²CCL recovery
+//! pipeline in-line — CQ error surfacing, bilateral OOB notification,
+//! probe triangulation, routing update to the closest healthy backup NIC,
+//! DMA rollback and retransmission (§4).
+//!
+//! The same executor runs the vanilla-NCCL baseline (`FailurePolicy::Crash`)
+//! and hot repair; R²CCL-Balance / R²CCL-AllReduce act earlier, at the
+//! schedule level, and then execute here unchanged.
+
+use std::collections::HashMap;
+
+use crate::config::TimingConfig;
+use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
+use crate::netsim::{engine_for, Engine, Event, FaultPlane, FlowId};
+use crate::topology::{NicId, ResourceKey, Route, Topology};
+use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
+
+use super::dataplane::DataPlane;
+use super::schedule::Schedule;
+
+/// Failure-handling policy of the communicator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Vanilla NCCL: abort the job on the first in-flight network error.
+    Crash,
+    /// R²CCL: detect, localize, migrate, resume.
+    HotRepair,
+}
+
+/// Scripted fault injection.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvent {
+    pub at: f64,
+    pub nic: NicId,
+    pub action: FaultAction,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    FailNic,
+    CutCable,
+    Repair,
+    Degrade(f64),
+}
+
+/// Per-(channel, server) NIC binding — NCCL's channel↔rail affinity, and
+/// the thing hot repair rewrites on migration.
+#[derive(Debug, Clone)]
+pub struct ChannelRouting {
+    /// nic[channel][server]
+    pub nic: Vec<Vec<NicId>>,
+}
+
+impl ChannelRouting {
+    /// NCCL default: channel c uses rail (c mod k) on every server.
+    pub fn default_rails(topo: &Topology, channels: usize) -> Self {
+        let k = topo.cfg.nics_per_server;
+        let nic = (0..channels)
+            .map(|c| (0..topo.n_servers()).map(|s| s * k + (c % k)).collect())
+            .collect();
+        ChannelRouting { nic }
+    }
+}
+
+/// Execution options.
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    pub policy: FailurePolicy,
+    pub reg_policy: RegPolicy,
+    pub backup_policy: BackupPolicy,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            policy: FailurePolicy::HotRepair,
+            reg_policy: RegPolicy::MultiNic,
+            backup_policy: BackupPolicy::PreEstablished,
+        }
+    }
+}
+
+/// One recovery occurrence.
+#[derive(Debug, Clone)]
+pub struct MigrationRecord {
+    pub at: f64,
+    pub nic: NicId,
+    pub replacement: Option<NicId>,
+    pub diagnosis: Diagnosis,
+    pub flows_migrated: usize,
+    pub retransmitted_bytes: u64,
+    pub wasted_bytes: u64,
+}
+
+/// Result of an execution.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Completion time of the collective, if it finished.
+    pub completion: Option<f64>,
+    /// True when the job aborted (vanilla policy or no alternate path).
+    pub crashed: bool,
+    pub migrations: Vec<MigrationRecord>,
+    /// Bytes that crossed the wire, including wasted partial chunks.
+    pub wire_bytes: u64,
+    pub timeline: Vec<(f64, String)>,
+}
+
+impl ExecReport {
+    pub fn completion_or_panic(&self) -> f64 {
+        self.completion
+            .unwrap_or_else(|| panic!("collective did not complete (crashed={})", self.crashed))
+    }
+}
+
+// Timer tag encoding.
+const TAG_FAULT: u64 = 1 << 48;
+const TAG_DETECT: u64 = 2 << 48;
+const TAG_REPROBE: u64 = 3 << 48;
+const TAG_MASK: u64 = 0xffff_0000_0000_0000;
+
+struct FlowInfo {
+    group: usize,
+    sub: usize,
+    /// This flow's size (the remainder of the sub after prior migrations).
+    size: u64,
+}
+
+/// The executor.
+pub struct Executor<'a> {
+    topo: &'a Topology,
+    timing: &'a TimingConfig,
+    opts: ExecOptions,
+    routing: ChannelRouting,
+    default_routing: ChannelRouting,
+    faults: FaultPlane,
+    engine: Engine,
+    script: Vec<FaultEvent>,
+    /// failed NIC → replacement (resolution chain for hinted routes).
+    migrated_to: HashMap<NicId, NicId>,
+    flows: HashMap<FlowId, FlowInfo>,
+    report: ExecReport,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(
+        topo: &'a Topology,
+        timing: &'a TimingConfig,
+        routing: ChannelRouting,
+        opts: ExecOptions,
+        script: Vec<FaultEvent>,
+    ) -> Self {
+        let engine = engine_for(topo);
+        Executor {
+            topo,
+            timing,
+            opts,
+            default_routing: routing.clone(),
+            routing,
+            faults: FaultPlane::new(topo),
+            engine,
+            script,
+            migrated_to: HashMap::new(),
+            flows: HashMap::new(),
+            report: ExecReport {
+                completion: None,
+                crashed: false,
+                migrations: Vec::new(),
+                wire_bytes: 0,
+                timeline: Vec::new(),
+            },
+        }
+    }
+
+    /// Apply pre-existing faults before the collective starts (the
+    /// scheduler already knows about them, so routing is rewritten too).
+    pub fn with_initial_faults(mut self, nics: &[(NicId, FaultAction)]) -> Self {
+        for &(nic, action) in nics {
+            self.apply_fault(nic, action);
+            if matches!(action, FaultAction::FailNic | FaultAction::CutCable) {
+                let gpu = self.topo.affinity_gpu(nic);
+                if let Some(rep) = self
+                    .topo
+                    .failover_chain(gpu)
+                    .into_iter()
+                    .find(|&n| self.faults.is_usable(n))
+                {
+                    self.migrated_to.insert(nic, rep);
+                }
+                self.rewrite_routing(nic);
+            }
+        }
+        self
+    }
+
+    /// Run a schedule to completion (or crash). Consumes the executor.
+    pub fn run(mut self, sched: &Schedule, plane: &mut dyn DataPlane) -> ExecReport {
+        debug_assert!(sched.validate().is_ok(), "{:?}", sched.validate());
+        let n = sched.groups.len();
+        if n == 0 {
+            self.report.completion = Some(0.0);
+            return self.report;
+        }
+        // Dependency bookkeeping.
+        let mut indeg: Vec<usize> = sched.groups.iter().map(|g| g.deps.len()).collect();
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, g) in sched.groups.iter().enumerate() {
+            for &d in &g.deps {
+                rdeps[d].push(i);
+            }
+        }
+        let mut subs_left: Vec<usize> = sched.groups.iter().map(|g| g.subs.len()).collect();
+        let mut done = 0usize;
+
+        for (i, f) in self.script.clone().iter().enumerate() {
+            self.engine.set_timer(f.at, TAG_FAULT | i as u64);
+        }
+
+        for i in 0..n {
+            if indeg[i] == 0 {
+                self.issue_group(sched, i);
+            }
+        }
+
+        while let Some((t, ev)) = self.engine.next_event() {
+            match ev {
+                Event::FlowCompleted(fid) => {
+                    let Some(info) = self.flows.remove(&fid) else { continue };
+                    self.report.wire_bytes += info.size;
+                    let g = info.group;
+                    subs_left[g] -= 1;
+                    if subs_left[g] == 0 {
+                        let grp = &sched.groups[g];
+                        plane.apply(grp.subs[0].src, grp.subs[0].dst, grp.op);
+                        done += 1;
+                        for &j in &rdeps[g] {
+                            indeg[j] -= 1;
+                            if indeg[j] == 0 {
+                                self.issue_group(sched, j);
+                            }
+                        }
+                        if done == n {
+                            self.report.completion = Some(t);
+                            return self.report;
+                        }
+                    }
+                }
+                Event::Timer(_, tag) => match tag & TAG_MASK {
+                    TAG_FAULT => {
+                        let f = self.script[(tag & !TAG_MASK) as usize];
+                        self.log(t, format!("fault: {:?} nic {}", f.action, f.nic));
+                        self.apply_fault(f.nic, f.action);
+                        match f.action {
+                            FaultAction::FailNic | FaultAction::CutCable => {
+                                if self.opts.policy == FailurePolicy::Crash {
+                                    self.log(t, "vanilla NCCL: abort on network error".into());
+                                    self.report.crashed = true;
+                                    return self.report;
+                                }
+                                let det = self.detection_latency(f.nic);
+                                self.engine.set_timer(t + det, TAG_DETECT | f.nic as u64);
+                            }
+                            FaultAction::Repair => {
+                                let next = ((t / self.timing.reprobe_interval).floor() + 1.0)
+                                    * self.timing.reprobe_interval;
+                                self.engine.set_timer(next, TAG_REPROBE | f.nic as u64);
+                            }
+                            FaultAction::Degrade(_) => {}
+                        }
+                    }
+                    TAG_DETECT => {
+                        let nic = (tag & !TAG_MASK) as NicId;
+                        if !self.handle_migration(t, nic, sched) {
+                            self.report.crashed = true;
+                            return self.report;
+                        }
+                    }
+                    TAG_REPROBE => {
+                        let nic = (tag & !TAG_MASK) as NicId;
+                        if self.faults.is_usable(nic) {
+                            self.restore_routing(nic);
+                            self.log(t, format!("reprobe: nic {nic} recovered, routing restored"));
+                        }
+                    }
+                    _ => unreachable!("unknown timer tag {tag:#x}"),
+                },
+            }
+        }
+        if done < n {
+            // Hung with stalled flows and no recovery → job-level abort.
+            self.report.crashed = true;
+        }
+        self.report
+    }
+
+    // ------------------------------------------------------------------
+
+    fn log(&mut self, t: f64, msg: String) {
+        self.report.timeline.push((t, msg));
+    }
+
+    fn apply_fault(&mut self, nic: NicId, action: FaultAction) {
+        match action {
+            FaultAction::FailNic => self.faults.fail_nic(self.topo, &mut self.engine, nic),
+            FaultAction::CutCable => self.faults.cut_cable(self.topo, &mut self.engine, nic),
+            FaultAction::Repair => self.faults.repair(self.topo, &mut self.engine, nic),
+            FaultAction::Degrade(f) => self.faults.set_state(
+                self.topo,
+                &mut self.engine,
+                nic,
+                crate::netsim::NicState::Degraded(f),
+            ),
+        }
+    }
+
+    /// §4 detection pipeline: CQ error surfacing + bilateral OOB + probe
+    /// triangulation + rollback bookkeeping (+ ablation costs).
+    fn detection_latency(&self, nic: NicId) -> f64 {
+        let t = self.timing;
+        let mut lat = t.cq_error_delay + t.oob_notify + t.rollback_cost;
+        let peer = self.peer_nic_for(nic);
+        if let Some(aux) = pick_aux_nic(self.topo, &self.faults, nic, peer) {
+            let rep = triangulate(self.topo, t, &self.faults, nic, peer, aux);
+            lat += rep.elapsed;
+        } else {
+            lat += t.probe_timeout;
+        }
+        if self.opts.backup_policy == BackupPolicy::None {
+            lat += t.conn_setup_cost;
+        }
+        if self.opts.reg_policy == RegPolicy::AffinityOnly {
+            lat += t.lazy_reg_cost;
+        }
+        lat
+    }
+
+    fn peer_nic_for(&self, nic: NicId) -> NicId {
+        let s = self.topo.server_of_nic(nic);
+        let peer_server = if s + 1 < self.topo.n_servers() { s + 1 } else { s.wrapping_sub(1) };
+        let rail = self.topo.rail_of_nic(nic);
+        self.topo.nics_of_server(peer_server).nth(rail).unwrap()
+    }
+
+    /// Resolve a NIC through the migration chain.
+    fn resolve_nic(&self, nic: NicId) -> NicId {
+        let mut n = nic;
+        let mut hops = 0;
+        while let Some(&next) = self.migrated_to.get(&n) {
+            n = next;
+            hops += 1;
+            if hops > self.topo.cfg.nics_per_server {
+                break;
+            }
+        }
+        n
+    }
+
+    fn route_for(&self, channel: usize, src: usize, dst: usize, hint: Option<(NicId, NicId)>) -> Route {
+        let src_server = self.topo.server_of_gpu(src);
+        let dst_server = self.topo.server_of_gpu(dst);
+        if src_server == dst_server {
+            return Route::Intra;
+        }
+        let (src_nic, dst_nic) = match hint {
+            Some((a, b)) => (self.resolve_nic(a), self.resolve_nic(b)),
+            None => (
+                self.resolve_nic(self.routing.nic[channel][src_server]),
+                self.resolve_nic(self.routing.nic[channel][dst_server]),
+            ),
+        };
+        Route::between(self.topo, src, dst, src_nic, dst_nic)
+    }
+
+    /// Issue all sub-transfers of a group.
+    fn issue_group(&mut self, sched: &Schedule, g: usize) {
+        let grp = &sched.groups[g];
+        for (si, sub) in grp.subs.iter().enumerate() {
+            let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
+            let plan = route.plan(self.topo, sub.src, sub.dst);
+            let fid = self.engine.add_flow(plan.path, sub.bytes as f64, plan.latency, g as u64);
+            self.flows.insert(fid, FlowInfo { group: g, sub: si, size: sub.bytes });
+        }
+    }
+
+    /// The live-migration step: runs at detection-complete time for `nic`.
+    /// Returns false when no alternate path exists (escalate to abort).
+    fn handle_migration(&mut self, t: f64, nic: NicId, sched: &Schedule) -> bool {
+        let peer = self.peer_nic_for(nic);
+        let diagnosis = match pick_aux_nic(self.topo, &self.faults, nic, peer) {
+            Some(aux) => {
+                triangulate(self.topo, self.timing, &self.faults, nic, peer, aux).diagnosis
+            }
+            None => Diagnosis::LinkFault,
+        };
+        // Closest healthy NIC by PCIe distance from the failed NIC's GPU.
+        let gpu = self.topo.affinity_gpu(nic);
+        let replacement = self
+            .topo
+            .failover_chain(gpu)
+            .into_iter()
+            .find(|&n| n != nic && self.faults.is_usable(n));
+        let Some(replacement) = replacement else {
+            self.log(
+                t,
+                format!("no healthy backup NIC on server {} — abort", self.topo.server_of_nic(nic)),
+            );
+            return false;
+        };
+        self.migrated_to.insert(nic, replacement);
+        self.rewrite_routing(nic);
+
+        // Migrate every flow whose path crosses the dead NIC.
+        let tx = self.topo.resource(ResourceKey::NicTx(nic));
+        let rx = self.topo.resource(ResourceKey::NicRx(nic));
+        let mut victims = self.engine.flows_through(tx);
+        victims.extend(self.engine.flows_through(rx));
+        victims.sort_unstable();
+        victims.dedup();
+
+        let mut rec = MigrationRecord {
+            at: t,
+            nic,
+            replacement: Some(replacement),
+            diagnosis,
+            flows_migrated: 0,
+            retransmitted_bytes: 0,
+            wasted_bytes: 0,
+        };
+        for fid in victims {
+            let Some(info) = self.flows.remove(&fid) else { continue };
+            let progress = self.engine.abort_flow(fid);
+            // Chunk-quantised rollback (§4.3 Technique II).
+            let cursor = RollbackCursor::new(info.size, self.timing.chunk_bytes);
+            let acked = cursor.acked_bytes(progress);
+            let wasted = cursor.wasted_bytes(progress);
+            self.report.wire_bytes += acked + wasted;
+            rec.wasted_bytes += wasted;
+            let remaining = info.size - acked;
+            rec.retransmitted_bytes += remaining;
+            rec.flows_migrated += 1;
+            // Re-issue the remainder on the rewritten routing.
+            let grp = &sched.groups[info.group];
+            let sub = &grp.subs[info.sub];
+            let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
+            let plan = route.plan(self.topo, sub.src, sub.dst);
+            let new_fid =
+                self.engine.add_flow(plan.path, remaining as f64, plan.latency, info.group as u64);
+            self.flows
+                .insert(new_fid, FlowInfo { group: info.group, sub: info.sub, size: remaining });
+        }
+        self.log(
+            t,
+            format!(
+                "hot repair: nic {nic} ({diagnosis:?}) → nic {replacement}, {} flows, {}B retransmit, {}B wasted",
+                rec.flows_migrated, rec.retransmitted_bytes, rec.wasted_bytes
+            ),
+        );
+        self.report.migrations.push(rec);
+        true
+    }
+
+    /// Rewrite routing entries that reference a dead NIC to a healthy
+    /// replacement.
+    fn rewrite_routing(&mut self, nic: NicId) {
+        for c in 0..self.routing.nic.len() {
+            for s in 0..self.routing.nic[c].len() {
+                if self.routing.nic[c][s] == nic {
+                    let mut r = self.resolve_nic(nic);
+                    if !self.faults.is_usable(r) {
+                        let gpu = self.topo.affinity_gpu(nic);
+                        if let Some(n) = self
+                            .topo
+                            .failover_chain(gpu)
+                            .into_iter()
+                            .find(|&n| self.faults.is_usable(n))
+                        {
+                            r = n;
+                        }
+                    }
+                    if self.faults.is_usable(r) {
+                        self.routing.nic[c][s] = r;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Restore default routing for entries whose primary NIC recovered.
+    fn restore_routing(&mut self, nic: NicId) {
+        self.migrated_to.remove(&nic);
+        for c in 0..self.routing.nic.len() {
+            for s in 0..self.routing.nic[c].len() {
+                if self.default_routing.nic[c][s] == nic {
+                    self.routing.nic[c][s] = nic;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::dataplane::{PhantomPlane, RealPlane};
+    use crate::collectives::ring::{nccl_rings, ring_allreduce};
+    use crate::topology::TopologyConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    fn run_allreduce(
+        t: &Topology,
+        bytes: u64,
+        channels: usize,
+        script: Vec<FaultEvent>,
+        opts: ExecOptions,
+    ) -> ExecReport {
+        let timing = TimingConfig::default();
+        let spec = nccl_rings(t, channels);
+        let sched = ring_allreduce(&spec, bytes, 0);
+        let routing = ChannelRouting::default_rails(t, channels);
+        let exec = Executor::new(t, &timing, routing, opts, script);
+        exec.run(&sched, &mut PhantomPlane)
+    }
+
+    #[test]
+    fn failure_free_allreduce_hits_expected_busbw() {
+        let t = topo();
+        let d: u64 = 1 << 30; // 1 GiB
+        let rep = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let time = rep.completion_or_panic();
+        // busbw = 2(N-1)/N · D / T ; theory: C·B = 8 × 50 GB/s = 400 GB/s.
+        let busbw = 2.0 * 15.0 / 16.0 * d as f64 / time;
+        assert!(
+            busbw > 330.0e9 && busbw <= 405.0e9,
+            "busbw = {:.1} GB/s",
+            busbw / 1e9
+        );
+        assert!(rep.migrations.is_empty());
+    }
+
+    #[test]
+    fn data_plane_allreduce_is_exact() {
+        let t = topo();
+        let channels = 2;
+        let elems = channels * 16 * 8; // divisible by C·N
+        let bytes = (elems * 4) as u64;
+        let timing = TimingConfig::default();
+        let spec = nccl_rings(&t, channels);
+        let sched = ring_allreduce(&spec, bytes, elems);
+        let routing = ChannelRouting::default_rails(&t, channels);
+        let mut plane = RealPlane::new(16, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let exec = Executor::new(&t, &timing, routing, ExecOptions::default(), vec![]);
+        let rep = exec.run(&sched, &mut plane);
+        assert!(rep.completion.is_some());
+        plane.assert_all_equal(&expected);
+    }
+
+    #[test]
+    fn hot_repair_survives_mid_collective_nic_failure() {
+        let t = topo();
+        let d: u64 = 1 << 28; // 256 MiB
+        // Estimate failure-free time, then fail NIC 0 mid-way.
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let t_half = base.completion_or_panic() / 2.0;
+        let script = vec![FaultEvent { at: t_half, nic: 0, action: FaultAction::FailNic }];
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        assert!(!rep.crashed);
+        let time = rep.completion_or_panic();
+        assert!(time > base.completion_or_panic(), "must slow down");
+        assert_eq!(rep.migrations.len(), 1);
+        assert_eq!(rep.migrations[0].nic, 0);
+        // Replacement is the closest healthy NIC (same NUMA → nic 1).
+        assert_eq!(rep.migrations[0].replacement, Some(1));
+    }
+
+    #[test]
+    fn vanilla_crashes_on_failure() {
+        let t = topo();
+        let d: u64 = 1 << 28;
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let script = vec![FaultEvent {
+            at: base.completion_or_panic() / 2.0,
+            nic: 3,
+            action: FaultAction::FailNic,
+        }];
+        let opts = ExecOptions { policy: FailurePolicy::Crash, ..Default::default() };
+        let rep = run_allreduce(&t, d, 8, script, opts);
+        assert!(rep.crashed);
+        assert!(rep.completion.is_none());
+    }
+
+    #[test]
+    fn data_plane_lossless_under_failure() {
+        // The paper's core correctness claim: a NIC failure mid-AllReduce
+        // produces the bit-identical result after hot repair.
+        let t = topo();
+        let channels = 2;
+        let elems = channels * 16 * 8;
+        let bytes_per_elem_scale = 1 << 14; // make transfers big enough to be mid-flight
+        let elems_big = elems * bytes_per_elem_scale / 16;
+        let bytes = (elems_big * 4) as u64;
+        let timing = TimingConfig::default();
+        let spec = nccl_rings(&t, channels);
+        let sched = ring_allreduce(&spec, bytes, elems_big);
+        let routing = ChannelRouting::default_rails(&t, channels);
+        let mut plane = RealPlane::new(16, elems_big);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        // Find a failure-free completion time first.
+        let base = Executor::new(&t, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .run(&sched, &mut PhantomPlane);
+        let script = vec![FaultEvent {
+            at: base.completion_or_panic() * 0.4,
+            nic: 0,
+            action: FaultAction::FailNic,
+        }];
+        let exec = Executor::new(&t, &timing, routing, ExecOptions::default(), script);
+        let rep = exec.run(&sched, &mut plane);
+        assert!(!rep.crashed);
+        assert!(!rep.migrations.is_empty());
+        plane.assert_all_equal(&expected);
+    }
+
+    #[test]
+    fn double_failure_walks_failover_chain() {
+        let t = topo();
+        let d: u64 = 1 << 28;
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let tb = base.completion_or_panic();
+        let script = vec![
+            FaultEvent { at: tb * 0.2, nic: 0, action: FaultAction::FailNic },
+            FaultEvent { at: tb * 0.5, nic: 1, action: FaultAction::FailNic },
+        ];
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        assert!(!rep.crashed);
+        assert_eq!(rep.migrations.len(), 2);
+        // Second migration must avoid both dead NICs.
+        let r2 = rep.migrations[1].replacement.unwrap();
+        assert!(r2 != 0 && r2 != 1);
+    }
+
+    #[test]
+    fn repair_restores_routing() {
+        let t = topo();
+        let d: u64 = 1 << 28;
+        let mut timing = TimingConfig::default();
+        timing.reprobe_interval = 1.0e-3; // reprobe fast enough to matter mid-collective
+        let spec = nccl_rings(&t, 8);
+        let sched = ring_allreduce(&spec, d, 0);
+        let routing = ChannelRouting::default_rails(&t, 8);
+        let base = Executor::new(&t, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .run(&sched, &mut PhantomPlane);
+        let tb = base.completion_or_panic();
+        let script = vec![
+            FaultEvent { at: tb * 0.1, nic: 0, action: FaultAction::FailNic },
+            FaultEvent { at: tb * 0.3, nic: 0, action: FaultAction::Repair },
+        ];
+        let rep = Executor::new(&t, &timing, routing, ExecOptions::default(), script)
+            .run(&sched, &mut PhantomPlane);
+        assert!(!rep.crashed);
+        // Timeline contains the reprobe-recovery entry.
+        assert!(rep.timeline.iter().any(|(_, m)| m.contains("recovered")));
+        // Recovered run finishes faster than a permanently-degraded one.
+        let perm = Executor::new(
+            &t,
+            &timing,
+            ChannelRouting::default_rails(&t, 8),
+            ExecOptions::default(),
+            vec![FaultEvent { at: tb * 0.1, nic: 0, action: FaultAction::FailNic }],
+        )
+        .run(&sched, &mut PhantomPlane);
+        assert!(rep.completion_or_panic() <= perm.completion_or_panic());
+    }
+
+    #[test]
+    fn degradation_slows_but_does_not_migrate() {
+        let t = topo();
+        let d: u64 = 1 << 28;
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let script = vec![FaultEvent {
+            at: base.completion_or_panic() * 0.3,
+            nic: 0,
+            action: FaultAction::Degrade(0.5),
+        }];
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        assert!(!rep.crashed);
+        assert!(rep.migrations.is_empty());
+        assert!(rep.completion_or_panic() > base.completion_or_panic());
+    }
+
+    #[test]
+    fn hotrepair_large_message_loses_about_half_throughput() {
+        // Fig 15: HotRepair alone ≈46% loss for large messages (the backup
+        // NIC carries double load and bottlenecks its ring).
+        let t = topo();
+        let d: u64 = 1 << 30;
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let script =
+            vec![FaultEvent { at: 1.0e-6, nic: 0, action: FaultAction::FailNic }];
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        let ratio = base.completion_or_panic() / rep.completion_or_panic();
+        assert!(
+            ratio > 0.4 && ratio < 0.62,
+            "throughput retained {ratio:.2} (expected ~0.5)"
+        );
+    }
+
+    #[test]
+    fn all_nics_down_aborts() {
+        let t = topo();
+        let d: u64 = 1 << 24;
+        let script: Vec<FaultEvent> = (0..8)
+            .map(|n| FaultEvent { at: 1.0e-6, nic: n, action: FaultAction::FailNic })
+            .collect();
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        assert!(rep.crashed);
+    }
+}

@@ -1,0 +1,72 @@
+//! NCCL-style channelized collectives over the fluid-flow fabric, with a
+//! real data plane and in-flight failure recovery.
+//!
+//! * [`schedule`] — DAG representation of a compiled collective.
+//! * [`ring`] / [`tree`] / [`p2p`] — algorithm builders.
+//! * [`dataplane`] — bytes-level semantics (the losslessness oracle).
+//! * [`exec`] — the executor: time plane + data plane + hot repair.
+
+pub mod dataplane;
+pub mod exec;
+pub mod p2p;
+pub mod ring;
+pub mod schedule;
+pub mod tree;
+
+pub use dataplane::{DataPlane, PhantomPlane, RealPlane};
+pub use exec::{
+    ChannelRouting, ExecOptions, ExecReport, Executor, FailurePolicy, FaultAction, FaultEvent,
+    MigrationRecord,
+};
+pub use ring::{nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter, RingSpec};
+pub use schedule::{DataOp, Schedule, SubTransfer, TransferGroup};
+
+/// Collective kinds (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollKind {
+    AllReduce,
+    ReduceScatter,
+    AllGather,
+    Broadcast,
+    Reduce,
+    SendRecv,
+    AllToAll,
+}
+
+/// NCCL-tests bus-bandwidth factor: busbw = algbw × factor, where
+/// algbw = message_size / time. This normalises different collectives onto
+/// comparable wire-utilisation numbers (Figures 15/16 are busbw plots).
+pub fn busbw_factor(kind: CollKind, n_ranks: usize) -> f64 {
+    let n = n_ranks as f64;
+    match kind {
+        CollKind::AllReduce => 2.0 * (n - 1.0) / n,
+        CollKind::ReduceScatter | CollKind::AllGather => (n - 1.0) / n,
+        CollKind::Broadcast | CollKind::Reduce => 1.0,
+        CollKind::SendRecv => 1.0,
+        CollKind::AllToAll => (n - 1.0) / n,
+    }
+}
+
+/// Bus bandwidth of a completed collective.
+pub fn busbw(kind: CollKind, n_ranks: usize, bytes: u64, seconds: f64) -> f64 {
+    bytes as f64 / seconds * busbw_factor(kind, n_ranks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busbw_factors() {
+        assert!((busbw_factor(CollKind::AllReduce, 16) - 1.875).abs() < 1e-12);
+        assert!((busbw_factor(CollKind::AllGather, 16) - 0.9375).abs() < 1e-12);
+        assert_eq!(busbw_factor(CollKind::SendRecv, 16), 1.0);
+    }
+
+    #[test]
+    fn busbw_scales_with_time() {
+        let b1 = busbw(CollKind::AllReduce, 16, 1 << 30, 0.01);
+        let b2 = busbw(CollKind::AllReduce, 16, 1 << 30, 0.02);
+        assert!((b1 / b2 - 2.0).abs() < 1e-9);
+    }
+}

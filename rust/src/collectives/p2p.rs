@@ -1,0 +1,70 @@
+//! Point-to-point schedules: SendRecv and All-to-All.
+
+use crate::topology::GpuId;
+
+use super::schedule::{DataOp, Schedule, TransferGroup};
+use super::ring::split_even;
+
+/// Pairwise SendRecv: each (src, dst) pair moves `bytes`, split across
+/// `channels` for multi-NIC striping (NCCL stripes big P2P messages over
+/// channels the same way).
+pub fn sendrecv(pairs: &[(GpuId, GpuId)], bytes: u64, channels: usize) -> Schedule {
+    let mut sched = Schedule::new("sendrecv");
+    let per_chan = split_even(bytes, channels);
+    for &(src, dst) in pairs {
+        for (c, &b) in per_chan.iter().enumerate() {
+            if b == 0 {
+                continue;
+            }
+            sched.push(TransferGroup::single(c, src, dst, b, vec![], DataOp::None));
+        }
+    }
+    sched
+}
+
+/// All-to-All over `ranks`: every ordered pair exchanges `bytes_per_pair`.
+/// Channel assignment rotates so the pair load spreads across rails.
+pub fn all_to_all(ranks: &[GpuId], bytes_per_pair: u64, channels: usize) -> Schedule {
+    let mut sched = Schedule::new("all-to-all");
+    let n = ranks.len();
+    for (i, &src) in ranks.iter().enumerate() {
+        for (j, &dst) in ranks.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let c = (i + j) % channels;
+            sched.push(TransferGroup::single(c, src, dst, bytes_per_pair, vec![], DataOp::None));
+        }
+    }
+    debug_assert_eq!(sched.len(), n * (n - 1));
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sendrecv_stripes_channels() {
+        let s = sendrecv(&[(0, 8), (1, 9)], 1000, 4);
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.total_bytes(), 2000);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn sendrecv_skips_zero_stripes() {
+        let s = sendrecv(&[(0, 8)], 3, 8);
+        assert_eq!(s.len(), 3); // only 3 non-empty stripes
+        assert_eq!(s.total_bytes(), 3);
+    }
+
+    #[test]
+    fn all_to_all_pair_count() {
+        let ranks: Vec<usize> = (0..6).collect();
+        let s = all_to_all(&ranks, 100, 4);
+        assert_eq!(s.len(), 30);
+        assert_eq!(s.total_bytes(), 3000);
+        s.validate().unwrap();
+    }
+}

@@ -1,0 +1,398 @@
+//! NCCL-style channelized ring algorithms (§2.1, Figure 4).
+//!
+//! Each channel owns `1/C` of the data and runs its own ring over all
+//! GPUs; within a server the ring walks NVLink, and one inter-server edge
+//! per adjacent server pair rides the channel's rail NIC. Ring AllReduce is
+//! ReduceScatter followed by AllGather, `2(N-1)` pipelined steps over `N`
+//! shards; both phases are emitted into one DAG so the AllGather of shard
+//! `j` starts as soon as its reduction finishes (NCCL's fused behaviour).
+
+use crate::topology::{GpuId, Topology};
+
+use super::schedule::{DataOp, Schedule, TransferGroup};
+
+/// Per-channel ring orders (position → GPU).
+#[derive(Debug, Clone)]
+pub struct RingSpec {
+    /// rings[c][p] = GPU at position p of channel c's ring.
+    pub rings: Vec<Vec<GpuId>>,
+}
+
+impl RingSpec {
+    pub fn channels(&self) -> usize {
+        self.rings.len()
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.rings[0].len()
+    }
+}
+
+/// Build NCCL's default rings: channel `c` visits each server's GPUs
+/// starting at local index `c` (so each channel's inter-server hop is
+/// carried by a distinct rail), servers in id order.
+pub fn nccl_rings(topo: &Topology, channels: usize) -> RingSpec {
+    let g = topo.cfg.gpus_per_server;
+    let mut rings = Vec::with_capacity(channels);
+    for c in 0..channels {
+        let mut ring = Vec::with_capacity(topo.n_gpus());
+        for s in 0..topo.n_servers() {
+            for j in 0..g {
+                ring.push(s * g + (c + j) % g);
+            }
+        }
+        rings.push(ring);
+    }
+    RingSpec { rings }
+}
+
+/// Split `total` into `parts` near-equal u64 pieces summing exactly.
+pub fn split_even(total: u64, parts: usize) -> Vec<u64> {
+    let base = total / parts as u64;
+    let extra = (total % parts as u64) as usize;
+    (0..parts)
+        .map(|i| base + if i < extra { 1 } else { 0 })
+        .collect()
+}
+
+/// Element ranges per (channel, shard) for an `elems`-element buffer.
+/// Returns `None` offsets (DataOp::None) when `elems` is not divisible —
+/// timing-only schedules don't need exact element maps.
+fn shard_range(elems: usize, channels: usize, n: usize, c: usize, j: usize) -> Option<(usize, usize)> {
+    if elems == 0 || elems % (channels * n) != 0 {
+        return None;
+    }
+    let per_chan = elems / channels;
+    let per_shard = per_chan / n;
+    Some((c * per_chan + j * per_shard, per_shard))
+}
+
+/// Ring ReduceScatter phase. Appends to `sched`; returns, per (channel,
+/// position), the index of the final RS group *arriving at* that position
+/// (i.e. the group completing that position's owned shard) — the AllGather
+/// phase hangs its first step off these.
+fn emit_reduce_scatter(
+    sched: &mut Schedule,
+    spec: &RingSpec,
+    bytes_per_rank: u64,
+    elems: usize,
+) -> Vec<Vec<usize>> {
+    let cc = spec.channels();
+    let n = spec.n_ranks();
+    let chan_bytes = split_even(bytes_per_rank, cc);
+    let mut final_arrival = vec![vec![usize::MAX; n]; cc];
+    for c in 0..cc {
+        let ring = &spec.rings[c];
+        let shard_bytes = split_even(chan_bytes[c], n);
+        // prev_step[p] = group index of the step-(s-1) transfer sent *by*
+        // position p.
+        let mut prev_step: Vec<usize> = vec![usize::MAX; n];
+        for s in 0..n - 1 {
+            let mut this_step = vec![usize::MAX; n];
+            for p in 0..n {
+                let j = (p + n - s) % n; // shard forwarded by position p
+                let dst_p = (p + 1) % n;
+                let mut deps = Vec::new();
+                if s > 0 {
+                    // Data dependency: the shard arrived from p-1 last step.
+                    deps.push(prev_step[(p + n - 1) % n]);
+                    // FIFO: this edge's previous send completed.
+                    deps.push(prev_step[p]);
+                }
+                let op = match shard_range(elems, cc, n, c, j) {
+                    Some((off, len)) => DataOp::Reduce { off, len },
+                    None => DataOp::None,
+                };
+                let idx = sched.push(TransferGroup::single(
+                    c,
+                    ring[p],
+                    ring[dst_p],
+                    shard_bytes[j],
+                    deps,
+                    op,
+                ));
+                this_step[p] = idx;
+                if s == n - 2 {
+                    // Arrival at dst_p completes dst_p's owned shard.
+                    final_arrival[c][dst_p] = idx;
+                }
+            }
+            prev_step = this_step;
+        }
+        if n == 1 {
+            // Degenerate single-rank ring: nothing to do.
+        }
+    }
+    final_arrival
+}
+
+/// Ring AllGather phase; `entry_dep[c][p]` gates position p's first send on
+/// channel c (pass the RS result for AllReduce, or empty for standalone).
+fn emit_all_gather(
+    sched: &mut Schedule,
+    spec: &RingSpec,
+    bytes_per_rank: u64,
+    elems: usize,
+    entry_dep: Option<&Vec<Vec<usize>>>,
+) {
+    let cc = spec.channels();
+    let n = spec.n_ranks();
+    let chan_bytes = split_even(bytes_per_rank, cc);
+    for c in 0..cc {
+        let ring = &spec.rings[c];
+        let shard_bytes = split_even(chan_bytes[c], n);
+        let mut prev_step: Vec<usize> = vec![usize::MAX; n];
+        for s in 0..n - 1 {
+            let mut this_step = vec![usize::MAX; n];
+            for p in 0..n {
+                let j = (p + 1 + n - s) % n; // shard forwarded by position p
+                let dst_p = (p + 1) % n;
+                let mut deps = Vec::new();
+                if s == 0 {
+                    if let Some(entry) = entry_dep {
+                        if entry[c][p] != usize::MAX {
+                            deps.push(entry[c][p]);
+                        }
+                    }
+                } else {
+                    deps.push(prev_step[(p + n - 1) % n]);
+                    deps.push(prev_step[p]);
+                }
+                let op = match shard_range(elems, cc, n, c, j) {
+                    Some((off, len)) => DataOp::Copy { off, len },
+                    None => DataOp::None,
+                };
+                let idx = sched.push(TransferGroup::single(
+                    c,
+                    ring[p],
+                    ring[dst_p],
+                    shard_bytes[j],
+                    deps,
+                    op,
+                ));
+                this_step[p] = idx;
+            }
+            prev_step = this_step;
+        }
+    }
+}
+
+/// Ring AllReduce: fused ReduceScatter + AllGather.
+/// `bytes_per_rank` is the per-GPU data size D; `elems = D/4` enables the
+/// data plane when divisible by channels·N.
+pub fn ring_allreduce(spec: &RingSpec, bytes_per_rank: u64, elems: usize) -> Schedule {
+    let mut sched = Schedule::new("ring-allreduce");
+    if spec.n_ranks() < 2 {
+        return sched;
+    }
+    let rs_done = emit_reduce_scatter(&mut sched, spec, bytes_per_rank, elems);
+    emit_all_gather(&mut sched, spec, bytes_per_rank, elems, Some(&rs_done));
+    sched
+}
+
+/// Standalone ReduceScatter.
+pub fn ring_reduce_scatter(spec: &RingSpec, bytes_per_rank: u64, elems: usize) -> Schedule {
+    let mut sched = Schedule::new("ring-reduce-scatter");
+    if spec.n_ranks() < 2 {
+        return sched;
+    }
+    emit_reduce_scatter(&mut sched, spec, bytes_per_rank, elems);
+    sched
+}
+
+/// Standalone AllGather.
+pub fn ring_all_gather(spec: &RingSpec, bytes_per_rank: u64, elems: usize) -> Schedule {
+    let mut sched = Schedule::new("ring-all-gather");
+    if spec.n_ranks() < 2 {
+        return sched;
+    }
+    emit_all_gather(&mut sched, spec, bytes_per_rank, elems, None);
+    sched
+}
+
+/// Pipelined ring broadcast from `root_pos` (position in each channel's
+/// ring): the data flows root → root+1 → ... around the ring, split into
+/// `pipeline` chunks so edges overlap. Used standalone and as stage 2 of
+/// R²CCL-AllReduce.
+pub fn ring_broadcast(
+    spec: &RingSpec,
+    bytes_total: u64,
+    elems: usize,
+    root_pos: usize,
+    pipeline: usize,
+) -> Schedule {
+    let mut sched = Schedule::new("ring-broadcast");
+    emit_ring_broadcast(&mut sched, spec, bytes_total, elems, root_pos, pipeline, &[]);
+    sched
+}
+
+/// Broadcast emission with external entry deps (gating the root's first
+/// sends). Exposed for the R²CCL-AllReduce composition.
+pub fn emit_ring_broadcast(
+    sched: &mut Schedule,
+    spec: &RingSpec,
+    bytes_total: u64,
+    elems: usize,
+    root_pos: usize,
+    pipeline: usize,
+    entry_deps: &[usize],
+) {
+    let cc = spec.channels();
+    let n = spec.n_ranks();
+    if n < 2 {
+        return;
+    }
+    let chan_bytes = split_even(bytes_total, cc);
+    let pipeline = pipeline.max(1);
+    for c in 0..cc {
+        let ring = &spec.rings[c];
+        let chunk_bytes = split_even(chan_bytes[c], pipeline);
+        // chunk element ranges (exact only when divisible)
+        let chunk_elems: Option<Vec<(usize, usize)>> = if elems > 0 && elems % (cc * pipeline) == 0
+        {
+            let per_chan = elems / cc;
+            let per_chunk = per_chan / pipeline;
+            Some((0..pipeline).map(|k| (c * per_chan + k * per_chunk, per_chunk)).collect())
+        } else {
+            None
+        };
+        // prev_edge[k] = group of chunk k on the previous edge;
+        // prev_chunk[e] = group of previous chunk on edge e.
+        let mut prev_edge: Vec<usize> = vec![usize::MAX; pipeline];
+        let mut prev_chunk: Vec<usize> = vec![usize::MAX; n - 1];
+        for e in 0..n - 1 {
+            let src = ring[(root_pos + e) % n];
+            let dst = ring[(root_pos + e + 1) % n];
+            for k in 0..pipeline {
+                let mut deps = Vec::new();
+                if e == 0 {
+                    deps.extend_from_slice(entry_deps);
+                } else {
+                    deps.push(prev_edge[k]);
+                }
+                if prev_chunk[e] != usize::MAX {
+                    deps.push(prev_chunk[e]); // FIFO on the edge
+                }
+                let op = match &chunk_elems {
+                    Some(ranges) => {
+                        let (off, len) = ranges[k];
+                        DataOp::Copy { off, len }
+                    }
+                    None => DataOp::None,
+                };
+                let idx =
+                    sched.push(TransferGroup::single(c, src, dst, chunk_bytes[k], deps, op));
+                prev_edge[k] = idx;
+                prev_chunk[e] = idx;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn nccl_rings_cover_all_gpus() {
+        let t = topo();
+        let spec = nccl_rings(&t, 8);
+        assert_eq!(spec.channels(), 8);
+        for ring in &spec.rings {
+            assert_eq!(ring.len(), 16);
+            let mut sorted = ring.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..16).collect::<Vec<_>>());
+        }
+        // Channel c starts server visits at local index c.
+        assert_eq!(spec.rings[3][0], 3);
+        assert_eq!(spec.rings[3][8], 11);
+    }
+
+    #[test]
+    fn split_even_sums_exactly() {
+        assert_eq!(split_even(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_even(10, 3).iter().sum::<u64>(), 10);
+        assert_eq!(split_even(0, 4), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn allreduce_group_count() {
+        let t = topo();
+        let spec = nccl_rings(&t, 2);
+        let s = ring_allreduce(&spec, 1 << 20, 0);
+        // 2 channels × 2 phases × (N-1)=15 steps × N=16 positions.
+        assert_eq!(s.len(), 2 * 2 * 15 * 16);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn allreduce_wire_bytes_match_theory() {
+        let t = topo();
+        let spec = nccl_rings(&t, 4);
+        let d = 1u64 << 20;
+        let s = ring_allreduce(&spec, d, 0);
+        // Every rank sends 2(N-1)/N × D in total → N ranks → 2(N-1)·D.
+        let n = 16u64;
+        assert_eq!(s.total_bytes(), 2 * (n - 1) * d);
+    }
+
+    #[test]
+    fn reduce_scatter_wire_bytes() {
+        let t = topo();
+        let spec = nccl_rings(&t, 4);
+        let d = 1u64 << 20;
+        let s = ring_reduce_scatter(&spec, d, 0);
+        assert_eq!(s.total_bytes(), 15 * d);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn broadcast_bytes_per_edge() {
+        let t = topo();
+        let spec = nccl_rings(&t, 1);
+        let d = 64u64 << 10;
+        let s = ring_broadcast(&spec, d, 0, 0, 8);
+        // N-1 edges each carry the full D.
+        assert_eq!(s.total_bytes(), 15 * d);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn schedules_are_valid_dags() {
+        let t = topo();
+        let spec = nccl_rings(&t, 8);
+        for s in [
+            ring_allreduce(&spec, 123457, 0),
+            ring_all_gather(&spec, 999, 0),
+            ring_reduce_scatter(&spec, 31, 0),
+            ring_broadcast(&spec, 1 << 16, 0, 5, 4),
+        ] {
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn dataop_ranges_partition_buffer() {
+        // With divisible elems, the RS ops of one channel must cover each
+        // shard exactly N-1 times (one reduce per step).
+        let t = topo();
+        let spec = nccl_rings(&t, 2);
+        let elems = 2 * 16 * 4; // channels * N * 4
+        let s = ring_reduce_scatter(&spec, (elems * 4) as u64, elems);
+        let mut cover = vec![0usize; elems];
+        for g in &s.groups {
+            if let DataOp::Reduce { off, len } = g.op {
+                for e in off..off + len {
+                    cover[e] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 15), "cover={cover:?}");
+    }
+}

@@ -1,0 +1,258 @@
+//! Collective schedules: DAGs of transfer groups.
+//!
+//! A collective is compiled into a dependency DAG of *transfer groups*. A
+//! group is one logical chunk movement (e.g. "ring step 3: rank 5 forwards
+//! shard 2 to rank 6"); it normally contains a single wire transfer, but
+//! R²CCL-Balance may split it across several NIC paths (sub-transfers), and
+//! the group completes when all sub-transfers have. Data-plane semantics
+//! (copy / reduce) are attached per group and applied on completion —
+//! matching real NCCL, where receive buffers are consumed by GPU kernels
+//! only after the transport signals completion (§4.3).
+
+use crate::topology::{GpuId, NicId};
+
+/// What the receiver does with the delivered bytes (data plane).
+/// Offsets/lengths are in f32 elements within each rank's flat buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataOp {
+    /// Timing-only transfer (no data plane attached).
+    None,
+    /// dst[range] = src[range].
+    Copy { off: usize, len: usize },
+    /// dst[range] += src[range] (the reduction of ReduceScatter/AllReduce).
+    Reduce { off: usize, len: usize },
+}
+
+/// One wire transfer within a group.
+#[derive(Debug, Clone)]
+pub struct SubTransfer {
+    pub src: GpuId,
+    pub dst: GpuId,
+    pub bytes: u64,
+    /// NIC override (set by Balance when splitting across NICs);
+    /// `None` → the executor's channel routing table decides.
+    pub nic_hint: Option<(NicId, NicId)>,
+}
+
+/// A logical transfer: the unit of dependency and data-plane application.
+#[derive(Debug, Clone)]
+pub struct TransferGroup {
+    /// Channel this group belongs to (for NIC routing).
+    pub channel: usize,
+    /// Indices of groups that must complete before this one starts.
+    pub deps: Vec<usize>,
+    pub subs: Vec<SubTransfer>,
+    pub op: DataOp,
+}
+
+impl TransferGroup {
+    /// Single-wire-transfer group (the common case emitted by builders).
+    pub fn single(
+        channel: usize,
+        src: GpuId,
+        dst: GpuId,
+        bytes: u64,
+        deps: Vec<usize>,
+        op: DataOp,
+    ) -> Self {
+        TransferGroup {
+            channel,
+            deps,
+            subs: vec![SubTransfer { src, dst, bytes, nic_hint: None }],
+            op,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.subs.iter().map(|s| s.bytes).sum()
+    }
+}
+
+/// A compiled collective schedule.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub label: String,
+    pub groups: Vec<TransferGroup>,
+}
+
+impl Schedule {
+    pub fn new(label: impl Into<String>) -> Self {
+        Schedule { label: label.into(), groups: Vec::new() }
+    }
+
+    /// Append a group, returning its index (used as a dep handle).
+    pub fn push(&mut self, g: TransferGroup) -> usize {
+        self.groups.push(g);
+        self.groups.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Total bytes crossing the wire (all groups).
+    pub fn total_bytes(&self) -> u64 {
+        self.groups.iter().map(|g| g.total_bytes()).sum()
+    }
+
+    /// Bytes leaving/entering each server (cross-server traffic only):
+    /// the D_i of §5.1's overhead analysis.
+    pub fn server_io_bytes(&self, server_of: impl Fn(GpuId) -> usize, n_servers: usize) -> Vec<(u64, u64)> {
+        let mut io = vec![(0u64, 0u64); n_servers];
+        for g in &self.groups {
+            for s in &g.subs {
+                let ss = server_of(s.src);
+                let ds = server_of(s.dst);
+                if ss != ds {
+                    io[ss].0 += s.bytes;
+                    io[ds].1 += s.bytes;
+                }
+            }
+        }
+        io
+    }
+
+    /// Append another schedule's groups (dep indices remapped); returns the
+    /// index offset where `other` landed. Used to compose concurrent
+    /// stages (e.g. R²CCL-AllReduce's global + partial rings).
+    pub fn append(&mut self, other: Schedule) -> usize {
+        let off = self.groups.len();
+        for mut g in other.groups {
+            for d in &mut g.deps {
+                *d += off;
+            }
+            self.groups.push(g);
+        }
+        off
+    }
+
+    /// Shift every data-plane element range by `delta` elements (composing
+    /// sub-collectives that own different slices of the rank buffers).
+    pub fn offset_elems(&mut self, delta: usize) {
+        for g in &mut self.groups {
+            g.op = match g.op {
+                DataOp::None => DataOp::None,
+                DataOp::Copy { off, len } => DataOp::Copy { off: off + delta, len },
+                DataOp::Reduce { off, len } => DataOp::Reduce { off: off + delta, len },
+            };
+        }
+    }
+
+    /// Indices of groups with no dependents (the "exit" frontier), useful
+    /// as entry deps of a following stage.
+    pub fn exit_groups(&self) -> Vec<usize> {
+        let n = self.groups.len();
+        let mut has_dependent = vec![false; n];
+        for g in &self.groups {
+            for &d in &g.deps {
+                has_dependent[d] = true;
+            }
+        }
+        (0..n).filter(|&i| !has_dependent[i]).collect()
+    }
+
+    /// Validate DAG shape: deps in range, acyclic (topological order exists).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.groups.len();
+        let mut indeg = vec![0usize; n];
+        for (i, g) in self.groups.iter().enumerate() {
+            for &d in &g.deps {
+                if d >= n {
+                    return Err(format!("group {i} dep {d} out of range"));
+                }
+                if d == i {
+                    return Err(format!("group {i} depends on itself"));
+                }
+                indeg[i] += 1;
+            }
+            let _ = d_check(g)?;
+        }
+        // Kahn's algorithm.
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, g) in self.groups.iter().enumerate() {
+            for &d in &g.deps {
+                rdeps[d].push(i);
+            }
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &j in &rdeps[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        if seen != n {
+            return Err(format!("cycle detected: {} of {} groups reachable", seen, n));
+        }
+        Ok(())
+    }
+}
+
+fn d_check(g: &TransferGroup) -> Result<(), String> {
+    if g.subs.is_empty() {
+        return Err("group with no sub-transfers".to_string());
+    }
+    for s in &g.subs {
+        if s.src == s.dst {
+            return Err(format!("self-transfer {} -> {}", s.src, s.dst));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_accepts_chain() {
+        let mut s = Schedule::new("chain");
+        let a = s.push(TransferGroup::single(0, 0, 1, 10, vec![], DataOp::None));
+        let b = s.push(TransferGroup::single(0, 1, 2, 10, vec![a], DataOp::None));
+        let _ = s.push(TransferGroup::single(0, 2, 3, 10, vec![b], DataOp::None));
+        assert!(s.validate().is_ok());
+        assert_eq!(s.total_bytes(), 30);
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let mut s = Schedule::new("cycle");
+        s.groups.push(TransferGroup::single(0, 0, 1, 1, vec![1], DataOp::None));
+        s.groups.push(TransferGroup::single(0, 1, 0, 1, vec![0], DataOp::None));
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_dep() {
+        let mut s = Schedule::new("bad");
+        s.groups.push(TransferGroup::single(0, 0, 1, 1, vec![7], DataOp::None));
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_self_transfer() {
+        let mut s = Schedule::new("self");
+        s.groups.push(TransferGroup::single(0, 3, 3, 1, vec![], DataOp::None));
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn server_io_counts_cross_traffic_only() {
+        let mut s = Schedule::new("io");
+        // 2 servers × 8 GPUs: gpu 0..7 on server 0.
+        s.push(TransferGroup::single(0, 0, 1, 100, vec![], DataOp::None)); // intra
+        s.push(TransferGroup::single(0, 7, 8, 50, vec![], DataOp::None)); // inter
+        s.push(TransferGroup::single(0, 9, 2, 30, vec![], DataOp::None)); // inter back
+        let io = s.server_io_bytes(|g| g / 8, 2);
+        assert_eq!(io[0], (50, 30));
+        assert_eq!(io[1], (30, 50));
+    }
+}

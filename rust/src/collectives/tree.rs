@@ -1,0 +1,274 @@
+//! Binomial-tree collectives: Reduce, Broadcast and tree-AllReduce
+//! (reduction up a tree followed by broadcast down it — NCCL's
+//! latency-optimal algorithm for small messages).
+
+use crate::topology::GpuId;
+
+use super::schedule::{DataOp, Schedule, TransferGroup};
+use super::ring::split_even;
+
+/// Parent of `rank` in a binomial tree rooted at 0 (over `n` ranks), or
+/// `None` for the root. Children of r are r + 2^k for increasing k while
+/// r's low bits allow.
+fn binomial_parent(rank: usize) -> Option<usize> {
+    if rank == 0 {
+        return None;
+    }
+    // Clear the lowest set bit.
+    Some(rank & (rank - 1))
+}
+
+fn binomial_children(rank: usize, n: usize) -> Vec<usize> {
+    let mut kids = Vec::new();
+    let mut bit = 1usize;
+    // Children exist for bits below the lowest set bit of rank (or any bit
+    // for the root).
+    let limit = if rank == 0 { n.next_power_of_two() } else { rank & rank.wrapping_neg() };
+    while bit < limit {
+        let c = rank | bit;
+        if c < n && c != rank {
+            kids.push(c);
+        }
+        bit <<= 1;
+    }
+    kids
+}
+
+/// Tree Reduce to `ranks[0]`: leaves push up, inner nodes reduce then
+/// forward. Chunk-pipelined with `pipeline` chunks.
+pub fn tree_reduce(ranks: &[GpuId], bytes: u64, elems: usize, pipeline: usize) -> Schedule {
+    let mut sched = Schedule::new("tree-reduce");
+    emit_tree_reduce(&mut sched, ranks, bytes, elems, pipeline, 0);
+    sched
+}
+
+/// Emission helper; returns per-chunk group indices of the final arrival at
+/// the root (for composing tree-AllReduce).
+fn emit_tree_reduce(
+    sched: &mut Schedule,
+    ranks: &[GpuId],
+    bytes: u64,
+    elems: usize,
+    pipeline: usize,
+    channel: usize,
+) -> Vec<usize> {
+    let n = ranks.len();
+    let pipeline = pipeline.max(1);
+    let chunk_bytes = split_even(bytes, pipeline);
+    let chunk_ranges: Option<Vec<(usize, usize)>> = chunk_ranges(elems, pipeline);
+    // For each (rank, chunk): the group that delivers that rank's reduced
+    // chunk to its parent.
+    let mut delivered: Vec<Vec<usize>> = vec![vec![usize::MAX; pipeline]; n];
+    // Process ranks from deepest to shallowest: a rank can send chunk k to
+    // its parent once all children's chunk k arrived. Iterate ranks in
+    // decreasing order (children have larger ids in a binomial tree).
+    let mut root_arrivals = vec![Vec::new(); pipeline];
+    for r in (1..n).rev() {
+        let parent = binomial_parent(r).unwrap();
+        let kids = binomial_children(r, n);
+        for k in 0..pipeline {
+            let mut deps: Vec<usize> = kids.iter().map(|&c| delivered[c][k]).collect();
+            debug_assert!(deps.iter().all(|&d| d != usize::MAX));
+            if k > 0 {
+                deps.push(delivered[r][k - 1]); // FIFO on this rank's uplink
+            }
+            let op = match &chunk_ranges {
+                Some(ranges) => {
+                    let (off, len) = ranges[k];
+                    DataOp::Reduce { off, len }
+                }
+                None => DataOp::None,
+            };
+            let idx = sched.push(TransferGroup::single(
+                channel,
+                ranks[r],
+                ranks[parent],
+                chunk_bytes[k],
+                deps,
+                op,
+            ));
+            delivered[r][k] = idx;
+            if parent == 0 {
+                root_arrivals[k].push(idx);
+            }
+        }
+    }
+    root_arrivals.into_iter().map(|mut v| v.pop().unwrap_or(usize::MAX)).collect()
+}
+
+/// Tree Broadcast from `ranks[0]`.
+pub fn tree_broadcast(ranks: &[GpuId], bytes: u64, elems: usize, pipeline: usize) -> Schedule {
+    let mut sched = Schedule::new("tree-broadcast");
+    emit_tree_broadcast(&mut sched, ranks, bytes, elems, pipeline, 0, &[]);
+    sched
+}
+
+fn emit_tree_broadcast(
+    sched: &mut Schedule,
+    ranks: &[GpuId],
+    bytes: u64,
+    elems: usize,
+    pipeline: usize,
+    channel: usize,
+    entry_deps: &[usize],
+) {
+    let n = ranks.len();
+    let pipeline = pipeline.max(1);
+    let chunk_bytes = split_even(bytes, pipeline);
+    let chunk_rangesv = chunk_ranges(elems, pipeline);
+    let mut received: Vec<Vec<usize>> = vec![vec![usize::MAX; pipeline]; n];
+    // Top-down: rank r can forward chunk k to child once it has chunk k.
+    for r in 0..n {
+        for k in 0..pipeline {
+            for &c in &binomial_children(r, n) {
+                let mut deps = Vec::new();
+                if r == 0 {
+                    deps.extend_from_slice(entry_deps);
+                } else {
+                    debug_assert!(received[r][k] != usize::MAX);
+                    deps.push(received[r][k]);
+                }
+                if k > 0 && received[c][k - 1] != usize::MAX {
+                    deps.push(received[c][k - 1]);
+                }
+                let op = match &chunk_rangesv {
+                    Some(ranges) => {
+                        let (off, len) = ranges[k];
+                        DataOp::Copy { off, len }
+                    }
+                    None => DataOp::None,
+                };
+                let idx = sched.push(TransferGroup::single(
+                    channel,
+                    ranks[r],
+                    ranks[c],
+                    chunk_bytes[k],
+                    deps,
+                    op,
+                ));
+                received[c][k] = idx;
+            }
+        }
+    }
+}
+
+/// Tree AllReduce: reduce to root then broadcast, chunk-pipelined so the
+/// broadcast of chunk k overlaps the reduction of chunk k+1.
+pub fn tree_allreduce(ranks: &[GpuId], bytes: u64, elems: usize, pipeline: usize) -> Schedule {
+    let mut sched = Schedule::new("tree-allreduce");
+    let root_done = emit_tree_reduce(&mut sched, ranks, bytes, elems, pipeline, 0);
+    // Broadcast each chunk once its reduction completes: emit per-chunk.
+    let n = ranks.len();
+    let pipeline = pipeline.max(1);
+    let chunk_bytes = split_even(bytes, pipeline);
+    let chunk_rangesv = chunk_ranges(elems, pipeline);
+    let mut received: Vec<Vec<usize>> = vec![vec![usize::MAX; pipeline]; n];
+    for r in 0..n {
+        for k in 0..pipeline {
+            for &c in &binomial_children(r, n) {
+                let mut deps = Vec::new();
+                if r == 0 {
+                    if root_done[k] != usize::MAX {
+                        deps.push(root_done[k]);
+                    }
+                } else {
+                    deps.push(received[r][k]);
+                }
+                if k > 0 && received[c][k - 1] != usize::MAX {
+                    deps.push(received[c][k - 1]);
+                }
+                let op = match &chunk_rangesv {
+                    Some(ranges) => {
+                        let (off, len) = ranges[k];
+                        DataOp::Copy { off, len }
+                    }
+                    None => DataOp::None,
+                };
+                let idx = sched.push(TransferGroup::single(
+                    0,
+                    ranks[r],
+                    ranks[c],
+                    chunk_bytes[k],
+                    deps,
+                    op,
+                ));
+                received[c][k] = idx;
+            }
+        }
+    }
+    sched
+}
+
+fn chunk_ranges(elems: usize, pipeline: usize) -> Option<Vec<(usize, usize)>> {
+    if elems == 0 || elems % pipeline != 0 {
+        return None;
+    }
+    let per = elems / pipeline;
+    Some((0..pipeline).map(|k| (k * per, per)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomial_structure() {
+        assert_eq!(binomial_parent(0), None);
+        assert_eq!(binomial_parent(1), Some(0));
+        assert_eq!(binomial_parent(6), Some(4));
+        assert_eq!(binomial_parent(7), Some(6));
+        assert_eq!(binomial_children(0, 8), vec![1, 2, 4]);
+        assert_eq!(binomial_children(4, 8), vec![5, 6]);
+        assert_eq!(binomial_children(4, 6), vec![5]);
+        assert_eq!(binomial_children(7, 8), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn every_nonroot_has_valid_parent() {
+        for n in [2, 5, 8, 13, 16] {
+            for r in 1..n {
+                let p = binomial_parent(r).unwrap();
+                assert!(p < r);
+                assert!(binomial_children(p, n).contains(&r), "n={n} r={r} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_edge_count() {
+        let ranks: Vec<usize> = (0..8).collect();
+        let s = tree_reduce(&ranks, 800, 0, 4);
+        // 7 uplink edges × 4 chunks.
+        assert_eq!(s.len(), 28);
+        assert_eq!(s.total_bytes(), 7 * 800);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn broadcast_edge_count() {
+        let ranks: Vec<usize> = (0..8).collect();
+        let s = tree_broadcast(&ranks, 800, 0, 2);
+        assert_eq!(s.len(), 14);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn allreduce_is_valid_and_double_bytes() {
+        let ranks: Vec<usize> = (0..16).collect();
+        let s = tree_allreduce(&ranks, 1600, 0, 4);
+        assert_eq!(s.total_bytes(), 2 * 15 * 1600);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn non_power_of_two_ranks() {
+        let ranks: Vec<usize> = (0..6).collect();
+        for s in [
+            tree_reduce(&ranks, 600, 0, 2),
+            tree_broadcast(&ranks, 600, 0, 2),
+            tree_allreduce(&ranks, 600, 0, 2),
+        ] {
+            s.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Failure detection and localization (§4.1–§4.2).
+//!
+//! * Bilateral error awareness: when either endpoint sees an error it
+//!   notifies its peer over the out-of-band bootstrap network, so nobody
+//!   spins on a dead connection (detection drops from minutes to
+//!   milliseconds).
+//! * Precise localization: dedicated probe QP pools issue zero-byte RDMA
+//!   writes from both endpoints plus an auxiliary NIC; correlating the
+//!   outcomes (local error vs timeout) separates "my NIC died", "their NIC
+//!   died" and "the cable died".
+//! * Periodic reprobing detects component recovery (NIC resets, cable
+//!   fixes) so repaired links rejoin the pool.
+
+pub mod oob;
+pub mod probe;
+
+pub use oob::OobNetwork;
+pub use probe::{pick_aux_nic, reprobe_recovered, triangulate, Diagnosis, ProbeReport};

@@ -1,0 +1,121 @@
+//! The out-of-band bootstrap network (§4.1).
+//!
+//! A lightweight TCP/MPI network over a non-datapath NIC. R²CCL uses it for
+//! bilateral failure notification (peer alerts) and for broadcasting a
+//! confirmed diagnosis to all ranks. We model it as latency constants plus
+//! a delivered-message log, so tests can assert both timing and "nobody is
+//! left waiting on a dead connection".
+
+use crate::config::TimingConfig;
+
+/// A message on the bootstrap network.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OobMessage {
+    /// "I observed an error on our connection" — sent to the peer rank.
+    ErrorAlert { from_rank: usize, to_rank: usize },
+    /// Confirmed diagnosis broadcast to every rank.
+    DiagnosisBroadcast { origin_rank: usize, detail: String },
+}
+
+/// Delivery record: (deliver_at, destination_rank, message).
+pub type Delivery = (f64, usize, OobMessage);
+
+/// The OOB network: computes delivery times and logs traffic.
+#[derive(Debug, Clone)]
+pub struct OobNetwork {
+    n_ranks: usize,
+    notify_latency: f64,
+    broadcast_latency: f64,
+    pub log: Vec<Delivery>,
+}
+
+impl OobNetwork {
+    pub fn new(n_ranks: usize, timing: &TimingConfig) -> Self {
+        OobNetwork {
+            n_ranks,
+            notify_latency: timing.oob_notify,
+            broadcast_latency: timing.oob_broadcast,
+            log: Vec::new(),
+        }
+    }
+
+    /// Bilateral alert: rank `from` tells rank `to` the connection is dead.
+    /// Returns the delivery time.
+    pub fn notify_peer(&mut self, now: f64, from: usize, to: usize) -> f64 {
+        assert!(from < self.n_ranks && to < self.n_ranks);
+        let at = now + self.notify_latency;
+        self.log.push((at, to, OobMessage::ErrorAlert { from_rank: from, to_rank: to }));
+        at
+    }
+
+    /// Broadcast a diagnosis to all ranks; returns the time the last rank
+    /// has it (a small bootstrap tree, modelled as one constant).
+    pub fn broadcast_diagnosis(&mut self, now: f64, origin: usize, detail: &str) -> f64 {
+        let at = now + self.broadcast_latency;
+        for r in 0..self.n_ranks {
+            if r != origin {
+                self.log.push((
+                    at,
+                    r,
+                    OobMessage::DiagnosisBroadcast { origin_rank: origin, detail: detail.to_string() },
+                ));
+            }
+        }
+        at
+    }
+
+    /// Ranks that have been alerted about a failure by time `t`.
+    pub fn alerted_ranks(&self, t: f64) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .log
+            .iter()
+            .filter(|(at, _, m)| *at <= t && matches!(m, OobMessage::ErrorAlert { .. }))
+            .map(|(_, to, _)| *to)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oob() -> OobNetwork {
+        OobNetwork::new(16, &TimingConfig::default())
+    }
+
+    #[test]
+    fn peer_notification_is_milliseconds() {
+        let mut n = oob();
+        let at = n.notify_peer(1.0, 3, 7);
+        assert!(at - 1.0 < 1.0e-3, "notify took {}", at - 1.0);
+        assert_eq!(n.alerted_ranks(at), vec![7]);
+        assert!(n.alerted_ranks(at - 1e-6).is_empty());
+    }
+
+    #[test]
+    fn broadcast_reaches_everyone_but_origin() {
+        let mut n = oob();
+        let at = n.broadcast_diagnosis(0.0, 5, "nic 2 down");
+        let recipients: Vec<usize> = n
+            .log
+            .iter()
+            .filter(|(t, _, m)| *t <= at && matches!(m, OobMessage::DiagnosisBroadcast { .. }))
+            .map(|(_, to, _)| *to)
+            .collect();
+        assert_eq!(recipients.len(), 15);
+        assert!(!recipients.contains(&5));
+    }
+
+    #[test]
+    fn bilateral_no_half_open() {
+        // Both endpoints alert each other; both sides know within the OOB
+        // budget — the "half-open" state of §4.1 cannot persist.
+        let mut n = oob();
+        let a = n.notify_peer(0.0, 0, 8);
+        let b = n.notify_peer(0.0, 8, 0);
+        assert_eq!(n.alerted_ranks(a.max(b)), vec![0, 8]);
+    }
+}

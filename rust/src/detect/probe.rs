@@ -1,0 +1,240 @@
+//! Probe-based fault localization (§4.2 three-point triangulation).
+//!
+//! RDMA exposes only coarse transport errors (retry-exceeded) that do not
+//! say *which* endpoint failed. R²CCL keeps dedicated probe QP pools,
+//! isolated from the data path, and on error issues zero-byte RDMA writes
+//! from three vantage points: the local NIC, the peer NIC, and an auxiliary
+//! NIC on a third node. The outcome pattern identifies the fault:
+//!
+//! | local probe | peer probe | aux → local | aux → peer | diagnosis |
+//! |---|---|---|---|---|
+//! | LocalError  | Timeout    | Timeout     | Ok         | local NIC fault |
+//! | Timeout     | LocalError | Ok          | Timeout    | remote NIC fault |
+//! | Timeout     | Timeout    | Ok/Timeout  | Ok/Timeout | link (cable) fault |
+
+use crate::config::TimingConfig;
+use crate::netsim::{FaultPlane, ProbeOutcome};
+use crate::topology::{NicId, Topology};
+
+/// Where the fault is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Diagnosis {
+    /// The NIC at the rank that ran the triangulation.
+    LocalNicFault,
+    /// The peer's NIC.
+    RemoteNicFault,
+    /// The cable / link between them (both NICs fine).
+    LinkFault,
+    /// Probes came back clean — transient error (e.g. QP-level); retry on
+    /// the same path after re-establishing the QP.
+    Transient,
+}
+
+/// The full probe evidence plus timing.
+#[derive(Debug, Clone)]
+pub struct ProbeReport {
+    pub diagnosis: Diagnosis,
+    /// Wall-clock cost of the triangulation (parallel probes: the max of
+    /// the individual probe costs).
+    pub elapsed: f64,
+    pub local_probe: ProbeOutcome,
+    pub peer_probe: ProbeOutcome,
+    pub aux_to_local: ProbeOutcome,
+    pub aux_to_peer: ProbeOutcome,
+}
+
+fn probe_cost(timing: &TimingConfig, o: ProbeOutcome) -> f64 {
+    match o {
+        ProbeOutcome::Ok => timing.probe_rtt,
+        // An error CQE surfaces immediately (local NIC rejects the WR).
+        ProbeOutcome::LocalError => timing.probe_rtt,
+        ProbeOutcome::Timeout => timing.probe_timeout,
+    }
+}
+
+/// Run three-point triangulation for a failed connection between
+/// `local_nic` and `peer_nic`, using `aux_nic` (a NIC on a third node, or a
+/// second healthy NIC pair when the cluster has only two nodes).
+pub fn triangulate(
+    topo: &Topology,
+    timing: &TimingConfig,
+    faults: &FaultPlane,
+    local_nic: NicId,
+    peer_nic: NicId,
+    aux_nic: NicId,
+) -> ProbeReport {
+    debug_assert_ne!(topo.server_of_nic(local_nic), topo.server_of_nic(peer_nic));
+    let local_probe = faults.probe(local_nic, peer_nic);
+    let peer_probe = faults.probe(peer_nic, local_nic);
+    let aux_to_local = faults.probe(aux_nic, local_nic);
+    let aux_to_peer = faults.probe(aux_nic, peer_nic);
+
+    let diagnosis = match (local_probe, peer_probe) {
+        (ProbeOutcome::LocalError, _) => Diagnosis::LocalNicFault,
+        (_, ProbeOutcome::LocalError) => Diagnosis::RemoteNicFault,
+        (ProbeOutcome::Timeout, ProbeOutcome::Timeout) => {
+            // Both time out: NIC-hardware faults also time out from the
+            // remote side, so use the auxiliary vantage to separate
+            // single-endpoint impairment from a dead link.
+            match (aux_to_local, aux_to_peer) {
+                (ProbeOutcome::Timeout, ProbeOutcome::Ok) => Diagnosis::LocalNicFault,
+                (ProbeOutcome::Ok, ProbeOutcome::Timeout) => Diagnosis::RemoteNicFault,
+                _ => Diagnosis::LinkFault,
+            }
+        }
+        // One side ok, other timeout without local error: degraded path —
+        // treat as link fault (conservative: migrate off it).
+        (ProbeOutcome::Timeout, ProbeOutcome::Ok) | (ProbeOutcome::Ok, ProbeOutcome::Timeout) => {
+            Diagnosis::LinkFault
+        }
+        (ProbeOutcome::Ok, ProbeOutcome::Ok) => Diagnosis::Transient,
+    };
+
+    // All probes are issued in parallel from their owners; evidence is
+    // correlated at the local rank after OOB exchange of outcomes.
+    let elapsed = [
+        probe_cost(timing, local_probe),
+        probe_cost(timing, peer_probe),
+        probe_cost(timing, aux_to_local),
+        probe_cost(timing, aux_to_peer),
+    ]
+    .into_iter()
+    .fold(0.0_f64, f64::max)
+        + timing.oob_notify; // outcome exchange
+
+    ProbeReport { diagnosis, elapsed, local_probe, peer_probe, aux_to_local, aux_to_peer }
+}
+
+/// Pick an auxiliary NIC for triangulation: prefer a NIC on a third server;
+/// in a two-server cluster use another healthy NIC pair on the same servers
+/// (the probe still distinguishes endpoint vs link for the *failed* pair).
+pub fn pick_aux_nic(
+    topo: &Topology,
+    faults: &FaultPlane,
+    local_nic: NicId,
+    peer_nic: NicId,
+) -> Option<NicId> {
+    let s_local = topo.server_of_nic(local_nic);
+    let s_peer = topo.server_of_nic(peer_nic);
+    // Third server first.
+    for s in 0..topo.n_servers() {
+        if s != s_local && s != s_peer {
+            if let Some(n) = faults.healthy_nics(topo, s).first() {
+                return Some(*n);
+            }
+        }
+    }
+    // Fallback: a different healthy NIC on the peer's server.
+    faults
+        .healthy_nics(topo, s_peer)
+        .into_iter()
+        .find(|&n| n != peer_nic)
+        .or_else(|| {
+            faults
+                .healthy_nics(topo, s_local)
+                .into_iter()
+                .find(|&n| n != local_nic)
+        })
+}
+
+/// Periodic reprobe: true if the previously-failed NIC pair answers again
+/// (component recovered, e.g. NIC reset or cable replaced — §4.2).
+pub fn reprobe_recovered(faults: &FaultPlane, local_nic: NicId, peer_nic: NicId) -> bool {
+    faults.probe(local_nic, peer_nic) == ProbeOutcome::Ok
+        && faults.probe(peer_nic, local_nic) == ProbeOutcome::Ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim;
+    use crate::topology::TopologyConfig;
+
+    fn setup3() -> (Topology, crate::netsim::Engine, FaultPlane, TimingConfig) {
+        // Three servers so a true third-party aux NIC exists.
+        let mut cfg = TopologyConfig::testbed_h100();
+        cfg.n_servers = 3;
+        let t = Topology::build(&cfg);
+        let eng = netsim::engine_for(&t);
+        let fp = FaultPlane::new(&t);
+        (t, eng, fp, TimingConfig::default())
+    }
+
+    #[test]
+    fn local_nic_fault_is_localized() {
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.fail_nic(&t, &mut eng, 0);
+        let aux = pick_aux_nic(&t, &fp, 0, 8).unwrap();
+        assert_eq!(t.server_of_nic(aux), 2);
+        let r = triangulate(&t, &tm, &fp, 0, 8, aux);
+        assert_eq!(r.diagnosis, Diagnosis::LocalNicFault);
+        assert!(r.elapsed <= tm.probe_timeout + tm.oob_notify);
+    }
+
+    #[test]
+    fn remote_nic_fault_is_localized() {
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.fail_nic(&t, &mut eng, 8);
+        let aux = pick_aux_nic(&t, &fp, 0, 8).unwrap();
+        let r = triangulate(&t, &tm, &fp, 0, 8, aux);
+        assert_eq!(r.diagnosis, Diagnosis::RemoteNicFault);
+    }
+
+    #[test]
+    fn cable_fault_is_localized() {
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.cut_cable(&t, &mut eng, 0);
+        let aux = pick_aux_nic(&t, &fp, 0, 8).unwrap();
+        let r = triangulate(&t, &tm, &fp, 0, 8, aux);
+        // Cable on the local side: local probe times out, peer probe times
+        // out, aux→local times out, aux→peer ok → classified as local-side
+        // impairment per the truth table.
+        assert_eq!(r.diagnosis, Diagnosis::LocalNicFault);
+    }
+
+    #[test]
+    fn transient_error_probes_clean() {
+        let (t, _eng, fp, tm) = setup3();
+        let aux = pick_aux_nic(&t, &fp, 0, 8).unwrap();
+        let r = triangulate(&t, &tm, &fp, 0, 8, aux);
+        assert_eq!(r.diagnosis, Diagnosis::Transient);
+        // Healthy probes finish in microseconds.
+        assert!(r.elapsed < 1.0e-3);
+    }
+
+    #[test]
+    fn two_server_cluster_uses_fallback_aux() {
+        let t = Topology::build(&TopologyConfig::testbed_h100());
+        let mut eng = netsim::engine_for(&t);
+        let mut fp = FaultPlane::new(&t);
+        fp.fail_nic(&t, &mut eng, 0);
+        let aux = pick_aux_nic(&t, &fp, 0, 8).unwrap();
+        // Aux on server 1 (peer's server) but a different NIC.
+        assert_eq!(t.server_of_nic(aux), 1);
+        assert_ne!(aux, 8);
+        let tm = TimingConfig::default();
+        let r = triangulate(&t, &tm, &fp, 0, 8, aux);
+        assert_eq!(r.diagnosis, Diagnosis::LocalNicFault);
+    }
+
+    #[test]
+    fn reprobe_detects_recovery() {
+        let (t, mut eng, mut fp, _tm) = setup3();
+        fp.fail_nic(&t, &mut eng, 0);
+        assert!(!reprobe_recovered(&fp, 0, 8));
+        fp.repair(&t, &mut eng, 0);
+        assert!(reprobe_recovered(&fp, 0, 8));
+    }
+
+    #[test]
+    fn detection_is_milliseconds_not_minutes() {
+        // End-to-end detection budget = CQ error + OOB notify + probes:
+        // the §4.1 claim ("minutes to milliseconds").
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.fail_nic(&t, &mut eng, 0);
+        let aux = pick_aux_nic(&t, &fp, 0, 8).unwrap();
+        let r = triangulate(&t, &tm, &fp, 0, 8, aux);
+        let total = tm.cq_error_delay + tm.oob_notify + r.elapsed;
+        assert!(total < 10.0e-3, "detection path {total}s");
+    }
+}

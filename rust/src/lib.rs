@@ -1,0 +1,36 @@
+//! # R²CCL — Reliable and Resilient Collective Communication Library
+//!
+//! A from-scratch reproduction of *"Reliable and Resilient Collective
+//! Communication Library for LLM Training and Serving"* (Wang, Yu, Xiong,
+//! Liu; CS.DC 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's artifact is a NCCL plugin evaluated on multi-NIC H100/IB
+//! hardware. This repository rebuilds the *entire substrate* in software
+//! (see DESIGN.md §1): a flow-level RDMA fabric simulator, an NCCL-style
+//! channelized collective engine with a real data plane, the paper's hot
+//! repair / balance / R²-AllReduce / recursive scheduling contributions,
+//! training and inference workload simulators, and the AdapCC / DéjàVu /
+//! restart / reroute baselines — plus a PJRT runtime that executes real
+//! JAX/Pallas-compiled transformer training steps whose gradients flow
+//! through the simulated collective data plane.
+//!
+//! Layer map:
+//! * L3 (this crate): coordination, scheduling, failure handling, simulators.
+//! * L2 (`python/compile/model.py`): JAX transformer fwd/bwd → HLO text.
+//! * L1 (`python/compile/kernels/`): Pallas kernels (chunk reduction, fused
+//!   linear) lowered inside the L2 graph.
+
+pub mod netsim;
+pub mod topology;
+pub mod util;
+pub mod config;
+pub mod detect;
+pub mod transport;
+pub mod collectives;
+pub mod schedule;
+pub mod ccl;
+pub mod baselines;
+pub mod sim;
+pub mod runtime;
+pub mod train;
+pub mod bench;

@@ -1,0 +1,190 @@
+//! r2ccl CLI — the leader entrypoint: run collectives, training/serving
+//! simulations, or the end-to-end PJRT trainer from one binary.
+//!
+//! Subcommands:
+//!   bench-collective  --kind allreduce --bytes N --fail-nics 1 --strategy auto
+//!   train-sim         --model 2.7b --dp 16 [--tp 8 --pp 2] --fail-nics 1
+//!   serve-sim         --model 405b --qps 0.3 --strategy r2|restart|reroute|dejavu
+//!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
+//!   info              topology / planner state dump
+
+use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::collectives::{busbw, CollKind};
+use r2ccl::config::Preset;
+use r2ccl::schedule::Strategy;
+use r2ccl::sim::{
+    serve_sim, testbed_training, InferModel, ModelConfig, ParallelConfig, ServeCfg,
+    ServeFailure, ServeStrategy, TrainMethod,
+};
+use r2ccl::util::stats::{fmt_bytes, fmt_time};
+use r2ccl::util::Args;
+
+fn parse_kind(s: &str) -> CollKind {
+    match s {
+        "allreduce" => CollKind::AllReduce,
+        "reducescatter" => CollKind::ReduceScatter,
+        "allgather" => CollKind::AllGather,
+        "broadcast" => CollKind::Broadcast,
+        "reduce" => CollKind::Reduce,
+        "sendrecv" => CollKind::SendRecv,
+        "alltoall" => CollKind::AllToAll,
+        _ => panic!("unknown collective {s}"),
+    }
+}
+
+fn parse_strategy(s: &str) -> StrategyChoice {
+    match s {
+        "auto" => StrategyChoice::Auto,
+        "balance" => StrategyChoice::Force(Strategy::Balance),
+        "r2" => StrategyChoice::Force(Strategy::R2AllReduce),
+        "recursive" => StrategyChoice::Force(Strategy::Recursive),
+        "hotrepair" => StrategyChoice::HotRepairOnly,
+        _ => panic!("unknown strategy {s}"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "bench-collective" => {
+            let preset = Preset::testbed();
+            let mut comm = Communicator::new(&preset, args.get_usize("channels", 8));
+            let fails = args.get_usize("fail-nics", 0);
+            for n in 0..fails {
+                comm.note_failure(n, FaultAction::FailNic);
+            }
+            let kind = parse_kind(args.get_or("kind", "allreduce"));
+            let bytes = args.get_u64("bytes", 1 << 28);
+            let choice = parse_strategy(args.get_or("strategy", "auto"));
+            let t = comm
+                .time_collective(kind, bytes, choice)
+                .ok_or_else(|| anyhow::anyhow!("collective crashed"))?;
+            let bw = busbw(kind, comm.topo.n_gpus(), bytes, t);
+            println!(
+                "{:?} {} fail_nics={} strategy={}: time {} busbw {:.1} GB/s",
+                kind,
+                fmt_bytes(bytes),
+                fails,
+                args.get_or("strategy", "auto"),
+                fmt_time(t),
+                bw / 1e9
+            );
+        }
+        "train-sim" => {
+            let preset = Preset::testbed();
+            let model = match args.get_or("model", "2.7b") {
+                "2.7b" => ModelConfig::gpt_2_7b(),
+                "7b" => ModelConfig::gpt_7b(),
+                "13b" => ModelConfig::gpt_13b(),
+                m => panic!("unknown model {m}"),
+            };
+            let (dp, tp, pp) = (
+                args.get_usize("dp", 16),
+                args.get_usize("tp", 1),
+                args.get_usize("pp", 1),
+            );
+            let par = ParallelConfig {
+                dp,
+                tp,
+                pp,
+                global_batch: args.get_usize("gbs", 256),
+                microbatch: 2,
+            };
+            let fails = args.get_usize("fail-nics", 1);
+            println!("{} dp={dp} tp={tp} pp={pp}, {} NIC(s) failed:", model.name, fails);
+            let base = testbed_training(&preset, &model, &par, TrainMethod::NoFailure, fails);
+            for m in [
+                TrainMethod::NoFailure,
+                TrainMethod::R2AllReduce,
+                TrainMethod::R2Balance,
+                TrainMethod::R2HotRepair,
+                TrainMethod::AdapCc,
+                TrainMethod::VanillaNccl,
+            ] {
+                let r = testbed_training(&preset, &model, &par, m, fails);
+                let ovh = if r.tokens_per_sec > 0.0 {
+                    format!("{:+.2}%", 100.0 * (r.iter_time - base.iter_time) / base.iter_time)
+                } else {
+                    "fail".to_string()
+                };
+                println!(
+                    "  {:<14} {:>10.0} tokens/s  overhead {}",
+                    format!("{m:?}"),
+                    r.tokens_per_sec,
+                    ovh
+                );
+            }
+        }
+        "serve-sim" => {
+            let model = match args.get_or("model", "405b") {
+                "70b" => InferModel::llama70b(),
+                "405b" => InferModel::llama405b(),
+                "66b" => InferModel::opt66b(),
+                "176b" => InferModel::bloom176b(),
+                m => panic!("unknown model {m}"),
+            };
+            let cfg = ServeCfg::paper_default(args.get_f64("qps", 0.3));
+            let strat = match args.get_or("strategy", "r2") {
+                "r2" => ServeStrategy::R2Balance,
+                "restart" => ServeStrategy::Restart { outage: 35.0 },
+                "reroute" => ServeStrategy::Reroute,
+                "dejavu" => ServeStrategy::DejaVu,
+                "none" => ServeStrategy::NoFailure,
+                s => panic!("unknown strategy {s}"),
+            };
+            let fail = (!matches!(strat, ServeStrategy::NoFailure))
+                .then_some(ServeFailure { at: 50.0, nics: args.get_usize("fail-nics", 1) });
+            let res = serve_sim(&model, &cfg, strat, fail, args.get_u64("seed", 1));
+            let (mut ttft, mut tpot) = (res.ttft(), res.tpot());
+            println!(
+                "{} qps={} strategy={:?}: {} done | TTFT p50/p95/p99 {:.2}/{:.2}/{:.2}s | TPOT p50/p95 {:.0}/{:.0}ms",
+                model.name,
+                cfg.qps,
+                strat,
+                res.completed.len(),
+                ttft.p50(),
+                ttft.p95(),
+                ttft.p99(),
+                tpot.p50() * 1e3,
+                tpot.p95() * 1e3
+            );
+        }
+        "train-e2e" => {
+            let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
+            let cfg = r2ccl::train::TrainerCfg {
+                dp: args.get_usize("dp", 4),
+                steps: args.get_usize("steps", 20),
+                lr: args.get_f64("lr", 0.5) as f32,
+                fail_at_step: args.get("fail-at").map(|v| v.parse().unwrap()),
+                ..Default::default()
+            };
+            let log = r2ccl::train::train_dp(&rt, &cfg)?;
+            println!(
+                "loss {:.4} -> {:.4} over {} steps; {} migrations; sim comm {:.3}s",
+                log.losses[0],
+                log.losses.last().unwrap(),
+                cfg.steps,
+                log.migrations,
+                log.sim_comm_time
+            );
+        }
+        _ => {
+            let preset = Preset::testbed();
+            let comm = Communicator::new(&preset, 8);
+            println!(
+                "r2ccl — Reliable and Resilient Collective Communication Library (reproduction)"
+            );
+            println!(
+                "testbed topology: {} servers × {} GPUs × {} NICs ({} resources)",
+                comm.topo.n_servers(),
+                comm.topo.cfg.gpus_per_server,
+                comm.topo.cfg.nics_per_server,
+                comm.topo.n_resources()
+            );
+            println!("subcommands: bench-collective | train-sim | serve-sim | train-e2e | info");
+        }
+    }
+    Ok(())
+}

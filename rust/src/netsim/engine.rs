@@ -1,0 +1,668 @@
+//! Discrete-event fluid-flow network engine.
+//!
+//! Transfers are *flows* over multi-resource paths. Active flows share each
+//! resource max-min fair (progressive filling), the standard flow-level
+//! abstraction for RDMA fabrics: per-message completion time is
+//! `latency + bytes / allocated_rate` with the allocation re-computed on
+//! every arrival/departure/topology change. This reproduces exactly the
+//! quantities the paper measures (bus bandwidth vs message size, degradation
+//! ratios under NIC loss) without packet-level detail.
+//!
+//! The engine is deterministic: ties in event time are broken by insertion
+//! sequence.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::topology::ResourceId;
+
+/// Simulation time in seconds.
+pub type SimTime = f64;
+/// Flow identifier.
+pub type FlowId = usize;
+/// Timer identifier.
+pub type TimerId = usize;
+
+/// Events surfaced to the driver (collective runner / workload simulator).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A flow delivered all its bytes.
+    FlowCompleted(FlowId),
+    /// A timer fired; the tag is caller-defined.
+    Timer(TimerId, u64),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Pending {
+    /// Flow activation after its path latency has elapsed.
+    Activate(FlowId, u64),
+    /// Predicted flow completion (validated against the flow's epoch).
+    Complete(FlowId, u64),
+    Timer(TimerId, u64),
+}
+
+/// Total-ordered f64 key for the event heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct TimeKey(f64);
+
+impl Eq for TimeKey {}
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Resource {
+    capacity: f64,
+    /// Multiplicative degradation factor in (0,1]; capacity*factor is usable.
+    factor: f64,
+    up: bool,
+}
+
+impl Resource {
+    fn effective(&self) -> f64 {
+        if self.up {
+            self.capacity * self.factor
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FlowState {
+    /// Waiting out its path latency.
+    Latent,
+    /// In the fluid pool.
+    Active,
+    /// Path contains a down resource; rate is zero until migrated/aborted.
+    Stalled,
+    Done,
+    Aborted,
+}
+
+#[derive(Debug, Clone)]
+struct Flow {
+    path: Vec<ResourceId>,
+    size: f64,
+    remaining: f64,
+    rate: f64,
+    state: FlowState,
+    /// Bumped whenever the flow's predicted completion changes; stale heap
+    /// entries are dropped on pop.
+    epoch: u64,
+    /// Caller-defined tag returned alongside events for dispatch.
+    pub tag: u64,
+}
+
+/// The engine. Drive it with [`Engine::add_flow`]/[`Engine::set_timer`] and
+/// consume events with [`Engine::next_event`].
+#[derive(Debug)]
+pub struct Engine {
+    now: SimTime,
+    resources: Vec<Resource>,
+    flows: Vec<Flow>,
+    heap: BinaryHeap<Reverse<(TimeKey, u64, Pending)>>,
+    seq: u64,
+    next_timer: TimerId,
+    /// Time of the last fluid settle; progress accrues between settles.
+    last_settle: SimTime,
+    /// Index of non-terminal flows (Latent/Active/Stalled): settling and
+    /// rate recomputation iterate only these, keeping per-event cost
+    /// proportional to *concurrent* flows rather than all flows ever
+    /// created (§Perf: this was the executor's quadratic hot spot).
+    live: Vec<FlowId>,
+    /// Scratch: flows per resource, rebuilt on each rate computation.
+    dirty: bool,
+    /// Number of rate recomputations (perf counter).
+    pub recomputes: u64,
+}
+
+impl Engine {
+    /// Create an engine over `capacities[(resource)] = bytes/s`.
+    pub fn new(capacities: &[f64]) -> Engine {
+        Engine {
+            now: 0.0,
+            resources: capacities
+                .iter()
+                .map(|&c| Resource { capacity: c, factor: 1.0, up: true })
+                .collect(),
+            flows: Vec::new(),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            next_timer: 0,
+            last_settle: 0.0,
+            live: Vec::new(),
+            dirty: false,
+            recomputes: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    // ------------------------------------------------------------------
+    // Flows
+    // ------------------------------------------------------------------
+
+    /// Add a flow of `size` bytes over `path`, becoming active after
+    /// `latency` seconds. Zero-byte flows complete right after the latency
+    /// (they model α-only control messages and zero-byte probes).
+    pub fn add_flow(&mut self, path: Vec<ResourceId>, size: f64, latency: f64, tag: u64) -> FlowId {
+        assert!(size >= 0.0 && latency >= 0.0);
+        let id = self.flows.len();
+        self.live.push(id);
+        self.flows.push(Flow {
+            path,
+            size,
+            remaining: size,
+            rate: 0.0,
+            state: FlowState::Latent,
+            epoch: 0,
+            tag,
+        });
+        self.push(self.now + latency, Pending::Activate(id, 0));
+        id
+    }
+
+    /// Progress of a flow in bytes delivered so far (settled to `now`).
+    pub fn flow_progress(&mut self, id: FlowId) -> f64 {
+        self.settle();
+        self.flows[id].size - self.flows[id].remaining
+    }
+
+    pub fn flow_tag(&self, id: FlowId) -> u64 {
+        self.flows[id].tag
+    }
+
+    pub fn flow_is_stalled(&self, id: FlowId) -> bool {
+        self.flows[id].state == FlowState::Stalled
+    }
+
+    pub fn flow_is_done(&self, id: FlowId) -> bool {
+        self.flows[id].state == FlowState::Done
+    }
+
+    /// Abort a flow (used on migration: the remainder is re-issued as a new
+    /// flow over the backup path). Returns bytes delivered.
+    pub fn abort_flow(&mut self, id: FlowId) -> f64 {
+        self.settle();
+        let f = &mut self.flows[id];
+        assert!(
+            matches!(f.state, FlowState::Latent | FlowState::Active | FlowState::Stalled),
+            "abort of finished flow {id}"
+        );
+        f.state = FlowState::Aborted;
+        f.epoch += 1;
+        f.rate = 0.0;
+        self.dirty = true;
+        self.flows[id].size - self.flows[id].remaining
+    }
+
+    /// Flows (active or latent) whose path crosses `rid`.
+    pub fn flows_through(&self, rid: ResourceId) -> Vec<FlowId> {
+        self.live
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let f = &self.flows[i];
+                matches!(f.state, FlowState::Latent | FlowState::Active | FlowState::Stalled)
+                    && f.path.contains(&rid)
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Timers
+    // ------------------------------------------------------------------
+
+    /// Fire a timer at absolute time `at` with a caller tag.
+    pub fn set_timer(&mut self, at: SimTime, tag: u64) -> TimerId {
+        assert!(at >= self.now, "timer in the past: {at} < {}", self.now);
+        let id = self.next_timer;
+        self.next_timer += 1;
+        self.push(at, Pending::Timer(id, tag));
+        id
+    }
+
+    // ------------------------------------------------------------------
+    // Resource state (failure injection)
+    // ------------------------------------------------------------------
+
+    pub fn set_resource_up(&mut self, rid: ResourceId, up: bool) {
+        self.settle();
+        if self.resources[rid].up != up {
+            self.resources[rid].up = up;
+            self.dirty = true;
+        }
+    }
+
+    /// Degrade a resource to `factor` of its capacity (partial failures:
+    /// link flapping steady-state, CRC retry loss).
+    pub fn set_resource_factor(&mut self, rid: ResourceId, factor: f64) {
+        assert!(factor > 0.0 && factor <= 1.0);
+        self.settle();
+        if (self.resources[rid].factor - factor).abs() > 1e-12 {
+            self.resources[rid].factor = factor;
+            self.dirty = true;
+        }
+    }
+
+    pub fn resource_is_up(&self, rid: ResourceId) -> bool {
+        self.resources[rid].up
+    }
+
+    // ------------------------------------------------------------------
+    // Event loop
+    // ------------------------------------------------------------------
+
+    /// Advance to and return the next event, or `None` when idle.
+    pub fn next_event(&mut self) -> Option<(SimTime, Event)> {
+        loop {
+            self.reschedule_if_dirty();
+            let Reverse((TimeKey(t), _, pending)) = self.heap.pop()?;
+            debug_assert!(t >= self.now - 1e-9, "time went backwards: {t} < {}", self.now);
+            match pending {
+                Pending::Activate(id, epoch) => {
+                    if self.flows[id].epoch != epoch
+                        || self.flows[id].state != FlowState::Latent
+                    {
+                        continue;
+                    }
+                    self.advance_to(t);
+                    let f = &mut self.flows[id];
+                    if f.remaining <= 0.0 {
+                        // Zero-byte flow: completes at activation.
+                        f.state = FlowState::Done;
+                        return Some((self.now, Event::FlowCompleted(id)));
+                    }
+                    f.state = FlowState::Active;
+                    self.dirty = true;
+                    // Completion will be scheduled by the recompute.
+                }
+                Pending::Complete(id, epoch) => {
+                    if self.flows[id].epoch != epoch
+                        || self.flows[id].state != FlowState::Active
+                    {
+                        continue; // stale prediction
+                    }
+                    self.advance_to(t);
+                    let f = &mut self.flows[id];
+                    debug_assert!(
+                        f.remaining <= f.size * 1e-9 + 1e-6,
+                        "completion fired early: {} bytes left",
+                        f.remaining
+                    );
+                    f.remaining = 0.0;
+                    f.state = FlowState::Done;
+                    f.rate = 0.0;
+                    self.dirty = true;
+                    return Some((self.now, Event::FlowCompleted(id)));
+                }
+                Pending::Timer(id, tag) => {
+                    self.advance_to(t);
+                    return Some((self.now, Event::Timer(id, tag)));
+                }
+            }
+        }
+    }
+
+    /// Run until the event queue drains; returns the final time.
+    pub fn run_to_idle<F: FnMut(&mut Engine, SimTime, Event)>(&mut self, mut on_event: F) -> SimTime {
+        while let Some((t, ev)) = self.next_event() {
+            on_event(self, t, ev);
+        }
+        self.now
+    }
+
+    // ------------------------------------------------------------------
+    // Internals
+    // ------------------------------------------------------------------
+
+    fn push(&mut self, at: SimTime, p: Pending) {
+        self.seq += 1;
+        self.heap.push(Reverse((TimeKey(at), self.seq, p)));
+    }
+
+    fn advance_to(&mut self, t: SimTime) {
+        if t > self.now {
+            self.settle_to(t);
+            self.now = t;
+        }
+    }
+
+    /// Accrue progress for active flows up to the current time.
+    fn settle(&mut self) {
+        self.settle_to(self.now);
+    }
+
+    fn settle_to(&mut self, t: SimTime) {
+        let dt = t - self.last_settle;
+        if dt > 0.0 {
+            for &id in &self.live {
+                let f = &mut self.flows[id];
+                if f.state == FlowState::Active && f.rate > 0.0 {
+                    f.remaining = (f.remaining - f.rate * dt).max(0.0);
+                }
+            }
+        }
+        self.last_settle = t;
+    }
+
+    fn reschedule_if_dirty(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.dirty = false;
+        self.settle();
+        // Snapshot rates: a flow whose rate is unchanged keeps a valid
+        // completion prediction (remaining shrinks linearly at that rate),
+        // so we avoid the epoch bump + heap push for it (§Perf).
+        let prev: Vec<(FlowId, f64, FlowState)> = self
+            .live
+            .iter()
+            .map(|&id| (id, self.flows[id].rate, self.flows[id].state))
+            .collect();
+        self.recompute_rates();
+        for (id, old_rate, old_state) in prev {
+            let f = &mut self.flows[id];
+            if f.state != FlowState::Active {
+                continue;
+            }
+            let unchanged = old_state == FlowState::Active
+                && old_rate > 0.0
+                && (f.rate - old_rate).abs() <= old_rate * 1e-12;
+            if unchanged {
+                continue;
+            }
+            f.epoch += 1;
+            let epoch = f.epoch;
+            if f.rate > 0.0 {
+                let eta = self.now + f.remaining / f.rate;
+                self.push(eta, Pending::Complete(id, epoch));
+            }
+            // rate==0 → stalled: no completion until state changes.
+        }
+        // Newly-activated flows appear in `live` after the snapshot only if
+        // added mid-recompute — not possible here; activations always mark
+        // dirty and pass through the snapshot on the next call.
+    }
+
+    /// Progressive-filling max-min fair allocation over the current active
+    /// flow set. Flows whose path contains a down resource are Stalled.
+    fn recompute_rates(&mut self) {
+        self.recomputes += 1;
+        // Drop terminal flows from the live index, then classify.
+        self.live.retain(|&id| {
+            !matches!(self.flows[id].state, FlowState::Done | FlowState::Aborted)
+        });
+        let mut active: Vec<FlowId> = Vec::new();
+        for i in 0..self.live.len() {
+            let id = self.live[i];
+            let state = self.flows[id].state;
+            if !matches!(state, FlowState::Active | FlowState::Stalled) {
+                continue;
+            }
+            let blocked = self.flows[id]
+                .path
+                .iter()
+                .any(|&r| !self.resources[r].up);
+            let f = &mut self.flows[id];
+            if blocked {
+                f.state = FlowState::Stalled;
+                f.rate = 0.0;
+            } else {
+                f.state = FlowState::Active;
+                active.push(id);
+            }
+        }
+        if active.is_empty() {
+            return;
+        }
+        // remaining capacity per resource; count of unfixed flows per resource
+        let mut cap: Vec<f64> = self.resources.iter().map(|r| r.effective()).collect();
+        let mut count: Vec<usize> = vec![0; self.resources.len()];
+        for &id in &active {
+            for &r in &self.flows[id].path {
+                count[r] += 1;
+            }
+        }
+        let mut unfixed: Vec<FlowId> = active.clone();
+        // Progressive filling: repeatedly saturate the tightest resource(s).
+        // All resources within ε of the minimum share are saturated together
+        // — in homogeneous states (the common case: a healthy ring) this
+        // fixes every flow in a single round instead of one resource per
+        // round (§Perf).
+        while !unfixed.is_empty() {
+            let mut min_share = f64::INFINITY;
+            for (r, &c) in cap.iter().enumerate() {
+                if count[r] > 0 {
+                    let share = c / count[r] as f64;
+                    if share < min_share {
+                        min_share = share;
+                    }
+                }
+            }
+            if !min_share.is_finite() {
+                // No constrained resource (shouldn't happen: paths non-empty).
+                for &id in &unfixed {
+                    self.flows[id].rate = f64::INFINITY;
+                }
+                break;
+            }
+            let limit = min_share * (1.0 + 1e-12);
+            // Determine the bottleneck set *before* fixing (fixing mutates
+            // cap/count and would misclassify later flows in this round).
+            let bottleneck: Vec<bool> = cap
+                .iter()
+                .zip(count.iter())
+                .map(|(&c, &k)| k > 0 && c / k as f64 <= limit)
+                .collect();
+            // Fix every unfixed flow crossing a min-share resource.
+            let mut still = Vec::with_capacity(unfixed.len());
+            let mut fixed_any = false;
+            for &id in &unfixed {
+                let bottlenecked = self.flows[id].path.iter().any(|&r| bottleneck[r]);
+                if bottlenecked {
+                    self.flows[id].rate = min_share;
+                    for &r in &self.flows[id].path {
+                        cap[r] = (cap[r] - min_share).max(0.0);
+                        count[r] -= 1;
+                    }
+                    fixed_any = true;
+                } else {
+                    still.push(id);
+                }
+            }
+            if !fixed_any {
+                // Numeric corner: force-fix everything at min_share.
+                for &id in &still {
+                    self.flows[id].rate = min_share;
+                }
+                break;
+            }
+            unfixed = still;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(e: &mut Engine) -> Vec<(f64, Event)> {
+        let mut out = Vec::new();
+        while let Some(ev) = e.next_event() {
+            out.push(ev);
+        }
+        out
+    }
+
+    #[test]
+    fn single_flow_time_is_latency_plus_transfer() {
+        let mut e = Engine::new(&[100.0]);
+        e.add_flow(vec![0], 1000.0, 0.5, 0);
+        let evs = drain(&mut e);
+        assert_eq!(evs.len(), 1);
+        assert!((evs[0].0 - 10.5).abs() < 1e-9, "t={}", evs[0].0);
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let mut e = Engine::new(&[100.0]);
+        e.add_flow(vec![0], 1000.0, 0.0, 0);
+        e.add_flow(vec![0], 1000.0, 0.0, 1);
+        let evs = drain(&mut e);
+        // Both at 50 B/s → both complete at t=20.
+        assert_eq!(evs.len(), 2);
+        assert!((evs[0].0 - 20.0).abs() < 1e-9);
+        assert!((evs[1].0 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_flow_departure_speeds_up_long_flow() {
+        let mut e = Engine::new(&[100.0]);
+        let _long = e.add_flow(vec![0], 1500.0, 0.0, 0);
+        let _short = e.add_flow(vec![0], 500.0, 0.0, 1);
+        let evs = drain(&mut e);
+        // Share 50/50 until short finishes at t=10 (500B at 50B/s); long then
+        // has 1000B left at 100B/s → t=20.
+        assert!((evs[0].0 - 10.0).abs() < 1e-9);
+        assert!((evs[1].0 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_multi_resource() {
+        // Flow A uses r0 (cap 100) only; B uses r0 and r1 (cap 30).
+        // B is bottlenecked at r1: rate 30. A gets the rest of r0: 70.
+        let mut e = Engine::new(&[100.0, 30.0]);
+        e.add_flow(vec![0], 700.0, 0.0, 0); // A
+        e.add_flow(vec![0, 1], 300.0, 0.0, 1); // B
+        let evs = drain(&mut e);
+        let t_a = evs.iter().find(|(_, ev)| *ev == Event::FlowCompleted(0)).unwrap().0;
+        let t_b = evs.iter().find(|(_, ev)| *ev == Event::FlowCompleted(1)).unwrap().0;
+        assert!((t_a - 10.0).abs() < 1e-9, "A at {t_a}");
+        assert!((t_b - 10.0).abs() < 1e-9, "B at {t_b}");
+    }
+
+    #[test]
+    fn staggered_arrival() {
+        let mut e = Engine::new(&[100.0]);
+        e.add_flow(vec![0], 1000.0, 0.0, 0);
+        // Second flow arrives (activates) at t=5 via latency.
+        e.add_flow(vec![0], 250.0, 5.0, 1);
+        let evs = drain(&mut e);
+        // t<5: flow0 alone at 100 → 500 done. t>=5: both at 50.
+        // flow1: 250B at 50 → completes t=10. flow0: 500-250 left at t=10,
+        // then 100B/s → t=12.5.
+        let t1 = evs.iter().find(|(_, ev)| *ev == Event::FlowCompleted(1)).unwrap().0;
+        let t0 = evs.iter().find(|(_, ev)| *ev == Event::FlowCompleted(0)).unwrap().0;
+        assert!((t1 - 10.0).abs() < 1e-9, "t1={t1}");
+        assert!((t0 - 12.5).abs() < 1e-9, "t0={t0}");
+    }
+
+    #[test]
+    fn zero_byte_flow_is_latency_only() {
+        let mut e = Engine::new(&[100.0]);
+        e.add_flow(vec![0], 0.0, 0.25, 7);
+        let evs = drain(&mut e);
+        assert_eq!(evs.len(), 1);
+        assert!((evs[0].0 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resource_down_stalls_flow() {
+        let mut e = Engine::new(&[100.0]);
+        let f = e.add_flow(vec![0], 1000.0, 0.0, 0);
+        // Take the resource down at t=2 via a timer-driven injection.
+        e.set_timer(2.0, 99);
+        let (t, ev) = e.next_event().unwrap();
+        assert_eq!(ev, Event::Timer(0, 99));
+        assert!((t - 2.0).abs() < 1e-12);
+        e.set_resource_up(0, false);
+        assert!((e.flow_progress(f) - 200.0).abs() < 1e-6);
+        // No more events; flow is stalled, not completed.
+        assert!(e.next_event().is_none());
+        assert!(e.flow_is_stalled(f));
+        // Bring it back: flow resumes and completes.
+        e.set_resource_up(0, true);
+        let evs = drain(&mut e);
+        assert_eq!(evs.len(), 1);
+        assert!((evs[0].0 - 10.0).abs() < 1e-9); // lost no bytes, same total service
+    }
+
+    #[test]
+    fn abort_reports_progress_and_silences_flow() {
+        let mut e = Engine::new(&[100.0]);
+        let f = e.add_flow(vec![0], 1000.0, 0.0, 0);
+        e.set_timer(3.0, 0);
+        let _ = e.next_event();
+        let done = e.abort_flow(f);
+        assert!((done - 300.0).abs() < 1e-6);
+        assert!(e.next_event().is_none());
+    }
+
+    #[test]
+    fn degradation_factor_slows_flow() {
+        let mut e = Engine::new(&[100.0]);
+        e.set_resource_factor(0, 0.5);
+        e.add_flow(vec![0], 1000.0, 0.0, 0);
+        let evs = drain(&mut e);
+        assert!((evs[0].0 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timer_ordering_is_stable() {
+        let mut e = Engine::new(&[1.0]);
+        e.set_timer(1.0, 1);
+        e.set_timer(1.0, 2);
+        let (_, e1) = e.next_event().unwrap();
+        let (_, e2) = e.next_event().unwrap();
+        assert_eq!(e1, Event::Timer(0, 1));
+        assert_eq!(e2, Event::Timer(1, 2));
+    }
+
+    #[test]
+    fn flows_through_filters_by_resource() {
+        let mut e = Engine::new(&[1.0, 1.0]);
+        let a = e.add_flow(vec![0], 1.0, 0.0, 0);
+        let b = e.add_flow(vec![1], 1.0, 0.0, 0);
+        assert_eq!(e.flows_through(0), vec![a]);
+        assert_eq!(e.flows_through(1), vec![b]);
+    }
+
+    #[test]
+    fn ring_like_pattern_bottleneck() {
+        // 3 "NICs" (cap 100 each), ring of 3 flows each crossing two
+        // resources (tx of one, rx of next). All flows should get 100
+        // (each resource carries exactly one tx and one... here two flows).
+        // Build: flow i uses [tx_i, rx_{i+1}] with tx/rx separate → each
+        // resource used once → everyone at full rate.
+        let mut e = Engine::new(&[100.0; 6]); // tx0,tx1,tx2,rx0,rx1,rx2
+        e.add_flow(vec![0, 4], 1000.0, 0.0, 0);
+        e.add_flow(vec![1, 5], 1000.0, 0.0, 1);
+        e.add_flow(vec![2, 3], 1000.0, 0.0, 2);
+        let evs = drain(&mut e);
+        for (t, _) in evs {
+            assert!((t - 10.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn doubled_load_on_backup_nic_halves_rate() {
+        // The HotRepair scenario in miniature: two flows forced through one
+        // tx resource finish in 2× the time of the unshared case.
+        let mut e = Engine::new(&[100.0, 100.0]);
+        e.add_flow(vec![0], 1000.0, 0.0, 0);
+        e.add_flow(vec![0], 1000.0, 0.0, 1); // migrated onto same NIC
+        let evs = drain(&mut e);
+        assert!((evs[1].0 - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,274 @@
+//! Failure model: ground truth of what is broken, how it surfaces to the
+//! fluid engine, and what probes observe (§4.2 three-point triangulation
+//! needs distinguishable NIC-fault vs cable-fault signatures).
+//!
+//! The supported-failure matrix mirrors Appendix C (Table 2) of the paper.
+
+use crate::netsim::engine::Engine;
+use crate::topology::{NicId, ResourceKey, Topology};
+
+/// Ground-truth state of one NIC + its cable/port.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NicState {
+    Healthy,
+    /// NIC hardware/port/driver/firmware fault: local operations error out
+    /// immediately (error CQE at the owning host).
+    NicBroken,
+    /// Cable / link / ToR-port fault: both endpoints observe timeouts.
+    CableBroken,
+    /// Partial degradation (flapping steady-state, CRC retries): a capacity
+    /// factor in (0,1].
+    Degraded(f64),
+}
+
+/// Failure kinds of Table 2, used by scenario builders and the scope tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    NicHardware,
+    LinkCable,
+    RdmaQpError,
+    LinkFlapping,
+    CrcErrors,
+    NicDriver,
+    NicFirmware,
+    PcieSubsetOfNics,
+    GpuDirectDegraded,
+    NvlinkFault,
+    SwitchWideOutage,
+    ProcessCrash,
+}
+
+/// Support level per Table 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Support {
+    Yes,
+    Partial,
+    No,
+}
+
+impl FailureKind {
+    /// Appendix C Table 2: whether R²CCL keeps an ongoing collective alive
+    /// under this failure (given an alternate path exists).
+    pub fn support(&self) -> Support {
+        use FailureKind::*;
+        match self {
+            NicHardware | LinkCable | RdmaQpError | NicDriver | NicFirmware => Support::Yes,
+            LinkFlapping | CrcErrors | PcieSubsetOfNics | GpuDirectDegraded => Support::Partial,
+            NvlinkFault | SwitchWideOutage | ProcessCrash => Support::No,
+        }
+    }
+}
+
+/// What a zero-byte RDMA-write probe observes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeOutcome {
+    /// Completion received.
+    Ok,
+    /// Immediate local error CQE: the probing NIC itself is broken.
+    LocalError,
+    /// No completion within the probe timeout.
+    Timeout,
+}
+
+/// Ground-truth fault state of the cluster + application onto the fluid
+/// engine. The detection layer may only query it through `probe()` — the
+/// same information a real probe QP would reveal.
+#[derive(Debug, Clone)]
+pub struct FaultPlane {
+    states: Vec<NicState>,
+}
+
+impl FaultPlane {
+    pub fn new(topo: &Topology) -> FaultPlane {
+        FaultPlane { states: vec![NicState::Healthy; topo.n_nics()] }
+    }
+
+    pub fn state(&self, nic: NicId) -> NicState {
+        self.states[nic]
+    }
+
+    pub fn is_usable(&self, nic: NicId) -> bool {
+        matches!(self.states[nic], NicState::Healthy | NicState::Degraded(_))
+    }
+
+    /// Healthy-side capacity factor (1.0 when healthy, f when degraded,
+    /// 0 when down).
+    pub fn capacity_factor(&self, nic: NicId) -> f64 {
+        match self.states[nic] {
+            NicState::Healthy => 1.0,
+            NicState::Degraded(f) => f,
+            _ => 0.0,
+        }
+    }
+
+    /// Set a NIC's state and mirror it into the engine's resources.
+    pub fn set_state(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId, s: NicState) {
+        self.states[nic] = s;
+        let tx = topo.resource(ResourceKey::NicTx(nic));
+        let rx = topo.resource(ResourceKey::NicRx(nic));
+        match s {
+            NicState::Healthy => {
+                engine.set_resource_up(tx, true);
+                engine.set_resource_up(rx, true);
+                engine.set_resource_factor(tx, 1.0);
+                engine.set_resource_factor(rx, 1.0);
+            }
+            NicState::NicBroken | NicState::CableBroken => {
+                engine.set_resource_up(tx, false);
+                engine.set_resource_up(rx, false);
+            }
+            NicState::Degraded(f) => {
+                engine.set_resource_up(tx, true);
+                engine.set_resource_up(rx, true);
+                engine.set_resource_factor(tx, f);
+                engine.set_resource_factor(rx, f);
+            }
+        }
+    }
+
+    /// Fail a NIC (hardware fault).
+    pub fn fail_nic(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId) {
+        self.set_state(topo, engine, nic, NicState::NicBroken);
+    }
+
+    /// Cut a cable (link fault).
+    pub fn cut_cable(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId) {
+        self.set_state(topo, engine, nic, NicState::CableBroken);
+    }
+
+    /// Repair a NIC/cable.
+    pub fn repair(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId) {
+        self.set_state(topo, engine, nic, NicState::Healthy);
+    }
+
+    /// Outcome of a zero-byte RDMA write probe from `from` to `to`.
+    /// This is the *only* interface the detection layer is allowed to use:
+    /// it reveals exactly what hardware reveals.
+    pub fn probe(&self, from: NicId, to: NicId) -> ProbeOutcome {
+        match self.states[from] {
+            NicState::NicBroken => return ProbeOutcome::LocalError,
+            NicState::CableBroken => return ProbeOutcome::Timeout,
+            _ => {}
+        }
+        match self.states[to] {
+            NicState::NicBroken | NicState::CableBroken => ProbeOutcome::Timeout,
+            _ => ProbeOutcome::Ok,
+        }
+    }
+
+    /// Healthy NICs of a server.
+    pub fn healthy_nics(&self, topo: &Topology, server: usize) -> Vec<NicId> {
+        topo.nics_of_server(server).filter(|&n| self.is_usable(n)).collect()
+    }
+
+    /// Surviving rail set of a server (the S_n of Algorithm 1).
+    pub fn rail_set(&self, topo: &Topology, server: usize) -> Vec<usize> {
+        topo.nics_of_server(server)
+            .filter(|&n| self.is_usable(n))
+            .map(|n| topo.rail_of_nic(n))
+            .collect()
+    }
+
+    /// Fraction of the server's aggregate NIC bandwidth that is lost
+    /// (the X of §5.2).
+    pub fn lost_bandwidth_fraction(&self, topo: &Topology, server: usize) -> f64 {
+        let total = topo.cfg.nics_per_server as f64;
+        let remaining: f64 = topo
+            .nics_of_server(server)
+            .map(|n| self.capacity_factor(n))
+            .sum();
+        (total - remaining) / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyConfig;
+
+    fn setup() -> (Topology, Engine, FaultPlane) {
+        let topo = Topology::build(&TopologyConfig::testbed_h100());
+        let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
+        let engine = Engine::new(&caps);
+        let fp = FaultPlane::new(&topo);
+        (topo, engine, fp)
+    }
+
+    #[test]
+    fn probe_signatures_distinguish_faults() {
+        let (topo, mut eng, mut fp) = setup();
+        // Healthy: ok both ways.
+        assert_eq!(fp.probe(0, 8), ProbeOutcome::Ok);
+        // NIC 0 hardware fault: local error from 0, timeout towards 0.
+        fp.fail_nic(&topo, &mut eng, 0);
+        assert_eq!(fp.probe(0, 8), ProbeOutcome::LocalError);
+        assert_eq!(fp.probe(8, 0), ProbeOutcome::Timeout);
+        // Auxiliary NIC unaffected.
+        assert_eq!(fp.probe(1, 9), ProbeOutcome::Ok);
+        // Cable fault on 8: timeouts at both endpoints, no local error.
+        fp.repair(&topo, &mut eng, 0);
+        fp.cut_cable(&topo, &mut eng, 8);
+        assert_eq!(fp.probe(8, 0), ProbeOutcome::Timeout);
+        assert_eq!(fp.probe(0, 8), ProbeOutcome::Timeout);
+    }
+
+    #[test]
+    fn failure_takes_engine_resources_down() {
+        let (topo, mut eng, mut fp) = setup();
+        let tx = topo.resource(ResourceKey::NicTx(3));
+        assert!(eng.resource_is_up(tx));
+        fp.fail_nic(&topo, &mut eng, 3);
+        assert!(!eng.resource_is_up(tx));
+        fp.repair(&topo, &mut eng, 3);
+        assert!(eng.resource_is_up(tx));
+    }
+
+    #[test]
+    fn degradation_is_usable_but_slower() {
+        let (topo, mut eng, mut fp) = setup();
+        fp.set_state(&topo, &mut eng, 2, NicState::Degraded(0.25));
+        assert!(fp.is_usable(2));
+        assert_eq!(fp.capacity_factor(2), 0.25);
+        assert_eq!(fp.probe(2, 10), ProbeOutcome::Ok);
+    }
+
+    #[test]
+    fn lost_bandwidth_fraction_matches_paper() {
+        let (topo, mut eng, mut fp) = setup();
+        // Single NIC of 8 → X = 12.5% (the paper's headline scenario).
+        fp.fail_nic(&topo, &mut eng, 0);
+        assert!((fp.lost_bandwidth_fraction(&topo, 0) - 0.125).abs() < 1e-12);
+        assert_eq!(fp.lost_bandwidth_fraction(&topo, 1), 0.0);
+        // Two NICs → 25%.
+        fp.cut_cable(&topo, &mut eng, 1);
+        assert!((fp.lost_bandwidth_fraction(&topo, 0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rail_sets_shrink_with_failures() {
+        let (topo, mut eng, mut fp) = setup();
+        assert_eq!(fp.rail_set(&topo, 0), (0..8).collect::<Vec<_>>());
+        fp.fail_nic(&topo, &mut eng, 2);
+        assert_eq!(fp.rail_set(&topo, 0), vec![0, 1, 3, 4, 5, 6, 7]);
+        // Server 1 loses a different rail → disjoint failures (§6 scenario).
+        fp.fail_nic(&topo, &mut eng, 8 + 5);
+        assert_eq!(fp.rail_set(&topo, 1), vec![0, 1, 2, 3, 4, 6, 7]);
+    }
+
+    #[test]
+    fn table2_support_matrix() {
+        use FailureKind::*;
+        // "Yes" rows.
+        for k in [NicHardware, LinkCable, RdmaQpError, NicDriver, NicFirmware] {
+            assert_eq!(k.support(), Support::Yes, "{k:?}");
+        }
+        // "Partial" rows.
+        for k in [LinkFlapping, CrcErrors, PcieSubsetOfNics, GpuDirectDegraded] {
+            assert_eq!(k.support(), Support::Partial, "{k:?}");
+        }
+        // Out-of-scope rows.
+        for k in [NvlinkFault, SwitchWideOutage, ProcessCrash] {
+            assert_eq!(k.support(), Support::No, "{k:?}");
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event fluid-flow network simulator.
+//!
+//! * [`engine`] — flows over resource paths, max-min fair sharing,
+//!   timers, deterministic event ordering.
+//! * [`fault`] — ground-truth failure state (NIC vs cable vs degradation),
+//!   its projection onto engine resources, and the probe oracle the
+//!   detection layer is allowed to query.
+
+pub mod engine;
+pub mod fault;
+
+pub use engine::{Engine, Event, FlowId, SimTime, TimerId};
+pub use fault::{FailureKind, FaultPlane, NicState, ProbeOutcome, Support};
+
+use crate::topology::Topology;
+
+/// Build an engine with the capacities of a topology.
+pub fn engine_for(topo: &Topology) -> Engine {
+    let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
+    Engine::new(&caps)
+}

@@ -1,0 +1,272 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py`) and execute them from Rust. Python never runs
+//! on this path — the binary is self-contained once `make artifacts` has
+//! produced the HLO text.
+//!
+//! HLO *text* is the interchange format: xla_extension 0.5.1 rejects
+//! jax≥0.5's serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Parsed `meta.json`: the flat parameter ABI shared with aot.py.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub n_params: usize,
+    /// (name, shape) in argument order (name-sorted).
+    pub params: Vec<(String, Vec<usize>)>,
+    /// reduce_chunks artifact shape.
+    pub reduce_k: usize,
+    pub reduce_n: usize,
+}
+
+impl ModelMeta {
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("meta.json missing config"))?;
+        let params = j
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("meta.json missing params"))?
+            .iter()
+            .map(|p| {
+                let name = p.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                    .unwrap_or_default();
+                (name, shape)
+            })
+            .collect();
+        let red = j.get("reduce_chunks");
+        Ok(ModelMeta {
+            preset: j.get("preset").and_then(|p| p.as_str()).unwrap_or("?").to_string(),
+            batch: j.get("batch").and_then(|b| b.as_usize()).unwrap_or(1),
+            seq: cfg.get("seq").and_then(|s| s.as_usize()).unwrap_or(0),
+            vocab: cfg.get("vocab").and_then(|s| s.as_usize()).unwrap_or(0),
+            n_params: j.get("n_params").and_then(|n| n.as_usize()).unwrap_or(0),
+            params,
+            reduce_k: red.and_then(|r| r.get("k")).and_then(|k| k.as_usize()).unwrap_or(8),
+            reduce_n: red.and_then(|r| r.get("n")).and_then(|n| n.as_usize()).unwrap_or(0),
+        })
+    }
+
+    /// Total f32 elements across all parameters.
+    pub fn total_elems(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    grad: xla::PjRtLoadedExecutable,
+    update: xla::PjRtLoadedExecutable,
+    reduce: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+// NOTE on buffer management: the xla crate's `execute(&[Literal])` path
+// leaks the input *device* buffers in its C++ shim (`buffer.release()`
+// without a matching free — xla_rs.cc). We therefore create input buffers
+// ourselves (`buffer_from_host_buffer`) and run `execute_b`, whose inputs
+// stay owned by our `PjRtBuffer` handles and are freed on Drop. Without
+// this the 29.5M-param trainer leaks ≈240 MB/step and OOMs within ~150
+// steps (observed; see EXPERIMENTS.md §Perf notes).
+
+fn buf_2d_i32(
+    client: &xla::PjRtClient,
+    data: &[i32],
+    rows: usize,
+    cols: usize,
+) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(data, &[rows, cols], None)?)
+}
+
+fn buf_shaped_f32(
+    client: &xla::PjRtClient,
+    data: &[f32],
+    shape: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(data, shape, None)?)
+}
+
+impl Runtime {
+    /// Load all artifacts from a directory (default `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir: PathBuf = dir.as_ref().to_path_buf();
+        let meta = ModelMeta::load(&dir.join("meta.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let grad = compile(&client, &dir.join("model_grad.hlo.txt"))?;
+        let update = compile(&client, &dir.join("model_update.hlo.txt"))?;
+        let reduce = compile(&client, &dir.join("reduce_chunks.hlo.txt"))?;
+        Ok(Runtime { client, grad, update, reduce, meta })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// One gradient step: `params` in meta order, `tokens`/`targets`
+    /// [batch·seq] i32. Returns (loss, grads in meta order).
+    pub fn grad_step(
+        &self,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let m = &self.meta;
+        assert_eq!(params.len(), m.params.len());
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(params.len() + 2);
+        for (p, (name, shape)) in params.iter().zip(m.params.iter()) {
+            args.push(
+                buf_shaped_f32(&self.client, p, shape)
+                    .with_context(|| format!("param {name}"))?,
+            );
+        }
+        args.push(buf_2d_i32(&self.client, tokens, m.batch, m.seq)?);
+        args.push(buf_2d_i32(&self.client, targets, m.batch, m.seq)?);
+        let result = self.grad.execute_b::<xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 1 + params.len(), "grad outputs {}", outs.len());
+        let grads: Vec<Vec<f32>> = outs
+            .drain(1..)
+            .map(|l| l.to_vec::<f32>())
+            .collect::<std::result::Result<_, _>>()?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        Ok((loss, grads))
+    }
+
+    /// SGD update: params' = params − lr·grads (both in meta order).
+    pub fn apply_update(
+        &self,
+        params: &[Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let m = &self.meta;
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(2 * params.len() + 1);
+        for (p, (_, shape)) in params.iter().zip(m.params.iter()) {
+            args.push(buf_shaped_f32(&self.client, p, shape)?);
+        }
+        for (g, (_, shape)) in grads.iter().zip(m.params.iter()) {
+            args.push(buf_shaped_f32(&self.client, g, shape)?);
+        }
+        args.push(self.client.buffer_from_host_buffer(&[lr], &[], None)?);
+        let result = self.update.execute_b::<xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == params.len(), "update outputs {}", outs.len());
+        outs.into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// The L1 reduction kernel: sum K chunk buffers of N f32 each.
+    /// This is the AOT-compiled Pallas `reduce_chunks` — the same
+    /// arithmetic the collective data plane applies natively; tests assert
+    /// the two agree bit-for-bit.
+    pub fn reduce_chunks(&self, chunks: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let k = self.meta.reduce_k;
+        let n = self.meta.reduce_n;
+        anyhow::ensure!(chunks.len() == k, "expected {k} chunks, got {}", chunks.len());
+        let mut flat = Vec::with_capacity(k * n);
+        for c in chunks {
+            anyhow::ensure!(c.len() == n, "chunk length {} != {n}", c.len());
+            flat.extend_from_slice(c);
+        }
+        let arg = self.client.buffer_from_host_buffer(&flat, &[k, n], None)?;
+        let result = self.reduce.execute_b::<xla::PjRtBuffer>(&[arg])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Deterministic parameter init matching the model's scale conventions
+    /// (the Rust trainer owns initialisation so runs are reproducible
+    /// without Python).
+    pub fn init_params(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::Rng::new(seed);
+        self.meta
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                if name.ends_with("bias") || name.contains(".ln") && name.ends_with("bias") {
+                    vec![0.0; n]
+                } else if name.ends_with("scale") {
+                    vec![1.0; n]
+                } else {
+                    let std = if name.contains("embed") {
+                        0.02
+                    } else {
+                        (shape[0] as f64).powf(-0.5)
+                    };
+                    (0..n).map(|_| (rng.normal() * std) as f32).collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Synthetic Markov batch matching `model.synthetic_batch` semantics.
+    pub fn synthetic_batch(&self, rng: &mut crate::util::Rng) -> (Vec<i32>, Vec<i32>) {
+        let m = &self.meta;
+        let (b, s, v) = (m.batch, m.seq, m.vocab as i64);
+        let mut toks = vec![0i32; b * s + b];
+        for row in 0..b {
+            let mut cur = rng.next_below(v as u64) as i64;
+            for col in 0..=s {
+                toks[row * (s + 1) + col] = cur as i32;
+                cur = (cur + rng.next_below(7) as i64) % v;
+            }
+        }
+        let mut tokens = vec![0i32; b * s];
+        let mut targets = vec![0i32; b * s];
+        for row in 0..b {
+            for col in 0..s {
+                tokens[row * s + col] = toks[row * (s + 1) + col];
+                targets[row * s + col] = toks[row * (s + 1) + col + 1];
+            }
+        }
+        (tokens, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_generated_file() {
+        let path = Path::new("artifacts/meta.json");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let meta = ModelMeta::load(path).unwrap();
+        assert!(meta.n_params > 0);
+        assert_eq!(meta.total_elems(), meta.n_params);
+        let names: Vec<&str> = meta.params.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "ABI order must be name-sorted");
+    }
+}

@@ -1,0 +1,266 @@
+//! R²CCL-Balance (§5.1): NIC-level load balancing that leaves the
+//! collective algorithm untouched.
+//!
+//! NCCL's schedule fixes how much inter-server data each server moves
+//! (already the semantic minimum for core collectives); the only remaining
+//! degree of freedom is *which NICs carry it*. When a NIC fails, Balance
+//! splits every transfer that would have used it across the server's
+//! remaining healthy NICs in proportion to their available bandwidth, so
+//! the server's aggregate throughput approaches its remaining capacity
+//! B_i^rem instead of bottlenecking on one doubled-up backup NIC.
+//!
+//! Forwarding to a non-affinity NIC is PXN-/NUMA-aware via
+//! [`Route::auto_forward`]: same-socket NICs are reached over the (freed)
+//! PCIe lanes, cross-socket NICs via NVLink proxy (PXN).
+
+use crate::collectives::exec::ChannelRouting;
+use crate::collectives::ring::split_even;
+use crate::collectives::schedule::{Schedule, SubTransfer, TransferGroup};
+use crate::netsim::FaultPlane;
+use crate::topology::{NicId, Topology};
+
+/// Rewrite a schedule so that traffic of unusable NICs is redistributed
+/// across healthy NICs of the same server, weighted by capacity.
+/// Groups untouched by failures are passed through unchanged.
+pub fn apply_balance(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    sched: &Schedule,
+) -> Schedule {
+    let mut out = Schedule::new(format!("{}+balance", sched.label));
+    for g in &sched.groups {
+        let mut ng = TransferGroup {
+            channel: g.channel,
+            deps: g.deps.clone(),
+            subs: Vec::with_capacity(g.subs.len()),
+            op: g.op,
+        };
+        for sub in &g.subs {
+            let src_server = topo.server_of_gpu(sub.src);
+            let dst_server = topo.server_of_gpu(sub.dst);
+            if src_server == dst_server {
+                ng.subs.push(sub.clone());
+                continue;
+            }
+            let (src_nic, dst_nic) = match sub.nic_hint {
+                Some(pair) => pair,
+                None => (
+                    routing.nic[g.channel][src_server],
+                    routing.nic[g.channel][dst_server],
+                ),
+            };
+            if faults.is_usable(src_nic) && faults.is_usable(dst_nic) {
+                ng.subs.push(sub.clone());
+                continue;
+            }
+            // Split across healthy NIC pairs, weighted by capacity factor.
+            let pairs = healthy_pairs(topo, faults, src_server, dst_server);
+            if pairs.is_empty() {
+                // No alternate path: leave as-is; the executor will abort.
+                ng.subs.push(sub.clone());
+                continue;
+            }
+            let weights: Vec<f64> = pairs
+                .iter()
+                .map(|&(a, b)| faults.capacity_factor(a).min(faults.capacity_factor(b)))
+                .collect();
+            let shares = weighted_split(sub.bytes, &weights);
+            for (&(a, b), &bytes) in pairs.iter().zip(shares.iter()) {
+                if bytes == 0 {
+                    continue;
+                }
+                ng.subs.push(SubTransfer { src: sub.src, dst: sub.dst, bytes, nic_hint: Some((a, b)) });
+            }
+            if ng.subs.is_empty() {
+                // All shares rounded to zero (tiny message): put everything
+                // on the best pair.
+                ng.subs.push(SubTransfer {
+                    src: sub.src,
+                    dst: sub.dst,
+                    bytes: sub.bytes,
+                    nic_hint: Some(pairs[0]),
+                });
+            }
+        }
+        out.groups.push(ng);
+    }
+    out
+}
+
+/// Healthy rail-aligned NIC pairs between two servers (same-rail preferred,
+/// falling back to cross-rail combination when a rail is dead on only one
+/// side).
+fn healthy_pairs(
+    topo: &Topology,
+    faults: &FaultPlane,
+    src_server: usize,
+    dst_server: usize,
+) -> Vec<(NicId, NicId)> {
+    let mut pairs = Vec::new();
+    let k = topo.cfg.nics_per_server;
+    let src_base = src_server * k;
+    let dst_base = dst_server * k;
+    // Same-rail pairs.
+    for r in 0..k {
+        let (a, b) = (src_base + r, dst_base + r);
+        if faults.is_usable(a) && faults.is_usable(b) {
+            pairs.push((a, b));
+        }
+    }
+    if !pairs.is_empty() {
+        return pairs;
+    }
+    // Rail-mismatched fallback: any healthy src NIC to any healthy dst NIC,
+    // matched in order.
+    let src_ok = faults.healthy_nics(topo, src_server);
+    let dst_ok = faults.healthy_nics(topo, dst_server);
+    for (a, b) in src_ok.iter().zip(dst_ok.iter()) {
+        pairs.push((*a, *b));
+    }
+    pairs
+}
+
+/// Split `total` into integer parts proportional to `weights`, summing
+/// exactly to `total`.
+pub fn weighted_split(total: u64, weights: &[f64]) -> Vec<u64> {
+    let wsum: f64 = weights.iter().sum();
+    if wsum <= 0.0 {
+        return split_even(total, weights.len());
+    }
+    let mut out: Vec<u64> = weights
+        .iter()
+        .map(|w| ((total as f64) * w / wsum).floor() as u64)
+        .collect();
+    let assigned: u64 = out.iter().sum();
+    let mut leftover = total - assigned;
+    // Hand the remainder to the largest weights first (deterministic).
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap().then(a.cmp(&b)));
+    let mut i = 0;
+    while leftover > 0 {
+        out[order[i % order.len()]] += 1;
+        leftover -= 1;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::{ChannelRouting, ExecOptions, Executor, FaultAction, FaultEvent};
+    use crate::collectives::ring::{nccl_rings, ring_allreduce};
+    use crate::collectives::PhantomPlane;
+    use crate::config::TimingConfig;
+    use crate::netsim;
+    use crate::topology::TopologyConfig;
+
+    fn setup() -> (Topology, crate::netsim::Engine, FaultPlane) {
+        let t = Topology::build(&TopologyConfig::testbed_h100());
+        let e = netsim::engine_for(&t);
+        let f = FaultPlane::new(&t);
+        (t, e, f)
+    }
+
+    #[test]
+    fn weighted_split_sums_and_proportions() {
+        let s = weighted_split(1000, &[1.0, 1.0, 2.0]);
+        assert_eq!(s.iter().sum::<u64>(), 1000);
+        assert_eq!(s, vec![250, 250, 500]);
+        assert_eq!(weighted_split(7, &[0.0, 0.0]), vec![4, 3]);
+    }
+
+    #[test]
+    fn healthy_schedule_passes_through() {
+        let (t, _e, f) = setup();
+        let spec = nccl_rings(&t, 4);
+        let sched = ring_allreduce(&spec, 1 << 20, 0);
+        let routing = ChannelRouting::default_rails(&t, 4);
+        let out = apply_balance(&t, &f, &routing, &sched);
+        assert_eq!(out.len(), sched.len());
+        assert_eq!(out.total_bytes(), sched.total_bytes());
+        assert!(out.groups.iter().all(|g| g.subs.len() == 1));
+    }
+
+    #[test]
+    fn failed_nic_traffic_spreads_across_seven() {
+        let (t, mut e, mut f) = setup();
+        f.fail_nic(&t, &mut e, 0);
+        let spec = nccl_rings(&t, 8);
+        let sched = ring_allreduce(&spec, 8 << 20, 0);
+        let routing = ChannelRouting::default_rails(&t, 8);
+        let out = apply_balance(&t, &f, &routing, &sched);
+        out.validate().unwrap();
+        assert_eq!(out.total_bytes(), sched.total_bytes());
+        // Channel-0 inter-server groups must now have 7 sub-transfers.
+        let mut saw_split = false;
+        for g in &out.groups {
+            if g.channel == 0 && g.subs.len() > 1 {
+                saw_split = true;
+                assert_eq!(g.subs.len(), 7);
+                for s in &g.subs {
+                    let (a, b) = s.nic_hint.unwrap();
+                    assert!(f.is_usable(a) && f.is_usable(b));
+                    assert_ne!(a, 0);
+                }
+            }
+        }
+        assert!(saw_split);
+    }
+
+    #[test]
+    fn balance_beats_hotrepair_on_large_messages() {
+        // Fig 15 / Fig 3: Balance ≈ 7/8 of healthy vs HotRepair ≈ 1/2.
+        let t = Topology::build(&TopologyConfig::testbed_h100());
+        let timing = TimingConfig::default();
+        let d: u64 = 1 << 30;
+        let spec = nccl_rings(&t, 8);
+        let sched = ring_allreduce(&spec, d, 0);
+        let routing = ChannelRouting::default_rails(&t, 8);
+        // Healthy baseline.
+        let base = Executor::new(&t, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .run(&sched, &mut PhantomPlane)
+            .completion_or_panic();
+        // HotRepair: fail NIC 0 right at start.
+        let hr = Executor::new(
+            &t,
+            &timing,
+            routing.clone(),
+            ExecOptions::default(),
+            vec![FaultEvent { at: 1e-6, nic: 0, action: FaultAction::FailNic }],
+        )
+        .run(&sched, &mut PhantomPlane)
+        .completion_or_panic();
+        // Balance: schedule rewritten for the known failure.
+        let mut eng = netsim::engine_for(&t);
+        let mut f = FaultPlane::new(&t);
+        f.fail_nic(&t, &mut eng, 0);
+        let balanced = apply_balance(&t, &f, &routing, &sched);
+        let bal = Executor::new(&t, &timing, routing, ExecOptions::default(), vec![])
+            .with_initial_faults(&[(0, FaultAction::FailNic)])
+            .run(&balanced, &mut PhantomPlane)
+            .completion_or_panic();
+        let r_hr = base / hr;
+        let r_bal = base / bal;
+        assert!(r_bal > r_hr + 0.15, "balance {r_bal:.3} vs hotrepair {r_hr:.3}");
+        assert!(r_bal > 0.8, "balance retains {r_bal:.3}");
+    }
+
+    #[test]
+    fn rail_mismatch_uses_cross_rail_pairs() {
+        let (t, mut e, mut f) = setup();
+        // Kill rail 0 on server 0 AND rail 0..7 except rail 3 on both ends:
+        // force cross-rail pairing by killing all same-rail pairs.
+        for r in 0..8 {
+            if r != 3 {
+                f.fail_nic(&t, &mut e, r); // server 0
+            }
+            if r != 5 {
+                f.fail_nic(&t, &mut e, 8 + r); // server 1
+            }
+        }
+        let pairs = healthy_pairs(&t, &f, 0, 1);
+        assert_eq!(pairs, vec![(3, 13)]);
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's scheduling contributions: R²CCL-Balance (§5.1),
+//! R²CCL-AllReduce (§5.2), recursive multi-failure decomposition +
+//! topology-aware logical re-ranking (§6), and the α-β planner that picks
+//! among them per collective invocation (§8.4).
+
+pub mod balance;
+pub mod planner;
+pub mod r2_allreduce;
+pub mod recursive;
+pub mod rerank;
+
+pub use balance::{apply_balance, weighted_split};
+pub use planner::{choose_strategy, optimal_y, ring_time, t_of_y, x_threshold, PlanInput, Strategy};
+pub use r2_allreduce::{r2_allreduce_schedule, r2_multi_allreduce, rings_for_servers, LevelSpec};
+pub use recursive::{plan_levels, recursive_allreduce};
+pub use rerank::{min_edge_capacity, rail_sets, rerank, reranked_server_order};

@@ -1,0 +1,280 @@
+//! The α-β planner (§5.2 Data Partition Analysis, Appendix A, §8.4).
+//!
+//! R²CCL extends NCCL's α-β performance model with per-node bandwidth to
+//! pick, per collective invocation, among: standard Ring/Tree,
+//! R²CCL-Balance, single-bottleneck R²CCL-AllReduce, and recursive
+//! decomposition. The Y* optimum and the X threshold below are proved in
+//! Appendix A and re-verified numerically in `benches/ablations.rs`.
+
+use crate::collectives::CollKind;
+
+/// Strategy selected for one collective invocation (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Healthy network: NCCL's own schedule.
+    Standard,
+    /// NIC-level redistribution, algorithm unchanged.
+    Balance,
+    /// Global+partial decomposition with tailored broadcast.
+    R2AllReduce,
+    /// Multi-bottleneck recursive decomposition.
+    Recursive,
+}
+
+/// Appendix A closed forms -------------------------------------------------
+
+/// The a coefficient: 2(ng−1)/(ng).
+pub fn coef_global(n: usize, g: usize) -> f64 {
+    let ng = (n * g) as f64;
+    2.0 * (ng - 1.0) / ng
+}
+
+/// The b coefficient: 2((n−1)g−1)/((n−1)g).
+pub fn coef_partial(n: usize, g: usize) -> f64 {
+    let m = ((n - 1) * g) as f64;
+    2.0 * (m - 1.0) / m
+}
+
+/// The X threshold ng/(3ng−2): below it plain ring (Y=0) wins.
+pub fn x_threshold(n: usize, g: usize) -> f64 {
+    let ng = (n * g) as f64;
+    ng / (3.0 * ng - 2.0)
+}
+
+/// Optimal partial-AllReduce fraction Y* for lost-bandwidth fraction `x`
+/// (Appendix A): 0 below the threshold, else
+/// Y* = X + X(1−X)/(X + (g(n−1)−1)·n).
+pub fn optimal_y(n: usize, g: usize, x: f64) -> f64 {
+    assert!((0.0..1.0).contains(&x));
+    if n < 2 || x <= x_threshold(n, g) {
+        return 0.0;
+    }
+    let denom = x + ((g * (n - 1) - 1) as f64) * n as f64;
+    (x + x * (1.0 - x) / denom).min(1.0)
+}
+
+/// T(Y) of §5.2 (B = D = 1 scaling; multiply by D/B for real units):
+/// max(T1, T2) + T3.
+pub fn t_of_y(n: usize, g: usize, x: f64, y: f64) -> f64 {
+    let a = coef_global(n, g);
+    let b = coef_partial(n, g);
+    let t1 = a * (1.0 - y) / (1.0 - x);
+    let t2 = if x > 0.0 { b * y / x } else { f64::INFINITY * y };
+    let t3 = if x > 0.0 { y / x } else { 0.0 };
+    let t2 = if y == 0.0 { 0.0 } else { t2 };
+    t1.max(t2) + t3
+}
+
+/// α-β completion-time models ----------------------------------------------
+
+/// Model inputs for one collective on one (possibly degraded) topology.
+#[derive(Debug, Clone)]
+pub struct PlanInput {
+    /// Number of servers.
+    pub n: usize,
+    /// GPUs per server.
+    pub g: usize,
+    /// Per-server healthy NIC bandwidth aggregate (bytes/s), full health.
+    pub server_bw: f64,
+    /// Remaining bandwidth fraction per server (1.0 = healthy);
+    /// length n. The X of server i is 1 − rem[i].
+    pub rem: Vec<f64>,
+    /// Per-hop latency α.
+    pub alpha: f64,
+}
+
+impl PlanInput {
+    pub fn uniform(n: usize, g: usize, server_bw: f64, alpha: f64) -> Self {
+        PlanInput { n, g, server_bw, rem: vec![1.0; n], alpha }
+    }
+
+    /// Lost fraction of the most degraded server.
+    pub fn worst_x(&self) -> f64 {
+        1.0 - self.rem.iter().cloned().fold(1.0_f64, f64::min)
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n * self.g
+    }
+
+    pub fn degraded_servers(&self) -> usize {
+        self.rem.iter().filter(|&&r| r < 1.0).count()
+    }
+}
+
+/// Ring collective time with per-server bottleneck bandwidth:
+/// 2(N−1)α + 2(N−1)/N · D / B_min (AllReduce), (N−1)/N variants for
+/// RS/AG, D/B for broadcast-like.
+pub fn ring_time(kind: CollKind, input: &PlanInput, bytes: f64, balanced: bool) -> f64 {
+    let nr = input.n_ranks() as f64;
+    let k = input.g as f64; // NICs per server (1:1 with GPUs in our topologies)
+    let bmin = input
+        .rem
+        .iter()
+        .map(|r| {
+            let failed = (k * (1.0 - r)).round();
+            if balanced || failed == 0.0 {
+                // Balance: the server's traffic spreads over healthy NICs →
+                // effective rate = remaining aggregate bandwidth.
+                r * input.server_bw
+            } else {
+                // Unbalanced hot repair: the failed channels pile onto one
+                // backup NIC, which then carries (1 + failed) channels; the
+                // ring is throttled by its slowest channel → B / (1+f).
+                input.server_bw / (1.0 + failed)
+            }
+        })
+        .fold(f64::INFINITY, f64::min)
+        .max(1.0);
+    let (vol_factor, steps) = match kind {
+        CollKind::AllReduce => (2.0 * (nr - 1.0) / nr, 2.0 * (nr - 1.0)),
+        CollKind::ReduceScatter | CollKind::AllGather => ((nr - 1.0) / nr, nr - 1.0),
+        CollKind::Broadcast | CollKind::Reduce => (1.0, nr - 1.0),
+        CollKind::SendRecv => (1.0, 1.0),
+        CollKind::AllToAll => ((nr - 1.0) / nr, nr - 1.0),
+    };
+    steps * input.alpha + vol_factor * bytes / bmin
+}
+
+/// R²CCL-AllReduce completion estimate: duplex-aware per-server volume
+/// model (Fig 5 accounting — the degraded server sheds Y of the ring
+/// volume and pays only Y per direction for inject‖deliver; validated
+/// against the fluid simulation, see EXPERIMENTS.md §Perf Y-sweep).
+/// Appendix A's serial T(Y) is kept in [`t_of_y`] for the ablation; this
+/// overlapped model is what the runtime planner uses.
+pub fn r2_allreduce_time(input: &PlanInput, bytes: f64) -> f64 {
+    let x = input.worst_x();
+    if x <= 0.0 {
+        return ring_time(CollKind::AllReduce, input, bytes, true);
+    }
+    let n = input.n;
+    let g = input.g;
+    let y = if n == 2 { (2.0 * x).min(0.5) } else { optimal_y(n, g, x).max(x.min(0.5)) };
+    let nr = (n * g) as f64;
+    let nh = (((n - 1).max(1)) * g) as f64;
+    // Per-direction volumes (×D): degraded server runs the global ring on
+    // (1−Y) plus one Y-slice each way; healthy servers run both rings plus
+    // the broadcast walk through their leads.
+    let vol_degraded = 2.0 * (1.0 - y) * (nr - 1.0) / nr + y;
+    let vol_healthy =
+        2.0 * (1.0 - y) * (nr - 1.0) / nr + 2.0 * y * (nh - 1.0).max(1.0) / nh + 0.5 * y;
+    let t_bytes = (vol_degraded / (1.0 - x)).max(vol_healthy) * bytes / input.server_bw;
+    // α terms: ring steps + stage-2 pipeline coordination.
+    let alpha = 2.0 * (nr - 1.0) * input.alpha + 16.0 * (n as f64) * input.alpha;
+    alpha + t_bytes
+}
+
+/// Pick the strategy for a collective (§8.4: α-β driven, size-aware).
+pub fn choose_strategy(kind: CollKind, input: &PlanInput, bytes: f64) -> Strategy {
+    if input.degraded_servers() == 0 {
+        return Strategy::Standard;
+    }
+    if kind != CollKind::AllReduce {
+        // Table 1: everything except throughput-bound AllReduce uses
+        // Balance (including latency-bound AllReduce below).
+        return Strategy::Balance;
+    }
+    if input.degraded_servers() > 1 {
+        return Strategy::Recursive;
+    }
+    // Single failure, AllReduce: compare α-β estimates.
+    let t_bal = ring_time(kind, input, bytes, true);
+    let t_r2 = r2_allreduce_time(input, bytes);
+    if t_r2 < t_bal {
+        Strategy::R2AllReduce
+    } else {
+        Strategy::Balance
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_matches_paper_practical_third() {
+        // Paper: in practice X < 1/3 → standard ring. ng/(3ng−2) → 1/3 as
+        // ng grows.
+        let th = x_threshold(2, 8);
+        assert!((th - 16.0 / 46.0).abs() < 1e-12);
+        assert!(x_threshold(64, 8) > 0.333 && x_threshold(64, 8) < 0.3345);
+    }
+
+    #[test]
+    fn y_zero_below_threshold() {
+        assert_eq!(optimal_y(2, 8, 0.125), 0.0);
+        assert_eq!(optimal_y(64, 8, 0.2), 0.0);
+    }
+
+    #[test]
+    fn y_star_above_threshold_minimises_t() {
+        let (n, g, x) = (2usize, 8usize, 0.5f64);
+        let y_star = optimal_y(n, g, x);
+        assert!(y_star > x && y_star < 1.0, "y*={y_star}");
+        let t_star = t_of_y(n, g, x, y_star);
+        // Sweep Y; nothing beats Y* (within numeric tolerance).
+        for i in 0..=100 {
+            let y = i as f64 / 100.0;
+            assert!(
+                t_of_y(n, g, x, y) >= t_star - 1e-9,
+                "T({y}) = {} < T(Y*) = {t_star}",
+                t_of_y(n, g, x, y)
+            );
+        }
+    }
+
+    #[test]
+    fn t_at_y_zero_is_degraded_ring() {
+        let (n, g, x) = (4usize, 8usize, 0.25f64);
+        let t0 = t_of_y(n, g, x, 0.0);
+        assert!((t0 - coef_global(n, g) / 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn below_threshold_standard_ring_wins_everywhere() {
+        // Appendix A step 3, branch 1: T non-decreasing on [0,1].
+        let (n, g, x) = (2usize, 8usize, 0.2f64);
+        assert!(x < x_threshold(n, g));
+        let t0 = t_of_y(n, g, x, 0.0);
+        for i in 1..=50 {
+            let y = i as f64 / 50.0;
+            assert!(t_of_y(n, g, x, y) >= t0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn strategy_table1_mapping() {
+        let mut input = PlanInput::uniform(2, 8, 400e9, 5e-6);
+        // Healthy → Standard.
+        assert_eq!(choose_strategy(CollKind::AllReduce, &input, 1e9), Strategy::Standard);
+        input.rem[0] = 0.875;
+        // Non-AllReduce collectives → Balance.
+        for k in [CollKind::AllGather, CollKind::ReduceScatter, CollKind::Broadcast, CollKind::SendRecv] {
+            assert_eq!(choose_strategy(k, &input, 1e9), Strategy::Balance);
+        }
+        // Tiny AllReduce (latency-bound) → Balance.
+        assert_eq!(choose_strategy(CollKind::AllReduce, &input, 8.0), Strategy::Balance);
+        // Multi-failure → Recursive.
+        input.rem[1] = 0.75;
+        assert_eq!(choose_strategy(CollKind::AllReduce, &input, 1e9), Strategy::Recursive);
+    }
+
+    #[test]
+    fn severe_single_failure_prefers_r2_allreduce() {
+        let mut input = PlanInput::uniform(2, 8, 400e9, 5e-6);
+        input.rem[0] = 0.5; // X = 0.5 > threshold
+        let s = choose_strategy(CollKind::AllReduce, &input, 1e9);
+        assert_eq!(s, Strategy::R2AllReduce);
+    }
+
+    #[test]
+    fn ring_time_monotone_in_size_and_degradation() {
+        let input = PlanInput::uniform(4, 8, 200e9, 5e-6);
+        let t1 = ring_time(CollKind::AllReduce, &input, 1e8, true);
+        let t2 = ring_time(CollKind::AllReduce, &input, 2e8, true);
+        assert!(t2 > t1);
+        let mut deg = input.clone();
+        deg.rem[2] = 0.875;
+        assert!(ring_time(CollKind::AllReduce, &deg, 1e8, true) > t1);
+    }
+}

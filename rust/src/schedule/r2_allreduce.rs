@@ -1,0 +1,578 @@
+//! R²CCL-AllReduce (§5.2) and its recursive generalisation (§6).
+//!
+//! The decomposition: split the data into slices; slice 0 runs a *global*
+//! ring AllReduce over every server (throttled by the most degraded one),
+//! while slice k ≥ 1 runs a *partial* AllReduce that excludes the k most
+//! degraded servers and therefore runs at the healthier nodes' full speed.
+//! Excluded servers still contribute: each reduces its slice intra-node
+//! (NVLink), injects it into the partial ring via its lead GPU, and the
+//! completed result is walked back around the healthy ring and delivered
+//! to the excluded servers — the paper's "tailored broadcast" stage
+//! (Figure 5). All stages are chunk-pipelined and run concurrently in the
+//! fluid simulation, so duplex bandwidth and NVLink/NIC overlap are
+//! exploited exactly as the implementation's channel partitioning does.
+
+use crate::collectives::exec::ChannelRouting;
+use crate::collectives::ring::{nccl_rings, ring_allreduce, split_even, RingSpec};
+use crate::collectives::schedule::{DataOp, Schedule, TransferGroup};
+use crate::netsim::FaultPlane;
+use crate::topology::{GpuId, ServerId, Topology};
+
+use super::balance::apply_balance;
+
+/// One decomposition level.
+#[derive(Debug, Clone)]
+pub struct LevelSpec {
+    /// Servers participating in this level's ring (level 0: all).
+    pub servers: Vec<ServerId>,
+    /// Fraction of the data handled at this level (fractions sum to 1).
+    pub fraction: f64,
+}
+
+/// Ring spec over a subset of servers (channel c starts each server's
+/// visit at local GPU c, as in [`nccl_rings`]).
+pub fn rings_for_servers(topo: &Topology, channels: usize, servers: &[ServerId]) -> RingSpec {
+    let g = topo.cfg.gpus_per_server;
+    let mut rings = Vec::with_capacity(channels);
+    for c in 0..channels {
+        let mut ring = Vec::with_capacity(servers.len() * g);
+        for &s in servers {
+            for j in 0..g {
+                ring.push(s * g + (c + j) % g);
+            }
+        }
+        rings.push(ring);
+    }
+    RingSpec { rings }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// Split `elems` into per-level element slices, all aligned to the lcm of
+/// every level's data-plane unit (channels·ranks for the rings,
+/// channels·pipeline for the broadcast chunking) so element maps stay
+/// exact. When `elems` itself is not lcm-aligned the whole schedule runs
+/// timing-only (all slices report length 0 → `DataOp::None`); byte volumes
+/// still follow the fractions.
+fn slice_elems(
+    elems: usize,
+    levels: &[LevelSpec],
+    channels: usize,
+    g: usize,
+    pipeline: usize,
+) -> Vec<(usize, usize)> {
+    let mut unit = channels * pipeline;
+    for lv in levels {
+        unit = lcm(unit, channels * lv.servers.len() * g);
+    }
+    if elems == 0 || elems % unit != 0 {
+        return vec![(0, 0); levels.len()];
+    }
+    let blocks = elems / unit;
+    // Allocate whole blocks per fraction (largest-remainder rounding).
+    let mut alloc: Vec<usize> = levels
+        .iter()
+        .map(|l| (l.fraction * blocks as f64).floor() as usize)
+        .collect();
+    let mut rest = blocks - alloc.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..levels.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = levels[a].fraction * blocks as f64 - alloc[a] as f64;
+        let rb = levels[b].fraction * blocks as f64 - alloc[b] as f64;
+        rb.partial_cmp(&ra).unwrap().then(a.cmp(&b))
+    });
+    let mut i = 0;
+    while rest > 0 {
+        alloc[order[i % order.len()]] += 1;
+        rest -= 1;
+        i += 1;
+    }
+    let mut out = Vec::with_capacity(levels.len());
+    let mut off = 0usize;
+    for a in alloc {
+        let len = a * unit;
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+/// Build the full multi-level schedule.
+///
+/// * `levels[0]` must contain every server; later levels drop the most
+///   degraded ones (each level's server set must be a subset of the
+///   previous).
+/// * `pipeline` is the chunk pipelining depth of the broadcast walks.
+pub fn r2_multi_allreduce(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    bytes_per_rank: u64,
+    elems: usize,
+    levels: &[LevelSpec],
+    channels: usize,
+    pipeline: usize,
+) -> Schedule {
+    assert!(!levels.is_empty());
+    assert_eq!(levels[0].servers.len(), topo.n_servers(), "level 0 must be global");
+    let g = topo.cfg.gpus_per_server;
+    let frac_sum: f64 = levels.iter().map(|l| l.fraction).sum();
+    assert!((frac_sum - 1.0).abs() < 1e-9, "fractions must sum to 1, got {frac_sum}");
+
+    let mut sched = Schedule::new("r2-allreduce");
+    let slices = slice_elems(elems, levels, channels, g, pipeline);
+    // Bytes per level proportional to element slices when data-plane-exact,
+    // else to fractions.
+    let exact = slices.iter().map(|&(_, l)| l).sum::<usize>() == elems && elems > 0;
+    let level_bytes: Vec<u64> = if exact {
+        slices.iter().map(|&(_, len)| (len * 4) as u64).collect()
+    } else {
+        let mut v: Vec<u64> = levels
+            .iter()
+            .map(|l| (bytes_per_rank as f64 * l.fraction).round() as u64)
+            .collect();
+        let diff = bytes_per_rank as i64 - v.iter().sum::<u64>() as i64;
+        let last = v.len() - 1;
+        v[last] = (v[last] as i64 + diff) as u64;
+        v
+    };
+
+    for (k, lv) in levels.iter().enumerate() {
+        let (e_off, e_len) = slices[k];
+        let b = level_bytes[k];
+        if b == 0 && e_len == 0 {
+            continue;
+        }
+        let spec = rings_for_servers(topo, channels, &lv.servers);
+        // The level's AllReduce over its member servers.
+        let mut ar = ring_allreduce(&spec, b, e_len);
+        ar.offset_elems(e_off);
+        let ar_exits_local = ar.exit_groups();
+        let ar_off = sched.append(ar);
+        let ar_exits: Vec<usize> = ar_exits_local.iter().map(|&i| i + ar_off).collect();
+
+        // Excluded servers (members of level 0 but not of this level)
+        // contribute via the tailored broadcast stage.
+        if k > 0 {
+            let excluded: Vec<ServerId> = (0..topo.n_servers())
+                .filter(|s| !lv.servers.contains(s))
+                .collect();
+            emit_tailored_broadcast(
+                topo,
+                &mut sched,
+                &lv.servers,
+                &excluded,
+                b,
+                (e_off, e_len),
+                channels,
+                pipeline,
+                &ar_exits,
+            );
+        }
+    }
+    // Spread any traffic bound to dead NICs across healthy ones.
+    apply_balance(topo, faults, routing, &sched)
+}
+
+/// The single-failure R²CCL-AllReduce of §5.2: global (1−Y) + partial (Y)
+/// excluding `degraded_server`.
+#[allow(clippy::too_many_arguments)]
+pub fn r2_allreduce_schedule(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    bytes_per_rank: u64,
+    elems: usize,
+    degraded_server: ServerId,
+    y: f64,
+    channels: usize,
+) -> Schedule {
+    if y <= 0.0 {
+        // Degenerates to the standard (balanced) ring.
+        let spec = nccl_rings(topo, channels);
+        let ar = ring_allreduce(&spec, bytes_per_rank, elems);
+        return apply_balance(topo, faults, routing, &ar);
+    }
+    let all: Vec<ServerId> = (0..topo.n_servers()).collect();
+    let healthy: Vec<ServerId> = all.iter().copied().filter(|&s| s != degraded_server).collect();
+    let levels = vec![
+        LevelSpec { servers: all, fraction: 1.0 - y },
+        LevelSpec { servers: healthy, fraction: y },
+    ];
+    r2_multi_allreduce(topo, faults, routing, bytes_per_rank, elems, &levels, channels, 8)
+}
+
+/// Stage 2 (Figure 5): for each excluded server — intra-node reduce to a
+/// lead GPU, inject into the partial ring's first member (reduce), walk the
+/// completed slice around the member leads, deliver back to the excluded
+/// leads, and intra-node broadcast everywhere.
+#[allow(clippy::too_many_arguments)]
+fn emit_tailored_broadcast(
+    topo: &Topology,
+    sched: &mut Schedule,
+    members: &[ServerId],
+    excluded: &[ServerId],
+    bytes: u64,
+    (e_off, e_len): (usize, usize),
+    channels: usize,
+    pipeline: usize,
+    ar_exits: &[usize],
+) {
+    let g = topo.cfg.gpus_per_server;
+    let lead = |s: ServerId| s * g; // local GPU 0 leads each server
+    let chan_bytes = split_even(bytes, channels);
+    // Element slices per channel (exact only when divisible).
+    let chan_ranges: Option<Vec<(usize, usize)>> = if e_len > 0 && e_len % channels == 0 {
+        let per = e_len / channels;
+        Some((0..channels).map(|c| (e_off + c * per, per)).collect())
+    } else {
+        None
+    };
+
+    for c in 0..channels {
+        let cb = chan_bytes[c];
+        let crange = chan_ranges.as_ref().map(|r| r[c]);
+        let chunk_bytes = split_even(cb, pipeline);
+        let chunk_ranges: Option<Vec<(usize, usize)>> = crange.and_then(|(off, len)| {
+            if len % pipeline == 0 {
+                let per = len / pipeline;
+                Some((0..pipeline).map(|k| (off + k * per, per)).collect())
+            } else {
+                None
+            }
+        });
+        let op_of = |k: usize, reduce: bool| match &chunk_ranges {
+            Some(rs) => {
+                let (off, len) = rs[k];
+                if reduce {
+                    DataOp::Reduce { off, len }
+                } else {
+                    DataOp::Copy { off, len }
+                }
+            }
+            None => DataOp::None,
+        };
+
+        // (a) Intra-node reduce at each excluded server: a pipelined NVLink
+        //     *chain* g_{g−1} → … → g_1 → lead. Each hop adds the arriving
+        //     accumulated slice into its own buffer and forwards — no GPU's
+        //     NVLink port carries more than one slice (a star into the lead
+        //     would multiply the lead's ingress by g−1).
+        let mut intra_done: Vec<Vec<Vec<usize>>> = Vec::new(); // [excluded][chunk][dep]
+        for &b in excluded {
+            let gpus: Vec<GpuId> = topo.gpus_of_server(b).collect();
+            let l = lead(b);
+            debug_assert_eq!(gpus[0], l);
+            // Chain edges: gpus[g-1] → gpus[g-2] → … → gpus[0] (= lead).
+            let mut prev_edge: Vec<Option<usize>> = vec![None; pipeline];
+            let mut fifo: Vec<Option<usize>> = vec![None; gpus.len()];
+            let mut last_into_lead: Vec<Vec<usize>> = vec![Vec::new(); pipeline];
+            for e in (1..gpus.len()).rev() {
+                let (src, dst) = (gpus[e], gpus[e - 1]);
+                for k in 0..pipeline {
+                    let mut deps = Vec::new();
+                    if let Some(p) = prev_edge[k] {
+                        deps.push(p); // accumulated slice arrived at src
+                    }
+                    if let Some(p) = fifo[e] {
+                        deps.push(p);
+                    }
+                    let idx = sched.push(TransferGroup::single(
+                        c,
+                        src,
+                        dst,
+                        chunk_bytes[k],
+                        deps,
+                        op_of(k, true),
+                    ));
+                    prev_edge[k] = Some(idx);
+                    fifo[e] = Some(idx);
+                    if e == 1 {
+                        last_into_lead[k] = vec![idx];
+                    }
+                }
+            }
+            if gpus.len() == 1 {
+                // Single-GPU server: nothing to reduce.
+            }
+            intra_done.push(last_into_lead);
+        }
+
+        // (b) Injection: each excluded lead reduces its slice into the first
+        //     member's lead. Gated on the partial ring having finished that
+        //     slice (ar_exits) so the reduce lands on the completed partial
+        //     result.
+        let first = lead(members[0]);
+        let mut inject_done: Vec<Vec<usize>> = vec![Vec::new(); pipeline];
+        for (bi, &b) in excluded.iter().enumerate() {
+            let l = lead(b);
+            let mut fifo_prev: Option<usize> = None;
+            for k in 0..pipeline {
+                let mut deps: Vec<usize> = intra_done[bi][k].clone();
+                deps.extend_from_slice(ar_exits);
+                if let Some(p) = fifo_prev {
+                    deps.push(p);
+                }
+                let idx = sched.push(TransferGroup::single(
+                    c,
+                    l,
+                    first,
+                    chunk_bytes[k],
+                    deps,
+                    op_of(k, true),
+                ));
+                fifo_prev = Some(idx);
+                inject_done[k].push(idx);
+            }
+        }
+
+        // (c) Walk the completed slice around the member leads, then out to
+        //     every excluded lead (branching from the last member).
+        //     Nodes: m0 → m1 → … → m_last → {x0, x1, …}
+        //     arrivals[(lead, per-chunk dep lists)] feeds the intra
+        //     broadcasts of stage (d).
+        let last_member = lead(*members.last().unwrap());
+        let mut walk: Vec<(GpuId, GpuId, bool)> = Vec::new(); // (src, dst, is_delivery)
+        for w in members.windows(2) {
+            walk.push((lead(w[0]), lead(w[1]), false));
+        }
+        for &x in excluded {
+            walk.push((last_member, lead(x), true));
+        }
+        // Member 0's arrival of chunk k = all injections of chunk k.
+        let mut arrivals: Vec<(GpuId, Vec<Vec<usize>>)> =
+            vec![(first, inject_done.clone())];
+        // prev_arrival[k]: deps for the next member→member edge.
+        let mut prev_arrival: Vec<Vec<usize>> = inject_done.clone();
+        // branch_from[k]: deps for deliveries out of the last member.
+        let mut branch_from: Vec<Vec<usize>> = inject_done.clone();
+        let mut edge_prev: Vec<Option<usize>> = vec![None; walk.len()];
+        for (ei, &(src, dst, is_delivery)) in walk.iter().enumerate() {
+            let mut per_chunk: Vec<Vec<usize>> = Vec::with_capacity(pipeline);
+            for k in 0..pipeline {
+                let mut deps: Vec<usize> = if is_delivery {
+                    branch_from[k].clone()
+                } else {
+                    prev_arrival[k].clone()
+                };
+                if let Some(p) = edge_prev[ei] {
+                    deps.push(p); // FIFO on the edge
+                }
+                let idx = sched.push(TransferGroup::single(
+                    c,
+                    src,
+                    dst,
+                    chunk_bytes[k],
+                    deps,
+                    op_of(k, false),
+                ));
+                edge_prev[ei] = Some(idx);
+                per_chunk.push(vec![idx]);
+            }
+            if !is_delivery {
+                prev_arrival = per_chunk.clone();
+                if dst == last_member {
+                    branch_from = per_chunk.clone();
+                }
+            }
+            arrivals.push((dst, per_chunk));
+        }
+
+        // (d) Intra-node broadcast at every server whose lead received the
+        //     completed slice: a pipelined NVLink chain lead → g_1 → … →
+        //     g_{g−1} (a star would multiply the lead's egress by g−1).
+        for (l, per_chunk) in &arrivals {
+            let server = topo.server_of_gpu(*l);
+            let gpus: Vec<GpuId> = topo.gpus_of_server(server).collect();
+            debug_assert_eq!(gpus[0], *l);
+            let mut prev_edge: Vec<Vec<usize>> = per_chunk.clone();
+            for e in 1..gpus.len() {
+                let (src, dst) = (gpus[e - 1], gpus[e]);
+                let mut fifo: Option<usize> = None;
+                let mut this_edge: Vec<Vec<usize>> = Vec::with_capacity(pipeline);
+                for k in 0..pipeline {
+                    let mut deps = prev_edge[k].clone();
+                    if let Some(p) = fifo {
+                        deps.push(p);
+                    }
+                    let idx = sched.push(TransferGroup::single(
+                        c,
+                        src,
+                        dst,
+                        chunk_bytes[k],
+                        deps,
+                        op_of(k, false),
+                    ));
+                    fifo = Some(idx);
+                    this_edge.push(vec![idx]);
+                }
+                prev_edge = this_edge;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::{ChannelRouting, ExecOptions, Executor, FaultAction};
+    use crate::collectives::{PhantomPlane, RealPlane};
+    use crate::config::TimingConfig;
+    use crate::netsim;
+    use crate::topology::TopologyConfig;
+
+    fn setup() -> (Topology, crate::netsim::Engine, FaultPlane) {
+        let t = Topology::build(&TopologyConfig::testbed_h100());
+        let e = netsim::engine_for(&t);
+        let f = FaultPlane::new(&t);
+        (t, e, f)
+    }
+
+    #[test]
+    fn subset_rings_cover_subset() {
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let spec = rings_for_servers(&t, 4, &[0, 2, 3]);
+        assert_eq!(spec.n_ranks(), 24);
+        for ring in &spec.rings {
+            assert!(ring.iter().all(|&g| t.server_of_gpu(g) != 1));
+        }
+    }
+
+    #[test]
+    fn schedule_is_valid_dag() {
+        let (t, mut e, mut f) = setup();
+        f.fail_nic(&t, &mut e, 0);
+        let routing = ChannelRouting::default_rails(&t, 4);
+        let s = r2_allreduce_schedule(&t, &f, &routing, 1 << 24, 0, 0, 0.25, 4);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn y_zero_degenerates_to_balanced_ring() {
+        let (t, mut e, mut f) = setup();
+        f.fail_nic(&t, &mut e, 0);
+        let routing = ChannelRouting::default_rails(&t, 4);
+        let s = r2_allreduce_schedule(&t, &f, &routing, 1 << 20, 0, 0, 0.0, 4);
+        assert!(s.label.contains("balance"));
+        // Same wire volume as a plain ring AllReduce.
+        assert_eq!(s.total_bytes(), 2 * 15 * (1u64 << 20));
+    }
+
+    #[test]
+    fn dataplane_correct_single_failure() {
+        // The critical correctness property: the decomposed AllReduce
+        // computes exactly the same result as a plain sum.
+        let (t, mut e, mut f) = setup();
+        f.fail_nic(&t, &mut e, 0);
+        let channels = 2;
+        let pipeline = 8;
+        // elems: divisible by channels·16 (global) and channels·8·pipeline.
+        let elems = channels * 16 * 8 * pipeline * 2;
+        let bytes = (elems * 4) as u64;
+        let routing = ChannelRouting::default_rails(&t, channels);
+        let s = r2_allreduce_schedule(&t, &f, &routing, bytes, elems, 0, 0.25, channels);
+        s.validate().unwrap();
+        let mut plane = RealPlane::new(16, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let timing = TimingConfig::default();
+        let rep = Executor::new(&t, &timing, routing, ExecOptions::default(), vec![])
+            .with_initial_faults(&[(0, FaultAction::FailNic)])
+            .run(&s, &mut plane);
+        assert!(!rep.crashed);
+        plane.assert_all_equal(&expected);
+    }
+
+    #[test]
+    fn dataplane_correct_multi_level() {
+        // Three levels on a 4-server cluster (recursive decomposition).
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let mut e = netsim::engine_for(&t);
+        let mut f = FaultPlane::new(&t);
+        f.fail_nic(&t, &mut e, 0); // server 0 degraded badly
+        f.fail_nic(&t, &mut e, 1);
+        f.fail_nic(&t, &mut e, 8); // server 1 degraded lightly
+        let channels = 2;
+        let levels = vec![
+            LevelSpec { servers: vec![0, 1, 2, 3], fraction: 0.5 },
+            LevelSpec { servers: vec![1, 2, 3], fraction: 0.25 },
+            LevelSpec { servers: vec![2, 3], fraction: 0.25 },
+        ];
+        let elems = 192 * 32; // lcm(level units, channels*pipeline) = 192
+        let bytes = (elems * 4) as u64;
+        let routing = ChannelRouting::default_rails(&t, channels);
+        let s = r2_multi_allreduce(&t, &f, &routing, bytes, elems, &levels, channels, 8);
+        s.validate().unwrap();
+        let mut plane = RealPlane::new(32, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let timing = TimingConfig::default();
+        let rep = Executor::new(&t, &timing, routing, ExecOptions::default(), vec![])
+            .with_initial_faults(&[
+                (0, FaultAction::FailNic),
+                (1, FaultAction::FailNic),
+                (8, FaultAction::FailNic),
+            ])
+            .run(&s, &mut plane);
+        assert!(!rep.crashed, "timeline: {:?}", rep.timeline);
+        plane.assert_all_equal(&expected);
+    }
+
+    #[test]
+    fn r2_reduces_degraded_server_io() {
+        // §5.2: the decomposition cuts the degraded server's wire volume
+        // from ~2D to ~2D−YD.
+        let (t, mut e, mut f) = setup();
+        f.fail_nic(&t, &mut e, 0);
+        let routing = ChannelRouting::default_rails(&t, 8);
+        let d = 1u64 << 24;
+        let y = 0.25;
+        let plain = r2_allreduce_schedule(&t, &f, &routing, d, 0, 0, 0.0, 8);
+        let decomp = r2_allreduce_schedule(&t, &f, &routing, d, 0, 0, y, 8);
+        let io_plain = plain.server_io_bytes(|g| t.server_of_gpu(g), 2);
+        let io_dec = decomp.server_io_bytes(|g| t.server_of_gpu(g), 2);
+        // Degraded server 0 sends strictly less under the decomposition.
+        assert!(
+            (io_dec[0].0 as f64) < 0.93 * io_plain[0].0 as f64,
+            "decomposed {} vs plain {}",
+            io_dec[0].0,
+            io_plain[0].0
+        );
+    }
+
+    #[test]
+    fn r2_faster_than_balance_for_large_messages() {
+        // Fig 15 ordering at the top end.
+        let (t, mut e, mut f) = setup();
+        f.fail_nic(&t, &mut e, 0);
+        let timing = TimingConfig::default();
+        let routing = ChannelRouting::default_rails(&t, 8);
+        let d: u64 = 1 << 29;
+        let bal = r2_allreduce_schedule(&t, &f, &routing, d, 0, 0, 0.0, 8);
+        let t_bal = Executor::new(&t, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .with_initial_faults(&[(0, FaultAction::FailNic)])
+            .run(&bal, &mut PhantomPlane)
+            .completion_or_panic();
+        let dec = r2_allreduce_schedule(&t, &f, &routing, d, 0, 0, 0.4, 8);
+        let t_dec = Executor::new(&t, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .with_initial_faults(&[(0, FaultAction::FailNic)])
+            .run(&dec, &mut PhantomPlane)
+            .completion_or_panic();
+        assert!(
+            t_dec < t_bal,
+            "decomposed {:.3}ms vs balance {:.3}ms",
+            t_dec * 1e3,
+            t_bal * 1e3
+        );
+    }
+}

@@ -1,0 +1,168 @@
+//! Recursive R²CCL-AllReduce for multi-failure bandwidth spectra (§6).
+//!
+//! Under concurrent failures the cluster is not "one degraded server +
+//! homogeneous rest": it is a spectrum of capacities. The recursive
+//! scheduler forms a global ring at the slowest node's rate, peels the
+//! slowest node off, builds a faster sub-ring, and repeats while bandwidth
+//! variance persists; each level's data share is proportional to the
+//! incremental bandwidth its members gain by excluding the slower ones.
+//! Logical re-ranking (Algorithm 1) runs at every level to avoid rail
+//! mismatches introduced by skipping slower nodes.
+
+use crate::collectives::exec::ChannelRouting;
+use crate::collectives::schedule::Schedule;
+use crate::netsim::FaultPlane;
+use crate::topology::{ServerId, Topology};
+
+use super::r2_allreduce::{r2_multi_allreduce, LevelSpec};
+use super::rerank::{rail_sets, rerank};
+
+/// Maximum recursion depth (levels beyond this gain <α each in practice).
+pub const MAX_LEVELS: usize = 4;
+
+/// Derive the level structure (server sets + data fractions) from the
+/// remaining-bandwidth spectrum. `rem[s]` ∈ (0, 1] is server s's remaining
+/// bandwidth fraction.
+pub fn plan_levels(rem: &[f64]) -> Vec<LevelSpec> {
+    let n = rem.len();
+    // Sort servers slowest-first.
+    let mut order: Vec<ServerId> = (0..n).collect();
+    order.sort_by(|&a, &b| rem[a].partial_cmp(&rem[b]).unwrap().then(a.cmp(&b)));
+
+    // Distinct capacity tiers, slowest first.
+    let mut tiers: Vec<f64> = Vec::new();
+    for &s in &order {
+        if tiers.last().map(|&t| (rem[s] - t).abs() > 1e-9).unwrap_or(true) {
+            tiers.push(rem[s]);
+        }
+    }
+    // Level k includes servers with rem > tier_k's value (level 0: all).
+    // Data share of level k ∝ incremental bandwidth tier_{k} − tier_{k−1}
+    // (level 0 gets the base tier_0).
+    let mut levels: Vec<(Vec<ServerId>, f64)> = Vec::new();
+    let mut prev_tier = 0.0;
+    for (k, &tier) in tiers.iter().enumerate() {
+        if k >= MAX_LEVELS {
+            break;
+        }
+        let members: Vec<ServerId> = if k == 0 {
+            (0..n).collect()
+        } else {
+            let mut m: Vec<ServerId> = (0..n).filter(|&s| rem[s] >= tier - 1e-9).collect();
+            m.sort_unstable();
+            if m.len() < 2 {
+                break; // a ring needs ≥2 servers (or 1 server ≥2 GPUs: allow 1)
+            }
+            m
+        };
+        levels.push((members, (tier - prev_tier).max(0.0)));
+        prev_tier = tier;
+    }
+    // Normalise fractions.
+    let total: f64 = levels.iter().map(|(_, f)| f).sum();
+    let k = levels.len();
+    levels
+        .into_iter()
+        .map(|(servers, f)| LevelSpec {
+            servers,
+            fraction: if total > 0.0 { f / total } else { 1.0 / k as f64 },
+        })
+        .collect()
+}
+
+/// Build the recursive schedule for the current failure state, applying
+/// per-level logical re-ranking.
+pub fn recursive_allreduce(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    bytes_per_rank: u64,
+    elems: usize,
+    channels: usize,
+) -> Schedule {
+    let rem: Vec<f64> = (0..topo.n_servers())
+        .map(|s| 1.0 - faults.lost_bandwidth_fraction(topo, s))
+        .collect();
+    let mut levels = plan_levels(&rem);
+    // Per-level re-ranking: order each level's servers to avoid rail
+    // mismatches (Algorithm 1 over the level's sub-ring).
+    let sets = rail_sets(topo, faults);
+    for lv in &mut levels {
+        lv.servers = rerank(&lv.servers, &sets);
+    }
+    // Level 0 ordering must still contain all servers; r2_multi_allreduce
+    // asserts that.
+    r2_multi_allreduce(topo, faults, routing, bytes_per_rank, elems, &levels, channels, 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::{ChannelRouting, ExecOptions, Executor, FaultAction};
+    use crate::collectives::RealPlane;
+    use crate::config::TimingConfig;
+    use crate::netsim;
+    use crate::topology::TopologyConfig;
+
+    #[test]
+    fn uniform_health_is_single_level() {
+        let levels = plan_levels(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(levels.len(), 1);
+        assert_eq!(levels[0].servers.len(), 4);
+        assert!((levels[0].fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_degraded_server_gives_two_levels() {
+        let levels = plan_levels(&[0.875, 1.0, 1.0, 1.0]);
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].servers.len(), 4);
+        assert_eq!(levels[1].servers, vec![1, 2, 3]);
+        // Fractions: base 0.875 global, incremental 0.125 partial.
+        assert!((levels[0].fraction - 0.875).abs() < 1e-9);
+        assert!((levels[1].fraction - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectrum_gives_stacked_levels() {
+        let levels = plan_levels(&[0.5, 0.75, 1.0, 1.0]);
+        assert_eq!(levels.len(), 3);
+        assert_eq!(levels[1].servers, vec![1, 2, 3]);
+        assert_eq!(levels[2].servers, vec![2, 3]);
+        let fsum: f64 = levels.iter().map(|l| l.fraction).sum();
+        assert!((fsum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depth_is_bounded() {
+        let rem: Vec<f64> = (0..12).map(|i| 0.3 + 0.05 * i as f64).collect();
+        assert!(plan_levels(&rem).len() <= MAX_LEVELS);
+    }
+
+    #[test]
+    fn recursive_dataplane_is_exact() {
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let mut e = netsim::engine_for(&t);
+        let mut f = FaultPlane::new(&t);
+        // Spectrum: server 0 loses 2 NICs, server 1 loses 1.
+        let script = [(0, FaultAction::FailNic), (1, FaultAction::FailNic), (8, FaultAction::FailNic)];
+        f.fail_nic(&t, &mut e, 0);
+        f.fail_nic(&t, &mut e, 1);
+        f.fail_nic(&t, &mut e, 8);
+        let channels = 2;
+        let elems = 192 * 64; // lcm of level units & chunking = 192
+        let bytes = (elems * 4) as u64;
+        let routing = ChannelRouting::default_rails(&t, channels);
+        let s = recursive_allreduce(&t, &f, &routing, bytes, elems, channels);
+        s.validate().unwrap();
+        let mut plane = RealPlane::new(32, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let timing = TimingConfig::default();
+        let rep = Executor::new(&t, &timing, routing, ExecOptions::default(), vec![])
+            .with_initial_faults(&script)
+            .run(&s, &mut plane);
+        assert!(!rep.crashed);
+        plane.assert_all_equal(&expected);
+    }
+}

@@ -1,0 +1,180 @@
+//! Topology-aware logical re-ranking (§6, Appendix D Algorithm 1).
+//!
+//! In rail-optimised fabrics, adjacent ring nodes communicate over the
+//! rails they *share*. Disjoint failures on neighbours (u loses rail r, v
+//! loses rail r') collapse the edge's bandwidth to |S_u ∩ S_v| rails. The
+//! repair relocates "bridge" nodes with broad rail connectivity between
+//! incompatible neighbours, touching only the problematic edges so most
+//! RDMA connections survive.
+
+use crate::netsim::FaultPlane;
+use crate::topology::{RailId, ServerId, Topology};
+
+/// Surviving rail sets per server.
+pub fn rail_sets(topo: &Topology, faults: &FaultPlane) -> Vec<Vec<RailId>> {
+    (0..topo.n_servers()).map(|s| faults.rail_set(topo, s)).collect()
+}
+
+fn intersection_size(a: &[RailId], b: &[RailId]) -> usize {
+    a.iter().filter(|r| b.contains(r)).count()
+}
+
+/// Bandwidth of the weakest edge of a ring (in surviving shared rails).
+pub fn min_edge_capacity(ring: &[ServerId], sets: &[Vec<RailId>]) -> usize {
+    let n = ring.len();
+    (0..n)
+        .map(|i| intersection_size(&sets[ring[i]], &sets[ring[(i + 1) % n]]))
+        .min()
+        .unwrap_or(0)
+}
+
+/// Algorithm 1: bridge-based re-ranking. Takes the logical server ring and
+/// the per-server surviving rail sets; returns the optimised ring.
+pub fn rerank(ring_in: &[ServerId], sets: &[Vec<RailId>]) -> Vec<ServerId> {
+    let mut ring: Vec<ServerId> = ring_in.to_vec();
+    let n = ring.len();
+    if n < 3 {
+        return ring;
+    }
+    // B_global ← min_n |S_n|
+    let b_global = ring.iter().map(|&s| sets[s].len()).min().unwrap_or(0);
+    // Candidates: adjacent pairs with |S_u ∩ S_v| < B_global.
+    let mut candidates: Vec<(ServerId, ServerId, usize)> = Vec::new();
+    for i in 0..n {
+        let u = ring[i];
+        let v = ring[(i + 1) % n];
+        let cap = intersection_size(&sets[u], &sets[v]);
+        if cap < b_global {
+            candidates.push((u, v, b_global - cap));
+        }
+    }
+    // Sort by severity (gap size) descending.
+    candidates.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+
+    for (u, v, _gap) in candidates {
+        // The pair may have been separated by an earlier relocation.
+        let Some(iu) = ring.iter().position(|&s| s == u) else { continue };
+        if ring[(iu + 1) % ring.len()] != v {
+            continue;
+        }
+        // Find the best bridge w.
+        let mut best: Option<ServerId> = None;
+        for &w in ring.iter() {
+            if w == u || w == v {
+                continue;
+            }
+            let iw = ring.iter().position(|&s| s == w).unwrap();
+            let x = ring[(iw + ring.len() - 1) % ring.len()];
+            let y = ring[(iw + 1) % ring.len()];
+            if x == u || y == v {
+                continue; // relocation would be a no-op / degenerate
+            }
+            let new_cap = intersection_size(&sets[u], &sets[w])
+                .min(intersection_size(&sets[w], &sets[v]));
+            let removal_cap = intersection_size(&sets[x], &sets[y]);
+            if new_cap >= b_global && removal_cap >= b_global {
+                best = Some(w);
+                break;
+            }
+        }
+        if let Some(w) = best {
+            // Relocate w between u and v.
+            let iw = ring.iter().position(|&s| s == w).unwrap();
+            ring.remove(iw);
+            let iu = ring.iter().position(|&s| s == u).unwrap();
+            ring.insert(iu + 1, w);
+        }
+    }
+    ring
+}
+
+/// Convenience: the default server ring [0, 1, …, n−1] re-ranked for the
+/// current failure state.
+pub fn reranked_server_order(topo: &Topology, faults: &FaultPlane) -> Vec<ServerId> {
+    let ring: Vec<ServerId> = (0..topo.n_servers()).collect();
+    let sets = rail_sets(topo, faults);
+    rerank(&ring, &sets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim;
+    use crate::topology::TopologyConfig;
+
+    /// The §6 scenario: 4 servers, 2 rails each for clarity.
+    fn sets_with(pairs: &[&[RailId]]) -> Vec<Vec<RailId>> {
+        pairs.iter().map(|p| p.to_vec()).collect()
+    }
+
+    #[test]
+    fn disjoint_failures_are_separated_by_bridge() {
+        // u=0 lost rail 1 (keeps {0}), v=1 lost rail 0 (keeps {1}):
+        // edge 0–1 has 0 shared rails. Servers 2,3 keep both rails.
+        let sets = sets_with(&[&[0], &[1], &[0, 1], &[0, 1]]);
+        let ring = vec![0, 1, 2, 3];
+        assert_eq!(min_edge_capacity(&ring, &sets), 0);
+        let out = rerank(&ring, &sets);
+        // B_global = 1; every edge must now share ≥1 rail.
+        assert!(min_edge_capacity(&out, &sets) >= 1, "ring {out:?}");
+        // Same node set.
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn healthy_ring_is_untouched() {
+        let sets = sets_with(&[&[0, 1], &[0, 1], &[0, 1], &[0, 1]]);
+        let ring = vec![0, 1, 2, 3];
+        assert_eq!(rerank(&ring, &sets), ring);
+    }
+
+    #[test]
+    fn two_node_ring_cannot_rerank() {
+        let sets = sets_with(&[&[0], &[1]]);
+        assert_eq!(rerank(&[0, 1], &sets), vec![0, 1]);
+    }
+
+    #[test]
+    fn rerank_preserves_membership_always() {
+        // Larger randomized-ish case: 8 servers, varied sets.
+        let sets = sets_with(&[
+            &[0, 1, 2, 3],
+            &[4, 5, 6, 7],
+            &[0, 1, 2, 3, 4, 5, 6, 7],
+            &[0, 2, 4, 6],
+            &[1, 3, 5, 7],
+            &[0, 1, 2, 3, 4, 5, 6, 7],
+            &[0, 1, 4, 5],
+            &[2, 3, 6, 7],
+        ]);
+        let ring: Vec<usize> = (0..8).collect();
+        let out = rerank(&ring, &sets);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+        // Must not be worse than the input.
+        assert!(min_edge_capacity(&out, &sets) >= min_edge_capacity(&ring, &sets));
+    }
+
+    #[test]
+    fn integrates_with_fault_plane() {
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let mut e = netsim::engine_for(&t);
+        let mut f = FaultPlane::new(&t);
+        // Server 0 loses rails 0..6 (keeps 6,7); server 1 loses rails 2..8
+        // (keeps 0,1): adjacent with empty intersection.
+        for r in 0..6 {
+            f.fail_nic(&t, &mut e, r);
+        }
+        for r in 2..8 {
+            f.fail_nic(&t, &mut e, 8 + r);
+        }
+        let before: Vec<usize> = (0..4).collect();
+        let sets = rail_sets(&t, &f);
+        assert_eq!(intersection_size(&sets[0], &sets[1]), 0);
+        let after = reranked_server_order(&t, &f);
+        assert!(min_edge_capacity(&after, &sets) > min_edge_capacity(&before, &sets));
+    }
+}

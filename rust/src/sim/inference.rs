@@ -1,0 +1,544 @@
+//! vLLM-style inference serving simulator (§8.3).
+//!
+//! A continuous-batching engine model: prefill-priority step loop over a
+//! model instance spanning two servers (TP8 + PP2, or TP8 with
+//! prefill/decode disaggregation). Requests arrive at a fixed rate or
+//! Poisson; the simulator tracks TTFT and TPOT per request and injects a
+//! NIC failure mid-run, handled per strategy:
+//!
+//! * `R2Balance` — transparent transport-layer failover: one hot-repair
+//!   stall (milliseconds), then degraded-bandwidth network terms;
+//! * `Restart` — the paper's measured 35 s service restart; in-flight
+//!   requests lose their KV cache and re-enter the queue;
+//! * `Reroute` — requests shift to the other replica, which absorbs the
+//!   doubled load (all service times ×2); in-flight re-prefill;
+//! * `DejaVu` — KV-cache replication: steady-state slowdown, recovery =
+//!   worker restart + replica fetch + tail recompute (no re-prefill);
+//! * `DejaVuR2` — DéjàVu's stack with R²CCL underneath (§8.3's isolation
+//!   experiment): network faults never reach the application layer.
+
+use crate::baselines::DejaVuModel;
+use crate::config::TimingConfig;
+use crate::util::{Rng, Samples};
+
+/// Model presets for serving.
+#[derive(Debug, Clone)]
+pub struct InferModel {
+    pub name: &'static str,
+    pub params: f64,
+    pub hidden: usize,
+    pub layers: usize,
+    /// Prefill throughput, tokens/s, whole instance (compute-bound).
+    pub prefill_tps: f64,
+    /// Decode step time for the whole batch (memory-bound), seconds.
+    pub decode_step: f64,
+    /// KV-cache bytes per token (GQA-adjusted, whole model).
+    pub kv_per_token: f64,
+}
+
+impl InferModel {
+    pub fn llama70b() -> Self {
+        InferModel {
+            name: "Llama-3.1-70B",
+            params: 70e9,
+            hidden: 8192,
+            layers: 80,
+            prefill_tps: 22_000.0,
+            decode_step: 0.026,
+            kv_per_token: 160.0e3,
+        }
+    }
+    pub fn llama405b() -> Self {
+        InferModel {
+            name: "Llama-3.1-405B",
+            params: 405e9,
+            hidden: 16384,
+            layers: 126,
+            prefill_tps: 6_000.0,
+            decode_step: 0.075,
+            kv_per_token: 516.0e3,
+        }
+    }
+    pub fn opt66b() -> Self {
+        InferModel {
+            name: "OPT-66B",
+            params: 66e9,
+            hidden: 9216,
+            layers: 64,
+            prefill_tps: 20_000.0,
+            decode_step: 0.030,
+            kv_per_token: 2.4e6, // MHA: no GQA in OPT
+        }
+    }
+    pub fn bloom176b() -> Self {
+        InferModel {
+            name: "BLOOM-176B",
+            params: 176e9,
+            hidden: 14336,
+            layers: 70,
+            prefill_tps: 9_000.0,
+            decode_step: 0.055,
+            kv_per_token: 4.0e6,
+        }
+    }
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Pipeline-parallel across the two servers (every token crosses the
+    /// wire) vs PD disaggregation (prefill node → KV transfer → decode).
+    pub pd_disagg: bool,
+    pub qps: f64,
+    pub duration: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub max_batch: usize,
+    /// Poisson arrivals (true) or strictly fixed-rate (false).
+    pub poisson: bool,
+}
+
+impl ServeCfg {
+    pub fn paper_default(qps: f64) -> Self {
+        ServeCfg {
+            pd_disagg: false,
+            qps,
+            duration: 100.0,
+            prompt_tokens: 2000,
+            output_tokens: 256,
+            max_batch: 48,
+            poisson: false,
+        }
+    }
+}
+
+/// Failure-handling strategy (Fig 11–14 legends).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeStrategy {
+    NoFailure,
+    R2Balance,
+    Restart { outage: f64 },
+    Reroute,
+    DejaVu,
+    DejaVuR2,
+}
+
+/// Scripted failure.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeFailure {
+    pub at: f64,
+    /// NICs lost on the affected server (of 8).
+    pub nics: usize,
+}
+
+/// Per-request outcome.
+#[derive(Debug, Clone)]
+pub struct ReqMetrics {
+    pub arrival: f64,
+    pub ttft: f64,
+    pub finish: f64,
+    pub tokens: usize,
+}
+
+impl ReqMetrics {
+    pub fn tpot(&self) -> f64 {
+        if self.tokens <= 1 {
+            return 0.0;
+        }
+        (self.finish - (self.arrival + self.ttft)) / (self.tokens - 1) as f64
+    }
+}
+
+/// Aggregated result.
+#[derive(Debug, Clone)]
+pub struct ServeResult {
+    pub completed: Vec<ReqMetrics>,
+    pub dropped: usize,
+}
+
+impl ServeResult {
+    pub fn ttft(&self) -> Samples {
+        Samples::from_vec(self.completed.iter().map(|r| r.ttft).collect())
+    }
+    pub fn tpot(&self) -> Samples {
+        Samples::from_vec(self.completed.iter().map(|r| r.tpot()).collect())
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Req {
+    arrival: f64,
+    ttft: Option<f64>,
+    tokens_done: usize,
+}
+
+/// The engine simulation.
+pub fn serve_sim(
+    model: &InferModel,
+    cfg: &ServeCfg,
+    strategy: ServeStrategy,
+    failure: Option<ServeFailure>,
+    seed: u64,
+) -> ServeResult {
+    let timing = TimingConfig::default();
+    let mut rng = Rng::new(seed);
+    // Arrival times.
+    let mut arrivals: Vec<f64> = Vec::new();
+    let mut t = 0.0;
+    while t < cfg.duration {
+        t += if cfg.poisson { rng.exponential(cfg.qps) } else { 1.0 / cfg.qps };
+        if t < cfg.duration {
+            arrivals.push(t);
+        }
+    }
+
+    // Network term helpers -------------------------------------------------
+    let nic_bw = 50.0e9_f64; // 400G per NIC
+    let full_bw = 8.0 * nic_bw;
+    let alpha = 10.0e-6;
+    // Remaining-bandwidth factor after the failure for comm terms.
+    let rem_after = |nics_lost: usize| (8 - nics_lost) as f64 / 8.0;
+
+    let failed = |now: f64| failure.map(|f| now >= f.at).unwrap_or(false);
+    let net_slow = |now: f64| -> f64 {
+        if !failed(now) {
+            return 1.0;
+        }
+        let f = failure.unwrap();
+        match strategy {
+            ServeStrategy::NoFailure => 1.0,
+            ServeStrategy::R2Balance | ServeStrategy::DejaVuR2 => 1.0 / rem_after(f.nics),
+            // Post-recovery, restart runs on the degraded NIC set too, but
+            // its dominant cost is the outage itself.
+            ServeStrategy::Restart { .. } => 1.0 / rem_after(f.nics),
+            ServeStrategy::Reroute => 1.0, // traffic now on the healthy server
+            ServeStrategy::DejaVu => 1.0 / rem_after(f.nics),
+        }
+    };
+    // Engine compute slowdown (Reroute: doubled load; DejaVu: replication).
+    let compute_slow = |now: f64| -> f64 {
+        let mut s = 1.0;
+        if matches!(strategy, ServeStrategy::DejaVu | ServeStrategy::DejaVuR2) {
+            s *= DejaVuModel::default().replication_slowdown;
+        }
+        if failed(now) && matches!(strategy, ServeStrategy::Reroute) {
+            s *= 2.0;
+        }
+        s
+    };
+
+    // Per-token PP hop (two boundary crossings per token with PP=2 fwd)
+    let pp_token_comm = |now: f64| -> f64 {
+        if cfg.pd_disagg {
+            return 0.0; // decode is node-local after KV transfer
+        }
+        let bytes = (model.hidden * 2) as f64;
+        2.0 * (alpha + bytes / (nic_bw / net_slow(now)))
+    };
+    let prefill_time = |now: f64| -> f64 {
+        let compute = cfg.prompt_tokens as f64 / model.prefill_tps * compute_slow(now);
+        let comm = if cfg.pd_disagg {
+            // KV-cache shipment prefill→decode node over all healthy NICs.
+            let kv = model.kv_per_token * cfg.prompt_tokens as f64;
+            alpha + kv / (full_bw / net_slow(now))
+        } else {
+            // PP boundary crossings for the prefill microbatches.
+            8.0 * (alpha + (cfg.prompt_tokens * model.hidden * 2) as f64 / 8.0
+                / (nic_bw / net_slow(now)))
+        };
+        compute + comm
+    };
+    let decode_step_time = |now: f64, _batch: usize| -> f64 {
+        model.decode_step * compute_slow(now) + pp_token_comm(now)
+    };
+
+    // Main loop -------------------------------------------------------------
+    let mut now = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut queue: Vec<Req> = Vec::new();
+    let mut batch: Vec<Req> = Vec::new();
+    let mut done: Vec<ReqMetrics> = Vec::new();
+    let mut failure_handled = false;
+    let hot_repair_stall = timing.hot_repair_latency();
+    let horizon = cfg.duration + 3600.0; // drain bound
+
+    while (next_arrival < arrivals.len() || !queue.is_empty() || !batch.is_empty())
+        && now < horizon
+    {
+        // Admit arrivals up to `now`.
+        while next_arrival < arrivals.len() && arrivals[next_arrival] <= now {
+            queue.push(Req { arrival: arrivals[next_arrival], ttft: None, tokens_done: 0 });
+            next_arrival += 1;
+        }
+        // One-time failure side effects.
+        if let Some(f) = failure {
+            if now >= f.at && !failure_handled {
+                failure_handled = true;
+                match strategy {
+                    ServeStrategy::R2Balance | ServeStrategy::DejaVuR2 => {
+                        // Transparent migration: a single low-ms stall.
+                        now += hot_repair_stall;
+                    }
+                    ServeStrategy::Restart { outage } => {
+                        now += outage;
+                        // In-flight requests lost their KV: re-prefill.
+                        for mut r in batch.drain(..) {
+                            r.tokens_done = 0;
+                            r.ttft = None; // regenerated stream
+                            queue.push(r);
+                        }
+                    }
+                    ServeStrategy::Reroute => {
+                        // Shift to the healthy server: in-flight re-prefill
+                        // there (no outage, but doubled load from now on).
+                        for mut r in batch.drain(..) {
+                            r.tokens_done = 0;
+                            queue.push(r);
+                        }
+                    }
+                    ServeStrategy::DejaVu => {
+                        // Worker restart + replica fetch + tail recompute;
+                        // decode resumes from the replicated KV.
+                        let dv = DejaVuModel::default();
+                        let kv: f64 = batch
+                            .iter()
+                            .map(|r| {
+                                model.kv_per_token
+                                    * (cfg.prompt_tokens + r.tokens_done) as f64
+                            })
+                            .sum();
+                        let toks = batch.iter().map(|r| r.tokens_done).max().unwrap_or(0);
+                        now += dv.recovery_time(kv, toks, 1.0 / model.prefill_tps);
+                    }
+                    ServeStrategy::NoFailure => {}
+                }
+            }
+        }
+        // Prefill-priority continuous batching.
+        if !queue.is_empty() && batch.len() < cfg.max_batch {
+            let mut r = queue.remove(0);
+            if r.arrival > now {
+                now = r.arrival;
+            }
+            let dt = prefill_time(now);
+            now += dt;
+            if r.ttft.is_none() {
+                r.ttft = Some(now - r.arrival);
+            }
+            r.tokens_done = r.tokens_done.max(1); // first token out of prefill
+            batch.push(r);
+            continue;
+        }
+        if !batch.is_empty() {
+            let dt = decode_step_time(now, batch.len());
+            now += dt;
+            let mut still = Vec::with_capacity(batch.len());
+            for mut r in batch.drain(..) {
+                r.tokens_done += 1;
+                if r.tokens_done >= cfg.output_tokens {
+                    done.push(ReqMetrics {
+                        arrival: r.arrival,
+                        ttft: r.ttft.unwrap_or(now - r.arrival),
+                        finish: now,
+                        tokens: r.tokens_done,
+                    });
+                } else {
+                    still.push(r);
+                }
+            }
+            batch = still;
+            continue;
+        }
+        // Idle: jump to next arrival.
+        if next_arrival < arrivals.len() {
+            now = now.max(arrivals[next_arrival]);
+        }
+    }
+    ServeResult { completed: done, dropped: queue.len() + batch.len() }
+}
+
+// ---------------------------------------------------------------------
+// Fig 14: single-request cumulative latency with failure at a decode step.
+// ---------------------------------------------------------------------
+
+/// Single homogeneous request (DéjàVu methodology: 500-token prompt,
+/// 1500-token generation, failure at decode step `fail_step`).
+pub fn single_request_latency(
+    model: &InferModel,
+    strategy: ServeStrategy,
+    prompt: usize,
+    gen_tokens: usize,
+    fail_step: Option<usize>,
+) -> f64 {
+    let timing = TimingConfig::default();
+    let alpha = 10.0e-6;
+    let nic_bw = 50.0e9;
+    let dv = DejaVuModel::default();
+    let base_decode = |slow: f64| {
+        model.decode_step * slow + 2.0 * (alpha + (model.hidden * 2) as f64 / nic_bw)
+    };
+    let prefill = |slow: f64| prompt as f64 / model.prefill_tps * slow;
+    let (steady_slow, post_slow) = match strategy {
+        ServeStrategy::DejaVu => (dv.replication_slowdown, dv.replication_slowdown),
+        ServeStrategy::DejaVuR2 => (dv.replication_slowdown, dv.replication_slowdown),
+        _ => (1.0, 1.0),
+    };
+    let mut t = prefill(steady_slow);
+    for step in 0..gen_tokens {
+        if Some(step) == fail_step {
+            match strategy {
+                ServeStrategy::NoFailure => {}
+                ServeStrategy::R2Balance | ServeStrategy::DejaVuR2 => {
+                    // Transparent migration + slightly degraded comm after.
+                    t += timing.hot_repair_latency();
+                }
+                ServeStrategy::Restart { outage } => {
+                    // Full request reprocessing: outage + re-prefill +
+                    // regenerate everything so far.
+                    t += outage + prefill(post_slow) + step as f64 * base_decode(post_slow);
+                }
+                ServeStrategy::Reroute => {
+                    // Re-prefill on the healthy server and regenerate.
+                    t += prefill(post_slow) + step as f64 * base_decode(post_slow);
+                }
+                ServeStrategy::DejaVu => {
+                    let kv = model.kv_per_token * (prompt + step) as f64;
+                    t += dv.recovery_time(kv, step, 1.0 / model.prefill_tps);
+                }
+            }
+        }
+        let slow =
+            if fail_step.map(|f| step >= f).unwrap_or(false) { post_slow * 8.0 / 7.0 } else { steady_slow };
+        // Degraded comm factor applies only to the network share; fold a
+        // conservative 1/(7/8) into decode comm post-failure for R² paths.
+        let d = match strategy {
+            ServeStrategy::R2Balance | ServeStrategy::DejaVuR2
+                if fail_step.map(|f| step >= f).unwrap_or(false) =>
+            {
+                model.decode_step * steady_slow
+                    + 2.0 * (alpha + (model.hidden * 2) as f64 / (nic_bw * 7.0 / 8.0))
+            }
+            _ => base_decode(if matches!(
+                strategy,
+                ServeStrategy::DejaVu | ServeStrategy::DejaVuR2
+            ) {
+                slow.max(steady_slow)
+            } else if matches!(strategy, ServeStrategy::NoFailure) {
+                1.0
+            } else {
+                1.0
+            }),
+        };
+        t += d;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> InferModel {
+        InferModel::llama405b()
+    }
+
+    #[test]
+    fn no_failure_completes_all() {
+        let cfg = ServeCfg::paper_default(0.2);
+        let r = serve_sim(&model(), &cfg, ServeStrategy::NoFailure, None, 1);
+        assert!(r.completed.len() >= 18, "completed {}", r.completed.len());
+        assert_eq!(r.dropped, 0);
+    }
+
+    #[test]
+    fn ttft_grows_with_load() {
+        let m = model();
+        let mut r1 = serve_sim(&m, &ServeCfg::paper_default(0.05), ServeStrategy::NoFailure, None, 1)
+            .ttft();
+        let mut r2 = serve_sim(&m, &ServeCfg::paper_default(0.8), ServeStrategy::NoFailure, None, 1)
+            .ttft();
+        assert!(r2.p95() > r1.p95());
+    }
+
+    #[test]
+    fn figure11_strategy_ordering() {
+        // R²CCL-Balance ≈ no-failure ≪ reroute < restart at moderate load.
+        let m = model();
+        let cfg = ServeCfg::paper_default(0.3);
+        let fail = Some(ServeFailure { at: 50.0, nics: 1 });
+        let mut base = serve_sim(&m, &cfg, ServeStrategy::NoFailure, None, 1).ttft();
+        let mut r2 = serve_sim(&m, &cfg, ServeStrategy::R2Balance, fail, 1).ttft();
+        let mut restart =
+            serve_sim(&m, &cfg, ServeStrategy::Restart { outage: 35.0 }, fail, 1).ttft();
+        let mut reroute = serve_sim(&m, &cfg, ServeStrategy::Reroute, fail, 1).ttft();
+        let (b, r, rs, rr) = (base.p95(), r2.p95(), restart.p95(), reroute.p95());
+        assert!(r < b * 1.10, "R2 p95 {r} vs base {b}");
+        assert!(rs > r * 2.0, "restart p95 {rs} should dwarf R2 {r}");
+        assert!(rr > r, "reroute p95 {rr} vs R2 {r}");
+    }
+
+    #[test]
+    fn r2_steady_state_overhead_small() {
+        // Headline: <3% inference overhead under a single NIC failure.
+        let m = model();
+        let mut cfg = ServeCfg::paper_default(0.1);
+        cfg.duration = 120.0;
+        let fail = Some(ServeFailure { at: 1.0, nics: 1 });
+        let mut base = serve_sim(&m, &cfg, ServeStrategy::NoFailure, None, 1).tpot();
+        let mut r2 = serve_sim(&m, &cfg, ServeStrategy::R2Balance, fail, 1).tpot();
+        let overhead = (r2.p50() - base.p50()) / base.p50();
+        assert!(overhead < 0.03, "TPOT overhead {overhead}");
+    }
+
+    #[test]
+    fn multiple_failures_still_bounded() {
+        // Fig 12/13: up to 6 NICs lost on one node, QPS=0.1 → ≤5% overhead.
+        let m = model();
+        let cfg = ServeCfg::paper_default(0.1);
+        let mut base = serve_sim(&m, &cfg, ServeStrategy::NoFailure, None, 1).tpot();
+        for nics in [2usize, 4, 6] {
+            let fail = Some(ServeFailure { at: 50.0, nics });
+            let mut r2 = serve_sim(&m, &cfg, ServeStrategy::R2Balance, fail, 1).tpot();
+            let o = (r2.p95() - base.p95()) / base.p95();
+            assert!(o < 0.05, "{nics} NICs: TPOT p95 overhead {o}");
+        }
+    }
+
+    #[test]
+    fn figure14_recovery_ordering() {
+        // Non-FT ≫ DéjàVu ≫ R²CCL overhead; ratios in the paper's ballpark
+        // (1.6–1.8× vs 1.14–1.33× vs ≲1.02×).
+        for m in [InferModel::opt66b(), InferModel::bloom176b()] {
+            let base =
+                single_request_latency(&m, ServeStrategy::NoFailure, 500, 1500, None);
+            let nft = single_request_latency(
+                &m,
+                ServeStrategy::Restart { outage: 35.0 },
+                500,
+                1500,
+                Some(800),
+            );
+            let dv = single_request_latency(&m, ServeStrategy::DejaVu, 500, 1500, Some(800));
+            let r2 = single_request_latency(&m, ServeStrategy::DejaVuR2, 500, 1500, Some(800));
+            let dv_base =
+                single_request_latency(&m, ServeStrategy::DejaVu, 500, 1500, None);
+            let (rn, rd, rr) = (nft / base, dv / dv_base, r2 / dv_base);
+            assert!(rn > 1.4, "{}: non-FT ratio {rn}", m.name);
+            assert!(rd > 1.05 && rd < rn, "{}: dejavu ratio {rd}", m.name);
+            assert!(rr < 1.05, "{}: r2 ratio {rr}", m.name);
+        }
+    }
+
+    #[test]
+    fn pd_disagg_kv_transfer_in_ttft() {
+        let m = model();
+        let mut cfg = ServeCfg::paper_default(0.05);
+        cfg.pd_disagg = true;
+        let mut pd = serve_sim(&m, &cfg, ServeStrategy::NoFailure, None, 1).ttft();
+        assert!(pd.p50() > 0.0);
+        // Failure during transfer degrades TTFT by ≤ bandwidth share.
+        let fail = Some(ServeFailure { at: 20.0, nics: 1 });
+        let mut r2 = serve_sim(&m, &cfg, ServeStrategy::R2Balance, fail, 1).ttft();
+        assert!(r2.p99() < pd.p99() * 1.2);
+    }
+}

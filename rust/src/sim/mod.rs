@@ -1,0 +1,16 @@
+//! Workload simulators: Megatron-style training (§8.2), vLLM-style
+//! serving (§8.3), and the Monte Carlo multi-failure sweeps (Fig 10).
+
+pub mod inference;
+pub mod montecarlo;
+pub mod training;
+
+pub use inference::{
+    serve_sim, single_request_latency, InferModel, ReqMetrics, ServeCfg, ServeFailure,
+    ServeResult, ServeStrategy,
+};
+pub use montecarlo::{multi_failure_sweep, sample_pattern, MonteCarloPoint};
+pub use training::{
+    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, simai_iteration,
+    testbed_training, CommVolumes, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
+};

@@ -1,0 +1,167 @@
+//! Monte Carlo multi-failure experiments (Fig 10): k failures placed
+//! uniformly at random over the cluster's NICs, 50 patterns per k,
+//! reporting mean iteration-time overhead.
+
+use std::thread;
+
+use crate::config::GpuComputeConfig;
+use crate::schedule::PlanInput;
+use crate::sim::training::{
+    overhead_vs, simai_iteration, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
+};
+use crate::util::Rng;
+
+/// One sampled failure pattern: lost-NIC count per server.
+pub fn sample_pattern(rng: &mut Rng, n_servers: usize, nics_per_server: usize, k: usize) -> Vec<usize> {
+    let total = n_servers * nics_per_server;
+    let picks = rng.sample_indices(total, k.min(total));
+    let mut per_server = vec![0usize; n_servers];
+    for p in picks {
+        per_server[p / nics_per_server] += 1;
+    }
+    per_server
+}
+
+/// Remaining-bandwidth vector for a pattern.
+pub fn rem_of_pattern(pattern: &[usize], nics_per_server: usize) -> Vec<f64> {
+    pattern
+        .iter()
+        .map(|&lost| ((nics_per_server - lost.min(nics_per_server)) as f64) / nics_per_server as f64)
+        .collect()
+}
+
+/// Result of one k-sweep point.
+#[derive(Debug, Clone)]
+pub struct MonteCarloPoint {
+    pub k: usize,
+    pub mean_overhead: f64,
+    pub max_overhead: f64,
+    pub min_overhead: f64,
+    pub patterns: usize,
+}
+
+/// Run the Fig 10 experiment: for each k in `ks`, `trials` random patterns
+/// over `n_servers`×8 NICs; training overhead of the R²CCL planner
+/// (balance/R²-AllReduce/recursive as appropriate) vs no failure.
+/// Parallelised across k values with std::thread.
+pub fn multi_failure_sweep(
+    model: &ModelConfig,
+    par: &ParallelConfig,
+    gpu: &GpuComputeConfig,
+    n_servers: usize,
+    ks: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Vec<MonteCarloPoint> {
+    let nics = 8usize;
+    let server_bw = 25.0e9 * nics as f64; // A100 cluster: 200G NICs
+    let handles: Vec<_> = ks
+        .iter()
+        .map(|&k| {
+            let model = model.clone();
+            let par = par.clone();
+            let gpu = gpu.clone();
+            thread::spawn(move || {
+                let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9e37_79b9));
+                let healthy_input = PlanInput::uniform(n_servers, nics, server_bw, 5e-6);
+                let base: TrainResult =
+                    simai_iteration(&model, &par, &gpu, &healthy_input, TrainMethod::NoFailure);
+                let mut overheads = Vec::with_capacity(trials);
+                for _ in 0..trials {
+                    let pattern = sample_pattern(&mut rng, n_servers, nics, k);
+                    let rem = rem_of_pattern(&pattern, nics);
+                    // A server with all NICs lost has no alternate path —
+                    // out of R²CCL scope; resample (the paper injects NIC
+                    // failures, not full partitions).
+                    if rem.iter().any(|&r| r <= 0.0) {
+                        continue;
+                    }
+                    let input = PlanInput {
+                        n: n_servers,
+                        g: nics,
+                        server_bw,
+                        rem,
+                        alpha: 5e-6,
+                    };
+                    let r = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2AllReduce);
+                    overheads.push(overhead_vs(&r, &base));
+                }
+                let n = overheads.len().max(1) as f64;
+                MonteCarloPoint {
+                    k,
+                    mean_overhead: overheads.iter().sum::<f64>() / n,
+                    max_overhead: overheads.iter().cloned().fold(0.0, f64::max),
+                    min_overhead: overheads.iter().cloned().fold(f64::INFINITY, f64::min),
+                    patterns: overheads.len(),
+                }
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("worker")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_sums_to_k() {
+        let mut rng = Rng::new(7);
+        for k in [1usize, 5, 10] {
+            let p = sample_pattern(&mut rng, 64, 8, k);
+            assert_eq!(p.iter().sum::<usize>(), k);
+            assert_eq!(p.len(), 64);
+        }
+    }
+
+    #[test]
+    fn rem_vector_correct() {
+        let rem = rem_of_pattern(&[0, 1, 8, 2], 8);
+        assert_eq!(rem, vec![1.0, 0.875, 0.0, 0.75]);
+    }
+
+    #[test]
+    fn figure10_sublinear_growth() {
+        // Overhead grows sublinearly 1 → 10 failures and stays small.
+        let model = ModelConfig::gpt_7b();
+        let par = ParallelConfig { dp: 256, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+        let gpu = GpuComputeConfig::a100();
+        let pts = multi_failure_sweep(&model, &par, &gpu, 64, &[1, 5, 10], 20, 42);
+        assert_eq!(pts.len(), 3);
+        let o1 = pts[0].mean_overhead;
+        let o5 = pts[1].mean_overhead;
+        let o10 = pts[2].mean_overhead;
+        assert!(o1 > 0.0 && o1 < 0.05, "k=1 overhead {o1}");
+        assert!(o10 < 0.10, "k=10 overhead {o10}");
+        assert!(o5 >= o1 - 1e-9 && o10 >= o5 - 1e-9, "monotone-ish: {o1} {o5} {o10}");
+        // Sublinear: 10 failures ≪ 10× one failure.
+        assert!(o10 < 6.0 * o1, "sublinear: o10={o10} o1={o1}");
+    }
+
+    #[test]
+    fn concentration_hurts_more_than_scatter() {
+        // §8.2: failures concentrated on one server bottleneck it; spread
+        // failures amortise.
+        let model = ModelConfig::gpt_7b();
+        let par = ParallelConfig { dp: 256, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+        let gpu = GpuComputeConfig::a100();
+        let base_input = PlanInput::uniform(64, 8, 200e9, 5e-6);
+        let base = simai_iteration(&model, &par, &gpu, &base_input, TrainMethod::NoFailure);
+        // 4 failures on one server.
+        let mut conc = base_input.clone();
+        conc.rem[0] = 0.5;
+        let r_conc = simai_iteration(&model, &par, &gpu, &conc, TrainMethod::R2AllReduce);
+        // 4 failures spread over 4 servers.
+        let mut spread = base_input.clone();
+        for s in 0..4 {
+            spread.rem[s] = 0.875;
+        }
+        let r_spread = simai_iteration(&model, &par, &gpu, &spread, TrainMethod::R2AllReduce);
+        assert!(
+            overhead_vs(&r_conc, &base) > overhead_vs(&r_spread, &base),
+            "concentrated {} vs spread {}",
+            overhead_vs(&r_conc, &base),
+            overhead_vs(&r_spread, &base)
+        );
+    }
+}

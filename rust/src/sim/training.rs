@@ -1,0 +1,440 @@
+//! Megatron-style training simulator (§8.2).
+//!
+//! Iteration time = analytic compute (6·P·T FLOPs over achieved per-GPU
+//! FLOPs) + exposed communication. Communication times come from two
+//! sources matching the paper's methodology split:
+//! * testbed scale (2 servers): the fluid-flow event simulator via
+//!   [`Communicator`] — collectives actually execute, failures migrate;
+//! * SimAI scale (4–128 servers): the α-β analytic models of
+//!   [`crate::schedule::planner`] (running a 512-rank event-level ring per
+//!   Monte-Carlo sample would be wasteful and adds nothing at this
+//!   abstraction level).
+
+use crate::baselines::adapcc::AdapCcModel;
+use crate::ccl::{Communicator, StrategyChoice};
+use crate::collectives::exec::FaultAction;
+use crate::collectives::CollKind;
+use crate::config::{GpuComputeConfig, Preset};
+use crate::schedule::{choose_strategy, ring_time, PlanInput, Strategy};
+
+/// Transformer model shapes (decoder-only GPT family, as in the paper).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub params: f64,
+    pub layers: usize,
+    pub hidden: usize,
+    pub seq: usize,
+}
+
+impl ModelConfig {
+    pub fn gpt_2_7b() -> Self {
+        ModelConfig { name: "GPT-2.7B", params: 2.7e9, layers: 32, hidden: 2560, seq: 2048 }
+    }
+    pub fn gpt_7b() -> Self {
+        ModelConfig { name: "GPT-7B", params: 7.0e9, layers: 32, hidden: 4096, seq: 2048 }
+    }
+    pub fn gpt_13b() -> Self {
+        ModelConfig { name: "GPT-13B", params: 13.0e9, layers: 40, hidden: 5120, seq: 2048 }
+    }
+    pub fn gpt_175b() -> Self {
+        ModelConfig { name: "GPT-175B", params: 175.0e9, layers: 96, hidden: 12288, seq: 2048 }
+    }
+}
+
+/// Parallelism layout.
+#[derive(Debug, Clone)]
+pub struct ParallelConfig {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub global_batch: usize,
+    pub microbatch: usize,
+}
+
+impl ParallelConfig {
+    pub fn n_gpus(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+}
+
+/// Failure-handling method under test (the Figure 7 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMethod {
+    NoFailure,
+    R2AllReduce,
+    R2Balance,
+    R2HotRepair,
+    AdapCc,
+    VanillaNccl,
+}
+
+/// One simulated training result.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub method: TrainMethod,
+    pub tokens_per_sec: f64,
+    /// Relative overhead vs the no-failure run of the same config.
+    pub overhead: f64,
+    pub iter_time: f64,
+    pub compute_time: f64,
+    pub comm_time: f64,
+}
+
+/// Per-iteration communication volumes (bytes).
+#[derive(Debug, Clone)]
+pub struct CommVolumes {
+    /// DP gradient AllReduce per rank (bf16 grads of the DP shard).
+    pub dp_allreduce: u64,
+    /// PP activations per microbatch per boundary (bf16), both directions.
+    pub pp_p2p: u64,
+    pub n_microbatches: usize,
+}
+
+pub fn comm_volumes(model: &ModelConfig, par: &ParallelConfig) -> CommVolumes {
+    let grad_bytes = (model.params / (par.tp * par.pp) as f64 * 2.0) as u64;
+    let micro_tokens = par.microbatch * model.seq;
+    let act_bytes = (micro_tokens * model.hidden * 2) as u64;
+    CommVolumes {
+        dp_allreduce: grad_bytes,
+        pp_p2p: act_bytes,
+        n_microbatches: par.global_batch / (par.microbatch * par.dp).max(1),
+    }
+}
+
+/// Compute time of one iteration (per pipeline flush): 6·P·T FLOPs spread
+/// over the GPUs.
+pub fn compute_time(model: &ModelConfig, par: &ParallelConfig, gpu: &GpuComputeConfig) -> f64 {
+    let tokens = (par.global_batch * model.seq) as f64;
+    6.0 * model.params * tokens / (par.n_gpus() as f64 * gpu.flops_per_gpu)
+}
+
+// ---------------------------------------------------------------------
+// Testbed mode: event-simulated collectives on the 2×8 H100 topology.
+// ---------------------------------------------------------------------
+
+/// Simulate one training configuration on the physical-testbed topology
+/// with `failed_nics` NICs down on server 0 (Figure 7).
+pub fn testbed_training(
+    preset: &Preset,
+    model: &ModelConfig,
+    par: &ParallelConfig,
+    method: TrainMethod,
+    failed_nics: usize,
+) -> TrainResult {
+    assert_eq!(par.n_gpus(), 16, "testbed is 16 GPUs");
+    let vols = comm_volumes(model, par);
+    let t_compute = compute_time(model, par, &preset.compute);
+
+    // Vanilla NCCL crashes outright; AdapCC cannot run TP/PP at all.
+    if failed_nics > 0 {
+        if method == TrainMethod::VanillaNccl {
+            return zero_result(method, t_compute);
+        }
+        if method == TrainMethod::AdapCc && (par.tp > 1 || par.pp > 1) {
+            // Removing a rank violates TP/PP partitioning (§8.2).
+            return zero_result(method, t_compute);
+        }
+    }
+
+    let mut comm = Communicator::new(preset, preset.topo.nics_per_server);
+    let effective_failures = if method == TrainMethod::NoFailure { 0 } else { failed_nics };
+    for n in 0..effective_failures {
+        comm.note_failure(n, FaultAction::FailNic);
+    }
+
+    let choice = match method {
+        TrainMethod::NoFailure | TrainMethod::VanillaNccl => StrategyChoice::Auto,
+        TrainMethod::R2AllReduce => StrategyChoice::Force(Strategy::R2AllReduce),
+        TrainMethod::R2Balance => StrategyChoice::Force(Strategy::Balance),
+        TrainMethod::R2HotRepair => StrategyChoice::HotRepairOnly,
+        TrainMethod::AdapCc => StrategyChoice::Auto, // healthy ranks, std schedule
+    };
+
+    let mut t_comm = 0.0;
+    let mut capacity_factor = 1.0;
+    if par.dp > 1 && par.tp * par.pp == 1 {
+        // Pure DP: gradient AllReduce over all 16 ranks each iteration.
+        let t_ar = match method {
+            TrainMethod::AdapCc if effective_failures > 0 => {
+                let adapcc = AdapCcModel::default();
+                // AdapCC excludes the failed GPU: compute capacity shrinks,
+                // collective runs over remaining ranks on healthy NICs.
+                capacity_factor = adapcc.capacity_factor(par.n_gpus(), effective_failures);
+                let t = comm
+                    .time_collective(CollKind::AllReduce, vols.dp_allreduce, StrategyChoice::Auto)
+                    .expect("allreduce");
+                t + adapcc.per_collective_overhead()
+            }
+            _ => comm
+                .time_collective(CollKind::AllReduce, vols.dp_allreduce, choice)
+                .expect("allreduce"),
+        };
+        t_comm += t_ar;
+    } else {
+        // TP intra-node (NVLink, simulated but cheap) + PP inter-node p2p
+        // per microbatch + DP allreduce across replicas if dp>1.
+        let t_pp = comm
+            .time_collective(CollKind::SendRecv, vols.pp_p2p, choice)
+            .expect("pp sendrecv");
+        // fwd+bwd activations+grad-activations for every microbatch.
+        t_comm += 2.0 * vols.n_microbatches.max(1) as f64 * t_pp;
+        if par.dp > 1 {
+            t_comm += comm
+                .time_collective(CollKind::AllReduce, vols.dp_allreduce, choice)
+                .expect("dp allreduce");
+        } else {
+            // Embedding/grad-norm allreduce once per iteration.
+            t_comm += comm
+                .time_collective(CollKind::AllReduce, (model.hidden * 4) as u64, choice)
+                .unwrap_or(0.0);
+        }
+    }
+
+    finish(method, model, par, t_compute / capacity_factor, t_comm, preset)
+}
+
+// ---------------------------------------------------------------------
+// SimAI mode: analytic α-β collectives at cluster scale.
+// ---------------------------------------------------------------------
+
+/// Analytic AllReduce time for a strategy under a degradation vector.
+pub fn analytic_allreduce_time(
+    input: &PlanInput,
+    bytes: f64,
+    method: TrainMethod,
+) -> f64 {
+    match method {
+        TrainMethod::NoFailure => {
+            let healthy = PlanInput { rem: vec![1.0; input.n], ..input.clone() };
+            ring_time(CollKind::AllReduce, &healthy, bytes, true)
+        }
+        TrainMethod::R2HotRepair | TrainMethod::VanillaNccl => {
+            ring_time(CollKind::AllReduce, input, bytes, false)
+        }
+        TrainMethod::R2Balance => ring_time(CollKind::AllReduce, input, bytes, true),
+        TrainMethod::AdapCc => {
+            // Healthy subset at full speed + reconfiguration overhead.
+            let healthy = PlanInput { rem: vec![1.0; input.n], ..input.clone() };
+            ring_time(CollKind::AllReduce, &healthy, bytes, true)
+                + AdapCcModel::default().per_collective_overhead()
+        }
+        TrainMethod::R2AllReduce => {
+            let nr = input.n_ranks() as f64;
+            let steps_alpha = 2.0 * (nr - 1.0) * input.alpha;
+            if input.degraded_servers() == 0 {
+                return ring_time(CollKind::AllReduce, input, bytes, true);
+            }
+            // Per-server, per-direction wire-volume model of the level
+            // decomposition (Fig 5 accounting, duplex-aware): completion is
+            // governed by the busiest server relative to its remaining
+            // capacity. Member servers of level k carry the ring volume
+            // 2(N_k−1)/N_k·f_k each direction (plus the broadcast walk,
+            // f_k, through their leads); excluded servers inject their
+            // contribution (f_k tx) and receive the result (f_k rx) —
+            // injection and delivery ride opposite directions, so each
+            // direction grows by only f_k (the 2D → 2D−YD saving of §5.2).
+            let levels = crate::schedule::plan_levels(&input.rem);
+            let mut volume = vec![0.0f64; input.n]; // per-direction, ×D
+            for (k, lv) in levels.iter().enumerate() {
+                let m = (lv.servers.len() * input.g) as f64;
+                let ring_vol = 2.0 * (m - 1.0) / m * lv.fraction;
+                for s in 0..input.n {
+                    if lv.servers.contains(&s) {
+                        // Ring volume; levels k>0 also forward the tailored
+                        // broadcast walk through their leads.
+                        volume[s] += ring_vol + if k > 0 { lv.fraction * 0.5 } else { 0.0 };
+                    } else {
+                        volume[s] += lv.fraction; // inject ‖ deliver (duplex)
+                    }
+                }
+            }
+            let t_bytes = (0..input.n)
+                .map(|s| volume[s] / (input.rem[s] * input.server_bw))
+                .fold(0.0_f64, f64::max)
+                * bytes;
+            // Never worse than plain Balance (the planner would fall back).
+            let t_bal = ring_time(CollKind::AllReduce, input, bytes, true);
+            (steps_alpha + t_bytes).min(t_bal)
+        }
+    }
+}
+
+/// One SimAI-scale training iteration (pure DP over servers; TP intra).
+pub fn simai_iteration(
+    model: &ModelConfig,
+    par: &ParallelConfig,
+    gpu: &GpuComputeConfig,
+    input: &PlanInput,
+    method: TrainMethod,
+) -> TrainResult {
+    let vols = comm_volumes(model, par);
+    let t_compute = compute_time(model, par, gpu);
+    let t_comm = analytic_allreduce_time(input, vols.dp_allreduce as f64, method);
+    let preset = Preset::simai(input.n);
+    let mut r = finish(method, model, par, t_compute, t_comm, &preset);
+    if method == TrainMethod::AdapCc {
+        let adapcc = AdapCcModel::default();
+        let f = adapcc.capacity_factor(par.n_gpus(), input.degraded_servers());
+        r.iter_time /= f;
+        r.tokens_per_sec *= f;
+    }
+    r
+}
+
+/// Strategy auto-selection honoring the planner (used by scale sweeps).
+pub fn auto_method(input: &PlanInput, bytes: f64) -> TrainMethod {
+    match choose_strategy(CollKind::AllReduce, input, bytes) {
+        Strategy::Standard => TrainMethod::NoFailure,
+        Strategy::Balance => TrainMethod::R2Balance,
+        Strategy::R2AllReduce | Strategy::Recursive => TrainMethod::R2AllReduce,
+    }
+}
+
+// ---------------------------------------------------------------------
+
+fn zero_result(method: TrainMethod, t_compute: f64) -> TrainResult {
+    TrainResult {
+        method,
+        tokens_per_sec: 0.0,
+        overhead: f64::INFINITY,
+        iter_time: f64::INFINITY,
+        compute_time: t_compute,
+        comm_time: f64::INFINITY,
+    }
+}
+
+fn finish(
+    method: TrainMethod,
+    model: &ModelConfig,
+    par: &ParallelConfig,
+    t_compute: f64,
+    t_comm: f64,
+    preset: &Preset,
+) -> TrainResult {
+    // Exposed communication after overlap with compute.
+    let exposed = t_comm * (1.0 - preset.compute.overlap_fraction);
+    let iter = t_compute + exposed;
+    let tokens = (par.global_batch * model.seq) as f64;
+    TrainResult {
+        method,
+        tokens_per_sec: tokens / iter,
+        overhead: 0.0, // filled by callers relative to their baseline
+        iter_time: iter,
+        compute_time: t_compute,
+        comm_time: t_comm,
+    }
+}
+
+/// Relative overhead helper.
+pub fn overhead_vs(result: &TrainResult, baseline: &TrainResult) -> f64 {
+    (result.iter_time - baseline.iter_time) / baseline.iter_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Preset;
+
+    fn dp16() -> ParallelConfig {
+        ParallelConfig { dp: 16, tp: 1, pp: 1, global_batch: 256, microbatch: 1 }
+    }
+
+    fn tp8pp2() -> ParallelConfig {
+        ParallelConfig { dp: 1, tp: 8, pp: 2, global_batch: 64, microbatch: 2 }
+    }
+
+    #[test]
+    fn figure7_dp16_ordering() {
+        // Fig 7(a): NoFailure > R2-AllReduce > Balance > HotRepair > AdapCC,
+        // vanilla = 0.
+        let preset = Preset::testbed();
+        let model = ModelConfig::gpt_2_7b();
+        let par = dp16();
+        let base = testbed_training(&preset, &model, &par, TrainMethod::NoFailure, 1);
+        let r2 = testbed_training(&preset, &model, &par, TrainMethod::R2AllReduce, 1);
+        let bal = testbed_training(&preset, &model, &par, TrainMethod::R2Balance, 1);
+        let hot = testbed_training(&preset, &model, &par, TrainMethod::R2HotRepair, 1);
+        let adapcc = testbed_training(&preset, &model, &par, TrainMethod::AdapCc, 1);
+        let vanilla = testbed_training(&preset, &model, &par, TrainMethod::VanillaNccl, 1);
+        assert!(vanilla.tokens_per_sec == 0.0);
+        assert!(base.tokens_per_sec > r2.tokens_per_sec);
+        assert!(r2.tokens_per_sec >= bal.tokens_per_sec, "r2 {} bal {}", r2.tokens_per_sec, bal.tokens_per_sec);
+        assert!(bal.tokens_per_sec > hot.tokens_per_sec);
+        assert!(hot.tokens_per_sec > adapcc.tokens_per_sec || overhead_vs(&adapcc, &base) > 0.05);
+        // Headline: R²CCL-AllReduce < ~2% overhead; AdapCC worst.
+        assert!(overhead_vs(&r2, &base) < 0.03, "r2 overhead {}", overhead_vs(&r2, &base));
+        assert!(overhead_vs(&adapcc, &base) > overhead_vs(&bal, &base));
+    }
+
+    #[test]
+    fn figure7_tp8pp2_adapcc_cannot_run() {
+        let preset = Preset::testbed();
+        let model = ModelConfig::gpt_13b();
+        let par = tp8pp2();
+        let adapcc = testbed_training(&preset, &model, &par, TrainMethod::AdapCc, 1);
+        assert_eq!(adapcc.tokens_per_sec, 0.0);
+        let base = testbed_training(&preset, &model, &par, TrainMethod::NoFailure, 1);
+        let bal = testbed_training(&preset, &model, &par, TrainMethod::R2Balance, 1);
+        let hot = testbed_training(&preset, &model, &par, TrainMethod::R2HotRepair, 1);
+        // Balance < ~2% overhead; HotRepair worse than Balance.
+        assert!(overhead_vs(&bal, &base) < 0.02, "balance overhead {}", overhead_vs(&bal, &base));
+        assert!(overhead_vs(&hot, &base) >= overhead_vs(&bal, &base));
+    }
+
+    #[test]
+    fn two_failures_still_low_overhead() {
+        let preset = Preset::testbed();
+        let model = ModelConfig::gpt_2_7b();
+        let par = dp16();
+        let base = testbed_training(&preset, &model, &par, TrainMethod::NoFailure, 2);
+        let r2 = testbed_training(&preset, &model, &par, TrainMethod::R2AllReduce, 2);
+        let o = overhead_vs(&r2, &base);
+        assert!(o < 0.05, "two-failure overhead {o}");
+    }
+
+    #[test]
+    fn simai_overhead_below_paper_bounds() {
+        // Fig 8: R²-AllReduce < 1.5% overhead, Balance up to ~5% at scale.
+        let model = ModelConfig::gpt_7b();
+        for n in [4usize, 16, 64] {
+            let par = ParallelConfig { dp: n * 4, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+            let gpu = GpuComputeConfig::a100();
+            let mut input = PlanInput::uniform(n, 8, 25.0e9 * 8.0, 5e-6);
+            input.rem[0] = 0.875; // one NIC down
+            let base = simai_iteration(&model, &par, &gpu, &input, TrainMethod::NoFailure);
+            let r2 = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2AllReduce);
+            let bal = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2Balance);
+            let o_r2 = overhead_vs(&r2, &base);
+            let o_bal = overhead_vs(&bal, &base);
+            assert!(o_r2 < 0.035, "n={n}: r2 overhead {o_r2}");
+            assert!(o_bal >= o_r2 - 1e-9, "n={n}: bal {o_bal} r2 {o_r2}");
+        }
+    }
+
+    #[test]
+    fn comm_ratio_grows_with_scale() {
+        // Fig 8(d): fixed global batch → smaller per-GPU compute → larger
+        // communication ratio at higher server counts.
+        let model = ModelConfig::gpt_7b();
+        let gpu = GpuComputeConfig::a100();
+        let mut prev_ratio = 0.0;
+        for n in [4usize, 16, 64] {
+            let par = ParallelConfig { dp: n * 4, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+            let input = PlanInput::uniform(n, 8, 25.0e9 * 8.0, 5e-6);
+            let r = simai_iteration(&model, &par, &gpu, &input, TrainMethod::NoFailure);
+            let ratio = r.comm_time / (r.compute_time + r.comm_time);
+            assert!(ratio > prev_ratio, "ratio should grow: {ratio} at n={n}");
+            prev_ratio = ratio;
+        }
+    }
+
+    #[test]
+    fn compute_time_scales_inverse_gpus() {
+        let m = ModelConfig::gpt_7b();
+        let gpu = GpuComputeConfig::default();
+        let p1 = ParallelConfig { dp: 8, tp: 1, pp: 1, global_batch: 256, microbatch: 1 };
+        let p2 = ParallelConfig { dp: 16, tp: 1, pp: 1, global_batch: 256, microbatch: 1 };
+        assert!((compute_time(&m, &p1, &gpu) / compute_time(&m, &p2, &gpu) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,399 @@
+//! Static cluster topology: servers, GPUs, NICs, NVLink, PCIe, NUMA, rails.
+//!
+//! This is the substrate the paper's testbed provides in hardware (2 servers
+//! of 8×H100 + 8×CX-7, rail-optimised fabric) and SimAI provides in
+//! simulation (up to 128 servers of 8×A100 + 8×200G NICs). We model it as a
+//! resource graph: every shareable capacity (a NIC direction, a GPU's NVLink
+//! aggregate, a PCIe lane, a NUMA interconnect, a rail's ToR) is one
+//! *resource* with a capacity in bytes/s. Transfers are flows over resource
+//! paths; the fluid-flow engine in [`crate::netsim`] shares capacities
+//! max-min fair.
+//!
+//! Conventions
+//! * GPUs and NICs are numbered globally; server `s` owns GPUs
+//!   `s*g .. (s+1)*g` and NICs `s*k .. (s+1)*k`.
+//! * GPU local index `i` has *affinity* NIC local index `i % nics_per_server`
+//!   (the paper's 1:1 GPU↔NIC PCIe pairing).
+//! * NIC local index `i` belongs to *rail* `i`: rail-optimised fabrics
+//!   connect NIC `i` of every server to leaf switch `i`.
+//! * NUMA: the first half of GPUs/NICs of a server sit on socket 0, the
+//!   second half on socket 1 (matching DGX/HGX layouts).
+
+pub mod path;
+
+use std::collections::HashMap;
+
+pub use path::{Route, RoutePlan};
+
+/// Global GPU id.
+pub type GpuId = usize;
+/// Global NIC id.
+pub type NicId = usize;
+/// Server id.
+pub type ServerId = usize;
+/// Rail index (NIC local index; rail-optimised fabric).
+pub type RailId = usize;
+/// Dense resource id used by the netsim engine.
+pub type ResourceId = usize;
+
+/// What a resource physically is. Tx/Rx are separate resources because the
+/// links are full duplex (a ring AllReduce sends and receives at line rate
+/// simultaneously on every NIC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceKey {
+    /// NIC egress (server → fabric).
+    NicTx(NicId),
+    /// NIC ingress.
+    NicRx(NicId),
+    /// GPU's aggregate NVLink egress bandwidth.
+    NvlTx(GpuId),
+    /// GPU's aggregate NVLink ingress bandwidth.
+    NvlRx(GpuId),
+    /// PCIe lane between the GPU/PCIe-switch complex and one NIC, up
+    /// direction (towards NIC).
+    PcieUp(NicId),
+    /// Same lane, down direction.
+    PcieDown(NicId),
+    /// Cross-socket interconnect (UPI/QPI) of one server, one direction
+    /// (0 = socket0→socket1, 1 = reverse).
+    Upi(ServerId, u8),
+    /// Rail leaf switch capacity (effectively non-blocking unless a
+    /// switch-outage scenario degrades it).
+    TorRail(RailId),
+}
+
+/// Static description of one resource.
+#[derive(Debug, Clone)]
+pub struct ResourceSpec {
+    pub key: ResourceKey,
+    /// Capacity in bytes/s.
+    pub capacity: f64,
+    /// Per-hop latency contribution in seconds.
+    pub latency: f64,
+}
+
+/// Cluster shape + link speeds. All bandwidths in bytes/s, latencies in
+/// seconds.
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    pub n_servers: usize,
+    pub gpus_per_server: usize,
+    pub nics_per_server: usize,
+    /// Per-NIC unidirectional bandwidth.
+    pub nic_bw: f64,
+    /// Per-GPU aggregate NVLink unidirectional bandwidth.
+    pub nvlink_bw: f64,
+    /// Per PCIe lane (GPU↔NIC) unidirectional bandwidth.
+    pub pcie_bw: f64,
+    /// Cross-socket interconnect unidirectional bandwidth.
+    pub upi_bw: f64,
+    /// Inter-node fabric hop latency (the α in α-β models).
+    pub link_latency: f64,
+    /// NVLink hop latency.
+    pub nvlink_latency: f64,
+    /// PCIe hop latency.
+    pub pcie_latency: f64,
+    /// Number of NUMA sockets per server.
+    pub numa_per_server: usize,
+}
+
+impl TopologyConfig {
+    /// The paper's physical testbed: 2 servers × 8 H100 SXM5, 8× ConnectX-7
+    /// 400 Gb/s InfiniBand, NVLink 4.0 (900 GB/s bidirectional → 450 GB/s
+    /// per direction), PCIe Gen5 x16 (~64 GB/s), 2 sockets.
+    pub fn testbed_h100() -> Self {
+        TopologyConfig {
+            n_servers: 2,
+            gpus_per_server: 8,
+            nics_per_server: 8,
+            nic_bw: 50.0e9,     // 400 Gb/s
+            nvlink_bw: 450.0e9, // per direction
+            pcie_bw: 64.0e9,
+            upi_bw: 40.0e9,
+            link_latency: 5.0e-6,
+            nvlink_latency: 1.0e-6,
+            pcie_latency: 1.5e-6,
+            numa_per_server: 2,
+        }
+    }
+
+    /// The paper's SimAI configuration: 8×A100 + 8×200 Gb/s NICs per server
+    /// on a Spectrum-X rail-optimised RoCE fabric.
+    pub fn simai_a100(n_servers: usize) -> Self {
+        TopologyConfig {
+            n_servers,
+            gpus_per_server: 8,
+            nics_per_server: 8,
+            nic_bw: 25.0e9,     // 200 Gb/s
+            nvlink_bw: 300.0e9, // NVLink 3.0 per direction
+            pcie_bw: 32.0e9,    // Gen4 x16
+            upi_bw: 30.0e9,
+            link_latency: 5.0e-6,
+            nvlink_latency: 1.0e-6,
+            pcie_latency: 1.5e-6,
+            numa_per_server: 2,
+        }
+    }
+}
+
+/// Immutable topology: resource table + index maps + locality helpers.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cfg: TopologyConfig,
+    resources: Vec<ResourceSpec>,
+    index: HashMap<ResourceKey, ResourceId>,
+}
+
+impl Topology {
+    pub fn build(cfg: &TopologyConfig) -> Topology {
+        assert!(cfg.n_servers >= 1);
+        assert!(cfg.gpus_per_server >= 1);
+        assert!(cfg.nics_per_server >= 1);
+        assert!(
+            cfg.gpus_per_server % cfg.numa_per_server == 0
+                && cfg.nics_per_server % cfg.numa_per_server == 0,
+            "NUMA sockets must evenly split GPUs and NICs"
+        );
+        let mut resources = Vec::new();
+        let mut index = HashMap::new();
+        let mut add = |key: ResourceKey, capacity: f64, latency: f64| {
+            let id = resources.len();
+            resources.push(ResourceSpec { key, capacity, latency });
+            index.insert(key, id);
+        };
+        let n_gpus = cfg.n_servers * cfg.gpus_per_server;
+        let n_nics = cfg.n_servers * cfg.nics_per_server;
+        for n in 0..n_nics {
+            add(ResourceKey::NicTx(n), cfg.nic_bw, cfg.link_latency / 2.0);
+            add(ResourceKey::NicRx(n), cfg.nic_bw, cfg.link_latency / 2.0);
+            add(ResourceKey::PcieUp(n), cfg.pcie_bw, cfg.pcie_latency);
+            add(ResourceKey::PcieDown(n), cfg.pcie_bw, cfg.pcie_latency);
+        }
+        for g in 0..n_gpus {
+            add(ResourceKey::NvlTx(g), cfg.nvlink_bw, cfg.nvlink_latency);
+            add(ResourceKey::NvlRx(g), cfg.nvlink_bw, cfg.nvlink_latency);
+        }
+        for s in 0..cfg.n_servers {
+            add(ResourceKey::Upi(s, 0), cfg.upi_bw, cfg.pcie_latency);
+            add(ResourceKey::Upi(s, 1), cfg.upi_bw, cfg.pcie_latency);
+        }
+        // Rail ToRs are provisioned non-blocking: full bisection for the rail.
+        let tor_cap = cfg.nic_bw * cfg.n_servers as f64;
+        for r in 0..cfg.nics_per_server {
+            add(ResourceKey::TorRail(r), tor_cap, 0.0);
+        }
+        Topology { cfg: cfg.clone(), resources, index }
+    }
+
+    // ------------------------------------------------------------------
+    // Counting / lookup
+    // ------------------------------------------------------------------
+
+    pub fn n_servers(&self) -> usize {
+        self.cfg.n_servers
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.cfg.n_servers * self.cfg.gpus_per_server
+    }
+
+    pub fn n_nics(&self) -> usize {
+        self.cfg.n_servers * self.cfg.nics_per_server
+    }
+
+    pub fn n_resources(&self) -> usize {
+        self.resources.len()
+    }
+
+    pub fn resources(&self) -> &[ResourceSpec] {
+        &self.resources
+    }
+
+    pub fn resource(&self, key: ResourceKey) -> ResourceId {
+        *self
+            .index
+            .get(&key)
+            .unwrap_or_else(|| panic!("unknown resource {key:?}"))
+    }
+
+    pub fn spec(&self, id: ResourceId) -> &ResourceSpec {
+        &self.resources[id]
+    }
+
+    // ------------------------------------------------------------------
+    // Locality
+    // ------------------------------------------------------------------
+
+    pub fn server_of_gpu(&self, g: GpuId) -> ServerId {
+        g / self.cfg.gpus_per_server
+    }
+
+    pub fn server_of_nic(&self, n: NicId) -> ServerId {
+        n / self.cfg.nics_per_server
+    }
+
+    pub fn gpu_local(&self, g: GpuId) -> usize {
+        g % self.cfg.gpus_per_server
+    }
+
+    pub fn nic_local(&self, n: NicId) -> usize {
+        n % self.cfg.nics_per_server
+    }
+
+    /// Rail of a NIC (rail-optimised fabric: rail == local index).
+    pub fn rail_of_nic(&self, n: NicId) -> RailId {
+        self.nic_local(n)
+    }
+
+    pub fn gpus_of_server(&self, s: ServerId) -> std::ops::Range<GpuId> {
+        s * self.cfg.gpus_per_server..(s + 1) * self.cfg.gpus_per_server
+    }
+
+    pub fn nics_of_server(&self, s: ServerId) -> std::ops::Range<NicId> {
+        s * self.cfg.nics_per_server..(s + 1) * self.cfg.nics_per_server
+    }
+
+    /// The affinity NIC of a GPU (same PCIe switch).
+    pub fn affinity_nic(&self, g: GpuId) -> NicId {
+        let s = self.server_of_gpu(g);
+        let local = self.gpu_local(g) % self.cfg.nics_per_server;
+        s * self.cfg.nics_per_server + local
+    }
+
+    /// The GPU co-located with a NIC (the PXN proxy target for that NIC).
+    pub fn affinity_gpu(&self, n: NicId) -> GpuId {
+        let s = self.server_of_nic(n);
+        let local = self.nic_local(n) % self.cfg.gpus_per_server;
+        s * self.cfg.gpus_per_server + local
+    }
+
+    pub fn numa_of_gpu(&self, g: GpuId) -> usize {
+        let per = self.cfg.gpus_per_server / self.cfg.numa_per_server;
+        self.gpu_local(g) / per
+    }
+
+    pub fn numa_of_nic(&self, n: NicId) -> usize {
+        let per = self.cfg.nics_per_server / self.cfg.numa_per_server;
+        self.nic_local(n) / per
+    }
+
+    /// PCIe "distance" between a GPU and a NIC on the same server, used to
+    /// order failover chains (§7 of the paper: backup NICs ordered by PCIe
+    /// distance; closest healthy NIC is activated first).
+    /// 0 = affinity pair, 1 = same NUMA socket, 2 = cross-socket.
+    pub fn pcie_distance(&self, g: GpuId, n: NicId) -> u32 {
+        assert_eq!(
+            self.server_of_gpu(g),
+            self.server_of_nic(n),
+            "pcie_distance is intra-server"
+        );
+        if self.affinity_nic(g) == n {
+            0
+        } else if self.numa_of_gpu(g) == self.numa_of_nic(n) {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// NICs of the GPU's server ordered by PCIe distance (then index): the
+    /// failover chain of §4.3 / §7.
+    pub fn failover_chain(&self, g: GpuId) -> Vec<NicId> {
+        let mut nics: Vec<NicId> = self.nics_of_server(self.server_of_gpu(g)).collect();
+        nics.sort_by_key(|&n| (self.pcie_distance(g, n), n));
+        nics
+    }
+
+    /// Sum of path latencies for a resource path.
+    pub fn path_latency(&self, path: &[ResourceId]) -> f64 {
+        path.iter().map(|&r| self.resources[r].latency).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2x8() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn counts() {
+        let t = t2x8();
+        assert_eq!(t.n_gpus(), 16);
+        assert_eq!(t.n_nics(), 16);
+        // 16 nics * 4 + 16 gpus * 2 + 2 servers * 2 + 8 rails
+        assert_eq!(t.n_resources(), 16 * 4 + 16 * 2 + 2 * 2 + 8);
+    }
+
+    #[test]
+    fn affinity_is_one_to_one() {
+        let t = t2x8();
+        for g in 0..t.n_gpus() {
+            let n = t.affinity_nic(g);
+            assert_eq!(t.server_of_gpu(g), t.server_of_nic(n));
+            assert_eq!(t.affinity_gpu(n), g);
+        }
+    }
+
+    #[test]
+    fn numa_split() {
+        let t = t2x8();
+        assert_eq!(t.numa_of_gpu(0), 0);
+        assert_eq!(t.numa_of_gpu(3), 0);
+        assert_eq!(t.numa_of_gpu(4), 1);
+        assert_eq!(t.numa_of_gpu(15), 1); // gpu 15 = server1 local 7
+        assert_eq!(t.numa_of_nic(12), 1);
+    }
+
+    #[test]
+    fn pcie_distances() {
+        let t = t2x8();
+        assert_eq!(t.pcie_distance(0, 0), 0);
+        assert_eq!(t.pcie_distance(0, 1), 1); // same socket
+        assert_eq!(t.pcie_distance(0, 5), 2); // cross socket
+        assert_eq!(t.pcie_distance(9, 9), 0); // server 1 local pair
+    }
+
+    #[test]
+    fn failover_chain_ordering() {
+        let t = t2x8();
+        let chain = t.failover_chain(2);
+        assert_eq!(chain[0], 2); // affinity first
+        // then same-NUMA nics (0,1,3), then cross-NUMA (4..8)
+        assert_eq!(&chain[1..4], &[0, 1, 3]);
+        assert_eq!(&chain[4..], &[4, 5, 6, 7]);
+        assert_eq!(chain.len(), 8);
+    }
+
+    #[test]
+    fn rails_are_local_indices() {
+        let t = t2x8();
+        assert_eq!(t.rail_of_nic(3), 3);
+        assert_eq!(t.rail_of_nic(11), 3); // server 1, local 3 → same rail
+    }
+
+    #[test]
+    fn resource_lookup_roundtrip() {
+        let t = t2x8();
+        for id in 0..t.n_resources() {
+            let key = t.spec(id).key;
+            assert_eq!(t.resource(key), id);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn pcie_distance_rejects_cross_server() {
+        let t = t2x8();
+        t.pcie_distance(0, 8);
+    }
+
+    #[test]
+    fn simai_scale() {
+        let t = Topology::build(&TopologyConfig::simai_a100(64));
+        assert_eq!(t.n_gpus(), 512);
+        assert_eq!(t.server_of_gpu(511), 63);
+    }
+}

@@ -1,0 +1,300 @@
+//! Route construction: turn (src GPU, dst GPU, chosen NICs, forwarding
+//! modes) into a concrete resource path for the fluid-flow engine.
+//!
+//! The forwarding modes mirror §5.1 of the paper (PXN- and NUMA-aware load
+//! balancing): a GPU reaching a non-affinity NIC either forwards over PCIe
+//! (same socket), PCIe + UPI (cross socket), or relays via NVLink through
+//! the proxy GPU co-located with the target NIC (PXN).
+
+use super::{GpuId, NicId, ResourceId, ResourceKey, Topology};
+
+/// How a GPU's traffic reaches a NIC on its own server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Forward {
+    /// The GPU's own affinity NIC: plain PCIe lane.
+    Affinity,
+    /// Direct PCIe forwarding to a same-socket NIC.
+    Pcie,
+    /// PCIe across the socket interconnect (QPI/UPI) to a remote-socket NIC.
+    PcieUpi,
+    /// NVLink relay through the proxy GPU co-located with the NIC (PXN).
+    Pxn,
+}
+
+/// A fully-specified route between two GPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Same server: NVLink only.
+    Intra,
+    /// Different servers: src GPU → src NIC → fabric → dst NIC → dst GPU.
+    Inter {
+        src_nic: NicId,
+        dst_nic: NicId,
+        src_fwd: Forward,
+        dst_fwd: Forward,
+    },
+}
+
+/// A planned route: the resource path plus its end-to-end latency.
+#[derive(Debug, Clone)]
+pub struct RoutePlan {
+    pub route: Route,
+    pub path: Vec<ResourceId>,
+    pub latency: f64,
+}
+
+impl Route {
+    /// The default inter-server route between two GPUs using their affinity
+    /// NICs (NCCL's steady-state binding).
+    pub fn default_inter(topo: &Topology, src: GpuId, dst: GpuId) -> Route {
+        debug_assert_ne!(topo.server_of_gpu(src), topo.server_of_gpu(dst));
+        Route::Inter {
+            src_nic: topo.affinity_nic(src),
+            dst_nic: topo.affinity_nic(dst),
+            src_fwd: Forward::Affinity,
+            dst_fwd: Forward::Affinity,
+        }
+    }
+
+    /// Pick the natural forwarding mode for a (GPU, NIC) pair per the
+    /// paper's default policy: affinity → PCIe lane; same NUMA → direct
+    /// PCIe; cross NUMA → PXN relay (preferred over UPI unless the planner
+    /// overrides, see `schedule::balance`).
+    pub fn auto_forward(topo: &Topology, g: GpuId, n: NicId) -> Forward {
+        match topo.pcie_distance(g, n) {
+            0 => Forward::Affinity,
+            1 => Forward::Pcie,
+            _ => Forward::Pxn,
+        }
+    }
+
+    /// Build the route between two GPUs, choosing Intra vs Inter and
+    /// forwarding automatically given the NICs to use.
+    pub fn between(topo: &Topology, src: GpuId, dst: GpuId, src_nic: NicId, dst_nic: NicId) -> Route {
+        if topo.server_of_gpu(src) == topo.server_of_gpu(dst) {
+            Route::Intra
+        } else {
+            Route::Inter {
+                src_nic,
+                dst_nic,
+                src_fwd: Self::auto_forward(topo, src, src_nic),
+                dst_fwd: Self::auto_forward(topo, dst, dst_nic),
+            }
+        }
+    }
+
+    /// Materialise the resource path for this route.
+    pub fn plan(&self, topo: &Topology, src: GpuId, dst: GpuId) -> RoutePlan {
+        let mut path = Vec::with_capacity(10);
+        match *self {
+            Route::Intra => {
+                assert_eq!(
+                    topo.server_of_gpu(src),
+                    topo.server_of_gpu(dst),
+                    "Intra route across servers"
+                );
+                if src != dst {
+                    path.push(topo.resource(ResourceKey::NvlTx(src)));
+                    path.push(topo.resource(ResourceKey::NvlRx(dst)));
+                }
+            }
+            Route::Inter { src_nic, dst_nic, src_fwd, dst_fwd } => {
+                assert_ne!(
+                    topo.server_of_gpu(src),
+                    topo.server_of_gpu(dst),
+                    "Inter route within one server"
+                );
+                assert_eq!(topo.server_of_gpu(src), topo.server_of_nic(src_nic));
+                assert_eq!(topo.server_of_gpu(dst), topo.server_of_nic(dst_nic));
+                // Source side: GPU → NIC.
+                Self::push_fwd_path(topo, &mut path, src, src_nic, src_fwd, true);
+                // Fabric: NIC tx → rail ToR(s) → NIC rx.
+                path.push(topo.resource(ResourceKey::NicTx(src_nic)));
+                let r_src = topo.rail_of_nic(src_nic);
+                let r_dst = topo.rail_of_nic(dst_nic);
+                path.push(topo.resource(ResourceKey::TorRail(r_src)));
+                if r_dst != r_src {
+                    // Cross-rail traffic traverses the spine: both leaf
+                    // switches are on the path.
+                    path.push(topo.resource(ResourceKey::TorRail(r_dst)));
+                }
+                path.push(topo.resource(ResourceKey::NicRx(dst_nic)));
+                // Destination side: NIC → GPU.
+                Self::push_fwd_path(topo, &mut path, dst, dst_nic, dst_fwd, false);
+            }
+        }
+        let latency = topo.path_latency(&path);
+        RoutePlan { route: *self, path, latency }
+    }
+
+    fn push_fwd_path(
+        topo: &Topology,
+        path: &mut Vec<ResourceId>,
+        gpu: GpuId,
+        nic: NicId,
+        fwd: Forward,
+        towards_nic: bool,
+    ) {
+        let server = topo.server_of_gpu(gpu);
+        let lane = |n| {
+            if towards_nic {
+                ResourceKey::PcieUp(n)
+            } else {
+                ResourceKey::PcieDown(n)
+            }
+        };
+        match fwd {
+            Forward::Affinity => {
+                debug_assert_eq!(topo.pcie_distance(gpu, nic), 0);
+                path.push(topo.resource(lane(nic)));
+            }
+            Forward::Pcie => {
+                debug_assert!(topo.pcie_distance(gpu, nic) <= 1);
+                path.push(topo.resource(lane(nic)));
+            }
+            Forward::PcieUpi => {
+                // Direction of the UPI hop depends on which socket the GPU
+                // sits on and which direction the data moves.
+                let gpu_socket = topo.numa_of_gpu(gpu) as u8;
+                let dir = if towards_nic { gpu_socket } else { 1 - gpu_socket };
+                path.push(topo.resource(ResourceKey::Upi(server, dir)));
+                path.push(topo.resource(lane(nic)));
+            }
+            Forward::Pxn => {
+                // GPU → NVLink → proxy GPU → PCIe lane → NIC (and mirrored
+                // on the receive side).
+                let proxy = topo.affinity_gpu(nic);
+                if towards_nic {
+                    path.push(topo.resource(ResourceKey::NvlTx(gpu)));
+                    path.push(topo.resource(ResourceKey::NvlRx(proxy)));
+                    path.push(topo.resource(lane(nic)));
+                } else {
+                    path.push(topo.resource(lane(nic)));
+                    path.push(topo.resource(ResourceKey::NvlTx(proxy)));
+                    path.push(topo.resource(ResourceKey::NvlRx(gpu)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyConfig;
+
+    fn t() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn intra_path_uses_nvlink_only() {
+        let t = t();
+        let plan = Route::Intra.plan(&t, 0, 3);
+        assert_eq!(plan.path.len(), 2);
+        assert_eq!(t.spec(plan.path[0]).key, ResourceKey::NvlTx(0));
+        assert_eq!(t.spec(plan.path[1]).key, ResourceKey::NvlRx(3));
+    }
+
+    #[test]
+    fn intra_self_is_empty() {
+        let t = t();
+        let plan = Route::Intra.plan(&t, 5, 5);
+        assert!(plan.path.is_empty());
+        assert_eq!(plan.latency, 0.0);
+    }
+
+    #[test]
+    fn default_inter_same_rail() {
+        let t = t();
+        // GPU 2 (server 0) → GPU 10 (server 1, local 2): same rail 2.
+        let plan = Route::default_inter(&t, 2, 10).plan(&t, 2, 10);
+        let keys: Vec<_> = plan.path.iter().map(|&r| t.spec(r).key).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ResourceKey::PcieUp(2),
+                ResourceKey::NicTx(2),
+                ResourceKey::TorRail(2),
+                ResourceKey::NicRx(10),
+                ResourceKey::PcieDown(10),
+            ]
+        );
+        assert!(plan.latency > 0.0);
+    }
+
+    #[test]
+    fn cross_rail_adds_second_tor() {
+        let t = t();
+        let route = Route::Inter {
+            src_nic: 0,
+            dst_nic: 9, // rail 1 on server 1
+            src_fwd: Forward::Affinity,
+            dst_fwd: Forward::Pcie,
+        };
+        let plan = route.plan(&t, 0, 9);
+        let tor_hops = plan
+            .path
+            .iter()
+            .filter(|&&r| matches!(t.spec(r).key, ResourceKey::TorRail(_)))
+            .count();
+        assert_eq!(tor_hops, 2);
+    }
+
+    #[test]
+    fn pxn_path_relays_through_proxy() {
+        let t = t();
+        // GPU 0 sends via NIC 7 (cross-socket) using PXN: proxy is GPU 7.
+        let route = Route::Inter {
+            src_nic: 7,
+            dst_nic: 15,
+            src_fwd: Forward::Pxn,
+            dst_fwd: Forward::Affinity,
+        };
+        let plan = route.plan(&t, 0, 15);
+        let keys: Vec<_> = plan.path.iter().map(|&r| t.spec(r).key).collect();
+        assert!(keys.contains(&ResourceKey::NvlTx(0)));
+        assert!(keys.contains(&ResourceKey::NvlRx(7)));
+        assert!(keys.contains(&ResourceKey::PcieUp(7)));
+    }
+
+    #[test]
+    fn upi_path_crosses_socket() {
+        let t = t();
+        let route = Route::Inter {
+            src_nic: 7,
+            dst_nic: 15,
+            src_fwd: Forward::PcieUpi,
+            dst_fwd: Forward::Affinity,
+        };
+        let plan = route.plan(&t, 0, 15);
+        let keys: Vec<_> = plan.path.iter().map(|&r| t.spec(r).key).collect();
+        assert!(keys.contains(&ResourceKey::Upi(0, 0)));
+    }
+
+    #[test]
+    fn auto_forward_policy() {
+        let t = t();
+        assert_eq!(Route::auto_forward(&t, 0, 0), Forward::Affinity);
+        assert_eq!(Route::auto_forward(&t, 0, 2), Forward::Pcie);
+        assert_eq!(Route::auto_forward(&t, 0, 6), Forward::Pxn);
+    }
+
+    #[test]
+    fn pxn_receive_side_mirrors() {
+        let t = t();
+        let route = Route::Inter {
+            src_nic: 0,
+            dst_nic: 15,
+            src_fwd: Forward::Affinity,
+            dst_fwd: Forward::Pxn,
+        };
+        // Receiver GPU 8 (server 1 socket 0) receives via NIC 15 (socket 1):
+        // NIC → PCIe down → proxy GPU 15 → NVLink → GPU 8.
+        let plan = route.plan(&t, 0, 8);
+        let keys: Vec<_> = plan.path.iter().map(|&r| t.spec(r).key).collect();
+        let pos_pcie = keys.iter().position(|k| *k == ResourceKey::PcieDown(15)).unwrap();
+        let pos_nvl = keys.iter().position(|k| *k == ResourceKey::NvlRx(8)).unwrap();
+        assert!(pos_pcie < pos_nvl);
+    }
+}

@@ -1,0 +1,180 @@
+//! Connections and the pre-established backup pool.
+//!
+//! NCCL binds each channel edge to one (GPU, NIC) pair and sets up exactly
+//! that RDMA connection; when the NIC dies the edge is unrecoverable
+//! without re-initialisation. R²CCL pre-establishes idle "sleep"
+//! connections from every GPU to its whole failover chain of NICs at init
+//! (§3.1 C1), so a collective can resume on any healthy NIC instantly.
+
+use crate::netsim::FaultPlane;
+use crate::topology::{GpuId, NicId, Route, Topology};
+
+/// One (possibly sleeping) RDMA connection between two GPUs over concrete
+/// NICs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Connection {
+    pub src_gpu: GpuId,
+    pub dst_gpu: GpuId,
+    pub src_nic: NicId,
+    pub dst_nic: NicId,
+    /// Pre-established at init (true for every pool entry under R²CCL;
+    /// only the primary under the baseline).
+    pub established: bool,
+}
+
+impl Connection {
+    pub fn route(&self, topo: &Topology) -> Route {
+        Route::between(topo, self.src_gpu, self.dst_gpu, self.src_nic, self.dst_nic)
+    }
+}
+
+/// Backup-connection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackupPolicy {
+    /// R²CCL: the full failover chain is pre-established.
+    PreEstablished,
+    /// Baseline: only the primary exists; failover must set up a connection
+    /// (tens of milliseconds, §4.3).
+    None,
+}
+
+/// The connection pool for one inter-server edge (src GPU → dst GPU).
+///
+/// Entries are ordered by PCIe distance from the *source* GPU (the paper
+/// orders the failover chain by PCIe distance and activates the
+/// topologically closest healthy NIC). The destination NIC follows the
+/// source NIC's rail when possible (rail-optimised fabrics keep same-rail
+/// paths one hop); otherwise the destination's own failover order is used.
+#[derive(Debug, Clone)]
+pub struct EdgePool {
+    pub src_gpu: GpuId,
+    pub dst_gpu: GpuId,
+    entries: Vec<Connection>,
+}
+
+impl EdgePool {
+    /// Build the pool for an inter-server GPU pair.
+    pub fn build(topo: &Topology, src_gpu: GpuId, dst_gpu: GpuId, policy: BackupPolicy) -> EdgePool {
+        assert_ne!(
+            topo.server_of_gpu(src_gpu),
+            topo.server_of_gpu(dst_gpu),
+            "edge pools are inter-server"
+        );
+        let dst_server = topo.server_of_gpu(dst_gpu);
+        let mut entries = Vec::new();
+        for (i, &src_nic) in topo.failover_chain(src_gpu).iter().enumerate() {
+            // Prefer the same rail on the destination side.
+            let rail = topo.rail_of_nic(src_nic);
+            let dst_nic = topo.nics_of_server(dst_server).nth(rail).unwrap();
+            entries.push(Connection {
+                src_gpu,
+                dst_gpu,
+                src_nic,
+                dst_nic,
+                established: match policy {
+                    BackupPolicy::PreEstablished => true,
+                    BackupPolicy::None => i == 0,
+                },
+            });
+        }
+        EdgePool { src_gpu, dst_gpu, entries }
+    }
+
+    /// The primary connection (affinity NICs).
+    pub fn primary(&self) -> &Connection {
+        &self.entries[0]
+    }
+
+    pub fn entries(&self) -> &[Connection] {
+        &self.entries
+    }
+
+    /// First entry whose *both* NICs are usable, skipping `skip` (the failed
+    /// connection). Returns `None` when the server has no healthy NIC pair
+    /// left (full partition → out of scope, job must fall back to
+    /// checkpointing).
+    pub fn first_healthy(&self, faults: &FaultPlane, skip: Option<&Connection>) -> Option<&Connection> {
+        self.entries.iter().find(|c| {
+            faults.is_usable(c.src_nic)
+                && faults.is_usable(c.dst_nic)
+                && Some(*c) != skip
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim;
+    use crate::topology::TopologyConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn pool_primary_is_affinity_pair() {
+        let t = topo();
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        assert_eq!(pool.primary().src_nic, 2);
+        assert_eq!(pool.primary().dst_nic, 10);
+        assert!(pool.primary().established);
+        assert_eq!(pool.entries().len(), 8);
+    }
+
+    #[test]
+    fn pool_is_pcie_distance_ordered() {
+        let t = topo();
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        let dists: Vec<u32> = pool
+            .entries()
+            .iter()
+            .map(|c| t.pcie_distance(2, c.src_nic))
+            .collect();
+        let mut sorted = dists.clone();
+        sorted.sort_unstable();
+        assert_eq!(dists, sorted);
+    }
+
+    #[test]
+    fn backup_keeps_rail_alignment() {
+        let t = topo();
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        for c in pool.entries() {
+            assert_eq!(t.rail_of_nic(c.src_nic), t.rail_of_nic(c.dst_nic));
+        }
+    }
+
+    #[test]
+    fn first_healthy_skips_failed_nic() {
+        let t = topo();
+        let mut eng = netsim::engine_for(&t);
+        let mut fp = FaultPlane::new(&t);
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        fp.fail_nic(&t, &mut eng, 2); // primary's src NIC
+        let next = pool.first_healthy(&fp, Some(pool.primary())).unwrap();
+        assert_ne!(next.src_nic, 2);
+        // Closest same-NUMA NIC comes first (0 per failover_chain of GPU 2).
+        assert_eq!(next.src_nic, 0);
+    }
+
+    #[test]
+    fn no_healthy_pair_when_all_nics_down() {
+        let t = topo();
+        let mut eng = netsim::engine_for(&t);
+        let mut fp = FaultPlane::new(&t);
+        for n in 0..8 {
+            fp.fail_nic(&t, &mut eng, n);
+        }
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        assert!(pool.first_healthy(&fp, None).is_none());
+    }
+
+    #[test]
+    fn baseline_pool_has_single_established_entry() {
+        let t = topo();
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::None);
+        assert!(pool.primary().established);
+        assert!(pool.entries()[1..].iter().all(|c| !c.established));
+    }
+}

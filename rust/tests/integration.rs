@@ -1,0 +1,144 @@
+//! Cross-module integration over the public API: communicator + planner +
+//! executor + sims composing end to end (no PJRT artifacts needed).
+
+use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::collectives::{busbw, CollKind, RealPlane};
+use r2ccl::config::Preset;
+use r2ccl::schedule::Strategy;
+use r2ccl::sim::{
+    serve_sim, testbed_training, InferModel, ModelConfig, ParallelConfig, ServeCfg,
+    ServeFailure, ServeStrategy, TrainMethod,
+};
+
+#[test]
+fn communicator_full_collective_matrix() {
+    // Every collective × {healthy, 1 failure, 2 failures} × strategy
+    // completes and yields sane times.
+    let preset = Preset::testbed();
+    for fails in [0usize, 1, 2] {
+        let mut comm = Communicator::new(&preset, 8);
+        for n in 0..fails {
+            comm.note_failure(n, FaultAction::FailNic);
+        }
+        for kind in [
+            CollKind::AllReduce,
+            CollKind::ReduceScatter,
+            CollKind::AllGather,
+            CollKind::Broadcast,
+            CollKind::SendRecv,
+        ] {
+            let t = comm
+                .time_collective(kind, 1 << 24, StrategyChoice::Auto)
+                .unwrap_or_else(|| panic!("{kind:?} fails={fails}"));
+            assert!(t > 0.0 && t < 1.0, "{kind:?} fails={fails}: t={t}");
+        }
+    }
+}
+
+#[test]
+fn strategy_ordering_headline() {
+    // The §8.4 ordering on large AllReduce: healthy > r2 > balance > hotrepair.
+    let preset = Preset::testbed();
+    let healthy = Communicator::new(&preset, 8);
+    let mut deg = Communicator::new(&preset, 8);
+    deg.note_failure(0, FaultAction::FailNic);
+    let d = 1u64 << 29;
+    let n = healthy.topo.n_gpus();
+    let bw = |c: &Communicator, s| {
+        busbw(CollKind::AllReduce, n, d, c.time_collective(CollKind::AllReduce, d, s).unwrap())
+    };
+    let b0 = bw(&healthy, StrategyChoice::Auto);
+    let b_r2 = bw(&deg, StrategyChoice::Force(Strategy::R2AllReduce));
+    let b_bal = bw(&deg, StrategyChoice::Force(Strategy::Balance));
+    let b_hot = bw(&deg, StrategyChoice::HotRepairOnly);
+    assert!(b0 > b_r2 && b_r2 > b_bal && b_bal > b_hot, "{b0} {b_r2} {b_bal} {b_hot}");
+    // Headline retention claims (paper: 93% / 83% / ~54%).
+    assert!(b_r2 / b0 > 0.85);
+    assert!(b_bal / b0 > 0.80);
+    assert!(b_hot / b0 < 0.65);
+}
+
+#[test]
+fn communicator_run_with_data_and_live_failure() {
+    let preset = Preset::testbed();
+    let comm = Communicator::new(&preset, 2);
+    let elems = 2 * 16 * 8 * 4;
+    let mut plane = RealPlane::new(16, elems);
+    plane.fill_pattern();
+    let expected = plane.expected_allreduce();
+    let small = (elems * 4) as u64;
+    let t = comm.time_collective(CollKind::AllReduce, small, StrategyChoice::Auto).unwrap();
+    let script = vec![r2ccl::collectives::exec::FaultEvent {
+        at: t * 0.5,
+        nic: 1,
+        action: FaultAction::FailNic,
+    }];
+    let rep = comm.run(CollKind::AllReduce, small, StrategyChoice::Auto, script, &mut plane, elems);
+    assert!(!rep.crashed);
+    plane.assert_all_equal(&expected);
+}
+
+#[test]
+fn training_sim_whole_figure7_matrix_is_consistent() {
+    let preset = Preset::testbed();
+    let m27 = ModelConfig::gpt_2_7b();
+    let dp16 = ParallelConfig { dp: 16, tp: 1, pp: 1, global_batch: 256, microbatch: 2 };
+    let methods = [
+        TrainMethod::NoFailure,
+        TrainMethod::R2AllReduce,
+        TrainMethod::R2Balance,
+        TrainMethod::R2HotRepair,
+        TrainMethod::AdapCc,
+    ];
+    let results: Vec<f64> = methods
+        .iter()
+        .map(|&m| testbed_training(&preset, &m27, &dp16, m, 1).tokens_per_sec)
+        .collect();
+    // All R² methods stay within 10% of no-failure; AdapCC trails.
+    for (i, r) in results.iter().enumerate().take(4) {
+        assert!(
+            r / results[0] > 0.90,
+            "{:?} tokens/s ratio {}",
+            methods[i],
+            r / results[0]
+        );
+    }
+    assert!(results[4] < results[1], "AdapCC behind R²-AllReduce");
+}
+
+#[test]
+fn serving_sim_strategies_complete_all_requests() {
+    let model = InferModel::llama70b();
+    let cfg = ServeCfg::paper_default(0.4);
+    let fail = Some(ServeFailure { at: 50.0, nics: 1 });
+    for strat in [
+        ServeStrategy::NoFailure,
+        ServeStrategy::R2Balance,
+        ServeStrategy::Restart { outage: 35.0 },
+        ServeStrategy::Reroute,
+        ServeStrategy::DejaVu,
+        ServeStrategy::DejaVuR2,
+    ] {
+        let f = if matches!(strat, ServeStrategy::NoFailure) { None } else { fail };
+        let res = serve_sim(&model, &cfg, strat, f, 3);
+        assert_eq!(res.dropped, 0, "{strat:?} dropped requests");
+        assert!(res.completed.len() >= 35, "{strat:?}: {}", res.completed.len());
+        for r in &res.completed {
+            assert!(r.ttft > 0.0 && r.finish >= r.arrival + r.ttft);
+        }
+    }
+}
+
+#[test]
+fn planner_auto_matches_forced_best_on_extremes() {
+    let preset = Preset::testbed();
+    let mut comm = Communicator::new(&preset, 8);
+    comm.note_failure(0, FaultAction::FailNic);
+    // Tiny message: auto == balance-class latency (not the decomposition).
+    let tiny = comm.time_collective(CollKind::AllReduce, 1 << 10, StrategyChoice::Auto).unwrap();
+    let forced_r2 = comm
+        .time_collective(CollKind::AllReduce, 1 << 10, StrategyChoice::Force(Strategy::R2AllReduce))
+        .unwrap();
+    assert!(tiny <= forced_r2 * 1.05, "auto {tiny} vs forced-r2 {forced_r2}");
+}

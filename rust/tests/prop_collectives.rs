@@ -1,0 +1,165 @@
+//! Property tests: collective data-plane correctness over randomized
+//! shapes, channel counts, ring orders and failure injections.
+//! (proptest is unavailable offline; `util::prop` is the mini driver —
+//! failures report a replayable seed.)
+
+use r2ccl::collectives::exec::{
+    ChannelRouting, ExecOptions, Executor, FaultAction, FaultEvent,
+};
+use r2ccl::collectives::ring::{
+    nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter, split_even,
+};
+use r2ccl::collectives::tree::{tree_allreduce, tree_broadcast, tree_reduce};
+use r2ccl::collectives::{PhantomPlane, RealPlane};
+use r2ccl::config::TimingConfig;
+use r2ccl::topology::{Topology, TopologyConfig};
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+fn random_topo(rng: &mut Rng) -> Topology {
+    let mut cfg = TopologyConfig::testbed_h100();
+    cfg.n_servers = rng.range(2, 5);
+    cfg.gpus_per_server = *rng.choose(&[2usize, 4, 8]);
+    cfg.nics_per_server = cfg.gpus_per_server;
+    cfg.numa_per_server = if cfg.gpus_per_server >= 4 { 2 } else { 1 };
+    Topology::build(&cfg)
+}
+
+#[test]
+fn prop_allreduce_matches_direct_sum() {
+    check("allreduce == direct sum", 12, |rng| {
+        let topo = random_topo(rng);
+        let n = topo.n_gpus();
+        let channels = *rng.choose(&[1usize, 2, 4]);
+        let elems = channels * n * rng.range(1, 9);
+        let spec = nccl_rings(&topo, channels);
+        let sched = ring_allreduce(&spec, (elems * 4) as u64, elems);
+        sched.validate().unwrap();
+        let mut plane = RealPlane::new(n, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let timing = TimingConfig::default();
+        let routing = ChannelRouting::default_rails(&topo, channels);
+        let rep = Executor::new(&topo, &timing, routing, ExecOptions::default(), vec![])
+            .run(&sched, &mut plane);
+        assert!(rep.completion.is_some());
+        plane.assert_all_equal(&expected);
+    });
+}
+
+#[test]
+fn prop_allreduce_lossless_under_random_failure() {
+    // The core §4.3 claim, property-tested: a NIC failure at a *random*
+    // time during the collective never corrupts the result.
+    check("allreduce lossless under failure", 10, |rng| {
+        let topo = Topology::build(&TopologyConfig::testbed_h100());
+        let channels = 2;
+        let n = topo.n_gpus();
+        let elems = channels * n * 8 * rng.range(4, 32);
+        let spec = nccl_rings(&topo, channels);
+        let sched = ring_allreduce(&spec, (elems * 4) as u64, elems);
+        let timing = TimingConfig::default();
+        let routing = ChannelRouting::default_rails(&topo, channels);
+        let base = Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), vec![])
+            .run(&sched, &mut PhantomPlane)
+            .completion_or_panic();
+        let nic = rng.range(0, topo.n_nics());
+        let at = rng.range_f64(0.0, base);
+        let script = vec![FaultEvent { at, nic, action: FaultAction::FailNic }];
+        let mut plane = RealPlane::new(n, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce();
+        let rep = Executor::new(&topo, &timing, routing, ExecOptions::default(), script)
+            .run(&sched, &mut plane);
+        assert!(!rep.crashed, "nic {nic} at {at}: crashed");
+        plane.assert_all_equal(&expected);
+    });
+}
+
+#[test]
+fn prop_reduce_scatter_plus_all_gather_volume_equals_allreduce() {
+    check("RS+AG wire volume == AR wire volume", 20, |rng| {
+        let topo = random_topo(rng);
+        let channels = rng.range(1, 4);
+        let d = rng.next_below(1 << 28) + 1;
+        let spec = nccl_rings(&topo, channels);
+        let rs = ring_reduce_scatter(&spec, d, 0);
+        let ag = ring_all_gather(&spec, d, 0);
+        let ar = ring_allreduce(&spec, d, 0);
+        assert_eq!(rs.total_bytes() + ag.total_bytes(), ar.total_bytes());
+    });
+}
+
+#[test]
+fn prop_broadcast_delivers_root_data() {
+    check("broadcast delivers root data", 10, |rng| {
+        let topo = random_topo(rng);
+        let n = topo.n_gpus();
+        let channels = 1;
+        let pipeline = *rng.choose(&[1usize, 2, 4, 8]);
+        let elems = channels * pipeline * rng.range(1, 10);
+        let root = rng.range(0, n);
+        let spec = nccl_rings(&topo, channels);
+        let sched = ring_broadcast(&spec, (elems * 4) as u64, elems, root, pipeline);
+        sched.validate().unwrap();
+        let mut plane = RealPlane::new(n, elems);
+        plane.fill_pattern();
+        let root_gpu = spec.rings[0][root];
+        let expected = plane.ranks[root_gpu].clone();
+        let timing = TimingConfig::default();
+        let routing = ChannelRouting::default_rails(&topo, channels);
+        let rep = Executor::new(&topo, &timing, routing, ExecOptions::default(), vec![])
+            .run(&sched, &mut plane);
+        assert!(rep.completion.is_some());
+        plane.assert_all_equal(&expected);
+    });
+}
+
+#[test]
+fn prop_tree_collectives_validate() {
+    check("tree reduce/broadcast/allreduce DAGs", 15, |rng| {
+        let n = rng.range(2, 33);
+        let ranks: Vec<usize> = (0..n).collect();
+        let pipeline = rng.range(1, 5);
+        let bytes = rng.next_below(1 << 20) + pipeline as u64;
+        for s in [
+            tree_reduce(&ranks, bytes, 0, pipeline),
+            tree_broadcast(&ranks, bytes, 0, pipeline),
+            tree_allreduce(&ranks, bytes, 0, pipeline),
+        ] {
+            s.validate().unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_split_even_invariants() {
+    check("split_even sums and balances", 50, |rng| {
+        let total = rng.next_below(1 << 40);
+        let parts = rng.range(1, 64);
+        let s = split_even(total, parts);
+        assert_eq!(s.len(), parts);
+        assert_eq!(s.iter().sum::<u64>(), total);
+        let (mn, mx) = (s.iter().min().unwrap(), s.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    });
+}
+
+#[test]
+fn prop_completion_time_monotone_in_size() {
+    check("completion monotone in message size", 8, |rng| {
+        let topo = Topology::build(&TopologyConfig::testbed_h100());
+        let channels = *rng.choose(&[2usize, 8]);
+        let spec = nccl_rings(&topo, channels);
+        let timing = TimingConfig::default();
+        let routing = ChannelRouting::default_rails(&topo, channels);
+        let d1 = rng.next_below(1 << 26) + 1024;
+        let d2 = d1 * 2;
+        let t = |d: u64| {
+            Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), vec![])
+                .run(&ring_allreduce(&spec, d, 0), &mut PhantomPlane)
+                .completion_or_panic()
+        };
+        assert!(t(d2) > t(d1));
+    });
+}

@@ -1,0 +1,161 @@
+//! Property tests over the scheduling layer: Balance conservation,
+//! re-ranking invariants, recursive level planning, planner consistency.
+
+use r2ccl::collectives::exec::ChannelRouting;
+use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
+use r2ccl::collectives::CollKind;
+use r2ccl::netsim::{self, FaultPlane};
+use r2ccl::schedule::{
+    apply_balance, choose_strategy, min_edge_capacity, optimal_y, plan_levels, rail_sets, rerank,
+    ring_time, t_of_y, weighted_split, x_threshold, PlanInput, Strategy,
+};
+use r2ccl::topology::{Topology, TopologyConfig};
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+fn testbed() -> Topology {
+    Topology::build(&TopologyConfig::testbed_h100())
+}
+
+fn random_faults(rng: &mut Rng, topo: &Topology, max_per_server: usize) -> FaultPlane {
+    let mut eng = netsim::engine_for(topo);
+    let mut fp = FaultPlane::new(topo);
+    for s in 0..topo.n_servers() {
+        let k = rng.range(0, max_per_server + 1);
+        for n in rng.sample_indices(topo.cfg.nics_per_server, k) {
+            fp.fail_nic(topo, &mut eng, s * topo.cfg.nics_per_server + n);
+        }
+    }
+    fp
+}
+
+#[test]
+fn prop_balance_conserves_bytes_and_validity() {
+    check("balance conserves bytes", 15, |rng| {
+        let topo = testbed();
+        let faults = random_faults(rng, &topo, 6);
+        let channels = *rng.choose(&[2usize, 4, 8]);
+        let d = rng.next_below(1 << 28) + 1;
+        let spec = nccl_rings(&topo, channels);
+        let sched = ring_allreduce(&spec, d, 0);
+        let routing = ChannelRouting::default_rails(&topo, channels);
+        let out = apply_balance(&topo, &faults, &routing, &sched);
+        out.validate().unwrap();
+        assert_eq!(out.total_bytes(), sched.total_bytes());
+        assert_eq!(out.len(), sched.len());
+        // Every hinted sub-transfer uses usable NICs (when any exist).
+        for g in &out.groups {
+            for sub in &g.subs {
+                if let Some((a, b)) = sub.nic_hint {
+                    assert!(faults.is_usable(a) && faults.is_usable(b));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_split_exact_and_proportional() {
+    check("weighted_split", 40, |rng| {
+        let total = rng.next_below(1 << 36);
+        let k = rng.range(1, 12);
+        let weights: Vec<f64> = (0..k).map(|_| rng.range_f64(0.0, 10.0)).collect();
+        let s = weighted_split(total, &weights);
+        assert_eq!(s.iter().sum::<u64>(), total);
+        let wsum: f64 = weights.iter().sum();
+        if wsum > 0.0 && total > 1000 {
+            for (share, w) in s.iter().zip(weights.iter()) {
+                let expect = total as f64 * w / wsum;
+                assert!((*share as f64 - expect).abs() <= k as f64 + 1.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rerank_never_worse_and_preserves_membership() {
+    check("rerank invariants", 30, |rng| {
+        let n = rng.range(3, 17);
+        let rails = rng.range(2, 9);
+        let sets: Vec<Vec<usize>> = (0..n)
+            .map(|_| {
+                let k = rng.range(1, rails + 1);
+                let mut s = rng.sample_indices(rails, k);
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        let ring: Vec<usize> = (0..n).collect();
+        let out = rerank(&ring, &sets);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, ring, "membership must be preserved");
+        assert!(
+            min_edge_capacity(&out, &sets) >= min_edge_capacity(&ring, &sets),
+            "rerank must never reduce the bottleneck"
+        );
+    });
+}
+
+#[test]
+fn prop_levels_partition_and_nest() {
+    check("plan_levels invariants", 30, |rng| {
+        let n = rng.range(2, 33);
+        let rem: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 1.0)).collect();
+        let levels = plan_levels(&rem);
+        assert!(!levels.is_empty());
+        // Fractions sum to 1.
+        let fsum: f64 = levels.iter().map(|l| l.fraction).sum();
+        assert!((fsum - 1.0).abs() < 1e-9);
+        // Level 0 is global; each level nests inside the previous.
+        assert_eq!(levels[0].servers.len(), n);
+        for w in levels.windows(2) {
+            assert!(w[1].servers.len() < w[0].servers.len());
+            for s in &w[1].servers {
+                assert!(w[0].servers.contains(s));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_y_star_minimises_t() {
+    check("Appendix A optimum", 30, |rng| {
+        let n = rng.range(2, 65);
+        let g = *rng.choose(&[2usize, 4, 8]);
+        let x = rng.range_f64(0.01, 0.99);
+        let y_star = optimal_y(n, g, x);
+        let t_star = t_of_y(n, g, x, y_star);
+        for i in 0..=60 {
+            let y = i as f64 / 60.0;
+            assert!(
+                t_of_y(n, g, x, y) >= t_star - 1e-9,
+                "T({y}) < T(Y*={y_star}) at n={n} g={g} x={x}"
+            );
+        }
+        // Below the threshold the optimum is exactly 0.
+        if x <= x_threshold(n, g) {
+            assert_eq!(y_star, 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_planner_consistency() {
+    check("planner", 30, |rng| {
+        let n = rng.range(2, 65);
+        let mut input = PlanInput::uniform(n, 8, 200e9, 5e-6);
+        let bytes = rng.range_f64(1e3, 1e10);
+        // Healthy → Standard, and ring_time monotone in degradation.
+        assert_eq!(choose_strategy(CollKind::AllReduce, &input, bytes), Strategy::Standard);
+        let t0 = ring_time(CollKind::AllReduce, &input, bytes, true);
+        input.rem[rng.range(0, n)] = rng.range_f64(0.1, 0.99);
+        let t1 = ring_time(CollKind::AllReduce, &input, bytes, true);
+        assert!(t1 >= t0);
+        // Degraded → never Standard.
+        let s = choose_strategy(CollKind::AllReduce, &input, bytes);
+        assert_ne!(s, Strategy::Standard);
+        // Non-AllReduce always Balance under failure (Table 1).
+        assert_eq!(choose_strategy(CollKind::AllGather, &input, bytes), Strategy::Balance);
+    });
+}

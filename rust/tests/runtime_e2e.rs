@@ -1,0 +1,127 @@
+//! Integration: the full three-layer stack. AOT artifacts (L1 Pallas +
+//! L2 JAX, compiled by `make artifacts`) execute under the Rust PJRT
+//! runtime, and real gradients flow through the simulated R²CCL data
+//! plane. Tests skip (with a notice) when artifacts are absent.
+
+use r2ccl::ccl::StrategyChoice;
+use r2ccl::runtime::Runtime;
+use r2ccl::schedule::Strategy;
+use r2ccl::train::{train_dp, TrainerCfg};
+use r2ccl::util::Rng;
+
+fn tiny_runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new("artifacts/tiny");
+    if !dir.join("meta.json").exists() {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("load artifacts"))
+}
+
+#[test]
+fn artifacts_load_and_execute() {
+    let Some(rt) = tiny_runtime() else { return };
+    assert!(!rt.platform().is_empty());
+    let params = rt.init_params(7);
+    assert_eq!(params.len(), rt.meta.params.len());
+    let mut rng = Rng::new(1);
+    let (tokens, targets) = rt.synthetic_batch(&mut rng);
+    let (loss, grads) = rt.grad_step(&params, &tokens, &targets).expect("grad step");
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // Random-init loss ≈ ln(vocab).
+    let expect = (rt.meta.vocab as f32).ln();
+    assert!((loss - expect).abs() < 1.5, "loss {loss} vs ln(vocab) {expect}");
+    assert_eq!(grads.len(), params.len());
+    for (g, p) in grads.iter().zip(params.iter()) {
+        assert_eq!(g.len(), p.len());
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn update_step_moves_params() {
+    let Some(rt) = tiny_runtime() else { return };
+    let params = rt.init_params(3);
+    let grads: Vec<Vec<f32>> = params.iter().map(|p| vec![1.0; p.len()]).collect();
+    let new = rt.apply_update(&params, &grads, 0.5).expect("update");
+    for (n, p) in new.iter().zip(params.iter()) {
+        for (a, b) in n.iter().zip(p.iter()) {
+            assert!((a - (b - 0.5)).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn aot_reduce_kernel_matches_native_dataplane() {
+    // L1 kernel (Pallas → HLO → PJRT) vs the Rust data plane's reduce_add:
+    // the same arithmetic through two independent stacks.
+    let Some(rt) = tiny_runtime() else { return };
+    let (k, n) = (rt.meta.reduce_k, rt.meta.reduce_n);
+    let mut rng = Rng::new(9);
+    let chunks: Vec<Vec<f32>> =
+        (0..k).map(|_| (0..n).map(|_| rng.normal() as f32).collect()).collect();
+    let kernel_out = rt.reduce_chunks(&chunks).expect("kernel");
+    let mut native = vec![0.0f32; n];
+    for c in &chunks {
+        r2ccl::collectives::dataplane::reduce_add(c, &mut native);
+    }
+    for (i, (a, b)) in kernel_out.iter().zip(native.iter()).enumerate() {
+        assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn e2e_training_loss_decreases() {
+    let Some(rt) = tiny_runtime() else { return };
+    let cfg =
+        TrainerCfg { dp: 2, steps: 16, lr: 1.0, dataset_batches: 2, ..Default::default() };
+    let log = train_dp(&rt, &cfg).expect("train");
+    assert_eq!(log.losses.len(), 16);
+    let first: f32 = log.losses[..4].iter().sum::<f32>() / 4.0;
+    let last: f32 = log.losses[12..].iter().sum::<f32>() / 4.0;
+    assert!(last < first - 0.1, "loss did not decrease: {:?}", log.losses);
+    assert_eq!(log.migrations, 0);
+    assert!(log.sim_comm_time > 0.0);
+}
+
+#[test]
+fn e2e_training_with_failure_is_lossless() {
+    // The headline end-to-end property: a NIC failure mid-AllReduce at
+    // step 3 leaves the final parameters bit-identical to a failure-free
+    // run (hot repair + rollback lose nothing), only simulated time grows.
+    let Some(rt) = tiny_runtime() else { return };
+    let base_cfg = TrainerCfg { dp: 4, steps: 6, lr: 0.5, ..Default::default() };
+    let base = train_dp(&rt, &base_cfg).expect("baseline");
+    let mut fail_cfg = base_cfg.clone();
+    fail_cfg.fail_at_step = Some(3);
+    fail_cfg.strategy = StrategyChoice::Force(Strategy::Balance);
+    let failed = train_dp(&rt, &fail_cfg).expect("failure run");
+    assert!(failed.migrations >= 1, "no migration recorded");
+    assert_eq!(
+        base.final_params_digest, failed.final_params_digest,
+        "parameters diverged after failure + hot repair"
+    );
+    assert!(failed.sim_comm_time > base.sim_comm_time);
+    for (a, b) in base.losses.iter().zip(failed.losses.iter()) {
+        assert_eq!(a, b, "loss trajectories must match exactly");
+    }
+}
+
+#[test]
+fn e2e_r2_allreduce_strategy_also_lossless() {
+    let Some(rt) = tiny_runtime() else { return };
+    let base_cfg = TrainerCfg { dp: 4, steps: 5, lr: 0.5, ..Default::default() };
+    let base = train_dp(&rt, &base_cfg).expect("baseline");
+    let mut cfg = base_cfg.clone();
+    cfg.fail_at_step = Some(2);
+    cfg.strategy = StrategyChoice::Force(Strategy::R2AllReduce);
+    let r2 = train_dp(&rt, &cfg).expect("r2 run");
+    // R²-AllReduce reassociates the reduction (partial ring + injection),
+    // so bit-exact equality is not expected — but the internal verify step
+    // (grads vs direct sum at 1e-4) ran every step, and the loss
+    // trajectories must agree to float tolerance.
+    assert!(r2.migrations >= 1);
+    for (a, b) in base.losses.iter().zip(r2.losses.iter()) {
+        assert!((a - b).abs() < 5e-3, "losses diverged: {a} vs {b}");
+    }
+}
