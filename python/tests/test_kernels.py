@@ -1,10 +1,16 @@
 """L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept
 shapes/dtypes. This is the CORE correctness signal of the compile path."""
 
+import pytest
+
+# Gate optional deps so the suite stays collectible in minimal images
+# (hypothesis/jax may be absent offline; the kernels are then untestable).
+pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import fused_linear, matmul, reduce_chunks

@@ -3,11 +3,18 @@
 //! server). Paper shape: R²-AllReduce stays <1.5% overhead at every scale;
 //! Balance rises to ~5% at 64 servers; the communication ratio grows with
 //! scale (fig 8d).
+//!
+//! A second sweep drives the same scales through *compiled* schedules on
+//! the fluid-flow simulator (the communicator's epoch-keyed compile path)
+//! instead of the α-β analytic models, cross-validating the analytic arm.
 
 use r2ccl::bench::{pct, Table};
 use r2ccl::config::GpuComputeConfig;
 use r2ccl::schedule::PlanInput;
-use r2ccl::sim::{overhead_vs, simai_iteration, ModelConfig, ParallelConfig, TrainMethod};
+use r2ccl::sim::{
+    overhead_vs, simai_compiled_iteration, simai_iteration, ModelConfig, ParallelConfig,
+    TrainMethod,
+};
 
 fn main() {
     let model = ModelConfig::gpt_7b();
@@ -39,6 +46,37 @@ fn main() {
     }
     table.print();
     table.save("fig8_training_scale");
+
+    // Compiled-schedule arm: the same sweep through the fluid simulator
+    // (4–32 servers; channels=2 keeps the event count tractable). Every
+    // collective here executes a schedule produced by the communicator's
+    // compile path — generic ring/tree builders, epoch-keyed health, plan
+    // cache — rather than the analytic shortcut.
+    let mut t2 = Table::new(
+        "Fig 8 (compiled) — 7B training through real compiled schedules, 1 NIC failed",
+        &["servers", "gpus", "balance ovh", "r2-allreduce ovh", "hotrepair ovh"],
+    );
+    for n in [4usize, 8, 16, 32] {
+        let par = ParallelConfig { dp: n * 4, tp: 2, pp: 1, global_batch: 512, microbatch: 1 };
+        let base = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::NoFailure, 1);
+        let bal = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::R2Balance, 1);
+        let r2 = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::R2AllReduce, 1);
+        let hot = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::R2HotRepair, 1);
+        t2.row(vec![
+            n.to_string(),
+            (n * 8).to_string(),
+            pct(overhead_vs(&bal, &base)),
+            pct(overhead_vs(&r2, &base)),
+            pct(overhead_vs(&hot, &base)),
+        ]);
+        assert!(overhead_vs(&bal, &base) >= -1e-9, "n={n}: balance can't beat healthy");
+        assert!(
+            overhead_vs(&hot, &base) >= overhead_vs(&bal, &base) - 1e-9,
+            "n={n}: hotrepair must trail balance"
+        );
+    }
+    t2.print();
+    t2.save("fig8_training_scale_compiled");
 
     // fig 8d: comm ratio must grow with scale.
     let ratios: Vec<f64> = [4usize, 16, 64]

@@ -4,17 +4,20 @@
 //!   * end-to-end executor run of a testbed AllReduce (the inner loop of
 //!     every figure bench);
 //!   * data-plane reduce_add throughput;
-//!   * Balance / R²-AllReduce schedule rewriting.
+//!   * Balance / R²-AllReduce schedule rewriting;
+//!   * communicator plan compilation, cached (epoch-keyed PlanCache hit)
+//!     vs uncached (the seed's per-call rebuild).
 //!
 //! Before/after numbers for the optimization pass live in
 //! EXPERIMENTS.md §Perf.
 
 use r2ccl::bench::time;
+use r2ccl::ccl::{Communicator, HealthState, StrategyChoice};
 use r2ccl::collectives::dataplane::reduce_add;
-use r2ccl::collectives::exec::{ChannelRouting, ExecOptions, Executor};
+use r2ccl::collectives::exec::{ChannelRouting, ExecOptions, Executor, FaultAction};
 use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
-use r2ccl::collectives::PhantomPlane;
-use r2ccl::config::TimingConfig;
+use r2ccl::collectives::{CollKind, PhantomPlane};
+use r2ccl::config::{Preset, TimingConfig};
 use r2ccl::netsim::{self, FaultPlane};
 use r2ccl::schedule::{apply_balance, r2_allreduce_schedule};
 use r2ccl::topology::{Topology, TopologyConfig};
@@ -84,6 +87,35 @@ fn main() {
         let s = r2_allreduce_schedule(&topo, &faults, &routing, 1 << 28, 0, 0, 0.25, 8);
         assert!(!s.is_empty());
     });
+
+    // 6. Communicator plan compilation: the per-iteration hot path of the
+    //    workload simulators. The uncached arm reproduces the seed's
+    //    per-call behaviour — rebuild the health snapshot (fault plane +
+    //    per-server bandwidth) AND the schedule on every call; the cached
+    //    arm is one PlanCache lookup.
+    let mut comm = Communicator::new(&Preset::testbed(), 8);
+    comm.note_failure(0, FaultAction::FailNic);
+    let t_uncached = time("plan: uncached (health rebuild + compile, seed path)", 2, 20, || {
+        let health = HealthState::build(&comm.topo, comm.known_failures(), comm.epoch());
+        assert_eq!(health.degraded_servers(), 1);
+        let (s, _) = comm.compile_uncached(CollKind::AllReduce, 1 << 28, 0, StrategyChoice::Auto);
+        assert!(!s.is_empty());
+    });
+    let t_cached = time("plan: compile (epoch-keyed PlanCache hit)", 5, 200, || {
+        let (s, _) = comm.compile(CollKind::AllReduce, 1 << 28, 0, StrategyChoice::Auto);
+        assert!(!s.is_empty());
+    });
+    let speedup = t_uncached.mean / t_cached.mean;
+    let (hits, misses) = comm.plan_cache_stats();
+    println!(
+        "  -> cached repeat-compile {speedup:.0}x faster than per-call rebuild \
+         ({hits} hits / {misses} misses)"
+    );
+    assert!(hits > misses, "repeat compiles must hit the cache");
+    assert!(
+        speedup >= 5.0,
+        "cached compile must be >=5x faster than the per-call rebuild, got {speedup:.1}x"
+    );
 
     println!("\nperf_hotpath OK");
 }

@@ -1,0 +1,155 @@
+//! Per-epoch health snapshot of the cluster.
+//!
+//! The seed communicator rebuilt a [`FaultPlane`] *and* a fluid-flow engine
+//! from the known-failure list on every call to `plan_input`,
+//! `worst_server` and `compile` — three reconstructions per collective
+//! invocation, all on the per-iteration hot path of the training/serving
+//! simulators. A [`HealthState`] is instead built once per *failure epoch*
+//! (a monotonically increasing counter the communicator bumps on
+//! `note_failure` / `clear_failures`) and shared by every consumer of the
+//! current health: the planner input, the worst-server query and the
+//! schedule compiler. No engine is constructed at plan time at all — the
+//! snapshot only needs the NIC states, not their projection onto fluid
+//! resources.
+
+use crate::collectives::exec::FaultAction;
+use crate::netsim::{FaultPlane, NicState};
+use crate::schedule::PlanInput;
+use crate::topology::{NicId, Topology};
+
+// The clamp itself lives in `netsim::fault` so the executor's fault-script
+// path (which never goes through a Communicator) is protected by the same
+// rule; re-exported here because the communicator's API boundary is where
+// callers usually meet it.
+pub use crate::netsim::{clamp_degrade_factor, MIN_DEGRADE_FACTOR};
+
+/// Sanitize a fault action at the API boundary (currently only `Degrade`
+/// carries a payload that can be malformed — values that are not positive
+/// finite numbers are clamped, so the seed's `partial_cmp(..).unwrap()`
+/// NaN panic in `worst_server` cannot recur).
+pub fn sanitize_action(action: FaultAction) -> FaultAction {
+    match action {
+        FaultAction::Degrade(f) => FaultAction::Degrade(clamp_degrade_factor(f)),
+        other => other,
+    }
+}
+
+/// Immutable health snapshot for one failure epoch.
+#[derive(Debug, Clone)]
+pub struct HealthState {
+    /// The failure epoch this snapshot was built for.
+    pub epoch: u64,
+    /// NIC-level ground truth implied by the known failures.
+    pub fault_plane: FaultPlane,
+    /// Remaining bandwidth fraction per server (1.0 = healthy).
+    pub rem: Vec<f64>,
+}
+
+impl HealthState {
+    /// Build the snapshot from the communicator's known-failure list.
+    pub fn build(topo: &Topology, failures: &[(NicId, FaultAction)], epoch: u64) -> HealthState {
+        let mut fault_plane = FaultPlane::new(topo);
+        for &(nic, action) in failures {
+            let state = match action {
+                FaultAction::FailNic => NicState::NicBroken,
+                FaultAction::CutCable => NicState::CableBroken,
+                // note_state clamps malformed Degrade factors.
+                FaultAction::Degrade(f) => NicState::Degraded(f),
+                FaultAction::Repair => NicState::Healthy,
+            };
+            fault_plane.note_state(nic, state);
+        }
+        let rem = (0..topo.n_servers())
+            .map(|s| 1.0 - fault_plane.lost_bandwidth_fraction(topo, s))
+            .collect();
+        HealthState { epoch, fault_plane, rem }
+    }
+
+    /// The most degraded server and its lost-bandwidth fraction X.
+    /// `total_cmp` keeps the query total even if a NaN ever slipped through
+    /// (clamping at the boundary should make that impossible).
+    pub fn worst_server(&self) -> (usize, f64) {
+        self.rem
+            .iter()
+            .enumerate()
+            .map(|(s, &r)| (s, 1.0 - r))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap_or((0, 0.0))
+    }
+
+    /// Number of servers below full bandwidth.
+    pub fn degraded_servers(&self) -> usize {
+        self.rem.iter().filter(|&&r| r < 1.0).count()
+    }
+
+    /// Planner input for this snapshot.
+    pub fn plan_input(&self, topo: &Topology) -> PlanInput {
+        PlanInput {
+            n: topo.n_servers(),
+            g: topo.cfg.gpus_per_server,
+            server_bw: topo.cfg.nic_bw * topo.cfg.nics_per_server as f64,
+            rem: self.rem.clone(),
+            alpha: topo.cfg.link_latency,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn build_mirrors_failures() {
+        let t = topo();
+        let h = HealthState::build(
+            &t,
+            &[(0, FaultAction::FailNic), (9, FaultAction::Degrade(0.5))],
+            3,
+        );
+        assert_eq!(h.epoch, 3);
+        assert!(!h.fault_plane.is_usable(0));
+        assert!((h.rem[0] - 0.875).abs() < 1e-12);
+        assert!((h.rem[1] - 0.9375).abs() < 1e-12);
+        assert_eq!(h.degraded_servers(), 2);
+        let (s, x) = h.worst_server();
+        assert_eq!(s, 0);
+        assert!((x - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degrade_clamping() {
+        assert_eq!(clamp_degrade_factor(f64::NAN), MIN_DEGRADE_FACTOR);
+        assert_eq!(clamp_degrade_factor(-1.0), MIN_DEGRADE_FACTOR);
+        assert_eq!(clamp_degrade_factor(0.0), MIN_DEGRADE_FACTOR);
+        assert_eq!(clamp_degrade_factor(f64::INFINITY), 1.0);
+        assert_eq!(clamp_degrade_factor(2.5), 1.0);
+        assert_eq!(clamp_degrade_factor(0.25), 0.25);
+    }
+
+    #[test]
+    fn nan_degrade_keeps_worst_server_total() {
+        let t = topo();
+        let h = HealthState::build(&t, &[(0, FaultAction::Degrade(f64::NAN))], 1);
+        let (s, x) = h.worst_server();
+        assert_eq!(s, 0);
+        assert!(x.is_finite() && x > 0.0 && x <= 1.0, "x={x}");
+        assert!(h.rem.iter().all(|r| r.is_finite()));
+    }
+
+    #[test]
+    fn healthy_snapshot_is_uniform() {
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let h = HealthState::build(&t, &[], 0);
+        assert_eq!(h.rem, vec![1.0; 4]);
+        assert_eq!(h.degraded_servers(), 0);
+        assert_eq!(h.worst_server().1, 0.0);
+        let input = h.plan_input(&t);
+        assert_eq!(input.n, 4);
+        assert_eq!(input.g, 8);
+    }
+}

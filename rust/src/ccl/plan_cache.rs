@@ -1,0 +1,176 @@
+//! Epoch-keyed memoization of compiled collective schedules.
+//!
+//! Compiling a schedule is pure in `(collective parameters, failure
+//! epoch)`: the builders are deterministic and every health-dependent input
+//! is captured by the epoch (the communicator bumps it on every
+//! `note_failure` / `clear_failures`). Training and serving simulations
+//! issue the *same* collective every iteration, so the per-iteration hot
+//! path collapses to one hash lookup plus an `Arc` clone; a failure or
+//! repair naturally invalidates every cached plan because the epoch in the
+//! key changes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::collectives::{CollKind, Schedule};
+use crate::schedule::Strategy;
+
+use super::StrategyChoice;
+
+/// Cache key: everything `Communicator::compile` depends on besides the
+/// topology and channel routing, which are immutable per communicator
+/// (`channels` is included anyway so the key stays self-describing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub kind: CollKind,
+    pub bytes_per_rank: u64,
+    pub elems: usize,
+    pub choice: StrategyChoice,
+    pub epoch: u64,
+    pub channels: usize,
+}
+
+/// The memo table, with hit/miss counters for the perf benches.
+#[derive(Debug)]
+pub struct PlanCache {
+    map: HashMap<PlanKey, (Arc<Schedule>, Strategy)>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// Default number of cached plans per communicator. Schedules are the
+/// dominant memory cost (a 16-rank 8-channel AllReduce is ~4k groups), so
+/// the cap is deliberately modest; real workloads cycle over a handful of
+/// collective shapes per epoch.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 128;
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity > 0, "plan cache capacity must be positive");
+        PlanCache { map: HashMap::new(), capacity, hits: 0, misses: 0 }
+    }
+
+    /// Look up a compiled plan, counting the outcome.
+    pub fn get(&mut self, key: &PlanKey) -> Option<(Arc<Schedule>, Strategy)> {
+        match self.map.get(key) {
+            Some((sched, strategy)) => {
+                self.hits += 1;
+                Some((Arc::clone(sched), *strategy))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly compiled plan. At capacity, stale-epoch entries are
+    /// dropped first — the epoch is monotonic, so they can never hit again;
+    /// if the current epoch alone fills the cache, single entries are
+    /// evicted (arbitrary order) so a working set larger than the capacity
+    /// degrades gracefully instead of flushing the whole epoch.
+    pub fn insert(&mut self, key: PlanKey, sched: Arc<Schedule>, strategy: Strategy) {
+        if self.map.len() >= self.capacity {
+            let epoch = key.epoch;
+            self.map.retain(|k, _| k.epoch == epoch);
+            while self.map.len() >= self.capacity {
+                let Some(k) = self.map.keys().next().copied() else { break };
+                self.map.remove(&k);
+            }
+        }
+        self.map.insert(key, (sched, strategy));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Drop every entry (counters survive).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(epoch: u64, bytes: u64) -> PlanKey {
+        PlanKey {
+            kind: CollKind::AllReduce,
+            bytes_per_rank: bytes,
+            elems: 0,
+            choice: StrategyChoice::Auto,
+            epoch,
+            channels: 8,
+        }
+    }
+
+    fn plan() -> Arc<Schedule> {
+        Arc::new(Schedule::new("test"))
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let mut c = PlanCache::new(4);
+        let k = key(0, 1024);
+        assert!(c.get(&k).is_none());
+        c.insert(k, plan(), Strategy::Standard);
+        let (s, strat) = c.get(&k).unwrap();
+        assert_eq!(strat, Strategy::Standard);
+        assert_eq!(s.label, "test");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn epoch_is_part_of_the_key() {
+        let mut c = PlanCache::new(4);
+        c.insert(key(0, 1024), plan(), Strategy::Standard);
+        assert!(c.get(&key(1, 1024)).is_none());
+        assert!(c.get(&key(0, 1024)).is_some());
+    }
+
+    #[test]
+    fn eviction_prefers_stale_epochs() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(0, 1), plan(), Strategy::Standard);
+        c.insert(key(0, 2), plan(), Strategy::Standard);
+        // At capacity: inserting an epoch-1 plan drops both epoch-0 entries.
+        c.insert(key(1, 3), plan(), Strategy::Balance);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&key(1, 3)).is_some());
+    }
+
+    #[test]
+    fn eviction_keeps_cache_at_capacity_within_one_epoch() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(5, 1), plan(), Strategy::Standard);
+        c.insert(key(5, 2), plan(), Strategy::Standard);
+        c.insert(key(5, 3), plan(), Strategy::Standard);
+        assert_eq!(c.len(), 2, "one eviction, not a flush");
+        assert!(c.get(&key(5, 3)).is_some(), "newest entry must survive");
+        // Exactly one of the two older entries was evicted.
+        let older = [key(5, 1), key(5, 2)];
+        let surviving = older.iter().filter(|k| c.map.contains_key(k)).count();
+        assert_eq!(surviving, 1);
+    }
+}

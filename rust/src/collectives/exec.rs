@@ -212,8 +212,9 @@ impl<'a> Executor<'a> {
         let mut subs_left: Vec<usize> = sched.groups.iter().map(|g| g.subs.len()).collect();
         let mut done = 0usize;
 
-        for (i, f) in self.script.clone().iter().enumerate() {
-            self.engine.set_timer(f.at, TAG_FAULT | i as u64);
+        for i in 0..self.script.len() {
+            let at = self.script[i].at;
+            self.engine.set_timer(at, TAG_FAULT | i as u64);
         }
 
         for i in 0..n {
@@ -707,6 +708,25 @@ mod tests {
             ratio > 0.4 && ratio < 0.62,
             "throughput retained {ratio:.2} (expected ~0.5)"
         );
+    }
+
+    #[test]
+    fn scripted_nan_degrade_is_clamped_not_fatal() {
+        // Fault scripts bypass the communicator's note_failure sanitizer;
+        // the FaultPlane-level clamp must keep a Degrade(NaN) from hitting
+        // the engine's `factor > 0` assertion mid-collective.
+        let t = topo();
+        let d: u64 = 1 << 24;
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let script = vec![FaultEvent {
+            at: base.completion_or_panic() * 0.3,
+            nic: 0,
+            action: FaultAction::Degrade(f64::NAN),
+        }];
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        assert!(!rep.crashed);
+        assert!(rep.migrations.is_empty(), "degradation must not migrate");
+        assert!(rep.completion_or_panic() > base.completion_or_panic());
     }
 
     #[test]

@@ -21,8 +21,9 @@ pub use exec::{
 pub use ring::{nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter, RingSpec};
 pub use schedule::{DataOp, Schedule, SubTransfer, TransferGroup};
 
-/// Collective kinds (Table 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Collective kinds (Table 1). `Hash` because the kind is part of the
+/// communicator's plan-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CollKind {
     AllReduce,
     ReduceScatter,

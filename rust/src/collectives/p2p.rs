@@ -22,6 +22,31 @@ pub fn sendrecv(pairs: &[(GpuId, GpuId)], bytes: u64, channels: usize) -> Schedu
     sched
 }
 
+/// Ring-neighbour SendRecv pattern over all servers: GPU `i` of server `s`
+/// sends to GPU `i` of server `(s+1) mod n` — the default PP-boundary
+/// exchange, correct for any server count (the seed hardcoded servers
+/// 0 ↔ 1, which only covered the 2-server testbed). For two servers the
+/// wrap-around reproduces the old bidirectional 0 ↔ 1 pattern exactly.
+/// Single-server topologies fall back to an intra-server neighbour ring so
+/// the pattern stays non-degenerate.
+pub fn ring_exchange_pairs(n_servers: usize, gpus_per_server: usize) -> Vec<(GpuId, GpuId)> {
+    let g = gpus_per_server;
+    if n_servers < 2 {
+        if g < 2 {
+            return Vec::new();
+        }
+        return (0..g).map(|i| (i, (i + 1) % g)).collect();
+    }
+    let mut pairs = Vec::with_capacity(n_servers * g);
+    for s in 0..n_servers {
+        let d = (s + 1) % n_servers;
+        for i in 0..g {
+            pairs.push((s * g + i, d * g + i));
+        }
+    }
+    pairs
+}
+
 /// All-to-All over `ranks`: every ordered pair exchanges `bytes_per_pair`.
 /// Channel assignment rotates so the pair load spreads across rails.
 pub fn all_to_all(ranks: &[GpuId], bytes_per_pair: u64, channels: usize) -> Schedule {
@@ -57,6 +82,35 @@ mod tests {
         let s = sendrecv(&[(0, 8)], 3, 8);
         assert_eq!(s.len(), 3); // only 3 non-empty stripes
         assert_eq!(s.total_bytes(), 3);
+    }
+
+    #[test]
+    fn ring_exchange_covers_all_servers() {
+        // 4 servers × 2 GPUs: server s talks to server (s+1) % 4 only.
+        let pairs = ring_exchange_pairs(4, 2);
+        assert_eq!(pairs.len(), 8);
+        for &(src, dst) in &pairs {
+            assert_eq!((src / 2 + 1) % 4, dst / 2, "pair {src}->{dst}");
+            assert_eq!(src % 2, dst % 2);
+        }
+        // Wrap-around edge exists (server 3 -> server 0).
+        assert!(pairs.contains(&(6, 0)));
+    }
+
+    #[test]
+    fn ring_exchange_two_servers_matches_legacy_pattern() {
+        let g = 8;
+        let pairs = ring_exchange_pairs(2, g);
+        let legacy: Vec<(usize, usize)> =
+            (0..g).map(|i| (i, g + i)).chain((0..g).map(|i| (g + i, i))).collect();
+        assert_eq!(pairs, legacy);
+    }
+
+    #[test]
+    fn ring_exchange_single_server_stays_intra() {
+        let pairs = ring_exchange_pairs(1, 4);
+        assert_eq!(pairs, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert!(ring_exchange_pairs(1, 1).is_empty());
     }
 
     #[test]

@@ -315,6 +315,26 @@ mod tests {
     }
 
     #[test]
+    fn nccl_rings_cover_many_servers() {
+        // The ring builder must stay a permutation of all GPUs at SimAI
+        // scales, with each channel entering every server at local index c.
+        for n_servers in [4usize, 16, 32] {
+            let t = Topology::build(&TopologyConfig::simai_a100(n_servers));
+            let spec = nccl_rings(&t, 4);
+            let n = t.n_gpus();
+            for (c, ring) in spec.rings.iter().enumerate() {
+                assert_eq!(ring.len(), n);
+                let mut sorted = ring.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "n={n_servers} c={c}");
+                for s in 0..n_servers {
+                    assert_eq!(ring[s * 8], s * 8 + c, "server {s} entry of channel {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn split_even_sums_exactly() {
         assert_eq!(split_even(10, 3), vec![4, 3, 3]);
         assert_eq!(split_even(10, 3).iter().sum::<u64>(), 10);

@@ -24,7 +24,7 @@ pub enum DataOp {
 }
 
 /// One wire transfer within a group.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SubTransfer {
     pub src: GpuId,
     pub dst: GpuId,
@@ -35,7 +35,7 @@ pub struct SubTransfer {
 }
 
 /// A logical transfer: the unit of dependency and data-plane application.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TransferGroup {
     /// Channel this group belongs to (for NIC routing).
     pub channel: usize,
@@ -68,8 +68,10 @@ impl TransferGroup {
     }
 }
 
-/// A compiled collective schedule.
-#[derive(Debug, Clone, Default)]
+/// A compiled collective schedule. Equality is structural (label, groups,
+/// dependencies, data ops) — the plan-cache property tests use it to assert
+/// cached and freshly compiled schedules are bit-identical.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Schedule {
     pub label: String,
     pub groups: Vec<TransferGroup>,

@@ -151,6 +151,7 @@ fn main() -> anyhow::Result<()> {
                 tpot.p95() * 1e3
             );
         }
+        #[cfg(feature = "xla")]
         "train-e2e" => {
             let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
             let cfg = r2ccl::train::TrainerCfg {
@@ -169,6 +170,11 @@ fn main() -> anyhow::Result<()> {
                 log.migrations,
                 log.sim_comm_time
             );
+        }
+        #[cfg(not(feature = "xla"))]
+        "train-e2e" => {
+            eprintln!("train-e2e needs the PJRT runtime: rebuild with `--features xla`");
+            std::process::exit(2);
         }
         _ => {
             let preset = Preset::testbed();

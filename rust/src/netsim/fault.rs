@@ -70,6 +70,24 @@ pub enum ProbeOutcome {
     Timeout,
 }
 
+/// Smallest capacity factor a degraded NIC may carry. `Degraded` values
+/// that are not positive finite numbers (NaN, ±inf, zero, negatives) are
+/// clamped to this: the NIC is treated as barely alive rather than
+/// poisoning downstream comparisons or tripping the engine's `factor > 0`
+/// assertion. Fault scripts and the communicator's `note_failure` both
+/// funnel through this clamp.
+pub const MIN_DEGRADE_FACTOR: f64 = 1e-9;
+
+/// Clamp a degradation capacity factor into `(0, 1]`; see
+/// [`MIN_DEGRADE_FACTOR`]. `!(f > 0.0)` is deliberate: it catches NaN.
+pub fn clamp_degrade_factor(f: f64) -> f64 {
+    if !(f > 0.0) {
+        MIN_DEGRADE_FACTOR
+    } else {
+        f.min(1.0)
+    }
+}
+
 /// Ground-truth fault state of the cluster + application onto the fluid
 /// engine. The detection layer may only query it through `probe()` — the
 /// same information a real probe QP would reveal.
@@ -102,8 +120,11 @@ impl FaultPlane {
     }
 
     /// Set a NIC's state and mirror it into the engine's resources.
+    /// Delegates the state update (including the `Degraded` clamp) to
+    /// [`FaultPlane::note_state`] — fault scripts inject raw values here.
     pub fn set_state(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId, s: NicState) {
-        self.states[nic] = s;
+        self.note_state(nic, s);
+        let s = self.states[nic];
         let tx = topo.resource(ResourceKey::NicTx(nic));
         let rx = topo.resource(ResourceKey::NicRx(nic));
         match s {
@@ -124,6 +145,20 @@ impl FaultPlane {
                 engine.set_resource_factor(rx, f);
             }
         }
+    }
+
+    /// Record a NIC state without mirroring it into a fluid engine. This is
+    /// the plan-time path (per-epoch health snapshots have no engine); the
+    /// executor mirrors its own engine through [`FaultPlane::set_state`].
+    /// Malformed `Degraded` factors are clamped here, so every
+    /// state-setting path shares the invariant (see
+    /// [`clamp_degrade_factor`]).
+    pub fn note_state(&mut self, nic: NicId, s: NicState) {
+        let s = match s {
+            NicState::Degraded(f) => NicState::Degraded(clamp_degrade_factor(f)),
+            other => other,
+        };
+        self.states[nic] = s;
     }
 
     /// Fail a NIC (hardware fault).
@@ -230,6 +265,22 @@ mod tests {
         assert!(fp.is_usable(2));
         assert_eq!(fp.capacity_factor(2), 0.25);
         assert_eq!(fp.probe(2, 10), ProbeOutcome::Ok);
+    }
+
+    #[test]
+    fn malformed_degrade_factors_are_clamped() {
+        // Regression: a scripted Degrade(NaN)/Degrade(0.0) must not trip
+        // the engine's `factor > 0` assertion or poison comparisons.
+        let (topo, mut eng, mut fp) = setup();
+        for bad in [f64::NAN, 0.0, -3.0, f64::NEG_INFINITY] {
+            fp.set_state(&topo, &mut eng, 1, NicState::Degraded(bad));
+            assert_eq!(fp.capacity_factor(1), MIN_DEGRADE_FACTOR, "input {bad}");
+            assert!(fp.is_usable(1));
+        }
+        fp.set_state(&topo, &mut eng, 1, NicState::Degraded(f64::INFINITY));
+        assert_eq!(fp.capacity_factor(1), 1.0);
+        fp.set_state(&topo, &mut eng, 1, NicState::Degraded(2.5));
+        assert_eq!(fp.capacity_factor(1), 1.0);
     }
 
     #[test]

@@ -10,7 +10,10 @@ pub mod engine;
 pub mod fault;
 
 pub use engine::{Engine, Event, FlowId, SimTime, TimerId};
-pub use fault::{FailureKind, FaultPlane, NicState, ProbeOutcome, Support};
+pub use fault::{
+    clamp_degrade_factor, FailureKind, FaultPlane, NicState, ProbeOutcome, Support,
+    MIN_DEGRADE_FACTOR,
+};
 
 use crate::topology::Topology;
 

@@ -8,8 +8,9 @@
 
 use crate::collectives::CollKind;
 
-/// Strategy selected for one collective invocation (Table 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Strategy selected for one collective invocation (Table 1). `Hash`
+/// because a forced strategy is part of the communicator's plan-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Healthy network: NCCL's own schedule.
     Standard,

@@ -11,6 +11,7 @@ pub use inference::{
 };
 pub use montecarlo::{multi_failure_sweep, sample_pattern, MonteCarloPoint};
 pub use training::{
-    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, simai_iteration,
-    testbed_training, CommVolumes, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
+    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, simai_compiled_iteration,
+    simai_iteration, testbed_training, CommVolumes, ModelConfig, ParallelConfig, TrainMethod,
+    TrainResult,
 };

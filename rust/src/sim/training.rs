@@ -8,7 +8,11 @@
 //! * SimAI scale (4–128 servers): the α-β analytic models of
 //!   [`crate::schedule::planner`] (running a 512-rank event-level ring per
 //!   Monte-Carlo sample would be wasteful and adds nothing at this
-//!   abstraction level).
+//!   abstraction level);
+//! * SimAI scale, compiled ([`simai_compiled_iteration`]): the fluid-flow
+//!   simulator driven through the communicator's compile path at 4–32
+//!   servers — the scale sweep that validates the analytic arm against
+//!   real compiled schedules (and exercises the plan cache at scale).
 
 use crate::baselines::adapcc::AdapCcModel;
 use crate::ccl::{Communicator, StrategyChoice};
@@ -192,6 +196,73 @@ pub fn testbed_training(
     }
 
     finish(method, model, par, t_compute / capacity_factor, t_comm, preset)
+}
+
+// ---------------------------------------------------------------------
+// SimAI mode, compiled: event-simulated collectives at cluster scale.
+// ---------------------------------------------------------------------
+
+/// One SimAI-scale training iteration whose DP gradient AllReduce executes
+/// a *real compiled schedule* on the fluid-flow simulator — the scale arm
+/// of the evaluation exercising the same compile path (epoch-keyed health,
+/// plan cache, generic ring/tree builders) as the testbed, instead of the
+/// α-β analytic shortcut of [`simai_iteration`]. `failed_nics` NICs are
+/// taken down on server 0 before the iteration starts.
+pub fn simai_compiled_iteration(
+    n_servers: usize,
+    channels: usize,
+    model: &ModelConfig,
+    par: &ParallelConfig,
+    method: TrainMethod,
+    failed_nics: usize,
+) -> TrainResult {
+    let preset = Preset::simai(n_servers);
+    assert_eq!(
+        par.n_gpus(),
+        preset.topo.n_servers * preset.topo.gpus_per_server,
+        "parallel layout must fill the cluster"
+    );
+    let vols = comm_volumes(model, par);
+    let t_compute = compute_time(model, par, &preset.compute);
+    // Same infeasibility rules as the testbed arm: vanilla NCCL crashes
+    // outright, and AdapCC cannot drop a rank out of a TP/PP partition.
+    if failed_nics > 0 {
+        if method == TrainMethod::VanillaNccl {
+            return zero_result(method, t_compute);
+        }
+        if method == TrainMethod::AdapCc && (par.tp > 1 || par.pp > 1) {
+            return zero_result(method, t_compute);
+        }
+    }
+
+    let channels = channels.min(preset.topo.nics_per_server).max(1);
+    let mut comm = Communicator::new(&preset, channels);
+    let effective = if method == TrainMethod::NoFailure { 0 } else { failed_nics };
+    for n in 0..effective {
+        comm.note_failure(n, FaultAction::FailNic);
+    }
+    let choice = match method {
+        TrainMethod::NoFailure | TrainMethod::VanillaNccl | TrainMethod::AdapCc => {
+            StrategyChoice::Auto
+        }
+        TrainMethod::R2AllReduce => StrategyChoice::Force(Strategy::R2AllReduce),
+        TrainMethod::R2Balance => StrategyChoice::Force(Strategy::Balance),
+        TrainMethod::R2HotRepair => StrategyChoice::HotRepairOnly,
+    };
+    let mut t_comm = comm
+        .time_collective(CollKind::AllReduce, vols.dp_allreduce, choice)
+        .expect("dp allreduce");
+    // Mirror the testbed arm's AdapCC accounting: the reconfiguration
+    // overhead lands on the collective, the shrunken-cluster capacity
+    // factor on compute only (the collective already paid the degraded
+    // network inside the fluid simulation).
+    let mut capacity_factor = 1.0;
+    if method == TrainMethod::AdapCc && effective > 0 {
+        let adapcc = AdapCcModel::default();
+        t_comm += adapcc.per_collective_overhead();
+        capacity_factor = adapcc.capacity_factor(par.n_gpus(), effective);
+    }
+    finish(method, model, par, t_compute / capacity_factor, t_comm, &preset)
 }
 
 // ---------------------------------------------------------------------
@@ -410,6 +481,27 @@ mod tests {
             assert!(o_r2 < 0.035, "n={n}: r2 overhead {o_r2}");
             assert!(o_bal >= o_r2 - 1e-9, "n={n}: bal {o_bal} r2 {o_r2}");
         }
+    }
+
+    #[test]
+    fn simai_compiled_matches_analytic_ordering() {
+        // The compiled (event-simulated) scale arm must reproduce the
+        // analytic arm's qualitative shape: failure overhead is positive,
+        // Balance bounds HotRepair from below, and everything completes on
+        // a 4-server SimAI cluster driven through the real compile path.
+        let model = ModelConfig::gpt_2_7b();
+        let n = 4usize;
+        let par = ParallelConfig { dp: n * 4, tp: 2, pp: 1, global_batch: 128, microbatch: 1 };
+        let base = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::NoFailure, 1);
+        let bal = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::R2Balance, 1);
+        let hot = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::R2HotRepair, 1);
+        assert!(base.comm_time > 0.0 && base.iter_time.is_finite());
+        let o_bal = overhead_vs(&bal, &base);
+        let o_hot = overhead_vs(&hot, &base);
+        assert!(o_bal >= 0.0, "balance overhead {o_bal}");
+        assert!(o_hot >= o_bal - 1e-9, "hotrepair {o_hot} vs balance {o_bal}");
+        let vanilla = simai_compiled_iteration(n, 2, &model, &par, TrainMethod::VanillaNccl, 1);
+        assert_eq!(vanilla.tokens_per_sec, 0.0);
     }
 
     #[test]

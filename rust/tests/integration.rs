@@ -37,6 +37,51 @@ fn communicator_full_collective_matrix() {
 }
 
 #[test]
+fn communicator_scales_to_many_servers() {
+    // The seed hardcoded the 2-server testbed into the compile path
+    // (server-0↔1 SendRecv, literal pipeline depth 8): the compile path
+    // must now produce valid, runnable schedules at SimAI scales. At 16/32
+    // servers the high-flow-count ring/all-to-all collectives run with
+    // zero-byte payloads (the DAG and routing machinery is still fully
+    // walked, but the fluid rate solver stays cheap enough for a
+    // debug-mode test run); the low-flow-count kinds — including
+    // SendRecv, whose schedule would be empty at zero bytes — always
+    // move real bytes.
+    for n_servers in [2usize, 4, 16, 32] {
+        let preset = Preset::simai(n_servers);
+        let channels = if n_servers <= 4 { 2 } else { 1 };
+        let mut comm = Communicator::new(&preset, channels);
+        comm.note_failure(0, FaultAction::FailNic);
+        let run_bytes = |kind: CollKind| -> u64 {
+            if n_servers <= 4 {
+                return 1 << 20;
+            }
+            match kind {
+                CollKind::SendRecv | CollKind::Broadcast | CollKind::Reduce => 1 << 20,
+                _ => 0,
+            }
+        };
+        for kind in [
+            CollKind::AllReduce,
+            CollKind::ReduceScatter,
+            CollKind::AllGather,
+            CollKind::Broadcast,
+            CollKind::Reduce,
+            CollKind::SendRecv,
+            CollKind::AllToAll,
+        ] {
+            let (sched, _strategy) = comm.compile(kind, 1 << 20, 0, StrategyChoice::Auto);
+            sched
+                .validate()
+                .unwrap_or_else(|e| panic!("{kind:?} at {n_servers} servers: {e}"));
+            assert!(!sched.is_empty(), "{kind:?} at {n_servers} servers: empty schedule");
+            let t = comm.time_collective(kind, run_bytes(kind), StrategyChoice::Auto);
+            assert!(t.is_some(), "{kind:?} at {n_servers} servers failed to run");
+        }
+    }
+}
+
+#[test]
 fn strategy_ordering_headline() {
     // The §8.4 ordering on large AllReduce: healthy > r2 > balance > hotrepair.
     let preset = Preset::testbed();

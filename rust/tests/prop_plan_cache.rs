@@ -1,0 +1,127 @@
+//! Property tests for the plan-compilation subsystem: across random fault
+//! sequences, cached and freshly compiled schedules are bit-identical, and
+//! every health mutation (`note_failure` / `clear_failures`) bumps the
+//! failure epoch and invalidates the cache. (`util::prop` is the mini
+//! driver — failures report a replayable seed.)
+
+use std::sync::Arc;
+
+use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::collectives::CollKind;
+use r2ccl::config::Preset;
+use r2ccl::schedule::Strategy;
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+const KINDS: [CollKind; 7] = [
+    CollKind::AllReduce,
+    CollKind::ReduceScatter,
+    CollKind::AllGather,
+    CollKind::Broadcast,
+    CollKind::Reduce,
+    CollKind::SendRecv,
+    CollKind::AllToAll,
+];
+
+fn random_action(rng: &mut Rng) -> FaultAction {
+    match rng.range(0, 4) {
+        0 => FaultAction::FailNic,
+        1 => FaultAction::CutCable,
+        2 => FaultAction::Degrade(rng.range_f64(0.05, 1.0)),
+        _ => FaultAction::Repair,
+    }
+}
+
+#[test]
+fn prop_cached_compile_identical_to_fresh_across_fault_sequences() {
+    check("cached compile == fresh compile", 24, |rng| {
+        let n_servers = *rng.choose(&[2usize, 4]);
+        let channels = *rng.choose(&[1usize, 2, 4]);
+        let mut comm = Communicator::new(&Preset::simai(n_servers), channels);
+        for _ in 0..rng.range(0, 6) {
+            let nic = rng.range(0, comm.topo.n_nics());
+            comm.note_failure(nic, random_action(rng));
+        }
+        let kind = *rng.choose(&KINDS);
+        let bytes = rng.next_below(1 << 24) + 1;
+        let choice = *rng.choose(&[
+            StrategyChoice::Auto,
+            StrategyChoice::HotRepairOnly,
+            StrategyChoice::Force(Strategy::Balance),
+            StrategyChoice::Force(Strategy::R2AllReduce),
+            StrategyChoice::Force(Strategy::Recursive),
+        ]);
+        let (first, strat1) = comm.compile(kind, bytes, 0, choice);
+        let (cached, strat2) = comm.compile(kind, bytes, 0, choice);
+        assert!(Arc::ptr_eq(&first, &cached), "second compile must be the cached Arc");
+        assert_eq!(strat1, strat2);
+        let (fresh, strat3) = comm.compile_uncached(kind, bytes, 0, choice);
+        assert_eq!(strat1, strat3, "{kind:?} {choice:?}: strategy drifted");
+        assert_eq!(
+            *first, fresh,
+            "{kind:?} {choice:?} n={n_servers} c={channels}: cached != fresh"
+        );
+        fresh.validate().unwrap();
+    });
+}
+
+#[test]
+fn prop_health_mutations_bump_epoch_and_invalidate_cache() {
+    check("note_failure/clear_failures bump the epoch", 16, |rng| {
+        let mut comm = Communicator::new(&Preset::testbed(), 2);
+        let kind = *rng.choose(&KINDS);
+        let bytes = rng.next_below(1 << 22) + 1;
+        let e0 = comm.epoch();
+
+        let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
+        assert_eq!(comm.plan_cache_stats(), (0, 1));
+        let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
+        assert_eq!(comm.plan_cache_stats(), (1, 1), "same epoch must hit");
+
+        // A real state change (failing a healthy NIC) must bump the epoch…
+        let nic = rng.range(0, comm.topo.n_nics());
+        comm.note_failure(nic, FaultAction::FailNic);
+        assert!(comm.epoch() > e0, "note_failure must bump the epoch");
+        let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
+        assert_eq!(comm.plan_cache_stats(), (1, 2), "new epoch must miss");
+
+        // …while re-reporting the identical failure is a cache-friendly
+        // no-op (the periodic-reprobe pattern).
+        let e_mid = comm.epoch();
+        comm.note_failure(nic, FaultAction::FailNic);
+        assert_eq!(comm.epoch(), e_mid, "duplicate report must not bump");
+        let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
+        assert_eq!(comm.plan_cache_stats(), (2, 2), "duplicate report must hit");
+
+        let e1 = comm.epoch();
+        comm.clear_failures();
+        assert!(comm.epoch() > e1, "clearing real failures must bump");
+        let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
+        assert_eq!(comm.plan_cache_stats(), (2, 3), "cleared epoch must miss");
+    });
+}
+
+#[test]
+fn prop_compiled_plans_survive_degrade_nan_injection() {
+    // The API boundary clamps malformed Degrade factors; no fault sequence
+    // containing NaN may panic the planner or produce non-finite health.
+    check("NaN degrade never panics the planner", 12, |rng| {
+        let mut comm = Communicator::new(&Preset::testbed(), 2);
+        for _ in 0..rng.range(1, 5) {
+            let nic = rng.range(0, comm.topo.n_nics());
+            let action = if rng.chance(0.5) {
+                FaultAction::Degrade(f64::NAN)
+            } else {
+                random_action(rng)
+            };
+            comm.note_failure(nic, action);
+        }
+        let (_, x) = comm.worst_server();
+        assert!(x.is_finite() && (0.0..=1.0).contains(&x), "x={x}");
+        assert!(comm.plan_input().rem.iter().all(|r| r.is_finite()));
+        let kind = *rng.choose(&KINDS);
+        let (sched, _) = comm.compile(kind, 1 << 16, 0, StrategyChoice::Auto);
+        sched.validate().unwrap();
+    });
+}
