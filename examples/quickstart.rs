@@ -1,10 +1,11 @@
-//! Quickstart: create a communicator on the paper's 2×8-H100 testbed
-//! topology, run an AllReduce, kill a NIC mid-flight, and watch R²CCL
-//! detect → triangulate → migrate → finish, losslessly.
+//! Quickstart: create a communicator world on the paper's 2×8-H100
+//! testbed topology, run an AllReduce, kill a NIC mid-flight, and watch
+//! R²CCL detect → triangulate → migrate → finish, losslessly — then scope
+//! collectives to TP/PP process groups the way a 3D-parallel job would.
 //!
 //!     cargo run --release --example quickstart
 
-use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::ccl::{CommWorld, ParallelLayout, StrategyChoice};
 use r2ccl::collectives::exec::{FaultAction, FaultEvent};
 use r2ccl::collectives::{CollKind, RealPlane};
 use r2ccl::config::Preset;
@@ -13,16 +14,17 @@ use r2ccl::util::stats::{fmt_bytes, fmt_time};
 
 fn main() {
     let preset = Preset::testbed();
-    let comm = Communicator::new(&preset, 8);
-    let n_ranks = comm.topo.n_gpus();
+    let world = CommWorld::new(&preset, 8);
+    let comm = world.world_group();
+    let n_ranks = world.topo().n_gpus();
     println!(
         "== R²CCL quickstart: {} ({} GPUs, {} NICs) ==\n",
         preset.name,
         n_ranks,
-        comm.topo.n_nics()
+        world.topo().n_nics()
     );
 
-    // 1. Healthy AllReduce.
+    // 1. Healthy AllReduce (world scope).
     let bytes: u64 = 256 << 20;
     let t = comm.time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto).unwrap();
     let busbw = r2ccl::collectives::busbw(CollKind::AllReduce, n_ranks, bytes, t);
@@ -52,8 +54,9 @@ fn main() {
     println!("data plane verified: AllReduce result identical to direct sum ✓");
 
     // 3. Failure-aware re-scheduling: Balance vs R²-AllReduce vs HotRepair.
-    let mut degraded = Communicator::new(&preset, 8);
-    degraded.note_failure(0, FaultAction::FailNic);
+    let mut degraded_world = CommWorld::new(&preset, 8);
+    degraded_world.note_failure(0, FaultAction::FailNic);
+    let degraded = degraded_world.world_group();
     println!("\nwith NIC 0 down (X = 12.5% bandwidth lost on server 0):");
     for (name, choice) in [
         ("HotRepair only", StrategyChoice::HotRepairOnly),
@@ -70,5 +73,32 @@ fn main() {
             100.0 * bw / busbw
         );
     }
+
+    // 4. Process groups: the TP8/PP2 layout a Megatron job would open.
+    //    TP AllReduce rides NVLink inside each server; PP SendRecv crosses
+    //    the stage boundary; the fault domain is per group — the server-1
+    //    TP group never notices server 0's dead NIC.
+    let layout = ParallelLayout::new(8, 1, 2);
+    println!("\nTP8/PP2 process groups under the same failure:");
+    for (i, tp) in degraded_world.tp_groups(&layout).iter().enumerate() {
+        let (_, strat) = tp.compile(CollKind::AllReduce, 64 << 20, 0, StrategyChoice::Auto);
+        let t = tp.time_collective(CollKind::AllReduce, 64 << 20, StrategyChoice::Auto).unwrap();
+        println!(
+            "  TP group {i} (ranks {:?}…): strategy {strat:?}, {} AllReduce in {}",
+            &tp.ranks()[..2],
+            fmt_bytes(64 << 20),
+            fmt_time(t)
+        );
+    }
+    let boundary = degraded_world.pp_pairs(&layout).remove(0);
+    let (_, strat) = boundary.compile(CollKind::SendRecv, 32 << 20, 0, StrategyChoice::Auto);
+    let t = boundary.time_collective(CollKind::SendRecv, 32 << 20, StrategyChoice::Auto).unwrap();
+    println!(
+        "  PP boundary ({} ranks): strategy {strat:?}, {} SendRecv in {}",
+        boundary.n_ranks(),
+        fmt_bytes(32 << 20),
+        fmt_time(t)
+    );
+
     println!("\nquickstart OK");
 }

@@ -10,7 +10,7 @@
 //!      timeout-only baseline.
 
 use r2ccl::bench::Table;
-use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::ccl::{CommWorld, StrategyChoice};
 use r2ccl::collectives::exec::{ExecOptions, FaultAction, FaultEvent, FailurePolicy};
 use r2ccl::collectives::CollKind;
 use r2ccl::config::{Preset, TimingConfig};
@@ -150,8 +150,9 @@ fn ablation_d() {
     // Strategy sanity at the communicator level: auto never loses to the
     // worst forced choice.
     let preset = Preset::testbed();
-    let mut c = Communicator::new(&preset, 8);
-    c.note_failure(0, FaultAction::FailNic);
+    let mut world = CommWorld::new(&preset, 8);
+    world.note_failure(0, FaultAction::FailNic);
+    let c = world.world_group();
     for bytes in [1u64 << 12, 1 << 22, 1 << 30] {
         let auto = c.time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto).unwrap();
         let hot = c

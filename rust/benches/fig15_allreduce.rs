@@ -7,7 +7,7 @@
 //! small/medium (≈92%); R²-AllReduce wins large (≈93% vs 83%).
 
 use r2ccl::bench::{gbps, Table};
-use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::ccl::{CommWorld, StrategyChoice};
 use r2ccl::collectives::exec::FaultAction;
 use r2ccl::collectives::{busbw, CollKind};
 use r2ccl::config::Preset;
@@ -16,10 +16,12 @@ use r2ccl::util::stats::fmt_bytes;
 
 fn main() {
     let preset = Preset::testbed();
-    let healthy = Communicator::new(&preset, 8);
-    let mut degraded = Communicator::new(&preset, 8);
-    degraded.note_failure(0, FaultAction::FailNic);
-    let n = healthy.topo.n_gpus();
+    let healthy_world = CommWorld::new(&preset, 8);
+    let healthy = healthy_world.world_group();
+    let mut degraded_world = CommWorld::new(&preset, 8);
+    degraded_world.note_failure(0, FaultAction::FailNic);
+    let degraded = degraded_world.world_group();
+    let n = healthy_world.topo().n_gpus();
 
     let mut table = Table::new(
         "Fig 15 — AllReduce busbw (GB/s), 2×8 H100, 1 NIC failed (X=12.5%)",

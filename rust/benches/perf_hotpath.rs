@@ -12,7 +12,7 @@
 //! EXPERIMENTS.md §Perf.
 
 use r2ccl::bench::time;
-use r2ccl::ccl::{Communicator, HealthState, StrategyChoice};
+use r2ccl::ccl::{CommWorld, HealthState, StrategyChoice};
 use r2ccl::collectives::dataplane::reduce_add;
 use r2ccl::collectives::exec::{ChannelRouting, ExecOptions, Executor, FaultAction};
 use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
@@ -93,10 +93,11 @@ fn main() {
     //    per-call behaviour — rebuild the health snapshot (fault plane +
     //    per-server bandwidth) AND the schedule on every call; the cached
     //    arm is one PlanCache lookup.
-    let mut comm = Communicator::new(&Preset::testbed(), 8);
-    comm.note_failure(0, FaultAction::FailNic);
+    let mut world = CommWorld::new(&Preset::testbed(), 8);
+    world.note_failure(0, FaultAction::FailNic);
+    let comm = world.world_group();
     let t_uncached = time("plan: uncached (health rebuild + compile, seed path)", 2, 20, || {
-        let health = HealthState::build(&comm.topo, comm.known_failures(), comm.epoch());
+        let health = HealthState::build(world.topo(), &world.known_failures(), world.epoch());
         assert_eq!(health.degraded_servers(), 1);
         let (s, _) = comm.compile_uncached(CollKind::AllReduce, 1 << 28, 0, StrategyChoice::Auto);
         assert!(!s.is_empty());
@@ -106,7 +107,7 @@ fn main() {
         assert!(!s.is_empty());
     });
     let speedup = t_uncached.mean / t_cached.mean;
-    let (hits, misses) = comm.plan_cache_stats();
+    let (hits, misses) = world.plan_cache_stats();
     println!(
         "  -> cached repeat-compile {speedup:.0}x faster than per-call rebuild \
          ({hits} hits / {misses} misses)"

@@ -1,0 +1,824 @@
+//! Process-group communicators: [`CommWorld`] + [`CommGroup`].
+//!
+//! Real 3D-parallel workloads never run one world-scope communicator. A
+//! Megatron TP8/PP2 layout drives tensor-parallel AllReduce on intra-server
+//! groups, pipeline SendRecv on stage pairs, and data-parallel AllReduce on
+//! replica groups — each collective runs over a *subset* of ranks on its
+//! own NCCL-style communicator, while every group shares the same NICs,
+//! failure epoch and fault domain.
+//!
+//! The split mirrors that:
+//! * [`CommWorld`] owns everything global and shared: the topology, the
+//!   channel↔NIC routing table, the known-failure list with its monotonic
+//!   failure epoch, the per-epoch [`HealthState`] snapshot, and one
+//!   [`PlanCache`] keyed by `(group, kind, bytes, elems, choice, epoch,
+//!   channels)`.
+//! * [`CommGroup`] is a cheap handle (an `Rc` of the world's shared state
+//!   plus an interned rank set) exposing the familiar `compile` / `run` /
+//!   `time_collective` / `measure_busbw` surface scoped to its ranks: rings
+//!   walk only member GPUs, SendRecv pairs only member servers, the α-β
+//!   planner's X and `worst_server` are computed over the group's servers
+//!   only, and the R²/recursive decompositions peel *group* servers.
+//!
+//! Group identity is the rank *set*: two `world.group(..)` calls over the
+//! same ranks intern to the same id and share cached plans. The world group
+//! (`world.world_group()`) compiles bit-identical schedules to the legacy
+//! world-scope `Communicator` (property-tested in
+//! `rust/tests/prop_groups.rs`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::collectives::exec::{
+    ChannelRouting, ExecOptions, ExecReport, Executor, FaultAction, FaultEvent,
+};
+use crate::collectives::{
+    busbw, p2p, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter,
+    rings_for_ranks, CollKind, DataPlane, PhantomPlane, Schedule,
+};
+use crate::config::{Preset, TimingConfig};
+use crate::schedule::{
+    apply_balance, choose_strategy, optimal_y, r2_allreduce_schedule_for, recursive_allreduce_for,
+    PlanInput, Strategy,
+};
+use crate::topology::{GpuId, NicId, RankSet, ServerId, Topology};
+
+use super::health::HealthState;
+use super::plan_cache::{PlanCache, PlanKey};
+use super::StrategyChoice;
+
+/// A 3D parallelism layout over a world of `tp × dp × pp` ranks, mapped to
+/// GPUs in Megatron's default order: tensor-parallel innermost (contiguous
+/// ranks — intra-server for tp ≤ gpus_per_server), then data-parallel, then
+/// pipeline stages outermost. Rank ids equal global GPU ids; the layout
+/// must exactly fill the world it is used with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelLayout {
+    pub tp: usize,
+    pub dp: usize,
+    pub pp: usize,
+}
+
+impl ParallelLayout {
+    pub fn new(tp: usize, dp: usize, pp: usize) -> ParallelLayout {
+        assert!(tp >= 1 && dp >= 1 && pp >= 1, "parallel degrees must be >= 1");
+        ParallelLayout { tp, dp, pp }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.tp * self.dp * self.pp
+    }
+
+    /// Global rank of coordinate (tp_i, dp_i, pp_i).
+    pub fn rank(&self, tp_i: usize, dp_i: usize, pp_i: usize) -> usize {
+        debug_assert!(tp_i < self.tp && dp_i < self.dp && pp_i < self.pp);
+        (pp_i * self.dp + dp_i) * self.tp + tp_i
+    }
+
+    /// Tensor-parallel groups: one per (pp, dp) coordinate, `tp` ranks each.
+    pub fn tp_ranks(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.pp * self.dp);
+        for pp_i in 0..self.pp {
+            for dp_i in 0..self.dp {
+                out.push((0..self.tp).map(|t| self.rank(t, dp_i, pp_i)).collect());
+            }
+        }
+        out
+    }
+
+    /// Data-parallel (replica) groups: one per (pp, tp) coordinate, `dp`
+    /// ranks each.
+    pub fn dp_ranks(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.pp * self.tp);
+        for pp_i in 0..self.pp {
+            for tp_i in 0..self.tp {
+                out.push((0..self.dp).map(|d| self.rank(tp_i, d, pp_i)).collect());
+            }
+        }
+        out
+    }
+
+    /// Pipeline stage-pair groups: one per consecutive stage boundary,
+    /// containing *both* stages' ranks — the communicator a PP boundary
+    /// SendRecv runs on (all per-rank activations transfers of the boundary
+    /// move concurrently and contend for the same NICs).
+    pub fn pp_pair_ranks(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.pp.saturating_sub(1));
+        for pp_i in 0..self.pp.saturating_sub(1) {
+            let mut ranks = Vec::with_capacity(2 * self.tp * self.dp);
+            for dp_i in 0..self.dp {
+                for t in 0..self.tp {
+                    ranks.push(self.rank(t, dp_i, pp_i));
+                    ranks.push(self.rank(t, dp_i, pp_i + 1));
+                }
+            }
+            out.push(ranks);
+        }
+        out
+    }
+}
+
+/// World-global state shared by the world handle and every group handle.
+struct WorldShared {
+    topo: Topology,
+    timing: TimingConfig,
+    channels: usize,
+    routing: Arc<ChannelRouting>,
+    opts: RefCell<ExecOptions>,
+    /// Failures known *before* a collective starts (already detected and
+    /// broadcast via OOB); the planner schedules around them.
+    failures: RefCell<Vec<(NicId, FaultAction)>>,
+    /// Failure epoch: bumped on every health mutation. Keys the health
+    /// snapshot and the plan cache.
+    epoch: Cell<u64>,
+    /// Health snapshot of the current epoch (lazily built).
+    health: RefCell<Option<Arc<HealthState>>>,
+    /// Memoized compiled plans, shared by every group.
+    cache: RefCell<PlanCache>,
+    /// Interned rank sets → group id (group identity is the rank set).
+    group_ids: RefCell<HashMap<Vec<GpuId>, u64>>,
+}
+
+impl WorldShared {
+    fn bump_epoch(&self) {
+        self.epoch.set(self.epoch.get() + 1);
+        *self.health.borrow_mut() = None;
+    }
+
+    fn health(&self) -> Arc<HealthState> {
+        let mut slot = self.health.borrow_mut();
+        if let Some(h) = slot.as_ref() {
+            if h.epoch == self.epoch.get() {
+                return Arc::clone(h);
+            }
+        }
+        let h = Arc::new(HealthState::build(
+            &self.topo,
+            &self.failures.borrow(),
+            self.epoch.get(),
+        ));
+        *slot = Some(Arc::clone(&h));
+        h
+    }
+}
+
+/// The world communicator: owns the topology, channel routing, failure
+/// epoch, health snapshot and plan cache. Collectives are issued through
+/// [`CommGroup`] handles created with [`CommWorld::group`] (or the layout
+/// helpers); [`CommWorld::world_group`] covers every rank for world-scope
+/// calls.
+pub struct CommWorld {
+    shared: Rc<WorldShared>,
+}
+
+impl CommWorld {
+    pub fn new(preset: &Preset, channels: usize) -> CommWorld {
+        let topo = Topology::build(&preset.topo);
+        let routing = Arc::new(ChannelRouting::default_rails(&topo, channels));
+        CommWorld {
+            shared: Rc::new(WorldShared {
+                topo,
+                timing: preset.timing.clone(),
+                channels,
+                routing,
+                opts: RefCell::new(ExecOptions::default()),
+                failures: RefCell::new(Vec::new()),
+                epoch: Cell::new(0),
+                health: RefCell::new(None),
+                cache: RefCell::new(PlanCache::default()),
+                group_ids: RefCell::new(HashMap::new()),
+            }),
+        }
+    }
+
+    pub fn with_opts(self, opts: ExecOptions) -> CommWorld {
+        *self.shared.opts.borrow_mut() = opts;
+        self
+    }
+
+    pub fn set_opts(&self, opts: ExecOptions) {
+        *self.shared.opts.borrow_mut() = opts;
+    }
+
+    pub fn opts(&self) -> ExecOptions {
+        self.shared.opts.borrow().clone()
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.shared.topo
+    }
+
+    pub fn timing(&self) -> &TimingConfig {
+        &self.shared.timing
+    }
+
+    /// Number of channels collectives are compiled for.
+    pub fn channels(&self) -> usize {
+        self.shared.channels
+    }
+
+    /// The world's channel↔NIC routing table (shared by `Arc` with every
+    /// executor run — groups read only the rows of their member servers).
+    pub fn routing(&self) -> &ChannelRouting {
+        &self.shared.routing
+    }
+
+    pub(crate) fn routing_arc(&self) -> Arc<ChannelRouting> {
+        Arc::clone(&self.shared.routing)
+    }
+
+    /// Record a failure discovered before the next collective (e.g. by the
+    /// periodic reprobe or a previous collective's detection). Malformed
+    /// `Degrade` factors (NaN, out of range) are clamped here, at the API
+    /// boundary, so no NaN ever reaches the planner or the engine.
+    /// Re-reporting a standing failure is a no-op — the epoch (and with it
+    /// the plan cache) only moves when the health state actually changes,
+    /// so periodic reprobes don't defeat the cache.
+    pub fn note_failure(&mut self, nic: NicId, action: FaultAction) {
+        let action = super::health::sanitize_action(action);
+        let mut failures = self.shared.failures.borrow_mut();
+        let before = failures.clone();
+        failures.retain(|(n, _)| *n != nic);
+        if !matches!(action, FaultAction::Repair) {
+            failures.push((nic, action));
+        }
+        let changed = *failures != before;
+        drop(failures);
+        if changed {
+            self.shared.bump_epoch();
+        }
+    }
+
+    pub fn clear_failures(&mut self) {
+        let was_empty = self.shared.failures.borrow().is_empty();
+        if !was_empty {
+            self.shared.failures.borrow_mut().clear();
+            self.shared.bump_epoch();
+        }
+    }
+
+    pub fn known_failures(&self) -> Vec<(NicId, FaultAction)> {
+        self.shared.failures.borrow().clone()
+    }
+
+    /// The current failure epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.get()
+    }
+
+    /// Health snapshot of the current epoch, built at most once per epoch.
+    pub fn health(&self) -> Arc<HealthState> {
+        self.shared.health()
+    }
+
+    /// World-scope planner input.
+    pub fn plan_input(&self) -> PlanInput {
+        self.health().plan_input(&self.shared.topo)
+    }
+
+    /// The most degraded server and its lost-bandwidth fraction X,
+    /// world-scope.
+    pub fn worst_server(&self) -> (usize, f64) {
+        self.health().worst_server()
+    }
+
+    /// Plan-cache statistics: `(hits, misses)` across all groups.
+    pub fn plan_cache_stats(&self) -> (u64, u64) {
+        let cache = self.shared.cache.borrow();
+        (cache.hits(), cache.misses())
+    }
+
+    /// Number of plans currently cached across all groups.
+    pub fn plan_cache_len(&self) -> usize {
+        self.shared.cache.borrow().len()
+    }
+
+    /// Create (or re-open) the communicator group over `ranks`. Ranks must
+    /// be unique, in range and non-empty; order does not matter — group
+    /// identity is the rank *set*, and re-opening the same set yields the
+    /// same group id (and therefore the same cached plans).
+    pub fn group(&self, ranks: &[GpuId]) -> CommGroup {
+        let set = RankSet::new(&self.shared.topo, ranks);
+        let mut ids = self.shared.group_ids.borrow_mut();
+        let next = ids.len() as u64;
+        let id = *ids.entry(set.ranks().to_vec()).or_insert(next);
+        CommGroup { shared: Rc::clone(&self.shared), set: Arc::new(set), id }
+    }
+
+    /// The group covering every rank of the world.
+    pub fn world_group(&self) -> CommGroup {
+        let ranks: Vec<GpuId> = (0..self.shared.topo.n_gpus()).collect();
+        self.group(&ranks)
+    }
+
+    fn check_layout(&self, layout: &ParallelLayout) {
+        assert_eq!(
+            layout.n_ranks(),
+            self.shared.topo.n_gpus(),
+            "parallel layout must exactly fill the world"
+        );
+    }
+
+    /// Tensor-parallel groups of a layout (one per (pp, dp) coordinate).
+    pub fn tp_groups(&self, layout: &ParallelLayout) -> Vec<CommGroup> {
+        self.check_layout(layout);
+        layout.tp_ranks().iter().map(|r| self.group(r)).collect()
+    }
+
+    /// Data-parallel replica groups of a layout (one per (pp, tp)
+    /// coordinate).
+    pub fn dp_groups(&self, layout: &ParallelLayout) -> Vec<CommGroup> {
+        self.check_layout(layout);
+        layout.dp_ranks().iter().map(|r| self.group(r)).collect()
+    }
+
+    /// Pipeline stage-pair groups of a layout (one per stage boundary,
+    /// spanning both stages — the communicator PP SendRecv runs on). Also
+    /// the prefill→decode pair of a disaggregated serving instance.
+    pub fn pp_pairs(&self, layout: &ParallelLayout) -> Vec<CommGroup> {
+        self.check_layout(layout);
+        layout.pp_pair_ranks().iter().map(|r| self.group(r)).collect()
+    }
+}
+
+/// A communicator group: the `compile / run / time_collective /
+/// measure_busbw` surface scoped to a rank subset. Cheap to clone and to
+/// re-create; all heavyweight state lives in the shared world.
+#[derive(Clone)]
+pub struct CommGroup {
+    shared: Rc<WorldShared>,
+    set: Arc<RankSet>,
+    id: u64,
+}
+
+impl CommGroup {
+    /// The world-interned group id (part of the plan-cache key).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Member ranks, sorted ascending.
+    pub fn ranks(&self) -> &[GpuId] {
+        self.set.ranks()
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.set.len()
+    }
+
+    /// Servers hosting member ranks — the group's fault domain.
+    pub fn servers(&self) -> &[ServerId] {
+        self.set.servers()
+    }
+
+    /// The group's rank set.
+    pub fn rank_set(&self) -> &RankSet {
+        &self.set
+    }
+
+    /// Group-scoped planner input: `n` is the group's server count, `rem`
+    /// the remaining bandwidth of exactly those servers.
+    pub fn plan_input(&self) -> PlanInput {
+        self.shared.health().plan_input_for(
+            &self.shared.topo,
+            self.set.servers(),
+            self.set.max_ranks_per_server(),
+        )
+    }
+
+    /// The most degraded *group* server (global id) and its lost-bandwidth
+    /// fraction X. Failures outside the group's servers are invisible here
+    /// — that is the point of rank-scoped communicators.
+    pub fn worst_server(&self) -> (ServerId, f64) {
+        self.shared.health().worst_server_among(self.set.servers())
+    }
+
+    /// Y selection for the group's shape: Appendix-A closed form for n>2
+    /// group servers; the calibrated 2X rule for two-server groups (see
+    /// `Communicator::pick_y` history); 0 for single-server groups (their
+    /// collectives ride NVLink — there is no NIC ring to decompose).
+    pub fn pick_y(&self, x: f64) -> f64 {
+        let n = self.set.n_servers();
+        let g = self.set.max_ranks_per_server();
+        if n < 2 {
+            return 0.0;
+        }
+        if n > 2 {
+            let y = optimal_y(n, g, x);
+            if y > 0.0 {
+                return y;
+            }
+            // Below the Appendix-A threshold the decomposition still helps
+            // slightly in the fluid model thanks to duplex overlap; use a
+            // conservative Y = X (the degraded server sheds exactly its
+            // lost share).
+            return x;
+        }
+        // n == 2: the partial stage runs intra-node on NVLink (nearly free)
+        // and the tailored broadcast overlaps duplex-wise with the global
+        // ring; calibrated against the fluid simulation, the measured
+        // argmax tracks Y* ≈ 2X up to a 0.5 ceiling.
+        (2.0 * x).min(0.5)
+    }
+
+    /// Compile the group's schedule for a collective under the current
+    /// health state, memoized per failure epoch in the world's shared plan
+    /// cache. Repeated calls with identical parameters within one epoch
+    /// return the same `Arc`'d schedule without recompiling.
+    pub fn compile(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        elems: usize,
+        choice: StrategyChoice,
+    ) -> (Arc<Schedule>, Strategy) {
+        let key = PlanKey {
+            group: self.id,
+            kind,
+            bytes_per_rank,
+            elems,
+            choice,
+            epoch: self.shared.epoch.get(),
+            channels: self.shared.channels,
+        };
+        if let Some(hit) = self.shared.cache.borrow_mut().get(&key) {
+            return hit;
+        }
+        let (sched, strategy) = self.compile_uncached(kind, bytes_per_rank, elems, choice);
+        let sched = Arc::new(sched);
+        self.shared.cache.borrow_mut().insert(key, Arc::clone(&sched), strategy);
+        (sched, strategy)
+    }
+
+    /// Compile without consulting or filling the plan cache (the pure
+    /// compilation path the cache memoizes).
+    pub fn compile_uncached(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        elems: usize,
+        choice: StrategyChoice,
+    ) -> (Schedule, Strategy) {
+        let shared = &self.shared;
+        let topo = &shared.topo;
+        let health = shared.health();
+        let strategy = match choice {
+            StrategyChoice::Auto => {
+                if self.set.n_servers() < 2 {
+                    // Single-server groups ride NVLink; NIC health cannot
+                    // change their schedule.
+                    Strategy::Standard
+                } else {
+                    let input = health.plan_input_for(
+                        topo,
+                        self.set.servers(),
+                        self.set.max_ranks_per_server(),
+                    );
+                    choose_strategy(kind, &input, bytes_per_rank as f64)
+                }
+            }
+            StrategyChoice::Force(s) => s,
+            StrategyChoice::HotRepairOnly => Strategy::Standard,
+        };
+        let fp = &health.fault_plane;
+        // A failure is relevant only when it degrades a *group* server —
+        // the blast radius of rank-scoped collectives.
+        let group_degraded =
+            self.set.servers().iter().any(|&s| health.rem[s] < 1.0);
+        let routing = &shared.routing;
+        let channels = shared.channels;
+        let sched = match strategy {
+            Strategy::Standard => {
+                let base = self.base_schedule(kind, bytes_per_rank, elems);
+                if matches!(choice, StrategyChoice::HotRepairOnly) {
+                    base // dead-NIC traffic stays put; migration handles it
+                } else if !group_degraded {
+                    base
+                } else {
+                    apply_balance(topo, fp, routing, &base)
+                }
+            }
+            Strategy::Balance => {
+                let base = self.base_schedule(kind, bytes_per_rank, elems);
+                apply_balance(topo, fp, routing, &base)
+            }
+            Strategy::R2AllReduce => {
+                let (server, x) = health.worst_server_among(self.set.servers());
+                let y = self.pick_y(x);
+                r2_allreduce_schedule_for(
+                    topo,
+                    fp,
+                    routing,
+                    bytes_per_rank,
+                    elems,
+                    server,
+                    y,
+                    channels,
+                    &self.set,
+                )
+            }
+            Strategy::Recursive => recursive_allreduce_for(
+                topo,
+                fp,
+                routing,
+                bytes_per_rank,
+                elems,
+                channels,
+                &self.set,
+            ),
+        };
+        (sched, strategy)
+    }
+
+    /// The healthy-network NCCL schedule for a collective over the group's
+    /// ranks. Pipeline depths derive from the group's densest server, the
+    /// SendRecv default pattern is a ring-neighbour exchange over the
+    /// *group's* servers.
+    fn base_schedule(&self, kind: CollKind, bytes_per_rank: u64, elems: usize) -> Schedule {
+        let channels = self.shared.channels;
+        let pipeline = self.set.max_ranks_per_server().max(1);
+        match kind {
+            CollKind::AllReduce => {
+                let spec = rings_for_ranks(&self.set, channels);
+                ring_allreduce(&spec, bytes_per_rank, elems)
+            }
+            CollKind::ReduceScatter => {
+                let spec = rings_for_ranks(&self.set, channels);
+                ring_reduce_scatter(&spec, bytes_per_rank, elems)
+            }
+            CollKind::AllGather => {
+                let spec = rings_for_ranks(&self.set, channels);
+                ring_all_gather(&spec, bytes_per_rank, elems)
+            }
+            CollKind::Broadcast => {
+                let spec = rings_for_ranks(&self.set, channels);
+                ring_broadcast(&spec, bytes_per_rank, elems, 0, pipeline)
+            }
+            CollKind::Reduce => crate::collectives::tree::tree_reduce(
+                self.set.ranks(),
+                bytes_per_rank,
+                elems,
+                pipeline,
+            ),
+            CollKind::SendRecv => {
+                let pairs = p2p::ring_exchange_pairs_for(&self.set);
+                p2p::sendrecv(&pairs, bytes_per_rank, channels)
+            }
+            CollKind::AllToAll => p2p::all_to_all(
+                self.set.ranks(),
+                bytes_per_rank / self.set.len() as u64,
+                channels,
+            ),
+        }
+    }
+
+    /// Run a group collective with optional mid-flight fault injections.
+    pub fn run(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        choice: StrategyChoice,
+        script: Vec<FaultEvent>,
+        plane: &mut dyn DataPlane,
+        elems: usize,
+    ) -> ExecReport {
+        let (sched, _strategy) = self.compile(kind, bytes_per_rank, elems, choice);
+        let shared = &self.shared;
+        Executor::new(
+            &shared.topo,
+            &shared.timing,
+            Arc::clone(&shared.routing),
+            shared.opts.borrow().clone(),
+            script,
+        )
+        .with_initial_faults(&shared.failures.borrow())
+        .run(&sched, plane)
+    }
+
+    /// Timing-only convenience: completion time of one group collective.
+    pub fn time_collective(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        choice: StrategyChoice,
+    ) -> Option<f64> {
+        let rep = self.run(kind, bytes_per_rank, choice, vec![], &mut PhantomPlane, 0);
+        rep.completion
+    }
+
+    /// Bus bandwidth of one group collective under the current health
+    /// state, normalized to the *group's* rank count.
+    pub fn measure_busbw(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        choice: StrategyChoice,
+    ) -> Option<f64> {
+        self.time_collective(kind, bytes_per_rank, choice)
+            .map(|t| busbw(kind, self.set.len(), bytes_per_rank, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::RealPlane;
+
+    fn world() -> CommWorld {
+        CommWorld::new(&Preset::testbed(), 8)
+    }
+
+    #[test]
+    fn layout_tp8_pp2_maps_to_servers() {
+        let layout = ParallelLayout::new(8, 1, 2);
+        assert_eq!(layout.n_ranks(), 16);
+        let tp = layout.tp_ranks();
+        assert_eq!(tp, vec![(0..8).collect::<Vec<_>>(), (8..16).collect::<Vec<_>>()]);
+        let pairs = layout.pp_pair_ranks();
+        assert_eq!(pairs.len(), 1);
+        let mut p = pairs[0].clone();
+        p.sort_unstable();
+        assert_eq!(p, (0..16).collect::<Vec<_>>());
+        // DP=1: replica groups are singletons.
+        assert!(layout.dp_ranks().iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
+    fn layout_dp16_is_one_replica_group() {
+        let layout = ParallelLayout::new(1, 16, 1);
+        let dp = layout.dp_ranks();
+        assert_eq!(dp.len(), 1);
+        assert_eq!(dp[0], (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn layout_mixed_coordinates_are_disjoint_and_cover() {
+        let layout = ParallelLayout::new(4, 2, 2);
+        for groups in [layout.tp_ranks(), layout.dp_ranks()] {
+            let mut all: Vec<usize> = groups.concat();
+            all.sort_unstable();
+            assert_eq!(all, (0..16).collect::<Vec<_>>(), "groups must partition the world");
+        }
+        // Stage-pair groups cover both stages.
+        let pairs = layout.pp_pair_ranks();
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].len(), 16);
+    }
+
+    #[test]
+    fn group_ids_intern_by_rank_set() {
+        let w = world();
+        let a = w.group(&[0, 1, 2]);
+        let b = w.group(&[2, 0, 1]); // order irrelevant
+        let c = w.group(&[0, 1, 3]);
+        assert_eq!(a.id(), b.id());
+        assert_ne!(a.id(), c.id());
+        assert_eq!(w.world_group().id(), w.world_group().id());
+    }
+
+    #[test]
+    fn groups_share_the_plan_cache_with_distinct_keys() {
+        let w = world();
+        let g0 = w.group(&(0..8).collect::<Vec<_>>());
+        let g1 = w.group(&(8..16).collect::<Vec<_>>());
+        let (s0, _) = g0.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        let (s1, _) = g1.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert_eq!(w.plan_cache_stats(), (0, 2), "distinct groups must not collide");
+        assert!(!Arc::ptr_eq(&s0, &s1));
+        let (s0b, _) = g0.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(Arc::ptr_eq(&s0, &s0b));
+        assert_eq!(w.plan_cache_stats(), (1, 2));
+        // Re-opening the same rank set hits the same entries.
+        let g0_again = w.group(&(0..8).collect::<Vec<_>>());
+        let (s0c, _) = g0_again.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(Arc::ptr_eq(&s0, &s0c));
+    }
+
+    #[test]
+    fn tp_group_schedules_stay_intra_server() {
+        let w = world();
+        let layout = ParallelLayout::new(8, 1, 2);
+        for (i, g) in w.tp_groups(&layout).iter().enumerate() {
+            let (sched, strat) = g.compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+            assert_eq!(strat, Strategy::Standard);
+            assert!(!sched.is_empty());
+            for grp in &sched.groups {
+                for sub in &grp.subs {
+                    assert_eq!(sub.src / 8, i, "src {} off-server", sub.src);
+                    assert_eq!(sub.dst / 8, i, "dst {} off-server", sub.dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pp_pair_sendrecv_pairs_stage_ranks() {
+        let w = world();
+        let layout = ParallelLayout::new(8, 1, 2);
+        let pairs = w.pp_pairs(&layout);
+        assert_eq!(pairs.len(), 1);
+        let (sched, _) = pairs[0].compile(CollKind::SendRecv, 1 << 20, 0, StrategyChoice::Auto);
+        // Exactly the bidirectional t ↔ t+8 boundary exchange.
+        for grp in &sched.groups {
+            for sub in &grp.subs {
+                assert_eq!(sub.src % 8, sub.dst % 8, "{}->{}", sub.src, sub.dst);
+                assert_ne!(sub.src / 8, sub.dst / 8, "boundary transfer must cross servers");
+            }
+        }
+    }
+
+    #[test]
+    fn failure_outside_group_leaves_strategy_standard() {
+        let mut wd = world();
+        // Failures land on server-0 NICs only; server 1 untouched.
+        wd.note_failure(0, FaultAction::FailNic);
+        wd.note_failure(3, FaultAction::Degrade(0.5));
+        let server1 = wd.group(&(8..16).collect::<Vec<_>>());
+        let (_, strat) = server1.compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+        assert_eq!(strat, Strategy::Standard, "server-1 group must not see server-0 faults");
+        assert_eq!(server1.worst_server(), (1, 0.0));
+        assert_eq!(server1.plan_input().degraded_servers(), 0);
+        // The world group does see them.
+        let (_, wstrat) =
+            wd.world_group().compile(CollKind::AllGather, 1 << 22, 0, StrategyChoice::Auto);
+        assert_eq!(wstrat, Strategy::Balance);
+    }
+
+    #[test]
+    fn group_allreduce_dataplane_exact() {
+        // A cross-server DP group of 4 ranks computes exactly its own sum.
+        let w = world();
+        let ranks = vec![1, 5, 9, 13];
+        let g = w.group(&ranks);
+        let elems = 8 * 4 * 8; // divisible by channels(8) × n(4)
+        let mut plane = RealPlane::new(16, elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce_over(&ranks);
+        let untouched = plane.ranks[0].clone();
+        let rep = g.run(
+            CollKind::AllReduce,
+            (elems * 4) as u64,
+            StrategyChoice::Auto,
+            vec![],
+            &mut plane,
+            elems,
+        );
+        assert!(!rep.crashed);
+        plane.assert_ranks_equal(&ranks, &expected);
+        assert_eq!(plane.ranks[0], untouched);
+    }
+
+    #[test]
+    fn group_collectives_complete_under_group_failure() {
+        let mut wd = world();
+        wd.note_failure(0, FaultAction::FailNic);
+        let layout = ParallelLayout::new(8, 1, 2);
+        let boundary = wd.pp_pairs(&layout).remove(0);
+        for kind in [
+            CollKind::AllReduce,
+            CollKind::ReduceScatter,
+            CollKind::AllGather,
+            CollKind::Broadcast,
+            CollKind::Reduce,
+            CollKind::SendRecv,
+            CollKind::AllToAll,
+        ] {
+            let t = boundary.time_collective(kind, 1 << 20, StrategyChoice::Auto);
+            assert!(t.is_some(), "{kind:?} failed under group failure");
+        }
+        // Forced decomposition strategies also compile for subset groups.
+        let sub = wd.group(&[0, 1, 8, 9]);
+        for choice in [
+            StrategyChoice::Force(Strategy::R2AllReduce),
+            StrategyChoice::Force(Strategy::Recursive),
+        ] {
+            let (sched, _) = sub.compile(CollKind::AllReduce, 1 << 20, 0, choice);
+            sched.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn singleton_group_is_trivially_complete() {
+        let w = world();
+        let solo = w.group(&[5]);
+        let (sched, strat) = solo.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(sched.is_empty());
+        assert_eq!(strat, Strategy::Standard);
+        let t = solo.time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto);
+        assert_eq!(t, Some(0.0));
+    }
+
+    #[test]
+    fn epoch_mutations_via_world_are_seen_by_live_groups() {
+        let mut wd = world();
+        let g = wd.group(&(0..16).collect::<Vec<_>>());
+        let (_, s0) = g.compile(CollKind::AllGather, 1 << 22, 0, StrategyChoice::Auto);
+        assert_eq!(s0, Strategy::Standard);
+        wd.note_failure(0, FaultAction::FailNic);
+        // The *existing* handle sees the new epoch.
+        let (_, s1) = g.compile(CollKind::AllGather, 1 << 22, 0, StrategyChoice::Auto);
+        assert_eq!(s1, Strategy::Balance);
+    }
+}

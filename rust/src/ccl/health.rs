@@ -77,6 +77,19 @@ impl HealthState {
             .unwrap_or((0, 0.0))
     }
 
+    /// The most degraded server *among the given servers* (a process
+    /// group's blast-radius query): the fault domain of a group collective
+    /// is its own servers' NICs, not the world's. Returns the global server
+    /// id and its lost-bandwidth fraction X. Over all servers in ascending
+    /// order this is exactly [`HealthState::worst_server`].
+    pub fn worst_server_among(&self, servers: &[usize]) -> (usize, f64) {
+        servers
+            .iter()
+            .map(|&s| (s, 1.0 - self.rem[s]))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap_or((0, 0.0))
+    }
+
     /// Number of servers below full bandwidth.
     pub fn degraded_servers(&self) -> usize {
         self.rem.iter().filter(|&&r| r < 1.0).count()
@@ -89,6 +102,27 @@ impl HealthState {
             g: topo.cfg.gpus_per_server,
             server_bw: topo.cfg.nic_bw * topo.cfg.nics_per_server as f64,
             rem: self.rem.clone(),
+            alpha: topo.cfg.link_latency,
+        }
+    }
+
+    /// Planner input restricted to a group's servers: `n` is the group's
+    /// server count, `g` its (maximum) ranks per server and `rem` the
+    /// remaining-bandwidth vector of exactly those servers, so the α-β
+    /// strategy choice sizes its rings — and the failure blast radius —
+    /// over the group, not the world. For the world rank set this reduces
+    /// to [`HealthState::plan_input`].
+    pub fn plan_input_for(
+        &self,
+        topo: &Topology,
+        servers: &[usize],
+        ranks_per_server: usize,
+    ) -> PlanInput {
+        PlanInput {
+            n: servers.len(),
+            g: ranks_per_server,
+            server_bw: topo.cfg.nic_bw * topo.cfg.nics_per_server as f64,
+            rem: servers.iter().map(|&s| self.rem[s]).collect(),
             alpha: topo.cfg.link_latency,
         }
     }
@@ -139,6 +173,31 @@ mod tests {
         assert_eq!(s, 0);
         assert!(x.is_finite() && x > 0.0 && x <= 1.0, "x={x}");
         assert!(h.rem.iter().all(|r| r.is_finite()));
+    }
+
+    #[test]
+    fn group_scoped_queries_see_only_group_servers() {
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        // Server 0 loses a NIC; servers 1..4 healthy.
+        let h = HealthState::build(&t, &[(0, FaultAction::FailNic)], 1);
+        // World-scope: server 0 is the worst.
+        assert_eq!(h.worst_server(), h.worst_server_among(&[0, 1, 2, 3]));
+        assert_eq!(h.worst_server().0, 0);
+        // A group on servers {2, 3} does not see the failure at all.
+        let (s, x) = h.worst_server_among(&[2, 3]);
+        assert_eq!(s, 2);
+        assert_eq!(x, 0.0);
+        let input = h.plan_input_for(&t, &[2, 3], 8);
+        assert_eq!(input.n, 2);
+        assert_eq!(input.rem, vec![1.0, 1.0]);
+        assert_eq!(input.degraded_servers(), 0);
+        // A group containing server 0 sees exactly its share.
+        let input = h.plan_input_for(&t, &[0, 1], 4);
+        assert_eq!(input.g, 4);
+        assert!((input.rem[0] - 0.875).abs() < 1e-12);
+        // Full-scope reduction.
+        let full = h.plan_input_for(&t, &[0, 1, 2, 3], 8);
+        assert_eq!(full.rem, h.plan_input(&t).rem);
     }
 
     #[test]

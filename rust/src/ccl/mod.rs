@@ -1,52 +1,53 @@
 //! The public communicator API — R²CCL's equivalent of
-//! `ncclCommInitRank` + `ncclAllReduce` + transparent fault handling.
+//! `ncclCommInitRank` + `ncclAllReduce` + transparent fault handling,
+//! redesigned around process groups.
 //!
-//! A [`Communicator`] owns the topology, timing budgets, the health record
-//! of every NIC, and the α-β planner. Each collective call compiles the
-//! appropriate schedule for the *current* health state (Standard /
-//! Balance / R²-AllReduce / Recursive per Table 1 + §8.4), executes it on
-//! the fluid fabric, and hot-repairs any failures injected mid-operation.
+//! * [`CommWorld`] owns the topology, timing budgets, channel↔NIC routing,
+//!   the health record of every NIC (with its monotonic failure epoch) and
+//!   the shared [`PlanCache`].
+//! * [`CommGroup`] — created via [`CommWorld::group`] or the
+//!   [`ParallelLayout`] helpers (`tp_groups` / `pp_pairs` / `dp_groups`) —
+//!   exposes `compile / run / time_collective / measure_busbw` scoped to a
+//!   rank subset: exactly how TP/PP/DP traffic runs on real clusters, where
+//!   each collective has its own NCCL communicator but all share the NICs
+//!   and the fault domain.
 //!
-//! Plan compilation is a subsystem of its own (this module plus
-//! [`health`] and [`plan_cache`]):
+//! Plan compilation remains a subsystem of its own ([`health`] +
+//! [`plan_cache`]):
 //! * every health mutation (`note_failure` / `clear_failures`) bumps a
 //!   monotonically increasing **failure epoch**;
 //! * a [`HealthState`] snapshot (fault plane + per-server remaining
-//!   bandwidth) is built once per epoch and shared by `plan_input`,
-//!   `worst_server` and `compile` — the seed rebuilt all of it, plus a
-//!   fluid engine, on every call;
-//! * compiled `(Schedule, Strategy)` pairs are memoized in a [`PlanCache`]
-//!   keyed by `(kind, bytes, elems, choice, epoch, channels)`, so the
-//!   per-iteration hot path of the workload simulators is one hash lookup;
-//! * the [`ChannelRouting`] is built once per communicator (it depends
-//!   only on the immutable topology and channel count) instead of once per
-//!   compile *and* once per run.
+//!   bandwidth) is built once per epoch and shared by every group's
+//!   `plan_input`, `worst_server` and `compile`;
+//! * compiled `(Schedule, Strategy)` pairs are memoized in the world's
+//!   [`PlanCache`] keyed by `(group, kind, bytes, elems, choice, epoch,
+//!   channels)`, so the per-iteration hot path of the workload simulators
+//!   is one hash lookup per group collective;
+//! * the [`ChannelRouting`] is built once per world and shared by `Arc`
+//!   with every executor run — group schedules read only the rows of their
+//!   member servers.
 //!
-//! The compile path is scale-generic: ring/tree pipeline depths derive
-//! from `gpus_per_server` and the default SendRecv pattern is a
-//! ring-neighbour exchange over *all* servers, so the same communicator
-//! drives the 2×8 testbed and the SimAI topologies (4–128 servers).
+//! [`Communicator`] survives as a deprecated thin alias over the world
+//! group for one release; new code should build a [`CommWorld`] and issue
+//! collectives on groups.
+//!
+//! [`ChannelRouting`]: crate::collectives::exec::ChannelRouting
 
+pub mod group;
 pub mod health;
 pub mod plan_cache;
 
-use std::cell::RefCell;
 use std::sync::Arc;
 
 use crate::collectives::exec::{
     ChannelRouting, ExecOptions, ExecReport, Executor, FaultAction, FaultEvent,
 };
-use crate::collectives::{
-    busbw, nccl_rings, p2p, ring_all_gather, ring_allreduce, ring_broadcast,
-    ring_reduce_scatter, CollKind, DataPlane, PhantomPlane, Schedule,
-};
+use crate::collectives::{CollKind, DataPlane, PhantomPlane, Schedule};
 use crate::config::{Preset, TimingConfig};
-use crate::schedule::{
-    apply_balance, choose_strategy, optimal_y, r2_allreduce_schedule, recursive_allreduce,
-    PlanInput, Strategy,
-};
+use crate::schedule::{PlanInput, Strategy};
 use crate::topology::{NicId, Topology};
 
+pub use group::{CommGroup, CommWorld, ParallelLayout};
 pub use health::{clamp_degrade_factor, sanitize_action, HealthState, MIN_DEGRADE_FACTOR};
 pub use plan_cache::{PlanCache, PlanKey, DEFAULT_PLAN_CACHE_CAPACITY};
 
@@ -63,142 +64,118 @@ pub enum StrategyChoice {
     HotRepairOnly,
 }
 
-/// The communicator.
-///
-/// `topo` is read-only after construction: the channel routing, the plan
-/// cache and the health snapshot are all derived from it (and from the
-/// channel count, which is private for the same reason) — rebuild the
-/// communicator to change the cluster shape. `timing`/`opts` only affect
-/// execution, never compiled plans, so they stay freely mutable.
+/// The legacy world-scope communicator: a thin wrapper over
+/// [`CommWorld`] + its world [`CommGroup`], kept for one release so
+/// existing callers compile. Every call delegates to the world group, so
+/// behaviour (including plan-cache hits and epochs) is identical to
+/// `CommWorld::world_group()`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use CommWorld + CommGroup (world.group(..) / world.world_group())"
+)]
 pub struct Communicator {
+    /// Read-only topology (kept as a public field for API compatibility;
+    /// the authoritative copy lives in the world).
     pub topo: Topology,
     pub timing: TimingConfig,
-    channels: usize,
     pub opts: ExecOptions,
-    /// Failures known *before* a collective starts (already detected and
-    /// broadcast via OOB); the planner schedules around them.
-    known_failures: Vec<(NicId, FaultAction)>,
-    /// Failure epoch: bumped on every health mutation. Keys the health
-    /// snapshot and the plan cache.
-    epoch: u64,
-    /// Channel↔NIC routing; immutable per communicator, built once.
-    routing: ChannelRouting,
-    /// Health snapshot of the current epoch (lazily built).
-    health: RefCell<Option<Arc<HealthState>>>,
-    /// Memoized compiled plans.
-    cache: RefCell<PlanCache>,
+    world: CommWorld,
+    group: CommGroup,
+    /// Mirror of the world's failure list, so `known_failures` can keep
+    /// returning a slice.
+    failures: Vec<(NicId, FaultAction)>,
 }
 
+#[allow(deprecated)]
 impl Communicator {
     pub fn new(preset: &Preset, channels: usize) -> Self {
-        let topo = Topology::build(&preset.topo);
-        let routing = ChannelRouting::default_rails(&topo, channels);
+        let world = CommWorld::new(preset, channels);
+        let group = world.world_group();
         Communicator {
-            topo,
+            topo: world.topo().clone(),
             timing: preset.timing.clone(),
-            channels,
             opts: ExecOptions::default(),
-            known_failures: Vec::new(),
-            epoch: 0,
-            routing,
-            health: RefCell::new(None),
-            cache: RefCell::new(PlanCache::default()),
+            world,
+            group,
+            failures: Vec::new(),
         }
     }
 
     pub fn with_opts(mut self, opts: ExecOptions) -> Self {
+        self.world.set_opts(opts.clone());
         self.opts = opts;
         self
     }
 
-    /// Record a failure discovered before this collective (e.g. by the
-    /// periodic reprobe or a previous collective's detection). Malformed
-    /// `Degrade` factors (NaN, out of range) are clamped here, at the API
-    /// boundary, so no NaN ever reaches the planner or the engine.
-    /// Re-reporting a standing failure is a no-op — the epoch (and with it
-    /// the plan cache) only moves when the health state actually changes,
-    /// so periodic reprobes don't defeat the cache.
+    /// The underlying world (migration path to the new API).
+    pub fn world(&self) -> &CommWorld {
+        &self.world
+    }
+
+    /// The world-scope group this alias delegates to.
+    pub fn world_group(&self) -> &CommGroup {
+        &self.group
+    }
+
+    /// Record a failure discovered before this collective; see
+    /// [`CommWorld::note_failure`] for the semantics (sanitization, epoch
+    /// bumping, reprobe-friendly dedup).
     pub fn note_failure(&mut self, nic: NicId, action: FaultAction) {
-        let action = sanitize_action(action);
-        let before = self.known_failures.clone();
-        self.known_failures.retain(|(n, _)| *n != nic);
-        if !matches!(action, FaultAction::Repair) {
-            self.known_failures.push((nic, action));
-        }
-        if self.known_failures != before {
-            self.bump_epoch();
-        }
+        self.world.note_failure(nic, action);
+        self.failures = self.world.known_failures();
     }
 
     pub fn clear_failures(&mut self) {
-        if !self.known_failures.is_empty() {
-            self.known_failures.clear();
-            self.bump_epoch();
-        }
+        self.world.clear_failures();
+        self.failures.clear();
     }
 
     pub fn known_failures(&self) -> &[(NicId, FaultAction)] {
-        &self.known_failures
+        &self.failures
     }
 
     /// The current failure epoch.
     pub fn epoch(&self) -> u64 {
-        self.epoch
+        self.world.epoch()
     }
 
     /// The communicator's channel↔NIC routing table.
     pub fn routing(&self) -> &ChannelRouting {
-        &self.routing
+        self.world.routing()
     }
 
     /// Number of channels collectives are compiled for.
     pub fn channels(&self) -> usize {
-        self.channels
-    }
-
-    fn bump_epoch(&mut self) {
-        self.epoch += 1;
-        *self.health.borrow_mut() = None;
+        self.world.channels()
     }
 
     /// Health snapshot of the current epoch, built at most once per epoch.
     pub fn health(&self) -> Arc<HealthState> {
-        let mut slot = self.health.borrow_mut();
-        if let Some(h) = slot.as_ref() {
-            if h.epoch == self.epoch {
-                return Arc::clone(h);
-            }
-        }
-        let h = Arc::new(HealthState::build(&self.topo, &self.known_failures, self.epoch));
-        *slot = Some(Arc::clone(&h));
-        h
+        self.world.health()
     }
 
     /// Planner input for the current health state.
     pub fn plan_input(&self) -> PlanInput {
-        self.health().plan_input(&self.topo)
+        self.world.plan_input()
     }
 
     /// The most degraded server and its lost-bandwidth fraction X.
     pub fn worst_server(&self) -> (usize, f64) {
-        self.health().worst_server()
+        self.world.worst_server()
     }
 
     /// Plan-cache statistics: `(hits, misses)`.
     pub fn plan_cache_stats(&self) -> (u64, u64) {
-        let cache = self.cache.borrow();
-        (cache.hits(), cache.misses())
+        self.world.plan_cache_stats()
     }
 
     /// Number of plans currently cached.
     pub fn plan_cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        self.world.plan_cache_len()
     }
 
-    /// Compile the schedule for a collective under the current health
-    /// state and chosen strategy, memoized per failure epoch. Repeated
-    /// calls with identical parameters within one epoch return the same
-    /// `Arc`'d schedule without recompiling.
+    /// Compile the schedule for a world-scope collective; see
+    /// [`CommGroup::compile`].
     pub fn compile(
         &self,
         kind: CollKind,
@@ -206,26 +183,10 @@ impl Communicator {
         elems: usize,
         choice: StrategyChoice,
     ) -> (Arc<Schedule>, Strategy) {
-        let key = PlanKey {
-            kind,
-            bytes_per_rank,
-            elems,
-            choice,
-            epoch: self.epoch,
-            channels: self.channels,
-        };
-        if let Some(hit) = self.cache.borrow_mut().get(&key) {
-            return hit;
-        }
-        let (sched, strategy) = self.compile_uncached(kind, bytes_per_rank, elems, choice);
-        let sched = Arc::new(sched);
-        self.cache.borrow_mut().insert(key, Arc::clone(&sched), strategy);
-        (sched, strategy)
+        self.group.compile(kind, bytes_per_rank, elems, choice)
     }
 
-    /// Compile without consulting or filling the plan cache. This is the
-    /// pure compilation path (and what the cache memoizes); the perf bench
-    /// uses it to measure the seed's per-call rebuild cost.
+    /// Compile without consulting or filling the plan cache.
     pub fn compile_uncached(
         &self,
         kind: CollKind,
@@ -233,140 +194,18 @@ impl Communicator {
         elems: usize,
         choice: StrategyChoice,
     ) -> (Schedule, Strategy) {
-        let health = self.health();
-        let strategy = match choice {
-            StrategyChoice::Auto => {
-                let input = health.plan_input(&self.topo);
-                choose_strategy(kind, &input, bytes_per_rank as f64)
-            }
-            StrategyChoice::Force(s) => s,
-            StrategyChoice::HotRepairOnly => Strategy::Standard,
-        };
-        let fp = &health.fault_plane;
-        let sched = match strategy {
-            // The base NCCL schedule is only built on the branches that use
-            // it (the seed built it unconditionally, even when the R²
-            // decompositions replaced it outright).
-            Strategy::Standard => {
-                let base = self.base_schedule(kind, bytes_per_rank, elems);
-                if matches!(choice, StrategyChoice::HotRepairOnly) {
-                    base // dead-NIC traffic stays put; migration handles it
-                } else if self.known_failures.is_empty() {
-                    base
-                } else {
-                    apply_balance(&self.topo, fp, &self.routing, &base)
-                }
-            }
-            Strategy::Balance => {
-                let base = self.base_schedule(kind, bytes_per_rank, elems);
-                apply_balance(&self.topo, fp, &self.routing, &base)
-            }
-            Strategy::R2AllReduce => {
-                let (server, x) = health.worst_server();
-                let y = self.pick_y(x);
-                r2_allreduce_schedule(
-                    &self.topo,
-                    fp,
-                    &self.routing,
-                    bytes_per_rank,
-                    elems,
-                    server,
-                    y,
-                    self.channels,
-                )
-            }
-            Strategy::Recursive => recursive_allreduce(
-                &self.topo,
-                fp,
-                &self.routing,
-                bytes_per_rank,
-                elems,
-                self.channels,
-            ),
-        };
-        (sched, strategy)
+        self.group.compile_uncached(kind, bytes_per_rank, elems, choice)
     }
 
-    /// Chunk-pipelining depth of broadcast/tree schedules: one chunk per
-    /// GPU of a server, so the intra-server NVLink chain stays saturated.
-    /// (The seed hardcoded the testbed's `8`.)
-    fn pipeline_depth(&self) -> usize {
-        self.topo.cfg.gpus_per_server.max(1)
-    }
-
-    /// The healthy-network NCCL schedule for a collective, generic in the
-    /// server count.
-    fn base_schedule(&self, kind: CollKind, bytes_per_rank: u64, elems: usize) -> Schedule {
-        let pipeline = self.pipeline_depth();
-        match kind {
-            CollKind::AllReduce => {
-                let spec = nccl_rings(&self.topo, self.channels);
-                ring_allreduce(&spec, bytes_per_rank, elems)
-            }
-            CollKind::ReduceScatter => {
-                let spec = nccl_rings(&self.topo, self.channels);
-                ring_reduce_scatter(&spec, bytes_per_rank, elems)
-            }
-            CollKind::AllGather => {
-                let spec = nccl_rings(&self.topo, self.channels);
-                ring_all_gather(&spec, bytes_per_rank, elems)
-            }
-            CollKind::Broadcast => {
-                let spec = nccl_rings(&self.topo, self.channels);
-                ring_broadcast(&spec, bytes_per_rank, elems, 0, pipeline)
-            }
-            CollKind::Reduce => {
-                let ranks: Vec<usize> = (0..self.topo.n_gpus()).collect();
-                crate::collectives::tree::tree_reduce(&ranks, bytes_per_rank, elems, pipeline)
-            }
-            CollKind::SendRecv => {
-                // Default pattern: GPU i of server s ↔ GPU i of server s+1,
-                // ring-wrapped over all servers.
-                let pairs = p2p::ring_exchange_pairs(
-                    self.topo.n_servers(),
-                    self.topo.cfg.gpus_per_server,
-                );
-                p2p::sendrecv(&pairs, bytes_per_rank, self.channels)
-            }
-            CollKind::AllToAll => {
-                let ranks: Vec<usize> = (0..self.topo.n_gpus()).collect();
-                p2p::all_to_all(
-                    &ranks,
-                    bytes_per_rank / self.topo.n_gpus() as u64,
-                    self.channels,
-                )
-            }
-        }
-    }
-
-    /// Y selection: Appendix-A closed form for n>2; for two-server
-    /// clusters the partial "ring" is intra-node NVLink (nearly free), so a
-    /// larger Y wins — the planner sweeps a small grid on the hierarchical
-    /// model (§8.4's machine-specific α-β adaptation).
+    /// Y selection for the world's shape; see [`CommGroup::pick_y`].
     pub fn pick_y(&self, x: f64) -> f64 {
-        let n = self.topo.n_servers();
-        let g = self.topo.cfg.gpus_per_server;
-        if n > 2 {
-            let y = optimal_y(n, g, x);
-            if y > 0.0 {
-                return y;
-            }
-            // Below the Appendix-A threshold the decomposition still helps
-            // slightly in the fluid model thanks to duplex overlap; use a
-            // conservative Y = X (the degraded server sheds exactly its
-            // lost share).
-            return x;
-        }
-        // n == 2: the partial stage runs intra-node on NVLink (nearly free)
-        // and the tailored broadcast overlaps duplex-wise with the global
-        // ring, so the optimum sits well above the Appendix-A serial
-        // model's. Calibrated against the fluid simulation (see
-        // EXPERIMENTS.md §Perf, Y-sweep): the measured argmax tracks
-        // Y* ≈ 2X up to a 0.5 ceiling across X ∈ {1/8, 1/4, 1/2}.
-        (2.0 * x).min(0.5)
+        self.group.pick_y(x)
     }
 
-    /// Run a collective with optional mid-flight fault injections.
+    /// Run a collective with optional mid-flight fault injections. Honors
+    /// the (public, mutable) `timing` and `opts` fields for compatibility,
+    /// and mirrors `opts` into the world so a subsequent
+    /// `world_group().run(..)` executes with the same options.
     pub fn run(
         &self,
         kind: CollKind,
@@ -376,9 +215,10 @@ impl Communicator {
         plane: &mut dyn DataPlane,
         elems: usize,
     ) -> ExecReport {
+        self.world.set_opts(self.opts.clone());
         let (sched, _strategy) = self.compile(kind, bytes_per_rank, elems, choice);
-        Executor::new(&self.topo, &self.timing, self.routing.clone(), self.opts.clone(), script)
-            .with_initial_faults(&self.known_failures)
+        Executor::new(&self.topo, &self.timing, self.world.routing_arc(), self.opts.clone(), script)
+            .with_initial_faults(&self.failures)
             .run(&sched, plane)
     }
 
@@ -401,11 +241,12 @@ impl Communicator {
         choice: StrategyChoice,
     ) -> Option<f64> {
         self.time_collective(kind, bytes_per_rank, choice)
-            .map(|t| busbw(kind, self.topo.n_gpus(), bytes_per_rank, t))
+            .map(|t| crate::collectives::busbw(kind, self.topo.n_gpus(), bytes_per_rank, t))
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::config::Preset;
@@ -604,5 +445,18 @@ mod tests {
         let (sched, _) = c.compile(CollKind::Broadcast, 1 << 16, 0, StrategyChoice::Auto);
         let n = c.topo.n_gpus();
         assert_eq!(sched.len(), 2 * (n - 1) * 4);
+    }
+
+    #[test]
+    fn alias_matches_world_group_bit_for_bit() {
+        // The deprecated alias must stay a *thin* wrapper: same plans, same
+        // strategies, same cache (its compile delegates to the world group).
+        let mut c = comm();
+        c.note_failure(0, FaultAction::FailNic);
+        let (via_alias, s1) = c.compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+        let (via_group, s2) =
+            c.world_group().compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+        assert_eq!(s1, s2);
+        assert!(Arc::ptr_eq(&via_alias, &via_group), "alias must share the cached plan");
     }
 }

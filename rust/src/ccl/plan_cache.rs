@@ -17,11 +17,15 @@ use crate::schedule::Strategy;
 
 use super::StrategyChoice;
 
-/// Cache key: everything `Communicator::compile` depends on besides the
-/// topology and channel routing, which are immutable per communicator
+/// Cache key: everything `CommGroup::compile` depends on besides the
+/// topology and channel routing, which are immutable per world
 /// (`channels` is included anyway so the key stays self-describing).
+/// `group` is the world-interned id of the group's rank set, so every
+/// process group caches its plans independently while sharing one table —
+/// two groups over the same rank set share entries by construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PlanKey {
+    pub group: u64,
     pub kind: CollKind,
     pub bytes_per_rank: u64,
     pub elems: usize,
@@ -116,6 +120,7 @@ mod tests {
 
     fn key(epoch: u64, bytes: u64) -> PlanKey {
         PlanKey {
+            group: 0,
             kind: CollKind::AllReduce,
             bytes_per_rank: bytes,
             elems: 0,
@@ -147,6 +152,17 @@ mod tests {
         c.insert(key(0, 1024), plan(), Strategy::Standard);
         assert!(c.get(&key(1, 1024)).is_none());
         assert!(c.get(&key(0, 1024)).is_some());
+    }
+
+    #[test]
+    fn group_is_part_of_the_key() {
+        let mut c = PlanCache::new(4);
+        c.insert(key(0, 1024), plan(), Strategy::Standard);
+        let other_group = PlanKey { group: 7, ..key(0, 1024) };
+        assert!(c.get(&other_group).is_none());
+        c.insert(other_group, plan(), Strategy::Balance);
+        assert_eq!(c.get(&key(0, 1024)).unwrap().1, Strategy::Standard);
+        assert_eq!(c.get(&other_group).unwrap().1, Strategy::Balance);
     }
 
     #[test]

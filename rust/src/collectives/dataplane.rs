@@ -60,11 +60,32 @@ impl RealPlane {
         out
     }
 
+    /// The AllReduce ground truth over a *subset* of ranks (the oracle of
+    /// group-scoped collectives): elementwise sum over exactly `ranks`.
+    pub fn expected_allreduce_over(&self, ranks: &[usize]) -> Vec<f32> {
+        let elems = self.ranks[0].len();
+        let mut out = vec![0.0f32; elems];
+        for &r in ranks {
+            for (o, v) in out.iter_mut().zip(self.ranks[r].iter()) {
+                *o += *v;
+            }
+        }
+        out
+    }
+
     /// Assert every rank holds `expected` exactly (bitwise would be too
     /// strict across reassociation; we require exact f32 equality because
     /// every strategy applies reductions in the same ring order).
     pub fn assert_all_equal(&self, expected: &[f32]) {
-        for (r, buf) in self.ranks.iter().enumerate() {
+        let ranks: Vec<usize> = (0..self.ranks.len()).collect();
+        self.assert_ranks_equal(&ranks, expected);
+    }
+
+    /// Assert that the given ranks hold `expected` (group-scoped check:
+    /// non-member buffers are intentionally left alone).
+    pub fn assert_ranks_equal(&self, ranks: &[usize], expected: &[f32]) {
+        for &r in ranks {
+            let buf = &self.ranks[r];
             assert_eq!(buf.len(), expected.len(), "rank {r} length");
             for (i, (a, b)) in buf.iter().zip(expected.iter()).enumerate() {
                 assert!(

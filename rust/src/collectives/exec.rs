@@ -9,6 +9,7 @@
 //! schedule level, and then execute here unchanged.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::config::TimingConfig;
 use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
@@ -131,8 +132,11 @@ pub struct Executor<'a> {
     topo: &'a Topology,
     timing: &'a TimingConfig,
     opts: ExecOptions,
-    routing: ChannelRouting,
-    default_routing: ChannelRouting,
+    /// Working copy of the routing table, materialized lazily (copy on
+    /// write) the first time a migration rewrites an entry. Failure-free
+    /// runs never clone the shared table.
+    routing: Option<ChannelRouting>,
+    default_routing: Arc<ChannelRouting>,
     faults: FaultPlane,
     engine: Engine,
     script: Vec<FaultEvent>,
@@ -143,10 +147,13 @@ pub struct Executor<'a> {
 }
 
 impl<'a> Executor<'a> {
+    /// Build an executor. `routing` is shared by `Arc` — pass
+    /// `Arc::clone(..)` of a communicator's table (no deep copy) or a bare
+    /// `ChannelRouting` for one-off runs.
     pub fn new(
         topo: &'a Topology,
         timing: &'a TimingConfig,
-        routing: ChannelRouting,
+        routing: impl Into<Arc<ChannelRouting>>,
         opts: ExecOptions,
         script: Vec<FaultEvent>,
     ) -> Self {
@@ -155,8 +162,8 @@ impl<'a> Executor<'a> {
             topo,
             timing,
             opts,
-            default_routing: routing.clone(),
-            routing,
+            default_routing: routing.into(),
+            routing: None,
             faults: FaultPlane::new(topo),
             engine,
             script,
@@ -300,6 +307,20 @@ impl<'a> Executor<'a> {
         self.report.timeline.push((t, msg));
     }
 
+    /// Current routing table: the working copy if a migration materialized
+    /// one, else the shared default.
+    fn routing(&self) -> &ChannelRouting {
+        self.routing.as_ref().unwrap_or(&self.default_routing)
+    }
+
+    /// Mutable routing table, materializing the copy-on-write clone.
+    fn routing_mut(&mut self) -> &mut ChannelRouting {
+        if self.routing.is_none() {
+            self.routing = Some((*self.default_routing).clone());
+        }
+        self.routing.as_mut().unwrap()
+    }
+
     fn apply_fault(&mut self, nic: NicId, action: FaultAction) {
         match action {
             FaultAction::FailNic => self.faults.fail_nic(self.topo, &mut self.engine, nic),
@@ -365,8 +386,8 @@ impl<'a> Executor<'a> {
         let (src_nic, dst_nic) = match hint {
             Some((a, b)) => (self.resolve_nic(a), self.resolve_nic(b)),
             None => (
-                self.resolve_nic(self.routing.nic[channel][src_server]),
-                self.resolve_nic(self.routing.nic[channel][dst_server]),
+                self.resolve_nic(self.routing().nic[channel][src_server]),
+                self.resolve_nic(self.routing().nic[channel][dst_server]),
             ),
         };
         Route::between(self.topo, src, dst, src_nic, dst_nic)
@@ -463,24 +484,27 @@ impl<'a> Executor<'a> {
     /// Rewrite routing entries that reference a dead NIC to a healthy
     /// replacement.
     fn rewrite_routing(&mut self, nic: NicId) {
-        for c in 0..self.routing.nic.len() {
-            for s in 0..self.routing.nic[c].len() {
-                if self.routing.nic[c][s] == nic {
-                    let mut r = self.resolve_nic(nic);
-                    if !self.faults.is_usable(r) {
-                        let gpu = self.topo.affinity_gpu(nic);
-                        if let Some(n) = self
-                            .topo
-                            .failover_chain(gpu)
-                            .into_iter()
-                            .find(|&n| self.faults.is_usable(n))
-                        {
-                            r = n;
-                        }
-                    }
-                    if self.faults.is_usable(r) {
-                        self.routing.nic[c][s] = r;
-                    }
+        // The replacement is per-NIC, not per-entry: resolve it once.
+        let mut r = self.resolve_nic(nic);
+        if !self.faults.is_usable(r) {
+            let gpu = self.topo.affinity_gpu(nic);
+            if let Some(n) =
+                self.topo.failover_chain(gpu).into_iter().find(|&n| self.faults.is_usable(n))
+            {
+                r = n;
+            }
+        }
+        if !self.faults.is_usable(r) {
+            return;
+        }
+        if !self.routing().nic.iter().any(|row| row.contains(&nic)) {
+            return; // nothing routed over this NIC — keep sharing the default
+        }
+        let work = self.routing_mut();
+        for row in &mut work.nic {
+            for entry in row.iter_mut() {
+                if *entry == nic {
+                    *entry = r;
                 }
             }
         }
@@ -489,10 +513,18 @@ impl<'a> Executor<'a> {
     /// Restore default routing for entries whose primary NIC recovered.
     fn restore_routing(&mut self, nic: NicId) {
         self.migrated_to.remove(&nic);
-        for c in 0..self.routing.nic.len() {
-            for s in 0..self.routing.nic[c].len() {
-                if self.default_routing.nic[c][s] == nic {
-                    self.routing.nic[c][s] = nic;
+        if self.routing.is_none() {
+            return; // still sharing the pristine default — nothing to restore
+        }
+        let default = Arc::clone(&self.default_routing);
+        if !default.nic.iter().any(|row| row.contains(&nic)) {
+            return;
+        }
+        let work = self.routing_mut();
+        for (c, row) in work.nic.iter_mut().enumerate() {
+            for (s, entry) in row.iter_mut().enumerate() {
+                if default.nic[c][s] == nic {
+                    *entry = nic;
                 }
             }
         }

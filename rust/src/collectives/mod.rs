@@ -18,7 +18,10 @@ pub use exec::{
     ChannelRouting, ExecOptions, ExecReport, Executor, FailurePolicy, FaultAction, FaultEvent,
     MigrationRecord,
 };
-pub use ring::{nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter, RingSpec};
+pub use ring::{
+    nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter,
+    rings_for_ranks, rings_in_server_order, RingSpec,
+};
 pub use schedule::{DataOp, Schedule, SubTransfer, TransferGroup};
 
 /// Collective kinds (Table 1). `Hash` because the kind is part of the

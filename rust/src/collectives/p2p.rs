@@ -1,6 +1,6 @@
 //! Point-to-point schedules: SendRecv and All-to-All.
 
-use crate::topology::GpuId;
+use crate::topology::{GpuId, RankSet};
 
 use super::schedule::{DataOp, Schedule, TransferGroup};
 use super::ring::split_even;
@@ -42,6 +42,36 @@ pub fn ring_exchange_pairs(n_servers: usize, gpus_per_server: usize) -> Vec<(Gpu
         let d = (s + 1) % n_servers;
         for i in 0..g {
             pairs.push((s * g + i, d * g + i));
+        }
+    }
+    pairs
+}
+
+/// Ring-neighbour SendRecv pattern over a rank set: the `i`-th member on
+/// each group server sends to the `i`-th member on the group's next server
+/// (ring-wrapped over the *group's* servers). This is the group-scope
+/// generalization of [`ring_exchange_pairs`]: a PP stage-pair group yields
+/// the bidirectional boundary exchange, a prefill→decode pair group the KV
+/// shipment pattern, and the world group reproduces the legacy default.
+/// When adjacent servers host unequal member counts, destinations wrap
+/// round-robin so every member sends exactly once (no rank is silently
+/// excluded from the exchange). Single-server groups fall back to an
+/// intra-server neighbour ring.
+pub fn ring_exchange_pairs_for(set: &RankSet) -> Vec<(GpuId, GpuId)> {
+    let servers = set.servers();
+    if servers.len() < 2 {
+        let ranks = set.ranks();
+        if ranks.len() < 2 {
+            return Vec::new();
+        }
+        return (0..ranks.len()).map(|i| (ranks[i], ranks[(i + 1) % ranks.len()])).collect();
+    }
+    let mut pairs = Vec::new();
+    for si in 0..servers.len() {
+        let src = set.ranks_on(servers[si]);
+        let dst = set.ranks_on(servers[(si + 1) % servers.len()]);
+        for (i, &s) in src.iter().enumerate() {
+            pairs.push((s, dst[i % dst.len()]));
         }
     }
     pairs
@@ -111,6 +141,41 @@ mod tests {
         let pairs = ring_exchange_pairs(1, 4);
         assert_eq!(pairs, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
         assert!(ring_exchange_pairs(1, 1).is_empty());
+    }
+
+    #[test]
+    fn rank_set_exchange_matches_world_pattern() {
+        use crate::topology::{Topology, TopologyConfig};
+        for n in [2usize, 4] {
+            let t = Topology::build(&TopologyConfig::simai_a100(n));
+            let set = RankSet::world(&t);
+            assert_eq!(ring_exchange_pairs_for(&set), ring_exchange_pairs(n, 8), "n={n}");
+        }
+    }
+
+    #[test]
+    fn stage_pair_group_is_bidirectional() {
+        use crate::topology::{Topology, TopologyConfig};
+        let t = Topology::build(&TopologyConfig::testbed_h100());
+        // PP stage pair: rank 3 (server 0) and rank 11 (server 1).
+        let set = RankSet::new(&t, &[3, 11]);
+        assert_eq!(ring_exchange_pairs_for(&set), vec![(3, 11), (11, 3)]);
+        // Single-server group: intra neighbour ring over the members.
+        let tp = RankSet::new(&t, &[8, 9, 12]);
+        assert_eq!(ring_exchange_pairs_for(&tp), vec![(8, 9), (9, 12), (12, 8)]);
+    }
+
+    #[test]
+    fn unequal_server_counts_round_robin_so_no_rank_is_excluded() {
+        use crate::topology::{Topology, TopologyConfig};
+        let t = Topology::build(&TopologyConfig::testbed_h100());
+        // 2 members on server 0, 1 on server 1: every member still sends.
+        let set = RankSet::new(&t, &[0, 1, 8]);
+        let pairs = ring_exchange_pairs_for(&set);
+        assert_eq!(pairs, vec![(0, 8), (1, 8), (8, 0)]);
+        let mut senders: Vec<usize> = pairs.iter().map(|&(s, _)| s).collect();
+        senders.sort_unstable();
+        assert_eq!(senders, vec![0, 1, 8]);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! shards; both phases are emitted into one DAG so the AllGather of shard
 //! `j` starts as soon as its reduction finishes (NCCL's fused behaviour).
 
-use crate::topology::{GpuId, Topology};
+use crate::topology::{GpuId, RankSet, ServerId, Topology};
 
 use super::schedule::{DataOp, Schedule, TransferGroup};
 
@@ -39,6 +39,38 @@ pub fn nccl_rings(topo: &Topology, channels: usize) -> RingSpec {
         for s in 0..topo.n_servers() {
             for j in 0..g {
                 ring.push(s * g + (c + j) % g);
+            }
+        }
+        rings.push(ring);
+    }
+    RingSpec { rings }
+}
+
+/// Rings over an arbitrary rank set, servers visited in the set's
+/// (ascending) order. Generalizes [`nccl_rings`] to group scope: a group
+/// over ranks `[0..n_gpus)` produces exactly the world rings.
+pub fn rings_for_ranks(set: &RankSet, channels: usize) -> RingSpec {
+    rings_in_server_order(set, set.servers(), channels)
+}
+
+/// Rings over a rank set with an explicit server visit order (the R²
+/// decomposition levels re-rank their server rings; see
+/// [`crate::schedule::rerank`]). Within each server, channel `c` starts the
+/// visit at the `c`-th member (mod count), so each channel's inter-server
+/// hop is carried by a distinct rail — the group-scope analogue of NCCL's
+/// per-channel rail rotation.
+pub fn rings_in_server_order(set: &RankSet, servers: &[ServerId], channels: usize) -> RingSpec {
+    let mut rings = Vec::with_capacity(channels);
+    for c in 0..channels {
+        let mut ring = Vec::with_capacity(set.len());
+        for &s in servers {
+            let local = set.ranks_on(s);
+            let l = local.len();
+            if l == 0 {
+                continue;
+            }
+            for j in 0..l {
+                ring.push(local[(c + j) % l]);
             }
         }
         rings.push(ring);
@@ -331,6 +363,45 @@ mod tests {
                     assert_eq!(ring[s * 8], s * 8 + c, "server {s} entry of channel {c}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn rank_set_rings_match_world_rings() {
+        // The group-scope builder over the full rank set must reproduce
+        // NCCL's default rings bit-for-bit.
+        for n_servers in [2usize, 4] {
+            let t = Topology::build(&TopologyConfig::simai_a100(n_servers));
+            let set = RankSet::world(&t);
+            for channels in [1usize, 2, 8] {
+                assert_eq!(
+                    rings_for_ranks(&set, channels).rings,
+                    nccl_rings(&t, channels).rings,
+                    "n={n_servers} c={channels}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subset_rings_visit_members_only() {
+        let t = topo();
+        // A TP group: all GPUs of server 1.
+        let set = RankSet::new(&t, &(8..16).collect::<Vec<_>>());
+        let spec = rings_for_ranks(&set, 4);
+        for (c, ring) in spec.rings.iter().enumerate() {
+            assert_eq!(ring.len(), 8);
+            let mut sorted = ring.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (8..16).collect::<Vec<_>>());
+            // Channel c starts the server visit at member c.
+            assert_eq!(ring[0], 8 + c);
+        }
+        // A DP group: one GPU per server.
+        let dp = RankSet::new(&t, &[2, 10]);
+        let spec = rings_for_ranks(&dp, 2);
+        for ring in &spec.rings {
+            assert_eq!(ring, &vec![2, 10]);
         }
     }
 

@@ -8,7 +8,7 @@
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
-use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::ccl::{CommWorld, StrategyChoice};
 use r2ccl::collectives::exec::FaultAction;
 use r2ccl::collectives::{busbw, CollKind};
 use r2ccl::config::Preset;
@@ -50,18 +50,19 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "bench-collective" => {
             let preset = Preset::testbed();
-            let mut comm = Communicator::new(&preset, args.get_usize("channels", 8));
+            let mut world = CommWorld::new(&preset, args.get_usize("channels", 8));
             let fails = args.get_usize("fail-nics", 0);
             for n in 0..fails {
-                comm.note_failure(n, FaultAction::FailNic);
+                world.note_failure(n, FaultAction::FailNic);
             }
             let kind = parse_kind(args.get_or("kind", "allreduce"));
             let bytes = args.get_u64("bytes", 1 << 28);
             let choice = parse_strategy(args.get_or("strategy", "auto"));
-            let t = comm
+            let t = world
+                .world_group()
                 .time_collective(kind, bytes, choice)
                 .ok_or_else(|| anyhow::anyhow!("collective crashed"))?;
-            let bw = busbw(kind, comm.topo.n_gpus(), bytes, t);
+            let bw = busbw(kind, world.topo().n_gpus(), bytes, t);
             println!(
                 "{:?} {} fail_nics={} strategy={}: time {} busbw {:.1} GB/s",
                 kind,
@@ -178,16 +179,16 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             let preset = Preset::testbed();
-            let comm = Communicator::new(&preset, 8);
+            let world = CommWorld::new(&preset, 8);
             println!(
                 "r2ccl — Reliable and Resilient Collective Communication Library (reproduction)"
             );
             println!(
                 "testbed topology: {} servers × {} GPUs × {} NICs ({} resources)",
-                comm.topo.n_servers(),
-                comm.topo.cfg.gpus_per_server,
-                comm.topo.cfg.nics_per_server,
-                comm.topo.n_resources()
+                world.topo().n_servers(),
+                world.topo().cfg.gpus_per_server,
+                world.topo().cfg.nics_per_server,
+                world.topo().n_resources()
             );
             println!("subcommands: bench-collective | train-sim | serve-sim | train-e2e | info");
         }

@@ -11,6 +11,9 @@ pub mod rerank;
 
 pub use balance::{apply_balance, weighted_split};
 pub use planner::{choose_strategy, optimal_y, ring_time, t_of_y, x_threshold, PlanInput, Strategy};
-pub use r2_allreduce::{r2_allreduce_schedule, r2_multi_allreduce, rings_for_servers, LevelSpec};
-pub use recursive::{plan_levels, recursive_allreduce};
+pub use r2_allreduce::{
+    r2_allreduce_schedule, r2_allreduce_schedule_for, r2_multi_allreduce, r2_multi_allreduce_for,
+    rings_for_servers, LevelSpec,
+};
+pub use recursive::{plan_levels, recursive_allreduce, recursive_allreduce_for};
 pub use rerank::{min_edge_capacity, rail_sets, rerank, reranked_server_order};

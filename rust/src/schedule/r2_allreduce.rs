@@ -13,10 +13,12 @@
 //! exploited exactly as the implementation's channel partitioning does.
 
 use crate::collectives::exec::ChannelRouting;
-use crate::collectives::ring::{nccl_rings, ring_allreduce, split_even, RingSpec};
+use crate::collectives::ring::{
+    ring_allreduce, rings_for_ranks, rings_in_server_order, split_even, RingSpec,
+};
 use crate::collectives::schedule::{DataOp, Schedule, TransferGroup};
 use crate::netsim::FaultPlane;
-use crate::topology::{GpuId, ServerId, Topology};
+use crate::topology::{GpuId, RankSet, ServerId, Topology};
 
 use super::balance::apply_balance;
 
@@ -29,21 +31,12 @@ pub struct LevelSpec {
     pub fraction: f64,
 }
 
-/// Ring spec over a subset of servers (channel c starts each server's
-/// visit at local GPU c, as in [`nccl_rings`]).
+/// Ring spec over a subset of servers, all GPUs participating (channel c
+/// starts each server's visit at local GPU c, as in
+/// [`crate::collectives::ring::nccl_rings`]). World-scope convenience over
+/// [`rings_in_server_order`].
 pub fn rings_for_servers(topo: &Topology, channels: usize, servers: &[ServerId]) -> RingSpec {
-    let g = topo.cfg.gpus_per_server;
-    let mut rings = Vec::with_capacity(channels);
-    for c in 0..channels {
-        let mut ring = Vec::with_capacity(servers.len() * g);
-        for &s in servers {
-            for j in 0..g {
-                ring.push(s * g + (c + j) % g);
-            }
-        }
-        rings.push(ring);
-    }
-    RingSpec { rings }
+    rings_in_server_order(&RankSet::world(topo), servers, channels)
 }
 
 fn gcd(a: usize, b: usize) -> usize {
@@ -68,12 +61,13 @@ fn slice_elems(
     elems: usize,
     levels: &[LevelSpec],
     channels: usize,
-    g: usize,
     pipeline: usize,
+    set: &RankSet,
 ) -> Vec<(usize, usize)> {
     let mut unit = channels * pipeline;
     for lv in levels {
-        unit = lcm(unit, channels * lv.servers.len() * g);
+        let level_ranks: usize = lv.servers.iter().map(|&s| set.ranks_on(s).len()).sum();
+        unit = lcm(unit, channels * level_ranks.max(1));
     }
     if elems == 0 || elems % unit != 0 {
         return vec![(0, 0); levels.len()];
@@ -113,6 +107,9 @@ fn slice_elems(
 ///   degraded ones (each level's server set must be a subset of the
 ///   previous).
 /// * `pipeline` is the chunk pipelining depth of the broadcast walks.
+///
+/// World-scope convenience over [`r2_multi_allreduce_for`].
+#[allow(clippy::too_many_arguments)]
 pub fn r2_multi_allreduce(
     topo: &Topology,
     faults: &FaultPlane,
@@ -123,14 +120,47 @@ pub fn r2_multi_allreduce(
     channels: usize,
     pipeline: usize,
 ) -> Schedule {
+    r2_multi_allreduce_for(
+        topo,
+        faults,
+        routing,
+        bytes_per_rank,
+        elems,
+        levels,
+        channels,
+        pipeline,
+        &RankSet::world(topo),
+    )
+}
+
+/// Group-scoped multi-level schedule: the decomposition runs over `set`'s
+/// ranks only, level server sets are (possibly re-ranked) subsets of the
+/// *group's* servers, and each server's intra-node stages walk the group's
+/// member GPUs with the group lead as injection point. With the world rank
+/// set this is exactly the original world-scope decomposition.
+#[allow(clippy::too_many_arguments)]
+pub fn r2_multi_allreduce_for(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    bytes_per_rank: u64,
+    elems: usize,
+    levels: &[LevelSpec],
+    channels: usize,
+    pipeline: usize,
+    set: &RankSet,
+) -> Schedule {
     assert!(!levels.is_empty());
-    assert_eq!(levels[0].servers.len(), topo.n_servers(), "level 0 must be global");
-    let g = topo.cfg.gpus_per_server;
+    {
+        let mut l0 = levels[0].servers.clone();
+        l0.sort_unstable();
+        assert_eq!(l0, set.servers(), "level 0 must cover every group server");
+    }
     let frac_sum: f64 = levels.iter().map(|l| l.fraction).sum();
     assert!((frac_sum - 1.0).abs() < 1e-9, "fractions must sum to 1, got {frac_sum}");
 
     let mut sched = Schedule::new("r2-allreduce");
-    let slices = slice_elems(elems, levels, channels, g, pipeline);
+    let slices = slice_elems(elems, levels, channels, pipeline, set);
     // Bytes per level proportional to element slices when data-plane-exact,
     // else to fractions.
     let exact = slices.iter().map(|&(_, l)| l).sum::<usize>() == elems && elems > 0;
@@ -153,7 +183,7 @@ pub fn r2_multi_allreduce(
         if b == 0 && e_len == 0 {
             continue;
         }
-        let spec = rings_for_servers(topo, channels, &lv.servers);
+        let spec = rings_in_server_order(set, &lv.servers, channels);
         // The level's AllReduce over its member servers.
         let mut ar = ring_allreduce(&spec, b, e_len);
         ar.offset_elems(e_off);
@@ -164,11 +194,14 @@ pub fn r2_multi_allreduce(
         // Excluded servers (members of level 0 but not of this level)
         // contribute via the tailored broadcast stage.
         if k > 0 {
-            let excluded: Vec<ServerId> = (0..topo.n_servers())
+            let excluded: Vec<ServerId> = set
+                .servers()
+                .iter()
+                .copied()
                 .filter(|s| !lv.servers.contains(s))
                 .collect();
             emit_tailored_broadcast(
-                topo,
+                set,
                 &mut sched,
                 &lv.servers,
                 &excluded,
@@ -185,7 +218,8 @@ pub fn r2_multi_allreduce(
 }
 
 /// The single-failure R²CCL-AllReduce of §5.2: global (1−Y) + partial (Y)
-/// excluding `degraded_server`.
+/// excluding `degraded_server`. World-scope convenience over
+/// [`r2_allreduce_schedule_for`].
 #[allow(clippy::too_many_arguments)]
 pub fn r2_allreduce_schedule(
     topo: &Topology,
@@ -197,28 +231,70 @@ pub fn r2_allreduce_schedule(
     y: f64,
     channels: usize,
 ) -> Schedule {
-    if y <= 0.0 {
-        // Degenerates to the standard (balanced) ring.
-        let spec = nccl_rings(topo, channels);
+    r2_allreduce_schedule_for(
+        topo,
+        faults,
+        routing,
+        bytes_per_rank,
+        elems,
+        degraded_server,
+        y,
+        channels,
+        &RankSet::world(topo),
+    )
+}
+
+/// Group-scoped single-failure decomposition: the global ring runs over the
+/// group's ranks, the partial ring excludes the degraded *group* server,
+/// and the tailored broadcast walks the group leads. `degraded_server` must
+/// host group ranks.
+#[allow(clippy::too_many_arguments)]
+pub fn r2_allreduce_schedule_for(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    bytes_per_rank: u64,
+    elems: usize,
+    degraded_server: ServerId,
+    y: f64,
+    channels: usize,
+    set: &RankSet,
+) -> Schedule {
+    if y <= 0.0 || set.n_servers() < 2 {
+        // Degenerates to the standard (balanced) ring over the group.
+        let spec = rings_for_ranks(set, channels);
         let ar = ring_allreduce(&spec, bytes_per_rank, elems);
         return apply_balance(topo, faults, routing, &ar);
     }
-    let all: Vec<ServerId> = (0..topo.n_servers()).collect();
+    let all: Vec<ServerId> = set.servers().to_vec();
     let healthy: Vec<ServerId> = all.iter().copied().filter(|&s| s != degraded_server).collect();
     let levels = vec![
         LevelSpec { servers: all, fraction: 1.0 - y },
         LevelSpec { servers: healthy, fraction: y },
     ];
-    r2_multi_allreduce(topo, faults, routing, bytes_per_rank, elems, &levels, channels, 8)
+    let pipeline = set.max_ranks_per_server().max(1);
+    r2_multi_allreduce_for(
+        topo,
+        faults,
+        routing,
+        bytes_per_rank,
+        elems,
+        &levels,
+        channels,
+        pipeline,
+        set,
+    )
 }
 
-/// Stage 2 (Figure 5): for each excluded server — intra-node reduce to a
-/// lead GPU, inject into the partial ring's first member (reduce), walk the
-/// completed slice around the member leads, deliver back to the excluded
-/// leads, and intra-node broadcast everywhere.
+/// Stage 2 (Figure 5): for each excluded server — intra-node reduce of the
+/// group's member GPUs to the group lead, inject into the partial ring's
+/// first member (reduce), walk the completed slice around the member
+/// leads, deliver back to the excluded leads, and intra-node broadcast
+/// everywhere. Scoped to `set`: only group ranks participate, and each
+/// server's lead is the group's lowest rank on it.
 #[allow(clippy::too_many_arguments)]
 fn emit_tailored_broadcast(
-    topo: &Topology,
+    set: &RankSet,
     sched: &mut Schedule,
     members: &[ServerId],
     excluded: &[ServerId],
@@ -228,8 +304,7 @@ fn emit_tailored_broadcast(
     pipeline: usize,
     ar_exits: &[usize],
 ) {
-    let g = topo.cfg.gpus_per_server;
-    let lead = |s: ServerId| s * g; // local GPU 0 leads each server
+    let lead = |s: ServerId| set.lead(s).expect("tailored-broadcast server must host group ranks");
     let chan_bytes = split_even(bytes, channels);
     // Element slices per channel (exact only when divisible).
     let chan_ranges: Option<Vec<(usize, usize)>> = if e_len > 0 && e_len % channels == 0 {
@@ -270,7 +345,7 @@ fn emit_tailored_broadcast(
         //     would multiply the lead's ingress by g−1).
         let mut intra_done: Vec<Vec<Vec<usize>>> = Vec::new(); // [excluded][chunk][dep]
         for &b in excluded {
-            let gpus: Vec<GpuId> = topo.gpus_of_server(b).collect();
+            let gpus: Vec<GpuId> = set.ranks_on(b).to_vec();
             let l = lead(b);
             debug_assert_eq!(gpus[0], l);
             // Chain edges: gpus[g-1] → gpus[g-2] → … → gpus[0] (= lead).
@@ -342,22 +417,23 @@ fn emit_tailored_broadcast(
         //     arrivals[(lead, per-chunk dep lists)] feeds the intra
         //     broadcasts of stage (d).
         let last_member = lead(*members.last().unwrap());
-        let mut walk: Vec<(GpuId, GpuId, bool)> = Vec::new(); // (src, dst, is_delivery)
+        // (src, dst, dst_server, is_delivery)
+        let mut walk: Vec<(GpuId, GpuId, ServerId, bool)> = Vec::new();
         for w in members.windows(2) {
-            walk.push((lead(w[0]), lead(w[1]), false));
+            walk.push((lead(w[0]), lead(w[1]), w[1], false));
         }
         for &x in excluded {
-            walk.push((last_member, lead(x), true));
+            walk.push((last_member, lead(x), x, true));
         }
         // Member 0's arrival of chunk k = all injections of chunk k.
-        let mut arrivals: Vec<(GpuId, Vec<Vec<usize>>)> =
-            vec![(first, inject_done.clone())];
+        let mut arrivals: Vec<(ServerId, Vec<Vec<usize>>)> =
+            vec![(members[0], inject_done.clone())];
         // prev_arrival[k]: deps for the next member→member edge.
         let mut prev_arrival: Vec<Vec<usize>> = inject_done.clone();
         // branch_from[k]: deps for deliveries out of the last member.
         let mut branch_from: Vec<Vec<usize>> = inject_done.clone();
         let mut edge_prev: Vec<Option<usize>> = vec![None; walk.len()];
-        for (ei, &(src, dst, is_delivery)) in walk.iter().enumerate() {
+        for (ei, &(src, dst, dst_server, is_delivery)) in walk.iter().enumerate() {
             let mut per_chunk: Vec<Vec<usize>> = Vec::with_capacity(pipeline);
             for k in 0..pipeline {
                 let mut deps: Vec<usize> = if is_delivery {
@@ -385,16 +461,16 @@ fn emit_tailored_broadcast(
                     branch_from = per_chunk.clone();
                 }
             }
-            arrivals.push((dst, per_chunk));
+            arrivals.push((dst_server, per_chunk));
         }
 
         // (d) Intra-node broadcast at every server whose lead received the
-        //     completed slice: a pipelined NVLink chain lead → g_1 → … →
-        //     g_{g−1} (a star would multiply the lead's egress by g−1).
-        for (l, per_chunk) in &arrivals {
-            let server = topo.server_of_gpu(*l);
-            let gpus: Vec<GpuId> = topo.gpus_of_server(server).collect();
-            debug_assert_eq!(gpus[0], *l);
+        //     completed slice: a pipelined NVLink chain over the group's
+        //     member GPUs, lead → g_1 → … → g_{m−1} (a star would multiply
+        //     the lead's egress by m−1).
+        for (server, per_chunk) in &arrivals {
+            let gpus: Vec<GpuId> = set.ranks_on(*server).to_vec();
+            debug_assert_eq!(gpus[0], lead(*server));
             let mut prev_edge: Vec<Vec<usize>> = per_chunk.clone();
             for e in 1..gpus.len() {
                 let (src, dst) = (gpus[e - 1], gpus[e]);
@@ -526,6 +602,46 @@ mod tests {
             .run(&s, &mut plane);
         assert!(!rep.crashed, "timeline: {:?}", rep.timeline);
         plane.assert_all_equal(&expected);
+    }
+
+    #[test]
+    fn group_scoped_decomposition_dataplane_exact() {
+        // A group over servers {1, 2, 3} of a 4-server cluster (a DP
+        // replica set excluding server 0 entirely) with a failure on a
+        // *member* server: the decomposition must run over group ranks
+        // only, inject through group leads, and still produce the exact
+        // group sum — while server 0's buffers stay untouched.
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let mut e = netsim::engine_for(&t);
+        let mut f = FaultPlane::new(&t);
+        f.fail_nic(&t, &mut e, 8); // server 1, a group member
+        let channels = 2;
+        let group_ranks: Vec<usize> = (8..32).collect();
+        let set = RankSet::new(&t, &group_ranks);
+        // elems divisible by channels·24 (global level), channels·16
+        // (partial level) and channels·pipeline(8).
+        let elems = 2 * 48 * 8 * 4;
+        let bytes = (elems * 4) as u64;
+        let routing = ChannelRouting::default_rails(&t, channels);
+        let s = r2_allreduce_schedule_for(&t, &f, &routing, bytes, elems, 1, 0.25, channels, &set);
+        s.validate().unwrap();
+        // Every transfer stays within the group.
+        for g in &s.groups {
+            for sub in &g.subs {
+                assert!(set.contains(sub.src) && set.contains(sub.dst), "{}->{}", sub.src, sub.dst);
+            }
+        }
+        let mut plane = RealPlane::new(32, elems);
+        plane.fill_pattern();
+        let before_outside = plane.ranks[0].clone();
+        let expected = plane.expected_allreduce_over(&group_ranks);
+        let timing = TimingConfig::default();
+        let rep = Executor::new(&t, &timing, routing, ExecOptions::default(), vec![])
+            .with_initial_faults(&[(8, FaultAction::FailNic)])
+            .run(&s, &mut plane);
+        assert!(!rep.crashed);
+        plane.assert_ranks_equal(&group_ranks, &expected);
+        assert_eq!(plane.ranks[0], before_outside, "non-member buffers must be untouched");
     }
 
     #[test]

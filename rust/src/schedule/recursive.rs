@@ -12,9 +12,9 @@
 use crate::collectives::exec::ChannelRouting;
 use crate::collectives::schedule::Schedule;
 use crate::netsim::FaultPlane;
-use crate::topology::{ServerId, Topology};
+use crate::topology::{RankSet, ServerId, Topology};
 
-use super::r2_allreduce::{r2_multi_allreduce, LevelSpec};
+use super::r2_allreduce::{r2_multi_allreduce_for, LevelSpec};
 use super::rerank::{rail_sets, rerank};
 
 /// Maximum recursion depth (levels beyond this gain <α each in practice).
@@ -71,7 +71,8 @@ pub fn plan_levels(rem: &[f64]) -> Vec<LevelSpec> {
 }
 
 /// Build the recursive schedule for the current failure state, applying
-/// per-level logical re-ranking.
+/// per-level logical re-ranking. World-scope convenience over
+/// [`recursive_allreduce_for`].
 pub fn recursive_allreduce(
     topo: &Topology,
     faults: &FaultPlane,
@@ -80,19 +81,60 @@ pub fn recursive_allreduce(
     elems: usize,
     channels: usize,
 ) -> Schedule {
-    let rem: Vec<f64> = (0..topo.n_servers())
-        .map(|s| 1.0 - faults.lost_bandwidth_fraction(topo, s))
+    recursive_allreduce_for(
+        topo,
+        faults,
+        routing,
+        bytes_per_rank,
+        elems,
+        channels,
+        &RankSet::world(topo),
+    )
+}
+
+/// Group-scoped recursive decomposition: the capacity spectrum, the level
+/// structure and the re-ranked rings are all computed over the *group's*
+/// servers only — a failure outside the group never peels a level.
+pub fn recursive_allreduce_for(
+    topo: &Topology,
+    faults: &FaultPlane,
+    routing: &ChannelRouting,
+    bytes_per_rank: u64,
+    elems: usize,
+    channels: usize,
+    set: &RankSet,
+) -> Schedule {
+    let group_servers = set.servers();
+    let rem: Vec<f64> = group_servers
+        .iter()
+        .map(|&s| 1.0 - faults.lost_bandwidth_fraction(topo, s))
         .collect();
+    // plan_levels speaks indices into `rem`; map back to global server ids.
     let mut levels = plan_levels(&rem);
+    for lv in &mut levels {
+        lv.servers = lv.servers.iter().map(|&i| group_servers[i]).collect();
+    }
     // Per-level re-ranking: order each level's servers to avoid rail
-    // mismatches (Algorithm 1 over the level's sub-ring).
+    // mismatches (Algorithm 1 over the level's sub-ring). `rail_sets` is
+    // indexed by global server id, so reranking group subsets is sound.
     let sets = rail_sets(topo, faults);
     for lv in &mut levels {
         lv.servers = rerank(&lv.servers, &sets);
     }
-    // Level 0 ordering must still contain all servers; r2_multi_allreduce
-    // asserts that.
-    r2_multi_allreduce(topo, faults, routing, bytes_per_rank, elems, &levels, channels, 8)
+    // Level 0 ordering must still contain every group server;
+    // r2_multi_allreduce_for asserts that.
+    let pipeline = set.max_ranks_per_server().max(1);
+    r2_multi_allreduce_for(
+        topo,
+        faults,
+        routing,
+        bytes_per_rank,
+        elems,
+        &levels,
+        channels,
+        pipeline,
+        set,
+    )
 }
 
 #[cfg(test)]

@@ -18,7 +18,10 @@
 //!   experiment): network faults never reach the application layer.
 
 use crate::baselines::DejaVuModel;
-use crate::config::TimingConfig;
+use crate::ccl::{CommWorld, ParallelLayout, StrategyChoice};
+use crate::collectives::exec::FaultAction;
+use crate::collectives::CollKind;
+use crate::config::{Preset, TimingConfig};
 use crate::util::{Rng, Samples};
 
 /// Model presets for serving.
@@ -194,10 +197,39 @@ pub fn serve_sim(
 
     // Network term helpers -------------------------------------------------
     let nic_bw = 50.0e9_f64; // 400G per NIC
-    let full_bw = 8.0 * nic_bw;
     let alpha = 10.0e-6;
     // Remaining-bandwidth factor after the failure for comm terms.
     let rem_after = |nics_lost: usize| (8 - nics_lost) as f64 / 8.0;
+
+    // PD-disaggregation KV transfer: a real compiled SendRecv on the
+    // prefill→decode pair group (stage pair of a TP8/PP2 layout on the
+    // testbed). Each prefill GPU ships its TP shard of the prompt's KV to
+    // its decode counterpart; all eight shard transfers ride concurrently
+    // over the instance's NICs, so one group collective is the whole
+    // shipment. Timed once per health state (healthy / after the scripted
+    // NIC losses) — the per-request loop then reuses the two numbers.
+    let kv_times = cfg.pd_disagg.then(|| {
+        let preset = Preset::testbed();
+        let layout = ParallelLayout::new(8, 1, 2);
+        let kv_total = model.kv_per_token * cfg.prompt_tokens as f64;
+        let per_pair = ((kv_total / 8.0) as u64).max(1);
+        let world = CommWorld::new(&preset, 8);
+        let pd_pair = world.pp_pairs(&layout).remove(0);
+        let healthy = pd_pair
+            .time_collective(CollKind::SendRecv, per_pair, StrategyChoice::Auto)
+            .expect("kv transfer");
+        let degraded = failure.map(|f| {
+            let mut w = CommWorld::new(&preset, 8);
+            for n in 0..f.nics.min(7) {
+                w.note_failure(n, FaultAction::FailNic);
+            }
+            w.pp_pairs(&layout)
+                .remove(0)
+                .time_collective(CollKind::SendRecv, per_pair, StrategyChoice::Auto)
+                .expect("kv transfer (degraded)")
+        });
+        (healthy, degraded.unwrap_or(healthy))
+    });
 
     let failed = |now: f64| failure.map(|f| now >= f.at).unwrap_or(false);
     let net_slow = |now: f64| -> f64 {
@@ -238,9 +270,12 @@ pub fn serve_sim(
     let prefill_time = |now: f64| -> f64 {
         let compute = cfg.prompt_tokens as f64 / model.prefill_tps * compute_slow(now);
         let comm = if cfg.pd_disagg {
-            // KV-cache shipment prefill→decode node over all healthy NICs.
-            let kv = model.kv_per_token * cfg.prompt_tokens as f64;
-            alpha + kv / (full_bw / net_slow(now))
+            // KV-cache shipment prefill→decode over the pair group's
+            // compiled SendRecv (degraded variant once the failure hit and
+            // the strategy actually runs on the impaired node).
+            let (kv_healthy, kv_failed) = kv_times.expect("pd_disagg kv times");
+            let kv = if failed(now) && net_slow(now) > 1.0 { kv_failed } else { kv_healthy };
+            alpha + kv
         } else {
             // PP boundary crossings for the prefill microbatches.
             8.0 * (alpha + (cfg.prompt_tokens * model.hidden * 2) as f64 / 8.0

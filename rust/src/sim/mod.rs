@@ -12,6 +12,6 @@ pub use inference::{
 pub use montecarlo::{multi_failure_sweep, sample_pattern, MonteCarloPoint};
 pub use training::{
     analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, simai_compiled_iteration,
-    simai_iteration, testbed_training, CommVolumes, ModelConfig, ParallelConfig, TrainMethod,
-    TrainResult,
+    simai_iteration, testbed_training, training_groups, CommVolumes, ModelConfig, ParallelConfig,
+    TrainMethod, TrainResult, TrainingGroups,
 };

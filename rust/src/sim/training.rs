@@ -4,7 +4,11 @@
 //! FLOPs) + exposed communication. Communication times come from two
 //! sources matching the paper's methodology split:
 //! * testbed scale (2 servers): the fluid-flow event simulator via
-//!   [`Communicator`] — collectives actually execute, failures migrate;
+//!   [`CommWorld`] process groups — TP AllReduce on intra-server groups,
+//!   PP SendRecv on stage-pair groups, DP AllReduce on replica groups
+//!   (see [`training_groups`]) — collectives actually execute, failures
+//!   migrate, and each class of traffic sees exactly its own group's
+//!   fault domain;
 //! * SimAI scale (4–128 servers): the α-β analytic models of
 //!   [`crate::schedule::planner`] (running a 512-rank event-level ring per
 //!   Monte-Carlo sample would be wasteful and adds nothing at this
@@ -15,7 +19,7 @@
 //!   real compiled schedules (and exercises the plan cache at scale).
 
 use crate::baselines::adapcc::AdapCcModel;
-use crate::ccl::{Communicator, StrategyChoice};
+use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
 use crate::collectives::exec::FaultAction;
 use crate::collectives::CollKind;
 use crate::config::{GpuComputeConfig, Preset};
@@ -92,6 +96,11 @@ pub struct CommVolumes {
     pub dp_allreduce: u64,
     /// PP activations per microbatch per boundary (bf16), both directions.
     pub pp_p2p: u64,
+    /// One TP activations AllReduce (bf16 microbatch activations); Megatron
+    /// issues 4 per transformer layer (2 forward, 2 backward).
+    pub tp_allreduce: u64,
+    /// TP AllReduce invocations per microbatch (4 per layer of the stage).
+    pub tp_calls_per_micro: usize,
     pub n_microbatches: usize,
 }
 
@@ -102,6 +111,8 @@ pub fn comm_volumes(model: &ModelConfig, par: &ParallelConfig) -> CommVolumes {
     CommVolumes {
         dp_allreduce: grad_bytes,
         pp_p2p: act_bytes,
+        tp_allreduce: act_bytes,
+        tp_calls_per_micro: 4 * (model.layers / par.pp).max(1),
         n_microbatches: par.global_batch / (par.microbatch * par.dp).max(1),
     }
 }
@@ -117,8 +128,34 @@ pub fn compute_time(model: &ModelConfig, par: &ParallelConfig, gpu: &GpuComputeC
 // Testbed mode: event-simulated collectives on the 2×8 H100 topology.
 // ---------------------------------------------------------------------
 
+/// The communicator groups a 3D-parallel training job creates at startup:
+/// tensor-parallel groups, pipeline stage-*pair* groups (the communicator
+/// each PP boundary SendRecv runs on) and data-parallel replica groups.
+/// Exposed so integration tests can inspect exactly which rank sets the
+/// training simulator drives its collectives on.
+pub struct TrainingGroups {
+    pub tp: Vec<CommGroup>,
+    pub pp: Vec<CommGroup>,
+    pub dp: Vec<CommGroup>,
+}
+
+/// Build the process groups of a parallel layout on `world` (Megatron
+/// order: tp innermost → contiguous, hence intra-server for tp ≤ 8).
+pub fn training_groups(world: &CommWorld, par: &ParallelConfig) -> TrainingGroups {
+    let layout = ParallelLayout::new(par.tp, par.dp, par.pp);
+    TrainingGroups {
+        tp: world.tp_groups(&layout),
+        pp: world.pp_pairs(&layout),
+        dp: world.dp_groups(&layout),
+    }
+}
+
 /// Simulate one training configuration on the physical-testbed topology
-/// with `failed_nics` NICs down on server 0 (Figure 7).
+/// with `failed_nics` NICs down on server 0 (Figure 7). Each class of
+/// traffic runs on its actual process group: TP AllReduce on intra-server
+/// groups, PP SendRecv on stage-pair groups, DP AllReduce on replica
+/// groups — so a NIC failure degrades exactly the groups whose servers it
+/// touches.
 pub fn testbed_training(
     preset: &Preset,
     model: &ModelConfig,
@@ -141,11 +178,12 @@ pub fn testbed_training(
         }
     }
 
-    let mut comm = Communicator::new(preset, preset.topo.nics_per_server);
+    let mut world = CommWorld::new(preset, preset.topo.nics_per_server);
     let effective_failures = if method == TrainMethod::NoFailure { 0 } else { failed_nics };
     for n in 0..effective_failures {
-        comm.note_failure(n, FaultAction::FailNic);
+        world.note_failure(n, FaultAction::FailNic);
     }
+    let groups = training_groups(&world, par);
 
     let choice = match method {
         TrainMethod::NoFailure | TrainMethod::VanillaNccl => StrategyChoice::Auto,
@@ -158,38 +196,55 @@ pub fn testbed_training(
     let mut t_comm = 0.0;
     let mut capacity_factor = 1.0;
     if par.dp > 1 && par.tp * par.pp == 1 {
-        // Pure DP: gradient AllReduce over all 16 ranks each iteration.
+        // Pure DP: gradient AllReduce over the (single, world-spanning)
+        // replica group each iteration.
+        let dp_group = &groups.dp[0];
         let t_ar = match method {
             TrainMethod::AdapCc if effective_failures > 0 => {
                 let adapcc = AdapCcModel::default();
                 // AdapCC excludes the failed GPU: compute capacity shrinks,
                 // collective runs over remaining ranks on healthy NICs.
                 capacity_factor = adapcc.capacity_factor(par.n_gpus(), effective_failures);
-                let t = comm
+                let t = dp_group
                     .time_collective(CollKind::AllReduce, vols.dp_allreduce, StrategyChoice::Auto)
                     .expect("allreduce");
                 t + adapcc.per_collective_overhead()
             }
-            _ => comm
+            _ => dp_group
                 .time_collective(CollKind::AllReduce, vols.dp_allreduce, choice)
                 .expect("allreduce"),
         };
         t_comm += t_ar;
     } else {
-        // TP intra-node (NVLink, simulated but cheap) + PP inter-node p2p
-        // per microbatch + DP allreduce across replicas if dp>1.
-        let t_pp = comm
-            .time_collective(CollKind::SendRecv, vols.pp_p2p, choice)
-            .expect("pp sendrecv");
-        // fwd+bwd activations+grad-activations for every microbatch.
-        t_comm += 2.0 * vols.n_microbatches.max(1) as f64 * t_pp;
+        // TP activations AllReduce on the tensor-parallel group (NVLink;
+        // worst case: the group living on the degraded server 0).
+        if par.tp > 1 {
+            let t_tp = groups.tp[0]
+                .time_collective(CollKind::AllReduce, vols.tp_allreduce, choice)
+                .expect("tp allreduce");
+            t_comm +=
+                (vols.tp_calls_per_micro * vols.n_microbatches.max(1)) as f64 * t_tp;
+        }
+        // PP boundary exchange on the stage-pair group: fwd+bwd
+        // activations+grad-activations for every microbatch.
+        if par.pp > 1 {
+            let t_pp = groups.pp[0]
+                .time_collective(CollKind::SendRecv, vols.pp_p2p, choice)
+                .expect("pp sendrecv");
+            t_comm += 2.0 * vols.n_microbatches.max(1) as f64 * t_pp;
+        }
         if par.dp > 1 {
-            t_comm += comm
+            // Gradient AllReduce on each replica group; replicas reduce
+            // concurrently but the iteration waits for the slowest — time
+            // the group whose servers include the failure domain.
+            t_comm += groups.dp[0]
                 .time_collective(CollKind::AllReduce, vols.dp_allreduce, choice)
                 .expect("dp allreduce");
         } else {
-            // Embedding/grad-norm allreduce once per iteration.
-            t_comm += comm
+            // Embedding/grad-norm allreduce once per iteration (ties the
+            // first and last stage: world scope).
+            t_comm += world
+                .world_group()
                 .time_collective(CollKind::AllReduce, (model.hidden * 4) as u64, choice)
                 .unwrap_or(0.0);
         }
@@ -236,10 +291,10 @@ pub fn simai_compiled_iteration(
     }
 
     let channels = channels.min(preset.topo.nics_per_server).max(1);
-    let mut comm = Communicator::new(&preset, channels);
+    let mut world = CommWorld::new(&preset, channels);
     let effective = if method == TrainMethod::NoFailure { 0 } else { failed_nics };
     for n in 0..effective {
-        comm.note_failure(n, FaultAction::FailNic);
+        world.note_failure(n, FaultAction::FailNic);
     }
     let choice = match method {
         TrainMethod::NoFailure | TrainMethod::VanillaNccl | TrainMethod::AdapCc => {
@@ -249,7 +304,10 @@ pub fn simai_compiled_iteration(
         TrainMethod::R2Balance => StrategyChoice::Force(Strategy::Balance),
         TrainMethod::R2HotRepair => StrategyChoice::HotRepairOnly,
     };
-    let mut t_comm = comm
+    // The DP replica group spans the whole cluster at this layout (tp
+    // intra-node, dp across servers): the gradient AllReduce runs on it.
+    let mut t_comm = world
+        .world_group()
         .time_collective(CollKind::AllReduce, vols.dp_allreduce, choice)
         .expect("dp allreduce");
     // Mirror the testbed arm's AdapCC accounting: the reconfiguration

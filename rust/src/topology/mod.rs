@@ -20,10 +20,12 @@
 //!   second half on socket 1 (matching DGX/HGX layouts).
 
 pub mod path;
+pub mod rankset;
 
 use std::collections::HashMap;
 
 pub use path::{Route, RoutePlan};
+pub use rankset::RankSet;
 
 /// Global GPU id.
 pub type GpuId = usize;

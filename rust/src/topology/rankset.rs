@@ -1,0 +1,202 @@
+//! Rank sets: the substrate of process-group (communicator-group)
+//! collectives.
+//!
+//! NCCL jobs never run one world-scope communicator: a Megatron TP8/PP2
+//! layout drives tensor-parallel AllReduce on intra-server groups, pipeline
+//! SendRecv on stage pairs and data-parallel AllReduce on replica groups —
+//! each over a *subset* of ranks, all sharing the same NICs and fault
+//! domain. A [`RankSet`] is the immutable description of one such subset:
+//! the sorted member ranks, grouped per server, with the per-server "lead"
+//! rank the R² tailored-broadcast stage injects through.
+//!
+//! Ordering convention: ranks are kept sorted (ascending GPU id) and
+//! servers ascending, so the world rank set reproduces NCCL's default ring
+//! order exactly — a group over ranks `[0..n_gpus)` compiles bit-identical
+//! schedules to the world-scope path (property-tested in
+//! `rust/tests/prop_groups.rs`).
+
+use super::{GpuId, ServerId, Topology};
+
+/// An immutable, validated set of ranks (global GPU ids) participating in
+/// a group collective.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankSet {
+    /// Member ranks, sorted ascending.
+    ranks: Vec<GpuId>,
+    /// Servers hosting at least one member, sorted ascending.
+    servers: Vec<ServerId>,
+    /// Member ranks per server, parallel to `servers` (each sorted).
+    by_server: Vec<Vec<GpuId>>,
+    gpus_per_server: usize,
+}
+
+impl RankSet {
+    /// Build a rank set. Ranks must be non-empty, unique and within the
+    /// topology; they are sorted internally (group identity is the *set*).
+    pub fn new(topo: &Topology, ranks: &[GpuId]) -> RankSet {
+        assert!(!ranks.is_empty(), "rank set must be non-empty");
+        let mut sorted = ranks.to_vec();
+        sorted.sort_unstable();
+        assert!(
+            sorted.windows(2).all(|w| w[0] != w[1]),
+            "rank set contains duplicates: {sorted:?}"
+        );
+        assert!(
+            *sorted.last().unwrap() < topo.n_gpus(),
+            "rank {} out of range (topology has {} GPUs)",
+            sorted.last().unwrap(),
+            topo.n_gpus()
+        );
+        let g = topo.cfg.gpus_per_server;
+        let mut servers: Vec<ServerId> = Vec::new();
+        let mut by_server: Vec<Vec<GpuId>> = Vec::new();
+        for &r in &sorted {
+            let s = r / g;
+            if servers.last() != Some(&s) {
+                servers.push(s);
+                by_server.push(Vec::new());
+            }
+            by_server.last_mut().unwrap().push(r);
+        }
+        RankSet { ranks: sorted, servers, by_server, gpus_per_server: g }
+    }
+
+    /// The world rank set: every GPU of the topology.
+    pub fn world(topo: &Topology) -> RankSet {
+        let ranks: Vec<GpuId> = (0..topo.n_gpus()).collect();
+        RankSet::new(topo, &ranks)
+    }
+
+    /// Member ranks, sorted ascending.
+    pub fn ranks(&self) -> &[GpuId] {
+        &self.ranks
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Servers hosting at least one member rank, sorted ascending.
+    pub fn servers(&self) -> &[ServerId] {
+        &self.servers
+    }
+
+    pub fn n_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Member ranks on one server (empty when the server hosts none).
+    pub fn ranks_on(&self, server: ServerId) -> &[GpuId] {
+        match self.servers.binary_search(&server) {
+            Ok(i) => &self.by_server[i],
+            Err(_) => &[],
+        }
+    }
+
+    /// The group's lead rank on a server (lowest member id): the rank the
+    /// R² tailored-broadcast stage injects and delivers through.
+    pub fn lead(&self, server: ServerId) -> Option<GpuId> {
+        self.ranks_on(server).first().copied()
+    }
+
+    pub fn contains(&self, rank: GpuId) -> bool {
+        self.ranks.binary_search(&rank).is_ok()
+    }
+
+    pub fn contains_server(&self, server: ServerId) -> bool {
+        self.servers.binary_search(&server).is_ok()
+    }
+
+    /// Largest member count on any single server: the chunk-pipelining
+    /// depth of the group's broadcast/tree schedules (one chunk per local
+    /// GPU keeps the NVLink chain saturated).
+    pub fn max_ranks_per_server(&self) -> usize {
+        self.by_server.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// True when the set covers the whole topology.
+    pub fn is_world(&self, topo: &Topology) -> bool {
+        self.ranks.len() == topo.n_gpus()
+    }
+
+    /// The subset of this rank set living on `servers` (which must all be
+    /// member servers).
+    pub fn restrict(&self, servers: &[ServerId]) -> RankSet {
+        let mut srv: Vec<ServerId> = servers.to_vec();
+        srv.sort_unstable();
+        let mut ranks = Vec::new();
+        let mut by_server = Vec::new();
+        for &s in &srv {
+            let on = self.ranks_on(s);
+            assert!(!on.is_empty(), "server {s} is not a member of this rank set");
+            ranks.extend_from_slice(on);
+            by_server.push(on.to_vec());
+        }
+        RankSet { ranks, servers: srv, by_server, gpus_per_server: self.gpus_per_server }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyConfig;
+
+    fn topo() -> Topology {
+        Topology::build(&TopologyConfig::testbed_h100())
+    }
+
+    #[test]
+    fn world_set_covers_everything() {
+        let t = topo();
+        let w = RankSet::world(&t);
+        assert_eq!(w.len(), 16);
+        assert_eq!(w.servers(), &[0, 1]);
+        assert_eq!(w.ranks_on(1), &(8..16).collect::<Vec<_>>()[..]);
+        assert_eq!(w.lead(0), Some(0));
+        assert_eq!(w.lead(1), Some(8));
+        assert_eq!(w.max_ranks_per_server(), 8);
+        assert!(w.is_world(&t));
+    }
+
+    #[test]
+    fn subset_groups_by_server() {
+        let t = topo();
+        // A PP stage pair: rank 3 on server 0, rank 11 on server 1.
+        let s = RankSet::new(&t, &[11, 3]);
+        assert_eq!(s.ranks(), &[3, 11]);
+        assert_eq!(s.servers(), &[0, 1]);
+        assert_eq!(s.ranks_on(0), &[3]);
+        assert_eq!(s.ranks_on(1), &[11]);
+        assert_eq!(s.max_ranks_per_server(), 1);
+        assert!(!s.is_world(&t));
+        assert!(s.contains(11) && !s.contains(4));
+    }
+
+    #[test]
+    fn restrict_keeps_member_servers() {
+        let t = Topology::build(&TopologyConfig::simai_a100(4));
+        let w = RankSet::world(&t);
+        let sub = w.restrict(&[1, 3]);
+        assert_eq!(sub.servers(), &[1, 3]);
+        assert_eq!(sub.len(), 16);
+        assert_eq!(sub.lead(3), Some(24));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicates")]
+    fn duplicate_ranks_rejected() {
+        let t = topo();
+        RankSet::new(&t, &[1, 2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_rejected() {
+        let t = topo();
+        RankSet::new(&t, &[0, 16]);
+    }
+}

@@ -61,11 +61,18 @@ impl EdgePool {
             "edge pools are inter-server"
         );
         let dst_server = topo.server_of_gpu(dst_gpu);
+        let dst_chain = topo.failover_chain(dst_gpu);
         let mut entries = Vec::new();
         for (i, &src_nic) in topo.failover_chain(src_gpu).iter().enumerate() {
-            // Prefer the same rail on the destination side.
+            // Prefer the same rail on the destination side; when the
+            // destination server has no NIC on that rail (fewer NICs than
+            // the source's rail index), fall back to the destination GPU's
+            // own failover order instead of panicking.
             let rail = topo.rail_of_nic(src_nic);
-            let dst_nic = topo.nics_of_server(dst_server).nth(rail).unwrap();
+            let dst_nic = topo
+                .nics_of_server(dst_server)
+                .nth(rail)
+                .unwrap_or(dst_chain[i % dst_chain.len()]);
             entries.push(Connection {
                 src_gpu,
                 dst_gpu,

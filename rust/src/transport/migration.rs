@@ -37,8 +37,18 @@ pub enum MigrationError {
 /// `progress` is the bytes physically moved when the fault hit;
 /// `detection_latency` is what the detection layer took to produce the
 /// diagnosis (bilateral OOB + triangulation, see [`crate::detect`]).
+///
+/// The diagnosis drives the recovery shape:
+/// * `Transient` (clean probes — a QP-level error, not a component fault):
+///   re-arm the queue pair and resume *on the same path*; the rollback
+///   cursor still governs where retransmission starts, but no partial
+///   chunk was lost on the wire, so nothing is counted as wasted.
+/// * `LocalNicFault` / `RemoteNicFault` / `LinkFault`: migrate to the
+///   topologically closest healthy backup; bytes past the last acked
+///   chunk boundary were cut mid-flight and count as wasted wire work.
+#[allow(clippy::too_many_arguments)]
 pub fn plan_migration(
-    _topo: &Topology,
+    topo: &Topology,
     timing: &TimingConfig,
     faults: &FaultPlane,
     regs: &mut RegistrationTable,
@@ -47,24 +57,40 @@ pub fn plan_migration(
     cursor: &RollbackCursor,
     progress: f64,
     detection_latency: f64,
-    _diagnosis: Diagnosis,
+    diagnosis: Diagnosis,
 ) -> Result<MigrationPlan, MigrationError> {
-    let target = pool
-        .first_healthy(faults, Some(failed))
-        .copied()
-        .ok_or(MigrationError::NoAlternatePath {
-            src_gpu: pool.src_gpu,
-            dst_gpu: pool.dst_gpu,
-        })?;
+    let same_path_ok = diagnosis == Diagnosis::Transient
+        && faults.is_usable(failed.src_nic)
+        && faults.is_usable(failed.dst_nic);
+    let target = if same_path_ok {
+        *failed
+    } else {
+        pool.first_healthy(faults, Some(failed))
+            .copied()
+            .ok_or(MigrationError::NoAlternatePath {
+                src_gpu: pool.src_gpu,
+                dst_gpu: pool.dst_gpu,
+            })?
+    };
+    debug_assert_eq!(
+        topo.server_of_nic(target.src_nic),
+        topo.server_of_gpu(pool.src_gpu),
+        "backup src NIC must live on the source server"
+    );
+    debug_assert_eq!(
+        topo.server_of_nic(target.dst_nic),
+        topo.server_of_gpu(pool.dst_gpu),
+        "backup dst NIC must live on the destination server"
+    );
 
     // Rollback bookkeeping is constant; registration / connection setup is
     // free iff the buffer was multi-registered and the backup connection
-    // pre-established.
+    // pre-established (a transient retry reuses the established pair).
     let mut latency = detection_latency + timing.rollback_cost;
     if !target.established {
         latency += timing.conn_setup_cost;
     }
-    if regs.policy() == RegPolicy::AffinityOnly {
+    if !same_path_ok && regs.policy() == RegPolicy::AffinityOnly {
         // On-demand registration of the send buffer with the backup NIC.
         // (Handle 0 is the channel's staging buffer; the collective engine
         // registers one per channel.)
@@ -75,7 +101,7 @@ pub fn plan_migration(
         target,
         latency,
         retransmit_bytes: cursor.retransmit_bytes(progress),
-        wasted_bytes: cursor.wasted_bytes(progress),
+        wasted_bytes: if same_path_ok { 0 } else { cursor.wasted_bytes(progress) },
     })
 }
 
@@ -158,6 +184,46 @@ mod tests {
         .unwrap();
         // Baseline pays connection setup + registration: ≥ 35ms.
         assert!(plan.latency > 30.0e-3, "latency={}", plan.latency);
+    }
+
+    #[test]
+    fn transient_diagnosis_retries_same_path() {
+        // Clean probes (QP-level error): no migration, no wasted bytes —
+        // the established pair is re-armed and resumes from the rollback
+        // point.
+        let (t, _eng, fp, timing) = setup();
+        let mut regs = RegistrationTable::new(RegPolicy::AffinityOnly);
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        let cursor = RollbackCursor::new(4 << 20, timing.chunk_bytes);
+        let progress = (timing.chunk_bytes + 1000) as f64; // 1 chunk acked
+        let plan = plan_migration(
+            &t, &timing, &fp, &mut regs, &pool, pool.primary(), &cursor,
+            progress, 1e-3, Diagnosis::Transient,
+        )
+        .unwrap();
+        assert_eq!(plan.target, *pool.primary(), "transient must stay on the same path");
+        assert_eq!(plan.wasted_bytes, 0);
+        assert_eq!(plan.retransmit_bytes, (4 << 20) - timing.chunk_bytes);
+        // No lazy-registration penalty either: the buffer is already
+        // registered with the NIC we keep using.
+        assert!(plan.latency < 5.0e-3, "latency={}", plan.latency);
+    }
+
+    #[test]
+    fn transient_on_dead_nic_still_migrates() {
+        // A Transient diagnosis can race a real failure (the fault hit
+        // between probe and plan): if the path is unusable, migrate anyway.
+        let (t, mut eng, mut fp, timing) = setup();
+        let mut regs = RegistrationTable::new(RegPolicy::MultiNic);
+        let pool = EdgePool::build(&t, 2, 10, BackupPolicy::PreEstablished);
+        fp.fail_nic(&t, &mut eng, 2);
+        let cursor = RollbackCursor::new(1 << 20, timing.chunk_bytes);
+        let plan = plan_migration(
+            &t, &timing, &fp, &mut regs, &pool, pool.primary(), &cursor,
+            0.0, 1e-3, Diagnosis::Transient,
+        )
+        .unwrap();
+        assert_ne!(plan.target.src_nic, 2);
     }
 
     #[test]

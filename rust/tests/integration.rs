@@ -1,14 +1,14 @@
-//! Cross-module integration over the public API: communicator + planner +
+//! Cross-module integration over the public API: world + groups + planner +
 //! executor + sims composing end to end (no PJRT artifacts needed).
 
-use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::ccl::{CommWorld, ParallelLayout, StrategyChoice};
 use r2ccl::collectives::exec::FaultAction;
 use r2ccl::collectives::{busbw, CollKind, RealPlane};
 use r2ccl::config::Preset;
 use r2ccl::schedule::Strategy;
 use r2ccl::sim::{
-    serve_sim, testbed_training, InferModel, ModelConfig, ParallelConfig, ServeCfg,
-    ServeFailure, ServeStrategy, TrainMethod,
+    serve_sim, testbed_training, training_groups, InferModel, ModelConfig, ParallelConfig,
+    ServeCfg, ServeFailure, ServeStrategy, TrainMethod,
 };
 
 #[test]
@@ -17,10 +17,11 @@ fn communicator_full_collective_matrix() {
     // completes and yields sane times.
     let preset = Preset::testbed();
     for fails in [0usize, 1, 2] {
-        let mut comm = Communicator::new(&preset, 8);
+        let mut world = CommWorld::new(&preset, 8);
         for n in 0..fails {
-            comm.note_failure(n, FaultAction::FailNic);
+            world.note_failure(n, FaultAction::FailNic);
         }
+        let comm = world.world_group();
         for kind in [
             CollKind::AllReduce,
             CollKind::ReduceScatter,
@@ -38,20 +39,19 @@ fn communicator_full_collective_matrix() {
 
 #[test]
 fn communicator_scales_to_many_servers() {
-    // The seed hardcoded the 2-server testbed into the compile path
-    // (server-0↔1 SendRecv, literal pipeline depth 8): the compile path
-    // must now produce valid, runnable schedules at SimAI scales. At 16/32
-    // servers the high-flow-count ring/all-to-all collectives run with
-    // zero-byte payloads (the DAG and routing machinery is still fully
-    // walked, but the fluid rate solver stays cheap enough for a
-    // debug-mode test run); the low-flow-count kinds — including
-    // SendRecv, whose schedule would be empty at zero bytes — always
-    // move real bytes.
+    // The compile path must produce valid, runnable schedules at SimAI
+    // scales. At 16/32 servers the high-flow-count ring/all-to-all
+    // collectives run with zero-byte payloads (the DAG and routing
+    // machinery is still fully walked, but the fluid rate solver stays
+    // cheap enough for a debug-mode test run); the low-flow-count kinds —
+    // including SendRecv, whose schedule would be empty at zero bytes —
+    // always move real bytes.
     for n_servers in [2usize, 4, 16, 32] {
         let preset = Preset::simai(n_servers);
         let channels = if n_servers <= 4 { 2 } else { 1 };
-        let mut comm = Communicator::new(&preset, channels);
-        comm.note_failure(0, FaultAction::FailNic);
+        let mut world = CommWorld::new(&preset, channels);
+        world.note_failure(0, FaultAction::FailNic);
+        let comm = world.world_group();
         let run_bytes = |kind: CollKind| -> u64 {
             if n_servers <= 4 {
                 return 1 << 20;
@@ -85,12 +85,14 @@ fn communicator_scales_to_many_servers() {
 fn strategy_ordering_headline() {
     // The §8.4 ordering on large AllReduce: healthy > r2 > balance > hotrepair.
     let preset = Preset::testbed();
-    let healthy = Communicator::new(&preset, 8);
-    let mut deg = Communicator::new(&preset, 8);
-    deg.note_failure(0, FaultAction::FailNic);
+    let healthy_world = CommWorld::new(&preset, 8);
+    let healthy = healthy_world.world_group();
+    let mut deg_world = CommWorld::new(&preset, 8);
+    deg_world.note_failure(0, FaultAction::FailNic);
+    let deg = deg_world.world_group();
     let d = 1u64 << 29;
-    let n = healthy.topo.n_gpus();
-    let bw = |c: &Communicator, s| {
+    let n = healthy_world.topo().n_gpus();
+    let bw = |c: &r2ccl::ccl::CommGroup, s| {
         busbw(CollKind::AllReduce, n, d, c.time_collective(CollKind::AllReduce, d, s).unwrap())
     };
     let b0 = bw(&healthy, StrategyChoice::Auto);
@@ -107,7 +109,8 @@ fn strategy_ordering_headline() {
 #[test]
 fn communicator_run_with_data_and_live_failure() {
     let preset = Preset::testbed();
-    let comm = Communicator::new(&preset, 2);
+    let world = CommWorld::new(&preset, 2);
+    let comm = world.world_group();
     let elems = 2 * 16 * 8 * 4;
     let mut plane = RealPlane::new(16, elems);
     plane.fill_pattern();
@@ -122,6 +125,77 @@ fn communicator_run_with_data_and_live_failure() {
     let rep = comm.run(CollKind::AllReduce, small, StrategyChoice::Auto, script, &mut plane, elems);
     assert!(!rep.crashed);
     plane.assert_all_equal(&expected);
+}
+
+#[test]
+fn tp8_pp2_groups_route_on_their_rank_sets() {
+    // The Figure-7 acceptance scenario: a TP8/PP2 layout on the 2×8
+    // testbed. TP AllReduce compiles onto intra-server groups, PP SendRecv
+    // onto the stage-pair group, DP16 AllReduce onto the replica group —
+    // verified by inspecting the compiled schedules' src/dst rank sets —
+    // and a NIC failure on server 0 leaves server-1-only groups on
+    // `Strategy::Standard`.
+    let preset = Preset::testbed();
+    let mut world = CommWorld::new(&preset, 8);
+    world.note_failure(0, FaultAction::FailNic); // server 0, rail 0
+
+    let tp8pp2 = ParallelConfig { dp: 1, tp: 8, pp: 2, global_batch: 64, microbatch: 2 };
+    let groups = training_groups(&world, &tp8pp2);
+
+    // TP groups: one per stage, schedules strictly intra-server.
+    assert_eq!(groups.tp.len(), 2);
+    for (stage, g) in groups.tp.iter().enumerate() {
+        assert_eq!(g.servers(), &[stage]);
+        let (sched, strat) = g.compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+        assert!(!sched.is_empty());
+        for grp in &sched.groups {
+            for sub in &grp.subs {
+                let (s, d) = (sub.src, sub.dst);
+                assert_eq!(s / 8, stage, "TP transfer {s}→{d} left server {stage}");
+                assert_eq!(sub.dst / 8, stage);
+            }
+        }
+        if stage == 1 {
+            // Server 1 hosts no failure: its TP group stays Standard.
+            assert_eq!(strat, Strategy::Standard, "server-1 TP group must ignore server-0 fault");
+        }
+    }
+
+    // PP stage pair: the bidirectional t ↔ t+8 boundary exchange, and
+    // nothing else.
+    assert_eq!(groups.pp.len(), 1);
+    let (sched, _) = groups.pp[0].compile(CollKind::SendRecv, 1 << 22, 0, StrategyChoice::Auto);
+    assert!(!sched.is_empty());
+    for grp in &sched.groups {
+        for sub in &grp.subs {
+            assert_ne!(sub.src / 8, sub.dst / 8, "PP transfer must cross the stage boundary");
+            assert_eq!(sub.src % 8, sub.dst % 8, "PP pairs rank i with rank i+8");
+        }
+    }
+
+    // DP16 replica group (pure-DP layout) covers every rank.
+    let dp16 = ParallelConfig { dp: 16, tp: 1, pp: 1, global_batch: 256, microbatch: 1 };
+    let dp_groups = training_groups(&world, &dp16).dp;
+    assert_eq!(dp_groups.len(), 1);
+    let (sched, strat) =
+        dp_groups[0].compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+    assert_ne!(strat, Strategy::Standard, "world-spanning DP group must react to the fault");
+    let mut touched: Vec<usize> = sched
+        .groups
+        .iter()
+        .flat_map(|g| g.subs.iter().flat_map(|s| [s.src, s.dst]))
+        .collect();
+    touched.sort_unstable();
+    touched.dedup();
+    assert_eq!(touched, (0..16).collect::<Vec<_>>(), "DP AllReduce must span all replicas");
+
+    // And the full training simulation over these groups still satisfies
+    // the Figure-7 shape under the failure.
+    let model = ModelConfig::gpt_13b();
+    let base = testbed_training(&preset, &model, &tp8pp2, TrainMethod::NoFailure, 1);
+    let bal = testbed_training(&preset, &model, &tp8pp2, TrainMethod::R2Balance, 1);
+    assert!(bal.iter_time >= base.iter_time);
+    assert!((bal.iter_time - base.iter_time) / base.iter_time < 0.02);
 }
 
 #[test]
@@ -176,10 +250,39 @@ fn serving_sim_strategies_complete_all_requests() {
 }
 
 #[test]
+fn pd_disagg_kv_transfer_rides_the_stage_pair_group() {
+    // The prefill→decode KV shipment compiles as a SendRecv on the PP pair
+    // group of a TP8/PP2 layout: one transfer per prefill GPU to its
+    // decode counterpart, concurrently over the instance's NICs.
+    let preset = Preset::testbed();
+    let world = CommWorld::new(&preset, 8);
+    let layout = ParallelLayout::new(8, 1, 2);
+    let pd = world.pp_pairs(&layout).remove(0);
+    let (sched, _) = pd.compile(CollKind::SendRecv, 1 << 24, 0, StrategyChoice::Auto);
+    for g in &sched.groups {
+        for s in &g.subs {
+            assert_eq!(s.src % 8, s.dst % 8, "KV shard must stay on its TP rank");
+            assert_ne!(s.src / 8, s.dst / 8, "KV transfer must cross prefill→decode");
+        }
+    }
+    // The serving simulator completes with the group-driven transfer, and
+    // a failure degrades TTFT by no more than the lost bandwidth share.
+    let model = InferModel::llama405b();
+    let mut cfg = ServeCfg::paper_default(0.05);
+    cfg.pd_disagg = true;
+    let mut pd_ttft = serve_sim(&model, &cfg, ServeStrategy::NoFailure, None, 1).ttft();
+    assert!(pd_ttft.p50() > 0.0);
+    let fail = Some(ServeFailure { at: 20.0, nics: 1 });
+    let mut r2 = serve_sim(&model, &cfg, ServeStrategy::R2Balance, fail, 1).ttft();
+    assert!(r2.p99() < pd_ttft.p99() * 1.2);
+}
+
+#[test]
 fn planner_auto_matches_forced_best_on_extremes() {
     let preset = Preset::testbed();
-    let mut comm = Communicator::new(&preset, 8);
-    comm.note_failure(0, FaultAction::FailNic);
+    let mut world = CommWorld::new(&preset, 8);
+    world.note_failure(0, FaultAction::FailNic);
+    let comm = world.world_group();
     // Tiny message: auto == balance-class latency (not the decomposition).
     let tiny = comm.time_collective(CollKind::AllReduce, 1 << 10, StrategyChoice::Auto).unwrap();
     let forced_r2 = comm

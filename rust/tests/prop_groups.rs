@@ -1,0 +1,129 @@
+//! Property tests for the process-group communicator API:
+//!
+//! 1. A group over ranks `[0..n)` of a world compiles bit-identical
+//!    schedules to the world scope (and the deprecated `Communicator`
+//!    alias), with equal completion times.
+//! 2. A NIC failure *outside* a group's servers changes neither the
+//!    group's chosen strategy nor the content of its epoch-scoped plan.
+//!
+//! (`util::prop` is the mini driver — failures report a replayable seed.)
+
+#![allow(deprecated)] // half the point is pinning the Communicator alias
+
+use std::sync::Arc;
+
+use r2ccl::ccl::{CommWorld, Communicator, StrategyChoice};
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::collectives::{CollKind, PhantomPlane};
+use r2ccl::config::Preset;
+use r2ccl::schedule::Strategy;
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+const KINDS: [CollKind; 7] = [
+    CollKind::AllReduce,
+    CollKind::ReduceScatter,
+    CollKind::AllGather,
+    CollKind::Broadcast,
+    CollKind::Reduce,
+    CollKind::SendRecv,
+    CollKind::AllToAll,
+];
+
+fn random_action(rng: &mut Rng) -> FaultAction {
+    match rng.range(0, 4) {
+        0 => FaultAction::FailNic,
+        1 => FaultAction::CutCable,
+        2 => FaultAction::Degrade(rng.range_f64(0.05, 1.0)),
+        _ => FaultAction::Repair,
+    }
+}
+
+#[test]
+fn prop_full_rank_group_equals_world_scope_bit_for_bit() {
+    check("group([0..n)) == world scope", 20, |rng| {
+        let n_servers = *rng.choose(&[2usize, 4]);
+        let channels = *rng.choose(&[1usize, 2, 4]);
+        let preset = Preset::simai(n_servers);
+        let mut world = CommWorld::new(&preset, channels);
+        let mut alias = Communicator::new(&preset, channels);
+        for _ in 0..rng.range(0, 5) {
+            let nic = rng.range(0, world.topo().n_nics());
+            let action = random_action(rng);
+            world.note_failure(nic, action);
+            alias.note_failure(nic, action);
+        }
+        let kind = *rng.choose(&KINDS);
+        let bytes = rng.next_below(1 << 22) + 1;
+        let choice = *rng.choose(&[
+            StrategyChoice::Auto,
+            StrategyChoice::HotRepairOnly,
+            StrategyChoice::Force(Strategy::Balance),
+            StrategyChoice::Force(Strategy::R2AllReduce),
+            StrategyChoice::Force(Strategy::Recursive),
+        ]);
+        let all: Vec<usize> = (0..world.topo().n_gpus()).collect();
+        let group = world.group(&all);
+        let (g_sched, g_strat) = group.compile_uncached(kind, bytes, 0, choice);
+        // Same world, explicit world_group: identical schedule + strategy.
+        let (w_sched, w_strat) = world.world_group().compile_uncached(kind, bytes, 0, choice);
+        assert_eq!(g_strat, w_strat);
+        assert_eq!(g_sched, w_sched, "{kind:?} {choice:?} n={n_servers} c={channels}");
+        // The deprecated alias (independent world, same fault history)
+        // must still produce the same plan and the same completion time.
+        let (a_sched, a_strat) = alias.compile_uncached(kind, bytes, 0, choice);
+        assert_eq!(g_strat, a_strat, "{kind:?} {choice:?}: alias strategy drifted");
+        assert_eq!(g_sched, a_sched, "{kind:?} {choice:?}: alias schedule drifted");
+        g_sched.validate().unwrap();
+        let t_group = group.time_collective(kind, bytes, choice);
+        let t_alias = alias.time_collective(kind, bytes, choice);
+        assert_eq!(t_group, t_alias, "{kind:?} {choice:?}: completion drifted");
+    });
+}
+
+#[test]
+fn prop_failure_outside_group_does_not_change_its_plan() {
+    check("out-of-group failure leaves plans unchanged", 20, |rng| {
+        let preset = Preset::simai(4);
+        let channels = *rng.choose(&[1usize, 2]);
+        let mut world = CommWorld::new(&preset, channels);
+        // Group lives on servers {2, 3}; take a random non-empty rank
+        // subset that covers both servers.
+        let mut ranks: Vec<usize> = vec![16, 24]; // leads of servers 2, 3
+        for r in 17..32 {
+            if r != 24 && rng.chance(0.5) {
+                ranks.push(r);
+            }
+        }
+        let group = world.group(&ranks);
+        let kind = *rng.choose(&KINDS);
+        let bytes = rng.next_below(1 << 20) + 1;
+        let epoch_before = world.epoch();
+        let (before, strat_before) = group.compile(kind, bytes, 0, StrategyChoice::Auto);
+
+        // Failures land exclusively on servers 0/1 (NICs 0..16).
+        for _ in 0..rng.range(1, 4) {
+            let nic = rng.range(0, 16);
+            world.note_failure(nic, random_action(rng));
+        }
+        let (after, strat_after) = group.compile(kind, bytes, 0, StrategyChoice::Auto);
+        assert_eq!(
+            strat_before, strat_after,
+            "{kind:?}: strategy changed on an out-of-group failure"
+        );
+        assert_eq!(strat_after, Strategy::Standard, "healthy group servers → Standard");
+        assert_eq!(
+            *before, *after,
+            "{kind:?}: epoch-scoped plan changed on an out-of-group failure"
+        );
+        // The failure did bump the epoch (it is world state), so the plans
+        // are distinct cache entries with identical content.
+        if world.epoch() > epoch_before {
+            assert!(!Arc::ptr_eq(&before, &after), "new epoch must recompile");
+        }
+        // The group still executes fine while the outside failure stands.
+        let rep = group.run(kind, bytes, StrategyChoice::Auto, vec![], &mut PhantomPlane, 0);
+        assert!(!rep.crashed, "{kind:?} crashed on an out-of-group failure");
+        assert!(rep.migrations.is_empty(), "no group traffic crosses the failed NICs");
+    });
+}

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use r2ccl::ccl::{Communicator, StrategyChoice};
+use r2ccl::ccl::{CommWorld, StrategyChoice};
 use r2ccl::collectives::exec::FaultAction;
 use r2ccl::collectives::CollKind;
 use r2ccl::config::Preset;
@@ -38,11 +38,20 @@ fn prop_cached_compile_identical_to_fresh_across_fault_sequences() {
     check("cached compile == fresh compile", 24, |rng| {
         let n_servers = *rng.choose(&[2usize, 4]);
         let channels = *rng.choose(&[1usize, 2, 4]);
-        let mut comm = Communicator::new(&Preset::simai(n_servers), channels);
+        let mut world = CommWorld::new(&Preset::simai(n_servers), channels);
         for _ in 0..rng.range(0, 6) {
-            let nic = rng.range(0, comm.topo.n_nics());
-            comm.note_failure(nic, random_action(rng));
+            let nic = rng.range(0, world.topo().n_nics());
+            world.note_failure(nic, random_action(rng));
         }
+        // Randomly a world-scope group or a strict subset (one full server
+        // plus a slice of the next): the cache invariants hold per group.
+        let comm = if rng.chance(0.5) {
+            world.world_group()
+        } else {
+            let mut ranks: Vec<usize> = (0..8).collect();
+            ranks.extend(8..8 + rng.range(1, 8));
+            world.group(&ranks)
+        };
         let kind = *rng.choose(&KINDS);
         let bytes = rng.next_below(1 << 24) + 1;
         let choice = *rng.choose(&[
@@ -69,36 +78,37 @@ fn prop_cached_compile_identical_to_fresh_across_fault_sequences() {
 #[test]
 fn prop_health_mutations_bump_epoch_and_invalidate_cache() {
     check("note_failure/clear_failures bump the epoch", 16, |rng| {
-        let mut comm = Communicator::new(&Preset::testbed(), 2);
+        let mut world = CommWorld::new(&Preset::testbed(), 2);
+        let comm = world.world_group();
         let kind = *rng.choose(&KINDS);
         let bytes = rng.next_below(1 << 22) + 1;
-        let e0 = comm.epoch();
+        let e0 = world.epoch();
 
         let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
-        assert_eq!(comm.plan_cache_stats(), (0, 1));
+        assert_eq!(world.plan_cache_stats(), (0, 1));
         let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
-        assert_eq!(comm.plan_cache_stats(), (1, 1), "same epoch must hit");
+        assert_eq!(world.plan_cache_stats(), (1, 1), "same epoch must hit");
 
         // A real state change (failing a healthy NIC) must bump the epoch…
-        let nic = rng.range(0, comm.topo.n_nics());
-        comm.note_failure(nic, FaultAction::FailNic);
-        assert!(comm.epoch() > e0, "note_failure must bump the epoch");
+        let nic = rng.range(0, world.topo().n_nics());
+        world.note_failure(nic, FaultAction::FailNic);
+        assert!(world.epoch() > e0, "note_failure must bump the epoch");
         let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
-        assert_eq!(comm.plan_cache_stats(), (1, 2), "new epoch must miss");
+        assert_eq!(world.plan_cache_stats(), (1, 2), "new epoch must miss");
 
         // …while re-reporting the identical failure is a cache-friendly
         // no-op (the periodic-reprobe pattern).
-        let e_mid = comm.epoch();
-        comm.note_failure(nic, FaultAction::FailNic);
-        assert_eq!(comm.epoch(), e_mid, "duplicate report must not bump");
+        let e_mid = world.epoch();
+        world.note_failure(nic, FaultAction::FailNic);
+        assert_eq!(world.epoch(), e_mid, "duplicate report must not bump");
         let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
-        assert_eq!(comm.plan_cache_stats(), (2, 2), "duplicate report must hit");
+        assert_eq!(world.plan_cache_stats(), (2, 2), "duplicate report must hit");
 
-        let e1 = comm.epoch();
-        comm.clear_failures();
-        assert!(comm.epoch() > e1, "clearing real failures must bump");
+        let e1 = world.epoch();
+        world.clear_failures();
+        assert!(world.epoch() > e1, "clearing real failures must bump");
         let _ = comm.compile(kind, bytes, 0, StrategyChoice::Auto);
-        assert_eq!(comm.plan_cache_stats(), (2, 3), "cleared epoch must miss");
+        assert_eq!(world.plan_cache_stats(), (2, 3), "cleared epoch must miss");
     });
 }
 
@@ -107,21 +117,21 @@ fn prop_compiled_plans_survive_degrade_nan_injection() {
     // The API boundary clamps malformed Degrade factors; no fault sequence
     // containing NaN may panic the planner or produce non-finite health.
     check("NaN degrade never panics the planner", 12, |rng| {
-        let mut comm = Communicator::new(&Preset::testbed(), 2);
+        let mut world = CommWorld::new(&Preset::testbed(), 2);
         for _ in 0..rng.range(1, 5) {
-            let nic = rng.range(0, comm.topo.n_nics());
+            let nic = rng.range(0, world.topo().n_nics());
             let action = if rng.chance(0.5) {
                 FaultAction::Degrade(f64::NAN)
             } else {
                 random_action(rng)
             };
-            comm.note_failure(nic, action);
+            world.note_failure(nic, action);
         }
-        let (_, x) = comm.worst_server();
+        let (_, x) = world.worst_server();
         assert!(x.is_finite() && (0.0..=1.0).contains(&x), "x={x}");
-        assert!(comm.plan_input().rem.iter().all(|r| r.is_finite()));
+        assert!(world.plan_input().rem.iter().all(|r| r.is_finite()));
         let kind = *rng.choose(&KINDS);
-        let (sched, _) = comm.compile(kind, 1 << 16, 0, StrategyChoice::Auto);
+        let (sched, _) = world.world_group().compile(kind, 1 << 16, 0, StrategyChoice::Auto);
         sched.validate().unwrap();
     });
 }
