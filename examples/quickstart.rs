@@ -47,8 +47,8 @@ fn main() {
     let rep =
         comm.run(CollKind::AllReduce, small, StrategyChoice::Auto, script, &mut plane, elems);
     println!("\n-- fault injected at t={} --", fmt_time(t_small * 0.4));
-    for (at, msg) in &rep.timeline {
-        println!("  [{:>10}] {msg}", fmt_time(*at));
+    for e in &rep.timeline {
+        println!("  [{:>10}] {}", fmt_time(e.at), e.event);
     }
     plane.assert_all_equal(&expected);
     println!("data plane verified: AllReduce result identical to direct sum ✓");

@@ -73,6 +73,21 @@ impl RealPlane {
         out
     }
 
+    /// Non-panicking form of [`RealPlane::assert_ranks_equal`]: do the
+    /// given ranks hold `expected` (within reassociation tolerance)? Used
+    /// by the scenario runner, which records the verdict instead of
+    /// aborting the whole multi-iteration run.
+    pub fn ranks_equal(&self, ranks: &[usize], expected: &[f32]) -> bool {
+        ranks.iter().all(|&r| {
+            let buf = &self.ranks[r];
+            buf.len() == expected.len()
+                && buf
+                    .iter()
+                    .zip(expected.iter())
+                    .all(|(a, b)| (a - b).abs() <= 1e-3 * b.abs().max(1.0))
+        })
+    }
+
     /// Assert every rank holds `expected` exactly (bitwise would be too
     /// strict across reassociation; we require exact f32 equality because
     /// every strategy applies reductions in the same ring order).

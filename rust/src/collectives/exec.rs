@@ -9,13 +9,15 @@
 //! schedule level, and then execute here unchanged.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::Arc;
 
 use crate::config::TimingConfig;
 use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
-use crate::netsim::{engine_for, Engine, Event, FaultPlane, FlowId};
+use crate::netsim::{clamp_degrade_factor, engine_for, Engine, Event, FaultPlane, FlowId};
 use crate::topology::{NicId, ResourceKey, Route, Topology};
 use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
+use crate::util::Json;
 
 use super::dataplane::DataPlane;
 use super::schedule::Schedule;
@@ -43,6 +45,39 @@ pub enum FaultAction {
     CutCable,
     Repair,
     Degrade(f64),
+}
+
+impl FaultAction {
+    /// Stable serialization label (scenario files, golden traces).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultAction::FailNic => "fail_nic",
+            FaultAction::CutCable => "cut_cable",
+            FaultAction::Repair => "repair",
+            FaultAction::Degrade(_) => "degrade",
+        }
+    }
+
+    /// The degradation capacity factor, when this is a `Degrade`.
+    pub fn factor(&self) -> Option<f64> {
+        match self {
+            FaultAction::Degrade(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// Inverse of [`FaultAction::label`] + [`FaultAction::factor`].
+    pub fn from_parts(label: &str, factor: Option<f64>) -> Result<FaultAction, String> {
+        match label {
+            "fail_nic" => Ok(FaultAction::FailNic),
+            "cut_cable" => Ok(FaultAction::CutCable),
+            "repair" => Ok(FaultAction::Repair),
+            "degrade" => factor
+                .map(FaultAction::Degrade)
+                .ok_or_else(|| "degrade action needs a \"factor\"".to_string()),
+            other => Err(format!("unknown fault action {other:?}")),
+        }
+    }
 }
 
 /// Per-(channel, server) NIC binding — NCCL's channel↔rail affinity, and
@@ -82,6 +117,115 @@ impl Default for ExecOptions {
     }
 }
 
+/// One structured executor trace entry: what happened and when. These are
+/// the diffable units of a golden trace — `ScenarioReport` serializes them
+/// verbatim, so renaming or reordering the JSON fields emitted by
+/// [`TimelineEntry::to_json`] is a conformance-breaking change.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEntry {
+    pub at: f64,
+    pub event: TimelineEvent,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TimelineEvent {
+    /// A scripted fault fired.
+    Fault { nic: NicId, action: FaultAction },
+    /// A bandwidth fluctuation collapsed below the detection threshold —
+    /// in-flight transfers hit transport timeouts exactly as on a dead
+    /// link (§4 / Table 2 "link flapping"), so detection is scheduled.
+    FluctuationDetected { nic: NicId, factor: f64 },
+    /// Vanilla-NCCL policy: abort the job on the first network error.
+    VanillaAbort { nic: NicId },
+    /// Hot repair moved traffic off `nic` onto `replacement`.
+    Migration {
+        nic: NicId,
+        replacement: NicId,
+        diagnosis: Diagnosis,
+        flows: usize,
+        retransmitted_bytes: u64,
+        wasted_bytes: u64,
+    },
+    /// No healthy backup NIC left on the server — escalate to job abort.
+    NoAlternatePath { nic: NicId, server: usize },
+    /// Periodic reprobe saw the NIC healthy again; default routing restored.
+    Reprobed { nic: NicId },
+}
+
+impl fmt::Display for TimelineEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TimelineEvent::Fault { nic, action } => write!(f, "fault: {action:?} nic {nic}"),
+            TimelineEvent::FluctuationDetected { nic, factor } => {
+                write!(f, "fluctuation: nic {nic} capacity {factor:.3e} below threshold — treating as timeout")
+            }
+            TimelineEvent::VanillaAbort { nic } => {
+                write!(f, "vanilla NCCL: abort on network error (nic {nic})")
+            }
+            TimelineEvent::Migration {
+                nic,
+                replacement,
+                diagnosis,
+                flows,
+                retransmitted_bytes,
+                wasted_bytes,
+            } => write!(
+                f,
+                "hot repair: nic {nic} ({diagnosis:?}) → nic {replacement}, {flows} flows, {retransmitted_bytes}B retransmit, {wasted_bytes}B wasted"
+            ),
+            TimelineEvent::NoAlternatePath { nic, server } => {
+                write!(f, "no healthy backup NIC for nic {nic} on server {server} — abort")
+            }
+            TimelineEvent::Reprobed { nic } => {
+                write!(f, "reprobe: nic {nic} recovered, routing restored")
+            }
+        }
+    }
+}
+
+impl TimelineEntry {
+    /// Deterministic JSON form (the golden-trace wire format).
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj().set("at", self.at);
+        match &self.event {
+            TimelineEvent::Fault { nic, action } => {
+                let j = j.set("event", "fault").set("nic", *nic).set("action", action.label());
+                match action.factor() {
+                    Some(f) => j.set("factor", f),
+                    None => j,
+                }
+            }
+            TimelineEvent::FluctuationDetected { nic, factor } => j
+                .set("event", "fluctuation_detected")
+                .set("nic", *nic)
+                .set("factor", *factor),
+            TimelineEvent::VanillaAbort { nic } => {
+                j.set("event", "vanilla_abort").set("nic", *nic)
+            }
+            TimelineEvent::Migration {
+                nic,
+                replacement,
+                diagnosis,
+                flows,
+                retransmitted_bytes,
+                wasted_bytes,
+            } => j
+                .set("event", "migration")
+                .set("nic", *nic)
+                .set("replacement", *replacement)
+                .set("diagnosis", format!("{diagnosis:?}"))
+                .set("flows", *flows)
+                .set("retransmitted_bytes", *retransmitted_bytes)
+                .set("wasted_bytes", *wasted_bytes),
+            TimelineEvent::NoAlternatePath { nic, server } => j
+                .set("event", "no_alternate_path")
+                .set("nic", *nic)
+                .set("server", *server),
+            TimelineEvent::Reprobed { nic } => j.set("event", "reprobed").set("nic", *nic),
+        }
+    }
+}
+
 /// One recovery occurrence.
 #[derive(Debug, Clone)]
 pub struct MigrationRecord {
@@ -104,7 +248,8 @@ pub struct ExecReport {
     pub migrations: Vec<MigrationRecord>,
     /// Bytes that crossed the wire, including wasted partial chunks.
     pub wire_bytes: u64,
-    pub timeline: Vec<(f64, String)>,
+    /// Structured trace of everything the recovery pipeline did.
+    pub timeline: Vec<TimelineEntry>,
 }
 
 impl ExecReport {
@@ -181,16 +326,23 @@ impl<'a> Executor<'a> {
 
     /// Apply pre-existing faults before the collective starts (the
     /// scheduler already knows about them, so routing is rewritten too).
+    /// A standing `Degrade` whose clamped factor sits below the
+    /// fluctuation-detection threshold is routed around like a dead link:
+    /// the earlier collective already timed out and migrated off it, and
+    /// that knowledge persists until a reprobe repairs the NIC.
     pub fn with_initial_faults(mut self, nics: &[(NicId, FaultAction)]) -> Self {
         for &(nic, action) in nics {
             self.apply_fault(nic, action);
-            if matches!(action, FaultAction::FailNic | FaultAction::CutCable) {
+            let collapsed = action
+                .factor()
+                .is_some_and(|f| clamp_degrade_factor(f) < self.timing.degrade_detect_threshold);
+            if matches!(action, FaultAction::FailNic | FaultAction::CutCable) || collapsed {
                 let gpu = self.topo.affinity_gpu(nic);
                 if let Some(rep) = self
                     .topo
                     .failover_chain(gpu)
                     .into_iter()
-                    .find(|&n| self.faults.is_usable(n))
+                    .find(|&n| n != nic && self.faults.is_usable(n))
                 {
                     self.migrated_to.insert(nic, rep);
                 }
@@ -255,25 +407,53 @@ impl<'a> Executor<'a> {
                 }
                 Event::Timer(_, tag) => match tag & TAG_MASK {
                     TAG_FAULT => {
-                        let f = self.script[(tag & !TAG_MASK) as usize];
-                        self.log(t, format!("fault: {:?} nic {}", f.action, f.nic));
-                        self.apply_fault(f.nic, f.action);
-                        match f.action {
+                        let fe = self.script[(tag & !TAG_MASK) as usize];
+                        self.log(t, TimelineEvent::Fault { nic: fe.nic, action: fe.action });
+                        self.apply_fault(fe.nic, fe.action);
+                        match fe.action {
                             FaultAction::FailNic | FaultAction::CutCable => {
                                 if self.opts.policy == FailurePolicy::Crash {
-                                    self.log(t, "vanilla NCCL: abort on network error".into());
+                                    self.log(t, TimelineEvent::VanillaAbort { nic: fe.nic });
                                     self.report.crashed = true;
                                     return self.report;
                                 }
-                                let det = self.detection_latency(f.nic);
-                                self.engine.set_timer(t + det, TAG_DETECT | f.nic as u64);
+                                let det = self.detection_latency(fe.nic);
+                                self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
                             }
                             FaultAction::Repair => {
                                 let next = ((t / self.timing.reprobe_interval).floor() + 1.0)
                                     * self.timing.reprobe_interval;
-                                self.engine.set_timer(next, TAG_REPROBE | f.nic as u64);
+                                self.engine.set_timer(next, TAG_REPROBE | fe.nic as u64);
                             }
-                            FaultAction::Degrade(_) => {}
+                            FaultAction::Degrade(raw) => {
+                                // Fluctuation-triggered timeout: when the
+                                // clamped capacity factor collapses below
+                                // the timing threshold, in-flight work hits
+                                // transport timeouts exactly as on a dead
+                                // link — detect and migrate. Mild
+                                // degradations (CRC retries) stay on the
+                                // slow path; vanilla NCCL has no
+                                // fluctuation detection and just crawls.
+                                let factor = clamp_degrade_factor(raw);
+                                if self.opts.policy == FailurePolicy::HotRepair
+                                    && factor < self.timing.degrade_detect_threshold
+                                    && !self.migrated_to.contains_key(&fe.nic)
+                                {
+                                    // The migrated_to guard keeps a ramp
+                                    // whose tail repeatedly dips below the
+                                    // threshold from re-migrating a NIC
+                                    // traffic already left.
+                                    self.log(
+                                        t,
+                                        TimelineEvent::FluctuationDetected {
+                                            nic: fe.nic,
+                                            factor,
+                                        },
+                                    );
+                                    let det = self.detection_latency(fe.nic);
+                                    self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
+                                }
+                            }
                         }
                     }
                     TAG_DETECT => {
@@ -287,7 +467,7 @@ impl<'a> Executor<'a> {
                         let nic = (tag & !TAG_MASK) as NicId;
                         if self.faults.is_usable(nic) {
                             self.restore_routing(nic);
-                            self.log(t, format!("reprobe: nic {nic} recovered, routing restored"));
+                            self.log(t, TimelineEvent::Reprobed { nic });
                         }
                     }
                     _ => unreachable!("unknown timer tag {tag:#x}"),
@@ -303,8 +483,8 @@ impl<'a> Executor<'a> {
 
     // ------------------------------------------------------------------
 
-    fn log(&mut self, t: f64, msg: String) {
-        self.report.timeline.push((t, msg));
+    fn log(&mut self, at: f64, event: TimelineEvent) {
+        self.report.timeline.push(TimelineEntry { at, event });
     }
 
     /// Current routing table: the working copy if a migration materialized
@@ -424,7 +604,7 @@ impl<'a> Executor<'a> {
         let Some(replacement) = replacement else {
             self.log(
                 t,
-                format!("no healthy backup NIC on server {} — abort", self.topo.server_of_nic(nic)),
+                TimelineEvent::NoAlternatePath { nic, server: self.topo.server_of_nic(nic) },
             );
             return false;
         };
@@ -472,10 +652,14 @@ impl<'a> Executor<'a> {
         }
         self.log(
             t,
-            format!(
-                "hot repair: nic {nic} ({diagnosis:?}) → nic {replacement}, {} flows, {}B retransmit, {}B wasted",
-                rec.flows_migrated, rec.retransmitted_bytes, rec.wasted_bytes
-            ),
+            TimelineEvent::Migration {
+                nic,
+                replacement,
+                diagnosis,
+                flows: rec.flows_migrated,
+                retransmitted_bytes: rec.retransmitted_bytes,
+                wasted_bytes: rec.wasted_bytes,
+            },
         );
         self.report.migrations.push(rec);
         true
@@ -696,7 +880,10 @@ mod tests {
             .run(&sched, &mut PhantomPlane);
         assert!(!rep.crashed);
         // Timeline contains the reprobe-recovery entry.
-        assert!(rep.timeline.iter().any(|(_, m)| m.contains("recovered")));
+        assert!(rep
+            .timeline
+            .iter()
+            .any(|e| matches!(e.event, TimelineEvent::Reprobed { nic: 0 })));
         // Recovered run finishes faster than a permanently-degraded one.
         let perm = Executor::new(
             &t,
@@ -743,10 +930,13 @@ mod tests {
     }
 
     #[test]
-    fn scripted_nan_degrade_is_clamped_not_fatal() {
+    fn scripted_nan_degrade_is_clamped_and_collapses_to_migration() {
         // Fault scripts bypass the communicator's note_failure sanitizer;
         // the FaultPlane-level clamp must keep a Degrade(NaN) from hitting
-        // the engine's `factor > 0` assertion mid-collective.
+        // the engine's `factor > 0` assertion mid-collective. The clamped
+        // factor (~1e-9) is far below the fluctuation threshold, so the
+        // collapse is detected like a timeout and migrated instead of
+        // letting the collective crawl on a dead-in-practice link.
         let t = topo();
         let d: u64 = 1 << 24;
         let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
@@ -757,8 +947,49 @@ mod tests {
         }];
         let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
         assert!(!rep.crashed);
-        assert!(rep.migrations.is_empty(), "degradation must not migrate");
+        assert!(rep
+            .timeline
+            .iter()
+            .any(|e| matches!(e.event, TimelineEvent::FluctuationDetected { nic: 0, .. })));
+        assert_eq!(rep.migrations.len(), 1, "deep fluctuation must migrate");
         assert!(rep.completion_or_panic() > base.completion_or_panic());
+    }
+
+    #[test]
+    fn degrade_at_threshold_does_not_migrate() {
+        // The fluctuation trigger is strict: a factor exactly at
+        // `degrade_detect_threshold` is still a plain degradation.
+        let t = topo();
+        let d: u64 = 1 << 24;
+        let timing = TimingConfig::default();
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let script = vec![FaultEvent {
+            at: base.completion_or_panic() * 0.3,
+            nic: 0,
+            action: FaultAction::Degrade(timing.degrade_detect_threshold),
+        }];
+        let rep = run_allreduce(&t, d, 8, script, ExecOptions::default());
+        assert!(!rep.crashed);
+        assert!(rep.migrations.is_empty(), "at-threshold degrade must not migrate");
+        assert!(rep.completion_or_panic() > base.completion_or_panic());
+    }
+
+    #[test]
+    fn deep_degrade_under_crash_policy_does_not_abort() {
+        // Vanilla NCCL has no fluctuation detection: a collapsed link is
+        // not an error CQE, so the job crawls but does not abort.
+        let t = topo();
+        let d: u64 = 1 << 24;
+        let base = run_allreduce(&t, d, 8, vec![], ExecOptions::default());
+        let opts = ExecOptions { policy: FailurePolicy::Crash, ..Default::default() };
+        let script = vec![FaultEvent {
+            at: base.completion_or_panic() * 0.3,
+            nic: 0,
+            action: FaultAction::Degrade(0.01),
+        }];
+        let rep = run_allreduce(&t, d, 8, script, opts);
+        assert!(!rep.crashed);
+        assert!(rep.migrations.is_empty());
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod tree;
 pub use dataplane::{DataPlane, PhantomPlane, RealPlane};
 pub use exec::{
     ChannelRouting, ExecOptions, ExecReport, Executor, FailurePolicy, FaultAction, FaultEvent,
-    MigrationRecord,
+    MigrationRecord, TimelineEntry, TimelineEvent,
 };
 pub use ring::{
     nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter,

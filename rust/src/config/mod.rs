@@ -35,6 +35,12 @@ pub struct TimingConfig {
     pub reprobe_interval: f64,
     /// Chunk size of the transport (rollback granularity).
     pub chunk_bytes: u64,
+    /// Capacity factor below which a bandwidth fluctuation is handled like
+    /// a link failure: in-flight transfers hit transport timeouts (the
+    /// paper's flapping / fluctuation-triggered detection) and migrate
+    /// instead of crawling on the collapsed link. Factors at or above the
+    /// threshold are plain degradations (CRC retries) and stay put.
+    pub degrade_detect_threshold: f64,
 }
 
 impl Default for TimingConfig {
@@ -50,6 +56,7 @@ impl Default for TimingConfig {
             conn_setup_cost: 30.0e-3,
             reprobe_interval: 1.0,
             chunk_bytes: 512 * 1024,
+            degrade_detect_threshold: 0.05,
         }
     }
 }

@@ -5,6 +5,8 @@
 //!   bench-collective  --kind allreduce --bytes N --fail-nics 1 --strategy auto
 //!   train-sim         --model 2.7b --dp 16 [--tp 8 --pp 2] --fail-nics 1
 //!   serve-sim         --model 405b --qps 0.3 --strategy r2|restart|reroute|dejavu
+//!   scenario          [--file scenarios/x.json | --dir scenarios]
+//!                     [--golden-dir rust/tests/fixtures] [--regen] [--json]
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -152,6 +154,76 @@ fn main() -> anyhow::Result<()> {
                 tpot.p95() * 1e3
             );
         }
+        "scenario" => {
+            // Run the committed fault-scenario corpus (or one file): compile
+            // the declarative description, drive the multi-iteration
+            // workload, check the built-in invariants, and optionally
+            // byte-compare each report against its golden trace.
+            use r2ccl::scenario::{compare_or_seed, FaultScenario, GoldenOutcome, ScenarioRunner};
+            let preset = Preset::testbed();
+            let paths: Vec<std::path::PathBuf> = if let Some(f) = args.get("file") {
+                vec![f.into()]
+            } else {
+                let dir = args.get_or("dir", "scenarios");
+                let mut ps: Vec<_> = std::fs::read_dir(dir)
+                    .map_err(|e| anyhow::anyhow!("cannot read scenario dir {dir}: {e}"))?
+                    .filter_map(|ent| ent.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+                    .collect();
+                ps.sort();
+                ps
+            };
+            let golden_dir = args.get("golden-dir").map(std::path::PathBuf::from);
+            let mut failed = false;
+            for path in paths {
+                let text = std::fs::read_to_string(&path)?;
+                let sc = FaultScenario::from_json_str(&text)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                sc.validate(&preset.topo).map_err(|e| anyhow::anyhow!(e))?;
+                let report = ScenarioRunner::new(&sc, &preset).run();
+                println!(
+                    "{:<24} iters {:>2}/{:<2}  overhead {:>7.2}%  migrations {:>2}  wasted {:>8}B  {}{}",
+                    sc.name,
+                    report.iterations.iter().filter(|r| !r.crashed).count(),
+                    sc.iters,
+                    report.overhead * 100.0,
+                    report.migrations,
+                    report.wasted_bytes,
+                    if report.crashed { "CRASHED" } else { "ok" },
+                    if report.lossless { "" } else { " LOSSY" },
+                );
+                if let Err(e) = report.check_invariants() {
+                    eprintln!("  invariant violated: {e}");
+                    failed = true;
+                }
+                if args.has("json") {
+                    println!("{}", report.to_json().pretty());
+                }
+                if let Some(dir) = &golden_dir {
+                    let trace = report.to_json().pretty() + "\n";
+                    let fixture = dir.join(format!("{}.golden.json", sc.name));
+                    match compare_or_seed(&fixture, &trace, args.has("regen"))? {
+                        GoldenOutcome::Seeded => {
+                            println!("  golden trace written to {}", fixture.display());
+                        }
+                        GoldenOutcome::Matched => {
+                            println!("  golden trace matches {}", fixture.display());
+                        }
+                        GoldenOutcome::Mismatch { actual } => {
+                            eprintln!(
+                                "  golden-trace mismatch vs {} (fresh run at {})",
+                                fixture.display(),
+                                actual.display()
+                            );
+                            failed = true;
+                        }
+                    }
+                }
+            }
+            if failed {
+                std::process::exit(1);
+            }
+        }
         #[cfg(feature = "xla")]
         "train-e2e" => {
             let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
@@ -190,7 +262,9 @@ fn main() -> anyhow::Result<()> {
                 world.topo().cfg.nics_per_server,
                 world.topo().n_resources()
             );
-            println!("subcommands: bench-collective | train-sim | serve-sim | train-e2e | info");
+            println!(
+                "subcommands: bench-collective | train-sim | serve-sim | scenario | train-e2e | info"
+            );
         }
     }
     Ok(())

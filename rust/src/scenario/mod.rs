@@ -1,0 +1,111 @@
+//! Deterministic fault-scenario engine + golden-trace conformance.
+//!
+//! * [`spec`] — declarative, seeded [`FaultScenario`] descriptions
+//!   (one-shot faults, flapping NICs, degrade ramps, correlated same-rail
+//!   failures, cascades, repair windows, random multi-fault patterns) that
+//!   compile through [`crate::util::Rng`] into concrete, deterministic
+//!   event scripts.
+//! * [`runner`] — the multi-iteration [`ScenarioRunner`] driving
+//!   [`crate::ccl::CommWorld`] training/serving loops with fault-plane
+//!   state carried across collectives, emitting a [`ScenarioReport`] with
+//!   built-in invariant checkers (losslessness vs the healthy data-plane
+//!   result, no-crash-while-a-path-exists, bounded overhead).
+//!
+//! Reports serialize deterministically (`ScenarioReport::to_json`), which
+//! is what the golden-trace snapshot tests (`rust/tests/golden_traces.rs`)
+//! byte-compare against the committed fixtures for the `scenarios/` corpus.
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{IterationRecord, ScenarioReport, ScenarioRunner};
+pub use spec::{sample_multi_fault, FaultPattern, FaultScenario, ScenarioEvent, Workload};
+
+use std::path::{Path, PathBuf};
+
+use crate::collectives::exec::{ExecReport, TimelineEntry};
+use crate::schedule::Strategy;
+
+/// Executor-level aggregates of one scenario-driven workload iteration —
+/// what the training and serving iteration drivers hand back to the
+/// [`ScenarioRunner`].
+#[derive(Debug, Clone)]
+pub struct IterOutcome {
+    /// Iteration communication (+ serving compute) time.
+    pub time: f64,
+    pub crashed: bool,
+    pub migrations: usize,
+    pub retransmitted_bytes: u64,
+    pub wasted_bytes: u64,
+    pub wire_bytes: u64,
+    /// Strategy the planner chose for the iteration's main collective.
+    pub strategy: Strategy,
+    /// Structured trace of the scripted main collective.
+    pub timeline: Vec<TimelineEntry>,
+    /// Data-plane verification verdict (`None` when not applicable, e.g.
+    /// SendRecv mains or verification disabled).
+    pub lossless: Option<bool>,
+}
+
+impl IterOutcome {
+    /// Aggregate an executor report into an iteration outcome — the single
+    /// implementation behind the training and serving iteration drivers.
+    /// `extra_time` carries whatever the workload adds around the scripted
+    /// collective (side collectives, prefill compute).
+    pub fn from_report(
+        rep: ExecReport,
+        extra_time: f64,
+        strategy: Strategy,
+        lossless: Option<bool>,
+    ) -> IterOutcome {
+        IterOutcome {
+            time: extra_time + rep.completion.unwrap_or(0.0),
+            crashed: rep.crashed || rep.completion.is_none(),
+            migrations: rep.migrations.len(),
+            retransmitted_bytes: rep.migrations.iter().map(|m| m.retransmitted_bytes).sum(),
+            wasted_bytes: rep.migrations.iter().map(|m| m.wasted_bytes).sum(),
+            wire_bytes: rep.wire_bytes,
+            strategy,
+            timeline: rep.timeline,
+            lossless,
+        }
+    }
+}
+
+/// Outcome of a golden-trace comparison (see [`compare_or_seed`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GoldenOutcome {
+    /// The fixture was missing (bootstrap) or regeneration was forced; the
+    /// fresh trace has been written to the fixture path.
+    Seeded,
+    /// The fresh trace byte-matches the committed fixture.
+    Matched,
+    /// The trace diverged; the fresh trace was written next to the fixture
+    /// (a `.actual.json` sibling) for diffing.
+    Mismatch { actual: PathBuf },
+}
+
+/// The golden-trace bootstrap/compare/regen protocol, shared by the
+/// `scenario` CLI subcommand and `rust/tests/golden_traces.rs` so the two
+/// can never drift: seed the fixture when missing (or when `regen`),
+/// otherwise byte-compare and dump the fresh trace beside the fixture on
+/// mismatch.
+pub fn compare_or_seed(
+    fixture: &Path,
+    trace: &str,
+    regen: bool,
+) -> std::io::Result<GoldenOutcome> {
+    if regen || !fixture.exists() {
+        if let Some(dir) = fixture.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(fixture, trace)?;
+        return Ok(GoldenOutcome::Seeded);
+    }
+    if std::fs::read_to_string(fixture)? == trace {
+        return Ok(GoldenOutcome::Matched);
+    }
+    let actual = fixture.with_extension("actual.json");
+    std::fs::write(&actual, trace)?;
+    Ok(GoldenOutcome::Mismatch { actual })
+}

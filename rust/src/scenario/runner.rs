@@ -1,0 +1,523 @@
+//! Multi-iteration scenario runner and its report.
+//!
+//! [`ScenarioRunner`] compiles a [`FaultScenario`] into its deterministic
+//! event script and drives a [`CommWorld`] workload loop — 3D-parallel
+//! training collectives on TP/PP/DP process groups, or PD-disaggregated
+//! serving KV transfers — for `iters` iterations. Fault-plane state is
+//! carried *across* collectives: events landing mid-iteration are injected
+//! into that iteration's executor script (mid-flight detection, migration,
+//! rollback), then folded into the world's known-failure list so every
+//! subsequent iteration plans around the new health state, exactly like a
+//! long-running job whose communicator re-plans after OOB broadcasts.
+//!
+//! The emitted [`ScenarioReport`] carries per-iteration times, goodput,
+//! migration/rollback byte counts, the structured executor traces, and
+//! three built-in invariants (`check_invariants`):
+//! * **losslessness** — AllReduce mains run over a real data plane and
+//!   must reproduce the healthy elementwise sum;
+//! * **no crash while a path exists** — the run may only crash after some
+//!   main-group server lost its last usable NIC;
+//! * **bounded overhead** — when the scenario declares `max_overhead`, the
+//!   mean per-iteration overhead vs the healthy baseline must stay below.
+
+use crate::ccl::{CommGroup, CommWorld, StrategyChoice};
+use crate::collectives::exec::{FaultAction, FaultEvent, TimelineEntry};
+use crate::collectives::CollKind;
+use crate::config::Preset;
+use crate::sim::inference::{kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, InferModel};
+use crate::sim::training::{
+    scenario_main_collective, scenario_training_iteration, training_groups, ParallelConfig,
+    TrainingGroups,
+};
+use crate::topology::{NicId, ServerId, Topology};
+use crate::util::Json;
+
+use super::spec::{FaultScenario, ScenarioEvent, Workload};
+use super::IterOutcome;
+
+/// One iteration's record in the report.
+#[derive(Debug, Clone)]
+pub struct IterationRecord {
+    pub iter: usize,
+    pub time: f64,
+    pub strategy: String,
+    pub migrations: usize,
+    pub retransmitted_bytes: u64,
+    pub wasted_bytes: u64,
+    pub wire_bytes: u64,
+    pub crashed: bool,
+    pub lossless: Option<bool>,
+    /// Structured executor trace of the iteration's scripted collective.
+    pub trace: Vec<TimelineEntry>,
+}
+
+/// The deterministic result of a scenario run; `to_json().pretty()` is the
+/// golden-trace wire format.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub events: Vec<ScenarioEvent>,
+    /// Healthy-baseline iteration time (no faults, same workload).
+    pub healthy_iter_time: f64,
+    /// Healthy completion time of the main collective — the base that maps
+    /// fractional event times onto executor seconds.
+    pub time_base: f64,
+    pub iterations: Vec<IterationRecord>,
+    pub total_time: f64,
+    /// Payload bytes moved per wall-clock second across the whole run.
+    pub goodput: f64,
+    /// Mean per-iteration overhead vs the healthy baseline (non-crashed
+    /// iterations).
+    pub overhead: f64,
+    pub migrations: usize,
+    pub retransmitted_bytes: u64,
+    pub wasted_bytes: u64,
+    pub wire_bytes: u64,
+    pub crashed: bool,
+    /// True once some main-group server had zero usable NICs (the only
+    /// state in which a crash is legitimate).
+    pub path_lost: bool,
+    pub lossless: bool,
+    pub max_overhead: Option<f64>,
+}
+
+impl ScenarioReport {
+    /// The scenario harness's built-in invariants. `Err` carries the first
+    /// violated claim.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.crashed && !self.path_lost {
+            return Err(format!(
+                "scenario {:?}: crashed while every server still had a usable NIC",
+                self.scenario
+            ));
+        }
+        if !self.lossless {
+            return Err(format!(
+                "scenario {:?}: data-plane verification failed (result != healthy sum)",
+                self.scenario
+            ));
+        }
+        if let (Some(bound), false) = (self.max_overhead, self.crashed) {
+            if self.overhead > bound {
+                return Err(format!(
+                    "scenario {:?}: mean overhead {:.4} exceeds bound {:.4}",
+                    self.scenario, self.overhead, bound
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic serialization — byte-stable across runs with the same
+    /// scenario + seed, which is what the golden-trace tests compare.
+    pub fn to_json(&self) -> Json {
+        let mut events = Json::arr();
+        for e in &self.events {
+            events.push(e.to_json());
+        }
+        let mut iters = Json::arr();
+        for r in &self.iterations {
+            let mut trace = Json::arr();
+            for t in &r.trace {
+                trace.push(t.to_json());
+            }
+            iters.push(
+                Json::obj()
+                    .set("iter", r.iter)
+                    .set("time", r.time)
+                    .set("strategy", r.strategy.as_str())
+                    .set("migrations", r.migrations)
+                    .set("retransmitted_bytes", r.retransmitted_bytes)
+                    .set("wasted_bytes", r.wasted_bytes)
+                    .set("wire_bytes", r.wire_bytes)
+                    .set("crashed", r.crashed)
+                    .set(
+                        "lossless",
+                        match r.lossless {
+                            Some(b) => Json::Bool(b),
+                            None => Json::Null,
+                        },
+                    )
+                    .set("trace", trace),
+            );
+        }
+        let j = Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("seed", self.seed)
+            .set("events", events)
+            .set("healthy_iter_time", self.healthy_iter_time)
+            .set("time_base", self.time_base)
+            .set("iterations", iters)
+            .set("total_time", self.total_time)
+            .set("goodput", self.goodput)
+            .set("overhead", self.overhead)
+            .set("migrations", self.migrations)
+            .set("retransmitted_bytes", self.retransmitted_bytes)
+            .set("wasted_bytes", self.wasted_bytes)
+            .set("wire_bytes", self.wire_bytes)
+            .set("crashed", self.crashed)
+            .set("path_lost", self.path_lost)
+            .set("lossless", self.lossless);
+        match self.max_overhead {
+            Some(m) => j.set("max_overhead", m),
+            None => j,
+        }
+    }
+}
+
+/// Workload context bound to one `CommWorld`.
+enum Ctx {
+    Training { par: ParallelConfig, groups: TrainingGroups, bytes_per_rank: u64 },
+    Serving { model: InferModel, pair: CommGroup, prompt_tokens: usize },
+}
+
+impl Ctx {
+    fn build(world: &CommWorld, workload: &Workload) -> Ctx {
+        match workload {
+            Workload::Training { tp, dp, pp, bytes_per_rank } => {
+                let par = ParallelConfig {
+                    dp: *dp,
+                    tp: *tp,
+                    pp: *pp,
+                    global_batch: 64,
+                    microbatch: 2,
+                };
+                assert_eq!(
+                    par.n_gpus(),
+                    world.topo().n_gpus(),
+                    "training workload must exactly fill the topology"
+                );
+                let groups = training_groups(world, &par);
+                Ctx::Training { par, groups, bytes_per_rank: *bytes_per_rank }
+            }
+            Workload::Serving { prompt_tokens } => Ctx::Serving {
+                model: InferModel::llama70b(),
+                pair: pd_kv_pair(world),
+                prompt_tokens: *prompt_tokens,
+            },
+        }
+    }
+
+    /// The collective scenario scripts land in: group, kind, per-rank bytes.
+    fn main_info(&self) -> (&CommGroup, CollKind, u64) {
+        match self {
+            Ctx::Training { par, groups, bytes_per_rank } => {
+                scenario_main_collective(groups, par, *bytes_per_rank)
+            }
+            Ctx::Serving { model, pair, prompt_tokens } => {
+                (pair, CollKind::SendRecv, kv_shard_bytes(model, *prompt_tokens))
+            }
+        }
+    }
+}
+
+/// Drives a scenario's workload loop and produces its report.
+pub struct ScenarioRunner<'a> {
+    scenario: &'a FaultScenario,
+    preset: Preset,
+    channels: usize,
+    choice: StrategyChoice,
+    verify_data: bool,
+}
+
+impl<'a> ScenarioRunner<'a> {
+    pub fn new(scenario: &'a FaultScenario, preset: &Preset) -> ScenarioRunner<'a> {
+        ScenarioRunner {
+            scenario,
+            preset: preset.clone(),
+            channels: preset.topo.nics_per_server,
+            choice: StrategyChoice::Auto,
+            verify_data: true,
+        }
+    }
+
+    pub fn with_channels(mut self, channels: usize) -> Self {
+        self.channels = channels;
+        self
+    }
+
+    pub fn with_choice(mut self, choice: StrategyChoice) -> Self {
+        self.choice = choice;
+        self
+    }
+
+    /// Skip the per-iteration data-plane verification (timing-only runs).
+    pub fn without_data_verify(mut self) -> Self {
+        self.verify_data = false;
+        self
+    }
+
+    fn drive(&self, world: &CommWorld, ctx: &Ctx, script: Vec<FaultEvent>, verify: bool) -> IterOutcome {
+        match ctx {
+            Ctx::Training { par, groups, bytes_per_rank } => scenario_training_iteration(
+                world,
+                groups,
+                par,
+                *bytes_per_rank,
+                self.choice,
+                script,
+                verify,
+            ),
+            Ctx::Serving { model, pair, prompt_tokens } => scenario_serving_iteration(
+                world,
+                pair,
+                model,
+                *prompt_tokens,
+                self.choice,
+                script,
+            ),
+        }
+    }
+
+    pub fn run(&self) -> ScenarioReport {
+        // Malformed scenarios (out-of-range NIC/rail/server indices) are a
+        // caller error; the CLI validates first for a clean message.
+        if let Err(e) = self.scenario.validate(&self.preset.topo) {
+            panic!("{e}");
+        }
+        let events = self.scenario.compile(&self.preset.topo);
+
+        // Healthy baseline: same workload, pristine world. `time_base` (the
+        // main collective's healthy completion) maps fractional event times
+        // onto executor seconds.
+        let healthy_world = CommWorld::new(&self.preset, self.channels);
+        let healthy_ctx = Ctx::build(&healthy_world, &self.scenario.workload);
+        let (main, main_kind, main_bytes) = healthy_ctx.main_info();
+        let time_base = main
+            .time_collective(main_kind, main_bytes, self.choice)
+            .expect("healthy main collective must complete");
+        let payload_per_iter = main_bytes.saturating_mul(main.n_ranks() as u64);
+        let main_servers: Vec<ServerId> = main.servers().to_vec();
+        let healthy_out = self.drive(&healthy_world, &healthy_ctx, Vec::new(), false);
+        assert!(!healthy_out.crashed, "healthy baseline iteration crashed");
+        let healthy_iter_time = healthy_out.time;
+
+        // The scenario world: fault-plane state accumulates across
+        // iterations through `note_failure`.
+        let mut world = CommWorld::new(&self.preset, self.channels);
+        let ctx = Ctx::build(&world, &self.scenario.workload);
+        let topo = Topology::build(&self.preset.topo);
+        let mut usable: Vec<bool> = vec![true; topo.n_nics()];
+        let mut path_lost = false;
+        let mut records: Vec<IterationRecord> = Vec::new();
+        let mut ei = 0usize;
+        let mut crashed = false;
+        let mut total_time = 0.0f64;
+
+        for k in 0..self.scenario.iters {
+            let mut script: Vec<FaultEvent> = Vec::new();
+            let mut folds: Vec<ScenarioEvent> = Vec::new();
+            while ei < events.len() && events[ei].at_iter < (k + 1) as f64 {
+                let e = events[ei];
+                ei += 1;
+                note_ground_truth(&mut usable, e.nic, e.action);
+                if !path_exists(&topo, &usable, &main_servers) {
+                    path_lost = true;
+                }
+                let frac = e.at_iter - k as f64;
+                if frac <= 0.0 {
+                    // On-the-boundary events are known before the iteration
+                    // starts: plan-time knowledge, no mid-flight injection.
+                    world.note_failure(e.nic, e.action);
+                } else {
+                    script.push(FaultEvent { at: frac * time_base, nic: e.nic, action: e.action });
+                    folds.push(e);
+                }
+            }
+            let out = self.drive(&world, &ctx, script, self.verify_data);
+            // Mid-flight events become standing knowledge for the *next*
+            // iteration (the OOB broadcast of §4.1).
+            for e in folds {
+                world.note_failure(e.nic, e.action);
+            }
+            total_time += out.time;
+            records.push(IterationRecord {
+                iter: k,
+                time: out.time,
+                strategy: format!("{:?}", out.strategy),
+                migrations: out.migrations,
+                retransmitted_bytes: out.retransmitted_bytes,
+                wasted_bytes: out.wasted_bytes,
+                wire_bytes: out.wire_bytes,
+                crashed: out.crashed,
+                lossless: out.lossless,
+                trace: out.timeline,
+            });
+            if out.crashed {
+                crashed = true;
+                break;
+            }
+        }
+
+        let completed: Vec<&IterationRecord> =
+            records.iter().filter(|r| !r.crashed).collect();
+        let overhead = if completed.is_empty() {
+            0.0
+        } else {
+            completed
+                .iter()
+                .map(|r| (r.time - healthy_iter_time) / healthy_iter_time)
+                .sum::<f64>()
+                / completed.len() as f64
+        };
+        let goodput = if total_time > 0.0 {
+            completed.len() as f64 * payload_per_iter as f64 / total_time
+        } else {
+            0.0
+        };
+        ScenarioReport {
+            scenario: self.scenario.name.clone(),
+            seed: self.scenario.seed,
+            events,
+            healthy_iter_time,
+            time_base,
+            total_time,
+            goodput,
+            overhead,
+            migrations: records.iter().map(|r| r.migrations).sum(),
+            retransmitted_bytes: records.iter().map(|r| r.retransmitted_bytes).sum(),
+            wasted_bytes: records.iter().map(|r| r.wasted_bytes).sum(),
+            wire_bytes: records.iter().map(|r| r.wire_bytes).sum(),
+            crashed,
+            path_lost,
+            lossless: records.iter().all(|r| r.lossless != Some(false)),
+            max_overhead: self.scenario.max_overhead,
+            iterations: records,
+        }
+    }
+}
+
+/// Ground-truth usability update for the no-crash-while-a-path-exists
+/// invariant: degradations keep a NIC usable; only Fail/Cut remove it.
+fn note_ground_truth(usable: &mut [bool], nic: NicId, action: FaultAction) {
+    match action {
+        FaultAction::FailNic | FaultAction::CutCable => usable[nic] = false,
+        FaultAction::Repair | FaultAction::Degrade(_) => usable[nic] = true,
+    }
+}
+
+fn path_exists(topo: &Topology, usable: &[bool], servers: &[ServerId]) -> bool {
+    servers.iter().all(|&s| topo.nics_of_server(s).any(|n| usable[n]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::spec::FaultPattern;
+
+    fn dp16(patterns: Vec<FaultPattern>, iters: usize, seed: u64) -> FaultScenario {
+        FaultScenario {
+            name: "unit".into(),
+            seed,
+            iters,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            patterns,
+        }
+    }
+
+    #[test]
+    fn healthy_scenario_has_zero_overhead_and_is_lossless() {
+        let sc = dp16(vec![], 3, 1);
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed && !rep.path_lost);
+        assert_eq!(rep.iterations.len(), 3);
+        assert!(rep.overhead.abs() < 1e-6, "healthy overhead {}", rep.overhead);
+        assert!(rep.lossless);
+        assert_eq!(rep.migrations, 0);
+        assert!(rep.goodput > 0.0);
+    }
+
+    #[test]
+    fn oneshot_failure_migrates_then_replans() {
+        // A mid-iteration NIC failure must migrate in that iteration and
+        // leave the *next* iterations on a re-planned (non-Standard)
+        // schedule with no further migrations.
+        let sc = dp16(
+            vec![FaultPattern::OneShot {
+                at: 1.5,
+                nic: 0,
+                action: FaultAction::FailNic,
+            }],
+            4,
+            7,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed);
+        assert_eq!(rep.iterations[1].migrations, 1, "fault iteration migrates");
+        assert!(rep.iterations[1].time > rep.healthy_iter_time);
+        for r in &rep.iterations[2..] {
+            assert_eq!(r.migrations, 0, "re-planned iterations must not migrate");
+            assert_ne!(r.strategy, "Standard", "planner must see the standing failure");
+        }
+        assert!(rep.lossless);
+    }
+
+    #[test]
+    fn boundary_events_are_plan_time_only() {
+        // An event exactly on an iteration boundary is standing knowledge:
+        // no mid-flight migration anywhere, but degraded timing from that
+        // iteration on.
+        let sc = dp16(
+            vec![FaultPattern::OneShot {
+                at: 2.0,
+                nic: 3,
+                action: FaultAction::FailNic,
+            }],
+            4,
+            5,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert_eq!(rep.migrations, 0);
+        assert!(rep.iterations[2].time > rep.iterations[0].time);
+    }
+
+    #[test]
+    fn all_nics_down_crashes_with_path_lost() {
+        // Killing every NIC on server 0 is out of R²CCL scope: the run must
+        // crash, and the invariant checker must accept it because the path
+        // was genuinely lost.
+        let sc = dp16(
+            vec![FaultPattern::Cascade {
+                start: 1.2,
+                count: 8,
+                gap: 0.05,
+                servers: Some(vec![0]),
+                repair_after: None,
+            }],
+            4,
+            3,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.crashed);
+        assert!(rep.path_lost);
+        rep.check_invariants().unwrap();
+        assert!(rep.iterations.len() < 4, "run stops at the crash");
+    }
+
+    #[test]
+    fn serving_scenario_reports_kv_transfers() {
+        let sc = FaultScenario {
+            name: "serve".into(),
+            seed: 2,
+            iters: 4,
+            workload: Workload::Serving { prompt_tokens: 2000 },
+            max_overhead: None,
+            patterns: vec![FaultPattern::OneShot {
+                at: 1.5,
+                nic: 1,
+                action: FaultAction::FailNic,
+            }],
+        };
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed);
+        assert!(rep.iterations.iter().all(|r| r.time > 0.0));
+        assert_eq!(rep.iterations[1].migrations, 1);
+        assert!(rep.wire_bytes > 0);
+    }
+}

@@ -1,0 +1,788 @@
+//! Declarative fault scenarios.
+//!
+//! A [`FaultScenario`] describes *classes* of failure behaviour — one-shot
+//! faults, flapping NICs, bandwidth-fluctuation ramps, correlated same-rail
+//! failures across servers, cascades, repair windows, random multi-fault
+//! patterns — in iteration-relative time, plus a seed. [`FaultScenario::compile`]
+//! expands the description through [`crate::util::Rng`] into a concrete,
+//! *deterministic* event script: the same scenario + seed always yields the
+//! same events, which is what makes golden-trace conformance
+//! (`rust/tests/golden_traces.rs`) and the Monte-Carlo sweeps reproducible.
+//! SHIFT (arXiv 2512.11094) catalogues exactly this space of RDMA fault
+//! patterns; the declarative-scenario-over-event-engine split follows
+//! dslab's simulation idiom.
+
+use crate::collectives::exec::FaultAction;
+use crate::topology::{NicId, TopologyConfig};
+use crate::util::{Json, Rng};
+
+/// One compiled fault occurrence, in iteration-relative time: `at_iter`
+/// 2.35 means "35% into iteration 2". Events with an integral `at_iter`
+/// are applied between iterations (plan-time, via `note_failure`);
+/// fractional ones are injected mid-collective into that iteration's
+/// executor script.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScenarioEvent {
+    pub at_iter: f64,
+    pub nic: NicId,
+    pub action: FaultAction,
+}
+
+impl ScenarioEvent {
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj()
+            .set("at_iter", self.at_iter)
+            .set("nic", self.nic)
+            .set("action", self.action.label());
+        match self.action.factor() {
+            Some(f) => j.set("factor", f),
+            None => j,
+        }
+    }
+}
+
+/// A declarative failure pattern; `compile` turns it into concrete events.
+/// Times and durations are in iteration units (see [`ScenarioEvent`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultPattern {
+    /// A single fault at a fixed point.
+    OneShot { at: f64, nic: NicId, action: FaultAction },
+    /// A flapping NIC: `cycles` down/up cycles starting at `start`, each
+    /// down for `down` then repaired for `up`, every edge jittered by a
+    /// seeded uniform ±`jitter`. Always ends repaired.
+    Flapping { nic: NicId, start: f64, cycles: usize, down: f64, up: f64, jitter: f64 },
+    /// A link-fluctuation process: capacity ramps linearly from 1.0 towards
+    /// `floor` in `steps` `Degrade` events spaced `dt` apart, each with
+    /// seeded multiplicative noise in [0.9, 1.1] (clamped to `[floor, 1]`),
+    /// then recovers one `dt` after the last step when `recover`. A `floor`
+    /// below `TimingConfig::degrade_detect_threshold` exercises the
+    /// fluctuation-triggered timeout path.
+    DegradeRamp { nic: NicId, start: f64, steps: usize, dt: f64, floor: f64, recover: bool },
+    /// The same rail fails on every listed server within `spread` of `at`
+    /// (seeded uniform offsets) — the correlated same-rail pattern.
+    CorrelatedRail { rail: usize, servers: Vec<usize>, at: f64, spread: f64, cut_cable: bool },
+    /// A cascade: `count` distinct NICs drawn (seeded) from the NIC pool of
+    /// `servers` (all servers when `None`) fail one after another, `gap`
+    /// apart; each is repaired `repair_after` after its own failure when
+    /// given (so late cascade members never fail after their repair).
+    Cascade { start: f64, count: usize, gap: f64, servers: Option<Vec<usize>>, repair_after: Option<f64> },
+    /// Fail at `at`, repair `down_for` later.
+    RepairWindow { nic: NicId, at: f64, down_for: f64 },
+    /// `k` NICs drawn uniformly at random over the whole cluster go down at
+    /// `at` — the Fig 10 Monte-Carlo pattern expressed as a scenario.
+    RandomMultiFault { k: usize, at: f64 },
+}
+
+/// The seeded NIC draw shared by [`FaultPattern::RandomMultiFault`] and the
+/// Monte-Carlo sweep's `sample_pattern` — both consume the RNG identically,
+/// so a sweep trial and its scenario form compile to the same NIC picks.
+pub fn sample_multi_fault(rng: &mut Rng, total_nics: usize, k: usize) -> Vec<usize> {
+    rng.sample_indices(total_nics, k.min(total_nics))
+}
+
+impl FaultPattern {
+    /// Stable serialization kind label.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultPattern::OneShot { .. } => "oneshot",
+            FaultPattern::Flapping { .. } => "flapping",
+            FaultPattern::DegradeRamp { .. } => "degrade_ramp",
+            FaultPattern::CorrelatedRail { .. } => "correlated_rail",
+            FaultPattern::Cascade { .. } => "cascade",
+            FaultPattern::RepairWindow { .. } => "repair_window",
+            FaultPattern::RandomMultiFault { .. } => "random_multi_fault",
+        }
+    }
+
+    fn compile(&self, topo: &TopologyConfig, rng: &mut Rng, out: &mut Vec<ScenarioEvent>) {
+        match self {
+            FaultPattern::OneShot { at, nic, action } => {
+                out.push(ScenarioEvent { at_iter: *at, nic: *nic, action: *action });
+            }
+            FaultPattern::Flapping { nic, start, cycles, down, up, jitter } => {
+                let mut t = *start;
+                let mut prev = 0.0f64;
+                for _ in 0..*cycles {
+                    // Jittered edges, kept strictly ordered per NIC.
+                    let down_at = (t + rng.range_f64(-*jitter, *jitter)).max(prev + 1e-3);
+                    let up_at =
+                        (t + down + rng.range_f64(-*jitter, *jitter)).max(down_at + 1e-3);
+                    out.push(ScenarioEvent {
+                        at_iter: down_at,
+                        nic: *nic,
+                        action: FaultAction::FailNic,
+                    });
+                    out.push(ScenarioEvent {
+                        at_iter: up_at,
+                        nic: *nic,
+                        action: FaultAction::Repair,
+                    });
+                    prev = up_at;
+                    t += down + up;
+                }
+            }
+            FaultPattern::DegradeRamp { nic, start, steps, dt, floor, recover } => {
+                let steps = (*steps).max(1);
+                for s in 1..=steps {
+                    let frac = s as f64 / steps as f64;
+                    let base = 1.0 + (*floor - 1.0) * frac;
+                    let noisy = (base * rng.range_f64(0.9, 1.1)).clamp(*floor, 1.0);
+                    out.push(ScenarioEvent {
+                        at_iter: start + s as f64 * dt,
+                        nic: *nic,
+                        action: FaultAction::Degrade(noisy),
+                    });
+                }
+                if *recover {
+                    out.push(ScenarioEvent {
+                        at_iter: start + (steps + 1) as f64 * dt,
+                        nic: *nic,
+                        action: FaultAction::Repair,
+                    });
+                }
+            }
+            FaultPattern::CorrelatedRail { rail, servers, at, spread, cut_cable } => {
+                let action =
+                    if *cut_cable { FaultAction::CutCable } else { FaultAction::FailNic };
+                for &s in servers {
+                    let nic = s * topo.nics_per_server + rail;
+                    out.push(ScenarioEvent {
+                        at_iter: at + rng.range_f64(0.0, (*spread).max(1e-9)),
+                        nic,
+                        action,
+                    });
+                }
+            }
+            FaultPattern::Cascade { start, count, gap, servers, repair_after } => {
+                let mut pool: Vec<NicId> = match servers {
+                    Some(list) => list
+                        .iter()
+                        .flat_map(|&s| {
+                            (0..topo.nics_per_server).map(move |r| s * topo.nics_per_server + r)
+                        })
+                        .collect(),
+                    None => (0..topo.n_servers * topo.nics_per_server).collect(),
+                };
+                rng.shuffle(&mut pool);
+                pool.truncate((*count).min(pool.len()));
+                for (i, &nic) in pool.iter().enumerate() {
+                    out.push(ScenarioEvent {
+                        at_iter: start + i as f64 * gap,
+                        nic,
+                        action: FaultAction::FailNic,
+                    });
+                }
+                if let Some(after) = repair_after {
+                    for (i, &nic) in pool.iter().enumerate() {
+                        out.push(ScenarioEvent {
+                            at_iter: start + i as f64 * gap + after,
+                            nic,
+                            action: FaultAction::Repair,
+                        });
+                    }
+                }
+            }
+            FaultPattern::RepairWindow { nic, at, down_for } => {
+                out.push(ScenarioEvent { at_iter: *at, nic: *nic, action: FaultAction::FailNic });
+                out.push(ScenarioEvent {
+                    at_iter: at + down_for,
+                    nic: *nic,
+                    action: FaultAction::Repair,
+                });
+            }
+            FaultPattern::RandomMultiFault { k, at } => {
+                let total = topo.n_servers * topo.nics_per_server;
+                for nic in sample_multi_fault(rng, total, *k) {
+                    out.push(ScenarioEvent { at_iter: *at, nic, action: FaultAction::FailNic });
+                }
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj().set("kind", self.kind());
+        match self {
+            FaultPattern::OneShot { at, nic, action } => {
+                let j = j.set("at", *at).set("nic", *nic).set("action", action.label());
+                match action.factor() {
+                    Some(f) => j.set("factor", f),
+                    None => j,
+                }
+            }
+            FaultPattern::Flapping { nic, start, cycles, down, up, jitter } => j
+                .set("nic", *nic)
+                .set("start", *start)
+                .set("cycles", *cycles)
+                .set("down", *down)
+                .set("up", *up)
+                .set("jitter", *jitter),
+            FaultPattern::DegradeRamp { nic, start, steps, dt, floor, recover } => j
+                .set("nic", *nic)
+                .set("start", *start)
+                .set("steps", *steps)
+                .set("dt", *dt)
+                .set("floor", *floor)
+                .set("recover", *recover),
+            FaultPattern::CorrelatedRail { rail, servers, at, spread, cut_cable } => j
+                .set("rail", *rail)
+                .set("servers", usize_arr(servers))
+                .set("at", *at)
+                .set("spread", *spread)
+                .set("cut_cable", *cut_cable),
+            FaultPattern::Cascade { start, count, gap, servers, repair_after } => {
+                let j = j.set("start", *start).set("count", *count).set("gap", *gap);
+                let j = match servers {
+                    Some(s) => j.set("servers", usize_arr(s)),
+                    None => j,
+                };
+                match repair_after {
+                    Some(a) => j.set("repair_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::RepairWindow { nic, at, down_for } => {
+                j.set("nic", *nic).set("at", *at).set("down_for", *down_for)
+            }
+            FaultPattern::RandomMultiFault { k, at } => j.set("k", *k).set("at", *at),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPattern, String> {
+        let kind = req_str(j, "kind")?;
+        match kind {
+            "oneshot" => Ok(FaultPattern::OneShot {
+                at: req_f64(j, "at")?,
+                nic: req_usize(j, "nic")?,
+                action: action_of(j)?,
+            }),
+            "flapping" => Ok(FaultPattern::Flapping {
+                nic: req_usize(j, "nic")?,
+                start: req_f64(j, "start")?,
+                cycles: req_usize(j, "cycles")?,
+                down: req_f64(j, "down")?,
+                up: req_f64(j, "up")?,
+                jitter: req_f64(j, "jitter")?,
+            }),
+            "degrade_ramp" => Ok(FaultPattern::DegradeRamp {
+                nic: req_usize(j, "nic")?,
+                start: req_f64(j, "start")?,
+                steps: req_usize(j, "steps")?,
+                dt: req_f64(j, "dt")?,
+                floor: req_f64(j, "floor")?,
+                recover: j.get("recover").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            "correlated_rail" => Ok(FaultPattern::CorrelatedRail {
+                rail: req_usize(j, "rail")?,
+                servers: req_usize_arr(j, "servers")?,
+                at: req_f64(j, "at")?,
+                spread: req_f64(j, "spread")?,
+                cut_cable: j.get("cut_cable").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            "cascade" => Ok(FaultPattern::Cascade {
+                start: req_f64(j, "start")?,
+                count: req_usize(j, "count")?,
+                gap: req_f64(j, "gap")?,
+                servers: match j.get("servers") {
+                    Some(_) => Some(req_usize_arr(j, "servers")?),
+                    None => None,
+                },
+                repair_after: j.get("repair_after").and_then(Json::as_f64),
+            }),
+            "repair_window" => Ok(FaultPattern::RepairWindow {
+                nic: req_usize(j, "nic")?,
+                at: req_f64(j, "at")?,
+                down_for: req_f64(j, "down_for")?,
+            }),
+            "random_multi_fault" => Ok(FaultPattern::RandomMultiFault {
+                k: req_usize(j, "k")?,
+                at: req_f64(j, "at")?,
+            }),
+            other => Err(format!("unknown pattern kind {other:?}")),
+        }
+    }
+}
+
+/// The workload a scenario drives (see `scenario::runner`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// 3D-parallel training communication loop: TP AllReduce / PP SendRecv
+    /// / DP AllReduce on live process groups; faults land mid-flight in
+    /// the iteration's dominant cross-server collective.
+    Training { tp: usize, dp: usize, pp: usize, bytes_per_rank: u64 },
+    /// PD-disaggregated serving: each iteration is one request's prefill +
+    /// KV-cache shipment on the prefill→decode stage-pair group.
+    Serving { prompt_tokens: usize },
+}
+
+impl Workload {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Workload::Training { tp, dp, pp, bytes_per_rank } => Json::obj()
+                .set("kind", "training")
+                .set("tp", *tp)
+                .set("dp", *dp)
+                .set("pp", *pp)
+                .set("bytes_per_rank", *bytes_per_rank),
+            Workload::Serving { prompt_tokens } => {
+                Json::obj().set("kind", "serving").set("prompt_tokens", *prompt_tokens)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Workload, String> {
+        match req_str(j, "kind")? {
+            "training" => Ok(Workload::Training {
+                tp: req_usize(j, "tp")?,
+                dp: req_usize(j, "dp")?,
+                pp: req_usize(j, "pp")?,
+                bytes_per_rank: j
+                    .get("bytes_per_rank")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(1 << 24),
+            }),
+            "serving" => Ok(Workload::Serving {
+                prompt_tokens: j
+                    .get("prompt_tokens")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(2000),
+            }),
+            other => Err(format!("unknown workload kind {other:?}")),
+        }
+    }
+}
+
+/// A complete declarative scenario: patterns + seed + the workload and
+/// horizon the runner drives. Seeds must stay below 2^53 (they ride JSON
+/// numbers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultScenario {
+    pub name: String,
+    pub seed: u64,
+    /// Number of workload iterations the runner drives.
+    pub iters: usize,
+    pub workload: Workload,
+    /// Optional mean-overhead bound asserted by
+    /// `ScenarioReport::check_invariants`.
+    pub max_overhead: Option<f64>,
+    pub patterns: Vec<FaultPattern>,
+}
+
+impl FaultPattern {
+    /// Check every NIC / rail / server index against the topology shape, so
+    /// a malformed scenario file surfaces as an error instead of an
+    /// out-of-bounds panic deep inside the runner.
+    fn validate(&self, topo: &TopologyConfig) -> Result<(), String> {
+        let total = topo.n_servers * topo.nics_per_server;
+        let nic_ok = |nic: usize| {
+            if nic < total {
+                Ok(())
+            } else {
+                Err(format!("{}: nic {nic} out of range (cluster has {total} NICs)", self.kind()))
+            }
+        };
+        let servers_ok = |servers: &[usize]| {
+            servers.iter().find(|&&s| s >= topo.n_servers).map_or(Ok(()), |s| {
+                Err(format!(
+                    "{}: server {s} out of range (cluster has {})",
+                    self.kind(),
+                    topo.n_servers
+                ))
+            })
+        };
+        match self {
+            FaultPattern::OneShot { nic, .. }
+            | FaultPattern::Flapping { nic, .. }
+            | FaultPattern::DegradeRamp { nic, .. }
+            | FaultPattern::RepairWindow { nic, .. } => nic_ok(*nic),
+            FaultPattern::CorrelatedRail { rail, servers, .. } => {
+                if *rail >= topo.nics_per_server {
+                    return Err(format!(
+                        "correlated_rail: rail {rail} out of range ({} NICs per server)",
+                        topo.nics_per_server
+                    ));
+                }
+                servers_ok(servers)
+            }
+            FaultPattern::Cascade { servers, .. } => {
+                servers.as_deref().map_or(Ok(()), servers_ok)
+            }
+            FaultPattern::RandomMultiFault { .. } => Ok(()),
+        }
+    }
+}
+
+impl FaultScenario {
+    /// Validate every pattern against the topology shape. Called by the
+    /// runner (panics with the message on library misuse) and by the CLI
+    /// (reported as a clean error for user-authored scenario files).
+    pub fn validate(&self, topo: &TopologyConfig) -> Result<(), String> {
+        for p in &self.patterns {
+            p.validate(topo).map_err(|e| format!("scenario {:?}: {e}", self.name))?;
+        }
+        Ok(())
+    }
+
+    /// Expand the declarative patterns into a concrete, deterministic event
+    /// script. Events are ordered by time (ties by NIC, then action label),
+    /// so the compiled script — and everything downstream of it — is a pure
+    /// function of `(scenario, seed, topology shape)`.
+    pub fn compile(&self, topo: &TopologyConfig) -> Vec<ScenarioEvent> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::new();
+        for p in &self.patterns {
+            p.compile(topo, &mut rng, &mut out);
+        }
+        out.sort_by(|a, b| {
+            a.at_iter
+                .total_cmp(&b.at_iter)
+                .then(a.nic.cmp(&b.nic))
+                .then(a.action.label().cmp(b.action.label()))
+        });
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut patterns = Json::arr();
+        for p in &self.patterns {
+            patterns.push(p.to_json());
+        }
+        let j = Json::obj()
+            .set("name", self.name.as_str())
+            .set("seed", self.seed)
+            .set("iters", self.iters)
+            .set("workload", self.workload.to_json());
+        let j = match self.max_overhead {
+            Some(m) => j.set("max_overhead", m),
+            None => j,
+        };
+        j.set("patterns", patterns)
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultScenario, String> {
+        let patterns = j
+            .get("patterns")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing \"patterns\" array".to_string())?
+            .iter()
+            .map(FaultPattern::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(FaultScenario {
+            name: req_str(j, "name")?.to_string(),
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(1),
+            iters: req_usize(j, "iters")?,
+            workload: Workload::from_json(
+                j.get("workload").ok_or_else(|| "missing \"workload\"".to_string())?,
+            )?,
+            max_overhead: j.get("max_overhead").and_then(Json::as_f64),
+            patterns,
+        })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<FaultScenario, String> {
+        FaultScenario::from_json(&Json::parse(s)?)
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON field helpers.
+
+fn req_f64(j: &Json, k: &str) -> Result<f64, String> {
+    j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number {k:?}"))
+}
+
+fn req_usize(j: &Json, k: &str) -> Result<usize, String> {
+    j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("missing integer {k:?}"))
+}
+
+fn req_str<'a>(j: &'a Json, k: &str) -> Result<&'a str, String> {
+    j.get(k).and_then(Json::as_str).ok_or_else(|| format!("missing string {k:?}"))
+}
+
+fn req_usize_arr(j: &Json, k: &str) -> Result<Vec<usize>, String> {
+    j.get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing array {k:?}"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| format!("{k:?} must hold integers")))
+        .collect()
+}
+
+fn action_of(j: &Json) -> Result<FaultAction, String> {
+    FaultAction::from_parts(req_str(j, "action")?, j.get("factor").and_then(Json::as_f64))
+}
+
+fn usize_arr(xs: &[usize]) -> Json {
+    let mut a = Json::arr();
+    for &x in xs {
+        a.push(x);
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> TopologyConfig {
+        TopologyConfig::testbed_h100()
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_sorted() {
+        let sc = FaultScenario {
+            name: "t".into(),
+            seed: 42,
+            iters: 6,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            patterns: vec![
+                FaultPattern::Flapping {
+                    nic: 0,
+                    start: 0.5,
+                    cycles: 3,
+                    down: 0.4,
+                    up: 0.6,
+                    jitter: 0.08,
+                },
+                FaultPattern::OneShot { at: 0.1, nic: 5, action: FaultAction::CutCable },
+            ],
+        };
+        let a = sc.compile(&topo());
+        let b = sc.compile(&topo());
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].at_iter <= w[1].at_iter), "sorted by time");
+        // 3 down/up cycles + the one-shot.
+        assert_eq!(a.len(), 7);
+        // Flapping alternates fail/repair on its NIC, strictly ordered.
+        let flap: Vec<_> = a.iter().filter(|e| e.nic == 0).collect();
+        assert_eq!(flap.len(), 6);
+        for (i, e) in flap.iter().enumerate() {
+            let want =
+                if i % 2 == 0 { FaultAction::FailNic } else { FaultAction::Repair };
+            assert_eq!(e.action, want, "edge {i}");
+        }
+        assert!(flap.windows(2).all(|w| w[0].at_iter < w[1].at_iter));
+    }
+
+    #[test]
+    fn different_seeds_move_jittered_edges() {
+        let mk = |seed| FaultScenario {
+            name: "t".into(),
+            seed,
+            iters: 4,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            patterns: vec![FaultPattern::Flapping {
+                nic: 0,
+                start: 0.5,
+                cycles: 2,
+                down: 0.4,
+                up: 0.6,
+                jitter: 0.1,
+            }],
+        };
+        assert_ne!(mk(1).compile(&topo()), mk(2).compile(&topo()));
+    }
+
+    #[test]
+    fn correlated_rail_hits_same_rail_on_every_server() {
+        let sc = FaultScenario {
+            name: "rail".into(),
+            seed: 3,
+            iters: 4,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            patterns: vec![FaultPattern::CorrelatedRail {
+                rail: 3,
+                servers: vec![0, 1],
+                at: 1.2,
+                spread: 0.2,
+                cut_cable: true,
+            }],
+        };
+        let t = topo();
+        let ev = sc.compile(&t);
+        assert_eq!(ev.len(), 2);
+        for e in &ev {
+            assert_eq!(e.nic % t.nics_per_server, 3, "same rail everywhere");
+            assert_eq!(e.action, FaultAction::CutCable);
+            assert!(e.at_iter >= 1.2 && e.at_iter <= 1.4);
+        }
+        let servers: Vec<_> = ev.iter().map(|e| e.nic / t.nics_per_server).collect();
+        assert!(servers.contains(&0) && servers.contains(&1));
+    }
+
+    #[test]
+    fn cascade_draws_distinct_nics_and_repairs() {
+        let sc = FaultScenario {
+            name: "cascade".into(),
+            seed: 9,
+            iters: 8,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            patterns: vec![FaultPattern::Cascade {
+                start: 0.8,
+                count: 4,
+                gap: 0.7,
+                servers: Some(vec![0]),
+                repair_after: Some(3.0),
+            }],
+        };
+        let t = topo();
+        let ev = sc.compile(&t);
+        let mut fails: Vec<_> =
+            ev.iter().filter(|e| e.action == FaultAction::FailNic).map(|e| e.nic).collect();
+        let repairs: Vec<_> =
+            ev.iter().filter(|e| e.action == FaultAction::Repair).map(|e| e.nic).collect();
+        assert_eq!(fails.len(), 4);
+        assert_eq!(repairs.len(), 4);
+        fails.sort_unstable();
+        let mut dedup = fails.clone();
+        dedup.dedup();
+        assert_eq!(fails, dedup, "cascade NICs must be distinct");
+        assert!(fails.iter().all(|&n| n < t.nics_per_server), "restricted to server 0");
+    }
+
+    #[test]
+    fn degrade_ramp_descends_to_floor() {
+        let sc = FaultScenario {
+            name: "ramp".into(),
+            seed: 11,
+            iters: 8,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            patterns: vec![FaultPattern::DegradeRamp {
+                nic: 2,
+                start: 1.0,
+                steps: 4,
+                dt: 0.5,
+                floor: 0.3,
+                recover: true,
+            }],
+        };
+        let ev = sc.compile(&topo());
+        assert_eq!(ev.len(), 5);
+        let factors: Vec<f64> = ev.iter().filter_map(|e| e.action.factor()).collect();
+        assert_eq!(factors.len(), 4);
+        assert!(factors.iter().all(|&f| (0.3..=1.0).contains(&f)));
+        // Final step lands at the floor (modulo clamped noise).
+        assert!(factors[3] <= 0.3 * 1.1 + 1e-12);
+        assert_eq!(ev.last().unwrap().action, FaultAction::Repair);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_indices() {
+        let t = topo();
+        let mk = |p: FaultPattern| FaultScenario {
+            name: "v".into(),
+            seed: 1,
+            iters: 2,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
+            max_overhead: None,
+            patterns: vec![p],
+        };
+        let bad_nic =
+            mk(FaultPattern::OneShot { at: 0.5, nic: 99, action: FaultAction::FailNic });
+        assert!(bad_nic.validate(&t).unwrap_err().contains("nic 99"));
+        let bad_rail = mk(FaultPattern::CorrelatedRail {
+            rail: 9,
+            servers: vec![0],
+            at: 0.5,
+            spread: 0.1,
+            cut_cable: false,
+        });
+        assert!(bad_rail.validate(&t).unwrap_err().contains("rail 9"));
+        let bad_server = mk(FaultPattern::Cascade {
+            start: 0.5,
+            count: 2,
+            gap: 0.2,
+            servers: Some(vec![7]),
+            repair_after: None,
+        });
+        assert!(bad_server.validate(&t).unwrap_err().contains("server 7"));
+        let ok = mk(FaultPattern::RepairWindow { nic: 15, at: 0.5, down_for: 0.5 });
+        assert!(ok.validate(&t).is_ok());
+    }
+
+    #[test]
+    fn cascade_repairs_follow_each_failure() {
+        let sc = FaultScenario {
+            name: "cascade-repair".into(),
+            seed: 5,
+            iters: 10,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
+            max_overhead: None,
+            patterns: vec![FaultPattern::Cascade {
+                start: 0.5,
+                count: 3,
+                gap: 1.0,
+                servers: Some(vec![0]),
+                repair_after: Some(2.0),
+            }],
+        };
+        let ev = sc.compile(&topo());
+        // Every NIC's repair lands strictly after its own failure.
+        for e in ev.iter().filter(|e| e.action == FaultAction::FailNic) {
+            let rep = ev
+                .iter()
+                .find(|r| r.nic == e.nic && r.action == FaultAction::Repair)
+                .expect("repair emitted");
+            assert!(
+                rep.at_iter > e.at_iter,
+                "nic {}: repair {} before failure {}",
+                e.nic,
+                rep.at_iter,
+                e.at_iter
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        let sc = FaultScenario {
+            name: "all".into(),
+            seed: 123,
+            iters: 8,
+            workload: Workload::Serving { prompt_tokens: 2000 },
+            max_overhead: Some(2.5),
+            patterns: vec![
+                FaultPattern::OneShot { at: 1.35, nic: 0, action: FaultAction::Degrade(0.4) },
+                FaultPattern::Flapping {
+                    nic: 1,
+                    start: 0.5,
+                    cycles: 3,
+                    down: 0.4,
+                    up: 0.6,
+                    jitter: 0.08,
+                },
+                FaultPattern::DegradeRamp {
+                    nic: 2,
+                    start: 1.2,
+                    steps: 4,
+                    dt: 0.5,
+                    floor: 0.3,
+                    recover: true,
+                },
+                FaultPattern::CorrelatedRail {
+                    rail: 3,
+                    servers: vec![0, 1],
+                    at: 1.4,
+                    spread: 0.2,
+                    cut_cable: false,
+                },
+                FaultPattern::Cascade {
+                    start: 0.8,
+                    count: 4,
+                    gap: 0.7,
+                    servers: None,
+                    repair_after: None,
+                },
+                FaultPattern::RepairWindow { nic: 5, at: 1.3, down_for: 2.0 },
+                FaultPattern::RandomMultiFault { k: 3, at: 1.5 },
+            ],
+        };
+        let s = sc.to_json().pretty();
+        let back = FaultScenario::from_json_str(&s).unwrap();
+        assert_eq!(sc, back);
+    }
+}

@@ -18,10 +18,11 @@
 //!   experiment): network faults never reach the application layer.
 
 use crate::baselines::DejaVuModel;
-use crate::ccl::{CommWorld, ParallelLayout, StrategyChoice};
-use crate::collectives::exec::FaultAction;
-use crate::collectives::CollKind;
+use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
+use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::collectives::{CollKind, PhantomPlane};
 use crate::config::{Preset, TimingConfig};
+use crate::scenario::IterOutcome;
 use crate::util::{Rng, Samples};
 
 /// Model presets for serving.
@@ -175,6 +176,40 @@ struct Req {
     tokens_done: usize,
 }
 
+/// Per-pair KV shard bytes of a prompt in a TP8 disaggregated instance:
+/// each prefill GPU ships its tensor-parallel shard of the prompt's KV
+/// cache to its decode counterpart.
+pub fn kv_shard_bytes(model: &InferModel, prompt_tokens: usize) -> u64 {
+    ((model.kv_per_token * prompt_tokens as f64 / 8.0) as u64).max(1)
+}
+
+/// The prefill→decode KV-transfer communicator of a disaggregated TP8/PP2
+/// serving instance on the 2-server testbed: the stage-pair group all
+/// eight shard transfers ride concurrently.
+pub fn pd_kv_pair(world: &CommWorld) -> CommGroup {
+    world.pp_pairs(&ParallelLayout::new(8, 1, 2)).remove(0)
+}
+
+/// One scenario-driven serving iteration: a request's prefill compute plus
+/// its KV-cache shipment on the prefill→decode pair group, with `script`
+/// injected mid-transfer. The fault-plane state standing in `world`
+/// (carried across iterations by the scenario runner) shapes both the
+/// compiled plan and the executor's initial faults.
+pub fn scenario_serving_iteration(
+    world: &CommWorld,
+    pd_pair: &CommGroup,
+    model: &InferModel,
+    prompt_tokens: usize,
+    choice: StrategyChoice,
+    script: Vec<FaultEvent>,
+) -> IterOutcome {
+    let bytes = kv_shard_bytes(model, prompt_tokens);
+    let (_, strategy) = pd_pair.compile(CollKind::SendRecv, bytes, 0, choice);
+    let rep = pd_pair.run(CollKind::SendRecv, bytes, choice, script, &mut PhantomPlane, 0);
+    let compute = prompt_tokens as f64 / model.prefill_tps;
+    IterOutcome::from_report(rep, compute, strategy, None)
+}
+
 /// The engine simulation.
 pub fn serve_sim(
     model: &InferModel,
@@ -210,12 +245,9 @@ pub fn serve_sim(
     // NIC losses) — the per-request loop then reuses the two numbers.
     let kv_times = cfg.pd_disagg.then(|| {
         let preset = Preset::testbed();
-        let layout = ParallelLayout::new(8, 1, 2);
-        let kv_total = model.kv_per_token * cfg.prompt_tokens as f64;
-        let per_pair = ((kv_total / 8.0) as u64).max(1);
+        let per_pair = kv_shard_bytes(model, cfg.prompt_tokens);
         let world = CommWorld::new(&preset, 8);
-        let pd_pair = world.pp_pairs(&layout).remove(0);
-        let healthy = pd_pair
+        let healthy = pd_kv_pair(&world)
             .time_collective(CollKind::SendRecv, per_pair, StrategyChoice::Auto)
             .expect("kv transfer");
         let degraded = failure.map(|f| {
@@ -223,8 +255,7 @@ pub fn serve_sim(
             for n in 0..f.nics.min(7) {
                 w.note_failure(n, FaultAction::FailNic);
             }
-            w.pp_pairs(&layout)
-                .remove(0)
+            pd_kv_pair(&w)
                 .time_collective(CollKind::SendRecv, per_pair, StrategyChoice::Auto)
                 .expect("kv transfer (degraded)")
         });

@@ -6,12 +6,15 @@ pub mod montecarlo;
 pub mod training;
 
 pub use inference::{
-    serve_sim, single_request_latency, InferModel, ReqMetrics, ServeCfg, ServeFailure,
-    ServeResult, ServeStrategy,
+    kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, serve_sim, single_request_latency,
+    InferModel, ReqMetrics, ServeCfg, ServeFailure, ServeResult, ServeStrategy,
 };
-pub use montecarlo::{multi_failure_sweep, sample_pattern, MonteCarloPoint};
+pub use montecarlo::{
+    multi_failure_sweep, sample_pattern, scenario_for_k, MonteCarloPoint,
+};
 pub use training::{
-    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, simai_compiled_iteration,
-    simai_iteration, testbed_training, training_groups, CommVolumes, ModelConfig, ParallelConfig,
-    TrainMethod, TrainResult, TrainingGroups,
+    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, scenario_main_collective,
+    scenario_training_iteration, simai_compiled_iteration, simai_iteration, testbed_training,
+    training_groups, CommVolumes, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
+    TrainingGroups,
 };

@@ -5,21 +5,39 @@
 use std::thread;
 
 use crate::config::GpuComputeConfig;
+use crate::scenario::{sample_multi_fault, FaultPattern, FaultScenario, Workload};
 use crate::schedule::PlanInput;
 use crate::sim::training::{
     overhead_vs, simai_iteration, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
 };
 use crate::util::Rng;
 
-/// One sampled failure pattern: lost-NIC count per server.
+/// One sampled failure pattern: lost-NIC count per server. The NIC draw is
+/// the scenario layer's [`sample_multi_fault`], so a sweep trial and the
+/// same-seed [`scenario_for_k`] scenario compile to identical picks.
 pub fn sample_pattern(rng: &mut Rng, n_servers: usize, nics_per_server: usize, k: usize) -> Vec<usize> {
     let total = n_servers * nics_per_server;
-    let picks = rng.sample_indices(total, k.min(total));
+    let picks = sample_multi_fault(rng, total, k);
     let mut per_server = vec![0usize; n_servers];
     for p in picks {
         per_server[p / nics_per_server] += 1;
     }
     per_server
+}
+
+/// The Fig 10 failure pattern expressed as a declarative scenario: `k`
+/// NICs down cluster-wide mid-iteration. Compiling it with the same seed
+/// reproduces exactly the NIC picks of [`sample_pattern`], which is how the
+/// Monte-Carlo sweep's trials become replayable, golden-traceable runs.
+pub fn scenario_for_k(name: &str, k: usize, seed: u64) -> FaultScenario {
+    FaultScenario {
+        name: name.to_string(),
+        seed,
+        iters: 4,
+        workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 24 },
+        max_overhead: None,
+        patterns: vec![FaultPattern::RandomMultiFault { k, at: 1.5 }],
+    }
 }
 
 /// Remaining-bandwidth vector for a pattern.
@@ -111,6 +129,27 @@ mod tests {
             let p = sample_pattern(&mut rng, 64, 8, k);
             assert_eq!(p.iter().sum::<usize>(), k);
             assert_eq!(p.len(), 64);
+        }
+    }
+
+    #[test]
+    fn scenario_form_matches_sampler_picks() {
+        // `scenario_for_k(seed)` and `sample_pattern(Rng::new(seed))` must
+        // agree NIC-for-NIC: the sweep is now "sampled scenarios".
+        use crate::collectives::exec::FaultAction;
+        use crate::topology::TopologyConfig;
+        let topo = TopologyConfig::testbed_h100();
+        for (k, seed) in [(1usize, 1u64), (3, 7), (5, 42)] {
+            let sc = scenario_for_k("mc", k, seed);
+            let events = sc.compile(&topo);
+            assert_eq!(events.len(), k);
+            let mut per = vec![0usize; topo.n_servers];
+            for e in &events {
+                assert_eq!(e.action, FaultAction::FailNic);
+                per[e.nic / topo.nics_per_server] += 1;
+            }
+            let mut rng = Rng::new(seed);
+            assert_eq!(per, sample_pattern(&mut rng, topo.n_servers, topo.nics_per_server, k));
         }
     }
 

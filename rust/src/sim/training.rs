@@ -20,9 +20,10 @@
 
 use crate::baselines::adapcc::AdapCcModel;
 use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
-use crate::collectives::exec::FaultAction;
-use crate::collectives::CollKind;
+use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::collectives::{CollKind, PhantomPlane, RealPlane};
 use crate::config::{GpuComputeConfig, Preset};
+use crate::scenario::IterOutcome;
 use crate::schedule::{choose_strategy, ring_time, PlanInput, Strategy};
 
 /// Transformer model shapes (decoder-only GPT family, as in the paper).
@@ -148,6 +149,86 @@ pub fn training_groups(world: &CommWorld, par: &ParallelConfig) -> TrainingGroup
         pp: world.pp_pairs(&layout),
         dp: world.dp_groups(&layout),
     }
+}
+
+/// The iteration's dominant cross-server collective — where scenario fault
+/// scripts land mid-flight: the DP gradient AllReduce when there is data
+/// parallelism, else the PP boundary SendRecv, else the TP AllReduce
+/// (degenerate single-server case). Side collectives carry 1/8 of the main
+/// volume each.
+pub fn scenario_main_collective<'g>(
+    groups: &'g TrainingGroups,
+    par: &ParallelConfig,
+    bytes_per_rank: u64,
+) -> (&'g CommGroup, CollKind, u64) {
+    if par.dp > 1 {
+        (&groups.dp[0], CollKind::AllReduce, bytes_per_rank)
+    } else if par.pp > 1 {
+        (&groups.pp[0], CollKind::SendRecv, (bytes_per_rank / 8).max(1))
+    } else {
+        (&groups.tp[0], CollKind::AllReduce, bytes_per_rank)
+    }
+}
+
+/// One scenario-driven training iteration over live process groups: TP
+/// AllReduce (4 calls) and PP boundary SendRecv (2 crossings) are timed
+/// under the standing plan-time health state, then the dominant
+/// cross-server collective runs with `script` injected mid-flight. When
+/// `verify_data` is set and the main collective is an AllReduce, it runs
+/// over a real data plane and the result is compared against the healthy
+/// elementwise sum — the losslessness invariant of the scenario harness.
+pub fn scenario_training_iteration(
+    world: &CommWorld,
+    groups: &TrainingGroups,
+    par: &ParallelConfig,
+    bytes_per_rank: u64,
+    choice: StrategyChoice,
+    script: Vec<FaultEvent>,
+    verify_data: bool,
+) -> IterOutcome {
+    let crash_outcome = |time: f64| IterOutcome {
+        time,
+        crashed: true,
+        migrations: 0,
+        retransmitted_bytes: 0,
+        wasted_bytes: 0,
+        wire_bytes: 0,
+        strategy: Strategy::Standard,
+        timeline: Vec::new(),
+        lossless: None,
+    };
+    let side_bytes = (bytes_per_rank / 8).max(1);
+    let mut time = 0.0;
+    if par.tp > 1 {
+        match groups.tp[0].time_collective(CollKind::AllReduce, side_bytes, choice) {
+            Some(t) => time += 4.0 * t,
+            None => return crash_outcome(time),
+        }
+    }
+    if par.pp > 1 && par.dp > 1 {
+        match groups.pp[0].time_collective(CollKind::SendRecv, side_bytes, choice) {
+            Some(t) => time += 2.0 * t,
+            None => return crash_outcome(time),
+        }
+    }
+    let (main, kind, main_bytes) = scenario_main_collective(groups, par, bytes_per_rank);
+    let verify = verify_data && kind == CollKind::AllReduce && main.n_ranks() > 1;
+    // Element count divisible by channels × group size, as the exact
+    // data-plane split requires.
+    let elems = if verify { world.channels() * main.n_ranks() * 8 } else { 0 };
+    let (_, strategy) = main.compile(kind, main_bytes, elems, choice);
+    let (rep, lossless) = if verify {
+        let mut plane = RealPlane::new(world.topo().n_gpus(), elems);
+        plane.fill_pattern();
+        let expected = plane.expected_allreduce_over(main.ranks());
+        let rep = main.run(kind, main_bytes, choice, script, &mut plane, elems);
+        let verdict =
+            if rep.crashed { None } else { Some(plane.ranks_equal(main.ranks(), &expected)) };
+        (rep, verdict)
+    } else {
+        (main.run(kind, main_bytes, choice, script, &mut PhantomPlane, 0), None)
+    };
+    IterOutcome::from_report(rep, time, strategy, lossless)
 }
 
 /// Simulate one training configuration on the physical-testbed topology

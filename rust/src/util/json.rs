@@ -166,6 +166,19 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Integer view. JSON numbers ride an `f64`, so values above 2^53 are
+    /// not representable exactly — scenario seeds are kept below that.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -439,6 +452,14 @@ mod parse_tests {
     fn parse_string_escapes() {
         let j = Json::parse(r#""a\nbA""#).unwrap();
         assert_eq!(j.as_str(), Some("a\nbA"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let j = Json::parse(r#"{"n": 42, "b": true, "s": "x"}"#).unwrap();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(42));
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("s").unwrap().as_bool(), None);
     }
 
     #[test]

@@ -2,12 +2,13 @@
 //! exercised against a running collective, plus vanilla-NCCL contrast,
 //! flapping, degradations, repair cycles and escalation paths.
 
+use r2ccl::ccl::{CommWorld, ParallelLayout, StrategyChoice};
 use r2ccl::collectives::exec::{
     ChannelRouting, ExecOptions, Executor, FailurePolicy, FaultAction, FaultEvent,
 };
 use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
-use r2ccl::collectives::{PhantomPlane, RealPlane};
-use r2ccl::config::TimingConfig;
+use r2ccl::collectives::{CollKind, PhantomPlane, RealPlane};
+use r2ccl::config::{Preset, TimingConfig};
 use r2ccl::netsim::{FailureKind, Support};
 use r2ccl::topology::{Topology, TopologyConfig};
 
@@ -185,6 +186,134 @@ fn table2_scope_is_encoded() {
     assert_eq!(NvlinkFault.support(), Support::No);
     assert_eq!(SwitchWideOutage.support(), Support::No);
     assert_eq!(ProcessCrash.support(), Support::No);
+}
+
+// ---------------------------------------------------------------------
+// Group-scoped failure injection: the matrix above runs world-scope ring
+// AllReduce; these extend it to TP/PP/DP `CommGroup` collectives,
+// including flapping and repair cycles.
+
+/// Fail → repair → fail again, all mid-collective.
+fn flap_script(t: f64, nic: usize) -> Vec<FaultEvent> {
+    vec![
+        FaultEvent { at: t * 0.25, nic, action: FaultAction::FailNic },
+        FaultEvent { at: t * 0.55, nic, action: FaultAction::Repair },
+        FaultEvent { at: t * 0.80, nic, action: FaultAction::FailNic },
+    ]
+}
+
+#[test]
+fn group_scoped_collectives_survive_flapping() {
+    // Cross-server DP replica group (TP2/DP8) and the PP stage-pair group
+    // (TP8/PP2): every kind must survive a flapping NIC with ≥1 migration.
+    let preset = Preset::testbed();
+    let world = CommWorld::new(&preset, 8);
+    let dp = world.dp_groups(&ParallelLayout::new(2, 8, 1)).remove(0);
+    let pp = world.pp_pairs(&ParallelLayout::new(8, 1, 2)).remove(0);
+    let bytes = 1u64 << 26;
+    for (grp, kind) in [
+        (&dp, CollKind::AllReduce),
+        (&dp, CollKind::AllGather),
+        (&dp, CollKind::ReduceScatter),
+        (&pp, CollKind::SendRecv),
+        (&pp, CollKind::AllToAll),
+    ] {
+        let healthy = grp.time_collective(kind, bytes, StrategyChoice::Auto).unwrap();
+        let rep = grp.run(
+            kind,
+            bytes,
+            StrategyChoice::Auto,
+            flap_script(healthy, 0),
+            &mut PhantomPlane,
+            0,
+        );
+        assert!(!rep.crashed, "{kind:?} must survive a flapping NIC");
+        assert!(!rep.migrations.is_empty(), "{kind:?} must migrate off the dead NIC");
+        assert!(
+            rep.completion.unwrap() > healthy,
+            "{kind:?}: flapping must cost time"
+        );
+    }
+}
+
+#[test]
+fn tp_group_unaffected_by_remote_rail_flap() {
+    // TP traffic rides NVLink: a flapping NIC on the *other* server must
+    // not move its completion time (the group fault-domain property, now
+    // under a dynamic fault script rather than standing failures).
+    let preset = Preset::testbed();
+    let world = CommWorld::new(&preset, 8);
+    let tp0 = world.tp_groups(&ParallelLayout::new(8, 1, 2)).remove(0);
+    let bytes = 1u64 << 26;
+    let healthy = tp0.time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto).unwrap();
+    let rep = tp0.run(
+        CollKind::AllReduce,
+        bytes,
+        StrategyChoice::Auto,
+        flap_script(healthy, 8 + 3),
+        &mut PhantomPlane,
+        0,
+    );
+    assert!(!rep.crashed);
+    let t = rep.completion.unwrap();
+    assert!(
+        (t - healthy).abs() <= 1e-9 * healthy,
+        "NVLink TP traffic must not notice server-1 NIC flaps: {t} vs {healthy}"
+    );
+    assert!(rep.migrations.iter().all(|m| m.flows_migrated == 0));
+}
+
+#[test]
+fn repair_cycle_restores_group_planning() {
+    // Standing failure → degraded plan; repair → the healthy plan (and its
+    // exact timing) must come back, plan cache and epoch included.
+    let preset = Preset::testbed();
+    let mut world = CommWorld::new(&preset, 8);
+    let bytes = 1u64 << 26;
+    let layout = ParallelLayout::new(2, 8, 1);
+    let healthy = world
+        .dp_groups(&layout)
+        .remove(0)
+        .time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto)
+        .unwrap();
+    world.note_failure(0, FaultAction::FailNic);
+    let degraded = world
+        .dp_groups(&layout)
+        .remove(0)
+        .time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto)
+        .unwrap();
+    assert!(degraded > healthy, "planned-around failure still costs bandwidth");
+    world.note_failure(0, FaultAction::Repair);
+    let restored = world
+        .dp_groups(&layout)
+        .remove(0)
+        .time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto)
+        .unwrap();
+    assert_eq!(restored, healthy, "repair must restore the healthy plan and timing");
+}
+
+#[test]
+fn standing_collapsed_degrade_routes_around() {
+    // A standing Degrade below the fluctuation threshold must be routed
+    // around like a dead link (bounded by backup-NIC double load), not
+    // crawled over at 1% capacity.
+    let preset = Preset::testbed();
+    let mut world = CommWorld::new(&preset, 8);
+    let bytes = 1u64 << 26;
+    let layout = ParallelLayout::new(2, 8, 1);
+    let healthy = world
+        .dp_groups(&layout)
+        .remove(0)
+        .time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto)
+        .unwrap();
+    world.note_failure(0, FaultAction::Degrade(0.01));
+    let t = world
+        .dp_groups(&layout)
+        .remove(0)
+        .time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto)
+        .unwrap();
+    assert!(t > healthy);
+    assert!(t < healthy * 10.0, "collapsed link must not crawl: {t} vs healthy {healthy}");
 }
 
 #[test]

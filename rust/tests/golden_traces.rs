@@ -1,0 +1,144 @@
+//! Golden-trace conformance for the committed scenario corpus.
+//!
+//! Every scenario under `scenarios/` is compiled from its declarative
+//! description, driven through the multi-iteration runner, and its report
+//! serialized deterministically. The serialized trace must byte-match the
+//! committed fixture under `rust/tests/fixtures/<name>.golden.json`.
+//!
+//! Fixture lifecycle:
+//! * **first run** (fixture missing) — the trace is written and the test
+//!   passes after asserting a second fresh run is bit-identical; commit the
+//!   generated fixture (CI uploads it as an artifact and warns until it is
+//!   committed);
+//! * **regeneration** — run with `GOLDEN_REGEN=1` to rewrite fixtures after
+//!   an intentional behaviour change;
+//! * **mismatch** — the fresh trace is written next to the fixture as
+//!   `<name>.golden.actual.json` and the test fails.
+
+use std::fs;
+use std::path::PathBuf;
+
+use r2ccl::config::Preset;
+use r2ccl::scenario::{compare_or_seed, FaultScenario, GoldenOutcome, ScenarioRunner};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load(name: &str) -> FaultScenario {
+    let path = repo_root().join("scenarios").join(format!("{name}.json"));
+    let text = fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    FaultScenario::from_json_str(&text)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+fn trace_of(sc: &FaultScenario) -> String {
+    let report = ScenarioRunner::new(sc, &Preset::testbed()).run();
+    report
+        .check_invariants()
+        .unwrap_or_else(|e| panic!("{}: invariant violated: {e}", sc.name));
+    report.to_json().pretty() + "\n"
+}
+
+fn golden(name: &str) {
+    let sc = load(name);
+    assert_eq!(sc.name, name, "scenario name must match its file name");
+    let trace = trace_of(&sc);
+    // Determinism first: a second fresh run must be bit-identical — this
+    // holds even on a bootstrap run with no fixture yet.
+    assert_eq!(trace, trace_of(&sc), "{name}: same seed must reproduce the trace bit-for-bit");
+
+    let fixture = repo_root().join("rust/tests/fixtures").join(format!("{name}.golden.json"));
+    let regen = std::env::var_os("GOLDEN_REGEN").is_some();
+    match compare_or_seed(&fixture, &trace, regen).unwrap() {
+        GoldenOutcome::Seeded => eprintln!(
+            "{name}: golden fixture {} {}",
+            fixture.display(),
+            if regen { "regenerated" } else { "seeded on first run — commit it" }
+        ),
+        GoldenOutcome::Matched => {}
+        GoldenOutcome::Mismatch { actual } => panic!(
+            "{name}: trace diverged from {} (fresh run at {}; rerun with GOLDEN_REGEN=1 to accept)",
+            fixture.display(),
+            actual.display()
+        ),
+    }
+}
+
+#[test]
+fn golden_oneshot_nic_fail() {
+    golden("oneshot_nic_fail");
+}
+
+#[test]
+fn golden_flapping_nic() {
+    golden("flapping_nic");
+}
+
+#[test]
+fn golden_fluctuation_ramp() {
+    golden("fluctuation_ramp");
+}
+
+#[test]
+fn golden_fluctuation_collapse() {
+    golden("fluctuation_collapse");
+}
+
+#[test]
+fn golden_correlated_rail() {
+    golden("correlated_rail");
+}
+
+#[test]
+fn golden_cascade_walk() {
+    golden("cascade_walk");
+}
+
+#[test]
+fn golden_repair_window() {
+    golden("repair_window");
+}
+
+#[test]
+fn golden_serving_kv_loss() {
+    golden("serving_kv_loss");
+}
+
+#[test]
+fn golden_random_multifault() {
+    golden("random_multifault");
+}
+
+#[test]
+fn golden_pp_boundary_flap() {
+    golden("pp_boundary_flap");
+}
+
+#[test]
+fn corpus_covers_required_scenario_kinds() {
+    // The acceptance floor: ≥6 distinct scenario kinds in the committed
+    // corpus, including flapping, correlated-rail and a fluctuation ramp.
+    let dir = repo_root().join("scenarios");
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut files = 0usize;
+    for ent in fs::read_dir(&dir).unwrap() {
+        let path = ent.unwrap().path();
+        if path.extension().map(|x| x == "json").unwrap_or(false) {
+            files += 1;
+            let sc = FaultScenario::from_json_str(&fs::read_to_string(&path).unwrap())
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            for p in &sc.patterns {
+                kinds.insert(p.kind());
+            }
+        }
+    }
+    assert!(files >= 6, "corpus has only {files} scenarios");
+    for required in
+        ["flapping", "correlated_rail", "degrade_ramp", "cascade", "repair_window", "oneshot"]
+    {
+        assert!(kinds.contains(required), "corpus is missing a {required:?} scenario");
+    }
+    assert!(kinds.len() >= 6, "only {} distinct kinds", kinds.len());
+}

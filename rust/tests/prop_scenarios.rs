@@ -1,0 +1,113 @@
+//! Property tests for the scenario engine.
+//!
+//! * Same seed ⇒ identical compiled event script, and a bit-identical
+//!   `ScenarioReport` serialization across two full runs.
+//! * The losslessness and no-crash invariants hold for random scenarios
+//!   whose fault patterns keep ≥1 usable NIC per server (each pattern
+//!   touches a distinct NIC, at most 3 patterns, 8 NICs per server).
+//! * Scenario JSON round-trips exactly.
+
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::config::Preset;
+use r2ccl::scenario::{FaultPattern, FaultScenario, ScenarioRunner, Workload};
+use r2ccl::topology::TopologyConfig;
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+/// A random scenario over the 2×8 testbed that never removes the last
+/// usable NIC of a server: at most 3 patterns, each on its own NIC.
+fn random_scenario(rng: &mut Rng) -> FaultScenario {
+    let mut nic_pool: Vec<usize> = (0..16).collect();
+    rng.shuffle(&mut nic_pool);
+    let n_patterns = rng.range(1, 4);
+    let mut patterns = Vec::new();
+    for _ in 0..n_patterns {
+        let nic = nic_pool.pop().unwrap();
+        let pattern = match rng.range(0, 4) {
+            0 => FaultPattern::OneShot {
+                at: rng.range_f64(0.1, 2.9),
+                nic,
+                action: if rng.chance(0.5) {
+                    FaultAction::FailNic
+                } else {
+                    FaultAction::CutCable
+                },
+            },
+            1 => FaultPattern::Flapping {
+                nic,
+                start: rng.range_f64(0.1, 1.0),
+                cycles: rng.range(1, 3),
+                down: rng.range_f64(0.2, 0.6),
+                up: rng.range_f64(0.2, 0.6),
+                jitter: 0.05,
+            },
+            2 => FaultPattern::DegradeRamp {
+                nic,
+                start: rng.range_f64(0.1, 1.0),
+                steps: rng.range(2, 5),
+                dt: rng.range_f64(0.2, 0.5),
+                floor: rng.range_f64(0.2, 0.9),
+                recover: rng.chance(0.5),
+            },
+            _ => FaultPattern::RepairWindow {
+                nic,
+                at: rng.range_f64(0.1, 2.0),
+                down_for: rng.range_f64(0.5, 1.5),
+            },
+        };
+        patterns.push(pattern);
+    }
+    FaultScenario {
+        name: "prop".into(),
+        // Seeds ride JSON f64 numbers: keep below 2^53.
+        seed: rng.next_u64() >> 12,
+        iters: 4,
+        workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+        max_overhead: None,
+        patterns,
+    }
+}
+
+#[test]
+fn same_seed_compiles_identical_scripts() {
+    let topo = TopologyConfig::testbed_h100();
+    check("scenario_compile_deterministic", 32, |rng| {
+        let sc = random_scenario(rng);
+        assert_eq!(sc.compile(&topo), sc.compile(&topo));
+    });
+}
+
+#[test]
+fn same_seed_produces_bit_identical_reports() {
+    let preset = Preset::testbed();
+    check("scenario_report_deterministic", 6, |rng| {
+        let sc = random_scenario(rng);
+        let a = ScenarioRunner::new(&sc, &preset).run().to_json().pretty();
+        let b = ScenarioRunner::new(&sc, &preset).run().to_json().pretty();
+        assert_eq!(a, b, "report must be a pure function of (scenario, seed)");
+    });
+}
+
+#[test]
+fn lossless_and_no_crash_while_a_path_exists() {
+    let preset = Preset::testbed();
+    check("scenario_lossless", 10, |rng| {
+        let sc = random_scenario(rng);
+        let report = ScenarioRunner::new(&sc, &preset).run();
+        report.check_invariants().unwrap();
+        assert!(!report.path_lost, "generator must keep ≥1 usable NIC per server");
+        assert!(!report.crashed, "no crash while an alternate path exists");
+        assert!(report.lossless, "AllReduce results must equal the healthy sum");
+        assert_eq!(report.iterations.len(), sc.iters);
+    });
+}
+
+#[test]
+fn scenario_json_roundtrips_exactly() {
+    check("scenario_json_roundtrip", 32, |rng| {
+        let sc = random_scenario(rng);
+        let text = sc.to_json().pretty();
+        let back = FaultScenario::from_json_str(&text).unwrap();
+        assert_eq!(sc, back);
+    });
+}
