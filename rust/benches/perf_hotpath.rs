@@ -6,28 +6,47 @@
 //!   * data-plane reduce_add throughput;
 //!   * Balance / R²-AllReduce schedule rewriting;
 //!   * communicator plan compilation, cached (epoch-keyed PlanCache hit)
-//!     vs uncached (the seed's per-call rebuild).
+//!     vs uncached (the seed's per-call rebuild);
+//!   * **corpus replay**: a mixed corpus of compiled plans replayed many
+//!     times through the indexed executor (pooled engine arena, slab flow
+//!     map, precompiled CSR DAG, per-row routing COW) vs the preserved
+//!     pre-optimization baseline (`BaselineExecutor`: fresh engine,
+//!     HashMap flow map, per-run `indeg`/`rdeps` build). Semantics must
+//!     agree bit-for-bit; the wallclock ratio is the corpus-replay
+//!     speedup, asserted ≥3x in full mode.
 //!
-//! Before/after numbers for the optimization pass live in
-//! EXPERIMENTS.md §Perf.
+//! Results are persisted to `bench_results/perf_hotpath.json` (wallclock,
+//! `Engine::recomputes`, flow-creation and engine-pool allocation-proxy
+//! counters). `BENCH_QUICK=1` shrinks the replay count for CI smoke runs
+//! and skips the wallclock-ratio assertion (timing there is too noisy to
+//! gate on), keeping the semantic-equality assertions.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use r2ccl::bench::time;
 use r2ccl::ccl::{CommWorld, HealthState, StrategyChoice};
 use r2ccl::collectives::dataplane::reduce_add;
-use r2ccl::collectives::exec::{ChannelRouting, ExecOptions, Executor, FaultAction};
-use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
-use r2ccl::collectives::{CollKind, PhantomPlane};
+use r2ccl::collectives::exec::{
+    ChannelRouting, ExecOptions, ExecReport, Executor, FaultAction, FaultEvent,
+};
+use r2ccl::collectives::ring::{
+    nccl_rings, ring_all_gather, ring_allreduce, ring_reduce_scatter,
+};
+use r2ccl::collectives::{p2p, BaselineExecutor, CollKind, PhantomPlane, Schedule};
 use r2ccl::config::{Preset, TimingConfig};
 use r2ccl::netsim::{self, FaultPlane};
 use r2ccl::schedule::{apply_balance, r2_allreduce_schedule};
 use r2ccl::topology::{Topology, TopologyConfig};
+use r2ccl::util::stats::fmt_time;
+use r2ccl::util::Json;
 
 fn main() {
     let topo = Topology::build(&TopologyConfig::testbed_h100());
     let timing = TimingConfig::default();
     println!("== L3 hot-path wallclock microbenchmarks ==\n");
 
-    // 1. Fluid engine under flow churn: 128 concurrent flows, staggered.
+    // 1. Fluid engine under flow churn: 512 concurrent flows, staggered.
     let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
     time("netsim: 512-flow churn (add/complete, max-min recompute)", 3, 20, || {
         let mut e = netsim::Engine::new(&caps);
@@ -106,17 +125,163 @@ fn main() {
         let (s, _) = comm.compile(CollKind::AllReduce, 1 << 28, 0, StrategyChoice::Auto);
         assert!(!s.is_empty());
     });
-    let speedup = t_uncached.mean / t_cached.mean;
+    let quick = std::env::var_os("BENCH_QUICK").is_some();
+    let cache_speedup = t_uncached.mean / t_cached.mean;
     let (hits, misses) = world.plan_cache_stats();
     println!(
-        "  -> cached repeat-compile {speedup:.0}x faster than per-call rebuild \
+        "  -> cached repeat-compile {cache_speedup:.0}x faster than per-call rebuild \
          ({hits} hits / {misses} misses)"
     );
     assert!(hits > misses, "repeat compiles must hit the cache");
-    assert!(
-        speedup >= 5.0,
-        "cached compile must be >=5x faster than the per-call rebuild, got {speedup:.1}x"
+    // Like the corpus assert below, this is a wallclock ratio: skip it in
+    // quick (CI smoke) mode, where runner timing is too noisy to gate on.
+    if !quick {
+        assert!(
+            cache_speedup >= 5.0,
+            "cached compile must be >=5x faster than the per-call rebuild, got {cache_speedup:.1}x"
+        );
+    }
+
+    // 7. Corpus replay (§Perf acceptance): the regression-guard inner loop
+    //    — scenario sweeps and Monte-Carlo trials replay *cached* plans
+    //    over and over, so everything that is per-run (engine allocation,
+    //    flow bookkeeping, dependency-graph construction) is pure
+    //    overhead. Baseline arm: the preserved pre-optimization executor.
+    //    Optimized arm: the indexed executor. Same engine semantics, so
+    //    reports must agree bit-for-bit.
+    let replays: usize = if quick { 4 } else { 40 };
+    println!(
+        "\n== corpus replay: indexed executor vs per-run-DAG + HashMap baseline \
+         ({replays} replays/plan{}) ==",
+        if quick { ", BENCH_QUICK" } else { "" }
     );
+    let opts = ExecOptions::default;
+    let healthy_4m = Executor::new(&topo, &timing, routing.clone(), opts(), vec![])
+        .run(&ring_allreduce(&spec16, 1 << 22, 0), &mut PhantomPlane)
+        .completion_or_panic();
+    let corpus: Vec<(&str, Schedule, Vec<FaultEvent>)> = vec![
+        ("allreduce_4m", ring_allreduce(&spec16, 1 << 22, 0), vec![]),
+        ("allreduce_64k", ring_allreduce(&spec16, 1 << 16, 0), vec![]),
+        ("allgather_1m", ring_all_gather(&spec16, 1 << 20, 0), vec![]),
+        ("reducescatter_1m", ring_reduce_scatter(&spec16, 1 << 20, 0), vec![]),
+        (
+            "sendrecv_256k",
+            p2p::sendrecv(&p2p::ring_exchange_pairs(2, 8), 1 << 18, 8),
+            vec![],
+        ),
+        (
+            "allreduce_4m_fail_mid",
+            ring_allreduce(&spec16, 1 << 22, 0),
+            vec![FaultEvent { at: healthy_4m * 0.4, nic: 0, action: FaultAction::FailNic }],
+        ),
+    ];
+
+    // Both arms share the routing by Arc, exactly as `CommGroup::run` does.
+    let routing_arc = Arc::new(routing.clone());
+    let run_baseline = |sched: &Schedule, script: &[FaultEvent]| -> ExecReport {
+        BaselineExecutor::new(&topo, &timing, Arc::clone(&routing_arc), opts(), script.to_vec())
+            .run(sched, &mut PhantomPlane)
+    };
+    let run_optimized = |sched: &Schedule, script: &[FaultEvent]| -> ExecReport {
+        Executor::new(&topo, &timing, Arc::clone(&routing_arc), opts(), script.to_vec())
+            .run(sched, &mut PhantomPlane)
+    };
+
+    let mut plans_json = Json::arr();
+    let mut total_base = 0.0f64;
+    let mut total_opt = 0.0f64;
+    let mut corpus_recomputes = 0u64;
+    let mut corpus_flows = 0u64;
+    // Snapshot the pool counters so the recorded numbers cover exactly the
+    // corpus-replay section (earlier bench sections also run executors).
+    let (pool_hits_before, pool_misses_before) = netsim::engine_pool_stats();
+    for (label, sched, script) in &corpus {
+        // Conformance before speed: the two arms must tell the same story
+        // (these runs double as warmup for both paths).
+        let rb = run_baseline(sched, script);
+        let ro = run_optimized(sched, script);
+        assert_eq!(rb.completion, ro.completion, "{label}: completion diverged");
+        assert_eq!(rb.crashed, ro.crashed, "{label}: crash flag diverged");
+        assert_eq!(rb.wire_bytes, ro.wire_bytes, "{label}: wire bytes diverged");
+        assert_eq!(rb.timeline, ro.timeline, "{label}: timeline diverged");
+        assert_eq!(rb.migrations.len(), ro.migrations.len(), "{label}: migrations diverged");
+        assert_eq!(rb.recomputes, ro.recomputes, "{label}: engine recomputes diverged");
+
+        let t0 = Instant::now();
+        for _ in 0..replays {
+            let r = run_baseline(sched, script);
+            assert_eq!(r.completion, rb.completion);
+        }
+        let tb = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..replays {
+            let r = run_optimized(sched, script);
+            assert_eq!(r.completion, ro.completion);
+        }
+        let to = t0.elapsed().as_secs_f64();
+        total_base += tb;
+        total_opt += to;
+        corpus_recomputes += ro.recomputes;
+        corpus_flows += ro.flows_created;
+        println!(
+            "  {label:<22} {:>5} groups  baseline {:>10}/replay  indexed {:>10}/replay  {:>6.2}x",
+            sched.len(),
+            fmt_time(tb / replays as f64),
+            fmt_time(to / replays as f64),
+            tb / to
+        );
+        plans_json.push(
+            Json::obj()
+                .set("plan", *label)
+                .set("groups", sched.len())
+                .set("replays", replays)
+                .set("baseline_seconds", tb)
+                .set("optimized_seconds", to)
+                .set("speedup", tb / to)
+                .set("recomputes_per_replay", ro.recomputes)
+                .set("flows_per_replay", ro.flows_created),
+        );
+    }
+    let corpus_speedup = total_base / total_opt;
+    let (pool_hits_after, pool_misses_after) = netsim::engine_pool_stats();
+    let (pool_hits, pool_misses) =
+        (pool_hits_after - pool_hits_before, pool_misses_after - pool_misses_before);
+    println!(
+        "  -> corpus-replay speedup {corpus_speedup:.2}x \
+         (engine pool: {pool_hits} hits / {pool_misses} misses)"
+    );
+
+    let _ = std::fs::create_dir_all("bench_results");
+    let record = Json::obj()
+        .set("bench", "perf_hotpath")
+        .set("quick", quick)
+        .set("replays_per_plan", replays)
+        .set("plans", plans_json)
+        .set("baseline_seconds_total", total_base)
+        .set("optimized_seconds_total", total_opt)
+        .set("corpus_speedup", corpus_speedup)
+        .set(
+            "engine",
+            Json::obj()
+                .set("recomputes_per_corpus_pass", corpus_recomputes)
+                .set("flows_created_per_corpus_pass", corpus_flows)
+                .set("pool_hits", pool_hits)
+                .set("pool_misses", pool_misses),
+        )
+        .set("plan_cache_speedup", cache_speedup);
+    std::fs::write("bench_results/perf_hotpath.json", record.pretty() + "\n")
+        .expect("write bench_results/perf_hotpath.json");
+    println!("  -> results written to bench_results/perf_hotpath.json");
+
+    if quick {
+        println!("  (BENCH_QUICK: >=3x corpus-replay assertion skipped — timing-noise smoke run)");
+    } else {
+        assert!(
+            corpus_speedup >= 3.0,
+            "corpus replay must be >=3x faster than the per-run-DAG + HashMap + \
+             fresh-engine baseline, got {corpus_speedup:.2}x"
+        );
+    }
 
     println!("\nperf_hotpath OK");
 }

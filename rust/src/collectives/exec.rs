@@ -8,13 +8,12 @@
 //! and hot repair; R²CCL-Balance / R²CCL-AllReduce act earlier, at the
 //! schedule level, and then execute here unchanged.
 
-use std::collections::HashMap;
 use std::fmt;
 use std::sync::Arc;
 
 use crate::config::TimingConfig;
 use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
-use crate::netsim::{clamp_degrade_factor, engine_for, Engine, Event, FaultPlane, FlowId};
+use crate::netsim::{clamp_degrade_factor, engine_for, recycle, Engine, Event, FaultPlane, FlowId};
 use crate::topology::{NicId, ResourceKey, Route, Topology};
 use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
 use crate::util::Json;
@@ -250,6 +249,13 @@ pub struct ExecReport {
     pub wire_bytes: u64,
     /// Structured trace of everything the recovery pipeline did.
     pub timeline: Vec<TimelineEntry>,
+    /// Fluid-engine rate recomputations this run performed (the §Perf
+    /// counter the corpus-replay bench records; not part of any trace
+    /// serialization).
+    pub recomputes: u64,
+    /// Engine flows created this run (allocation-proxy perf counter; not
+    /// part of any trace serialization).
+    pub flows_created: u64,
 }
 
 impl ExecReport {
@@ -273,21 +279,34 @@ struct FlowInfo {
 }
 
 /// The executor.
+///
+/// §Perf: the run-time hot path is fully indexed — in-flight flows live in
+/// a `FlowId`-indexed slab (engine flow ids are dense per run), the
+/// migration chain in a `NicId`-indexed table, dependency replay walks the
+/// schedule's precompiled [`super::schedule::CompiledDag`], the engine
+/// arena is pooled via [`engine_for`]/[`recycle`], and routing rewrites
+/// copy single channel rows instead of the whole table. The preserved
+/// pre-optimization implementation lives in
+/// [`super::exec_baseline::BaselineExecutor`] for conformance testing.
 pub struct Executor<'a> {
     topo: &'a Topology,
     timing: &'a TimingConfig,
     opts: ExecOptions,
-    /// Working copy of the routing table, materialized lazily (copy on
-    /// write) the first time a migration rewrites an entry. Failure-free
-    /// runs never clone the shared table.
-    routing: Option<ChannelRouting>,
+    /// Per-channel copy-on-write routing rows: `Some(row)` overrides the
+    /// shared default for that channel only. A migration materializes the
+    /// rows that actually reference the dead NIC — single-NIC migrations on
+    /// wide communicators no longer deep-copy every channel, and
+    /// failure-free runs never copy anything.
+    row_overrides: Vec<Option<Vec<NicId>>>,
     default_routing: Arc<ChannelRouting>,
     faults: FaultPlane,
     engine: Engine,
     script: Vec<FaultEvent>,
-    /// failed NIC → replacement (resolution chain for hinted routes).
-    migrated_to: HashMap<NicId, NicId>,
-    flows: HashMap<FlowId, FlowInfo>,
+    /// failed NIC → replacement (resolution chain for hinted routes),
+    /// dense by `NicId`.
+    migrated_to: Vec<Option<NicId>>,
+    /// In-flight flow bookkeeping, indexed by `FlowId` (dense per run).
+    flows: Vec<Option<FlowInfo>>,
     report: ExecReport,
 }
 
@@ -308,18 +327,20 @@ impl<'a> Executor<'a> {
             timing,
             opts,
             default_routing: routing.into(),
-            routing: None,
+            row_overrides: Vec::new(),
             faults: FaultPlane::new(topo),
             engine,
             script,
-            migrated_to: HashMap::new(),
-            flows: HashMap::new(),
+            migrated_to: vec![None; topo.n_nics()],
+            flows: Vec::new(),
             report: ExecReport {
                 completion: None,
                 crashed: false,
                 migrations: Vec::new(),
                 wire_bytes: 0,
                 timeline: Vec::new(),
+                recomputes: 0,
+                flows_created: 0,
             },
         }
     }
@@ -344,7 +365,7 @@ impl<'a> Executor<'a> {
                     .into_iter()
                     .find(|&n| n != nic && self.faults.is_usable(n))
                 {
-                    self.migrated_to.insert(nic, rep);
+                    self.migrated_to[nic] = Some(rep);
                 }
                 self.rewrite_routing(nic);
             }
@@ -352,23 +373,42 @@ impl<'a> Executor<'a> {
         self
     }
 
-    /// Run a schedule to completion (or crash). Consumes the executor.
+    /// Run a schedule to completion (or crash). Consumes the executor; the
+    /// engine arena is recycled into the thread-local pool on the way out.
     pub fn run(mut self, sched: &Schedule, plane: &mut dyn DataPlane) -> ExecReport {
+        self.run_inner(sched, plane);
+        let Executor { engine, mut report, .. } = self;
+        report.recomputes = engine.recomputes;
+        report.flows_created = engine.flows_created;
+        recycle(engine);
+        report
+    }
+
+    fn run_inner(&mut self, sched: &Schedule, plane: &mut dyn DataPlane) {
         debug_assert!(sched.validate().is_ok(), "{:?}", sched.validate());
         let n = sched.groups.len();
         if n == 0 {
             self.report.completion = Some(0.0);
-            return self.report;
+            return;
         }
-        // Dependency bookkeeping.
-        let mut indeg: Vec<usize> = sched.groups.iter().map(|g| g.deps.len()).collect();
-        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for (i, g) in sched.groups.iter().enumerate() {
-            for &d in &g.deps {
-                rdeps[d].push(i);
-            }
-        }
-        let mut subs_left: Vec<usize> = sched.groups.iter().map(|g| g.subs.len()).collect();
+        // Dependency replay over the precompiled DAG: the per-run state is
+        // two memcpys of the baseline countdowns; the reverse-dependency
+        // walk reads the schedule's shared CSR arrays. Cached plans
+        // (`Arc<Schedule>` in the plan cache) thus replay with zero graph
+        // building.
+        let dag = sched.compiled_dag();
+        // The dag is cached in the schedule; structural mutation through the
+        // pub `groups` field after the first run would leave it stale (only
+        // push/append invalidate). Enforce the invariant in debug builds.
+        debug_assert!(
+            dag.indeg0.len() == n
+                && sched.groups.iter().enumerate().all(|(i, g)| {
+                    dag.indeg0[i] == g.deps.len() && dag.subs0[i] == g.subs.len()
+                }),
+            "CompiledDag is stale: schedule structurally mutated after its first run"
+        );
+        let mut indeg = dag.indeg0.clone();
+        let mut subs_left = dag.subs0.clone();
         let mut done = 0usize;
 
         for i in 0..self.script.len() {
@@ -385,7 +425,7 @@ impl<'a> Executor<'a> {
         while let Some((t, ev)) = self.engine.next_event() {
             match ev {
                 Event::FlowCompleted(fid) => {
-                    let Some(info) = self.flows.remove(&fid) else { continue };
+                    let Some(info) = self.take_flow(fid) else { continue };
                     self.report.wire_bytes += info.size;
                     let g = info.group;
                     subs_left[g] -= 1;
@@ -393,7 +433,7 @@ impl<'a> Executor<'a> {
                         let grp = &sched.groups[g];
                         plane.apply(grp.subs[0].src, grp.subs[0].dst, grp.op);
                         done += 1;
-                        for &j in &rdeps[g] {
+                        for &j in dag.rdeps(g) {
                             indeg[j] -= 1;
                             if indeg[j] == 0 {
                                 self.issue_group(sched, j);
@@ -401,7 +441,7 @@ impl<'a> Executor<'a> {
                         }
                         if done == n {
                             self.report.completion = Some(t);
-                            return self.report;
+                            return;
                         }
                     }
                 }
@@ -415,7 +455,7 @@ impl<'a> Executor<'a> {
                                 if self.opts.policy == FailurePolicy::Crash {
                                     self.log(t, TimelineEvent::VanillaAbort { nic: fe.nic });
                                     self.report.crashed = true;
-                                    return self.report;
+                                    return;
                                 }
                                 let det = self.detection_latency(fe.nic);
                                 self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
@@ -437,7 +477,7 @@ impl<'a> Executor<'a> {
                                 let factor = clamp_degrade_factor(raw);
                                 if self.opts.policy == FailurePolicy::HotRepair
                                     && factor < self.timing.degrade_detect_threshold
-                                    && !self.migrated_to.contains_key(&fe.nic)
+                                    && self.migrated_to[fe.nic].is_none()
                                 {
                                     // The migrated_to guard keeps a ramp
                                     // whose tail repeatedly dips below the
@@ -460,7 +500,7 @@ impl<'a> Executor<'a> {
                         let nic = (tag & !TAG_MASK) as NicId;
                         if !self.handle_migration(t, nic, sched) {
                             self.report.crashed = true;
-                            return self.report;
+                            return;
                         }
                     }
                     TAG_REPROBE => {
@@ -478,7 +518,6 @@ impl<'a> Executor<'a> {
             // Hung with stalled flows and no recovery → job-level abort.
             self.report.crashed = true;
         }
-        self.report
     }
 
     // ------------------------------------------------------------------
@@ -487,18 +526,27 @@ impl<'a> Executor<'a> {
         self.report.timeline.push(TimelineEntry { at, event });
     }
 
-    /// Current routing table: the working copy if a migration materialized
-    /// one, else the shared default.
-    fn routing(&self) -> &ChannelRouting {
-        self.routing.as_ref().unwrap_or(&self.default_routing)
+    /// The effective routing entry for `(channel, server)`: the channel's
+    /// copy-on-write override row when one was materialized, else the
+    /// shared default.
+    fn nic_entry(&self, channel: usize, server: usize) -> NicId {
+        match self.row_overrides.get(channel).and_then(|o| o.as_ref()) {
+            Some(row) => row[server],
+            None => self.default_routing.nic[channel][server],
+        }
     }
 
-    /// Mutable routing table, materializing the copy-on-write clone.
-    fn routing_mut(&mut self) -> &mut ChannelRouting {
-        if self.routing.is_none() {
-            self.routing = Some((*self.default_routing).clone());
+    /// Record an in-flight flow (`FlowId`s are dense: the slab grows once
+    /// per engine flow and is otherwise index-addressed).
+    fn insert_flow(&mut self, fid: FlowId, info: FlowInfo) {
+        if fid >= self.flows.len() {
+            self.flows.resize_with(fid + 1, || None);
         }
-        self.routing.as_mut().unwrap()
+        self.flows[fid] = Some(info);
+    }
+
+    fn take_flow(&mut self, fid: FlowId) -> Option<FlowInfo> {
+        self.flows.get_mut(fid).and_then(|slot| slot.take())
     }
 
     fn apply_fault(&mut self, nic: NicId, action: FaultAction) {
@@ -547,7 +595,7 @@ impl<'a> Executor<'a> {
     fn resolve_nic(&self, nic: NicId) -> NicId {
         let mut n = nic;
         let mut hops = 0;
-        while let Some(&next) = self.migrated_to.get(&n) {
+        while let Some(next) = self.migrated_to[n] {
             n = next;
             hops += 1;
             if hops > self.topo.cfg.nics_per_server {
@@ -566,8 +614,8 @@ impl<'a> Executor<'a> {
         let (src_nic, dst_nic) = match hint {
             Some((a, b)) => (self.resolve_nic(a), self.resolve_nic(b)),
             None => (
-                self.resolve_nic(self.routing().nic[channel][src_server]),
-                self.resolve_nic(self.routing().nic[channel][dst_server]),
+                self.resolve_nic(self.nic_entry(channel, src_server)),
+                self.resolve_nic(self.nic_entry(channel, dst_server)),
             ),
         };
         Route::between(self.topo, src, dst, src_nic, dst_nic)
@@ -580,7 +628,7 @@ impl<'a> Executor<'a> {
             let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
             let plan = route.plan(self.topo, sub.src, sub.dst);
             let fid = self.engine.add_flow(plan.path, sub.bytes as f64, plan.latency, g as u64);
-            self.flows.insert(fid, FlowInfo { group: g, sub: si, size: sub.bytes });
+            self.insert_flow(fid, FlowInfo { group: g, sub: si, size: sub.bytes });
         }
     }
 
@@ -608,7 +656,7 @@ impl<'a> Executor<'a> {
             );
             return false;
         };
-        self.migrated_to.insert(nic, replacement);
+        self.migrated_to[nic] = Some(replacement);
         self.rewrite_routing(nic);
 
         // Migrate every flow whose path crosses the dead NIC.
@@ -629,7 +677,7 @@ impl<'a> Executor<'a> {
             wasted_bytes: 0,
         };
         for fid in victims {
-            let Some(info) = self.flows.remove(&fid) else { continue };
+            let Some(info) = self.take_flow(fid) else { continue };
             let progress = self.engine.abort_flow(fid);
             // Chunk-quantised rollback (§4.3 Technique II).
             let cursor = RollbackCursor::new(info.size, self.timing.chunk_bytes);
@@ -647,8 +695,7 @@ impl<'a> Executor<'a> {
             let plan = route.plan(self.topo, sub.src, sub.dst);
             let new_fid =
                 self.engine.add_flow(plan.path, remaining as f64, plan.latency, info.group as u64);
-            self.flows
-                .insert(new_fid, FlowInfo { group: info.group, sub: info.sub, size: remaining });
+            self.insert_flow(new_fid, FlowInfo { group: info.group, sub: info.sub, size: remaining });
         }
         self.log(
             t,
@@ -666,7 +713,10 @@ impl<'a> Executor<'a> {
     }
 
     /// Rewrite routing entries that reference a dead NIC to a healthy
-    /// replacement.
+    /// replacement. Copy-on-write is per channel *row*: only rows that
+    /// actually reference the NIC are materialized — a single-NIC migration
+    /// on a wide communicator copies one row per affected channel instead
+    /// of deep-copying the whole table.
     fn rewrite_routing(&mut self, nic: NicId) {
         // The replacement is per-NIC, not per-entry: resolve it once.
         let mut r = self.resolve_nic(nic);
@@ -681,11 +731,20 @@ impl<'a> Executor<'a> {
         if !self.faults.is_usable(r) {
             return;
         }
-        if !self.routing().nic.iter().any(|row| row.contains(&nic)) {
-            return; // nothing routed over this NIC — keep sharing the default
+        let channels = self.default_routing.nic.len();
+        if self.row_overrides.len() < channels {
+            self.row_overrides.resize_with(channels, || None);
         }
-        let work = self.routing_mut();
-        for row in &mut work.nic {
+        for c in 0..channels {
+            let references_nic = match &self.row_overrides[c] {
+                Some(row) => row.contains(&nic),
+                None => self.default_routing.nic[c].contains(&nic),
+            };
+            if !references_nic {
+                continue; // untouched rows keep sharing the default
+            }
+            let row = self.row_overrides[c]
+                .get_or_insert_with(|| self.default_routing.nic[c].clone());
             for entry in row.iter_mut() {
                 if *entry == nic {
                     *entry = r;
@@ -695,21 +754,20 @@ impl<'a> Executor<'a> {
     }
 
     /// Restore default routing for entries whose primary NIC recovered.
+    /// An override row that becomes identical to the default is dropped,
+    /// returning the channel to the shared table.
     fn restore_routing(&mut self, nic: NicId) {
-        self.migrated_to.remove(&nic);
-        if self.routing.is_none() {
-            return; // still sharing the pristine default — nothing to restore
-        }
-        let default = Arc::clone(&self.default_routing);
-        if !default.nic.iter().any(|row| row.contains(&nic)) {
-            return;
-        }
-        let work = self.routing_mut();
-        for (c, row) in work.nic.iter_mut().enumerate() {
+        self.migrated_to[nic] = None;
+        for (c, slot) in self.row_overrides.iter_mut().enumerate() {
+            let Some(row) = slot else { continue };
+            let default_row = &self.default_routing.nic[c];
             for (s, entry) in row.iter_mut().enumerate() {
-                if default.nic[c][s] == nic {
+                if default_row[s] == nic {
                     *entry = nic;
                 }
+            }
+            if *row == *default_row {
+                *slot = None;
             }
         }
     }

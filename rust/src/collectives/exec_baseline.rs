@@ -1,0 +1,483 @@
+//! The pre-optimization schedule executor, preserved verbatim as a
+//! reference implementation.
+//!
+//! [`BaselineExecutor`] is the hot-path executor as it stood before the
+//! indexed rewrite of [`super::exec`]: it builds the `indeg`/`rdeps`
+//! dependency graph per run, tracks in-flight flows in a
+//! `HashMap<FlowId, FlowInfo>` and migrations in a `HashMap<NicId, NicId>`,
+//! materializes the full `ChannelRouting` table on the first migration, and
+//! allocates a fresh engine per run. Two consumers keep it alive:
+//!
+//! * the conformance property tests (`rust/tests/prop_hotpath.rs`) assert
+//!   the optimized executor reproduces this one's reports byte-for-byte on
+//!   every collective kind and fault script — the proof that the §Perf
+//!   rewrite changed no simulated semantics;
+//! * the `perf_hotpath` corpus-replay benchmark uses it as the baseline
+//!   arm its speedup factor is measured against.
+//!
+//! Do not use it in production paths, and do not "fix" it independently:
+//! any intended behaviour change lands in [`super::exec`] first and is
+//! mirrored here to keep the conformance tests meaningful.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::TimingConfig;
+use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
+use crate::netsim::{clamp_degrade_factor, Engine, Event, FaultPlane, FlowId};
+use crate::topology::{NicId, ResourceKey, Route, Topology};
+use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
+
+use super::dataplane::DataPlane;
+use super::exec::{
+    ChannelRouting, ExecOptions, ExecReport, FailurePolicy, FaultAction, FaultEvent,
+    MigrationRecord, TimelineEntry, TimelineEvent,
+};
+use super::schedule::Schedule;
+
+// Timer tag encoding (identical to the optimized executor's).
+const TAG_FAULT: u64 = 1 << 48;
+const TAG_DETECT: u64 = 2 << 48;
+const TAG_REPROBE: u64 = 3 << 48;
+const TAG_MASK: u64 = 0xffff_0000_0000_0000;
+
+struct FlowInfo {
+    group: usize,
+    sub: usize,
+    /// This flow's size (the remainder of the sub after prior migrations).
+    size: u64,
+}
+
+/// The pre-optimization executor (see module docs).
+pub struct BaselineExecutor<'a> {
+    topo: &'a Topology,
+    timing: &'a TimingConfig,
+    opts: ExecOptions,
+    /// Working copy of the routing table, materialized lazily (copy on
+    /// write) the first time a migration rewrites an entry — the *whole*
+    /// table is cloned, the inefficiency the optimized executor's per-row
+    /// overrides replace.
+    routing: Option<ChannelRouting>,
+    default_routing: Arc<ChannelRouting>,
+    faults: FaultPlane,
+    engine: Engine,
+    script: Vec<FaultEvent>,
+    /// failed NIC → replacement (resolution chain for hinted routes).
+    migrated_to: HashMap<NicId, NicId>,
+    flows: HashMap<FlowId, FlowInfo>,
+    report: ExecReport,
+}
+
+impl<'a> BaselineExecutor<'a> {
+    pub fn new(
+        topo: &'a Topology,
+        timing: &'a TimingConfig,
+        routing: impl Into<Arc<ChannelRouting>>,
+        opts: ExecOptions,
+        script: Vec<FaultEvent>,
+    ) -> Self {
+        // A fresh engine allocation per run — the seed's behaviour the
+        // pooled `engine_for` replaces.
+        let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
+        let engine = Engine::new(&caps);
+        BaselineExecutor {
+            topo,
+            timing,
+            opts,
+            default_routing: routing.into(),
+            routing: None,
+            faults: FaultPlane::new(topo),
+            engine,
+            script,
+            migrated_to: HashMap::new(),
+            flows: HashMap::new(),
+            report: ExecReport {
+                completion: None,
+                crashed: false,
+                migrations: Vec::new(),
+                wire_bytes: 0,
+                timeline: Vec::new(),
+                recomputes: 0,
+                flows_created: 0,
+            },
+        }
+    }
+
+    /// Apply pre-existing faults before the collective starts; identical
+    /// semantics to `Executor::with_initial_faults`.
+    pub fn with_initial_faults(mut self, nics: &[(NicId, FaultAction)]) -> Self {
+        for &(nic, action) in nics {
+            self.apply_fault(nic, action);
+            let collapsed = action
+                .factor()
+                .is_some_and(|f| clamp_degrade_factor(f) < self.timing.degrade_detect_threshold);
+            if matches!(action, FaultAction::FailNic | FaultAction::CutCable) || collapsed {
+                let gpu = self.topo.affinity_gpu(nic);
+                if let Some(rep) = self
+                    .topo
+                    .failover_chain(gpu)
+                    .into_iter()
+                    .find(|&n| n != nic && self.faults.is_usable(n))
+                {
+                    self.migrated_to.insert(nic, rep);
+                }
+                self.rewrite_routing(nic);
+            }
+        }
+        self
+    }
+
+    /// Run a schedule to completion (or crash). Consumes the executor.
+    pub fn run(mut self, sched: &Schedule, plane: &mut dyn DataPlane) -> ExecReport {
+        self.run_inner(sched, plane);
+        self.report.recomputes = self.engine.recomputes;
+        self.report.flows_created = self.engine.flows_created;
+        self.report
+    }
+
+    fn run_inner(&mut self, sched: &Schedule, plane: &mut dyn DataPlane) {
+        debug_assert!(sched.validate().is_ok(), "{:?}", sched.validate());
+        let n = sched.groups.len();
+        if n == 0 {
+            self.report.completion = Some(0.0);
+            return;
+        }
+        // Dependency bookkeeping, rebuilt per run (the baseline cost).
+        let mut indeg: Vec<usize> = sched.groups.iter().map(|g| g.deps.len()).collect();
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, g) in sched.groups.iter().enumerate() {
+            for &d in &g.deps {
+                rdeps[d].push(i);
+            }
+        }
+        let mut subs_left: Vec<usize> = sched.groups.iter().map(|g| g.subs.len()).collect();
+        let mut done = 0usize;
+
+        for i in 0..self.script.len() {
+            let at = self.script[i].at;
+            self.engine.set_timer(at, TAG_FAULT | i as u64);
+        }
+
+        for i in 0..n {
+            if indeg[i] == 0 {
+                self.issue_group(sched, i);
+            }
+        }
+
+        while let Some((t, ev)) = self.engine.next_event() {
+            match ev {
+                Event::FlowCompleted(fid) => {
+                    let Some(info) = self.flows.remove(&fid) else { continue };
+                    self.report.wire_bytes += info.size;
+                    let g = info.group;
+                    subs_left[g] -= 1;
+                    if subs_left[g] == 0 {
+                        let grp = &sched.groups[g];
+                        plane.apply(grp.subs[0].src, grp.subs[0].dst, grp.op);
+                        done += 1;
+                        for &j in &rdeps[g] {
+                            indeg[j] -= 1;
+                            if indeg[j] == 0 {
+                                self.issue_group(sched, j);
+                            }
+                        }
+                        if done == n {
+                            self.report.completion = Some(t);
+                            return;
+                        }
+                    }
+                }
+                Event::Timer(_, tag) => match tag & TAG_MASK {
+                    TAG_FAULT => {
+                        let fe = self.script[(tag & !TAG_MASK) as usize];
+                        self.log(t, TimelineEvent::Fault { nic: fe.nic, action: fe.action });
+                        self.apply_fault(fe.nic, fe.action);
+                        match fe.action {
+                            FaultAction::FailNic | FaultAction::CutCable => {
+                                if self.opts.policy == FailurePolicy::Crash {
+                                    self.log(t, TimelineEvent::VanillaAbort { nic: fe.nic });
+                                    self.report.crashed = true;
+                                    return;
+                                }
+                                let det = self.detection_latency(fe.nic);
+                                self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
+                            }
+                            FaultAction::Repair => {
+                                let next = ((t / self.timing.reprobe_interval).floor() + 1.0)
+                                    * self.timing.reprobe_interval;
+                                self.engine.set_timer(next, TAG_REPROBE | fe.nic as u64);
+                            }
+                            FaultAction::Degrade(raw) => {
+                                let factor = clamp_degrade_factor(raw);
+                                if self.opts.policy == FailurePolicy::HotRepair
+                                    && factor < self.timing.degrade_detect_threshold
+                                    && !self.migrated_to.contains_key(&fe.nic)
+                                {
+                                    self.log(
+                                        t,
+                                        TimelineEvent::FluctuationDetected {
+                                            nic: fe.nic,
+                                            factor,
+                                        },
+                                    );
+                                    let det = self.detection_latency(fe.nic);
+                                    self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
+                                }
+                            }
+                        }
+                    }
+                    TAG_DETECT => {
+                        let nic = (tag & !TAG_MASK) as NicId;
+                        if !self.handle_migration(t, nic, sched) {
+                            self.report.crashed = true;
+                            return;
+                        }
+                    }
+                    TAG_REPROBE => {
+                        let nic = (tag & !TAG_MASK) as NicId;
+                        if self.faults.is_usable(nic) {
+                            self.restore_routing(nic);
+                            self.log(t, TimelineEvent::Reprobed { nic });
+                        }
+                    }
+                    _ => unreachable!("unknown timer tag {tag:#x}"),
+                },
+            }
+        }
+        if done < n {
+            // Hung with stalled flows and no recovery → job-level abort.
+            self.report.crashed = true;
+        }
+    }
+
+    // ------------------------------------------------------------------
+
+    fn log(&mut self, at: f64, event: TimelineEvent) {
+        self.report.timeline.push(TimelineEntry { at, event });
+    }
+
+    /// Current routing table: the working copy if a migration materialized
+    /// one, else the shared default.
+    fn routing(&self) -> &ChannelRouting {
+        self.routing.as_ref().unwrap_or(&self.default_routing)
+    }
+
+    /// Mutable routing table, materializing the whole-table clone.
+    fn routing_mut(&mut self) -> &mut ChannelRouting {
+        if self.routing.is_none() {
+            self.routing = Some((*self.default_routing).clone());
+        }
+        self.routing.as_mut().unwrap()
+    }
+
+    fn apply_fault(&mut self, nic: NicId, action: FaultAction) {
+        match action {
+            FaultAction::FailNic => self.faults.fail_nic(self.topo, &mut self.engine, nic),
+            FaultAction::CutCable => self.faults.cut_cable(self.topo, &mut self.engine, nic),
+            FaultAction::Repair => self.faults.repair(self.topo, &mut self.engine, nic),
+            FaultAction::Degrade(f) => self.faults.set_state(
+                self.topo,
+                &mut self.engine,
+                nic,
+                crate::netsim::NicState::Degraded(f),
+            ),
+        }
+    }
+
+    fn detection_latency(&self, nic: NicId) -> f64 {
+        let t = self.timing;
+        let mut lat = t.cq_error_delay + t.oob_notify + t.rollback_cost;
+        let peer = self.peer_nic_for(nic);
+        if let Some(aux) = pick_aux_nic(self.topo, &self.faults, nic, peer) {
+            let rep = triangulate(self.topo, t, &self.faults, nic, peer, aux);
+            lat += rep.elapsed;
+        } else {
+            lat += t.probe_timeout;
+        }
+        if self.opts.backup_policy == BackupPolicy::None {
+            lat += t.conn_setup_cost;
+        }
+        if self.opts.reg_policy == RegPolicy::AffinityOnly {
+            lat += t.lazy_reg_cost;
+        }
+        lat
+    }
+
+    fn peer_nic_for(&self, nic: NicId) -> NicId {
+        let s = self.topo.server_of_nic(nic);
+        let peer_server = if s + 1 < self.topo.n_servers() { s + 1 } else { s.wrapping_sub(1) };
+        let rail = self.topo.rail_of_nic(nic);
+        self.topo.nics_of_server(peer_server).nth(rail).unwrap()
+    }
+
+    /// Resolve a NIC through the migration chain.
+    fn resolve_nic(&self, nic: NicId) -> NicId {
+        let mut n = nic;
+        let mut hops = 0;
+        while let Some(&next) = self.migrated_to.get(&n) {
+            n = next;
+            hops += 1;
+            if hops > self.topo.cfg.nics_per_server {
+                break;
+            }
+        }
+        n
+    }
+
+    fn route_for(&self, channel: usize, src: usize, dst: usize, hint: Option<(NicId, NicId)>) -> Route {
+        let src_server = self.topo.server_of_gpu(src);
+        let dst_server = self.topo.server_of_gpu(dst);
+        if src_server == dst_server {
+            return Route::Intra;
+        }
+        let (src_nic, dst_nic) = match hint {
+            Some((a, b)) => (self.resolve_nic(a), self.resolve_nic(b)),
+            None => (
+                self.resolve_nic(self.routing().nic[channel][src_server]),
+                self.resolve_nic(self.routing().nic[channel][dst_server]),
+            ),
+        };
+        Route::between(self.topo, src, dst, src_nic, dst_nic)
+    }
+
+    /// Issue all sub-transfers of a group.
+    fn issue_group(&mut self, sched: &Schedule, g: usize) {
+        let grp = &sched.groups[g];
+        for (si, sub) in grp.subs.iter().enumerate() {
+            let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
+            let plan = route.plan(self.topo, sub.src, sub.dst);
+            let fid = self.engine.add_flow(plan.path, sub.bytes as f64, plan.latency, g as u64);
+            self.flows.insert(fid, FlowInfo { group: g, sub: si, size: sub.bytes });
+        }
+    }
+
+    /// The live-migration step: runs at detection-complete time for `nic`.
+    /// Returns false when no alternate path exists (escalate to abort).
+    fn handle_migration(&mut self, t: f64, nic: NicId, sched: &Schedule) -> bool {
+        let peer = self.peer_nic_for(nic);
+        let diagnosis = match pick_aux_nic(self.topo, &self.faults, nic, peer) {
+            Some(aux) => {
+                triangulate(self.topo, self.timing, &self.faults, nic, peer, aux).diagnosis
+            }
+            None => Diagnosis::LinkFault,
+        };
+        // Closest healthy NIC by PCIe distance from the failed NIC's GPU.
+        let gpu = self.topo.affinity_gpu(nic);
+        let replacement = self
+            .topo
+            .failover_chain(gpu)
+            .into_iter()
+            .find(|&n| n != nic && self.faults.is_usable(n));
+        let Some(replacement) = replacement else {
+            self.log(
+                t,
+                TimelineEvent::NoAlternatePath { nic, server: self.topo.server_of_nic(nic) },
+            );
+            return false;
+        };
+        self.migrated_to.insert(nic, replacement);
+        self.rewrite_routing(nic);
+
+        // Migrate every flow whose path crosses the dead NIC.
+        let tx = self.topo.resource(ResourceKey::NicTx(nic));
+        let rx = self.topo.resource(ResourceKey::NicRx(nic));
+        let mut victims = self.engine.flows_through(tx);
+        victims.extend(self.engine.flows_through(rx));
+        victims.sort_unstable();
+        victims.dedup();
+
+        let mut rec = MigrationRecord {
+            at: t,
+            nic,
+            replacement: Some(replacement),
+            diagnosis,
+            flows_migrated: 0,
+            retransmitted_bytes: 0,
+            wasted_bytes: 0,
+        };
+        for fid in victims {
+            let Some(info) = self.flows.remove(&fid) else { continue };
+            let progress = self.engine.abort_flow(fid);
+            // Chunk-quantised rollback (§4.3 Technique II).
+            let cursor = RollbackCursor::new(info.size, self.timing.chunk_bytes);
+            let acked = cursor.acked_bytes(progress);
+            let wasted = cursor.wasted_bytes(progress);
+            self.report.wire_bytes += acked + wasted;
+            rec.wasted_bytes += wasted;
+            let remaining = info.size - acked;
+            rec.retransmitted_bytes += remaining;
+            rec.flows_migrated += 1;
+            // Re-issue the remainder on the rewritten routing.
+            let grp = &sched.groups[info.group];
+            let sub = &grp.subs[info.sub];
+            let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
+            let plan = route.plan(self.topo, sub.src, sub.dst);
+            let new_fid =
+                self.engine.add_flow(plan.path, remaining as f64, plan.latency, info.group as u64);
+            self.flows
+                .insert(new_fid, FlowInfo { group: info.group, sub: info.sub, size: remaining });
+        }
+        self.log(
+            t,
+            TimelineEvent::Migration {
+                nic,
+                replacement,
+                diagnosis,
+                flows: rec.flows_migrated,
+                retransmitted_bytes: rec.retransmitted_bytes,
+                wasted_bytes: rec.wasted_bytes,
+            },
+        );
+        self.report.migrations.push(rec);
+        true
+    }
+
+    /// Rewrite routing entries that reference a dead NIC to a healthy
+    /// replacement.
+    fn rewrite_routing(&mut self, nic: NicId) {
+        // The replacement is per-NIC, not per-entry: resolve it once.
+        let mut r = self.resolve_nic(nic);
+        if !self.faults.is_usable(r) {
+            let gpu = self.topo.affinity_gpu(nic);
+            if let Some(n) =
+                self.topo.failover_chain(gpu).into_iter().find(|&n| self.faults.is_usable(n))
+            {
+                r = n;
+            }
+        }
+        if !self.faults.is_usable(r) {
+            return;
+        }
+        if !self.routing().nic.iter().any(|row| row.contains(&nic)) {
+            return; // nothing routed over this NIC — keep sharing the default
+        }
+        let work = self.routing_mut();
+        for row in &mut work.nic {
+            for entry in row.iter_mut() {
+                if *entry == nic {
+                    *entry = r;
+                }
+            }
+        }
+    }
+
+    /// Restore default routing for entries whose primary NIC recovered.
+    fn restore_routing(&mut self, nic: NicId) {
+        self.migrated_to.remove(&nic);
+        if self.routing.is_none() {
+            return; // still sharing the pristine default — nothing to restore
+        }
+        let default = Arc::clone(&self.default_routing);
+        if !default.nic.iter().any(|row| row.contains(&nic)) {
+            return;
+        }
+        let work = self.routing_mut();
+        for (c, row) in work.nic.iter_mut().enumerate() {
+            for (s, entry) in row.iter_mut().enumerate() {
+                if default.nic[c][s] == nic {
+                    *entry = nic;
+                }
+            }
+        }
+    }
+}

@@ -5,9 +5,12 @@
 //! * [`ring`] / [`tree`] / [`p2p`] — algorithm builders.
 //! * [`dataplane`] — bytes-level semantics (the losslessness oracle).
 //! * [`exec`] — the executor: time plane + data plane + hot repair.
+//! * [`exec_baseline`] — the pre-optimization executor, preserved for
+//!   conformance tests and as the `perf_hotpath` baseline arm.
 
 pub mod dataplane;
 pub mod exec;
+pub mod exec_baseline;
 pub mod p2p;
 pub mod ring;
 pub mod schedule;
@@ -22,7 +25,8 @@ pub use ring::{
     nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter,
     rings_for_ranks, rings_in_server_order, RingSpec,
 };
-pub use schedule::{DataOp, Schedule, SubTransfer, TransferGroup};
+pub use exec_baseline::BaselineExecutor;
+pub use schedule::{CompiledDag, DataOp, Schedule, SubTransfer, TransferGroup};
 
 /// Collective kinds (Table 1). `Hash` because the kind is part of the
 /// communicator's plan-cache key.

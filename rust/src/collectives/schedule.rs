@@ -9,6 +9,8 @@
 //! matching real NCCL, where receive buffers are consumed by GPU kernels
 //! only after the transport signals completion (§4.3).
 
+use std::sync::OnceLock;
+
 use crate::topology::{GpuId, NicId};
 
 /// What the receiver does with the delivered bytes (data plane).
@@ -68,24 +70,98 @@ impl TransferGroup {
     }
 }
 
+/// CSR-form replay structure of a schedule's dependency DAG, precompiled
+/// once per [`Schedule`] and shared through the plan cache's
+/// `Arc<Schedule>`: cached plans replay with zero per-run graph building —
+/// the executor memcpys the `indeg0`/`subs0` baselines into its per-run
+/// countdowns and walks reverse dependencies through one flat array
+/// (§Perf: replacing the per-run `indeg`/`rdeps: Vec<Vec<_>>` build).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CompiledDag {
+    /// Initial in-degree per group (the per-run countdown baseline).
+    pub indeg0: Vec<usize>,
+    /// Initial sub-transfer count per group.
+    pub subs0: Vec<usize>,
+    /// CSR offsets into `rdep_dat`, length `n + 1`.
+    rdep_off: Vec<usize>,
+    /// Concatenated reverse-dependency lists (ascending per group, matching
+    /// the historical `rdeps[d].push(i)` order exactly).
+    rdep_dat: Vec<usize>,
+}
+
+impl CompiledDag {
+    pub fn build(groups: &[TransferGroup]) -> CompiledDag {
+        let n = groups.len();
+        let mut indeg0 = vec![0usize; n];
+        let mut rdep_off = vec![0usize; n + 1];
+        for (i, g) in groups.iter().enumerate() {
+            indeg0[i] = g.deps.len();
+            for &d in &g.deps {
+                rdep_off[d + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            rdep_off[i + 1] += rdep_off[i];
+        }
+        let mut cursor = rdep_off.clone();
+        let mut rdep_dat = vec![0usize; rdep_off[n]];
+        for (i, g) in groups.iter().enumerate() {
+            for &d in &g.deps {
+                rdep_dat[cursor[d]] = i;
+                cursor[d] += 1;
+            }
+        }
+        let subs0 = groups.iter().map(|g| g.subs.len()).collect();
+        CompiledDag { indeg0, subs0, rdep_off, rdep_dat }
+    }
+
+    /// Groups unblocked by the completion of group `g` (its dependents).
+    pub fn rdeps(&self, g: usize) -> &[usize] {
+        &self.rdep_dat[self.rdep_off[g]..self.rdep_off[g + 1]]
+    }
+}
+
 /// A compiled collective schedule. Equality is structural (label, groups,
 /// dependencies, data ops) — the plan-cache property tests use it to assert
 /// cached and freshly compiled schedules are bit-identical.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default)]
 pub struct Schedule {
     pub label: String,
     pub groups: Vec<TransferGroup>,
+    /// Lazily precompiled replay structure (see [`CompiledDag`]); built at
+    /// most once per schedule and cleared by the structural mutators
+    /// ([`Schedule::push`] / [`Schedule::append`]). Code that pushes to
+    /// `groups` directly must finish mutating before the first run.
+    dag: OnceLock<CompiledDag>,
 }
+
+// Structural equality only — the lazily built dag cache is derived state
+// and must not affect plan comparisons.
+impl PartialEq for Schedule {
+    fn eq(&self, other: &Self) -> bool {
+        self.label == other.label && self.groups == other.groups
+    }
+}
+impl Eq for Schedule {}
 
 impl Schedule {
     pub fn new(label: impl Into<String>) -> Self {
-        Schedule { label: label.into(), groups: Vec::new() }
+        Schedule { label: label.into(), groups: Vec::new(), dag: OnceLock::new() }
     }
 
     /// Append a group, returning its index (used as a dep handle).
     pub fn push(&mut self, g: TransferGroup) -> usize {
         self.groups.push(g);
+        self.dag = OnceLock::new();
         self.groups.len() - 1
+    }
+
+    /// The precompiled CSR replay structure of this schedule's DAG, built
+    /// on first use. Executors replay through this instead of rebuilding
+    /// `indeg`/`rdeps` per run; via the plan cache's `Arc<Schedule>` the
+    /// structure is shared by every replay of a cached plan.
+    pub fn compiled_dag(&self) -> &CompiledDag {
+        self.dag.get_or_init(|| CompiledDag::build(&self.groups))
     }
 
     pub fn len(&self) -> usize {
@@ -129,6 +205,7 @@ impl Schedule {
             }
             self.groups.push(g);
         }
+        self.dag = OnceLock::new();
         off
     }
 
@@ -244,6 +321,46 @@ mod tests {
         let mut s = Schedule::new("self");
         s.groups.push(TransferGroup::single(0, 3, 3, 1, vec![], DataOp::None));
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn compiled_dag_matches_reference_build() {
+        let mut s = Schedule::new("diamond");
+        let a = s.push(TransferGroup::single(0, 0, 1, 1, vec![], DataOp::None));
+        let b = s.push(TransferGroup::single(0, 1, 2, 1, vec![a], DataOp::None));
+        let c = s.push(TransferGroup::single(0, 1, 3, 1, vec![a], DataOp::None));
+        let d = s.push(TransferGroup::single(0, 2, 3, 1, vec![b, c], DataOp::None));
+        let dag = s.compiled_dag();
+        // Reference: the executor's historical per-run build.
+        let indeg: Vec<usize> = s.groups.iter().map(|g| g.deps.len()).collect();
+        let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); s.len()];
+        for (i, g) in s.groups.iter().enumerate() {
+            for &dep in &g.deps {
+                rdeps[dep].push(i);
+            }
+        }
+        assert_eq!(dag.indeg0, indeg);
+        assert_eq!(dag.subs0, vec![1; 4]);
+        for g in 0..s.len() {
+            assert_eq!(dag.rdeps(g), &rdeps[g][..], "group {g}");
+        }
+        assert_eq!(dag.rdeps(a), &[b, c]);
+        assert_eq!(dag.rdeps(d), &[] as &[usize]);
+    }
+
+    #[test]
+    fn push_invalidates_compiled_dag() {
+        let mut s = Schedule::new("grow");
+        let a = s.push(TransferGroup::single(0, 0, 1, 1, vec![], DataOp::None));
+        assert_eq!(s.compiled_dag().indeg0.len(), 1);
+        let _b = s.push(TransferGroup::single(0, 1, 2, 1, vec![a], DataOp::None));
+        assert_eq!(s.compiled_dag().indeg0.len(), 2);
+        assert_eq!(s.compiled_dag().rdeps(a), &[1]);
+        // Equality stays structural regardless of dag-cache state.
+        let mut t = Schedule::new("grow");
+        t.push(TransferGroup::single(0, 0, 1, 1, vec![], DataOp::None));
+        t.push(TransferGroup::single(0, 1, 2, 1, vec![a], DataOp::None));
+        assert_eq!(s, t);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!   serve-sim         --model 405b --qps 0.3 --strategy r2|restart|reroute|dejavu
 //!   scenario          [--file scenarios/x.json | --dir scenarios]
 //!                     [--golden-dir rust/tests/fixtures] [--regen] [--json]
+//!                     [--threads N]   (default: available parallelism)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -156,11 +157,15 @@ fn main() -> anyhow::Result<()> {
         }
         "scenario" => {
             // Run the committed fault-scenario corpus (or one file): compile
-            // the declarative description, drive the multi-iteration
-            // workload, check the built-in invariants, and optionally
-            // byte-compare each report against its golden trace.
-            use r2ccl::scenario::{compare_or_seed, FaultScenario, GoldenOutcome, ScenarioRunner};
+            // the declarative descriptions, drive the multi-iteration
+            // workloads — fanned out over `--threads` worker threads
+            // (default: available parallelism; reports are bit-identical at
+            // any thread count) — check the built-in invariants, and
+            // optionally byte-compare each report against its golden trace.
+            use r2ccl::scenario::{compare_or_seed, run_corpus, FaultScenario, GoldenOutcome};
             let preset = Preset::testbed();
+            let threads =
+                args.get_usize("threads", r2ccl::util::par::available_threads());
             let paths: Vec<std::path::PathBuf> = if let Some(f) = args.get("file") {
                 vec![f.into()]
             } else {
@@ -174,13 +179,19 @@ fn main() -> anyhow::Result<()> {
                 ps
             };
             let golden_dir = args.get("golden-dir").map(std::path::PathBuf::from);
-            let mut failed = false;
-            for path in paths {
-                let text = std::fs::read_to_string(&path)?;
+            // Parse + validate everything up front (clean per-file errors),
+            // then run the whole corpus in parallel.
+            let mut scenarios: Vec<FaultScenario> = Vec::with_capacity(paths.len());
+            for path in &paths {
+                let text = std::fs::read_to_string(path)?;
                 let sc = FaultScenario::from_json_str(&text)
                     .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
                 sc.validate(&preset.topo).map_err(|e| anyhow::anyhow!(e))?;
-                let report = ScenarioRunner::new(&sc, &preset).run();
+                scenarios.push(sc);
+            }
+            let reports = run_corpus(&scenarios, &preset, threads);
+            let mut failed = false;
+            for (sc, report) in scenarios.iter().zip(&reports) {
                 println!(
                     "{:<24} iters {:>2}/{:<2}  overhead {:>7.2}%  migrations {:>2}  wasted {:>8}B  {}{}",
                     sc.name,

@@ -118,30 +118,91 @@ pub struct Engine {
     /// proportional to *concurrent* flows rather than all flows ever
     /// created (§Perf: this was the executor's quadratic hot spot).
     live: Vec<FlowId>,
-    /// Scratch: flows per resource, rebuilt on each rate computation.
+    /// Per-resource incidence lists: non-terminal flows whose path crosses
+    /// the resource. Maintained on `add_flow` and pruned when a flow turns
+    /// terminal, so `flows_through` reads one short list instead of
+    /// scanning every live flow's path (§Perf).
+    res_flows: Vec<Vec<FlowId>>,
     dirty: bool,
     /// Number of rate recomputations (perf counter).
     pub recomputes: u64,
+    /// Flows ever created on this engine since the last reset
+    /// (allocation-proxy perf counter recorded by the benches).
+    pub flows_created: u64,
+    // ---- Reusable scratch for the rate recomputation (§Perf: hoisted so
+    // ---- steady-state recomputes are allocation-free). Invariants between
+    // ---- recomputes: `scratch_count` all zeros, `scratch_bottleneck` all
+    // ---- false; `scratch_cap` carries no invariant (written before read).
+    scratch_cap: Vec<f64>,
+    scratch_count: Vec<usize>,
+    scratch_bottleneck: Vec<bool>,
+    scratch_touched: Vec<ResourceId>,
+    scratch_active: Vec<FlowId>,
+    scratch_unfixed: Vec<FlowId>,
+    scratch_still: Vec<FlowId>,
+    scratch_prev: Vec<(FlowId, f64, FlowState)>,
 }
 
 impl Engine {
     /// Create an engine over `capacities[(resource)] = bytes/s`.
     pub fn new(capacities: &[f64]) -> Engine {
-        Engine {
+        let mut e = Engine {
             now: 0.0,
-            resources: capacities
-                .iter()
-                .map(|&c| Resource { capacity: c, factor: 1.0, up: true })
-                .collect(),
+            resources: Vec::new(),
             flows: Vec::new(),
             heap: BinaryHeap::new(),
             seq: 0,
             next_timer: 0,
             last_settle: 0.0,
             live: Vec::new(),
+            res_flows: Vec::new(),
             dirty: false,
             recomputes: 0,
+            flows_created: 0,
+            scratch_cap: Vec::new(),
+            scratch_count: Vec::new(),
+            scratch_bottleneck: Vec::new(),
+            scratch_touched: Vec::new(),
+            scratch_active: Vec::new(),
+            scratch_unfixed: Vec::new(),
+            scratch_still: Vec::new(),
+            scratch_prev: Vec::new(),
+        };
+        e.reset(capacities.iter().copied());
+        e
+    }
+
+    /// Reset to a pristine engine over `capacities`, retaining every
+    /// allocated buffer (heap, flow table, incidence lists, scratch). This
+    /// is the arena-reuse path behind the pooled
+    /// [`crate::netsim::engine_for`]: per-collective runs recycle one
+    /// engine instead of reallocating all of its vectors.
+    pub fn reset<I: ExactSizeIterator<Item = f64>>(&mut self, capacities: I) {
+        self.now = 0.0;
+        self.last_settle = 0.0;
+        self.seq = 0;
+        self.next_timer = 0;
+        self.dirty = false;
+        self.recomputes = 0;
+        self.flows_created = 0;
+        self.flows.clear();
+        self.live.clear();
+        self.heap.clear();
+        let n = capacities.len();
+        self.resources.clear();
+        self.resources
+            .extend(capacities.map(|c| Resource { capacity: c, factor: 1.0, up: true }));
+        for l in &mut self.res_flows {
+            l.clear();
         }
+        self.res_flows.resize_with(n, Vec::new);
+        self.scratch_cap.clear();
+        self.scratch_cap.resize(n, 0.0);
+        self.scratch_count.clear();
+        self.scratch_count.resize(n, 0);
+        self.scratch_bottleneck.clear();
+        self.scratch_bottleneck.resize(n, false);
+        self.scratch_touched.clear();
     }
 
     pub fn now(&self) -> SimTime {
@@ -159,6 +220,9 @@ impl Engine {
         assert!(size >= 0.0 && latency >= 0.0);
         let id = self.flows.len();
         self.live.push(id);
+        for &r in &path {
+            self.res_flows[r].push(id);
+        }
         self.flows.push(Flow {
             path,
             size,
@@ -168,6 +232,7 @@ impl Engine {
             epoch: 0,
             tag,
         });
+        self.flows_created += 1;
         self.push(self.now + latency, Pending::Activate(id, 0));
         id
     }
@@ -203,29 +268,56 @@ impl Engine {
         f.epoch += 1;
         f.rate = 0.0;
         self.dirty = true;
+        self.detach(id);
         self.flows[id].size - self.flows[id].remaining
     }
 
-    /// Flows (active or latent) whose path crosses `rid`.
+    /// Flows (active or latent) whose path crosses `rid`, ascending.
+    /// Reads the resource's incidence list — O(flows *on this resource*)
+    /// instead of a scan over every live flow's path (§Perf).
     pub fn flows_through(&self, rid: ResourceId) -> Vec<FlowId> {
-        self.live
+        let mut out: Vec<FlowId> = self
+            .res_flows[rid]
             .iter()
             .copied()
             .filter(|&i| {
-                let f = &self.flows[i];
-                matches!(f.state, FlowState::Latent | FlowState::Active | FlowState::Stalled)
-                    && f.path.contains(&rid)
+                matches!(
+                    self.flows[i].state,
+                    FlowState::Latent | FlowState::Active | FlowState::Stalled
+                )
             })
-            .collect()
+            .collect();
+        // Incidence lists are insertion-ordered with one entry per path
+        // element; sort+dedup restores the historical ascending-id order.
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Remove a terminal flow from its resources' incidence lists.
+    fn detach(&mut self, id: FlowId) {
+        let path = std::mem::take(&mut self.flows[id].path);
+        for &r in &path {
+            let list = &mut self.res_flows[r];
+            if let Some(pos) = list.iter().position(|&f| f == id) {
+                list.swap_remove(pos);
+            }
+        }
+        self.flows[id].path = path;
     }
 
     // ------------------------------------------------------------------
     // Timers
     // ------------------------------------------------------------------
 
-    /// Fire a timer at absolute time `at` with a caller tag.
+    /// Fire a timer at absolute time `at` with a caller tag. An `at` in
+    /// the past clamps to `now` (fires next): scenario scripts fold
+    /// iteration-relative times across iterations, and float error can
+    /// land an event an ulp before the current time — that is a request
+    /// for "immediately", not a caller bug. NaN also clamps (`at >= now`
+    /// is false for NaN), keeping the total-ordered heap sound.
     pub fn set_timer(&mut self, at: SimTime, tag: u64) -> TimerId {
-        assert!(at >= self.now, "timer in the past: {at} < {}", self.now);
+        let at = if at >= self.now { at } else { self.now };
         let id = self.next_timer;
         self.next_timer += 1;
         self.push(at, Pending::Timer(id, tag));
@@ -277,13 +369,13 @@ impl Engine {
                         continue;
                     }
                     self.advance_to(t);
-                    let f = &mut self.flows[id];
-                    if f.remaining <= 0.0 {
+                    if self.flows[id].remaining <= 0.0 {
                         // Zero-byte flow: completes at activation.
-                        f.state = FlowState::Done;
+                        self.flows[id].state = FlowState::Done;
+                        self.detach(id);
                         return Some((self.now, Event::FlowCompleted(id)));
                     }
-                    f.state = FlowState::Active;
+                    self.flows[id].state = FlowState::Active;
                     self.dirty = true;
                     // Completion will be scheduled by the recompute.
                 }
@@ -304,6 +396,7 @@ impl Engine {
                     f.state = FlowState::Done;
                     f.rate = 0.0;
                     self.dirty = true;
+                    self.detach(id);
                     return Some((self.now, Event::FlowCompleted(id)));
                 }
                 Pending::Timer(id, tag) => {
@@ -365,13 +458,11 @@ impl Engine {
         // Snapshot rates: a flow whose rate is unchanged keeps a valid
         // completion prediction (remaining shrinks linearly at that rate),
         // so we avoid the epoch bump + heap push for it (§Perf).
-        let prev: Vec<(FlowId, f64, FlowState)> = self
-            .live
-            .iter()
-            .map(|&id| (id, self.flows[id].rate, self.flows[id].state))
-            .collect();
+        let mut prev = std::mem::take(&mut self.scratch_prev);
+        prev.clear();
+        prev.extend(self.live.iter().map(|&id| (id, self.flows[id].rate, self.flows[id].state)));
         self.recompute_rates();
-        for (id, old_rate, old_state) in prev {
+        for &(id, old_rate, old_state) in &prev {
             let f = &mut self.flows[id];
             if f.state != FlowState::Active {
                 continue;
@@ -390,6 +481,7 @@ impl Engine {
             }
             // rate==0 → stalled: no completion until state changes.
         }
+        self.scratch_prev = prev;
         // Newly-activated flows appear in `live` after the snapshot only if
         // added mid-recompute — not possible here; activations always mark
         // dirty and pass through the snapshot on the next call.
@@ -397,13 +489,19 @@ impl Engine {
 
     /// Progressive-filling max-min fair allocation over the current active
     /// flow set. Flows whose path contains a down resource are Stalled.
+    ///
+    /// Allocation-free: the per-resource capacity/count/bottleneck tables
+    /// and the flow worklists live in reusable `scratch_*` buffers, and the
+    /// filling rounds iterate only the resources *touched* by active flows
+    /// instead of the whole resource table (§Perf).
     fn recompute_rates(&mut self) {
         self.recomputes += 1;
         // Drop terminal flows from the live index, then classify.
         self.live.retain(|&id| {
             !matches!(self.flows[id].state, FlowState::Done | FlowState::Aborted)
         });
-        let mut active: Vec<FlowId> = Vec::new();
+        let mut active = std::mem::take(&mut self.scratch_active);
+        active.clear();
         for i in 0..self.live.len() {
             let id = self.live[i];
             let state = self.flows[id].state;
@@ -424,17 +522,27 @@ impl Engine {
             }
         }
         if active.is_empty() {
+            self.scratch_active = active;
             return;
         }
-        // remaining capacity per resource; count of unfixed flows per resource
-        let mut cap: Vec<f64> = self.resources.iter().map(|r| r.effective()).collect();
-        let mut count: Vec<usize> = vec![0; self.resources.len()];
+        // Remaining capacity / unfixed-flow count per *touched* resource.
+        // `scratch_count` is all-zeros between calls, so a resource is
+        // first-touched exactly when its count is still zero.
+        let mut touched = std::mem::take(&mut self.scratch_touched);
+        touched.clear();
         for &id in &active {
             for &r in &self.flows[id].path {
-                count[r] += 1;
+                if self.scratch_count[r] == 0 {
+                    touched.push(r);
+                    self.scratch_cap[r] = self.resources[r].effective();
+                }
+                self.scratch_count[r] += 1;
             }
         }
-        let mut unfixed: Vec<FlowId> = active.clone();
+        let mut unfixed = std::mem::take(&mut self.scratch_unfixed);
+        unfixed.clear();
+        unfixed.extend_from_slice(&active);
+        let mut still = std::mem::take(&mut self.scratch_still);
         // Progressive filling: repeatedly saturate the tightest resource(s).
         // All resources within ε of the minimum share are saturated together
         // — in homogeneous states (the common case: a healthy ring) this
@@ -442,9 +550,10 @@ impl Engine {
         // round (§Perf).
         while !unfixed.is_empty() {
             let mut min_share = f64::INFINITY;
-            for (r, &c) in cap.iter().enumerate() {
-                if count[r] > 0 {
-                    let share = c / count[r] as f64;
+            for &r in &touched {
+                let k = self.scratch_count[r];
+                if k > 0 {
+                    let share = self.scratch_cap[r] / k as f64;
                     if share < min_share {
                         min_share = share;
                     }
@@ -460,26 +569,30 @@ impl Engine {
             let limit = min_share * (1.0 + 1e-12);
             // Determine the bottleneck set *before* fixing (fixing mutates
             // cap/count and would misclassify later flows in this round).
-            let bottleneck: Vec<bool> = cap
-                .iter()
-                .zip(count.iter())
-                .map(|(&c, &k)| k > 0 && c / k as f64 <= limit)
-                .collect();
+            for &r in &touched {
+                let k = self.scratch_count[r];
+                self.scratch_bottleneck[r] = k > 0 && self.scratch_cap[r] / k as f64 <= limit;
+            }
             // Fix every unfixed flow crossing a min-share resource.
-            let mut still = Vec::with_capacity(unfixed.len());
+            still.clear();
             let mut fixed_any = false;
             for &id in &unfixed {
-                let bottlenecked = self.flows[id].path.iter().any(|&r| bottleneck[r]);
+                let bottlenecked =
+                    self.flows[id].path.iter().any(|&r| self.scratch_bottleneck[r]);
                 if bottlenecked {
                     self.flows[id].rate = min_share;
                     for &r in &self.flows[id].path {
-                        cap[r] = (cap[r] - min_share).max(0.0);
-                        count[r] -= 1;
+                        self.scratch_cap[r] = (self.scratch_cap[r] - min_share).max(0.0);
+                        self.scratch_count[r] -= 1;
                     }
                     fixed_any = true;
                 } else {
                     still.push(id);
                 }
+            }
+            // Reset the bottleneck flags for the next round / next call.
+            for &r in &touched {
+                self.scratch_bottleneck[r] = false;
             }
             if !fixed_any {
                 // Numeric corner: force-fix everything at min_share.
@@ -488,8 +601,17 @@ impl Engine {
                 }
                 break;
             }
-            unfixed = still;
+            std::mem::swap(&mut unfixed, &mut still);
         }
+        // Restore the all-zeros invariant for the next call (early breaks
+        // can leave counts behind).
+        for &r in &touched {
+            self.scratch_count[r] = 0;
+        }
+        self.scratch_active = active;
+        self.scratch_unfixed = unfixed;
+        self.scratch_still = still;
+        self.scratch_touched = touched;
     }
 }
 
@@ -653,6 +775,63 @@ mod tests {
         for (t, _) in evs {
             assert!((t - 10.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn timer_in_past_clamps_to_now() {
+        // Scenario scripts can fold an event a float-ulp into the past;
+        // the timer must clamp to `now` and fire next, not assert.
+        let mut e = Engine::new(&[100.0]);
+        e.set_timer(2.0, 1);
+        let (t, _) = e.next_event().unwrap();
+        assert!((t - 2.0).abs() < 1e-12);
+        e.set_timer(2.0 - 1e-12, 2); // an ulp in the past
+        e.set_timer(f64::NAN, 3); // malformed input also clamps
+        let (t2, ev2) = e.next_event().unwrap();
+        assert_eq!(ev2, Event::Timer(1, 2));
+        assert!((t2 - 2.0).abs() < 1e-12, "clamped to now, got {t2}");
+        let (t3, ev3) = e.next_event().unwrap();
+        assert_eq!(ev3, Event::Timer(2, 3));
+        assert!((t3 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flows_through_excludes_terminal_flows() {
+        let mut e = Engine::new(&[100.0, 100.0]);
+        let a = e.add_flow(vec![0], 100.0, 0.0, 0);
+        let b = e.add_flow(vec![0, 1], 1000.0, 0.0, 1);
+        let c = e.add_flow(vec![0], 1000.0, 0.0, 2);
+        assert_eq!(e.flows_through(0), vec![a, b, c]);
+        let _ = e.next_event().unwrap(); // a completes first (smallest)
+        assert!(e.flow_is_done(a));
+        assert_eq!(e.flows_through(0), vec![b, c]);
+        e.abort_flow(b);
+        assert_eq!(e.flows_through(0), vec![c]);
+        assert_eq!(e.flows_through(1), Vec::<FlowId>::new());
+    }
+
+    #[test]
+    fn reset_reuses_arena_with_identical_results() {
+        let run = |e: &mut Engine| {
+            e.add_flow(vec![0], 1000.0, 0.5, 0);
+            e.add_flow(vec![0, 1], 500.0, 0.0, 1);
+            let mut out = Vec::new();
+            while let Some(ev) = e.next_event() {
+                out.push(ev);
+            }
+            (out, e.recomputes, e.flows_created)
+        };
+        let caps = [100.0, 30.0];
+        let mut fresh = Engine::new(&caps);
+        let baseline = run(&mut fresh);
+        // Dirty the engine thoroughly, then reset and re-run.
+        let mut pooled = Engine::new(&caps);
+        pooled.set_resource_factor(0, 0.5);
+        pooled.add_flow(vec![1], 100.0, 0.0, 9);
+        let _ = pooled.next_event();
+        pooled.set_timer(100.0, 7);
+        pooled.reset(caps.iter().copied());
+        assert_eq!(run(&mut pooled), baseline, "reset engine must replay bit-identically");
     }
 
     #[test]

@@ -15,10 +15,57 @@ pub use fault::{
     MIN_DEGRADE_FACTOR,
 };
 
+use std::cell::{Cell, RefCell};
+
 use crate::topology::Topology;
 
-/// Build an engine with the capacities of a topology.
+thread_local! {
+    /// Per-thread engine arena pool (see [`engine_for`] / [`recycle`]).
+    /// Thread-local so the parallel scenario/Monte-Carlo sweeps need no
+    /// locking and stay deterministic.
+    static ENGINE_POOL: RefCell<Vec<Engine>> = const { RefCell::new(Vec::new()) };
+    static POOL_HITS: Cell<u64> = const { Cell::new(0) };
+    static POOL_MISSES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Keep at most this many idle engines per thread.
+const ENGINE_POOL_CAP: usize = 8;
+
+/// Build an engine with the capacities of a topology, reusing a pooled
+/// arena when this thread has one (an [`Engine::reset`] makes any pooled
+/// engine equivalent to a freshly constructed one, so per-collective runs
+/// stop reallocating the heap/flow-table/scratch vectors). Return engines
+/// with [`recycle`] to populate the pool.
 pub fn engine_for(topo: &Topology) -> Engine {
-    let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
-    Engine::new(&caps)
+    let pooled = ENGINE_POOL.with(|pool| pool.borrow_mut().pop());
+    match pooled {
+        Some(mut e) => {
+            POOL_HITS.with(|c| c.set(c.get() + 1));
+            e.reset(topo.resources().iter().map(|r| r.capacity));
+            e
+        }
+        None => {
+            POOL_MISSES.with(|c| c.set(c.get() + 1));
+            let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
+            Engine::new(&caps)
+        }
+    }
+}
+
+/// Return an engine's arena to this thread's pool for reuse by a later
+/// [`engine_for`]. Dropping an engine instead is always safe — recycling
+/// is purely an allocation optimization.
+pub fn recycle(engine: Engine) {
+    ENGINE_POOL.with(|pool| {
+        let mut pool = pool.borrow_mut();
+        if pool.len() < ENGINE_POOL_CAP {
+            pool.push(engine);
+        }
+    });
+}
+
+/// This thread's engine-pool counters: `(hits, misses)`. A hit is an
+/// `engine_for` served from a recycled arena (allocation avoided).
+pub fn engine_pool_stats() -> (u64, u64) {
+    (POOL_HITS.with(|c| c.get()), POOL_MISSES.with(|c| c.get()))
 }

@@ -18,7 +18,7 @@
 pub mod runner;
 pub mod spec;
 
-pub use runner::{IterationRecord, ScenarioReport, ScenarioRunner};
+pub use runner::{run_corpus, IterationRecord, ScenarioReport, ScenarioRunner};
 pub use spec::{sample_multi_fault, FaultPattern, FaultScenario, ScenarioEvent, Workload};
 
 use std::path::{Path, PathBuf};

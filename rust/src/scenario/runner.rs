@@ -388,6 +388,24 @@ impl<'a> ScenarioRunner<'a> {
     }
 }
 
+/// Run a scenario corpus, fanning the runs out over up to `threads` scoped
+/// worker threads (`1` = serial on the calling thread). Every scenario run
+/// builds its own worlds and engines, so runs are fully independent;
+/// reports come back in input order and are bit-identical to a serial run
+/// at any thread count — golden traces cannot be perturbed by parallelism
+/// (property-tested in `rust/tests/prop_hotpath.rs`).
+///
+/// Scenarios must already be validated against the preset's topology
+/// ([`FaultScenario::validate`]): like [`ScenarioRunner::run`], a malformed
+/// scenario is a caller error and panics.
+pub fn run_corpus(
+    scenarios: &[FaultScenario],
+    preset: &Preset,
+    threads: usize,
+) -> Vec<ScenarioReport> {
+    crate::util::par::parallel_map(scenarios, threads, |sc| ScenarioRunner::new(sc, preset).run())
+}
+
 /// Ground-truth usability update for the no-crash-while-a-path-exists
 /// invariant: degradations keep a NIC usable; only Fail/Cut remove it.
 fn note_ground_truth(usable: &mut [bool], nic: NicId, action: FaultAction) {

@@ -10,7 +10,8 @@ pub use inference::{
     InferModel, ReqMetrics, ServeCfg, ServeFailure, ServeResult, ServeStrategy,
 };
 pub use montecarlo::{
-    multi_failure_sweep, sample_pattern, scenario_for_k, MonteCarloPoint,
+    multi_failure_sweep, multi_failure_sweep_threads, points_to_json, sample_pattern,
+    scenario_for_k, MonteCarloPoint,
 };
 pub use training::{
     analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, scenario_main_collective,

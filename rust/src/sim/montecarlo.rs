@@ -1,8 +1,13 @@
 //! Monte Carlo multi-failure experiments (Fig 10): k failures placed
 //! uniformly at random over the cluster's NICs, 50 patterns per k,
 //! reporting mean iteration-time overhead.
-
-use std::thread;
+//!
+//! Parallelism model (§Perf): failure patterns are *drawn serially* — the
+//! per-k RNG stream is part of the experiment definition — and the
+//! expensive per-trial iteration simulations fan out over
+//! [`crate::util::par::parallel_map`], which merges results in draw order.
+//! A sweep is therefore bit-identical at any thread count, including 1
+//! (property-tested in `rust/tests/prop_hotpath.rs`).
 
 use crate::config::GpuComputeConfig;
 use crate::scenario::{sample_multi_fault, FaultPattern, FaultScenario, Workload};
@@ -10,7 +15,8 @@ use crate::schedule::PlanInput;
 use crate::sim::training::{
     overhead_vs, simai_iteration, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
 };
-use crate::util::Rng;
+use crate::util::par::{available_threads, parallel_map};
+use crate::util::{Json, Rng};
 
 /// One sampled failure pattern: lost-NIC count per server. The NIC draw is
 /// the scenario layer's [`sample_multi_fault`], so a sweep trial and the
@@ -58,10 +64,26 @@ pub struct MonteCarloPoint {
     pub patterns: usize,
 }
 
-/// Run the Fig 10 experiment: for each k in `ks`, `trials` random patterns
-/// over `n_servers`×8 NICs; training overhead of the R²CCL planner
-/// (balance/R²-AllReduce/recursive as appropriate) vs no failure.
-/// Parallelised across k values with std::thread.
+/// Deterministic JSON form of a sweep result — the byte-comparison target
+/// of the parallel-equals-serial property tests and the Fig 10 bench
+/// records.
+pub fn points_to_json(points: &[MonteCarloPoint]) -> Json {
+    let mut arr = Json::arr();
+    for p in points {
+        arr.push(
+            Json::obj()
+                .set("k", p.k)
+                .set("mean_overhead", p.mean_overhead)
+                .set("max_overhead", p.max_overhead)
+                .set("min_overhead", p.min_overhead)
+                .set("patterns", p.patterns),
+        );
+    }
+    arr
+}
+
+/// Run the Fig 10 experiment with the default worker count; see
+/// [`multi_failure_sweep_threads`].
 pub fn multi_failure_sweep(
     model: &ModelConfig,
     par: &ParallelConfig,
@@ -71,51 +93,78 @@ pub fn multi_failure_sweep(
     trials: usize,
     seed: u64,
 ) -> Vec<MonteCarloPoint> {
+    multi_failure_sweep_threads(model, par, gpu, n_servers, ks, trials, seed, available_threads())
+}
+
+/// Run the Fig 10 experiment: for each k in `ks`, `trials` random patterns
+/// over `n_servers`×8 NICs; training overhead of the R²CCL planner
+/// (balance/R²-AllReduce/recursive as appropriate) vs no failure.
+///
+/// Every *trial* (not just every k) fans out over `threads` scoped worker
+/// threads. Patterns are drawn serially from the historical per-k RNG
+/// streams and overheads are merged in draw order, so the result — means,
+/// extrema, pattern counts — is bit-identical to a serial run (and to the
+/// earlier per-k-thread implementation) at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn multi_failure_sweep_threads(
+    model: &ModelConfig,
+    par: &ParallelConfig,
+    gpu: &GpuComputeConfig,
+    n_servers: usize,
+    ks: &[usize],
+    trials: usize,
+    seed: u64,
+    threads: usize,
+) -> Vec<MonteCarloPoint> {
     let nics = 8usize;
     let server_bw = 25.0e9 * nics as f64; // A100 cluster: 200G NICs
-    let handles: Vec<_> = ks
-        .iter()
-        .map(|&k| {
-            let model = model.clone();
-            let par = par.clone();
-            let gpu = gpu.clone();
-            thread::spawn(move || {
-                let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9e37_79b9));
-                let healthy_input = PlanInput::uniform(n_servers, nics, server_bw, 5e-6);
-                let base: TrainResult =
-                    simai_iteration(&model, &par, &gpu, &healthy_input, TrainMethod::NoFailure);
-                let mut overheads = Vec::with_capacity(trials);
-                for _ in 0..trials {
-                    let pattern = sample_pattern(&mut rng, n_servers, nics, k);
-                    let rem = rem_of_pattern(&pattern, nics);
-                    // A server with all NICs lost has no alternate path —
-                    // out of R²CCL scope; resample (the paper injects NIC
-                    // failures, not full partitions).
-                    if rem.iter().any(|&r| r <= 0.0) {
-                        continue;
-                    }
-                    let input = PlanInput {
-                        n: n_servers,
-                        g: nics,
-                        server_bw,
-                        rem,
-                        alpha: 5e-6,
-                    };
-                    let r = simai_iteration(&model, &par, &gpu, &input, TrainMethod::R2AllReduce);
-                    overheads.push(overhead_vs(&r, &base));
-                }
-                let n = overheads.len().max(1) as f64;
-                MonteCarloPoint {
-                    k,
-                    mean_overhead: overheads.iter().sum::<f64>() / n,
-                    max_overhead: overheads.iter().cloned().fold(0.0, f64::max),
-                    min_overhead: overheads.iter().cloned().fold(f64::INFINITY, f64::min),
-                    patterns: overheads.len(),
-                }
-            })
+    let healthy_input = PlanInput::uniform(n_servers, nics, server_bw, 5e-6);
+    let base: TrainResult =
+        simai_iteration(model, par, gpu, &healthy_input, TrainMethod::NoFailure);
+    // Draw phase (serial, cheap): ks.len()×trials planner inputs in the
+    // exact stream order of the historical sweep. A server with all NICs
+    // lost has no alternate path — out of R²CCL scope; the draw is kept
+    // (it consumed RNG state) but not simulated (the paper injects NIC
+    // failures, not full partitions).
+    let mut inputs: Vec<Option<PlanInput>> = Vec::with_capacity(ks.len() * trials);
+    for &k in ks {
+        let mut rng = Rng::new(seed ^ (k as u64).wrapping_mul(0x9e37_79b9));
+        for _ in 0..trials {
+            let pattern = sample_pattern(&mut rng, n_servers, nics, k);
+            let rem = rem_of_pattern(&pattern, nics);
+            inputs.push((!rem.iter().any(|&r| r <= 0.0)).then(|| PlanInput {
+                n: n_servers,
+                g: nics,
+                server_bw,
+                rem,
+                alpha: 5e-6,
+            }));
+        }
+    }
+    // Simulate phase (parallel, expensive): one iteration model per trial.
+    let overheads: Vec<Option<f64>> = parallel_map(&inputs, threads, |input| {
+        input.as_ref().map(|input| {
+            let r = simai_iteration(model, par, gpu, input, TrainMethod::R2AllReduce);
+            overhead_vs(&r, &base)
         })
-        .collect();
-    handles.into_iter().map(|h| h.join().expect("worker")).collect()
+    });
+    // Merge phase (serial, draw order): per-k folds identical to the
+    // historical in-loop accumulation.
+    ks.iter()
+        .enumerate()
+        .map(|(ki, &k)| {
+            let chunk = &overheads[ki * trials..(ki + 1) * trials];
+            let vals: Vec<f64> = chunk.iter().flatten().copied().collect();
+            let n = vals.len().max(1) as f64;
+            MonteCarloPoint {
+                k,
+                mean_overhead: vals.iter().sum::<f64>() / n,
+                max_overhead: vals.iter().copied().fold(0.0, f64::max),
+                min_overhead: vals.iter().copied().fold(f64::INFINITY, f64::min),
+                patterns: vals.len(),
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -150,6 +199,24 @@ mod tests {
             }
             let mut rng = Rng::new(seed);
             assert_eq!(per, sample_pattern(&mut rng, topo.n_servers, topo.nics_per_server, k));
+        }
+    }
+
+    #[test]
+    fn sweep_is_thread_count_invariant() {
+        // The parallel trial fan-out must be bit-identical to the serial
+        // reference (threads=1), including the resample-skip bookkeeping.
+        let model = ModelConfig::gpt_7b();
+        let par = ParallelConfig { dp: 64, tp: 2, pp: 1, global_batch: 128, microbatch: 1 };
+        let gpu = GpuComputeConfig::a100();
+        let serial = multi_failure_sweep_threads(&model, &par, &gpu, 16, &[1, 4], 6, 9, 1);
+        for threads in [2usize, 5] {
+            let p = multi_failure_sweep_threads(&model, &par, &gpu, 16, &[1, 4], 6, 9, threads);
+            assert_eq!(
+                points_to_json(&p).pretty(),
+                points_to_json(&serial).pretty(),
+                "{threads} threads"
+            );
         }
     }
 

@@ -1,0 +1,75 @@
+//! Deterministic fork-join helpers over `std::thread::scope` (rayon is
+//! unavailable offline).
+//!
+//! Work is split into contiguous index chunks, each chunk runs on its own
+//! scoped thread, and every result lands in the output slot of its input —
+//! so a parallel map merges in input order and is **bit-identical** to its
+//! serial equivalent regardless of thread count. That property is what
+//! lets the Monte-Carlo sweep and the scenario-corpus runner fan out
+//! across cores while their reports (and golden traces) stay byte-stable;
+//! `rust/tests/prop_hotpath.rs` asserts it.
+
+/// Default worker count for `--threads`-style knobs: the machine's
+/// available parallelism, 1 when it cannot be queried.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads, returning the
+/// results in input order. `threads <= 1` (or a single item) degenerates to
+/// a plain serial map on the calling thread — the reference the parallel
+/// path is bit-identical to. Panics in `f` propagate after all workers
+/// join, as with any scoped thread.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len());
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = items.len().div_ceil(threads).max(1);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for (in_chunk, out_chunk) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                for (item, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_in_order() {
+        let items: Vec<u64> = (0..103).collect();
+        let serial = parallel_map(&items, 1, |&x| x * x + 1);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(parallel_map(&items, threads, |&x| x * x + 1), serial, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |&x| x + 1), vec![8]);
+        // More threads than items still covers every slot exactly once.
+        assert_eq!(parallel_map(&[1u32, 2, 3], 100, |&x| x), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn available_threads_is_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

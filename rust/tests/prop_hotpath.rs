@@ -1,0 +1,322 @@
+//! Hot-path conformance properties for the indexed-executor / parallel-
+//! sweep rewrite (§Perf):
+//!
+//! * the precompiled [`CompiledDag`] must match a freshly built
+//!   `indeg`/`rdeps` graph for every collective kind and strategy;
+//! * the indexed [`Executor`] (slab flow map, dense migration table,
+//!   CSR replay, pooled engine, per-row routing COW) must reproduce the
+//!   preserved pre-optimization [`BaselineExecutor`] report byte-for-byte
+//!   across fault scripts — the proof the optimization changed no
+//!   simulated semantics (golden traces therefore cannot move);
+//! * the parallel Monte-Carlo sweep and scenario-corpus runner must be
+//!   bit-identical to their serial (threads = 1) counterparts at any
+//!   thread count, for random seeds.
+
+use r2ccl::ccl::{CommWorld, StrategyChoice};
+use r2ccl::collectives::exec::{
+    ChannelRouting, ExecOptions, ExecReport, Executor, FailurePolicy, FaultAction, FaultEvent,
+};
+use r2ccl::collectives::ring::{nccl_rings, ring_allreduce};
+use r2ccl::collectives::{BaselineExecutor, CollKind, PhantomPlane, Schedule};
+use r2ccl::config::{GpuComputeConfig, Preset, TimingConfig};
+use r2ccl::scenario::{run_corpus, FaultPattern, FaultScenario, Workload};
+use r2ccl::schedule::Strategy;
+use r2ccl::sim::{multi_failure_sweep_threads, points_to_json, ModelConfig, ParallelConfig};
+use r2ccl::topology::{Topology, TopologyConfig};
+use r2ccl::util::Rng;
+
+const ALL_KINDS: [CollKind; 7] = [
+    CollKind::AllReduce,
+    CollKind::ReduceScatter,
+    CollKind::AllGather,
+    CollKind::Broadcast,
+    CollKind::Reduce,
+    CollKind::SendRecv,
+    CollKind::AllToAll,
+];
+
+/// The executor's historical per-run dependency build, kept here as the
+/// reference the precompiled CSR form is checked against.
+fn fresh_indeg_rdeps(sched: &Schedule) -> (Vec<usize>, Vec<Vec<usize>>, Vec<usize>) {
+    let n = sched.groups.len();
+    let indeg: Vec<usize> = sched.groups.iter().map(|g| g.deps.len()).collect();
+    let mut rdeps: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, g) in sched.groups.iter().enumerate() {
+        for &d in &g.deps {
+            rdeps[d].push(i);
+        }
+    }
+    let subs: Vec<usize> = sched.groups.iter().map(|g| g.subs.len()).collect();
+    (indeg, rdeps, subs)
+}
+
+fn assert_dag_matches(sched: &Schedule, ctx: &str) {
+    let dag = sched.compiled_dag();
+    let (indeg, rdeps, subs) = fresh_indeg_rdeps(sched);
+    assert_eq!(dag.indeg0, indeg, "{ctx}: indeg0");
+    assert_eq!(dag.subs0, subs, "{ctx}: subs0");
+    for g in 0..sched.len() {
+        assert_eq!(dag.rdeps(g), &rdeps[g][..], "{ctx}: rdeps of group {g}");
+    }
+}
+
+#[test]
+fn compiled_dag_matches_fresh_build_on_every_collkind() {
+    let mut world = CommWorld::new(&Preset::testbed(), 8);
+    world.note_failure(0, FaultAction::FailNic);
+    let g = world.world_group();
+    for kind in ALL_KINDS {
+        let (sched, _) = g.compile(kind, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(!sched.is_empty(), "{kind:?}");
+        assert_dag_matches(&sched, &format!("{kind:?}/auto"));
+    }
+    // The decomposition strategies produce the most irregular DAGs.
+    for strat in [Strategy::Balance, Strategy::R2AllReduce, Strategy::Recursive] {
+        let (sched, _) =
+            g.compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Force(strat));
+        assert_dag_matches(&sched, &format!("allreduce/{strat:?}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Indexed executor ≡ baseline executor
+// ---------------------------------------------------------------------
+
+fn assert_reports_equal(b: &ExecReport, o: &ExecReport, ctx: &str) {
+    assert_eq!(
+        b.completion.map(f64::to_bits),
+        o.completion.map(f64::to_bits),
+        "{ctx}: completion"
+    );
+    assert_eq!(b.crashed, o.crashed, "{ctx}: crashed");
+    assert_eq!(b.wire_bytes, o.wire_bytes, "{ctx}: wire_bytes");
+    assert_eq!(b.recomputes, o.recomputes, "{ctx}: engine recomputes");
+    assert_eq!(b.flows_created, o.flows_created, "{ctx}: engine flows");
+    assert_eq!(b.timeline, o.timeline, "{ctx}: timeline");
+    // The timeline is also the golden-trace wire format: byte-compare it.
+    let json = |rep: &ExecReport| {
+        rep.timeline.iter().map(|e| e.to_json().pretty()).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(json(b), json(o), "{ctx}: timeline JSON");
+    assert_eq!(b.migrations.len(), o.migrations.len(), "{ctx}: migration count");
+    for (mb, mo) in b.migrations.iter().zip(&o.migrations) {
+        assert_eq!(mb.at.to_bits(), mo.at.to_bits(), "{ctx}: migration time");
+        assert_eq!(mb.nic, mo.nic, "{ctx}");
+        assert_eq!(mb.replacement, mo.replacement, "{ctx}");
+        assert_eq!(mb.diagnosis, mo.diagnosis, "{ctx}");
+        assert_eq!(mb.flows_migrated, mo.flows_migrated, "{ctx}");
+        assert_eq!(mb.retransmitted_bytes, mo.retransmitted_bytes, "{ctx}");
+        assert_eq!(mb.wasted_bytes, mo.wasted_bytes, "{ctx}");
+    }
+}
+
+fn both_runs(
+    topo: &Topology,
+    timing: &TimingConfig,
+    sched: &Schedule,
+    opts: ExecOptions,
+    script: &[FaultEvent],
+    initial: &[(usize, FaultAction)],
+) -> (ExecReport, ExecReport) {
+    let routing = ChannelRouting::default_rails(topo, 8);
+    let b = BaselineExecutor::new(topo, timing, routing.clone(), opts.clone(), script.to_vec())
+        .with_initial_faults(initial)
+        .run(sched, &mut PhantomPlane);
+    let o = Executor::new(topo, timing, routing, opts, script.to_vec())
+        .with_initial_faults(initial)
+        .run(sched, &mut PhantomPlane);
+    (b, o)
+}
+
+#[test]
+fn indexed_executor_matches_baseline_across_fault_scripts() {
+    let topo = Topology::build(&TopologyConfig::testbed_h100());
+    let timing = TimingConfig::default();
+    let spec = nccl_rings(&topo, 8);
+    let sched = ring_allreduce(&spec, 1 << 22, 0);
+    let healthy = Executor::new(
+        &topo,
+        &timing,
+        ChannelRouting::default_rails(&topo, 8),
+        ExecOptions::default(),
+        vec![],
+    )
+    .run(&sched, &mut PhantomPlane)
+    .completion_or_panic();
+
+    let scripts: Vec<(&str, Vec<FaultEvent>)> = vec![
+        ("healthy", vec![]),
+        (
+            "fail_mid",
+            vec![FaultEvent { at: healthy * 0.4, nic: 0, action: FaultAction::FailNic }],
+        ),
+        (
+            "double_failure",
+            vec![
+                FaultEvent { at: healthy * 0.2, nic: 0, action: FaultAction::FailNic },
+                FaultEvent { at: healthy * 0.5, nic: 1, action: FaultAction::FailNic },
+            ],
+        ),
+        (
+            "cut_then_degrade",
+            vec![
+                FaultEvent { at: healthy * 0.3, nic: 3, action: FaultAction::CutCable },
+                FaultEvent { at: healthy * 0.6, nic: 5, action: FaultAction::Degrade(0.5) },
+            ],
+        ),
+        (
+            "nan_degrade_collapse",
+            vec![FaultEvent { at: healthy * 0.3, nic: 0, action: FaultAction::Degrade(f64::NAN) }],
+        ),
+    ];
+    for (name, script) in &scripts {
+        let (b, o) = both_runs(&topo, &timing, &sched, ExecOptions::default(), script, &[]);
+        assert_reports_equal(&b, &o, name);
+    }
+
+    // Crash policy must abort identically.
+    let crash_opts = ExecOptions { policy: FailurePolicy::Crash, ..Default::default() };
+    let script = vec![FaultEvent { at: healthy * 0.5, nic: 2, action: FaultAction::FailNic }];
+    let (b, o) = both_runs(&topo, &timing, &sched, crash_opts, &script, &[]);
+    assert!(b.crashed);
+    assert_reports_equal(&b, &o, "crash_policy");
+
+    // Standing initial faults exercise the pre-run routing rewrite path.
+    let (b, o) = both_runs(
+        &topo,
+        &timing,
+        &sched,
+        ExecOptions::default(),
+        &[],
+        &[(0, FaultAction::FailNic), (9, FaultAction::Degrade(1e-6))],
+    );
+    assert_reports_equal(&b, &o, "initial_faults");
+}
+
+#[test]
+fn indexed_executor_matches_baseline_on_repair_and_restore() {
+    // Fail + repair inside one collective exercises migration, the per-row
+    // COW rewrite, and the reprobe-driven restore (override row dropped
+    // when it converges back to the default).
+    let topo = Topology::build(&TopologyConfig::testbed_h100());
+    let mut timing = TimingConfig::default();
+    timing.reprobe_interval = 1.0e-3;
+    let spec = nccl_rings(&topo, 8);
+    let sched = ring_allreduce(&spec, 1 << 28, 0);
+    let healthy = Executor::new(
+        &topo,
+        &timing,
+        ChannelRouting::default_rails(&topo, 8),
+        ExecOptions::default(),
+        vec![],
+    )
+    .run(&sched, &mut PhantomPlane)
+    .completion_or_panic();
+    let script = vec![
+        FaultEvent { at: healthy * 0.1, nic: 0, action: FaultAction::FailNic },
+        FaultEvent { at: healthy * 0.3, nic: 0, action: FaultAction::Repair },
+        FaultEvent { at: healthy * 0.5, nic: 1, action: FaultAction::FailNic },
+    ];
+    let (b, o) = both_runs(&topo, &timing, &sched, ExecOptions::default(), &script, &[]);
+    assert!(!o.crashed);
+    assert_reports_equal(&b, &o, "repair_restore");
+}
+
+#[test]
+fn indexed_executor_matches_baseline_on_every_collkind() {
+    // Group-scoped plans (a standing failure forces Balance rewrites) run
+    // identically through both executors for all seven collective kinds.
+    let mut world = CommWorld::new(&Preset::testbed(), 8);
+    world.note_failure(0, FaultAction::FailNic);
+    let g = world.world_group();
+    let topo = Topology::build(&TopologyConfig::testbed_h100());
+    let timing = TimingConfig::default();
+    let initial = [(0usize, FaultAction::FailNic)];
+    for kind in ALL_KINDS {
+        let (sched, _) = g.compile(kind, 1 << 20, 0, StrategyChoice::Auto);
+        let (b, o) =
+            both_runs(&topo, &timing, &sched, ExecOptions::default(), &[], &initial);
+        assert_reports_equal(&b, &o, &format!("{kind:?}"));
+    }
+}
+
+#[test]
+fn pooled_engine_replay_is_deterministic() {
+    // Repeated runs cycle engines through the thread-local pool; every
+    // replay must be bit-identical to the first (Engine::reset is total).
+    let topo = Topology::build(&TopologyConfig::testbed_h100());
+    let timing = TimingConfig::default();
+    let spec = nccl_rings(&topo, 8);
+    let sched = ring_allreduce(&spec, 1 << 20, 0);
+    let routing = ChannelRouting::default_rails(&topo, 8);
+    let script = vec![FaultEvent { at: 1.0e-5, nic: 0, action: FaultAction::FailNic }];
+    let first = Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), script.clone())
+        .run(&sched, &mut PhantomPlane);
+    for i in 0..4 {
+        let again =
+            Executor::new(&topo, &timing, routing.clone(), ExecOptions::default(), script.clone())
+                .run(&sched, &mut PhantomPlane);
+        assert_reports_equal(&first, &again, &format!("pooled replay {i}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parallel sweeps ≡ serial sweeps
+// ---------------------------------------------------------------------
+
+#[test]
+fn parallel_montecarlo_sweep_matches_serial_for_random_seeds() {
+    let model = ModelConfig::gpt_7b();
+    let par = ParallelConfig { dp: 64, tp: 2, pp: 1, global_batch: 256, microbatch: 1 };
+    let gpu = GpuComputeConfig::a100();
+    let mut meta = Rng::new(0xC0FFEE);
+    for round in 0..3 {
+        let seed = meta.next_u64();
+        let serial =
+            multi_failure_sweep_threads(&model, &par, &gpu, 16, &[1, 3, 6], 5, seed, 1);
+        let serial_json = points_to_json(&serial).pretty();
+        for threads in [2usize, 4, 16] {
+            let p =
+                multi_failure_sweep_threads(&model, &par, &gpu, 16, &[1, 3, 6], 5, seed, threads);
+            assert_eq!(
+                points_to_json(&p).pretty(),
+                serial_json,
+                "round {round} seed {seed:#x}: {threads} threads diverged from serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_scenario_corpus_matches_serial() {
+    let preset = Preset::testbed();
+    let mut meta = Rng::new(0xBEEF);
+    let scenarios: Vec<FaultScenario> = (0..3)
+        .map(|i| FaultScenario {
+            name: format!("par-corpus-{i}"),
+            seed: meta.next_u64(),
+            iters: 3,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
+            max_overhead: None,
+            patterns: match i {
+                0 => vec![],
+                1 => vec![FaultPattern::OneShot {
+                    at: 1.5,
+                    nic: 0,
+                    action: FaultAction::FailNic,
+                }],
+                _ => vec![FaultPattern::RandomMultiFault { k: 2, at: 1.4 }],
+            },
+        })
+        .collect();
+    for sc in &scenarios {
+        sc.validate(&preset.topo).unwrap();
+    }
+    let serial: Vec<String> =
+        run_corpus(&scenarios, &preset, 1).iter().map(|r| r.to_json().pretty()).collect();
+    for threads in [2usize, 3, 8] {
+        let par: Vec<String> =
+            run_corpus(&scenarios, &preset, threads).iter().map(|r| r.to_json().pretty()).collect();
+        assert_eq!(par, serial, "{threads} threads diverged from the serial corpus run");
+    }
+}
