@@ -1,0 +1,65 @@
+//! Cluster-scale fabric sweep: all 7 collectives at 32–128 servers
+//! (256–1024 GPUs) on a rail-optimised leaf/spine fabric, healthy vs
+//! leaf-switch-down (planned and mid-flight).
+//!
+//! Writes `bench_results/cluster_sweep.json` (schema in
+//! `bench_results/README.md`). `BENCH_QUICK=1` restricts to the 32-server
+//! point — the CI `cluster-smoke` job's shape.
+
+use r2ccl::bench::Table;
+use r2ccl::sim::{cluster_sweep, cluster_sweep_to_json, ClusterSweepCfg};
+use r2ccl::util::stats::fmt_time;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = if quick { ClusterSweepCfg::quick() } else { ClusterSweepCfg::full() };
+    println!(
+        "cluster sweep: servers {:?}, leaf/spine pod_size={} spines={} oversub={}x, {} B/rank{}",
+        cfg.server_counts,
+        cfg.pod_size,
+        cfg.spines,
+        cfg.oversubscription,
+        cfg.bytes_per_rank,
+        if quick { " (BENCH_QUICK)" } else { "" }
+    );
+    let rows = cluster_sweep(&cfg);
+    let mut table = Table::new(
+        "Cluster-scale leaf/spine sweep (healthy vs one leaf down)",
+        &[
+            "servers",
+            "gpus",
+            "collective",
+            "ranks",
+            "healthy",
+            "busbw GB/s",
+            "leaf down",
+            "overhead",
+            "strategy",
+            "mid-flight migr.",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.n_servers.to_string(),
+            r.n_gpus.to_string(),
+            format!("{:?}", r.kind),
+            r.ranks.to_string(),
+            fmt_time(r.healthy_time),
+            format!("{:.1}", r.healthy_busbw / 1e9),
+            fmt_time(r.leaf_down_time),
+            format!("{:+.1}%", 100.0 * r.overhead),
+            r.leaf_down_strategy.clone(),
+            if r.midflight_migrations > 0 {
+                r.midflight_migrations.to_string()
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    table.print();
+    let _ = std::fs::create_dir_all("bench_results");
+    let json = cluster_sweep_to_json(&cfg, &rows).pretty();
+    std::fs::write("bench_results/cluster_sweep.json", json + "\n")
+        .expect("write bench_results/cluster_sweep.json");
+    println!("\nwrote bench_results/cluster_sweep.json ({} rows)", rows.len());
+}

@@ -39,6 +39,7 @@ use crate::collectives::{
     rings_for_ranks, CollKind, DataPlane, PhantomPlane, Schedule,
 };
 use crate::config::{Preset, TimingConfig};
+use crate::fabric::{FabricConfig, SwitchAction, SwitchFaultEvent, SwitchTarget};
 use crate::schedule::{
     apply_balance, choose_strategy, optimal_y, r2_allreduce_schedule_for, recursive_allreduce_for,
     PlanInput, Strategy,
@@ -130,6 +131,9 @@ struct WorldShared {
     /// Failures known *before* a collective starts (already detected and
     /// broadcast via OOB); the planner schedules around them.
     failures: RefCell<Vec<(NicId, FaultAction)>>,
+    /// Standing switch-scoped failures (leaf/spine fabrics): dead leaves,
+    /// degraded spines/uplinks. Same epoch discipline as NIC failures.
+    switch_failures: RefCell<Vec<(SwitchTarget, SwitchAction)>>,
     /// Failure epoch: bumped on every health mutation. Keys the health
     /// snapshot and the plan cache.
     epoch: Cell<u64>,
@@ -154,9 +158,10 @@ impl WorldShared {
                 return Arc::clone(h);
             }
         }
-        let h = Arc::new(HealthState::build(
+        let h = Arc::new(HealthState::build_with_switch(
             &self.topo,
             &self.failures.borrow(),
+            &self.switch_failures.borrow(),
             self.epoch.get(),
         ));
         *slot = Some(Arc::clone(&h));
@@ -175,7 +180,20 @@ pub struct CommWorld {
 
 impl CommWorld {
     pub fn new(preset: &Preset, channels: usize) -> CommWorld {
-        let topo = Topology::build(&preset.topo);
+        CommWorld::new_with_fabric(preset, channels, &FabricConfig::ideal())
+    }
+
+    /// Build a world over an explicit inter-server fabric.
+    /// `FabricConfig::ideal()` reproduces [`CommWorld::new`] bit-for-bit; a
+    /// leaf/spine fabric adds the switch tier to every engine this world's
+    /// executors run on and makes switch-scoped failures
+    /// ([`CommWorld::note_switch_failure`]) expressible.
+    pub fn new_with_fabric(
+        preset: &Preset,
+        channels: usize,
+        fabric: &FabricConfig,
+    ) -> CommWorld {
+        let topo = Topology::build_with_fabric(&preset.topo, fabric);
         let routing = Arc::new(ChannelRouting::default_rails(&topo, channels));
         CommWorld {
             shared: Rc::new(WorldShared {
@@ -185,6 +203,7 @@ impl CommWorld {
                 routing,
                 opts: RefCell::new(ExecOptions::default()),
                 failures: RefCell::new(Vec::new()),
+                switch_failures: RefCell::new(Vec::new()),
                 epoch: Cell::new(0),
                 health: RefCell::new(None),
                 cache: RefCell::new(PlanCache::default()),
@@ -252,15 +271,57 @@ impl CommWorld {
     }
 
     pub fn clear_failures(&mut self) {
-        let was_empty = self.shared.failures.borrow().is_empty();
-        if !was_empty {
+        let any = !self.shared.failures.borrow().is_empty()
+            || !self.shared.switch_failures.borrow().is_empty();
+        if any {
             self.shared.failures.borrow_mut().clear();
+            self.shared.switch_failures.borrow_mut().clear();
             self.shared.bump_epoch();
         }
     }
 
     pub fn known_failures(&self) -> Vec<(NicId, FaultAction)> {
         self.shared.failures.borrow().clone()
+    }
+
+    /// Record a switch-scoped failure (dead leaf, degraded spine/uplink)
+    /// known before the next collective. Requires a leaf/spine fabric.
+    /// `Up` clears the target's standing entry; re-reporting an identical
+    /// state is a no-op, so the epoch (and the plan cache) only moves when
+    /// the fabric health actually changes.
+    pub fn note_switch_failure(&mut self, target: SwitchTarget, action: SwitchAction) {
+        assert!(
+            !self.shared.topo.fabric().is_ideal(),
+            "note_switch_failure needs a leaf/spine fabric (world is flat)"
+        );
+        assert!(
+            !matches!((target, action), (SwitchTarget::Spine(_), SwitchAction::Down)),
+            "spine outages are unsupported: NIC-level migration cannot re-pin ECMP around \
+             a dead spine — express spine trouble as SwitchAction::Degrade"
+        );
+        let action = match action {
+            SwitchAction::Degrade(f) => {
+                SwitchAction::Degrade(crate::netsim::clamp_degrade_factor(f))
+            }
+            other => other,
+        };
+        let mut failures = self.shared.switch_failures.borrow_mut();
+        let before = failures.clone();
+        failures.retain(|(t, _)| *t != target);
+        let clears = matches!(action, SwitchAction::Up)
+            || matches!(action, SwitchAction::Degrade(f) if f >= 1.0);
+        if !clears {
+            failures.push((target, action));
+        }
+        let changed = *failures != before;
+        drop(failures);
+        if changed {
+            self.shared.bump_epoch();
+        }
+    }
+
+    pub fn known_switch_failures(&self) -> Vec<(SwitchTarget, SwitchAction)> {
+        self.shared.switch_failures.borrow().clone()
     }
 
     /// The current failure epoch.
@@ -584,6 +645,24 @@ impl CommGroup {
         plane: &mut dyn DataPlane,
         elems: usize,
     ) -> ExecReport {
+        self.run_scripted(kind, bytes_per_rank, choice, script, Vec::new(), plane, elems)
+    }
+
+    /// Run a group collective with NIC-level *and* switch-level mid-flight
+    /// fault scripts. Standing switch failures (a dead leaf the world
+    /// already knows about) are applied as initial executor state before
+    /// the NIC faults, so NIC failover choices see the shrunken fabric.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_scripted(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        choice: StrategyChoice,
+        script: Vec<FaultEvent>,
+        switch_script: Vec<SwitchFaultEvent>,
+        plane: &mut dyn DataPlane,
+        elems: usize,
+    ) -> ExecReport {
         let (sched, _strategy) = self.compile(kind, bytes_per_rank, elems, choice);
         let shared = &self.shared;
         Executor::new(
@@ -593,6 +672,8 @@ impl CommGroup {
             shared.opts.borrow().clone(),
             script,
         )
+        .with_switch_script(switch_script)
+        .with_initial_switch_faults(&shared.switch_failures.borrow())
         .with_initial_faults(&shared.failures.borrow())
         .run(&sched, plane)
     }
@@ -808,6 +889,70 @@ mod tests {
         assert_eq!(strat, Strategy::Standard);
         let t = solo.time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto);
         assert_eq!(t, Some(0.0));
+    }
+
+    #[test]
+    fn leaf_down_world_replans_and_completes() {
+        use crate::fabric::{FabricConfig, LeafSpineCfg, SwitchAction, SwitchTarget};
+        let preset = Preset::simai(8);
+        let fabric = FabricConfig::leaf_spine_with(LeafSpineCfg {
+            pod_size: 4,
+            spines: 2,
+            ..LeafSpineCfg::default()
+        });
+        let mut w = CommWorld::new_with_fabric(&preset, 4, &fabric);
+        let healthy = w
+            .world_group()
+            .time_collective(CollKind::AllReduce, 1 << 22, StrategyChoice::Auto)
+            .expect("healthy leaf-spine allreduce");
+        let leaf = w.topo().fabric().leaf_id(0, 0);
+        w.note_switch_failure(SwitchTarget::Leaf(leaf), SwitchAction::Down);
+        // The planner sees the reduced fabric capacity: pod-0 servers lost
+        // a rail, so the strategy leaves Standard.
+        let (_, strat) =
+            w.world_group().compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+        assert_ne!(strat, Strategy::Standard, "leaf loss must reach strategy choice");
+        assert!(w.worst_server().1 > 0.0);
+        // And the collective still completes — slower — routed around the
+        // dead leaf.
+        let t = w
+            .world_group()
+            .time_collective(CollKind::AllReduce, 1 << 22, StrategyChoice::Auto)
+            .expect("allreduce must survive a leaf outage");
+        assert!(t > healthy, "degraded {t} vs healthy {healthy}");
+        // Recovery restores the healthy plan.
+        w.note_switch_failure(SwitchTarget::Leaf(leaf), SwitchAction::Up);
+        let (_, strat) =
+            w.world_group().compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+        assert_eq!(strat, Strategy::Standard);
+        assert!(w.known_switch_failures().is_empty());
+    }
+
+    #[test]
+    fn uplink_degrade_slows_cross_pod_collectives() {
+        use crate::fabric::{FabricConfig, LeafSpineCfg, SwitchAction, SwitchTarget};
+        let preset = Preset::simai(8);
+        let fabric = FabricConfig::leaf_spine_with(LeafSpineCfg {
+            pod_size: 4,
+            spines: 2,
+            ..LeafSpineCfg::default()
+        });
+        let mut w = CommWorld::new_with_fabric(&preset, 4, &fabric);
+        let healthy = w
+            .world_group()
+            .time_collective(CollKind::AllGather, 1 << 22, StrategyChoice::Auto)
+            .unwrap();
+        // Collapse every pod-0 uplink on spine 0 to 10%: cross-pod flows
+        // ECMP-pinned to spine 0 crawl, so completion time grows.
+        for rail in 0..8 {
+            let leaf = w.topo().fabric().leaf_id(0, rail);
+            w.note_switch_failure(SwitchTarget::Uplink(leaf, 0), SwitchAction::Degrade(0.1));
+        }
+        let t = w
+            .world_group()
+            .time_collective(CollKind::AllGather, 1 << 22, StrategyChoice::Auto)
+            .expect("degraded uplinks must not crash");
+        assert!(t > healthy, "degraded {t} vs healthy {healthy}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! resources.
 
 use crate::collectives::exec::FaultAction;
+use crate::fabric::{SwitchAction, SwitchTarget};
 use crate::netsim::{FaultPlane, NicState};
 use crate::schedule::PlanInput;
 use crate::topology::{NicId, Topology};
@@ -48,6 +49,20 @@ pub struct HealthState {
 impl HealthState {
     /// Build the snapshot from the communicator's known-failure list.
     pub fn build(topo: &Topology, failures: &[(NicId, FaultAction)], epoch: u64) -> HealthState {
+        HealthState::build_with_switch(topo, failures, &[], epoch)
+    }
+
+    /// Build the snapshot from NIC-level *and* switch-level known
+    /// failures: a dead leaf zeroes its member NICs' remaining capacity, a
+    /// degraded uplink or spine shrinks it — so `rem`, X and the α-β
+    /// strategy choice all see the reduced fabric capacity. The NIC-only
+    /// [`HealthState::build`] delegates here with an empty switch list.
+    pub fn build_with_switch(
+        topo: &Topology,
+        failures: &[(NicId, FaultAction)],
+        switch_failures: &[(SwitchTarget, SwitchAction)],
+        epoch: u64,
+    ) -> HealthState {
         let mut fault_plane = FaultPlane::new(topo);
         for &(nic, action) in failures {
             let state = match action {
@@ -58,6 +73,9 @@ impl HealthState {
                 FaultAction::Repair => NicState::Healthy,
             };
             fault_plane.note_state(nic, state);
+        }
+        for &(target, action) in switch_failures {
+            fault_plane.note_switch(topo, target, action);
         }
         let rem = (0..topo.n_servers())
             .map(|s| 1.0 - fault_plane.lost_bandwidth_fraction(topo, s))
@@ -198,6 +216,46 @@ mod tests {
         // Full-scope reduction.
         let full = h.plan_input_for(&t, &[0, 1, 2, 3], 8);
         assert_eq!(full.rem, h.plan_input(&t).rem);
+    }
+
+    #[test]
+    fn switch_failures_reach_rem_and_worst_server() {
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        let t = Topology::build_with_fabric(
+            &TopologyConfig::simai_a100(8),
+            &FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 2,
+                ..LeafSpineCfg::default()
+            }),
+        );
+        let leaf = t.fabric().leaf_id(0, 0);
+        let h = HealthState::build_with_switch(
+            &t,
+            &[],
+            &[(SwitchTarget::Leaf(leaf), SwitchAction::Down)],
+            1,
+        );
+        // Pod-0 servers each lost one of 8 NICs' fabric connectivity.
+        for s in 0..4 {
+            assert!((h.rem[s] - 0.875).abs() < 1e-12, "server {s}: {}", h.rem[s]);
+        }
+        for s in 4..8 {
+            assert_eq!(h.rem[s], 1.0, "server {s}");
+        }
+        assert_eq!(h.degraded_servers(), 4);
+        let (s, x) = h.worst_server();
+        assert!(s < 4);
+        assert!((x - 0.125).abs() < 1e-12);
+        // An uplink degrade shrinks rem without zeroing any NIC.
+        let h2 = HealthState::build_with_switch(
+            &t,
+            &[],
+            &[(SwitchTarget::Uplink(leaf, 0), SwitchAction::Degrade(0.5))],
+            2,
+        );
+        assert!(h2.rem[0] < 1.0 && h2.rem[0] > 0.875);
+        assert!(h2.fault_plane.is_usable(0));
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use crate::config::TimingConfig;
 use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
+use crate::fabric::{LeafId, SwitchAction, SwitchFaultEvent, SwitchTarget};
 use crate::netsim::{clamp_degrade_factor, engine_for, recycle, Engine, Event, FaultPlane, FlowId};
 use crate::topology::{NicId, ResourceKey, Route, Topology};
 use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
@@ -149,6 +150,8 @@ pub enum TimelineEvent {
     NoAlternatePath { nic: NicId, server: usize },
     /// Periodic reprobe saw the NIC healthy again; default routing restored.
     Reprobed { nic: NicId },
+    /// A scripted switch-scoped fault fired (leaf/spine fabrics only).
+    SwitchFault { target: SwitchTarget, action: SwitchAction },
 }
 
 impl fmt::Display for TimelineEvent {
@@ -177,6 +180,9 @@ impl fmt::Display for TimelineEvent {
             }
             TimelineEvent::Reprobed { nic } => {
                 write!(f, "reprobe: nic {nic} recovered, routing restored")
+            }
+            TimelineEvent::SwitchFault { target, action } => {
+                write!(f, "switch fault: {} {}", action.label(), target.label())
             }
         }
     }
@@ -221,6 +227,16 @@ impl TimelineEntry {
                 .set("nic", *nic)
                 .set("server", *server),
             TimelineEvent::Reprobed { nic } => j.set("event", "reprobed").set("nic", *nic),
+            TimelineEvent::SwitchFault { target, action } => {
+                let j = j
+                    .set("event", "switch_fault")
+                    .set("target", target.label())
+                    .set("action", action.label());
+                match action.factor() {
+                    Some(f) => j.set("factor", f),
+                    None => j,
+                }
+            }
         }
     }
 }
@@ -269,6 +285,7 @@ impl ExecReport {
 const TAG_FAULT: u64 = 1 << 48;
 const TAG_DETECT: u64 = 2 << 48;
 const TAG_REPROBE: u64 = 3 << 48;
+const TAG_SWITCH: u64 = 4 << 48;
 const TAG_MASK: u64 = 0xffff_0000_0000_0000;
 
 struct FlowInfo {
@@ -276,6 +293,25 @@ struct FlowInfo {
     sub: usize,
     /// This flow's size (the remainder of the sub after prior migrations).
     size: u64,
+}
+
+/// The leaf whose member NICs lose (or effectively lose) fabric
+/// connectivity under a switch fault: a Leaf/Uplink `Down`, or a
+/// Leaf/Uplink `Degrade` collapsed below the fluctuation threshold — the
+/// switch-level mirror of the NIC collapsed-degrade rule. Spine events
+/// never qualify (capacity-only; `Spine × Down` is rejected upstream).
+/// Shared by the standing-fault and mid-flight paths so the two can never
+/// diverge.
+fn dead_leaf_of(target: SwitchTarget, action: SwitchAction, threshold: f64) -> Option<LeafId> {
+    let l = match target {
+        SwitchTarget::Leaf(l) | SwitchTarget::Uplink(l, _) => l,
+        SwitchTarget::Spine(_) => return None,
+    };
+    match action {
+        SwitchAction::Down => Some(l),
+        SwitchAction::Degrade(f) if clamp_degrade_factor(f) < threshold => Some(l),
+        _ => None,
+    }
 }
 
 /// The executor.
@@ -302,6 +338,8 @@ pub struct Executor<'a> {
     faults: FaultPlane,
     engine: Engine,
     script: Vec<FaultEvent>,
+    /// Scripted switch-scoped faults (leaf/spine fabrics only).
+    switch_script: Vec<SwitchFaultEvent>,
     /// failed NIC → replacement (resolution chain for hinted routes),
     /// dense by `NicId`.
     migrated_to: Vec<Option<NicId>>,
@@ -331,6 +369,7 @@ impl<'a> Executor<'a> {
             faults: FaultPlane::new(topo),
             engine,
             script,
+            switch_script: Vec::new(),
             migrated_to: vec![None; topo.n_nics()],
             flows: Vec::new(),
             report: ExecReport {
@@ -343,6 +382,48 @@ impl<'a> Executor<'a> {
                 flows_created: 0,
             },
         }
+    }
+
+    /// Schedule switch-scoped faults to fire mid-collective (the
+    /// switch-tier sibling of the NIC fault script; requires a leaf/spine
+    /// fabric).
+    pub fn with_switch_script(mut self, script: Vec<SwitchFaultEvent>) -> Self {
+        self.switch_script = script;
+        self
+    }
+
+    /// Apply standing switch faults before the collective starts. Applied
+    /// *before* [`Executor::with_initial_faults`] so NIC-level failover
+    /// choices already see the shrunken fabric; a dead leaf migrates every
+    /// member NIC's routing onto surviving rails (the migration chain
+    /// resolves through any NIC faults applied afterwards).
+    pub fn with_initial_switch_faults(
+        mut self,
+        faults: &[(SwitchTarget, SwitchAction)],
+    ) -> Self {
+        for &(target, action) in faults {
+            self.faults.set_switch(self.topo, &mut self.engine, target, action);
+            // A standing dead leaf — or a standing dead/collapsed uplink,
+            // whose ECMP-pinned paths would otherwise stall (or crawl at
+            // MIN_DEGRADE_FACTOR) forever — migrates the owning leaf's
+            // member NICs onto surviving rails.
+            if let Some(l) = dead_leaf_of(target, action, self.timing.degrade_detect_threshold) {
+                let members: Vec<NicId> = self.topo.fabric().nics_of_leaf(l).collect();
+                for m in members {
+                    if let Some(rep) = self
+                        .topo
+                        .failover_chain(self.topo.affinity_gpu(m))
+                        .iter()
+                        .copied()
+                        .find(|&n| n != m && self.faults.is_usable(n))
+                    {
+                        self.migrated_to[m] = Some(rep);
+                    }
+                    self.rewrite_routing(m);
+                }
+            }
+        }
+        self
     }
 
     /// Apply pre-existing faults before the collective starts (the
@@ -362,7 +443,8 @@ impl<'a> Executor<'a> {
                 if let Some(rep) = self
                     .topo
                     .failover_chain(gpu)
-                    .into_iter()
+                    .iter()
+                    .copied()
                     .find(|&n| n != nic && self.faults.is_usable(n))
                 {
                     self.migrated_to[nic] = Some(rep);
@@ -414,6 +496,10 @@ impl<'a> Executor<'a> {
         for i in 0..self.script.len() {
             let at = self.script[i].at;
             self.engine.set_timer(at, TAG_FAULT | i as u64);
+        }
+        for i in 0..self.switch_script.len() {
+            let at = self.switch_script[i].at;
+            self.engine.set_timer(at, TAG_SWITCH | i as u64);
         }
 
         for i in 0..n {
@@ -505,10 +591,90 @@ impl<'a> Executor<'a> {
                     }
                     TAG_REPROBE => {
                         let nic = (tag & !TAG_MASK) as NicId;
-                        if self.faults.is_usable(nic) {
+                        // Restore only when the NIC *and* its whole fabric
+                        // tier are back: a sibling uplink of the same leaf
+                        // that is still dead would stall freshly-restored
+                        // ECMP-pinned flows with no detection timer left.
+                        if self.faults.is_usable(nic)
+                            && self
+                                .faults
+                                .fabric_restored(nic, self.timing.degrade_detect_threshold)
+                        {
                             self.restore_routing(nic);
                             self.log(t, TimelineEvent::Reprobed { nic });
                         }
+                    }
+                    TAG_SWITCH => {
+                        let se = self.switch_script[(tag & !TAG_MASK) as usize];
+                        self.log(
+                            t,
+                            TimelineEvent::SwitchFault { target: se.target, action: se.action },
+                        );
+                        self.faults.set_switch(self.topo, &mut self.engine, se.target, se.action);
+                        // Leaf events hit every member NIC's connectivity;
+                        // an uplink outage (or collapsed degrade) stalls
+                        // the ECMP-pinned subset of the same member NICs'
+                        // traffic — both surface as transport timeouts at
+                        // those NICs, so both drive the per-member
+                        // detection → migration pipeline (an unrepaired
+                        // uplink must migrate, not hang).
+                        let owning_leaf = match se.target {
+                            SwitchTarget::Leaf(l) | SwitchTarget::Uplink(l, _) => Some(l),
+                            SwitchTarget::Spine(_) => None,
+                        };
+                        if let Some(l) = owning_leaf {
+                            let members: Vec<NicId> =
+                                self.topo.fabric().nics_of_leaf(l).collect();
+                            if dead_leaf_of(
+                                se.target,
+                                se.action,
+                                self.timing.degrade_detect_threshold,
+                            )
+                            .is_some()
+                            {
+                                // Down or collapsed degrade: member
+                                // connectivity is effectively gone.
+                                if self.opts.policy == FailurePolicy::Crash
+                                    && matches!(
+                                        (se.target, se.action),
+                                        (SwitchTarget::Leaf(_), SwitchAction::Down)
+                                    )
+                                {
+                                    // Vanilla NCCL aborts on the error
+                                    // storm of a whole-leaf outage.
+                                    let nic = members.first().copied().unwrap_or(0);
+                                    self.log(t, TimelineEvent::VanillaAbort { nic });
+                                    self.report.crashed = true;
+                                    return;
+                                }
+                                if self.opts.policy == FailurePolicy::HotRepair {
+                                    for m in members {
+                                        if self.migrated_to[m].is_none() {
+                                            let det = self.detection_latency(m);
+                                            self.engine
+                                                .set_timer(t + det, TAG_DETECT | m as u64);
+                                        }
+                                    }
+                                }
+                            } else {
+                                // Recovery — `Up` or a Degrade back at or
+                                // above the threshold (e.g. the
+                                // `Degrade(1.0)` a saturation window ends
+                                // with): the periodic reprobe notices per
+                                // member NIC; its gate re-checks the whole
+                                // fabric tier (`fabric_restored`) before
+                                // un-migrating.
+                                for m in members {
+                                    let next = ((t / self.timing.reprobe_interval).floor()
+                                        + 1.0)
+                                        * self.timing.reprobe_interval;
+                                    self.engine.set_timer(next, TAG_REPROBE | m as u64);
+                                }
+                            }
+                        }
+                        // Spine events and mild degrades are capacity-only;
+                        // the fluid engine carries them (scenario patterns
+                        // express spine trouble as Degrade, never Down).
                     }
                     _ => unreachable!("unknown timer tag {tag:#x}"),
                 },
@@ -647,7 +813,8 @@ impl<'a> Executor<'a> {
         let replacement = self
             .topo
             .failover_chain(gpu)
-            .into_iter()
+            .iter()
+            .copied()
             .find(|&n| n != nic && self.faults.is_usable(n));
         let Some(replacement) = replacement else {
             self.log(
@@ -723,7 +890,7 @@ impl<'a> Executor<'a> {
         if !self.faults.is_usable(r) {
             let gpu = self.topo.affinity_gpu(nic);
             if let Some(n) =
-                self.topo.failover_chain(gpu).into_iter().find(|&n| self.faults.is_usable(n))
+                self.topo.failover_chain(gpu).iter().copied().find(|&n| self.faults.is_usable(n))
             {
                 r = n;
             }

@@ -116,7 +116,8 @@ impl<'a> BaselineExecutor<'a> {
                 if let Some(rep) = self
                     .topo
                     .failover_chain(gpu)
-                    .into_iter()
+                    .iter()
+                    .copied()
                     .find(|&n| n != nic && self.faults.is_usable(n))
                 {
                     self.migrated_to.insert(nic, rep);
@@ -366,7 +367,8 @@ impl<'a> BaselineExecutor<'a> {
         let replacement = self
             .topo
             .failover_chain(gpu)
-            .into_iter()
+            .iter()
+            .copied()
             .find(|&n| n != nic && self.faults.is_usable(n));
         let Some(replacement) = replacement else {
             self.log(
@@ -440,7 +442,7 @@ impl<'a> BaselineExecutor<'a> {
         if !self.faults.is_usable(r) {
             let gpu = self.topo.affinity_gpu(nic);
             if let Some(n) =
-                self.topo.failover_chain(gpu).into_iter().find(|&n| self.faults.is_usable(n))
+                self.topo.failover_chain(gpu).iter().copied().find(|&n| self.faults.is_usable(n))
             {
                 r = n;
             }

@@ -1,0 +1,435 @@
+//! Multi-tier switched fabric: rail-optimised leaf/spine topologies.
+//!
+//! The flat [`crate::topology::Topology`] models the inter-server network as
+//! one non-blocking rail resource per NIC index — the right abstraction for
+//! the paper's 2-server testbed, but unable to express the faults that
+//! dominate at cluster scale: a leaf (ToR) switch outage takes out the rail
+//! connectivity of *every* NIC in its pod at once, a degraded spine or
+//! leaf→spine uplink shrinks the capacity of whole path *sets*, and
+//! oversubscribed uplinks bottleneck cross-pod collectives (SHIFT,
+//! arXiv:2512.11094; observable-CCL, arXiv:2510.00991).
+//!
+//! This module describes that switched fabric as pure *shape*:
+//!
+//! * [`FabricConfig`] — `Ideal` (the flat rail model, bit-for-bit identical
+//!   to the historical behaviour) or `LeafSpine` (pods of servers, one leaf
+//!   switch per (pod, rail), a spine tier every leaf uplinks to, an
+//!   oversubscription ratio, and a seeded ECMP spread).
+//! * [`Fabric`] — the resolved shape: leaf/spine counts, per-tier
+//!   capacities and latencies, NIC↔leaf membership, and the deterministic
+//!   ECMP spine pick for a NIC pair.
+//! * [`SwitchTarget`] / [`SwitchAction`] / [`SwitchFaultEvent`] — the
+//!   switch-scoped fault vocabulary consumed by
+//!   [`crate::netsim::FaultPlane`], the executor's switch scripts and the
+//!   scenario engine's switch-level patterns.
+//!
+//! The projection onto engine resources (which resource ids a NIC→NIC hop
+//! crosses) lives in [`crate::topology`]: `Topology::build_with_fabric`
+//! registers the fabric's resources and `Route::plan` expands the
+//! inter-server hop through [`Fabric`]'s path rules.
+//!
+//! Topology rules (rail-optimised, Spectrum-X style):
+//! * Servers are grouped into pods of `pod_size`; pod `p` hosts one leaf
+//!   per rail, `leaf = p * nics_per_server + rail`.
+//! * NIC `n` (rail `r`, pod `p`) attaches to exactly that leaf.
+//! * Same-leaf traffic (same rail, same pod) switches locally:
+//!   `NIC → leaf → NIC`.
+//! * Everything else crosses the spine:
+//!   `NIC → leaf → uplink → spine → uplink → leaf → NIC`, with the spine
+//!   chosen by a seeded ECMP hash of the NIC pair (deterministic, so plans
+//!   and golden traces are reproducible).
+//! * Each leaf has one uplink per spine; the uplink tier's aggregate
+//!   capacity is the leaf's downlink capacity divided by the
+//!   oversubscription ratio.
+
+use crate::topology::{NicId, TopologyConfig};
+
+/// Leaf switch id: `pod * nics_per_server + rail`.
+pub type LeafId = usize;
+/// Spine switch id.
+pub type SpineId = usize;
+
+/// Leaf/spine shape parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeafSpineCfg {
+    /// Servers per pod (clamped to the cluster size at build time).
+    pub pod_size: usize,
+    /// Spine switches; every leaf carries one uplink per spine.
+    pub spines: usize,
+    /// Downlink/uplink capacity ratio (1.0 = full bisection, 2.0 = 2:1
+    /// oversubscribed uplinks). Must be > 0.
+    pub oversubscription: f64,
+    /// Per-hop switching latency of a leaf or spine traversal.
+    pub switch_latency: f64,
+    /// Per-hop latency of a leaf↔spine uplink.
+    pub uplink_latency: f64,
+    /// Seed of the deterministic ECMP spread over parallel uplinks.
+    pub ecmp_seed: u64,
+}
+
+impl Default for LeafSpineCfg {
+    fn default() -> Self {
+        LeafSpineCfg {
+            pod_size: 8,
+            spines: 4,
+            oversubscription: 1.0,
+            switch_latency: 0.2e-6,
+            uplink_latency: 1.0e-6,
+            ecmp_seed: 1,
+        }
+    }
+}
+
+/// Which fabric a topology is built over.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FabricMode {
+    /// The flat per-rail model — reproduces the historical behaviour
+    /// bit-for-bit (no extra resources, identical paths and latencies).
+    Ideal,
+    /// Rail-optimised leaf/spine fabric.
+    LeafSpine(LeafSpineCfg),
+}
+
+/// Fabric selection handed to `Topology::build_with_fabric`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    pub mode: FabricMode,
+}
+
+impl FabricConfig {
+    /// The degenerate flat fabric (today's behaviour, bit-for-bit).
+    pub fn ideal() -> FabricConfig {
+        FabricConfig { mode: FabricMode::Ideal }
+    }
+
+    /// A leaf/spine fabric with default shape parameters.
+    pub fn leaf_spine() -> FabricConfig {
+        FabricConfig { mode: FabricMode::LeafSpine(LeafSpineCfg::default()) }
+    }
+
+    /// A leaf/spine fabric with an explicit shape.
+    pub fn leaf_spine_with(cfg: LeafSpineCfg) -> FabricConfig {
+        FabricConfig { mode: FabricMode::LeafSpine(cfg) }
+    }
+
+    /// Parse a CLI-style name: `flat` / `ideal` or `leaf-spine` /
+    /// `leaf_spine`.
+    pub fn from_name(name: &str) -> Result<FabricConfig, String> {
+        match name {
+            "flat" | "ideal" => Ok(FabricConfig::ideal()),
+            "leaf-spine" | "leaf_spine" => Ok(FabricConfig::leaf_spine()),
+            other => Err(format!("unknown fabric {other:?} (expected flat|leaf-spine)")),
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        matches!(self.mode, FabricMode::Ideal)
+    }
+}
+
+/// A switch-scoped fault target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchTarget {
+    Leaf(LeafId),
+    /// Spines support capacity `Degrade` only: NIC-level migration cannot
+    /// re-pin ECMP around a *dead* spine, so `note_switch_failure` rejects
+    /// `Spine × Down` (scenario patterns never emit it).
+    Spine(SpineId),
+    /// The uplink between a leaf and a spine (both directions).
+    Uplink(LeafId, SpineId),
+}
+
+impl SwitchTarget {
+    /// Stable serialization label (`leaf:3`, `spine:1`, `uplink:3:1`).
+    pub fn label(&self) -> String {
+        match self {
+            SwitchTarget::Leaf(l) => format!("leaf:{l}"),
+            SwitchTarget::Spine(s) => format!("spine:{s}"),
+            SwitchTarget::Uplink(l, s) => format!("uplink:{l}:{s}"),
+        }
+    }
+
+    /// Total order used when sorting compiled switch-event scripts.
+    pub fn sort_key(&self) -> (u8, usize, usize) {
+        match *self {
+            SwitchTarget::Leaf(l) => (0, l, 0),
+            SwitchTarget::Spine(s) => (1, s, 0),
+            SwitchTarget::Uplink(l, s) => (2, l, s),
+        }
+    }
+}
+
+/// What happens to a switch-scoped element.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SwitchAction {
+    /// The element goes dark: every path through it stalls.
+    Down,
+    /// The element returns at *full* capacity (any standing degradation on
+    /// it is cleared).
+    Up,
+    /// Capacity shrinks to `factor` of nominal (1.0 restores full speed).
+    Degrade(f64),
+}
+
+impl SwitchAction {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SwitchAction::Down => "down",
+            SwitchAction::Up => "up",
+            SwitchAction::Degrade(_) => "degrade",
+        }
+    }
+
+    pub fn factor(&self) -> Option<f64> {
+        match self {
+            SwitchAction::Degrade(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+/// A scripted switch fault, in executor seconds (the switch-scoped sibling
+/// of `collectives::exec::FaultEvent`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchFaultEvent {
+    pub at: f64,
+    pub target: SwitchTarget,
+    pub action: SwitchAction,
+}
+
+/// The resolved fabric shape of one topology. Pure structure — resource ids
+/// live in the owning `Topology`'s table; this type answers membership,
+/// capacity and routing questions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fabric {
+    mode: FabricMode,
+    nics_per_server: usize,
+    n_servers: usize,
+    /// Servers per pod (leaf radix on the down side); 0 in ideal mode.
+    pod_size: usize,
+    n_pods: usize,
+    n_leaves: usize,
+    n_spines: usize,
+    /// Leaf down-side (server-facing) capacity in bytes/s per direction.
+    pub leaf_cap: f64,
+    /// Per-uplink capacity in bytes/s per direction.
+    pub uplink_cap: f64,
+    /// Spine switching capacity in bytes/s per direction.
+    pub spine_cap: f64,
+    /// Per-hop leaf/spine switching latency.
+    pub switch_latency: f64,
+    /// Per-hop uplink latency.
+    pub uplink_latency: f64,
+    ecmp_seed: u64,
+}
+
+impl Fabric {
+    /// Resolve a fabric config against a cluster shape.
+    pub fn build(topo: &TopologyConfig, cfg: &FabricConfig) -> Fabric {
+        match &cfg.mode {
+            FabricMode::Ideal => Fabric {
+                mode: FabricMode::Ideal,
+                nics_per_server: topo.nics_per_server,
+                n_servers: topo.n_servers,
+                pod_size: 0,
+                n_pods: 0,
+                n_leaves: 0,
+                n_spines: 0,
+                leaf_cap: 0.0,
+                uplink_cap: 0.0,
+                spine_cap: 0.0,
+                switch_latency: 0.0,
+                uplink_latency: 0.0,
+                ecmp_seed: 0,
+            },
+            FabricMode::LeafSpine(ls) => {
+                assert!(ls.pod_size >= 1, "pod_size must be >= 1");
+                assert!(ls.spines >= 1, "spines must be >= 1");
+                assert!(
+                    ls.oversubscription > 0.0 && ls.oversubscription.is_finite(),
+                    "oversubscription must be a positive finite ratio"
+                );
+                let pod_size = ls.pod_size.min(topo.n_servers);
+                let n_pods = topo.n_servers.div_ceil(pod_size);
+                let n_leaves = n_pods * topo.nics_per_server;
+                // Down side is non-blocking: one full-rate port per pod
+                // server NIC of the leaf's rail.
+                let leaf_cap = topo.nic_bw * pod_size as f64;
+                // Aggregate uplink capacity = downlink / oversubscription,
+                // spread evenly over one uplink per spine.
+                let uplink_cap = leaf_cap / ls.oversubscription / ls.spines as f64;
+                // Spines are non-blocking across their attached uplinks.
+                let spine_cap = uplink_cap * n_leaves as f64;
+                Fabric {
+                    mode: FabricMode::LeafSpine(ls.clone()),
+                    nics_per_server: topo.nics_per_server,
+                    n_servers: topo.n_servers,
+                    pod_size,
+                    n_pods,
+                    n_leaves,
+                    n_spines: ls.spines,
+                    leaf_cap,
+                    uplink_cap,
+                    spine_cap,
+                    switch_latency: ls.switch_latency,
+                    uplink_latency: ls.uplink_latency,
+                    ecmp_seed: ls.ecmp_seed,
+                }
+            }
+        }
+    }
+
+    pub fn is_ideal(&self) -> bool {
+        matches!(self.mode, FabricMode::Ideal)
+    }
+
+    pub fn n_pods(&self) -> usize {
+        self.n_pods
+    }
+
+    pub fn pod_size(&self) -> usize {
+        self.pod_size
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    pub fn n_spines(&self) -> usize {
+        self.n_spines
+    }
+
+    /// Pod of a server.
+    pub fn pod_of_server(&self, server: usize) -> usize {
+        debug_assert!(!self.is_ideal());
+        server / self.pod_size
+    }
+
+    /// Leaf a NIC attaches to.
+    pub fn leaf_of_nic(&self, nic: NicId) -> LeafId {
+        debug_assert!(!self.is_ideal());
+        let server = nic / self.nics_per_server;
+        let rail = nic % self.nics_per_server;
+        self.pod_of_server(server) * self.nics_per_server + rail
+    }
+
+    /// Leaf id of `(pod, rail)`.
+    pub fn leaf_id(&self, pod: usize, rail: usize) -> LeafId {
+        debug_assert!(pod < self.n_pods && rail < self.nics_per_server);
+        pod * self.nics_per_server + rail
+    }
+
+    /// The NICs attached to a leaf (rail `leaf % k` of every server in pod
+    /// `leaf / k`).
+    pub fn nics_of_leaf(&self, leaf: LeafId) -> impl Iterator<Item = NicId> + '_ {
+        debug_assert!(!self.is_ideal());
+        let pod = leaf / self.nics_per_server;
+        let rail = leaf % self.nics_per_server;
+        let lo = pod * self.pod_size;
+        let hi = ((pod + 1) * self.pod_size).min(self.n_servers);
+        (lo..hi).map(move |s| s * self.nics_per_server + rail)
+    }
+
+    /// Deterministic ECMP spine pick for a NIC pair: a seeded SplitMix64
+    /// finalizer over `(src, dst)` spread uniformly over the spine tier.
+    /// Pure in `(src, dst, seed)` — plans, reports and golden traces are
+    /// reproducible.
+    pub fn ecmp_spine(&self, src: NicId, dst: NicId) -> SpineId {
+        debug_assert!(!self.is_ideal());
+        let mut z = self
+            .ecmp_seed
+            .wrapping_add((src as u64) << 32)
+            .wrapping_add(dst as u64)
+            .wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        (z % self.n_spines as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simai16_cfg() -> TopologyConfig {
+        TopologyConfig::simai_a100(16)
+    }
+
+    fn leaf_spine4() -> FabricConfig {
+        FabricConfig::leaf_spine_with(LeafSpineCfg {
+            pod_size: 4,
+            spines: 4,
+            oversubscription: 2.0,
+            ..LeafSpineCfg::default()
+        })
+    }
+
+    #[test]
+    fn ideal_fabric_has_no_switch_tier() {
+        let f = Fabric::build(&simai16_cfg(), &FabricConfig::ideal());
+        assert!(f.is_ideal());
+        assert_eq!(f.n_leaves(), 0);
+        assert_eq!(f.n_spines(), 0);
+    }
+
+    #[test]
+    fn leaf_spine_shape_and_membership() {
+        let f = Fabric::build(&simai16_cfg(), &leaf_spine4());
+        assert_eq!(f.n_pods(), 4);
+        assert_eq!(f.n_leaves(), 4 * 8);
+        assert_eq!(f.n_spines(), 4);
+        // NIC 0 = server 0, rail 0 → leaf 0; server 5 rail 3 → pod 1.
+        assert_eq!(f.leaf_of_nic(0), 0);
+        assert_eq!(f.leaf_of_nic(5 * 8 + 3), f.leaf_id(1, 3));
+        // Leaf (pod 1, rail 3) hosts rail 3 of servers 4..8.
+        let members: Vec<_> = f.nics_of_leaf(f.leaf_id(1, 3)).collect();
+        assert_eq!(members, vec![4 * 8 + 3, 5 * 8 + 3, 6 * 8 + 3, 7 * 8 + 3]);
+    }
+
+    #[test]
+    fn capacities_follow_oversubscription() {
+        let topo = simai16_cfg();
+        let f = Fabric::build(&topo, &leaf_spine4());
+        let down = topo.nic_bw * 4.0;
+        assert!((f.leaf_cap - down).abs() < 1e-3);
+        // 2:1 oversubscription over 4 spines.
+        assert!((f.uplink_cap - down / 2.0 / 4.0).abs() < 1e-3);
+        assert!((f.spine_cap - f.uplink_cap * 32.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ecmp_is_deterministic_and_spreads() {
+        let f = Fabric::build(&simai16_cfg(), &leaf_spine4());
+        let mut seen = [false; 4];
+        for src in 0..64 {
+            for dst in 64..128 {
+                let s = f.ecmp_spine(src, dst);
+                assert_eq!(s, f.ecmp_spine(src, dst), "deterministic");
+                assert!(s < 4);
+                seen[s] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "all spines carry some pair");
+    }
+
+    #[test]
+    fn ragged_last_pod_is_smaller() {
+        let mut topo = simai16_cfg();
+        topo.n_servers = 6; // pods of 4 → pod 1 has 2 servers
+        let f = Fabric::build(&topo, &leaf_spine4());
+        assert_eq!(f.n_pods(), 2);
+        let members: Vec<_> = f.nics_of_leaf(f.leaf_id(1, 0)).collect();
+        assert_eq!(members, vec![4 * 8, 5 * 8]);
+    }
+
+    #[test]
+    fn switch_target_labels_are_stable() {
+        assert_eq!(SwitchTarget::Leaf(3).label(), "leaf:3");
+        assert_eq!(SwitchTarget::Spine(1).label(), "spine:1");
+        assert_eq!(SwitchTarget::Uplink(3, 1).label(), "uplink:3:1");
+        assert_eq!(SwitchAction::Degrade(0.5).label(), "degrade");
+        assert_eq!(SwitchAction::Degrade(0.5).factor(), Some(0.5));
+        assert_eq!(SwitchAction::Down.factor(), None);
+    }
+}

@@ -20,6 +20,7 @@
 //! * L1 (`python/compile/kernels/`): Pallas kernels (chunk reduction, fused
 //!   linear) lowered inside the L2 graph.
 
+pub mod fabric;
 pub mod netsim;
 pub mod topology;
 pub mod util;

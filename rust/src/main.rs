@@ -8,6 +8,7 @@
 //!   scenario          [--file scenarios/x.json | --dir scenarios]
 //!                     [--golden-dir rust/tests/fixtures] [--regen] [--json]
 //!                     [--threads N]   (default: available parallelism)
+//!                     [--fabric leaf-spine|flat]   (override flat scenarios)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -162,10 +163,28 @@ fn main() -> anyhow::Result<()> {
             // (default: available parallelism; reports are bit-identical at
             // any thread count) — check the built-in invariants, and
             // optionally byte-compare each report against its golden trace.
-            use r2ccl::scenario::{compare_or_seed, run_corpus, FaultScenario, GoldenOutcome};
+            //
+            // Scenarios carrying a "cluster" spec run on the SimAI preset /
+            // fabric they declare (that is how the fabric corpus rides in
+            // run_corpus). `--fabric leaf-spine` additionally wraps every
+            // *flat* scenario onto a default leaf/spine fabric of the same
+            // server count — an ad-hoc what-if lens; golden comparisons are
+            // skipped for overridden scenarios since their traces
+            // legitimately differ from the committed flat fixtures.
+            use r2ccl::scenario::{
+                compare_or_seed, run_corpus, ClusterSpec, FaultScenario, GoldenOutcome,
+            };
             let preset = Preset::testbed();
             let threads =
                 args.get_usize("threads", r2ccl::util::par::available_threads());
+            let fabric_override = match args.get("fabric") {
+                Some(name) => {
+                    let f = r2ccl::fabric::FabricConfig::from_name(name)
+                        .map_err(|e| anyhow::anyhow!(e))?;
+                    (!f.is_ideal()).then_some(f)
+                }
+                None => None,
+            };
             let paths: Vec<std::path::PathBuf> = if let Some(f) = args.get("file") {
                 vec![f.into()]
             } else {
@@ -182,16 +201,37 @@ fn main() -> anyhow::Result<()> {
             // Parse + validate everything up front (clean per-file errors),
             // then run the whole corpus in parallel.
             let mut scenarios: Vec<FaultScenario> = Vec::with_capacity(paths.len());
+            let mut overridden: Vec<bool> = Vec::with_capacity(paths.len());
             for path in &paths {
                 let text = std::fs::read_to_string(path)?;
-                let sc = FaultScenario::from_json_str(&text)
+                let mut sc = FaultScenario::from_json_str(&text)
                     .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-                sc.validate(&preset.topo).map_err(|e| anyhow::anyhow!(e))?;
+                let mut was_overridden = false;
+                if let (Some(fabric), None) = (&fabric_override, &sc.cluster) {
+                    sc.cluster = Some(ClusterSpec {
+                        n_servers: preset.topo.n_servers,
+                        fabric: fabric.clone(),
+                    });
+                    was_overridden = true;
+                }
+                // Validate against the topology the scenario actually runs
+                // on: its declared cluster when it differs in size, else
+                // the default preset (mirrors ScenarioRunner::new).
+                let eff_topo = match &sc.cluster {
+                    Some(c) if c.n_servers != preset.topo.n_servers => {
+                        Preset::simai(c.n_servers).topo
+                    }
+                    _ => preset.topo.clone(),
+                };
+                sc.validate(&eff_topo).map_err(|e| anyhow::anyhow!(e))?;
                 scenarios.push(sc);
+                overridden.push(was_overridden);
             }
             let reports = run_corpus(&scenarios, &preset, threads);
             let mut failed = false;
-            for (sc, report) in scenarios.iter().zip(&reports) {
+            for ((sc, report), was_overridden) in
+                scenarios.iter().zip(&reports).zip(overridden)
+            {
                 println!(
                     "{:<24} iters {:>2}/{:<2}  overhead {:>7.2}%  migrations {:>2}  wasted {:>8}B  {}{}",
                     sc.name,
@@ -210,7 +250,10 @@ fn main() -> anyhow::Result<()> {
                 if args.has("json") {
                     println!("{}", report.to_json().pretty());
                 }
-                if let Some(dir) = &golden_dir {
+                if was_overridden && golden_dir.is_some() {
+                    println!("  golden comparison skipped (--fabric override changes the trace)");
+                }
+                if let Some(dir) = golden_dir.as_ref().filter(|_| !was_overridden) {
                     let trace = report.to_json().pretty() + "\n";
                     let fixture = dir.join(format!("{}.golden.json", sc.name));
                     match compare_or_seed(&fixture, &trace, args.has("regen"))? {

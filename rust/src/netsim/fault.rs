@@ -4,6 +4,7 @@
 //!
 //! The supported-failure matrix mirrors Appendix C (Table 2) of the paper.
 
+use crate::fabric::{Fabric, LeafId, SpineId, SwitchAction, SwitchTarget};
 use crate::netsim::engine::Engine;
 use crate::topology::{NicId, ResourceKey, Topology};
 
@@ -91,31 +92,135 @@ pub fn clamp_degrade_factor(f: f64) -> f64 {
 /// Ground-truth fault state of the cluster + application onto the fluid
 /// engine. The detection layer may only query it through `probe()` — the
 /// same information a real probe QP would reveal.
+///
+/// On leaf/spine fabrics the plane also tracks *switch-scoped* state:
+/// killing a leaf takes down every path through it (its member NICs lose
+/// fabric connectivity at once), degrading an uplink or a spine shrinks
+/// the capacity of the path set crossing it. Flat topologies carry no
+/// switch state and behave exactly as before.
 #[derive(Debug, Clone)]
 pub struct FaultPlane {
     states: Vec<NicState>,
+    /// The fabric shape the plane was built over (pure scalars — cheap to
+    /// clone; leaf membership is delegated to [`Fabric::leaf_of_nic`], so
+    /// the mapping rule lives in exactly one place).
+    fabric: Fabric,
+    // Switch-tier state, lazily allocated on the first switch fault:
+    // empty vectors mean "everything healthy", which keeps NIC-only runs
+    // allocation-free even on leaf/spine fabrics (§Perf, PR 4 discipline).
+    leaf_up: Vec<bool>,
+    leaf_factor: Vec<f64>,
+    spine_up: Vec<bool>,
+    spine_factor: Vec<f64>,
+    /// Per (leaf, spine) uplink liveness + degradation, `leaf * n_spines +
+    /// spine` indexed.
+    uplink_up: Vec<bool>,
+    uplink_factor: Vec<f64>,
 }
 
 impl FaultPlane {
     pub fn new(topo: &Topology) -> FaultPlane {
-        FaultPlane { states: vec![NicState::Healthy; topo.n_nics()] }
+        FaultPlane {
+            states: vec![NicState::Healthy; topo.n_nics()],
+            fabric: topo.fabric().clone(),
+            leaf_up: Vec::new(),
+            leaf_factor: Vec::new(),
+            spine_up: Vec::new(),
+            spine_factor: Vec::new(),
+            uplink_up: Vec::new(),
+            uplink_factor: Vec::new(),
+        }
     }
 
     pub fn state(&self, nic: NicId) -> NicState {
         self.states[nic]
     }
 
+    /// Allocate the switch-state tables on first use (empty = healthy).
+    fn ensure_switch_state(&mut self) {
+        if !self.fabric.is_ideal() && self.leaf_up.is_empty() {
+            let (l, s) = (self.fabric.n_leaves(), self.fabric.n_spines());
+            self.leaf_up = vec![true; l];
+            self.leaf_factor = vec![1.0; l];
+            self.spine_up = vec![true; s];
+            self.spine_factor = vec![1.0; s];
+            self.uplink_up = vec![true; l * s];
+            self.uplink_factor = vec![1.0; l * s];
+        }
+    }
+
+    /// Whether the NIC's leaf switch (if any) is alive. Flat fabrics have
+    /// no leaves and always answer `true`.
+    pub fn leaf_alive(&self, nic: NicId) -> bool {
+        self.fabric.is_ideal()
+            || self.leaf_up.is_empty()
+            || self.leaf_up[self.fabric.leaf_of_nic(nic)]
+    }
+
     pub fn is_usable(&self, nic: NicId) -> bool {
         matches!(self.states[nic], NicState::Healthy | NicState::Degraded(_))
+            && self.leaf_alive(nic)
+    }
+
+    /// The NIC's *fabric* capacity factor: 1.0 on flat fabrics; 0 when its
+    /// leaf is down; otherwise the leaf's degradation times the mean
+    /// healthy share of its uplink/spine tier. This is the planner-facing
+    /// projection of switch faults (the fluid engine carries the exact
+    /// ground truth on the switch resources themselves).
+    pub fn fabric_factor(&self, nic: NicId) -> f64 {
+        if self.fabric.is_ideal() || self.leaf_up.is_empty() {
+            return 1.0;
+        }
+        let l = self.fabric.leaf_of_nic(nic);
+        if !self.leaf_up[l] {
+            return 0.0;
+        }
+        let n_spines = self.fabric.n_spines();
+        let mut acc = 0.0;
+        for s in 0..n_spines {
+            let i = l * n_spines + s;
+            if self.uplink_up[i] && self.spine_up[s] {
+                acc += self.uplink_factor[i] * self.spine_factor[s];
+            }
+        }
+        self.leaf_factor[l] * (acc / n_spines as f64).min(1.0)
+    }
+
+    /// Whether the NIC's fabric tier is healthy enough to return traffic
+    /// to it — the reprobe gate's switch-level check: the leaf is up and
+    /// none of its uplinks are down or collapsed below `threshold`. An
+    /// element recovering while a *sibling* uplink of the same leaf is
+    /// still dead must not un-migrate the members (ECMP-pinned flows would
+    /// stall with no detection timer left). Flat fabrics and untouched
+    /// switch state always answer `true`.
+    pub fn fabric_restored(&self, nic: NicId, threshold: f64) -> bool {
+        if self.fabric.is_ideal() || self.leaf_up.is_empty() {
+            return true;
+        }
+        let l = self.fabric.leaf_of_nic(nic);
+        if !self.leaf_up[l] || self.leaf_factor[l] < threshold {
+            return false;
+        }
+        let n_spines = self.fabric.n_spines();
+        (0..n_spines).all(|s| {
+            let i = l * n_spines + s;
+            self.uplink_up[i] && self.uplink_factor[i] >= threshold
+        })
     }
 
     /// Healthy-side capacity factor (1.0 when healthy, f when degraded,
-    /// 0 when down).
+    /// 0 when down), scaled by the NIC's fabric factor on switched
+    /// fabrics.
     pub fn capacity_factor(&self, nic: NicId) -> f64 {
-        match self.states[nic] {
+        let nic_factor = match self.states[nic] {
             NicState::Healthy => 1.0,
             NicState::Degraded(f) => f,
             _ => 0.0,
+        };
+        if self.fabric.is_ideal() {
+            nic_factor
+        } else {
+            nic_factor * self.fabric_factor(nic)
         }
     }
 
@@ -161,6 +266,90 @@ impl FaultPlane {
         self.states[nic] = s;
     }
 
+    /// Record a switch-scoped fault without an engine (the plan-time path,
+    /// mirroring [`FaultPlane::note_state`]): leaf liveness/degradation,
+    /// spine degradation, per-uplink state. Malformed `Degrade` factors are
+    /// clamped like NIC degradations.
+    pub fn note_switch(&mut self, topo: &Topology, target: SwitchTarget, action: SwitchAction) {
+        assert!(
+            !topo.fabric().is_ideal(),
+            "switch faults need a leaf/spine fabric (topology is flat)"
+        );
+        self.ensure_switch_state();
+        let (up, factor): (bool, f64) = match action {
+            SwitchAction::Down => (false, 1.0),
+            SwitchAction::Up => (true, 1.0),
+            SwitchAction::Degrade(f) => (true, clamp_degrade_factor(f)),
+        };
+        match target {
+            SwitchTarget::Leaf(l) => {
+                self.leaf_up[l] = up;
+                self.leaf_factor[l] = factor;
+            }
+            SwitchTarget::Spine(s) => {
+                self.spine_up[s] = up;
+                self.spine_factor[s] = factor;
+            }
+            SwitchTarget::Uplink(l, s) => {
+                let i = l * self.fabric.n_spines() + s;
+                self.uplink_up[i] = up;
+                self.uplink_factor[i] = factor;
+            }
+        }
+    }
+
+    /// Apply a switch-scoped fault and mirror it onto the engine's switch
+    /// resources: a dead leaf takes its port pools *and* all of its uplinks
+    /// down (every path through the leaf stalls); uplink and spine events
+    /// touch exactly their own resources.
+    pub fn set_switch(
+        &mut self,
+        topo: &Topology,
+        engine: &mut Engine,
+        target: SwitchTarget,
+        action: SwitchAction,
+    ) {
+        self.note_switch(topo, target, action);
+        match target {
+            SwitchTarget::Leaf(l) => {
+                let up = self.leaf_up[l];
+                let f = self.leaf_factor[l];
+                for key in [ResourceKey::LeafIn(l), ResourceKey::LeafOut(l)] {
+                    let rid = topo.resource(key);
+                    engine.set_resource_up(rid, up);
+                    if up {
+                        engine.set_resource_factor(rid, f);
+                    }
+                }
+                for s in 0..self.fabric.n_spines() {
+                    self.mirror_uplink(topo, engine, l, s);
+                }
+            }
+            SwitchTarget::Spine(s) => {
+                let rid = topo.resource(ResourceKey::SpineSw(s));
+                engine.set_resource_up(rid, self.spine_up[s]);
+                if self.spine_up[s] {
+                    engine.set_resource_factor(rid, self.spine_factor[s]);
+                }
+            }
+            SwitchTarget::Uplink(l, s) => self.mirror_uplink(topo, engine, l, s),
+        }
+    }
+
+    /// Project one uplink's effective state (own liveness ∧ owning leaf's
+    /// liveness) onto its two engine resources.
+    fn mirror_uplink(&self, topo: &Topology, engine: &mut Engine, l: LeafId, s: SpineId) {
+        let i = l * self.fabric.n_spines() + s;
+        let up = self.uplink_up[i] && self.leaf_up[l];
+        for key in [ResourceKey::UplinkTx(l, s), ResourceKey::UplinkRx(l, s)] {
+            let rid = topo.resource(key);
+            engine.set_resource_up(rid, up);
+            if up {
+                engine.set_resource_factor(rid, self.uplink_factor[i]);
+            }
+        }
+    }
+
     /// Fail a NIC (hardware fault).
     pub fn fail_nic(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId) {
         self.set_state(topo, engine, nic, NicState::NicBroken);
@@ -184,6 +373,12 @@ impl FaultPlane {
             NicState::NicBroken => return ProbeOutcome::LocalError,
             NicState::CableBroken => return ProbeOutcome::Timeout,
             _ => {}
+        }
+        // A dead leaf looks exactly like a cut cable from the endpoint's
+        // perspective: the NIC itself is fine (no local error CQE), the
+        // probe just never comes back.
+        if !self.leaf_alive(from) || !self.leaf_alive(to) {
+            return ProbeOutcome::Timeout;
         }
         match self.states[to] {
             NicState::NicBroken | NicState::CableBroken => ProbeOutcome::Timeout,
@@ -304,6 +499,118 @@ mod tests {
         // Server 1 loses a different rail → disjoint failures (§6 scenario).
         fp.fail_nic(&topo, &mut eng, 8 + 5);
         assert_eq!(fp.rail_set(&topo, 1), vec![0, 1, 2, 3, 4, 6, 7]);
+    }
+
+    fn leaf_spine_setup() -> (Topology, Engine, FaultPlane) {
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        let topo = Topology::build_with_fabric(
+            &crate::topology::TopologyConfig::simai_a100(8),
+            &FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 2,
+                ..LeafSpineCfg::default()
+            }),
+        );
+        let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
+        let engine = Engine::new(&caps);
+        let fp = FaultPlane::new(&topo);
+        (topo, engine, fp)
+    }
+
+    #[test]
+    fn leaf_down_takes_out_every_member_nic() {
+        let (topo, mut eng, mut fp) = leaf_spine_setup();
+        let fabric = topo.fabric().clone();
+        let leaf = fabric.leaf_id(0, 3); // rail 3 of pod 0 (servers 0..4)
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Leaf(leaf), SwitchAction::Down);
+        for nic in fabric.nics_of_leaf(leaf) {
+            assert!(!fp.is_usable(nic), "nic {nic} rides the dead leaf");
+            assert_eq!(fp.capacity_factor(nic), 0.0);
+            // The NIC itself is healthy — only its fabric is gone.
+            assert_eq!(fp.state(nic), NicState::Healthy);
+            assert_eq!(fp.probe(nic, 0), ProbeOutcome::Timeout);
+        }
+        // Other rails of the same pod, and rail 3 of the other pod, are
+        // untouched.
+        assert!(fp.is_usable(0));
+        assert!(fp.is_usable(4 * 8 + 3));
+        // Engine resources mirrored.
+        assert!(!eng.resource_is_up(topo.resource(ResourceKey::LeafIn(leaf))));
+        assert!(!eng.resource_is_up(topo.resource(ResourceKey::UplinkTx(leaf, 0))));
+        // Repair restores everything.
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Leaf(leaf), SwitchAction::Up);
+        assert!(fp.is_usable(3));
+        assert!(eng.resource_is_up(topo.resource(ResourceKey::LeafIn(leaf))));
+        assert!(eng.resource_is_up(topo.resource(ResourceKey::UplinkRx(leaf, 1))));
+    }
+
+    #[test]
+    fn uplink_and_spine_degradation_shrink_fabric_factor() {
+        let (topo, mut eng, mut fp) = leaf_spine_setup();
+        let leaf = topo.fabric().leaf_id(0, 0);
+        // Degrade one of the two uplinks to 50%: mean share (1 + 0.5)/2.
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 0), SwitchAction::Degrade(0.5));
+        assert!((fp.fabric_factor(0) - 0.75).abs() < 1e-12);
+        assert!(fp.is_usable(0), "degraded fabric keeps the NIC usable");
+        // Degrade spine 1 too: (0.5 + 0.25)/2.
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Spine(1), SwitchAction::Degrade(0.25));
+        assert!((fp.fabric_factor(0) - (0.5 + 0.25) / 2.0).abs() < 1e-12);
+        // Capacity factor folds NIC and fabric state together.
+        fp.note_state(0, NicState::Degraded(0.5));
+        assert!((fp.capacity_factor(0) - 0.5 * 0.375).abs() < 1e-12);
+        // Spine degradation reaches every leaf's factor, both pods.
+        assert!(fp.fabric_factor(4 * 8) < 1.0);
+        // Restore.
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Spine(1), SwitchAction::Degrade(1.0));
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 0), SwitchAction::Up);
+        assert!((fp.fabric_factor(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_loss_raises_lost_bandwidth_fraction() {
+        let (topo, mut eng, mut fp) = leaf_spine_setup();
+        let leaf = topo.fabric().leaf_id(0, 0);
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Leaf(leaf), SwitchAction::Down);
+        // Every pod-0 server lost exactly one of 8 NICs' connectivity.
+        for s in 0..4 {
+            assert!((fp.lost_bandwidth_fraction(&topo, s) - 0.125).abs() < 1e-12, "server {s}");
+            assert_eq!(fp.rail_set(&topo, s), vec![1, 2, 3, 4, 5, 6, 7]);
+        }
+        for s in 4..8 {
+            assert_eq!(fp.lost_bandwidth_fraction(&topo, s), 0.0, "server {s}");
+        }
+    }
+
+    #[test]
+    fn fabric_restored_requires_every_sibling_uplink_back() {
+        let (topo, mut eng, mut fp) = leaf_spine_setup();
+        let leaf = topo.fabric().leaf_id(0, 0);
+        let nic = 0; // member of leaf (0, 0)
+        assert!(fp.fabric_restored(nic, 0.05), "untouched fabric is restored");
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 0), SwitchAction::Down);
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 1), SwitchAction::Down);
+        assert!(!fp.fabric_restored(nic, 0.05));
+        // One uplink back is not enough: the reprobe gate must keep the
+        // members migrated while a sibling uplink is still dead.
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 0), SwitchAction::Up);
+        assert!(!fp.fabric_restored(nic, 0.05));
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 1), SwitchAction::Up);
+        assert!(fp.fabric_restored(nic, 0.05));
+        // Collapsed degradation counts as not-restored; mild does not.
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 1), SwitchAction::Degrade(0.01));
+        assert!(!fp.fabric_restored(nic, 0.05));
+        fp.set_switch(&topo, &mut eng, SwitchTarget::Uplink(leaf, 1), SwitchAction::Degrade(0.5));
+        assert!(fp.fabric_restored(nic, 0.05));
+        // Other leaves are unaffected throughout.
+        assert!(fp.fabric_restored(4 * 8 + 1, 0.05));
+    }
+
+    #[test]
+    fn flat_topologies_have_no_switch_state() {
+        let (_, _, fp) = setup();
+        assert!(fp.leaf_alive(0));
+        assert_eq!(fp.fabric_factor(0), 1.0);
+        assert_eq!(fp.capacity_factor(0), 1.0);
     }
 
     #[test]

@@ -19,7 +19,10 @@ pub mod runner;
 pub mod spec;
 
 pub use runner::{run_corpus, IterationRecord, ScenarioReport, ScenarioRunner};
-pub use spec::{sample_multi_fault, FaultPattern, FaultScenario, ScenarioEvent, Workload};
+pub use spec::{
+    fabric_from_json, fabric_to_json, sample_multi_fault, ClusterSpec, FaultPattern,
+    FaultScenario, ScenarioEvent, SwitchScenarioEvent, Workload,
+};
 
 use std::path::{Path, PathBuf};
 

@@ -24,6 +24,7 @@ use crate::ccl::{CommGroup, CommWorld, StrategyChoice};
 use crate::collectives::exec::{FaultAction, FaultEvent, TimelineEntry};
 use crate::collectives::CollKind;
 use crate::config::Preset;
+use crate::fabric::{SwitchAction, SwitchFaultEvent, SwitchTarget};
 use crate::sim::inference::{kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, InferModel};
 use crate::sim::training::{
     scenario_main_collective, scenario_training_iteration, training_groups, ParallelConfig,
@@ -32,7 +33,7 @@ use crate::sim::training::{
 use crate::topology::{NicId, ServerId, Topology};
 use crate::util::Json;
 
-use super::spec::{FaultScenario, ScenarioEvent, Workload};
+use super::spec::{FaultScenario, ScenarioEvent, SwitchScenarioEvent, Workload};
 use super::IterOutcome;
 
 /// One iteration's record in the report.
@@ -58,6 +59,10 @@ pub struct ScenarioReport {
     pub scenario: String,
     pub seed: u64,
     pub events: Vec<ScenarioEvent>,
+    /// Compiled switch-scoped events (leaf/spine fabric scenarios only;
+    /// empty — and absent from the JSON — on flat-fabric scenarios, so
+    /// pre-fabric golden traces are byte-identical).
+    pub switch_events: Vec<SwitchScenarioEvent>,
     /// Healthy-baseline iteration time (no faults, same workload).
     pub healthy_iter_time: f64,
     /// Healthy completion time of the main collective — the base that maps
@@ -145,7 +150,17 @@ impl ScenarioReport {
         let j = Json::obj()
             .set("scenario", self.scenario.as_str())
             .set("seed", self.seed)
-            .set("events", events)
+            .set("events", events);
+        let j = if self.switch_events.is_empty() {
+            j
+        } else {
+            let mut sw = Json::arr();
+            for e in &self.switch_events {
+                sw.push(e.to_json());
+            }
+            j.set("switch_events", sw)
+        };
+        let j = j
             .set("healthy_iter_time", self.healthy_iter_time)
             .set("time_base", self.time_base)
             .set("iterations", iters)
@@ -222,11 +237,23 @@ pub struct ScenarioRunner<'a> {
 }
 
 impl<'a> ScenarioRunner<'a> {
+    /// Bind a runner to a scenario. `preset` is the *default* cluster; a
+    /// scenario carrying a [`super::spec::ClusterSpec`] runs on the SimAI
+    /// preset of its declared server count instead (its workload must fill
+    /// that cluster), over its declared fabric. A cluster spec whose
+    /// server count *matches* the default preset keeps that preset's
+    /// hardware model — so `--fabric leaf-spine` changes only the fabric,
+    /// never the NIC/GPU speeds, of a flat scenario.
     pub fn new(scenario: &'a FaultScenario, preset: &Preset) -> ScenarioRunner<'a> {
+        let preset = match &scenario.cluster {
+            Some(c) if c.n_servers != preset.topo.n_servers => Preset::simai(c.n_servers),
+            _ => preset.clone(),
+        };
+        let channels = preset.topo.nics_per_server;
         ScenarioRunner {
             scenario,
-            preset: preset.clone(),
-            channels: preset.topo.nics_per_server,
+            preset,
+            channels,
             choice: StrategyChoice::Auto,
             verify_data: true,
         }
@@ -248,7 +275,14 @@ impl<'a> ScenarioRunner<'a> {
         self
     }
 
-    fn drive(&self, world: &CommWorld, ctx: &Ctx, script: Vec<FaultEvent>, verify: bool) -> IterOutcome {
+    fn drive(
+        &self,
+        world: &CommWorld,
+        ctx: &Ctx,
+        script: Vec<FaultEvent>,
+        switch_script: Vec<SwitchFaultEvent>,
+        verify: bool,
+    ) -> IterOutcome {
         match ctx {
             Ctx::Training { par, groups, bytes_per_rank } => scenario_training_iteration(
                 world,
@@ -257,6 +291,7 @@ impl<'a> ScenarioRunner<'a> {
                 *bytes_per_rank,
                 self.choice,
                 script,
+                switch_script,
                 verify,
             ),
             Ctx::Serving { model, pair, prompt_tokens } => scenario_serving_iteration(
@@ -266,22 +301,24 @@ impl<'a> ScenarioRunner<'a> {
                 *prompt_tokens,
                 self.choice,
                 script,
+                switch_script,
             ),
         }
     }
 
     pub fn run(&self) -> ScenarioReport {
-        // Malformed scenarios (out-of-range NIC/rail/server indices) are a
-        // caller error; the CLI validates first for a clean message.
+        // Malformed scenarios (out-of-range NIC/rail/server/switch indices)
+        // are a caller error; the CLI validates first for a clean message.
         if let Err(e) = self.scenario.validate(&self.preset.topo) {
             panic!("{e}");
         }
-        let events = self.scenario.compile(&self.preset.topo);
+        let fabric_cfg = self.scenario.fabric_config();
+        let (events, switch_events) = self.scenario.compile_full(&self.preset.topo);
 
         // Healthy baseline: same workload, pristine world. `time_base` (the
         // main collective's healthy completion) maps fractional event times
         // onto executor seconds.
-        let healthy_world = CommWorld::new(&self.preset, self.channels);
+        let healthy_world = CommWorld::new_with_fabric(&self.preset, self.channels, &fabric_cfg);
         let healthy_ctx = Ctx::build(&healthy_world, &self.scenario.workload);
         let (main, main_kind, main_bytes) = healthy_ctx.main_info();
         let time_base = main
@@ -289,47 +326,92 @@ impl<'a> ScenarioRunner<'a> {
             .expect("healthy main collective must complete");
         let payload_per_iter = main_bytes.saturating_mul(main.n_ranks() as u64);
         let main_servers: Vec<ServerId> = main.servers().to_vec();
-        let healthy_out = self.drive(&healthy_world, &healthy_ctx, Vec::new(), false);
+        let healthy_out = self.drive(&healthy_world, &healthy_ctx, Vec::new(), Vec::new(), false);
         assert!(!healthy_out.crashed, "healthy baseline iteration crashed");
         let healthy_iter_time = healthy_out.time;
 
         // The scenario world: fault-plane state accumulates across
-        // iterations through `note_failure`.
-        let mut world = CommWorld::new(&self.preset, self.channels);
+        // iterations through `note_failure` / `note_switch_failure`.
+        let mut world = CommWorld::new_with_fabric(&self.preset, self.channels, &fabric_cfg);
         let ctx = Ctx::build(&world, &self.scenario.workload);
-        let topo = Topology::build(&self.preset.topo);
+        let topo = Topology::build_with_fabric(&self.preset.topo, &fabric_cfg);
         let mut usable: Vec<bool> = vec![true; topo.n_nics()];
+        let mut leaf_ok: Vec<bool> = vec![true; topo.fabric().n_leaves()];
         let mut path_lost = false;
         let mut records: Vec<IterationRecord> = Vec::new();
         let mut ei = 0usize;
+        let mut si = 0usize;
         let mut crashed = false;
         let mut total_time = 0.0f64;
 
         for k in 0..self.scenario.iters {
             let mut script: Vec<FaultEvent> = Vec::new();
+            let mut switch_script: Vec<SwitchFaultEvent> = Vec::new();
             let mut folds: Vec<ScenarioEvent> = Vec::new();
-            while ei < events.len() && events[ei].at_iter < (k + 1) as f64 {
-                let e = events[ei];
-                ei += 1;
-                note_ground_truth(&mut usable, e.nic, e.action);
-                if !path_exists(&topo, &usable, &main_servers) {
-                    path_lost = true;
-                }
-                let frac = e.at_iter - k as f64;
-                if frac <= 0.0 {
-                    // On-the-boundary events are known before the iteration
-                    // starts: plan-time knowledge, no mid-flight injection.
-                    world.note_failure(e.nic, e.action);
+            let mut switch_folds: Vec<SwitchScenarioEvent> = Vec::new();
+            // Merge the NIC and switch event streams by time: the
+            // no-crash-while-a-path-exists ground truth must only ever be
+            // evaluated against states that actually coexisted (a leaf
+            // repair at 2.2 must land before NIC failures at 2.8).
+            loop {
+                let nic_due = ei < events.len() && events[ei].at_iter < (k + 1) as f64;
+                let sw_due =
+                    si < switch_events.len() && switch_events[si].at_iter < (k + 1) as f64;
+                let take_switch = match (nic_due, sw_due) {
+                    (false, false) => break,
+                    (true, true) => switch_events[si].at_iter < events[ei].at_iter,
+                    (false, true) => true,
+                    (true, false) => false,
+                };
+                if take_switch {
+                    let e = switch_events[si];
+                    si += 1;
+                    note_switch_ground_truth(&mut leaf_ok, e.target, e.action);
+                    if !path_exists(&topo, &usable, &leaf_ok, &main_servers) {
+                        path_lost = true;
+                    }
+                    let frac = e.at_iter - k as f64;
+                    if frac <= 0.0 {
+                        world.note_switch_failure(e.target, e.action);
+                    } else {
+                        switch_script.push(SwitchFaultEvent {
+                            at: frac * time_base,
+                            target: e.target,
+                            action: e.action,
+                        });
+                        switch_folds.push(e);
+                    }
                 } else {
-                    script.push(FaultEvent { at: frac * time_base, nic: e.nic, action: e.action });
-                    folds.push(e);
+                    let e = events[ei];
+                    ei += 1;
+                    note_ground_truth(&mut usable, e.nic, e.action);
+                    if !path_exists(&topo, &usable, &leaf_ok, &main_servers) {
+                        path_lost = true;
+                    }
+                    let frac = e.at_iter - k as f64;
+                    if frac <= 0.0 {
+                        // On-the-boundary events are known before the
+                        // iteration starts: plan-time knowledge, no
+                        // mid-flight injection.
+                        world.note_failure(e.nic, e.action);
+                    } else {
+                        script.push(FaultEvent {
+                            at: frac * time_base,
+                            nic: e.nic,
+                            action: e.action,
+                        });
+                        folds.push(e);
+                    }
                 }
             }
-            let out = self.drive(&world, &ctx, script, self.verify_data);
+            let out = self.drive(&world, &ctx, script, switch_script, self.verify_data);
             // Mid-flight events become standing knowledge for the *next*
             // iteration (the OOB broadcast of §4.1).
             for e in folds {
                 world.note_failure(e.nic, e.action);
+            }
+            for e in switch_folds {
+                world.note_switch_failure(e.target, e.action);
             }
             total_time += out.time;
             records.push(IterationRecord {
@@ -370,6 +452,7 @@ impl<'a> ScenarioRunner<'a> {
             scenario: self.scenario.name.clone(),
             seed: self.scenario.seed,
             events,
+            switch_events,
             healthy_iter_time,
             time_base,
             total_time,
@@ -415,8 +498,28 @@ fn note_ground_truth(usable: &mut [bool], nic: NicId, action: FaultAction) {
     }
 }
 
-fn path_exists(topo: &Topology, usable: &[bool], servers: &[ServerId]) -> bool {
-    servers.iter().all(|&s| topo.nics_of_server(s).any(|n| usable[n]))
+/// Switch-scoped ground truth: only a leaf outage removes connectivity
+/// (spine/uplink degradations shrink capacity but leave paths alive).
+fn note_switch_ground_truth(leaf_ok: &mut [bool], target: SwitchTarget, action: SwitchAction) {
+    if let SwitchTarget::Leaf(l) = target {
+        match action {
+            SwitchAction::Down => leaf_ok[l] = false,
+            SwitchAction::Up => leaf_ok[l] = true,
+            SwitchAction::Degrade(_) => {}
+        }
+    }
+}
+
+/// A NIC is connected when it is itself usable *and* its leaf (if the
+/// fabric has one) is alive.
+fn nic_connected(topo: &Topology, usable: &[bool], leaf_ok: &[bool], n: NicId) -> bool {
+    usable[n] && (topo.fabric().is_ideal() || leaf_ok[topo.fabric().leaf_of_nic(n)])
+}
+
+fn path_exists(topo: &Topology, usable: &[bool], leaf_ok: &[bool], servers: &[ServerId]) -> bool {
+    servers
+        .iter()
+        .all(|&s| topo.nics_of_server(s).any(|n| nic_connected(topo, usable, leaf_ok, n)))
 }
 
 #[cfg(test)]
@@ -431,6 +534,7 @@ mod tests {
             iters,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
+            cluster: None,
             patterns,
         }
     }
@@ -525,6 +629,7 @@ mod tests {
             iters: 4,
             workload: Workload::Serving { prompt_tokens: 2000 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 1,
@@ -537,5 +642,81 @@ mod tests {
         assert!(rep.iterations.iter().all(|r| r.time > 0.0));
         assert_eq!(rep.iterations[1].migrations, 1);
         assert!(rep.wire_bytes > 0);
+    }
+
+    fn leaf_spine16(patterns: Vec<FaultPattern>, iters: usize, seed: u64) -> FaultScenario {
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        use crate::scenario::spec::ClusterSpec;
+        FaultScenario {
+            name: "fabric-unit".into(),
+            seed,
+            iters,
+            // TP intra-server, DP one rank per server: the dominant DP
+            // AllReduce rings over all 16 servers.
+            workload: Workload::Training { tp: 8, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            cluster: Some(ClusterSpec {
+                n_servers: 16,
+                fabric: FabricConfig::leaf_spine_with(LeafSpineCfg {
+                    pod_size: 4,
+                    spines: 4,
+                    oversubscription: 2.0,
+                    ..LeafSpineCfg::default()
+                }),
+            }),
+            patterns,
+        }
+    }
+
+    #[test]
+    fn leaf_switch_down_at_16_servers_migrates_without_crash() {
+        // The acceptance scenario: a mid-iteration leaf outage on a
+        // 16-server leaf/spine cluster. Every member NIC of the dead leaf
+        // must migrate onto surviving rails; the run must stay lossless and
+        // alive (every server still has 7 connected rails).
+        let sc = leaf_spine16(
+            vec![FaultPattern::LeafSwitchDown { pod: 0, rail: 0, at: 1.4, repair_after: None }],
+            4,
+            5,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed && !rep.path_lost);
+        assert!(!rep.switch_events.is_empty());
+        assert!(rep.iterations[1].migrations >= 1, "leaf outage must migrate");
+        assert!(rep.lossless);
+        // Later iterations plan around the standing leaf loss: no further
+        // migrations, non-Standard strategy.
+        for r in &rep.iterations[2..] {
+            assert_eq!(r.migrations, 0, "re-planned iterations must not migrate");
+            assert_ne!(r.strategy, "Standard");
+        }
+        // The report JSON carries the switch events (new fixtures only).
+        let j = rep.to_json().pretty();
+        assert!(j.contains("switch_events"));
+        assert!(j.contains("leaf:0"));
+    }
+
+    #[test]
+    fn flat_reports_omit_switch_events_key() {
+        let sc = dp16(vec![], 2, 1);
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.switch_events.is_empty());
+        assert!(!rep.to_json().pretty().contains("switch_events"));
+    }
+
+    #[test]
+    fn whole_pod_leaf_loss_crashes_with_path_lost() {
+        // Killing all 8 leaves of pod 0 leaves its servers with no fabric
+        // connectivity at all: the run must crash, and the invariant
+        // checker must accept it because the path was genuinely lost.
+        let patterns = (0..8)
+            .map(|rail| FaultPattern::LeafSwitchDown { pod: 0, rail, at: 1.2, repair_after: None })
+            .collect();
+        let sc = leaf_spine16(patterns, 3, 9);
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.crashed);
+        assert!(rep.path_lost);
+        rep.check_invariants().unwrap();
     }
 }

@@ -13,6 +13,7 @@
 //! dslab's simulation idiom.
 
 use crate::collectives::exec::FaultAction;
+use crate::fabric::{Fabric, FabricConfig, FabricMode, LeafSpineCfg, SwitchAction, SwitchTarget};
 use crate::topology::{NicId, TopologyConfig};
 use crate::util::{Json, Rng};
 
@@ -33,6 +34,28 @@ impl ScenarioEvent {
         let j = Json::obj()
             .set("at_iter", self.at_iter)
             .set("nic", self.nic)
+            .set("action", self.action.label());
+        match self.action.factor() {
+            Some(f) => j.set("factor", f),
+            None => j,
+        }
+    }
+}
+
+/// One compiled *switch-scoped* fault occurrence (leaf/spine fabrics),
+/// in the same iteration-relative time base as [`ScenarioEvent`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchScenarioEvent {
+    pub at_iter: f64,
+    pub target: SwitchTarget,
+    pub action: SwitchAction,
+}
+
+impl SwitchScenarioEvent {
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj()
+            .set("at_iter", self.at_iter)
+            .set("target", self.target.label())
             .set("action", self.action.label());
         match self.action.factor() {
             Some(f) => j.set("factor", f),
@@ -71,6 +94,33 @@ pub enum FaultPattern {
     /// `k` NICs drawn uniformly at random over the whole cluster go down at
     /// `at` — the Fig 10 Monte-Carlo pattern expressed as a scenario.
     RandomMultiFault { k: usize, at: f64 },
+    /// A leaf (ToR) switch outage: rail `rail` of pod `pod` goes dark at
+    /// `at`, cutting the fabric connectivity of *every* member NIC at once;
+    /// optionally repaired `repair_after` later. Requires a leaf/spine
+    /// fabric ([`ClusterSpec`]).
+    LeafSwitchDown { pod: usize, rail: usize, at: f64, repair_after: Option<f64> },
+    /// A spine switch degrades to `factor` of its capacity at `at`,
+    /// recovering `recover_after` later when given. Every cross-leaf path
+    /// ECMP-pinned to that spine slows down.
+    SpineDegrade { spine: usize, at: f64, factor: f64, recover_after: Option<f64> },
+    /// A leaf→spine uplink flaps: `cycles` down/up cycles starting at
+    /// `start`, each edge jittered by a seeded uniform ±`jitter`. Always
+    /// ends up — flows pinned to the uplink stall and resume.
+    UplinkFlap {
+        pod: usize,
+        rail: usize,
+        spine: usize,
+        start: f64,
+        cycles: usize,
+        down: f64,
+        up: f64,
+        jitter: f64,
+    },
+    /// Fabric-wide oversubscription saturation (incast): every uplink in
+    /// the cluster degrades to `factor` at `at` and recovers after
+    /// `duration` — the congestion profile of an oversubscribed spine tier
+    /// under a synchronized collective burst.
+    OversubSaturation { at: f64, factor: f64, duration: f64 },
 }
 
 /// The seeded NIC draw shared by [`FaultPattern::RandomMultiFault`] and the
@@ -91,6 +141,100 @@ impl FaultPattern {
             FaultPattern::Cascade { .. } => "cascade",
             FaultPattern::RepairWindow { .. } => "repair_window",
             FaultPattern::RandomMultiFault { .. } => "random_multi_fault",
+            FaultPattern::LeafSwitchDown { .. } => "leaf_switch_down",
+            FaultPattern::SpineDegrade { .. } => "spine_degrade",
+            FaultPattern::UplinkFlap { .. } => "uplink_flap",
+            FaultPattern::OversubSaturation { .. } => "oversub_saturation",
+        }
+    }
+
+    /// Whether this pattern targets the switch tier (and therefore needs a
+    /// leaf/spine fabric).
+    pub fn is_switch_scoped(&self) -> bool {
+        matches!(
+            self,
+            FaultPattern::LeafSwitchDown { .. }
+                | FaultPattern::SpineDegrade { .. }
+                | FaultPattern::UplinkFlap { .. }
+                | FaultPattern::OversubSaturation { .. }
+        )
+    }
+
+    /// Expand a switch-scoped pattern. NIC-scoped patterns emit nothing
+    /// here (and vice versa in [`FaultPattern::compile`]); both draw from
+    /// the same RNG stream in declaration order, so the compiled scripts
+    /// stay a pure function of `(scenario, seed, topology, fabric)`.
+    fn compile_switch(&self, fabric: &Fabric, rng: &mut Rng, out: &mut Vec<SwitchScenarioEvent>) {
+        match self {
+            FaultPattern::LeafSwitchDown { pod, rail, at, repair_after } => {
+                let leaf = fabric.leaf_id(*pod, *rail);
+                out.push(SwitchScenarioEvent {
+                    at_iter: *at,
+                    target: SwitchTarget::Leaf(leaf),
+                    action: SwitchAction::Down,
+                });
+                if let Some(after) = repair_after {
+                    out.push(SwitchScenarioEvent {
+                        at_iter: at + after,
+                        target: SwitchTarget::Leaf(leaf),
+                        action: SwitchAction::Up,
+                    });
+                }
+            }
+            FaultPattern::SpineDegrade { spine, at, factor, recover_after } => {
+                out.push(SwitchScenarioEvent {
+                    at_iter: *at,
+                    target: SwitchTarget::Spine(*spine),
+                    action: SwitchAction::Degrade(*factor),
+                });
+                if let Some(after) = recover_after {
+                    out.push(SwitchScenarioEvent {
+                        at_iter: at + after,
+                        target: SwitchTarget::Spine(*spine),
+                        action: SwitchAction::Degrade(1.0),
+                    });
+                }
+            }
+            FaultPattern::UplinkFlap { pod, rail, spine, start, cycles, down, up, jitter } => {
+                let target = SwitchTarget::Uplink(fabric.leaf_id(*pod, *rail), *spine);
+                let mut t = *start;
+                let mut prev = 0.0f64;
+                for _ in 0..*cycles {
+                    let down_at = (t + rng.range_f64(-*jitter, *jitter)).max(prev + 1e-3);
+                    let up_at =
+                        (t + down + rng.range_f64(-*jitter, *jitter)).max(down_at + 1e-3);
+                    out.push(SwitchScenarioEvent {
+                        at_iter: down_at,
+                        target,
+                        action: SwitchAction::Down,
+                    });
+                    out.push(SwitchScenarioEvent {
+                        at_iter: up_at,
+                        target,
+                        action: SwitchAction::Up,
+                    });
+                    prev = up_at;
+                    t += down + up;
+                }
+            }
+            FaultPattern::OversubSaturation { at, factor, duration } => {
+                for l in 0..fabric.n_leaves() {
+                    for s in 0..fabric.n_spines() {
+                        let target = SwitchTarget::Uplink(l, s);
+                        out.push(SwitchScenarioEvent {
+                            at_iter: *at,
+                            target,
+                            action: SwitchAction::Degrade(*factor),
+                        });
+                        out.push(SwitchScenarioEvent {
+                            at_iter: at + duration,
+                            target,
+                            action: SwitchAction::Degrade(1.0),
+                        });
+                    }
+                }
+            }
+            _ => {}
         }
     }
 
@@ -196,6 +340,11 @@ impl FaultPattern {
                     out.push(ScenarioEvent { at_iter: *at, nic, action: FaultAction::FailNic });
                 }
             }
+            // Switch-scoped patterns compile through `compile_switch`.
+            FaultPattern::LeafSwitchDown { .. }
+            | FaultPattern::SpineDegrade { .. }
+            | FaultPattern::UplinkFlap { .. }
+            | FaultPattern::OversubSaturation { .. } => {}
         }
     }
 
@@ -244,6 +393,32 @@ impl FaultPattern {
                 j.set("nic", *nic).set("at", *at).set("down_for", *down_for)
             }
             FaultPattern::RandomMultiFault { k, at } => j.set("k", *k).set("at", *at),
+            FaultPattern::LeafSwitchDown { pod, rail, at, repair_after } => {
+                let j = j.set("pod", *pod).set("rail", *rail).set("at", *at);
+                match repair_after {
+                    Some(a) => j.set("repair_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::SpineDegrade { spine, at, factor, recover_after } => {
+                let j = j.set("spine", *spine).set("at", *at).set("factor", *factor);
+                match recover_after {
+                    Some(a) => j.set("recover_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::UplinkFlap { pod, rail, spine, start, cycles, down, up, jitter } => j
+                .set("pod", *pod)
+                .set("rail", *rail)
+                .set("spine", *spine)
+                .set("start", *start)
+                .set("cycles", *cycles)
+                .set("down", *down)
+                .set("up", *up)
+                .set("jitter", *jitter),
+            FaultPattern::OversubSaturation { at, factor, duration } => {
+                j.set("at", *at).set("factor", *factor).set("duration", *duration)
+            }
         }
     }
 
@@ -296,6 +471,33 @@ impl FaultPattern {
             "random_multi_fault" => Ok(FaultPattern::RandomMultiFault {
                 k: req_usize(j, "k")?,
                 at: req_f64(j, "at")?,
+            }),
+            "leaf_switch_down" => Ok(FaultPattern::LeafSwitchDown {
+                pod: req_usize(j, "pod")?,
+                rail: req_usize(j, "rail")?,
+                at: req_f64(j, "at")?,
+                repair_after: j.get("repair_after").and_then(Json::as_f64),
+            }),
+            "spine_degrade" => Ok(FaultPattern::SpineDegrade {
+                spine: req_usize(j, "spine")?,
+                at: req_f64(j, "at")?,
+                factor: req_f64(j, "factor")?,
+                recover_after: j.get("recover_after").and_then(Json::as_f64),
+            }),
+            "uplink_flap" => Ok(FaultPattern::UplinkFlap {
+                pod: req_usize(j, "pod")?,
+                rail: req_usize(j, "rail")?,
+                spine: req_usize(j, "spine")?,
+                start: req_f64(j, "start")?,
+                cycles: req_usize(j, "cycles")?,
+                down: req_f64(j, "down")?,
+                up: req_f64(j, "up")?,
+                jitter: req_f64(j, "jitter")?,
+            }),
+            "oversub_saturation" => Ok(FaultPattern::OversubSaturation {
+                at: req_f64(j, "at")?,
+                factor: req_f64(j, "factor")?,
+                duration: req_f64(j, "duration")?,
             }),
             other => Err(format!("unknown pattern kind {other:?}")),
         }
@@ -351,6 +553,101 @@ impl Workload {
     }
 }
 
+/// The cluster a scenario runs on when it outgrows the default preset: a
+/// SimAI-style cluster of `n_servers` (8×A100 + 8×NIC each) over an
+/// explicit inter-server fabric. Scenarios without a [`ClusterSpec`] run on
+/// the runner's default preset over the flat fabric — byte-identical to the
+/// pre-fabric behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Server count of the `Preset::simai` cluster.
+    pub n_servers: usize,
+    pub fabric: FabricConfig,
+}
+
+impl ClusterSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n_servers", self.n_servers)
+            .set("fabric", fabric_to_json(&self.fabric))
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterSpec, String> {
+        let n_servers = req_usize(j, "n_servers")?;
+        if n_servers < 1 {
+            return Err("cluster: n_servers must be >= 1".to_string());
+        }
+        Ok(ClusterSpec {
+            n_servers,
+            fabric: match j.get("fabric") {
+                Some(f) => fabric_from_json(f)?,
+                None => FabricConfig::ideal(),
+            },
+        })
+    }
+}
+
+/// Deterministic JSON form of a fabric config (scenario files).
+pub fn fabric_to_json(cfg: &FabricConfig) -> Json {
+    match &cfg.mode {
+        FabricMode::Ideal => Json::obj().set("mode", "flat"),
+        FabricMode::LeafSpine(ls) => Json::obj()
+            .set("mode", "leaf_spine")
+            .set("pod_size", ls.pod_size)
+            .set("spines", ls.spines)
+            .set("oversubscription", ls.oversubscription)
+            .set("switch_latency", ls.switch_latency)
+            .set("uplink_latency", ls.uplink_latency)
+            .set("ecmp_seed", ls.ecmp_seed),
+    }
+}
+
+/// Inverse of [`fabric_to_json`]; leaf/spine shape fields default to
+/// [`LeafSpineCfg::default`] when omitted.
+pub fn fabric_from_json(j: &Json) -> Result<FabricConfig, String> {
+    match req_str(j, "mode")? {
+        "flat" | "ideal" => Ok(FabricConfig::ideal()),
+        "leaf_spine" | "leaf-spine" => {
+            let d = LeafSpineCfg::default();
+            // Range-check here so a malformed scenario file surfaces as a
+            // clean per-file error instead of tripping `Fabric::build`'s
+            // asserts deep inside validation (the contract every other
+            // scenario field follows).
+            let cfg = LeafSpineCfg {
+                pod_size: j.get("pod_size").and_then(Json::as_usize).unwrap_or(d.pod_size),
+                spines: j.get("spines").and_then(Json::as_usize).unwrap_or(d.spines),
+                oversubscription: j
+                    .get("oversubscription")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.oversubscription),
+                switch_latency: j
+                    .get("switch_latency")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.switch_latency),
+                uplink_latency: j
+                    .get("uplink_latency")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(d.uplink_latency),
+                ecmp_seed: j.get("ecmp_seed").and_then(Json::as_u64).unwrap_or(d.ecmp_seed),
+            };
+            if cfg.pod_size < 1 {
+                return Err("fabric: pod_size must be >= 1".to_string());
+            }
+            if cfg.spines < 1 {
+                return Err("fabric: spines must be >= 1".to_string());
+            }
+            if !(cfg.oversubscription > 0.0 && cfg.oversubscription.is_finite()) {
+                return Err("fabric: oversubscription must be a positive finite ratio".to_string());
+            }
+            if !(cfg.switch_latency >= 0.0 && cfg.uplink_latency >= 0.0) {
+                return Err("fabric: latencies must be non-negative".to_string());
+            }
+            Ok(FabricConfig::leaf_spine_with(cfg))
+        }
+        other => Err(format!("unknown fabric mode {other:?}")),
+    }
+}
+
 /// A complete declarative scenario: patterns + seed + the workload and
 /// horizon the runner drives. Seeds must stay below 2^53 (they ride JSON
 /// numbers).
@@ -364,14 +661,87 @@ pub struct FaultScenario {
     /// Optional mean-overhead bound asserted by
     /// `ScenarioReport::check_invariants`.
     pub max_overhead: Option<f64>,
+    /// Optional cluster override: server count + inter-server fabric.
+    /// `None` = the runner's default preset over the flat fabric.
+    pub cluster: Option<ClusterSpec>,
     pub patterns: Vec<FaultPattern>,
 }
 
 impl FaultPattern {
-    /// Check every NIC / rail / server index against the topology shape, so
-    /// a malformed scenario file surfaces as an error instead of an
-    /// out-of-bounds panic deep inside the runner.
-    fn validate(&self, topo: &TopologyConfig) -> Result<(), String> {
+    /// Check every NIC / rail / server / switch index against the topology
+    /// and fabric shape, so a malformed scenario file surfaces as an error
+    /// instead of an out-of-bounds panic deep inside the runner.
+    fn validate(&self, topo: &TopologyConfig, fabric: &Fabric) -> Result<(), String> {
+        if self.is_switch_scoped() {
+            if fabric.is_ideal() {
+                return Err(format!(
+                    "{}: switch-scoped pattern requires a leaf_spine fabric \
+                     (scenario runs on the flat fabric)",
+                    self.kind()
+                ));
+            }
+            let pod_rail = |pod: usize, rail: usize| -> Result<(), String> {
+                if pod >= fabric.n_pods() {
+                    return Err(format!(
+                        "{}: pod {pod} out of range (fabric has {})",
+                        self.kind(),
+                        fabric.n_pods()
+                    ));
+                }
+                if rail >= topo.nics_per_server {
+                    return Err(format!(
+                        "{}: rail {rail} out of range ({} NICs per server)",
+                        self.kind(),
+                        topo.nics_per_server
+                    ));
+                }
+                Ok(())
+            };
+            let spine_ok = |spine: usize| -> Result<(), String> {
+                if spine >= fabric.n_spines() {
+                    return Err(format!(
+                        "{}: spine {spine} out of range (fabric has {})",
+                        self.kind(),
+                        fabric.n_spines()
+                    ));
+                }
+                Ok(())
+            };
+            let factor_ok = |factor: f64| -> Result<(), String> {
+                if factor.is_finite() && factor > 0.0 && factor <= 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("{}: factor must be a finite value in (0, 1]", self.kind()))
+                }
+            };
+            return match self {
+                FaultPattern::LeafSwitchDown { pod, rail, .. } => pod_rail(*pod, *rail),
+                FaultPattern::SpineDegrade { spine, factor, .. } => {
+                    spine_ok(*spine)?;
+                    factor_ok(*factor)?;
+                    // Spines have no migration path (ECMP cannot re-pin
+                    // around one), so a factor collapsed below the
+                    // fluctuation threshold would crawl effectively
+                    // forever; leaf/uplink faults cover collapse
+                    // scenarios.
+                    let floor = crate::config::TimingConfig::default().degrade_detect_threshold;
+                    if *factor < floor {
+                        return Err(format!(
+                            "spine_degrade: factor {factor} is below the fluctuation \
+                             threshold {floor}; spines support partial degradation only — \
+                             use leaf/uplink patterns for collapse scenarios"
+                        ));
+                    }
+                    Ok(())
+                }
+                FaultPattern::UplinkFlap { pod, rail, spine, .. } => {
+                    pod_rail(*pod, *rail)?;
+                    spine_ok(*spine)
+                }
+                FaultPattern::OversubSaturation { factor, .. } => factor_ok(*factor),
+                _ => unreachable!(),
+            };
+        }
         let total = topo.n_servers * topo.nics_per_server;
         let nic_ok = |nic: usize| {
             if nic < total {
@@ -407,17 +777,39 @@ impl FaultPattern {
                 servers.as_deref().map_or(Ok(()), servers_ok)
             }
             FaultPattern::RandomMultiFault { .. } => Ok(()),
+            // Switch-scoped patterns were fully handled above.
+            _ => unreachable!(),
         }
     }
 }
 
 impl FaultScenario {
-    /// Validate every pattern against the topology shape. Called by the
-    /// runner (panics with the message on library misuse) and by the CLI
-    /// (reported as a clean error for user-authored scenario files).
+    /// The fabric this scenario's topology is built over.
+    pub fn fabric_config(&self) -> FabricConfig {
+        self.cluster.as_ref().map(|c| c.fabric.clone()).unwrap_or_else(FabricConfig::ideal)
+    }
+
+    /// Validate every pattern against the topology and fabric shape. Called
+    /// by the runner (panics with the message on library misuse) and by the
+    /// CLI (reported as a clean error for user-authored scenario files).
     pub fn validate(&self, topo: &TopologyConfig) -> Result<(), String> {
+        if let Some(cluster) = &self.cluster {
+            if cluster.n_servers != topo.n_servers {
+                return Err(format!(
+                    "scenario {:?}: cluster declares {} servers but runs on a {}-server topology",
+                    self.name, cluster.n_servers, topo.n_servers
+                ));
+            }
+            if matches!(self.workload, Workload::Serving { .. }) && cluster.n_servers != 2 {
+                return Err(format!(
+                    "scenario {:?}: the PD-disaggregated serving workload needs a 2-server cluster",
+                    self.name
+                ));
+            }
+        }
+        let fabric = Fabric::build(topo, &self.fabric_config());
         for p in &self.patterns {
-            p.validate(topo).map_err(|e| format!("scenario {:?}: {e}", self.name))?;
+            p.validate(topo, &fabric).map_err(|e| format!("scenario {:?}: {e}", self.name))?;
         }
         Ok(())
     }
@@ -425,12 +817,31 @@ impl FaultScenario {
     /// Expand the declarative patterns into a concrete, deterministic event
     /// script. Events are ordered by time (ties by NIC, then action label),
     /// so the compiled script — and everything downstream of it — is a pure
-    /// function of `(scenario, seed, topology shape)`.
+    /// function of `(scenario, seed, topology shape)`. Switch-scoped
+    /// patterns are dropped here; use [`FaultScenario::compile_full`] to
+    /// get both scripts.
     pub fn compile(&self, topo: &TopologyConfig) -> Vec<ScenarioEvent> {
+        self.compile_full(topo).0
+    }
+
+    /// Expand the declarative patterns into the NIC-level *and*
+    /// switch-level event scripts, both deterministic: every pattern draws
+    /// from one seeded RNG stream in declaration order, and each script is
+    /// sorted by time with total tie-breaking.
+    pub fn compile_full(
+        &self,
+        topo: &TopologyConfig,
+    ) -> (Vec<ScenarioEvent>, Vec<SwitchScenarioEvent>) {
+        let fabric = Fabric::build(topo, &self.fabric_config());
         let mut rng = Rng::new(self.seed);
         let mut out = Vec::new();
+        let mut switch_out = Vec::new();
         for p in &self.patterns {
-            p.compile(topo, &mut rng, &mut out);
+            if p.is_switch_scoped() {
+                p.compile_switch(&fabric, &mut rng, &mut switch_out);
+            } else {
+                p.compile(topo, &mut rng, &mut out);
+            }
         }
         out.sort_by(|a, b| {
             a.at_iter
@@ -438,7 +849,13 @@ impl FaultScenario {
                 .then(a.nic.cmp(&b.nic))
                 .then(a.action.label().cmp(b.action.label()))
         });
-        out
+        switch_out.sort_by(|a, b| {
+            a.at_iter
+                .total_cmp(&b.at_iter)
+                .then(a.target.sort_key().cmp(&b.target.sort_key()))
+                .then(a.action.label().cmp(b.action.label()))
+        });
+        (out, switch_out)
     }
 
     pub fn to_json(&self) -> Json {
@@ -453,6 +870,10 @@ impl FaultScenario {
             .set("workload", self.workload.to_json());
         let j = match self.max_overhead {
             Some(m) => j.set("max_overhead", m),
+            None => j,
+        };
+        let j = match &self.cluster {
+            Some(c) => j.set("cluster", c.to_json()),
             None => j,
         };
         j.set("patterns", patterns)
@@ -474,6 +895,10 @@ impl FaultScenario {
                 j.get("workload").ok_or_else(|| "missing \"workload\"".to_string())?,
             )?,
             max_overhead: j.get("max_overhead").and_then(Json::as_f64),
+            cluster: match j.get("cluster") {
+                Some(c) => Some(ClusterSpec::from_json(c)?),
+                None => None,
+            },
             patterns,
         })
     }
@@ -535,6 +960,7 @@ mod tests {
             iters: 6,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![
                 FaultPattern::Flapping {
                     nic: 0,
@@ -572,6 +998,7 @@ mod tests {
             iters: 4,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![FaultPattern::Flapping {
                 nic: 0,
                 start: 0.5,
@@ -592,6 +1019,7 @@ mod tests {
             iters: 4,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![FaultPattern::CorrelatedRail {
                 rail: 3,
                 servers: vec![0, 1],
@@ -620,6 +1048,7 @@ mod tests {
             iters: 8,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.8,
                 count: 4,
@@ -651,6 +1080,7 @@ mod tests {
             iters: 8,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![FaultPattern::DegradeRamp {
                 nic: 2,
                 start: 1.0,
@@ -679,6 +1109,7 @@ mod tests {
             iters: 2,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![p],
         };
         let bad_nic =
@@ -712,6 +1143,7 @@ mod tests {
             iters: 10,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
+            cluster: None,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.5,
                 count: 3,
@@ -745,6 +1177,7 @@ mod tests {
             iters: 8,
             workload: Workload::Serving { prompt_tokens: 2000 },
             max_overhead: Some(2.5),
+            cluster: None,
             patterns: vec![
                 FaultPattern::OneShot { at: 1.35, nic: 0, action: FaultAction::Degrade(0.4) },
                 FaultPattern::Flapping {
@@ -784,5 +1217,149 @@ mod tests {
         let s = sc.to_json().pretty();
         let back = FaultScenario::from_json_str(&s).unwrap();
         assert_eq!(sc, back);
+    }
+
+    fn cluster16() -> Option<ClusterSpec> {
+        Some(ClusterSpec {
+            n_servers: 16,
+            fabric: FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 4,
+                oversubscription: 2.0,
+                ..LeafSpineCfg::default()
+            }),
+        })
+    }
+
+    fn fabric_scenario(patterns: Vec<FaultPattern>, seed: u64) -> FaultScenario {
+        FaultScenario {
+            name: "fabric".into(),
+            seed,
+            iters: 4,
+            workload: Workload::Training { tp: 8, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            cluster: cluster16(),
+            patterns,
+        }
+    }
+
+    #[test]
+    fn switch_patterns_roundtrip_with_cluster() {
+        let sc = fabric_scenario(
+            vec![
+                FaultPattern::LeafSwitchDown { pod: 0, rail: 2, at: 1.4, repair_after: Some(1.5) },
+                FaultPattern::SpineDegrade { spine: 1, at: 0.8, factor: 0.3, recover_after: None },
+                FaultPattern::UplinkFlap {
+                    pod: 1,
+                    rail: 0,
+                    spine: 2,
+                    start: 0.5,
+                    cycles: 2,
+                    down: 0.3,
+                    up: 0.5,
+                    jitter: 0.05,
+                },
+                FaultPattern::OversubSaturation { at: 1.2, factor: 0.4, duration: 1.0 },
+            ],
+            7,
+        );
+        let s = sc.to_json().pretty();
+        let back = FaultScenario::from_json_str(&s).unwrap();
+        assert_eq!(sc, back);
+    }
+
+    #[test]
+    fn switch_patterns_compile_to_sorted_switch_events() {
+        let sc = fabric_scenario(
+            vec![
+                FaultPattern::LeafSwitchDown { pod: 0, rail: 2, at: 1.4, repair_after: Some(1.5) },
+                FaultPattern::UplinkFlap {
+                    pod: 1,
+                    rail: 0,
+                    spine: 2,
+                    start: 0.5,
+                    cycles: 2,
+                    down: 0.3,
+                    up: 0.5,
+                    jitter: 0.05,
+                },
+                // One NIC-scoped pattern rides along.
+                FaultPattern::OneShot { at: 0.9, nic: 3, action: FaultAction::FailNic },
+            ],
+            11,
+        );
+        let topo = TopologyConfig::simai_a100(16);
+        sc.validate(&topo).unwrap();
+        let (nic_events, sw) = sc.compile_full(&topo);
+        assert_eq!(nic_events.len(), 1, "only the one-shot is NIC-scoped");
+        // Leaf down + up, 2 flap cycles × 2 edges.
+        assert_eq!(sw.len(), 2 + 4);
+        assert!(sw.windows(2).all(|w| w[0].at_iter <= w[1].at_iter), "sorted");
+        // Deterministic: same seed ⇒ same script.
+        assert_eq!(sc.compile_full(&topo).1, sw);
+        // Leaf target resolves pod/rail through the fabric.
+        let fabric = Fabric::build(&topo, &sc.fabric_config());
+        assert!(sw
+            .iter()
+            .any(|e| e.target == SwitchTarget::Leaf(fabric.leaf_id(0, 2))
+                && e.action == SwitchAction::Down));
+        // Flap edges alternate down/up on the uplink, strictly ordered.
+        let flap: Vec<_> = sw
+            .iter()
+            .filter(|e| matches!(e.target, SwitchTarget::Uplink(..)))
+            .collect();
+        assert_eq!(flap.len(), 4);
+        for (i, e) in flap.iter().enumerate() {
+            let want = if i % 2 == 0 { SwitchAction::Down } else { SwitchAction::Up };
+            assert_eq!(e.action, want, "edge {i}");
+        }
+        // `compile` keeps the NIC-only view.
+        assert_eq!(sc.compile(&topo), nic_events);
+    }
+
+    #[test]
+    fn oversub_saturation_touches_every_uplink() {
+        let sc = fabric_scenario(
+            vec![FaultPattern::OversubSaturation { at: 1.2, factor: 0.4, duration: 1.0 }],
+            3,
+        );
+        let topo = TopologyConfig::simai_a100(16);
+        let (_, sw) = sc.compile_full(&topo);
+        let fabric = Fabric::build(&topo, &sc.fabric_config());
+        // Degrade + recover per (leaf, spine).
+        assert_eq!(sw.len(), fabric.n_leaves() * fabric.n_spines() * 2);
+        assert!(sw.iter().all(|e| matches!(e.target, SwitchTarget::Uplink(..))));
+    }
+
+    #[test]
+    fn switch_patterns_rejected_without_fabric() {
+        let mut sc = fabric_scenario(
+            vec![FaultPattern::LeafSwitchDown { pod: 0, rail: 0, at: 1.0, repair_after: None }],
+            1,
+        );
+        sc.cluster = None;
+        let err = sc.validate(&topo()).unwrap_err();
+        assert!(err.contains("leaf_spine"), "{err}");
+        // Out-of-range switch indices are rejected too.
+        let bad = fabric_scenario(
+            vec![FaultPattern::SpineDegrade {
+                spine: 9,
+                at: 1.0,
+                factor: 0.5,
+                recover_after: None,
+            }],
+            1,
+        );
+        let err = bad.validate(&TopologyConfig::simai_a100(16)).unwrap_err();
+        assert!(err.contains("spine 9"), "{err}");
+        let bad_pod = fabric_scenario(
+            vec![FaultPattern::LeafSwitchDown { pod: 7, rail: 0, at: 1.0, repair_after: None }],
+            1,
+        );
+        let err = bad_pod.validate(&TopologyConfig::simai_a100(16)).unwrap_err();
+        assert!(err.contains("pod 7"), "{err}");
+        // Cluster/topology server-count mismatch is a clean error.
+        let sc = fabric_scenario(vec![], 1);
+        assert!(sc.validate(&TopologyConfig::simai_a100(8)).unwrap_err().contains("16 servers"));
     }
 }

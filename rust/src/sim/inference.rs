@@ -20,6 +20,7 @@
 use crate::baselines::DejaVuModel;
 use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
 use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::fabric::SwitchFaultEvent;
 use crate::collectives::{CollKind, PhantomPlane};
 use crate::config::{Preset, TimingConfig};
 use crate::scenario::IterOutcome;
@@ -195,6 +196,7 @@ pub fn pd_kv_pair(world: &CommWorld) -> CommGroup {
 /// injected mid-transfer. The fault-plane state standing in `world`
 /// (carried across iterations by the scenario runner) shapes both the
 /// compiled plan and the executor's initial faults.
+#[allow(clippy::too_many_arguments)]
 pub fn scenario_serving_iteration(
     world: &CommWorld,
     pd_pair: &CommGroup,
@@ -202,10 +204,19 @@ pub fn scenario_serving_iteration(
     prompt_tokens: usize,
     choice: StrategyChoice,
     script: Vec<FaultEvent>,
+    switch_script: Vec<SwitchFaultEvent>,
 ) -> IterOutcome {
     let bytes = kv_shard_bytes(model, prompt_tokens);
     let (_, strategy) = pd_pair.compile(CollKind::SendRecv, bytes, 0, choice);
-    let rep = pd_pair.run(CollKind::SendRecv, bytes, choice, script, &mut PhantomPlane, 0);
+    let rep = pd_pair.run_scripted(
+        CollKind::SendRecv,
+        bytes,
+        choice,
+        script,
+        switch_script,
+        &mut PhantomPlane,
+        0,
+    );
     let compute = prompt_tokens as f64 / model.prefill_tps;
     IterOutcome::from_report(rep, compute, strategy, None)
 }

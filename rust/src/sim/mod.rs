@@ -1,10 +1,12 @@
 //! Workload simulators: Megatron-style training (§8.2), vLLM-style
 //! serving (§8.3), and the Monte Carlo multi-failure sweeps (Fig 10).
 
+pub mod cluster;
 pub mod inference;
 pub mod montecarlo;
 pub mod training;
 
+pub use cluster::{cluster_sweep, cluster_sweep_to_json, ClusterSweepCfg, ClusterSweepRow};
 pub use inference::{
     kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, serve_sim, single_request_latency,
     InferModel, ReqMetrics, ServeCfg, ServeFailure, ServeResult, ServeStrategy,

@@ -42,6 +42,7 @@ pub fn scenario_for_k(name: &str, k: usize, seed: u64) -> FaultScenario {
         iters: 4,
         workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 24 },
         max_overhead: None,
+        cluster: None,
         patterns: vec![FaultPattern::RandomMultiFault { k, at: 1.5 }],
     }
 }

@@ -21,6 +21,7 @@
 use crate::baselines::adapcc::AdapCcModel;
 use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
 use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::fabric::SwitchFaultEvent;
 use crate::collectives::{CollKind, PhantomPlane, RealPlane};
 use crate::config::{GpuComputeConfig, Preset};
 use crate::scenario::IterOutcome;
@@ -177,6 +178,7 @@ pub fn scenario_main_collective<'g>(
 /// `verify_data` is set and the main collective is an AllReduce, it runs
 /// over a real data plane and the result is compared against the healthy
 /// elementwise sum — the losslessness invariant of the scenario harness.
+#[allow(clippy::too_many_arguments)]
 pub fn scenario_training_iteration(
     world: &CommWorld,
     groups: &TrainingGroups,
@@ -184,6 +186,7 @@ pub fn scenario_training_iteration(
     bytes_per_rank: u64,
     choice: StrategyChoice,
     script: Vec<FaultEvent>,
+    switch_script: Vec<SwitchFaultEvent>,
     verify_data: bool,
 ) -> IterOutcome {
     let crash_outcome = |time: f64| IterOutcome {
@@ -221,12 +224,22 @@ pub fn scenario_training_iteration(
         let mut plane = RealPlane::new(world.topo().n_gpus(), elems);
         plane.fill_pattern();
         let expected = plane.expected_allreduce_over(main.ranks());
-        let rep = main.run(kind, main_bytes, choice, script, &mut plane, elems);
+        let rep =
+            main.run_scripted(kind, main_bytes, choice, script, switch_script, &mut plane, elems);
         let verdict =
             if rep.crashed { None } else { Some(plane.ranks_equal(main.ranks(), &expected)) };
         (rep, verdict)
     } else {
-        (main.run(kind, main_bytes, choice, script, &mut PhantomPlane, 0), None)
+        let rep = main.run_scripted(
+            kind,
+            main_bytes,
+            choice,
+            script,
+            switch_script,
+            &mut PhantomPlane,
+            0,
+        );
+        (rep, None)
     };
     IterOutcome::from_report(rep, time, strategy, lossless)
 }

@@ -24,6 +24,8 @@ pub mod rankset;
 
 use std::collections::HashMap;
 
+use crate::fabric::{Fabric, FabricConfig, LeafId, SpineId};
+
 pub use path::{Route, RoutePlan};
 pub use rankset::RankSet;
 
@@ -60,8 +62,21 @@ pub enum ResourceKey {
     /// (0 = socket0→socket1, 1 = reverse).
     Upi(ServerId, u8),
     /// Rail leaf switch capacity (effectively non-blocking unless a
-    /// switch-outage scenario degrades it).
+    /// switch-outage scenario degrades it). The *flat* fabric's only
+    /// inter-server resource; leaf/spine fabrics use the switch-tier keys
+    /// below instead.
     TorRail(RailId),
+    /// Leaf switch ingress (server → fabric) port pool of one leaf
+    /// (leaf/spine fabrics only).
+    LeafIn(LeafId),
+    /// Leaf switch egress (fabric → server) port pool.
+    LeafOut(LeafId),
+    /// Spine switch switching capacity, one direction-less pool per spine.
+    SpineSw(SpineId),
+    /// Leaf→spine uplink (up direction) between a leaf and a spine.
+    UplinkTx(LeafId, SpineId),
+    /// Spine→leaf downlink (down direction) of the same physical link.
+    UplinkRx(LeafId, SpineId),
 }
 
 /// Static description of one resource.
@@ -144,10 +159,28 @@ pub struct Topology {
     pub cfg: TopologyConfig,
     resources: Vec<ResourceSpec>,
     index: HashMap<ResourceKey, ResourceId>,
+    /// The inter-server fabric this topology is built over (ideal = flat).
+    fabric: Fabric,
+    /// Precomputed per-GPU failover chains (§4.3 / §7 ordering), laid out
+    /// flat as `nics_per_server` entries per GPU. Built once here instead
+    /// of allocating a fresh `Vec` on every call inside the migration hot
+    /// path.
+    failover: Vec<NicId>,
 }
 
 impl Topology {
+    /// Build over the degenerate flat fabric (bit-identical to the
+    /// historical behaviour; see [`Topology::build_with_fabric`]).
     pub fn build(cfg: &TopologyConfig) -> Topology {
+        Topology::build_with_fabric(cfg, &FabricConfig::ideal())
+    }
+
+    /// Build the resource table over a chosen inter-server fabric. The flat
+    /// resources are registered first in their historical order, so an
+    /// `Ideal` fabric produces exactly the historical table (ids, keys,
+    /// capacities, latencies); a leaf/spine fabric *appends* its switch
+    /// tier — leaf port pools, spines, uplinks — after them.
+    pub fn build_with_fabric(cfg: &TopologyConfig, fabric_cfg: &FabricConfig) -> Topology {
         assert!(cfg.n_servers >= 1);
         assert!(cfg.gpus_per_server >= 1);
         assert!(cfg.nics_per_server >= 1);
@@ -184,7 +217,41 @@ impl Topology {
         for r in 0..cfg.nics_per_server {
             add(ResourceKey::TorRail(r), tor_cap, 0.0);
         }
-        Topology { cfg: cfg.clone(), resources, index }
+        // Switch tier of a leaf/spine fabric, appended after the flat
+        // resources so flat ids are untouched. Latencies come from the
+        // fabric's per-hop specs — fabric depth is visible in
+        // `path_latency` sums.
+        let fabric = Fabric::build(cfg, fabric_cfg);
+        if !fabric.is_ideal() {
+            for l in 0..fabric.n_leaves() {
+                add(ResourceKey::LeafIn(l), fabric.leaf_cap, fabric.switch_latency);
+                add(ResourceKey::LeafOut(l), fabric.leaf_cap, fabric.switch_latency);
+            }
+            for s in 0..fabric.n_spines() {
+                add(ResourceKey::SpineSw(s), fabric.spine_cap, fabric.switch_latency);
+            }
+            for l in 0..fabric.n_leaves() {
+                for s in 0..fabric.n_spines() {
+                    add(ResourceKey::UplinkTx(l, s), fabric.uplink_cap, fabric.uplink_latency);
+                    add(ResourceKey::UplinkRx(l, s), fabric.uplink_cap, fabric.uplink_latency);
+                }
+            }
+        }
+        let mut topo =
+            Topology { cfg: cfg.clone(), resources, index, fabric, failover: Vec::new() };
+        let mut failover = Vec::with_capacity(n_gpus * cfg.nics_per_server);
+        for g in 0..n_gpus {
+            let mut nics: Vec<NicId> = topo.nics_of_server(topo.server_of_gpu(g)).collect();
+            nics.sort_by_key(|&n| (topo.pcie_distance(g, n), n));
+            failover.extend_from_slice(&nics);
+        }
+        topo.failover = failover;
+        topo
+    }
+
+    /// The inter-server fabric the topology is built over.
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
     }
 
     // ------------------------------------------------------------------
@@ -299,14 +366,21 @@ impl Topology {
     }
 
     /// NICs of the GPU's server ordered by PCIe distance (then index): the
-    /// failover chain of §4.3 / §7.
-    pub fn failover_chain(&self, g: GpuId) -> Vec<NicId> {
-        let mut nics: Vec<NicId> = self.nics_of_server(self.server_of_gpu(g)).collect();
-        nics.sort_by_key(|&n| (self.pcie_distance(g, n), n));
-        nics
+    /// failover chain of §4.3 / §7. Precomputed at build time — the
+    /// migration hot path reads a slice instead of sorting a fresh `Vec`
+    /// per call.
+    pub fn failover_chain(&self, g: GpuId) -> &[NicId] {
+        let k = self.cfg.nics_per_server;
+        &self.failover[g * k..(g + 1) * k]
     }
 
-    /// Sum of path latencies for a resource path.
+    /// Sum of the per-hop latencies charged by each resource on the path,
+    /// from the resource specs: NIC halves carry `link_latency / 2`, PCIe
+    /// lanes `pcie_latency`, NVLink hops `nvlink_latency` — and switch-tier
+    /// resources their fabric's per-hop leaf/spine/uplink latencies, so a
+    /// deeper fabric shows up directly in completion times. Flat
+    /// topologies charge `TorRail` at 0 and are bit-identical to the
+    /// historical values (regression-tested in `path::tests`).
     pub fn path_latency(&self, path: &[ResourceId]) -> f64 {
         path.iter().map(|&r| self.resources[r].latency).sum()
     }
@@ -397,5 +471,60 @@ mod tests {
         let t = Topology::build(&TopologyConfig::simai_a100(64));
         assert_eq!(t.n_gpus(), 512);
         assert_eq!(t.server_of_gpu(511), 63);
+    }
+
+    #[test]
+    fn ideal_fabric_adds_no_resources() {
+        // `Fabric::ideal()` must reproduce the flat topology bit-for-bit:
+        // same resource count, same keys in the same order.
+        let flat = t2x8();
+        let ideal = Topology::build_with_fabric(
+            &TopologyConfig::testbed_h100(),
+            &crate::fabric::FabricConfig::ideal(),
+        );
+        assert_eq!(flat.n_resources(), ideal.n_resources());
+        for id in 0..flat.n_resources() {
+            assert_eq!(flat.spec(id).key, ideal.spec(id).key);
+            assert_eq!(flat.spec(id).capacity, ideal.spec(id).capacity);
+            assert_eq!(flat.spec(id).latency, ideal.spec(id).latency);
+        }
+        assert!(ideal.fabric().is_ideal());
+    }
+
+    #[test]
+    fn leaf_spine_appends_switch_tier_after_flat_resources() {
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        let cfg = TopologyConfig::simai_a100(16);
+        let flat = Topology::build(&cfg);
+        let fab = FabricConfig::leaf_spine_with(LeafSpineCfg {
+            pod_size: 4,
+            spines: 4,
+            ..LeafSpineCfg::default()
+        });
+        let t = Topology::build_with_fabric(&cfg, &fab);
+        // Flat prefix identical (existing resource ids are stable).
+        for id in 0..flat.n_resources() {
+            assert_eq!(flat.spec(id).key, t.spec(id).key);
+        }
+        // 32 leaves × 2 port pools + 4 spines + 32×4 uplinks × 2 dirs.
+        let extra = 32 * 2 + 4 + 32 * 4 * 2;
+        assert_eq!(t.n_resources(), flat.n_resources() + extra);
+        // Lookup round-trips for the new keys too.
+        for id in flat.n_resources()..t.n_resources() {
+            let key = t.spec(id).key;
+            assert_eq!(t.resource(key), id);
+        }
+    }
+
+    #[test]
+    fn failover_chain_is_cached_and_stable() {
+        let t = t2x8();
+        for g in 0..t.n_gpus() {
+            // The cached slice must equal a fresh sort (the pre-cache
+            // behaviour).
+            let mut fresh: Vec<NicId> = t.nics_of_server(t.server_of_gpu(g)).collect();
+            fresh.sort_by_key(|&n| (t.pcie_distance(g, n), n));
+            assert_eq!(t.failover_chain(g), fresh.as_slice(), "gpu {g}");
+        }
     }
 }

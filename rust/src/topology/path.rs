@@ -108,16 +108,9 @@ impl Route {
                 assert_eq!(topo.server_of_gpu(dst), topo.server_of_nic(dst_nic));
                 // Source side: GPU → NIC.
                 Self::push_fwd_path(topo, &mut path, src, src_nic, src_fwd, true);
-                // Fabric: NIC tx → rail ToR(s) → NIC rx.
+                // Fabric: NIC tx → switched fabric → NIC rx.
                 path.push(topo.resource(ResourceKey::NicTx(src_nic)));
-                let r_src = topo.rail_of_nic(src_nic);
-                let r_dst = topo.rail_of_nic(dst_nic);
-                path.push(topo.resource(ResourceKey::TorRail(r_src)));
-                if r_dst != r_src {
-                    // Cross-rail traffic traverses the spine: both leaf
-                    // switches are on the path.
-                    path.push(topo.resource(ResourceKey::TorRail(r_dst)));
-                }
+                push_fabric_hop(topo, &mut path, src_nic, dst_nic);
                 path.push(topo.resource(ResourceKey::NicRx(dst_nic)));
                 // Destination side: NIC → GPU.
                 Self::push_fwd_path(topo, &mut path, dst, dst_nic, dst_fwd, false);
@@ -178,9 +171,53 @@ impl Route {
     }
 }
 
+/// Expand the inter-server NIC→NIC hop into the concrete fabric resource
+/// chain (everything between `NicTx(src)` and `NicRx(dst)`).
+///
+/// * Flat / ideal fabric: the historical rail expansion — the source rail's
+///   ToR, plus the destination rail's ToR for cross-rail traffic. Byte-
+///   identical to the pre-fabric behaviour, so existing plans and golden
+///   traces are unchanged.
+/// * Leaf/spine fabric: same-leaf traffic (same rail, same pod) switches
+///   locally through the leaf's port pools; everything else climbs the
+///   source leaf's ECMP-chosen uplink to a spine and descends the
+///   destination leaf's downlink from that same spine. The spine pick is a
+///   deterministic seeded hash of the NIC pair
+///   ([`crate::fabric::Fabric::ecmp_spine`]).
+pub fn push_fabric_hop(
+    topo: &Topology,
+    path: &mut Vec<super::ResourceId>,
+    src_nic: NicId,
+    dst_nic: NicId,
+) {
+    let fabric = topo.fabric();
+    if fabric.is_ideal() {
+        let r_src = topo.rail_of_nic(src_nic);
+        let r_dst = topo.rail_of_nic(dst_nic);
+        path.push(topo.resource(ResourceKey::TorRail(r_src)));
+        if r_dst != r_src {
+            // Cross-rail traffic traverses the spine: both leaf
+            // switches are on the path.
+            path.push(topo.resource(ResourceKey::TorRail(r_dst)));
+        }
+        return;
+    }
+    let l_src = fabric.leaf_of_nic(src_nic);
+    let l_dst = fabric.leaf_of_nic(dst_nic);
+    path.push(topo.resource(ResourceKey::LeafIn(l_src)));
+    if l_src != l_dst {
+        let spine = fabric.ecmp_spine(src_nic, dst_nic);
+        path.push(topo.resource(ResourceKey::UplinkTx(l_src, spine)));
+        path.push(topo.resource(ResourceKey::SpineSw(spine)));
+        path.push(topo.resource(ResourceKey::UplinkRx(l_dst, spine)));
+    }
+    path.push(topo.resource(ResourceKey::LeafOut(l_dst)));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fabric::{FabricConfig, LeafSpineCfg};
     use crate::topology::TopologyConfig;
 
     fn t() -> Topology {
@@ -278,6 +315,111 @@ mod tests {
         assert_eq!(Route::auto_forward(&t, 0, 0), Forward::Affinity);
         assert_eq!(Route::auto_forward(&t, 0, 2), Forward::Pcie);
         assert_eq!(Route::auto_forward(&t, 0, 6), Forward::Pxn);
+    }
+
+    fn leaf_spine_16() -> Topology {
+        Topology::build_with_fabric(
+            &TopologyConfig::simai_a100(16),
+            &FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 4,
+                ..LeafSpineCfg::default()
+            }),
+        )
+    }
+
+    #[test]
+    fn flat_path_latency_regression() {
+        // Satellite guard: flat topologies charge per-hop latency from the
+        // resource specs, and the values are the historical constants —
+        // PCIe lane + NIC halves (= link_latency) + zero-latency rail ToRs.
+        let t = t();
+        let cfg = &t.cfg;
+        let plan = Route::default_inter(&t, 2, 10).plan(&t, 2, 10);
+        let want = cfg.pcie_latency + cfg.link_latency + cfg.pcie_latency;
+        assert!((plan.latency - want).abs() < 1e-15, "{} != {want}", plan.latency);
+        // Cross-rail adds a second zero-latency ToR: the latency must not
+        // change on flat fabrics.
+        let route = Route::Inter {
+            src_nic: 0,
+            dst_nic: 9,
+            src_fwd: Forward::Affinity,
+            dst_fwd: Forward::Pcie,
+        };
+        let plan = route.plan(&t, 0, 9);
+        assert!((plan.latency - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn leaf_spine_same_leaf_switches_locally() {
+        let t = leaf_spine_16();
+        // GPU 2 (server 0) → GPU 2+8 (server 1): same rail 2, same pod.
+        let plan = Route::default_inter(&t, 2, 10).plan(&t, 2, 10);
+        let keys: Vec<_> = plan.path.iter().map(|&r| t.spec(r).key).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ResourceKey::PcieUp(2),
+                ResourceKey::NicTx(2),
+                ResourceKey::LeafIn(2),
+                ResourceKey::LeafOut(2),
+                ResourceKey::NicRx(10),
+                ResourceKey::PcieDown(10),
+            ]
+        );
+        // Fabric depth is visible: two switch hops on top of the flat sum.
+        let flat_want = t.cfg.pcie_latency * 2.0 + t.cfg.link_latency;
+        let f = t.fabric();
+        assert!((plan.latency - (flat_want + 2.0 * f.switch_latency)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn leaf_spine_cross_pod_crosses_one_spine() {
+        let t = leaf_spine_16();
+        let f = t.fabric();
+        // Server 0 rail 0 → server 8 rail 0: same rail, different pods.
+        let src_nic = 0;
+        let dst_nic = 8 * 8;
+        let src = 0;
+        let dst = 8 * 8;
+        let plan = Route::between(&t, src, dst, src_nic, dst_nic).plan(&t, src, dst);
+        let keys: Vec<_> = plan.path.iter().map(|&r| t.spec(r).key).collect();
+        let spine = f.ecmp_spine(src_nic, dst_nic);
+        let l_src = f.leaf_of_nic(src_nic);
+        let l_dst = f.leaf_of_nic(dst_nic);
+        assert_ne!(l_src, l_dst);
+        assert!(keys.contains(&ResourceKey::LeafIn(l_src)));
+        assert!(keys.contains(&ResourceKey::UplinkTx(l_src, spine)));
+        assert!(keys.contains(&ResourceKey::SpineSw(spine)));
+        assert!(keys.contains(&ResourceKey::UplinkRx(l_dst, spine)));
+        assert!(keys.contains(&ResourceKey::LeafOut(l_dst)));
+        // Exactly one spine on the path.
+        let spines = keys.iter().filter(|k| matches!(k, ResourceKey::SpineSw(_))).count();
+        assert_eq!(spines, 1);
+        // Depth: 3 switch hops + 2 uplink hops beyond the flat latency.
+        let flat_want = t.cfg.pcie_latency * 2.0 + t.cfg.link_latency;
+        let want = flat_want + 3.0 * f.switch_latency + 2.0 * f.uplink_latency;
+        assert!((plan.latency - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn ideal_fabric_hop_matches_flat_expansion() {
+        // The degenerate fabric must expand to the literal historical rail
+        // path for every NIC pair.
+        let t = t();
+        for src_nic in 0..8usize {
+            for dst_nic in 8..16usize {
+                let mut path = Vec::new();
+                push_fabric_hop(&t, &mut path, src_nic, dst_nic);
+                let r_src = t.rail_of_nic(src_nic);
+                let r_dst = t.rail_of_nic(dst_nic);
+                let mut want = vec![t.resource(ResourceKey::TorRail(r_src))];
+                if r_dst != r_src {
+                    want.push(t.resource(ResourceKey::TorRail(r_dst)));
+                }
+                assert_eq!(path, want, "{src_nic}->{dst_nic}");
+            }
+        }
     }
 
     #[test]

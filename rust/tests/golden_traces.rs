@@ -117,6 +117,26 @@ fn golden_pp_boundary_flap() {
 }
 
 #[test]
+fn golden_leaf_switch_down() {
+    golden("leaf_switch_down");
+}
+
+#[test]
+fn golden_spine_degrade() {
+    golden("spine_degrade");
+}
+
+#[test]
+fn golden_uplink_flap() {
+    golden("uplink_flap");
+}
+
+#[test]
+fn golden_oversub_saturation() {
+    golden("oversub_saturation");
+}
+
+#[test]
 fn corpus_covers_required_scenario_kinds() {
     // The acceptance floor: ≥6 distinct scenario kinds in the committed
     // corpus, including flapping, correlated-rail and a fluctuation ramp.
@@ -135,10 +155,20 @@ fn corpus_covers_required_scenario_kinds() {
         }
     }
     assert!(files >= 6, "corpus has only {files} scenarios");
-    for required in
-        ["flapping", "correlated_rail", "degrade_ramp", "cascade", "repair_window", "oneshot"]
-    {
+    for required in [
+        "flapping",
+        "correlated_rail",
+        "degrade_ramp",
+        "cascade",
+        "repair_window",
+        "oneshot",
+        // Switch-level patterns of the leaf/spine fabric corpus.
+        "leaf_switch_down",
+        "spine_degrade",
+        "uplink_flap",
+        "oversub_saturation",
+    ] {
         assert!(kinds.contains(required), "corpus is missing a {required:?} scenario");
     }
-    assert!(kinds.len() >= 6, "only {} distinct kinds", kinds.len());
+    assert!(kinds.len() >= 10, "only {} distinct kinds", kinds.len());
 }

@@ -1,0 +1,335 @@
+//! Properties of the switched-fabric subsystem:
+//!
+//! * **Ideal-fabric equivalence** — `Fabric::ideal()` must be
+//!   indistinguishable from the flat topology: identical resource tables,
+//!   identical route expansions, and bit-identical executor reports across
+//!   random fault scripts. This is what keeps the pre-fabric golden-trace
+//!   corpus valid without regeneration.
+//! * **Leaf-loss survivability** — under random single-leaf failures at
+//!   4/16/32 servers, AllReduce over a real data plane stays lossless and
+//!   never crashes while every server keeps ≥1 connected rail (7 of 8
+//!   survive a single leaf loss by construction).
+
+use r2ccl::ccl::{CommWorld, StrategyChoice};
+use r2ccl::collectives::exec::{ExecReport, FaultAction, FaultEvent};
+use r2ccl::collectives::{CollKind, PhantomPlane, RealPlane};
+use r2ccl::config::Preset;
+use r2ccl::fabric::{FabricConfig, LeafSpineCfg, SwitchAction, SwitchFaultEvent, SwitchTarget};
+use r2ccl::topology::{Route, Topology, TopologyConfig};
+use r2ccl::util::Rng;
+
+const ALL_KINDS: [CollKind; 7] = [
+    CollKind::AllReduce,
+    CollKind::ReduceScatter,
+    CollKind::AllGather,
+    CollKind::Broadcast,
+    CollKind::Reduce,
+    CollKind::SendRecv,
+    CollKind::AllToAll,
+];
+
+fn assert_reports_equal(a: &ExecReport, b: &ExecReport, ctx: &str) {
+    assert_eq!(
+        a.completion.map(f64::to_bits),
+        b.completion.map(f64::to_bits),
+        "{ctx}: completion"
+    );
+    assert_eq!(a.crashed, b.crashed, "{ctx}: crashed");
+    assert_eq!(a.wire_bytes, b.wire_bytes, "{ctx}: wire_bytes");
+    assert_eq!(a.timeline, b.timeline, "{ctx}: timeline");
+    let json = |rep: &ExecReport| {
+        rep.timeline.iter().map(|e| e.to_json().pretty()).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(json(a), json(b), "{ctx}: timeline JSON");
+}
+
+fn random_script(rng: &mut Rng, n_nics: usize, base: f64) -> Vec<FaultEvent> {
+    let n_events = rng.range(1, 4);
+    let mut script = Vec::new();
+    for _ in 0..n_events {
+        let action = match rng.range(0, 4) {
+            0 => FaultAction::FailNic,
+            1 => FaultAction::CutCable,
+            2 => FaultAction::Degrade(rng.range_f64(0.1, 0.9)),
+            _ => FaultAction::Repair,
+        };
+        script.push(FaultEvent {
+            at: rng.range_f64(0.05, 0.95) * base,
+            nic: rng.range(0, n_nics),
+            action,
+        });
+    }
+    script.sort_by(|a, b| a.at.total_cmp(&b.at));
+    script
+}
+
+#[test]
+fn ideal_fabric_reports_are_bit_identical_to_flat_across_fault_scripts() {
+    // Two worlds over the same preset: the default (flat) build and an
+    // explicit `Fabric::ideal()` build. Every compiled plan and every
+    // executor report across random fault scripts must match bit-for-bit.
+    let preset = Preset::testbed();
+    let mut rng = Rng::new(0xfab71c);
+    for trial in 0..6 {
+        let mut flat = CommWorld::new(&preset, 8);
+        let mut ideal = CommWorld::new_with_fabric(&preset, 8, &FabricConfig::ideal());
+        // Random standing failures, mirrored into both worlds.
+        for _ in 0..rng.range(0, 3) {
+            let nic = rng.range(0, flat.topo().n_nics());
+            let action = if rng.chance(0.5) {
+                FaultAction::FailNic
+            } else {
+                FaultAction::Degrade(rng.range_f64(0.2, 0.9))
+            };
+            flat.note_failure(nic, action);
+            ideal.note_failure(nic, action);
+        }
+        let base = flat
+            .world_group()
+            .time_collective(CollKind::AllReduce, 1 << 22, StrategyChoice::Auto)
+            .unwrap_or(1.0e-3);
+        let script = random_script(&mut rng, flat.topo().n_nics(), base);
+        for kind in ALL_KINDS {
+            let (sf, stf) = flat.world_group().compile(kind, 1 << 22, 0, StrategyChoice::Auto);
+            let (si, sti) = ideal.world_group().compile(kind, 1 << 22, 0, StrategyChoice::Auto);
+            assert_eq!(stf, sti, "trial {trial} {kind:?}: strategy");
+            assert_eq!(*sf, *si, "trial {trial} {kind:?}: schedule");
+            let rf = flat.world_group().run(
+                kind,
+                1 << 22,
+                StrategyChoice::Auto,
+                script.clone(),
+                &mut PhantomPlane,
+                0,
+            );
+            let ri = ideal.world_group().run(
+                kind,
+                1 << 22,
+                StrategyChoice::Auto,
+                script.clone(),
+                &mut PhantomPlane,
+                0,
+            );
+            assert_reports_equal(&rf, &ri, &format!("trial {trial} {kind:?}"));
+        }
+    }
+}
+
+#[test]
+fn ideal_fabric_routes_match_flat_expansion_for_random_pairs() {
+    let flat = Topology::build(&TopologyConfig::simai_a100(4));
+    let ideal =
+        Topology::build_with_fabric(&TopologyConfig::simai_a100(4), &FabricConfig::ideal());
+    let mut rng = Rng::new(7);
+    for _ in 0..64 {
+        let src = rng.range(0, flat.n_gpus());
+        let dst = rng.range(0, flat.n_gpus());
+        if flat.server_of_gpu(src) == flat.server_of_gpu(dst) {
+            continue;
+        }
+        let route = Route::default_inter(&flat, src, dst);
+        let a = route.plan(&flat, src, dst);
+        let b = route.plan(&ideal, src, dst);
+        assert_eq!(a.path, b.path, "{src}->{dst}");
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits(), "{src}->{dst}");
+    }
+}
+
+fn leaf_spine(n_servers: usize) -> (Preset, FabricConfig) {
+    (
+        Preset::simai(n_servers),
+        FabricConfig::leaf_spine_with(LeafSpineCfg {
+            pod_size: 4,
+            spines: 2,
+            oversubscription: 2.0,
+            ..LeafSpineCfg::default()
+        }),
+    )
+}
+
+#[test]
+fn random_single_leaf_failures_stay_lossless_while_a_path_exists() {
+    // At every scale, a random leaf dies mid-AllReduce over a real data
+    // plane: the run must migrate (not crash) and reproduce the healthy
+    // elementwise sum exactly — every server keeps 7 of 8 rails.
+    let mut rng = Rng::new(0x1eaf);
+    for n_servers in [4usize, 16, 32] {
+        let (preset, fabric) = leaf_spine(n_servers);
+        let channels = 2;
+        for trial in 0..3 {
+            let world = CommWorld::new_with_fabric(&preset, channels, &fabric);
+            let group = world.world_group();
+            let n_ranks = group.n_ranks();
+            let elems = channels * n_ranks * 2;
+            let bytes = (elems * 4) as u64;
+            let healthy = group
+                .time_collective(CollKind::AllReduce, bytes, StrategyChoice::Auto)
+                .expect("healthy leaf-spine allreduce");
+            let leaf = rng.range(0, world.topo().fabric().n_leaves());
+            let ctx = format!("n={n_servers} trial={trial} leaf={leaf}");
+            let script = vec![SwitchFaultEvent {
+                at: healthy * rng.range_f64(0.2, 0.7),
+                target: SwitchTarget::Leaf(leaf),
+                action: SwitchAction::Down,
+            }];
+            let mut plane = RealPlane::new(world.topo().n_gpus(), elems);
+            plane.fill_pattern();
+            let ranks: Vec<usize> = group.ranks().to_vec();
+            let expected = plane.expected_allreduce_over(&ranks);
+            let rep = group.run_scripted(
+                CollKind::AllReduce,
+                bytes,
+                StrategyChoice::Auto,
+                vec![],
+                script,
+                &mut plane,
+                elems,
+            );
+            assert!(!rep.crashed, "{ctx}: crashed with 7 of 8 rails alive");
+            assert!(rep.completion.is_some(), "{ctx}: no completion");
+            assert!(
+                plane.ranks_equal(&ranks, &expected),
+                "{ctx}: result != healthy sum"
+            );
+            // The leaf outage surfaced as at least one migration.
+            assert!(!rep.migrations.is_empty(), "{ctx}: no migration reported");
+        }
+    }
+}
+
+#[test]
+fn unrepaired_uplink_down_migrates_instead_of_hanging() {
+    // An uplink that dies mid-collective and never comes back must not
+    // stall its ECMP-pinned flows forever: the owning leaf's member NICs
+    // time out and migrate onto surviving rails, mid-flight and as
+    // standing plan-time knowledge alike.
+    let preset = Preset::simai(4);
+    let fabric = FabricConfig::leaf_spine_with(LeafSpineCfg {
+        pod_size: 2, // 2 pods → cross-pod (spine-crossing) ring edges exist
+        spines: 2,
+        ..LeafSpineCfg::default()
+    });
+    let world = CommWorld::new_with_fabric(&preset, 2, &fabric);
+    let group = world.world_group();
+    let healthy = group
+        .time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto)
+        .expect("healthy allreduce");
+    let leaf = world.topo().fabric().leaf_id(0, 0);
+    let script = vec![SwitchFaultEvent {
+        at: healthy * 0.3,
+        target: SwitchTarget::Uplink(leaf, 0),
+        action: SwitchAction::Down,
+    }];
+    let rep = group.run_scripted(
+        CollKind::AllReduce,
+        1 << 20,
+        StrategyChoice::Auto,
+        vec![],
+        script,
+        &mut PhantomPlane,
+        0,
+    );
+    assert!(!rep.crashed, "unrepaired uplink outage must not hang-crash");
+    assert!(rep.completion.is_some());
+    // Standing variant: the world knows about the dead uplink up front.
+    let mut world = CommWorld::new_with_fabric(&preset, 2, &fabric);
+    world.note_switch_failure(SwitchTarget::Uplink(leaf, 0), SwitchAction::Down);
+    let t = world
+        .world_group()
+        .time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto)
+        .expect("standing dead uplink must be routed around");
+    assert!(t > 0.0);
+}
+
+#[test]
+fn collapsed_uplink_degrade_follows_the_fluctuation_rule() {
+    // A Degrade collapsed below the detection threshold is a dead element
+    // for in-flight traffic (the switch-level mirror of the NIC
+    // fluctuation rule): member NICs must migrate mid-flight, and a
+    // standing collapsed degrade must be routed around at plan time —
+    // never left to crawl at the clamped floor.
+    let preset = Preset::simai(4);
+    let fabric = FabricConfig::leaf_spine_with(LeafSpineCfg {
+        pod_size: 2,
+        spines: 2,
+        ..LeafSpineCfg::default()
+    });
+    let world = CommWorld::new_with_fabric(&preset, 2, &fabric);
+    let group = world.world_group();
+    let healthy = group
+        .time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto)
+        .expect("healthy allreduce");
+    let leaf = world.topo().fabric().leaf_id(0, 0);
+    // Saturation-style collapse at 30%, recovery (Degrade back to 1.0)
+    // later: the run must migrate and complete promptly.
+    let script = vec![
+        SwitchFaultEvent {
+            at: healthy * 0.3,
+            target: SwitchTarget::Uplink(leaf, 0),
+            action: SwitchAction::Degrade(0.01),
+        },
+        SwitchFaultEvent {
+            at: healthy * 20.0,
+            target: SwitchTarget::Uplink(leaf, 0),
+            action: SwitchAction::Degrade(1.0),
+        },
+    ];
+    let rep = group.run_scripted(
+        CollKind::AllReduce,
+        1 << 20,
+        StrategyChoice::Auto,
+        vec![],
+        script,
+        &mut PhantomPlane,
+        0,
+    );
+    assert!(!rep.crashed, "collapsed uplink degrade must migrate, not crash");
+    assert!(!rep.migrations.is_empty(), "collapse must surface as migration");
+    let t = rep.completion.expect("must complete");
+    assert!(
+        t < healthy * 100.0,
+        "completion {t} vs healthy {healthy}: flows crawled on the collapsed uplink"
+    );
+    // Standing variant: the world already knows about the collapse.
+    let mut world = CommWorld::new_with_fabric(&preset, 2, &fabric);
+    world.note_switch_failure(SwitchTarget::Uplink(leaf, 0), SwitchAction::Degrade(0.01));
+    let t = world
+        .world_group()
+        .time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto)
+        .expect("standing collapsed uplink must be routed around");
+    // Routed-around runs pay at most a doubled-rail penalty; crawling on
+    // the 1% uplink would cost ~100×.
+    assert!(t < healthy * 20.0, "standing collapse crawled: {t} vs {healthy}");
+}
+
+#[test]
+fn standing_leaf_failure_plans_route_around_the_dead_rail() {
+    // The plan-time arm: a leaf the world already knows about. The
+    // schedule must avoid the dead leaf entirely (no migrations at all)
+    // and stay lossless.
+    for n_servers in [4usize, 16] {
+        let (preset, fabric) = leaf_spine(n_servers);
+        let channels = 2;
+        let mut world = CommWorld::new_with_fabric(&preset, channels, &fabric);
+        let leaf = world.topo().fabric().leaf_id(0, 0);
+        world.note_switch_failure(SwitchTarget::Leaf(leaf), SwitchAction::Down);
+        let group = world.world_group();
+        let elems = channels * group.n_ranks() * 2;
+        let bytes = (elems * 4) as u64;
+        let mut plane = RealPlane::new(world.topo().n_gpus(), elems);
+        plane.fill_pattern();
+        let ranks: Vec<usize> = group.ranks().to_vec();
+        let expected = plane.expected_allreduce_over(&ranks);
+        let rep = group.run(
+            CollKind::AllReduce,
+            bytes,
+            StrategyChoice::Auto,
+            vec![],
+            &mut plane,
+            elems,
+        );
+        assert!(!rep.crashed, "n={n_servers}: standing leaf loss crashed");
+        assert!(rep.migrations.is_empty(), "n={n_servers}: planned run must not migrate");
+        assert!(plane.ranks_equal(&ranks, &expected), "n={n_servers}: lossy");
+    }
+}

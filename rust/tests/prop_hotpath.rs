@@ -298,6 +298,7 @@ fn parallel_scenario_corpus_matches_serial() {
             iters: 3,
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
+            cluster: None,
             patterns: match i {
                 0 => vec![],
                 1 => vec![FaultPattern::OneShot {

@@ -64,6 +64,7 @@ fn random_scenario(rng: &mut Rng) -> FaultScenario {
         iters: 4,
         workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
         max_overhead: None,
+        cluster: None,
         patterns,
     }
 }
