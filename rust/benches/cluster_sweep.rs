@@ -1,10 +1,13 @@
 //! Cluster-scale fabric sweep: all 7 collectives at 32–128 servers
 //! (256–1024 GPUs) on a rail-optimised leaf/spine fabric, healthy vs
-//! leaf-switch-down (planned and mid-flight).
+//! leaf-switch-down (planned and mid-flight). `CLUSTER_SERVERS` and the
+//! other `CLUSTER_*` env vars re-shape the sweep up to 1024–4096 servers
+//! without code edits (see `ClusterSweepCfg::apply_env`).
 //!
 //! Writes `bench_results/cluster_sweep.json` (schema in
 //! `bench_results/README.md`). `BENCH_QUICK=1` restricts to the 32-server
-//! point — the CI `cluster-smoke` job's shape.
+//! point — the CI `cluster-smoke` job's shape; the CI `scale-smoke` job
+//! combines it with `CLUSTER_SERVERS=1024`.
 
 use r2ccl::bench::Table;
 use r2ccl::sim::{cluster_sweep, cluster_sweep_to_json, ClusterSweepCfg};
@@ -13,13 +16,17 @@ use r2ccl::util::stats::fmt_time;
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let cfg = if quick { ClusterSweepCfg::quick() } else { ClusterSweepCfg::full() };
+    let cfg = cfg.apply_env();
     println!(
-        "cluster sweep: servers {:?}, leaf/spine pod_size={} spines={} oversub={}x, {} B/rank{}",
+        "cluster sweep: servers {:?}, leaf/spine pod_size={} spines={} oversub={}x, \
+         {} B/rank, ring_cap={} a2a_cap={}{}",
         cfg.server_counts,
         cfg.pod_size,
         cfg.spines,
         cfg.oversubscription,
         cfg.bytes_per_rank,
+        cfg.ring_cap,
+        cfg.a2a_cap,
         if quick { " (BENCH_QUICK)" } else { "" }
     );
     let rows = cluster_sweep(&cfg);
@@ -36,6 +43,8 @@ fn main() {
             "overhead",
             "strategy",
             "mid-flight migr.",
+            "events",
+            "resident",
         ],
     );
     for r in &rows {
@@ -54,6 +63,8 @@ fn main() {
             } else {
                 "-".to_string()
             },
+            r.events_popped.to_string(),
+            r.resident_resources.to_string(),
         ]);
     }
     table.print();

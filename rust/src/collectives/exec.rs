@@ -14,7 +14,9 @@ use std::sync::Arc;
 use crate::config::TimingConfig;
 use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
 use crate::fabric::{LeafId, SwitchAction, SwitchFaultEvent, SwitchTarget};
-use crate::netsim::{clamp_degrade_factor, engine_for, recycle, Engine, Event, FaultPlane, FlowId};
+use crate::netsim::{
+    clamp_degrade_factor, engine_for, recycle, Engine, Event, FaultPlane, FlowId, ScriptKind,
+};
 use crate::topology::{NicId, ResourceKey, Route, Topology};
 use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
 use crate::util::Json;
@@ -272,6 +274,18 @@ pub struct ExecReport {
     /// Engine flows created this run (allocation-proxy perf counter; not
     /// part of any trace serialization).
     pub flows_created: u64,
+    /// Kernel events popped from the unified calendar queue (flow
+    /// completions, timers, script events — stale pops included; not part
+    /// of any trace serialization).
+    pub events_popped: u64,
+    /// Rate domains visited across all closure recomputes — the locality
+    /// counter: `domains_touched / recomputes` near 1 means pod-local
+    /// changes stayed pod-local (not part of any trace serialization).
+    pub domains_touched: u64,
+    /// Peak sparse-resident resource entries this run — resources
+    /// materialized by live flows or standing faults, out of the
+    /// topology's full table (not part of any trace serialization).
+    pub resident_resources: u64,
 }
 
 impl ExecReport {
@@ -281,11 +295,13 @@ impl ExecReport {
     }
 }
 
-// Timer tag encoding.
-const TAG_FAULT: u64 = 1 << 48;
+// Timer tag encoding — detection-pipeline timers only. Scripted NIC and
+// switch faults are no longer smuggled through timer tags: they are
+// first-class kernel events ([`Event::Script`]) scheduled via
+// [`Engine::schedule_script`] and merged by timestamp with completions and
+// timers in the one calendar queue.
 const TAG_DETECT: u64 = 2 << 48;
 const TAG_REPROBE: u64 = 3 << 48;
-const TAG_SWITCH: u64 = 4 << 48;
 const TAG_MASK: u64 = 0xffff_0000_0000_0000;
 
 struct FlowInfo {
@@ -302,7 +318,11 @@ struct FlowInfo {
 /// never qualify (capacity-only; `Spine × Down` is rejected upstream).
 /// Shared by the standing-fault and mid-flight paths so the two can never
 /// diverge.
-fn dead_leaf_of(target: SwitchTarget, action: SwitchAction, threshold: f64) -> Option<LeafId> {
+pub(super) fn dead_leaf_of(
+    target: SwitchTarget,
+    action: SwitchAction,
+    threshold: f64,
+) -> Option<LeafId> {
     let l = match target {
         SwitchTarget::Leaf(l) | SwitchTarget::Uplink(l, _) => l,
         SwitchTarget::Spine(_) => return None,
@@ -345,6 +365,10 @@ pub struct Executor<'a> {
     migrated_to: Vec<Option<NicId>>,
     /// In-flight flow bookkeeping, indexed by `FlowId` (dense per run).
     flows: Vec<Option<FlowInfo>>,
+    /// Scratch for migration-victim collection (reused across migrations
+    /// so the hot path never allocates; filled from the engine's borrowed
+    /// [`Engine::flows_through_pair`] slice).
+    victims: Vec<FlowId>,
     report: ExecReport,
 }
 
@@ -372,6 +396,7 @@ impl<'a> Executor<'a> {
             switch_script: Vec::new(),
             migrated_to: vec![None; topo.n_nics()],
             flows: Vec::new(),
+            victims: Vec::new(),
             report: ExecReport {
                 completion: None,
                 crashed: false,
@@ -380,6 +405,9 @@ impl<'a> Executor<'a> {
                 timeline: Vec::new(),
                 recomputes: 0,
                 flows_created: 0,
+                events_popped: 0,
+                domains_touched: 0,
+                resident_resources: 0,
             },
         }
     }
@@ -462,6 +490,9 @@ impl<'a> Executor<'a> {
         let Executor { engine, mut report, .. } = self;
         report.recomputes = engine.recomputes;
         report.flows_created = engine.flows_created;
+        report.events_popped = engine.events_popped;
+        report.domains_touched = engine.domains_touched;
+        report.resident_resources = engine.resident_peak() as u64;
         recycle(engine);
         report
     }
@@ -495,11 +526,11 @@ impl<'a> Executor<'a> {
 
         for i in 0..self.script.len() {
             let at = self.script[i].at;
-            self.engine.set_timer(at, TAG_FAULT | i as u64);
+            self.engine.schedule_script(at, ScriptKind::Nic, i as u32);
         }
         for i in 0..self.switch_script.len() {
             let at = self.switch_script[i].at;
-            self.engine.set_timer(at, TAG_SWITCH | i as u64);
+            self.engine.schedule_script(at, ScriptKind::Switch, i as u32);
         }
 
         for i in 0..n {
@@ -531,57 +562,129 @@ impl<'a> Executor<'a> {
                         }
                     }
                 }
-                Event::Timer(_, tag) => match tag & TAG_MASK {
-                    TAG_FAULT => {
-                        let fe = self.script[(tag & !TAG_MASK) as usize];
-                        self.log(t, TimelineEvent::Fault { nic: fe.nic, action: fe.action });
-                        self.apply_fault(fe.nic, fe.action);
-                        match fe.action {
-                            FaultAction::FailNic | FaultAction::CutCable => {
-                                if self.opts.policy == FailurePolicy::Crash {
-                                    self.log(t, TimelineEvent::VanillaAbort { nic: fe.nic });
-                                    self.report.crashed = true;
-                                    return;
-                                }
+                Event::Script(ScriptKind::Nic, idx) => {
+                    let fe = self.script[idx as usize];
+                    self.log(t, TimelineEvent::Fault { nic: fe.nic, action: fe.action });
+                    self.apply_fault(fe.nic, fe.action);
+                    match fe.action {
+                        FaultAction::FailNic | FaultAction::CutCable => {
+                            if self.opts.policy == FailurePolicy::Crash {
+                                self.log(t, TimelineEvent::VanillaAbort { nic: fe.nic });
+                                self.report.crashed = true;
+                                return;
+                            }
+                            let det = self.detection_latency(fe.nic);
+                            self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
+                        }
+                        FaultAction::Repair => {
+                            let next = ((t / self.timing.reprobe_interval).floor() + 1.0)
+                                * self.timing.reprobe_interval;
+                            self.engine.set_timer(next, TAG_REPROBE | fe.nic as u64);
+                        }
+                        FaultAction::Degrade(raw) => {
+                            // Fluctuation-triggered timeout: when the
+                            // clamped capacity factor collapses below
+                            // the timing threshold, in-flight work hits
+                            // transport timeouts exactly as on a dead
+                            // link — detect and migrate. Mild
+                            // degradations (CRC retries) stay on the
+                            // slow path; vanilla NCCL has no
+                            // fluctuation detection and just crawls.
+                            let factor = clamp_degrade_factor(raw);
+                            if self.opts.policy == FailurePolicy::HotRepair
+                                && factor < self.timing.degrade_detect_threshold
+                                && self.migrated_to[fe.nic].is_none()
+                            {
+                                // The migrated_to guard keeps a ramp
+                                // whose tail repeatedly dips below the
+                                // threshold from re-migrating a NIC
+                                // traffic already left.
+                                self.log(
+                                    t,
+                                    TimelineEvent::FluctuationDetected {
+                                        nic: fe.nic,
+                                        factor,
+                                    },
+                                );
                                 let det = self.detection_latency(fe.nic);
                                 self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
                             }
-                            FaultAction::Repair => {
-                                let next = ((t / self.timing.reprobe_interval).floor() + 1.0)
-                                    * self.timing.reprobe_interval;
-                                self.engine.set_timer(next, TAG_REPROBE | fe.nic as u64);
+                        }
+                    }
+                }
+                Event::Script(ScriptKind::Switch, idx) => {
+                    let se = self.switch_script[idx as usize];
+                    self.log(
+                        t,
+                        TimelineEvent::SwitchFault { target: se.target, action: se.action },
+                    );
+                    self.faults.set_switch(self.topo, &mut self.engine, se.target, se.action);
+                    // Leaf events hit every member NIC's connectivity;
+                    // an uplink outage (or collapsed degrade) stalls
+                    // the ECMP-pinned subset of the same member NICs'
+                    // traffic — both surface as transport timeouts at
+                    // those NICs, so both drive the per-member
+                    // detection → migration pipeline (an unrepaired
+                    // uplink must migrate, not hang).
+                    let owning_leaf = match se.target {
+                        SwitchTarget::Leaf(l) | SwitchTarget::Uplink(l, _) => Some(l),
+                        SwitchTarget::Spine(_) => None,
+                    };
+                    if let Some(l) = owning_leaf {
+                        let members: Vec<NicId> =
+                            self.topo.fabric().nics_of_leaf(l).collect();
+                        if dead_leaf_of(
+                            se.target,
+                            se.action,
+                            self.timing.degrade_detect_threshold,
+                        )
+                        .is_some()
+                        {
+                            // Down or collapsed degrade: member
+                            // connectivity is effectively gone.
+                            if self.opts.policy == FailurePolicy::Crash
+                                && matches!(
+                                    (se.target, se.action),
+                                    (SwitchTarget::Leaf(_), SwitchAction::Down)
+                                )
+                            {
+                                // Vanilla NCCL aborts on the error
+                                // storm of a whole-leaf outage.
+                                let nic = members.first().copied().unwrap_or(0);
+                                self.log(t, TimelineEvent::VanillaAbort { nic });
+                                self.report.crashed = true;
+                                return;
                             }
-                            FaultAction::Degrade(raw) => {
-                                // Fluctuation-triggered timeout: when the
-                                // clamped capacity factor collapses below
-                                // the timing threshold, in-flight work hits
-                                // transport timeouts exactly as on a dead
-                                // link — detect and migrate. Mild
-                                // degradations (CRC retries) stay on the
-                                // slow path; vanilla NCCL has no
-                                // fluctuation detection and just crawls.
-                                let factor = clamp_degrade_factor(raw);
-                                if self.opts.policy == FailurePolicy::HotRepair
-                                    && factor < self.timing.degrade_detect_threshold
-                                    && self.migrated_to[fe.nic].is_none()
-                                {
-                                    // The migrated_to guard keeps a ramp
-                                    // whose tail repeatedly dips below the
-                                    // threshold from re-migrating a NIC
-                                    // traffic already left.
-                                    self.log(
-                                        t,
-                                        TimelineEvent::FluctuationDetected {
-                                            nic: fe.nic,
-                                            factor,
-                                        },
-                                    );
-                                    let det = self.detection_latency(fe.nic);
-                                    self.engine.set_timer(t + det, TAG_DETECT | fe.nic as u64);
+                            if self.opts.policy == FailurePolicy::HotRepair {
+                                for m in members {
+                                    if self.migrated_to[m].is_none() {
+                                        let det = self.detection_latency(m);
+                                        self.engine
+                                            .set_timer(t + det, TAG_DETECT | m as u64);
+                                    }
                                 }
+                            }
+                        } else {
+                            // Recovery — `Up` or a Degrade back at or
+                            // above the threshold (e.g. the
+                            // `Degrade(1.0)` a saturation window ends
+                            // with): the periodic reprobe notices per
+                            // member NIC; its gate re-checks the whole
+                            // fabric tier (`fabric_restored`) before
+                            // un-migrating.
+                            for m in members {
+                                let next = ((t / self.timing.reprobe_interval).floor()
+                                    + 1.0)
+                                    * self.timing.reprobe_interval;
+                                self.engine.set_timer(next, TAG_REPROBE | m as u64);
                             }
                         }
                     }
+                    // Spine events and mild degrades are capacity-only;
+                    // the fluid engine carries them (scenario patterns
+                    // express spine trouble as Degrade, never Down).
+                }
+                Event::Timer(_, tag) => match tag & TAG_MASK {
                     TAG_DETECT => {
                         let nic = (tag & !TAG_MASK) as NicId;
                         if !self.handle_migration(t, nic, sched) {
@@ -603,78 +706,6 @@ impl<'a> Executor<'a> {
                             self.restore_routing(nic);
                             self.log(t, TimelineEvent::Reprobed { nic });
                         }
-                    }
-                    TAG_SWITCH => {
-                        let se = self.switch_script[(tag & !TAG_MASK) as usize];
-                        self.log(
-                            t,
-                            TimelineEvent::SwitchFault { target: se.target, action: se.action },
-                        );
-                        self.faults.set_switch(self.topo, &mut self.engine, se.target, se.action);
-                        // Leaf events hit every member NIC's connectivity;
-                        // an uplink outage (or collapsed degrade) stalls
-                        // the ECMP-pinned subset of the same member NICs'
-                        // traffic — both surface as transport timeouts at
-                        // those NICs, so both drive the per-member
-                        // detection → migration pipeline (an unrepaired
-                        // uplink must migrate, not hang).
-                        let owning_leaf = match se.target {
-                            SwitchTarget::Leaf(l) | SwitchTarget::Uplink(l, _) => Some(l),
-                            SwitchTarget::Spine(_) => None,
-                        };
-                        if let Some(l) = owning_leaf {
-                            let members: Vec<NicId> =
-                                self.topo.fabric().nics_of_leaf(l).collect();
-                            if dead_leaf_of(
-                                se.target,
-                                se.action,
-                                self.timing.degrade_detect_threshold,
-                            )
-                            .is_some()
-                            {
-                                // Down or collapsed degrade: member
-                                // connectivity is effectively gone.
-                                if self.opts.policy == FailurePolicy::Crash
-                                    && matches!(
-                                        (se.target, se.action),
-                                        (SwitchTarget::Leaf(_), SwitchAction::Down)
-                                    )
-                                {
-                                    // Vanilla NCCL aborts on the error
-                                    // storm of a whole-leaf outage.
-                                    let nic = members.first().copied().unwrap_or(0);
-                                    self.log(t, TimelineEvent::VanillaAbort { nic });
-                                    self.report.crashed = true;
-                                    return;
-                                }
-                                if self.opts.policy == FailurePolicy::HotRepair {
-                                    for m in members {
-                                        if self.migrated_to[m].is_none() {
-                                            let det = self.detection_latency(m);
-                                            self.engine
-                                                .set_timer(t + det, TAG_DETECT | m as u64);
-                                        }
-                                    }
-                                }
-                            } else {
-                                // Recovery — `Up` or a Degrade back at or
-                                // above the threshold (e.g. the
-                                // `Degrade(1.0)` a saturation window ends
-                                // with): the periodic reprobe notices per
-                                // member NIC; its gate re-checks the whole
-                                // fabric tier (`fabric_restored`) before
-                                // un-migrating.
-                                for m in members {
-                                    let next = ((t / self.timing.reprobe_interval).floor()
-                                        + 1.0)
-                                        * self.timing.reprobe_interval;
-                                    self.engine.set_timer(next, TAG_REPROBE | m as u64);
-                                }
-                            }
-                        }
-                        // Spine events and mild degrades are capacity-only;
-                        // the fluid engine carries them (scenario patterns
-                        // express spine trouble as Degrade, never Down).
                     }
                     _ => unreachable!("unknown timer tag {tag:#x}"),
                 },
@@ -826,13 +857,15 @@ impl<'a> Executor<'a> {
         self.migrated_to[nic] = Some(replacement);
         self.rewrite_routing(nic);
 
-        // Migrate every flow whose path crosses the dead NIC.
+        // Migrate every flow whose path crosses the dead NIC. The engine
+        // returns a borrowed sorted slice; copy it into the executor's
+        // reusable scratch because the migration loop below mutates the
+        // engine (abort + re-issue).
         let tx = self.topo.resource(ResourceKey::NicTx(nic));
         let rx = self.topo.resource(ResourceKey::NicRx(nic));
-        let mut victims = self.engine.flows_through(tx);
-        victims.extend(self.engine.flows_through(rx));
-        victims.sort_unstable();
-        victims.dedup();
+        let mut victims = std::mem::take(&mut self.victims);
+        victims.clear();
+        victims.extend_from_slice(self.engine.flows_through_pair(tx, rx));
 
         let mut rec = MigrationRecord {
             at: t,
@@ -843,7 +876,7 @@ impl<'a> Executor<'a> {
             retransmitted_bytes: 0,
             wasted_bytes: 0,
         };
-        for fid in victims {
+        for &fid in &victims {
             let Some(info) = self.take_flow(fid) else { continue };
             let progress = self.engine.abort_flow(fid);
             // Chunk-quantised rollback (§4.3 Technique II).
@@ -864,6 +897,7 @@ impl<'a> Executor<'a> {
                 self.engine.add_flow(plan.path, remaining as f64, plan.latency, info.group as u64);
             self.insert_flow(new_fid, FlowInfo { group: info.group, sub: info.sub, size: remaining });
         }
+        self.victims = victims;
         self.log(
             t,
             TimelineEvent::Migration {

@@ -24,21 +24,28 @@ use std::sync::Arc;
 
 use crate::config::TimingConfig;
 use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
+use crate::fabric::{SwitchAction, SwitchFaultEvent, SwitchTarget};
 use crate::netsim::{clamp_degrade_factor, Engine, Event, FaultPlane, FlowId};
 use crate::topology::{NicId, ResourceKey, Route, Topology};
 use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
 
 use super::dataplane::DataPlane;
 use super::exec::{
-    ChannelRouting, ExecOptions, ExecReport, FailurePolicy, FaultAction, FaultEvent,
+    dead_leaf_of, ChannelRouting, ExecOptions, ExecReport, FailurePolicy, FaultAction, FaultEvent,
     MigrationRecord, TimelineEntry, TimelineEvent,
 };
 use super::schedule::Schedule;
 
-// Timer tag encoding (identical to the optimized executor's).
+// Timer tag encoding — the pre-kernel scheme, preserved in full: scripted
+// NIC and switch faults ride timer tags here, where the optimized executor
+// schedules them as first-class [`Event::Script`] kernel events. The push
+// order and count per script entry are identical either way, which is what
+// keeps event sequence numbers (and thus all tie-breaking) aligned between
+// the two executors.
 const TAG_FAULT: u64 = 1 << 48;
 const TAG_DETECT: u64 = 2 << 48;
 const TAG_REPROBE: u64 = 3 << 48;
+const TAG_SWITCH: u64 = 4 << 48;
 const TAG_MASK: u64 = 0xffff_0000_0000_0000;
 
 struct FlowInfo {
@@ -62,6 +69,8 @@ pub struct BaselineExecutor<'a> {
     faults: FaultPlane,
     engine: Engine,
     script: Vec<FaultEvent>,
+    /// Scripted switch-scoped faults (leaf/spine fabrics only).
+    switch_script: Vec<SwitchFaultEvent>,
     /// failed NIC → replacement (resolution chain for hinted routes).
     migrated_to: HashMap<NicId, NicId>,
     flows: HashMap<FlowId, FlowInfo>,
@@ -77,9 +86,11 @@ impl<'a> BaselineExecutor<'a> {
         script: Vec<FaultEvent>,
     ) -> Self {
         // A fresh engine allocation per run — the seed's behaviour the
-        // pooled `engine_for` replaces.
-        let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
-        let engine = Engine::new(&caps);
+        // pooled `engine_for` replaces. It still shares the topology's
+        // capacity table and rate domains so both executors run the same
+        // domain-aware kernel arithmetic (the conformance tests compare
+        // `recomputes` and event times bit-for-bit).
+        let engine = Engine::new_shared(topo.shared_caps(), topo.rate_domains());
         BaselineExecutor {
             topo,
             timing,
@@ -89,6 +100,7 @@ impl<'a> BaselineExecutor<'a> {
             faults: FaultPlane::new(topo),
             engine,
             script,
+            switch_script: Vec::new(),
             migrated_to: HashMap::new(),
             flows: HashMap::new(),
             report: ExecReport {
@@ -99,8 +111,46 @@ impl<'a> BaselineExecutor<'a> {
                 timeline: Vec::new(),
                 recomputes: 0,
                 flows_created: 0,
+                events_popped: 0,
+                domains_touched: 0,
+                resident_resources: 0,
             },
         }
+    }
+
+    /// Schedule switch-scoped faults to fire mid-collective; identical
+    /// semantics to `Executor::with_switch_script`.
+    pub fn with_switch_script(mut self, script: Vec<SwitchFaultEvent>) -> Self {
+        self.switch_script = script;
+        self
+    }
+
+    /// Apply standing switch faults before the collective starts;
+    /// identical semantics to `Executor::with_initial_switch_faults`
+    /// (applied before `with_initial_faults`).
+    pub fn with_initial_switch_faults(
+        mut self,
+        faults: &[(SwitchTarget, SwitchAction)],
+    ) -> Self {
+        for &(target, action) in faults {
+            self.faults.set_switch(self.topo, &mut self.engine, target, action);
+            if let Some(l) = dead_leaf_of(target, action, self.timing.degrade_detect_threshold) {
+                let members: Vec<NicId> = self.topo.fabric().nics_of_leaf(l).collect();
+                for m in members {
+                    if let Some(rep) = self
+                        .topo
+                        .failover_chain(self.topo.affinity_gpu(m))
+                        .iter()
+                        .copied()
+                        .find(|&n| n != m && self.faults.is_usable(n))
+                    {
+                        self.migrated_to.insert(m, rep);
+                    }
+                    self.rewrite_routing(m);
+                }
+            }
+        }
+        self
     }
 
     /// Apply pre-existing faults before the collective starts; identical
@@ -133,6 +183,9 @@ impl<'a> BaselineExecutor<'a> {
         self.run_inner(sched, plane);
         self.report.recomputes = self.engine.recomputes;
         self.report.flows_created = self.engine.flows_created;
+        self.report.events_popped = self.engine.events_popped;
+        self.report.domains_touched = self.engine.domains_touched;
+        self.report.resident_resources = self.engine.resident_peak() as u64;
         self.report
     }
 
@@ -157,6 +210,10 @@ impl<'a> BaselineExecutor<'a> {
         for i in 0..self.script.len() {
             let at = self.script[i].at;
             self.engine.set_timer(at, TAG_FAULT | i as u64);
+        }
+        for i in 0..self.switch_script.len() {
+            let at = self.switch_script[i].at;
+            self.engine.set_timer(at, TAG_SWITCH | i as u64);
         }
 
         for i in 0..n {
@@ -236,13 +293,73 @@ impl<'a> BaselineExecutor<'a> {
                     }
                     TAG_REPROBE => {
                         let nic = (tag & !TAG_MASK) as NicId;
-                        if self.faults.is_usable(nic) {
+                        // Restore only when the NIC *and* its whole fabric
+                        // tier are back (mirrors the optimized executor).
+                        if self.faults.is_usable(nic)
+                            && self
+                                .faults
+                                .fabric_restored(nic, self.timing.degrade_detect_threshold)
+                        {
                             self.restore_routing(nic);
                             self.log(t, TimelineEvent::Reprobed { nic });
                         }
                     }
+                    TAG_SWITCH => {
+                        let se = self.switch_script[(tag & !TAG_MASK) as usize];
+                        self.log(
+                            t,
+                            TimelineEvent::SwitchFault { target: se.target, action: se.action },
+                        );
+                        self.faults.set_switch(self.topo, &mut self.engine, se.target, se.action);
+                        let owning_leaf = match se.target {
+                            SwitchTarget::Leaf(l) | SwitchTarget::Uplink(l, _) => Some(l),
+                            SwitchTarget::Spine(_) => None,
+                        };
+                        if let Some(l) = owning_leaf {
+                            let members: Vec<NicId> =
+                                self.topo.fabric().nics_of_leaf(l).collect();
+                            if dead_leaf_of(
+                                se.target,
+                                se.action,
+                                self.timing.degrade_detect_threshold,
+                            )
+                            .is_some()
+                            {
+                                if self.opts.policy == FailurePolicy::Crash
+                                    && matches!(
+                                        (se.target, se.action),
+                                        (SwitchTarget::Leaf(_), SwitchAction::Down)
+                                    )
+                                {
+                                    let nic = members.first().copied().unwrap_or(0);
+                                    self.log(t, TimelineEvent::VanillaAbort { nic });
+                                    self.report.crashed = true;
+                                    return;
+                                }
+                                if self.opts.policy == FailurePolicy::HotRepair {
+                                    for m in members {
+                                        if !self.migrated_to.contains_key(&m) {
+                                            let det = self.detection_latency(m);
+                                            self.engine
+                                                .set_timer(t + det, TAG_DETECT | m as u64);
+                                        }
+                                    }
+                                }
+                            } else {
+                                for m in members {
+                                    let next = ((t / self.timing.reprobe_interval).floor()
+                                        + 1.0)
+                                        * self.timing.reprobe_interval;
+                                    self.engine.set_timer(next, TAG_REPROBE | m as u64);
+                                }
+                            }
+                        }
+                    }
                     _ => unreachable!("unknown timer tag {tag:#x}"),
                 },
+                Event::Script(..) => {
+                    unreachable!("baseline schedules scripts as timers, never kernel events")
+                }
             }
         }
         if done < n {
@@ -383,10 +500,7 @@ impl<'a> BaselineExecutor<'a> {
         // Migrate every flow whose path crosses the dead NIC.
         let tx = self.topo.resource(ResourceKey::NicTx(nic));
         let rx = self.topo.resource(ResourceKey::NicRx(nic));
-        let mut victims = self.engine.flows_through(tx);
-        victims.extend(self.engine.flows_through(rx));
-        victims.sort_unstable();
-        victims.dedup();
+        let victims = self.engine.flows_through_pair(tx, rx).to_vec();
 
         let mut rec = MigrationRecord {
             at: t,

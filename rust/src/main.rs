@@ -9,6 +9,10 @@
 //!                     [--golden-dir rust/tests/fixtures] [--regen] [--json]
 //!                     [--threads N]   (default: available parallelism)
 //!                     [--fabric leaf-spine|flat]   (override flat scenarios)
+//!   cluster-sweep     [--servers 1024,4096] [--bytes-per-rank N] [--pod-size 8]
+//!                     [--spines 4] [--oversub 2.0] [--channels 2]
+//!                     [--ring-cap 1024] [--a2a-cap 128] [--quick] [--json]
+//!                     (CLUSTER_* env vars apply first; flags win)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -278,6 +282,59 @@ fn main() -> anyhow::Result<()> {
                 std::process::exit(1);
             }
         }
+        "cluster-sweep" => {
+            // The cluster_sweep bench's shape, CLI-driven: `CLUSTER_*` env
+            // vars apply first (same knobs CI uses), explicit flags win.
+            // 1024–4096-server sweeps need no code edits:
+            //   cluster-sweep --servers 1024,4096 --ring-cap 256 --json
+            use r2ccl::sim::{cluster_sweep, cluster_sweep_to_json, ClusterSweepCfg};
+            let base =
+                if args.has("quick") { ClusterSweepCfg::quick() } else { ClusterSweepCfg::full() };
+            let mut cfg = base.apply_env();
+            if let Some(v) = args.get("servers") {
+                let counts: Vec<usize> =
+                    v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                if !counts.is_empty() {
+                    cfg.server_counts = counts;
+                }
+            }
+            cfg.bytes_per_rank = args.get_u64("bytes-per-rank", cfg.bytes_per_rank);
+            cfg.pod_size = args.get_usize("pod-size", cfg.pod_size);
+            cfg.spines = args.get_usize("spines", cfg.spines);
+            cfg.oversubscription = args.get_f64("oversub", cfg.oversubscription);
+            cfg.channels = args.get_usize("channels", cfg.channels);
+            cfg.ring_cap = args.get_usize("ring-cap", cfg.ring_cap);
+            cfg.a2a_cap = args.get_usize("a2a-cap", cfg.a2a_cap);
+            println!(
+                "cluster sweep: servers {:?}, pod_size={} spines={} oversub={}x, {} B/rank, ring_cap={} a2a_cap={}",
+                cfg.server_counts,
+                cfg.pod_size,
+                cfg.spines,
+                cfg.oversubscription,
+                cfg.bytes_per_rank,
+                cfg.ring_cap,
+                cfg.a2a_cap
+            );
+            let rows = cluster_sweep(&cfg);
+            for r in &rows {
+                println!(
+                    "  n={:<5} {:?}[{} ranks]: healthy {} ({:.1} GB/s) leaf-down {} ({:+.1}%) {} | events {} resident {}",
+                    r.n_servers,
+                    r.kind,
+                    r.ranks,
+                    fmt_time(r.healthy_time),
+                    r.healthy_busbw / 1e9,
+                    fmt_time(r.leaf_down_time),
+                    100.0 * r.overhead,
+                    r.leaf_down_strategy,
+                    r.events_popped,
+                    r.resident_resources
+                );
+            }
+            if args.has("json") {
+                println!("{}", cluster_sweep_to_json(&cfg, &rows).pretty());
+            }
+        }
         #[cfg(feature = "xla")]
         "train-e2e" => {
             let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
@@ -317,7 +374,7 @@ fn main() -> anyhow::Result<()> {
                 world.topo().n_resources()
             );
             println!(
-                "subcommands: bench-collective | train-sim | serve-sim | scenario | train-e2e | info"
+                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | train-e2e | info"
             );
         }
     }

@@ -1,0 +1,302 @@
+//! Calendar event queue for the discrete-event kernel.
+//!
+//! A classic calendar queue ("calendar of heaps" variant): events hash by
+//! day (`time / width`) into a power-of-two ring of buckets, each bucket a
+//! min-heap over the *full* event key. Popping scans forward from the
+//! cursor day; a bucket's top is accepted only when it belongs to the day
+//! under the cursor, so items from future calendar years sitting in the
+//! same bucket are skipped until their year comes around. When a whole
+//! year scans dry (a sparse horizon — e.g. only a far-future reprobe timer
+//! remains), the queue falls back to a direct scan of the bucket tops and
+//! jumps the cursor to the global minimum.
+//!
+//! The pop order is *exactly* the total order of `T` (time key first,
+//! insertion sequence second): same-day items share one bucket heap, and
+//! across days the scan returns earlier days first. The bucket geometry
+//! (width, bucket count) therefore affects only cost, never order — which
+//! is what keeps pooled-engine replays bit-identical regardless of how a
+//! previous run grew the calendar.
+//!
+//! All arithmetic is integer/IEEE-deterministic; there is no sampling or
+//! randomized width estimation (the classic queue's adaptive width is
+//! replaced by a deterministic span/len estimate at resize time).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// An event the calendar can schedule: totally ordered, with an absolute
+/// timestamp the bucket mapping is keyed on. The order of `T` must be
+/// consistent with `at` (earlier time ⇒ smaller), with ties broken by the
+/// rest of the key.
+pub(crate) trait CalItem: Ord {
+    fn at(&self) -> f64;
+}
+
+const INITIAL_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 16;
+/// Default day width in seconds (µs scale — the typical inter-event gap of
+/// collective runs; wrong guesses only cost scan steps, never order).
+const DEFAULT_WIDTH: f64 = 1.0e-6;
+const MIN_WIDTH: f64 = 1.0e-9;
+const MAX_WIDTH: f64 = 1.0e3;
+
+#[derive(Debug)]
+pub(crate) struct CalendarQueue<T: CalItem> {
+    /// Power-of-two bucket ring; bucket `d & mask` holds all items of day `d`.
+    buckets: Vec<BinaryHeap<Reverse<T>>>,
+    mask: u64,
+    width: f64,
+    /// Day of the last accepted pop; all queued items are on this day or later.
+    cursor: u64,
+    len: usize,
+}
+
+impl<T: CalItem> CalendarQueue<T> {
+    pub fn new() -> CalendarQueue<T> {
+        CalendarQueue {
+            buckets: (0..INITIAL_BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            mask: (INITIAL_BUCKETS - 1) as u64,
+            width: DEFAULT_WIDTH,
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Day index of an absolute time. Monotone in `t`; non-finite or huge
+    /// times saturate to `u64::MAX` (the far-future fallback handles them).
+    #[inline]
+    fn day_of(&self, t: f64) -> u64 {
+        if t <= 0.0 {
+            0
+        } else {
+            (t / self.width) as u64 // saturating cast: inf → u64::MAX
+        }
+    }
+
+    pub fn push(&mut self, item: T) {
+        if self.len >= self.buckets.len() * 8 && self.buckets.len() < MAX_BUCKETS {
+            self.rebuild(self.buckets.len() * 2);
+        }
+        let day = self.day_of(item.at());
+        debug_assert!(
+            day >= self.cursor || item.at().is_nan() || item.at() >= 0.0,
+            "push into the past: day {day} < cursor {}",
+            self.cursor
+        );
+        // Clamp a (float-ulp) past push onto the cursor day so it stays
+        // reachable; within the bucket the heap still orders it first.
+        let day = day.max(self.cursor);
+        let b = (day & self.mask) as usize;
+        self.buckets[b].push(Reverse(item));
+        self.len += 1;
+    }
+
+    /// Pop the global minimum (full `T` order).
+    pub fn pop(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        // Scan one full year forward from the cursor.
+        for i in 0..self.buckets.len() as u64 {
+            let day = self.cursor.saturating_add(i);
+            let b = (day & self.mask) as usize;
+            if let Some(Reverse(top)) = self.buckets[b].peek() {
+                if self.day_of(top.at()).max(self.cursor) <= day {
+                    self.cursor = day;
+                    self.len -= 1;
+                    return self.buckets[b].pop().map(|Reverse(t)| t);
+                }
+            }
+        }
+        // Sparse horizon: every queued item is at least a year out. Jump to
+        // the global minimum over the bucket tops (each top is its bucket's
+        // minimum, so the least top is the least item).
+        let mut best: Option<usize> = None;
+        for b in 0..self.buckets.len() {
+            if let Some(Reverse(t)) = self.buckets[b].peek() {
+                let better = match best {
+                    None => true,
+                    Some(bb) => {
+                        let Reverse(cur) = self.buckets[bb].peek().unwrap();
+                        t < cur
+                    }
+                };
+                if better {
+                    best = Some(b);
+                }
+            }
+        }
+        let b = best.expect("len > 0 but every bucket is empty");
+        let item = self.buckets[b].pop().map(|Reverse(t)| t).unwrap();
+        self.cursor = self.day_of(item.at()).max(self.cursor);
+        self.len -= 1;
+        Some(item)
+    }
+
+    /// Drop every queued event and rewind the calendar, retaining bucket
+    /// allocations (the pooled-engine arena-reuse path).
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.cursor = 0;
+        self.len = 0;
+        self.width = DEFAULT_WIDTH;
+    }
+
+    /// Re-bucket everything into `n_buckets` (power of two), re-estimating
+    /// the day width from the current content's span. Order-preserving by
+    /// construction (order never depends on geometry).
+    fn rebuild(&mut self, n_buckets: usize) {
+        debug_assert!(n_buckets.is_power_of_two());
+        let mut items: Vec<T> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            items.extend(std::mem::take(b).into_iter().map(|Reverse(t)| t));
+        }
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for it in &items {
+            let t = it.at();
+            if t.is_finite() {
+                lo = lo.min(t);
+                hi = hi.max(t);
+            }
+        }
+        if hi > lo && !items.is_empty() {
+            self.width = ((hi - lo) / items.len() as f64).clamp(MIN_WIDTH, MAX_WIDTH);
+        }
+        if self.buckets.len() < n_buckets {
+            self.buckets.resize_with(n_buckets, BinaryHeap::new);
+        } else {
+            self.buckets.truncate(n_buckets);
+        }
+        self.mask = (n_buckets - 1) as u64;
+        // The width changed, so the cursor day must be re-derived from the
+        // earliest queued time (nothing can be earlier than it).
+        self.cursor = if lo.is_finite() { self.day_of(lo) } else { 0 };
+        self.len = 0;
+        for it in items {
+            let day = self.day_of(it.at()).max(self.cursor);
+            let b = (day & self.mask) as usize;
+            self.buckets[b].push(Reverse(it));
+            self.len += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+    struct Item(u64, u64); // (time in ns, seq)
+
+    impl CalItem for Item {
+        fn at(&self) -> f64 {
+            self.0 as f64 * 1e-9
+        }
+    }
+
+    /// Deterministic splitmix64 for the stress tests.
+    fn mix(x: &mut u64) -> u64 {
+        *x = x.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = *x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    #[test]
+    fn pops_in_full_key_order() {
+        let mut q = CalendarQueue::new();
+        q.push(Item(500, 1));
+        q.push(Item(100, 2));
+        q.push(Item(100, 3));
+        q.push(Item(0, 4));
+        assert_eq!(q.pop(), Some(Item(0, 4)));
+        assert_eq!(q.pop(), Some(Item(100, 2)));
+        assert_eq!(q.pop(), Some(Item(100, 3)));
+        assert_eq!(q.pop(), Some(Item(500, 1)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn matches_reference_heap_under_random_interleaving() {
+        let mut rng = 0xC0FFEE_u64;
+        let mut q = CalendarQueue::new();
+        let mut reference: BinaryHeap<Reverse<Item>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut frontier = 0u64; // pops only move time forward
+        for step in 0..20_000 {
+            if mix(&mut rng) % 3 != 0 {
+                // Mixed scales: ns-dense bursts and second-scale outliers.
+                let spread = if mix(&mut rng) % 50 == 0 { 1_000_000_000 } else { 10_000 };
+                let t = frontier + mix(&mut rng) % spread;
+                seq += 1;
+                q.push(Item(t, seq));
+                reference.push(Reverse(Item(t, seq)));
+            } else {
+                let got = q.pop();
+                let want = reference.pop().map(|Reverse(t)| t);
+                assert_eq!(got, want, "step {step}");
+                if let Some(it) = got {
+                    frontier = it.0;
+                }
+            }
+        }
+        while let Some(Reverse(want)) = reference.pop() {
+            assert_eq!(q.pop(), Some(want));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn sparse_horizon_jumps_to_far_future_items() {
+        let mut q = CalendarQueue::new();
+        // A lone event years past the cursor's calendar year must still pop
+        // (the direct-scan fallback), and in order against a later burst.
+        q.push(Item(3_000_000_000, 1)); // 3 s with ns-scale width
+        assert_eq!(q.pop(), Some(Item(3_000_000_000, 1)));
+        q.push(Item(9_000_000_000, 2));
+        q.push(Item(3_500_000_000, 3)); // behind the previous pop's day? no — later time, earlier than item 2
+        assert_eq!(q.pop(), Some(Item(3_500_000_000, 3)));
+        assert_eq!(q.pop(), Some(Item(9_000_000_000, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn growth_rebuild_preserves_order() {
+        let mut rng = 7u64;
+        let mut q = CalendarQueue::new();
+        let mut items: Vec<Item> = Vec::new();
+        for seq in 0..5_000 {
+            let t = mix(&mut rng) % 1_000_000;
+            q.push(Item(t, seq));
+            items.push(Item(t, seq));
+        }
+        items.sort();
+        for want in items {
+            assert_eq!(q.pop(), Some(want));
+        }
+    }
+
+    #[test]
+    fn clear_resets_for_reuse() {
+        let mut q = CalendarQueue::new();
+        for seq in 0..100 {
+            q.push(Item(seq * 1000, seq));
+        }
+        let _ = q.pop();
+        q.clear();
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.pop(), None);
+        // Time rewinds after clear — a fresh run starts at day zero.
+        q.push(Item(5, 1));
+        q.push(Item(1, 2));
+        assert_eq!(q.pop(), Some(Item(1, 2)));
+        assert_eq!(q.pop(), Some(Item(5, 1)));
+    }
+}

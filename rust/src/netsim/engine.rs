@@ -8,13 +8,45 @@
 //! quantities the paper measures (bus bandwidth vs message size, degradation
 //! ratios under NIC loss) without packet-level detail.
 //!
+//! # The event kernel
+//!
+//! All future work merges by timestamp into one [`CalendarQueue`]: flow
+//! activations and predicted completions, caller timers, and first-class
+//! scenario script events ([`Event::Script`] — NIC faults and switch faults
+//! scheduled via [`Engine::schedule_script`]). There is no side-channel
+//! timer list and no next-completion scan; `next_event` pops the queue.
+//!
+//! # Sparse resource state
+//!
+//! Base capacities live in a shared immutable `Arc<[f64]>` (one allocation
+//! per topology, shared by every engine over it). Mutable per-resource
+//! state — degradation factor, up/down, the incidence list of live flows —
+//! materializes in a compact entry table only for resources that a live
+//! flow crosses or a fault has touched; a 4096-server fabric's hundreds of
+//! thousands of resources cost one `u32` slot each until used. Entries
+//! whose state has returned to the default (up, factor 1, no flows)
+//! de-materialize. Invariant: a non-resident resource is up at factor 1.
+//!
+//! # Hierarchical rate aggregation
+//!
+//! A [`RateDomains`] partition (keyed on fabric tiers: one domain per pod /
+//! per spine block) scopes every rate recompute. Dirty marks accumulate per
+//! domain; the recompute chases the closure — a dirty domain pulls in its
+//! live flows, and each flow pulls in the other domains it crosses — so a
+//! leaf-local change re-runs progressive filling over one pod's flows and
+//! never touches remote pods' resources. Max-min filling decomposes exactly
+//! across resource-disjoint components, so the closure allocation equals
+//! the global allocation (the engine-level conformance tests pin this).
+//!
 //! The engine is deterministic: ties in event time are broken by insertion
-//! sequence.
+//! sequence, the recompute closure is processed in ascending flow order,
+//! and the calendar queue pops in exact `(time, seq)` order regardless of
+//! its bucket geometry.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::sync::Arc;
 
-use crate::topology::ResourceId;
+use super::calendar::{CalItem, CalendarQueue};
+use crate::topology::{RateDomains, ResourceId};
 
 /// Simulation time in seconds.
 pub type SimTime = f64;
@@ -23,6 +55,15 @@ pub type FlowId = usize;
 /// Timer identifier.
 pub type TimerId = usize;
 
+/// Which scenario script a [`Event::Script`] entry belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ScriptKind {
+    /// NIC-plane fault script (fail / degrade / repair a NIC).
+    Nic,
+    /// Switch-plane fault script (leaf / spine / uplink events).
+    Switch,
+}
+
 /// Events surfaced to the driver (collective runner / workload simulator).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
@@ -30,6 +71,9 @@ pub enum Event {
     FlowCompleted(FlowId),
     /// A timer fired; the tag is caller-defined.
     Timer(TimerId, u64),
+    /// A scenario script entry is due; the index is the caller's position
+    /// in the corresponding script.
+    Script(ScriptKind, u32),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -39,9 +83,11 @@ enum Pending {
     /// Predicted flow completion (validated against the flow's epoch).
     Complete(FlowId, u64),
     Timer(TimerId, u64),
+    /// First-class scenario script delivery (NIC or switch plane).
+    Script(ScriptKind, u32),
 }
 
-/// Total-ordered f64 key for the event heap.
+/// Total-ordered f64 key for the event queue.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct TimeKey(f64);
 
@@ -57,22 +103,35 @@ impl Ord for TimeKey {
     }
 }
 
+/// One queued kernel event: `(time, insertion seq, payload)`.
+type Item = (TimeKey, u64, Pending);
+
+impl CalItem for Item {
+    fn at(&self) -> f64 {
+        self.0 .0
+    }
+}
+
+const NO_ENTRY: u32 = u32::MAX;
+/// Sentinel in `Flow::n_doms`: the path crosses more domains than the
+/// inline array holds; derive the domain set from the path instead.
+const DOMS_OVERFLOW: u8 = u8::MAX;
+
+/// Materialized (sparse) per-resource state. Only resources referenced by
+/// live flows or carrying fault state have one.
 #[derive(Debug, Clone)]
-struct Resource {
-    capacity: f64,
+struct ResEntry {
+    rid: u32,
     /// Multiplicative degradation factor in (0,1]; capacity*factor is usable.
     factor: f64,
     up: bool,
-}
-
-impl Resource {
-    fn effective(&self) -> f64 {
-        if self.up {
-            self.capacity * self.factor
-        } else {
-            0.0
-        }
-    }
+    /// Incidence list: non-terminal flows whose path crosses the resource.
+    flows: Vec<FlowId>,
+    // Progressive-filling scratch, valid only inside one recompute.
+    // Invariants between recomputes: `fill_count == 0`, `bottleneck == false`.
+    fill_cap: f64,
+    fill_count: u32,
+    bottleneck: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -93,120 +152,185 @@ struct Flow {
     size: f64,
     remaining: f64,
     rate: f64,
+    /// Time up to which `remaining` has been settled. Progress accrues
+    /// lazily: each flow settles on touch (rate change, completion, abort,
+    /// progress query) in one multiply instead of a global per-event sweep.
+    settled_at: SimTime,
     state: FlowState,
-    /// Bumped whenever the flow's predicted completion changes; stale heap
+    /// Bumped whenever the flow's predicted completion changes; stale queue
     /// entries are dropped on pop.
     epoch: u64,
+    /// The distinct rate domains this flow's path crosses (topology paths
+    /// cross at most 4 tiers); `n_doms == DOMS_OVERFLOW` ⇒ derive from path.
+    doms: [u32; 4],
+    n_doms: u8,
     /// Caller-defined tag returned alongside events for dispatch.
     pub tag: u64,
 }
 
-/// The engine. Drive it with [`Engine::add_flow`]/[`Engine::set_timer`] and
-/// consume events with [`Engine::next_event`].
+/// The engine. Drive it with [`Engine::add_flow`]/[`Engine::set_timer`]/
+/// [`Engine::schedule_script`] and consume events with [`Engine::next_event`].
 #[derive(Debug)]
 pub struct Engine {
     now: SimTime,
-    resources: Vec<Resource>,
+    /// Immutable base capacities, shared across engines over one topology.
+    base_caps: Arc<[f64]>,
+    /// Resource → rate-domain partition (hierarchical aggregation).
+    domains: Arc<RateDomains>,
+    /// resource → index into `entries`, or `NO_ENTRY` (sparse state).
+    slot: Vec<u32>,
+    entries: Vec<ResEntry>,
+    /// Released entries kept for their `flows` allocations.
+    spare: Vec<ResEntry>,
     flows: Vec<Flow>,
-    heap: BinaryHeap<Reverse<(TimeKey, u64, Pending)>>,
+    queue: CalendarQueue<Item>,
     seq: u64,
     next_timer: TimerId,
-    /// Time of the last fluid settle; progress accrues between settles.
-    last_settle: SimTime,
-    /// Index of non-terminal flows (Latent/Active/Stalled): settling and
-    /// rate recomputation iterate only these, keeping per-event cost
-    /// proportional to *concurrent* flows rather than all flows ever
-    /// created (§Perf: this was the executor's quadratic hot spot).
-    live: Vec<FlowId>,
-    /// Per-resource incidence lists: non-terminal flows whose path crosses
-    /// the resource. Maintained on `add_flow` and pruned when a flow turns
-    /// terminal, so `flows_through` reads one short list instead of
-    /// scanning every live flow's path (§Perf).
-    res_flows: Vec<Vec<FlowId>>,
+    /// Per-domain registries of flows whose path crosses the domain.
+    /// Pruned lazily (terminal flows drop out when the domain next recomputes).
+    dom_flows: Vec<Vec<FlowId>>,
+    /// Domains whose registry has ever been written since the last reset.
+    dom_used: Vec<u32>,
+    /// Dirty domains awaiting the next recompute (deduped via the marks).
+    dom_dirty: Vec<u32>,
+    dom_dirty_mark: Vec<u64>,
+    dirty_gen: u64,
+    /// Per-flow closure-membership marks (generation-tagged).
+    flow_mark: Vec<u64>,
+    flow_gen: u64,
     dirty: bool,
     /// Number of rate recomputations (perf counter).
     pub recomputes: u64,
     /// Flows ever created on this engine since the last reset
     /// (allocation-proxy perf counter recorded by the benches).
     pub flows_created: u64,
-    // ---- Reusable scratch for the rate recomputation (§Perf: hoisted so
-    // ---- steady-state recomputes are allocation-free). Invariants between
-    // ---- recomputes: `scratch_count` all zeros, `scratch_bottleneck` all
-    // ---- false; `scratch_cap` carries no invariant (written before read).
-    scratch_cap: Vec<f64>,
-    scratch_count: Vec<usize>,
-    scratch_bottleneck: Vec<bool>,
-    scratch_touched: Vec<ResourceId>,
+    /// Kernel events popped off the calendar queue (incl. stale entries).
+    pub events_popped: u64,
+    /// Sum over recomputes of the number of rate domains in the dirty
+    /// closure — the hierarchical-aggregation locality counter.
+    pub domains_touched: u64,
+    /// High-water mark of materialized resource entries.
+    resident_peak: usize,
+    // ---- Reusable scratch (§Perf: steady-state recomputes are
+    // ---- allocation-free).
+    scratch_closure: Vec<FlowId>,
+    scratch_touched: Vec<u32>,
     scratch_active: Vec<FlowId>,
     scratch_unfixed: Vec<FlowId>,
     scratch_still: Vec<FlowId>,
     scratch_prev: Vec<(FlowId, f64, FlowState)>,
+    scratch_doms: Vec<u32>,
+    scratch_victims: Vec<FlowId>,
 }
 
 impl Engine {
-    /// Create an engine over `capacities[(resource)] = bytes/s`.
+    /// Create an engine over `capacities[(resource)] = bytes/s`, with a
+    /// single global rate domain (no hierarchical aggregation).
     pub fn new(capacities: &[f64]) -> Engine {
+        Engine::new_shared(capacities.iter().copied().collect(), Arc::new(RateDomains::single()))
+    }
+
+    /// Create an engine over shared base capacities and a rate-domain
+    /// partition. The `Arc`s are shared with the topology: engines over one
+    /// fabric do not copy its capacity table.
+    pub fn new_shared(caps: Arc<[f64]>, domains: Arc<RateDomains>) -> Engine {
         let mut e = Engine {
             now: 0.0,
-            resources: Vec::new(),
+            base_caps: Arc::from(Vec::new()),
+            domains: Arc::new(RateDomains::single()),
+            slot: Vec::new(),
+            entries: Vec::new(),
+            spare: Vec::new(),
             flows: Vec::new(),
-            heap: BinaryHeap::new(),
+            queue: CalendarQueue::new(),
             seq: 0,
             next_timer: 0,
-            last_settle: 0.0,
-            live: Vec::new(),
-            res_flows: Vec::new(),
+            dom_flows: Vec::new(),
+            dom_used: Vec::new(),
+            dom_dirty: Vec::new(),
+            dom_dirty_mark: Vec::new(),
+            dirty_gen: 1,
+            flow_mark: Vec::new(),
+            flow_gen: 0,
             dirty: false,
             recomputes: 0,
             flows_created: 0,
-            scratch_cap: Vec::new(),
-            scratch_count: Vec::new(),
-            scratch_bottleneck: Vec::new(),
+            events_popped: 0,
+            domains_touched: 0,
+            resident_peak: 0,
+            scratch_closure: Vec::new(),
             scratch_touched: Vec::new(),
             scratch_active: Vec::new(),
             scratch_unfixed: Vec::new(),
             scratch_still: Vec::new(),
             scratch_prev: Vec::new(),
+            scratch_doms: Vec::new(),
+            scratch_victims: Vec::new(),
         };
-        e.reset(capacities.iter().copied());
+        e.reset_shared(caps, domains);
         e
     }
 
-    /// Reset to a pristine engine over `capacities`, retaining every
-    /// allocated buffer (heap, flow table, incidence lists, scratch). This
-    /// is the arena-reuse path behind the pooled
+    /// Reset to a pristine engine over `capacities` (single rate domain),
+    /// retaining every allocated buffer. See [`Engine::reset_shared`].
+    pub fn reset<I: ExactSizeIterator<Item = f64>>(&mut self, capacities: I) {
+        let caps: Arc<[f64]> = capacities.collect();
+        self.reset_shared(caps, Arc::new(RateDomains::single()));
+    }
+
+    /// Reset to a pristine engine over shared capacities/domains, retaining
+    /// every allocated buffer (queue buckets, flow table, entry pool,
+    /// scratch). This is the arena-reuse path behind the pooled
     /// [`crate::netsim::engine_for`]: per-collective runs recycle one
     /// engine instead of reallocating all of its vectors.
-    pub fn reset<I: ExactSizeIterator<Item = f64>>(&mut self, capacities: I) {
+    pub fn reset_shared(&mut self, caps: Arc<[f64]>, domains: Arc<RateDomains>) {
         self.now = 0.0;
-        self.last_settle = 0.0;
         self.seq = 0;
         self.next_timer = 0;
         self.dirty = false;
         self.recomputes = 0;
         self.flows_created = 0;
+        self.events_popped = 0;
+        self.domains_touched = 0;
+        self.resident_peak = 0;
         self.flows.clear();
-        self.live.clear();
-        self.heap.clear();
-        let n = capacities.len();
-        self.resources.clear();
-        self.resources
-            .extend(capacities.map(|c| Resource { capacity: c, factor: 1.0, up: true }));
-        for l in &mut self.res_flows {
-            l.clear();
+        self.flow_mark.clear();
+        self.queue.clear();
+        while let Some(mut e) = self.entries.pop() {
+            e.flows.clear();
+            self.spare.push(e);
         }
-        self.res_flows.resize_with(n, Vec::new);
-        self.scratch_cap.clear();
-        self.scratch_cap.resize(n, 0.0);
-        self.scratch_count.clear();
-        self.scratch_count.resize(n, 0);
-        self.scratch_bottleneck.clear();
-        self.scratch_bottleneck.resize(n, false);
+        let n = caps.len();
+        self.base_caps = caps;
+        self.slot.clear();
+        self.slot.resize(n, NO_ENTRY);
+        let nd = domains.n_domains as usize;
+        self.domains = domains;
+        for &d in &self.dom_used {
+            self.dom_flows[d as usize].clear();
+        }
+        self.dom_used.clear();
+        if self.dom_flows.len() < nd {
+            self.dom_flows.resize_with(nd, Vec::new);
+        }
+        self.dom_dirty.clear();
+        self.dom_dirty_mark.clear();
+        self.dom_dirty_mark.resize(nd, 0);
         self.scratch_touched.clear();
     }
 
     pub fn now(&self) -> SimTime {
         self.now
+    }
+
+    /// Materialized resource entries right now (sparse-state counter).
+    pub fn resident_resources(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// High-water mark of materialized resource entries since reset.
+    pub fn resident_peak(&self) -> usize {
+        self.resident_peak
     }
 
     // ------------------------------------------------------------------
@@ -219,19 +343,54 @@ impl Engine {
     pub fn add_flow(&mut self, path: Vec<ResourceId>, size: f64, latency: f64, tag: u64) -> FlowId {
         assert!(size >= 0.0 && latency >= 0.0);
         let id = self.flows.len();
-        self.live.push(id);
-        for &r in &path {
-            self.res_flows[r].push(id);
+        for i in 0..path.len() {
+            let r = path[i];
+            let ei = self.touch(r);
+            self.entries[ei].flows.push(id);
         }
+        // Register the flow in every distinct rate domain its path crosses.
+        // (Empty paths — unconstrained control flows — park in domain 0 so
+        // activation still reaches a recompute.)
+        let mut sd = std::mem::take(&mut self.scratch_doms);
+        sd.clear();
+        if path.is_empty() {
+            sd.push(0);
+        }
+        for &r in &path {
+            let d = self.domains.domain(r);
+            if !sd.contains(&d) {
+                sd.push(d);
+            }
+        }
+        for &d in &sd {
+            if self.dom_flows[d as usize].is_empty() {
+                self.dom_used.push(d);
+            }
+            self.dom_flows[d as usize].push(id);
+        }
+        let mut doms = [0u32; 4];
+        let n_doms = if sd.len() <= 4 {
+            for (j, &d) in sd.iter().enumerate() {
+                doms[j] = d;
+            }
+            sd.len() as u8
+        } else {
+            DOMS_OVERFLOW
+        };
+        self.scratch_doms = sd;
         self.flows.push(Flow {
             path,
             size,
             remaining: size,
             rate: 0.0,
+            settled_at: self.now,
             state: FlowState::Latent,
             epoch: 0,
+            doms,
+            n_doms,
             tag,
         });
+        self.flow_mark.push(0);
         self.flows_created += 1;
         self.push(self.now + latency, Pending::Activate(id, 0));
         id
@@ -239,7 +398,7 @@ impl Engine {
 
     /// Progress of a flow in bytes delivered so far (settled to `now`).
     pub fn flow_progress(&mut self, id: FlowId) -> f64 {
-        self.settle();
+        self.settle_flow(id);
         self.flows[id].size - self.flows[id].remaining
     }
 
@@ -258,7 +417,7 @@ impl Engine {
     /// Abort a flow (used on migration: the remainder is re-issued as a new
     /// flow over the backup path). Returns bytes delivered.
     pub fn abort_flow(&mut self, id: FlowId) -> f64 {
-        self.settle();
+        self.settle_flow(id);
         let f = &mut self.flows[id];
         assert!(
             matches!(f.state, FlowState::Latent | FlowState::Active | FlowState::Stalled),
@@ -267,47 +426,68 @@ impl Engine {
         f.state = FlowState::Aborted;
         f.epoch += 1;
         f.rate = 0.0;
-        self.dirty = true;
+        self.mark_flow_domains_dirty(id);
         self.detach(id);
         self.flows[id].size - self.flows[id].remaining
     }
 
-    /// Flows (active or latent) whose path crosses `rid`, ascending.
-    /// Reads the resource's incidence list — O(flows *on this resource*)
-    /// instead of a scan over every live flow's path (§Perf).
-    pub fn flows_through(&self, rid: ResourceId) -> Vec<FlowId> {
-        let mut out: Vec<FlowId> = self
-            .res_flows[rid]
-            .iter()
-            .copied()
-            .filter(|&i| {
-                matches!(
-                    self.flows[i].state,
-                    FlowState::Latent | FlowState::Active | FlowState::Stalled
-                )
-            })
-            .collect();
-        // Incidence lists are insertion-ordered with one entry per path
-        // element; sort+dedup restores the historical ascending-id order.
-        out.sort_unstable();
-        out.dedup();
-        out
+    /// Flows (active or latent) whose path crosses `rid`, ascending, in a
+    /// reusable scratch buffer — the borrow ends at the next `&mut self`
+    /// call, so clone (`.to_vec()`) to keep it across engine mutations.
+    /// Reads the resource's incidence list — O(flows *on this resource*).
+    pub fn flows_through(&mut self, rid: ResourceId) -> &[FlowId] {
+        self.scratch_victims.clear();
+        self.collect_through(rid);
+        self.scratch_victims.sort_unstable();
+        self.scratch_victims.dedup();
+        &self.scratch_victims
     }
 
-    /// Remove a terminal flow from its resources' incidence lists.
+    /// Union of [`Engine::flows_through`] over two resources (the migration
+    /// hot path reads a NIC's tx+rx victim set as one sorted list).
+    pub fn flows_through_pair(&mut self, a: ResourceId, b: ResourceId) -> &[FlowId] {
+        self.scratch_victims.clear();
+        self.collect_through(a);
+        self.collect_through(b);
+        self.scratch_victims.sort_unstable();
+        self.scratch_victims.dedup();
+        &self.scratch_victims
+    }
+
+    fn collect_through(&mut self, rid: ResourceId) {
+        let s = self.slot[rid];
+        if s == NO_ENTRY {
+            return;
+        }
+        let entry = &self.entries[s as usize];
+        for &i in &entry.flows {
+            if matches!(
+                self.flows[i].state,
+                FlowState::Latent | FlowState::Active | FlowState::Stalled
+            ) {
+                self.scratch_victims.push(i);
+            }
+        }
+    }
+
+    /// Remove a terminal flow from its resources' incidence lists,
+    /// de-materializing entries left in default state.
     fn detach(&mut self, id: FlowId) {
         let path = std::mem::take(&mut self.flows[id].path);
         for &r in &path {
-            let list = &mut self.res_flows[r];
+            let s = self.slot[r];
+            debug_assert!(s != NO_ENTRY, "live flow crossed unmaterialized resource {r}");
+            let list = &mut self.entries[s as usize].flows;
             if let Some(pos) = list.iter().position(|&f| f == id) {
                 list.swap_remove(pos);
             }
+            self.maybe_release(r);
         }
         self.flows[id].path = path;
     }
 
     // ------------------------------------------------------------------
-    // Timers
+    // Timers and script events
     // ------------------------------------------------------------------
 
     /// Fire a timer at absolute time `at` with a caller tag. An `at` in
@@ -315,7 +495,7 @@ impl Engine {
     /// iteration-relative times across iterations, and float error can
     /// land an event an ulp before the current time — that is a request
     /// for "immediately", not a caller bug. NaN also clamps (`at >= now`
-    /// is false for NaN), keeping the total-ordered heap sound.
+    /// is false for NaN), keeping the total-ordered queue sound.
     pub fn set_timer(&mut self, at: SimTime, tag: u64) -> TimerId {
         let at = if at >= self.now { at } else { self.now };
         let id = self.next_timer;
@@ -324,31 +504,50 @@ impl Engine {
         id
     }
 
+    /// Schedule delivery of scenario script entry `idx` (NIC or switch
+    /// plane) at absolute time `at`, merged into the same queue as flow
+    /// completions and timers. Past/NaN times clamp like [`Engine::set_timer`].
+    pub fn schedule_script(&mut self, at: SimTime, kind: ScriptKind, idx: u32) {
+        let at = if at >= self.now { at } else { self.now };
+        self.push(at, Pending::Script(kind, idx));
+    }
+
     // ------------------------------------------------------------------
     // Resource state (failure injection)
     // ------------------------------------------------------------------
 
     pub fn set_resource_up(&mut self, rid: ResourceId, up: bool) {
-        self.settle();
-        if self.resources[rid].up != up {
-            self.resources[rid].up = up;
-            self.dirty = true;
+        if self.slot[rid] == NO_ENTRY && up {
+            return; // default state is already up
         }
+        let ei = self.touch(rid);
+        if self.entries[ei].up != up {
+            self.entries[ei].up = up;
+            let d = self.domains.domain(rid);
+            self.mark_domain_dirty(d);
+        }
+        self.maybe_release(rid);
     }
 
     /// Degrade a resource to `factor` of its capacity (partial failures:
     /// link flapping steady-state, CRC retry loss).
     pub fn set_resource_factor(&mut self, rid: ResourceId, factor: f64) {
         assert!(factor > 0.0 && factor <= 1.0);
-        self.settle();
-        if (self.resources[rid].factor - factor).abs() > 1e-12 {
-            self.resources[rid].factor = factor;
-            self.dirty = true;
+        if self.slot[rid] == NO_ENTRY && (1.0 - factor).abs() <= 1e-12 {
+            return; // no-op on a default-state resource
         }
+        let ei = self.touch(rid);
+        if (self.entries[ei].factor - factor).abs() > 1e-12 {
+            self.entries[ei].factor = factor;
+            let d = self.domains.domain(rid);
+            self.mark_domain_dirty(d);
+        }
+        self.maybe_release(rid);
     }
 
     pub fn resource_is_up(&self, rid: ResourceId) -> bool {
-        self.resources[rid].up
+        let s = self.slot[rid];
+        s == NO_ENTRY || self.entries[s as usize].up
     }
 
     // ------------------------------------------------------------------
@@ -359,13 +558,12 @@ impl Engine {
     pub fn next_event(&mut self) -> Option<(SimTime, Event)> {
         loop {
             self.reschedule_if_dirty();
-            let Reverse((TimeKey(t), _, pending)) = self.heap.pop()?;
+            let (TimeKey(t), _, pending) = self.queue.pop()?;
+            self.events_popped += 1;
             debug_assert!(t >= self.now - 1e-9, "time went backwards: {t} < {}", self.now);
             match pending {
                 Pending::Activate(id, epoch) => {
-                    if self.flows[id].epoch != epoch
-                        || self.flows[id].state != FlowState::Latent
-                    {
+                    if self.flows[id].epoch != epoch || self.flows[id].state != FlowState::Latent {
                         continue;
                     }
                     self.advance_to(t);
@@ -376,16 +574,16 @@ impl Engine {
                         return Some((self.now, Event::FlowCompleted(id)));
                     }
                     self.flows[id].state = FlowState::Active;
-                    self.dirty = true;
+                    self.flows[id].settled_at = self.now;
+                    self.mark_flow_domains_dirty(id);
                     // Completion will be scheduled by the recompute.
                 }
                 Pending::Complete(id, epoch) => {
-                    if self.flows[id].epoch != epoch
-                        || self.flows[id].state != FlowState::Active
-                    {
+                    if self.flows[id].epoch != epoch || self.flows[id].state != FlowState::Active {
                         continue; // stale prediction
                     }
                     self.advance_to(t);
+                    self.settle_flow(id);
                     let f = &mut self.flows[id];
                     debug_assert!(
                         f.remaining <= f.size * 1e-9 + 1e-6,
@@ -395,13 +593,17 @@ impl Engine {
                     f.remaining = 0.0;
                     f.state = FlowState::Done;
                     f.rate = 0.0;
-                    self.dirty = true;
+                    self.mark_flow_domains_dirty(id);
                     self.detach(id);
                     return Some((self.now, Event::FlowCompleted(id)));
                 }
                 Pending::Timer(id, tag) => {
                     self.advance_to(t);
                     return Some((self.now, Event::Timer(id, tag)));
+                }
+                Pending::Script(kind, idx) => {
+                    self.advance_to(t);
+                    return Some((self.now, Event::Script(kind, idx)));
                 }
             }
         }
@@ -421,46 +623,169 @@ impl Engine {
 
     fn push(&mut self, at: SimTime, p: Pending) {
         self.seq += 1;
-        self.heap.push(Reverse((TimeKey(at), self.seq, p)));
+        self.queue.push((TimeKey(at), self.seq, p));
     }
 
     fn advance_to(&mut self, t: SimTime) {
         if t > self.now {
-            self.settle_to(t);
             self.now = t;
         }
     }
 
-    /// Accrue progress for active flows up to the current time.
-    fn settle(&mut self) {
-        self.settle_to(self.now);
+    /// Materialize (or look up) the entry for `rid`.
+    fn touch(&mut self, rid: ResourceId) -> usize {
+        let s = self.slot[rid];
+        if s != NO_ENTRY {
+            return s as usize;
+        }
+        let mut e = self.spare.pop().unwrap_or_else(|| ResEntry {
+            rid: 0,
+            factor: 1.0,
+            up: true,
+            flows: Vec::new(),
+            fill_cap: 0.0,
+            fill_count: 0,
+            bottleneck: false,
+        });
+        e.rid = rid as u32;
+        e.factor = 1.0;
+        e.up = true;
+        e.flows.clear();
+        e.fill_cap = 0.0;
+        e.fill_count = 0;
+        e.bottleneck = false;
+        let ei = self.entries.len();
+        self.entries.push(e);
+        self.slot[rid] = ei as u32;
+        if self.entries.len() > self.resident_peak {
+            self.resident_peak = self.entries.len();
+        }
+        ei
     }
 
-    fn settle_to(&mut self, t: SimTime) {
-        let dt = t - self.last_settle;
-        if dt > 0.0 {
-            for &id in &self.live {
-                let f = &mut self.flows[id];
-                if f.state == FlowState::Active && f.rate > 0.0 {
-                    f.remaining = (f.remaining - f.rate * dt).max(0.0);
-                }
+    /// De-materialize `rid`'s entry if it has returned to default state
+    /// (up, factor 1, no incident flows).
+    fn maybe_release(&mut self, rid: ResourceId) {
+        let s = self.slot[rid];
+        if s == NO_ENTRY {
+            return;
+        }
+        let ei = s as usize;
+        {
+            let e = &self.entries[ei];
+            if !e.flows.is_empty() || !e.up || e.factor != 1.0 {
+                return;
             }
         }
-        self.last_settle = t;
+        let mut e = self.entries.swap_remove(ei);
+        self.slot[rid] = NO_ENTRY;
+        e.flows.clear();
+        self.spare.push(e);
+        if ei < self.entries.len() {
+            let moved = self.entries[ei].rid as usize;
+            self.slot[moved] = ei as u32;
+        }
+    }
+
+    fn res_up(&self, rid: ResourceId) -> bool {
+        let s = self.slot[rid];
+        s == NO_ENTRY || self.entries[s as usize].up
+    }
+
+    /// Accrue a single flow's progress up to `now` (lazy settle: one
+    /// multiply per touch instead of a global per-event sweep).
+    fn settle_flow(&mut self, id: FlowId) {
+        let now = self.now;
+        let f = &mut self.flows[id];
+        if f.state == FlowState::Active && f.rate > 0.0 {
+            let dt = now - f.settled_at;
+            if dt > 0.0 {
+                f.remaining = (f.remaining - f.rate * dt).max(0.0);
+            }
+        }
+        f.settled_at = now;
+    }
+
+    #[inline]
+    fn mark_domain_dirty(&mut self, d: u32) {
+        if self.dom_dirty_mark[d as usize] != self.dirty_gen {
+            self.dom_dirty_mark[d as usize] = self.dirty_gen;
+            self.dom_dirty.push(d);
+        }
+        self.dirty = true;
+    }
+
+    /// Mark every rate domain the flow's path crosses dirty.
+    fn mark_flow_domains_dirty(&mut self, id: FlowId) {
+        let nd = self.flows[id].n_doms;
+        if nd != DOMS_OVERFLOW {
+            let doms = self.flows[id].doms;
+            for &d in &doms[..nd as usize] {
+                self.mark_domain_dirty(d);
+            }
+        } else {
+            for i in 0..self.flows[id].path.len() {
+                let r = self.flows[id].path[i];
+                let d = self.domains.domain(r);
+                self.mark_domain_dirty(d);
+            }
+        }
+    }
+
+    /// Chase the dirty-domain closure into `scratch_closure`: a dirty
+    /// domain pulls in its live (non-Latent) flows; each such flow marks
+    /// the other domains it crosses dirty, until the set is closed. Domain
+    /// registries prune terminal flows as a side effect.
+    fn collect_closure(&mut self) {
+        self.scratch_closure.clear();
+        self.flow_gen += 1;
+        let fgen = self.flow_gen;
+        let mut qi = 0;
+        while qi < self.dom_dirty.len() {
+            let d = self.dom_dirty[qi] as usize;
+            qi += 1;
+            let mut list = std::mem::take(&mut self.dom_flows[d]);
+            list.retain(|&id| {
+                !matches!(self.flows[id].state, FlowState::Done | FlowState::Aborted)
+            });
+            for i in 0..list.len() {
+                let id = list[i];
+                if self.flow_mark[id] == fgen {
+                    continue;
+                }
+                self.flow_mark[id] = fgen;
+                if self.flows[id].state == FlowState::Latent {
+                    continue;
+                }
+                self.scratch_closure.push(id);
+                self.mark_flow_domains_dirty(id);
+            }
+            self.dom_flows[d] = list;
+        }
+        // Canonical ascending order: the recompute and its queue pushes are
+        // independent of domain discovery order (determinism across
+        // partitions; matches the historical live-list order).
+        self.scratch_closure.sort_unstable();
+        self.domains_touched += self.dom_dirty.len() as u64;
     }
 
     fn reschedule_if_dirty(&mut self) {
         if !self.dirty {
             return;
         }
-        self.dirty = false;
-        self.settle();
+        self.collect_closure();
         // Snapshot rates: a flow whose rate is unchanged keeps a valid
         // completion prediction (remaining shrinks linearly at that rate),
-        // so we avoid the epoch bump + heap push for it (§Perf).
+        // so we avoid the epoch bump + queue push for it (§Perf). Each
+        // closure flow settles here, under its pre-recompute rate.
         let mut prev = std::mem::take(&mut self.scratch_prev);
         prev.clear();
-        prev.extend(self.live.iter().map(|&id| (id, self.flows[id].rate, self.flows[id].state)));
+        for i in 0..self.scratch_closure.len() {
+            let id = self.scratch_closure[i];
+            self.settle_flow(id);
+            let f = &self.flows[id];
+            prev.push((id, f.rate, f.state));
+        }
         self.recompute_rates();
         for &(id, old_rate, old_state) in &prev {
             let f = &mut self.flows[id];
@@ -482,36 +807,31 @@ impl Engine {
             // rate==0 → stalled: no completion until state changes.
         }
         self.scratch_prev = prev;
-        // Newly-activated flows appear in `live` after the snapshot only if
-        // added mid-recompute — not possible here; activations always mark
-        // dirty and pass through the snapshot on the next call.
+        self.dom_dirty.clear();
+        self.dirty_gen += 1;
+        self.dirty = false;
     }
 
-    /// Progressive-filling max-min fair allocation over the current active
-    /// flow set. Flows whose path contains a down resource are Stalled.
+    /// Progressive-filling max-min fair allocation over the dirty closure.
+    /// Flows whose path contains a down resource are Stalled.
     ///
-    /// Allocation-free: the per-resource capacity/count/bottleneck tables
-    /// and the flow worklists live in reusable `scratch_*` buffers, and the
-    /// filling rounds iterate only the resources *touched* by active flows
-    /// instead of the whole resource table (§Perf).
+    /// Filling decomposes exactly across resource-disjoint components, and
+    /// the closure is closed under resource sharing by construction, so
+    /// allocating over the closure alone equals the global allocation.
+    ///
+    /// Allocation-free: per-resource capacity/count/bottleneck scratch
+    /// lives inline in the sparse entries, and the filling rounds iterate
+    /// only the entries *touched* by closure flows (§Perf).
     fn recompute_rates(&mut self) {
         self.recomputes += 1;
-        // Drop terminal flows from the live index, then classify.
-        self.live.retain(|&id| {
-            !matches!(self.flows[id].state, FlowState::Done | FlowState::Aborted)
-        });
         let mut active = std::mem::take(&mut self.scratch_active);
         active.clear();
-        for i in 0..self.live.len() {
-            let id = self.live[i];
-            let state = self.flows[id].state;
-            if !matches!(state, FlowState::Active | FlowState::Stalled) {
-                continue;
-            }
-            let blocked = self.flows[id]
-                .path
-                .iter()
-                .any(|&r| !self.resources[r].up);
+        for i in 0..self.scratch_closure.len() {
+            let id = self.scratch_closure[i];
+            let blocked = {
+                let f = &self.flows[id];
+                f.path.iter().any(|&r| !self.res_up(r))
+            };
             let f = &mut self.flows[id];
             if blocked {
                 f.state = FlowState::Stalled;
@@ -525,18 +845,28 @@ impl Engine {
             self.scratch_active = active;
             return;
         }
-        // Remaining capacity / unfixed-flow count per *touched* resource.
-        // `scratch_count` is all-zeros between calls, so a resource is
+        // Remaining capacity / unfixed-flow count per *touched* entry.
+        // `fill_count` is all-zeros between calls, so an entry is
         // first-touched exactly when its count is still zero.
         let mut touched = std::mem::take(&mut self.scratch_touched);
         touched.clear();
-        for &id in &active {
-            for &r in &self.flows[id].path {
-                if self.scratch_count[r] == 0 {
-                    touched.push(r);
-                    self.scratch_cap[r] = self.resources[r].effective();
+        for ai in 0..active.len() {
+            let id = active[ai];
+            for pi in 0..self.flows[id].path.len() {
+                let r = self.flows[id].path[pi];
+                let ei = self.slot[r] as usize;
+                debug_assert!(self.slot[r] != NO_ENTRY);
+                let cap = if self.entries[ei].up {
+                    self.base_caps[r] * self.entries[ei].factor
+                } else {
+                    0.0
+                };
+                let e = &mut self.entries[ei];
+                if e.fill_count == 0 {
+                    touched.push(ei as u32);
+                    e.fill_cap = cap;
                 }
-                self.scratch_count[r] += 1;
+                e.fill_count += 1;
             }
         }
         let mut unfixed = std::mem::take(&mut self.scratch_unfixed);
@@ -550,10 +880,10 @@ impl Engine {
         // round (§Perf).
         while !unfixed.is_empty() {
             let mut min_share = f64::INFINITY;
-            for &r in &touched {
-                let k = self.scratch_count[r];
-                if k > 0 {
-                    let share = self.scratch_cap[r] / k as f64;
+            for &ei in &touched {
+                let e = &self.entries[ei as usize];
+                if e.fill_count > 0 {
+                    let share = e.fill_cap / e.fill_count as f64;
                     if share < min_share {
                         min_share = share;
                     }
@@ -569,21 +899,26 @@ impl Engine {
             let limit = min_share * (1.0 + 1e-12);
             // Determine the bottleneck set *before* fixing (fixing mutates
             // cap/count and would misclassify later flows in this round).
-            for &r in &touched {
-                let k = self.scratch_count[r];
-                self.scratch_bottleneck[r] = k > 0 && self.scratch_cap[r] / k as f64 <= limit;
+            for &ei in &touched {
+                let e = &mut self.entries[ei as usize];
+                e.bottleneck = e.fill_count > 0 && e.fill_cap / e.fill_count as f64 <= limit;
             }
             // Fix every unfixed flow crossing a min-share resource.
             still.clear();
             let mut fixed_any = false;
-            for &id in &unfixed {
-                let bottlenecked =
-                    self.flows[id].path.iter().any(|&r| self.scratch_bottleneck[r]);
+            for ui in 0..unfixed.len() {
+                let id = unfixed[ui];
+                let bottlenecked = {
+                    let f = &self.flows[id];
+                    f.path.iter().any(|&r| self.entries[self.slot[r] as usize].bottleneck)
+                };
                 if bottlenecked {
                     self.flows[id].rate = min_share;
-                    for &r in &self.flows[id].path {
-                        self.scratch_cap[r] = (self.scratch_cap[r] - min_share).max(0.0);
-                        self.scratch_count[r] -= 1;
+                    for pi in 0..self.flows[id].path.len() {
+                        let r = self.flows[id].path[pi];
+                        let e = &mut self.entries[self.slot[r] as usize];
+                        e.fill_cap = (e.fill_cap - min_share).max(0.0);
+                        e.fill_count -= 1;
                     }
                     fixed_any = true;
                 } else {
@@ -591,8 +926,8 @@ impl Engine {
                 }
             }
             // Reset the bottleneck flags for the next round / next call.
-            for &r in &touched {
-                self.scratch_bottleneck[r] = false;
+            for &ei in &touched {
+                self.entries[ei as usize].bottleneck = false;
             }
             if !fixed_any {
                 // Numeric corner: force-fix everything at min_share.
@@ -605,8 +940,8 @@ impl Engine {
         }
         // Restore the all-zeros invariant for the next call (early breaks
         // can leave counts behind).
-        for &r in &touched {
-            self.scratch_count[r] = 0;
+        for &ei in &touched {
+            self.entries[ei as usize].fill_count = 0;
         }
         self.scratch_active = active;
         self.scratch_unfixed = unfixed;
@@ -756,8 +1091,8 @@ mod tests {
         let mut e = Engine::new(&[1.0, 1.0]);
         let a = e.add_flow(vec![0], 1.0, 0.0, 0);
         let b = e.add_flow(vec![1], 1.0, 0.0, 0);
-        assert_eq!(e.flows_through(0), vec![a]);
-        assert_eq!(e.flows_through(1), vec![b]);
+        assert_eq!(e.flows_through(0), &[a][..]);
+        assert_eq!(e.flows_through(1), &[b][..]);
     }
 
     #[test]
@@ -801,13 +1136,24 @@ mod tests {
         let a = e.add_flow(vec![0], 100.0, 0.0, 0);
         let b = e.add_flow(vec![0, 1], 1000.0, 0.0, 1);
         let c = e.add_flow(vec![0], 1000.0, 0.0, 2);
-        assert_eq!(e.flows_through(0), vec![a, b, c]);
+        assert_eq!(e.flows_through(0), &[a, b, c][..]);
         let _ = e.next_event().unwrap(); // a completes first (smallest)
         assert!(e.flow_is_done(a));
-        assert_eq!(e.flows_through(0), vec![b, c]);
+        assert_eq!(e.flows_through(0), &[b, c][..]);
         e.abort_flow(b);
-        assert_eq!(e.flows_through(0), vec![c]);
-        assert_eq!(e.flows_through(1), Vec::<FlowId>::new());
+        assert_eq!(e.flows_through(0), &[c][..]);
+        assert!(e.flows_through(1).is_empty());
+    }
+
+    #[test]
+    fn flows_through_pair_merges_sorted() {
+        let mut e = Engine::new(&[1.0, 1.0, 1.0]);
+        let a = e.add_flow(vec![0], 1.0, 0.0, 0);
+        let b = e.add_flow(vec![1], 1.0, 0.0, 0);
+        let c = e.add_flow(vec![0, 1], 1.0, 0.0, 0);
+        assert_eq!(e.flows_through_pair(0, 1), &[a, b, c][..]);
+        assert_eq!(e.flows_through_pair(1, 2), &[b, c][..]);
+        assert!(e.flows_through_pair(2, 2).is_empty());
     }
 
     #[test]
@@ -843,5 +1189,143 @@ mod tests {
         e.add_flow(vec![0], 1000.0, 0.0, 1); // migrated onto same NIC
         let evs = drain(&mut e);
         assert!((evs[1].0 - 20.0).abs() < 1e-9);
+    }
+
+    // ---- Event-kernel specifics --------------------------------------
+
+    #[test]
+    fn script_events_merge_in_timestamp_order() {
+        let mut e = Engine::new(&[100.0]);
+        e.add_flow(vec![0], 500.0, 0.0, 0); // completes at t=5
+        e.schedule_script(2.0, ScriptKind::Nic, 0);
+        e.schedule_script(7.0, ScriptKind::Switch, 1);
+        e.set_timer(2.0, 42); // same instant as the script; script was pushed first
+        let evs = drain(&mut e);
+        let kinds: Vec<Event> = evs.iter().map(|(_, ev)| ev.clone()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                Event::Script(ScriptKind::Nic, 0),
+                Event::Timer(0, 42),
+                Event::FlowCompleted(0),
+                Event::Script(ScriptKind::Switch, 1),
+            ]
+        );
+        assert!((evs[3].0 - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn script_in_past_clamps_to_now() {
+        let mut e = Engine::new(&[100.0]);
+        e.set_timer(2.0, 0);
+        let _ = e.next_event();
+        e.schedule_script(1.0, ScriptKind::Nic, 3); // in the past → fires now
+        let (t, ev) = e.next_event().unwrap();
+        assert_eq!(ev, Event::Script(ScriptKind::Nic, 3));
+        assert!((t - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_state_materializes_only_touched_resources() {
+        let mut e = Engine::new(&vec![100.0; 10_000]);
+        assert_eq!(e.resident_resources(), 0);
+        let f = e.add_flow(vec![5, 5000], 1000.0, 0.0, 0);
+        assert_eq!(e.resident_resources(), 2);
+        e.set_resource_factor(9999, 0.5);
+        assert_eq!(e.resident_resources(), 3);
+        let evs = drain(&mut e);
+        assert_eq!(evs.len(), 1);
+        assert!(e.flow_is_done(f));
+        // The flow's entries de-materialized on completion; the degraded
+        // resource stays resident (it carries fault state).
+        assert_eq!(e.resident_resources(), 1);
+        assert_eq!(e.resident_peak(), 3);
+        // Restoring the factor releases the last entry.
+        e.set_resource_factor(9999, 1.0);
+        assert_eq!(e.resident_resources(), 0);
+        assert!(e.resource_is_up(9999));
+    }
+
+    #[test]
+    fn fault_state_survives_while_flows_detach() {
+        let mut e = Engine::new(&[100.0, 100.0]);
+        e.set_resource_up(0, false);
+        let f = e.add_flow(vec![0], 100.0, 0.0, 0);
+        assert!(e.next_event().is_none());
+        assert!(e.flow_is_stalled(f));
+        let _ = e.abort_flow(f);
+        // Entry for r0 must keep its down state despite zero incident flows.
+        assert!(!e.resource_is_up(0));
+        assert_eq!(e.resident_resources(), 1);
+        e.set_resource_up(0, true);
+        assert_eq!(e.resident_resources(), 0);
+    }
+
+    fn two_domain_engine(caps: &[f64], domain_of: Vec<u32>, n: u32) -> Engine {
+        Engine::new_shared(
+            caps.iter().copied().collect(),
+            Arc::new(RateDomains { domain_of, n_domains: n }),
+        )
+    }
+
+    #[test]
+    fn domain_closure_matches_global_recompute_bitwise() {
+        // Two disjoint pods: resources {0,1} in domain 0, {2,3} in domain 1.
+        // Distinct per-component shares → the closure allocation must be
+        // bit-identical to the global single-domain allocation. Dyadic
+        // capacities/sizes keep every settle segment exact, so the lazy
+        // per-flow settle cannot hide a real divergence behind float noise.
+        let caps = [128.0, 64.0, 32.0, 256.0];
+        let build = |e: &mut Engine| {
+            e.add_flow(vec![0, 1], 640.0, 0.0, 0);
+            e.add_flow(vec![0], 768.0, 0.125, 1);
+            e.add_flow(vec![2, 3], 320.0, 0.0, 2);
+            e.add_flow(vec![3], 2560.0, 0.25, 3);
+        };
+        let mut global = Engine::new(&caps);
+        build(&mut global);
+        let g = drain(&mut global);
+        let mut scoped = two_domain_engine(&caps, vec![0, 0, 1, 1], 2);
+        build(&mut scoped);
+        let s = drain(&mut scoped);
+        assert_eq!(g.len(), s.len());
+        for ((tg, eg), (ts, es)) in g.iter().zip(s.iter()) {
+            assert_eq!(tg.to_bits(), ts.to_bits(), "time diverged: {tg} vs {ts}");
+            assert_eq!(eg, es);
+        }
+        assert_eq!(global.recomputes, scoped.recomputes);
+    }
+
+    #[test]
+    fn leaf_local_change_recomputes_within_its_domain() {
+        // Domain 1's long flow must not be touched when domain 0 churns.
+        let caps = [100.0, 100.0];
+        let mut e = two_domain_engine(&caps, vec![0, 1], 2);
+        e.add_flow(vec![0], 100.0, 0.0, 0); // domain 0, completes t=1
+        e.add_flow(vec![0], 300.0, 0.0, 1); // domain 0
+        e.add_flow(vec![1], 1000.0, 0.0, 2); // domain 1
+        let evs = drain(&mut e);
+        assert_eq!(evs.len(), 3);
+        // Six recomputes (3 activations + 3 completions), each scoped to
+        // exactly one domain — churn in domain 0 never drags domain 1's
+        // resources into the closure.
+        assert_eq!(e.recomputes, 6, "got {}", e.recomputes);
+        assert_eq!(e.domains_touched, 6, "got {}", e.domains_touched);
+        assert!((evs[2].0 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters_reset_with_engine() {
+        let mut e = Engine::new(&[100.0]);
+        e.add_flow(vec![0], 100.0, 0.0, 0);
+        let _ = drain(&mut e);
+        assert!(e.events_popped > 0);
+        assert!(e.domains_touched > 0);
+        assert_eq!(e.resident_peak(), 1);
+        e.reset([100.0].into_iter());
+        assert_eq!(e.events_popped, 0);
+        assert_eq!(e.domains_touched, 0);
+        assert_eq!(e.resident_peak(), 0);
+        assert_eq!(e.resident_resources(), 0);
     }
 }

@@ -3,6 +3,14 @@
 //! needs distinguishable NIC-fault vs cable-fault signatures).
 //!
 //! The supported-failure matrix mirrors Appendix C (Table 2) of the paper.
+//!
+//! Engine mirroring is sparse-state aware: projecting a fault onto the
+//! fluid engine materializes only the touched resources' entries
+//! ([`Engine::set_resource_up`] / [`Engine::set_resource_factor`] are
+//! no-ops for default-state resources), and a repair that returns a
+//! resource to its default releases the entry again — a fault plane over a
+//! 4096-server fabric costs the engine a handful of resident entries, not
+//! a dense table.
 
 use crate::fabric::{Fabric, LeafId, SpineId, SwitchAction, SwitchTarget};
 use crate::netsim::engine::Engine;
@@ -603,6 +611,25 @@ mod tests {
         assert!(fp.fabric_restored(nic, 0.05));
         // Other leaves are unaffected throughout.
         assert!(fp.fabric_restored(4 * 8 + 1, 0.05));
+    }
+
+    #[test]
+    fn fault_mirroring_is_sparse_on_shared_cap_engines() {
+        // Executor engines are built over the topology's shared capacity
+        // table and rate domains; fault projection must materialize only
+        // the resources it actually touches, and repair must release them.
+        let topo = Topology::build(&TopologyConfig::testbed_h100());
+        let mut eng = Engine::new_shared(topo.shared_caps(), topo.rate_domains());
+        let mut fp = FaultPlane::new(&topo);
+        assert_eq!(eng.resident_resources(), 0);
+        fp.fail_nic(&topo, &mut eng, 3);
+        assert_eq!(eng.resident_resources(), 2, "NicTx+NicRx of nic 3 only");
+        fp.set_state(&topo, &mut eng, 5, NicState::Degraded(0.5));
+        assert_eq!(eng.resident_resources(), 4);
+        fp.repair(&topo, &mut eng, 3);
+        fp.repair(&topo, &mut eng, 5);
+        assert_eq!(eng.resident_resources(), 0, "repair releases pristine entries");
+        assert_eq!(eng.resident_peak(), 4);
     }
 
     #[test]

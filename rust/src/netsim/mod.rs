@@ -1,15 +1,19 @@
 //! Discrete-event fluid-flow network simulator.
 //!
-//! * [`engine`] — flows over resource paths, max-min fair sharing,
-//!   timers, deterministic event ordering.
+//! * [`calendar`] — the kernel's calendar event queue (exact-order pops,
+//!   O(1) amortized scheduling).
+//! * [`engine`] — flows over resource paths, max-min fair sharing, timers
+//!   and first-class script events in one queue, sparse per-resource
+//!   state, domain-scoped rate recomputes, deterministic event ordering.
 //! * [`fault`] — ground-truth failure state (NIC vs cable vs degradation),
 //!   its projection onto engine resources, and the probe oracle the
 //!   detection layer is allowed to query.
 
+mod calendar;
 pub mod engine;
 pub mod fault;
 
-pub use engine::{Engine, Event, FlowId, SimTime, TimerId};
+pub use engine::{Engine, Event, FlowId, ScriptKind, SimTime, TimerId};
 pub use fault::{
     clamp_degrade_factor, FailureKind, FaultPlane, NicState, ProbeOutcome, Support,
     MIN_DEGRADE_FACTOR,
@@ -31,23 +35,24 @@ thread_local! {
 /// Keep at most this many idle engines per thread.
 const ENGINE_POOL_CAP: usize = 8;
 
-/// Build an engine with the capacities of a topology, reusing a pooled
-/// arena when this thread has one (an [`Engine::reset`] makes any pooled
-/// engine equivalent to a freshly constructed one, so per-collective runs
-/// stop reallocating the heap/flow-table/scratch vectors). Return engines
+/// Build an engine over a topology's shared capacities and rate domains,
+/// reusing a pooled arena when this thread has one (an
+/// [`Engine::reset_shared`] makes any pooled engine equivalent to a
+/// freshly constructed one, so per-collective runs stop reallocating the
+/// queue/flow-table/scratch vectors — and with the shared-`Arc` capacity
+/// table the per-run cost is independent of fabric size). Return engines
 /// with [`recycle`] to populate the pool.
 pub fn engine_for(topo: &Topology) -> Engine {
     let pooled = ENGINE_POOL.with(|pool| pool.borrow_mut().pop());
     match pooled {
         Some(mut e) => {
             POOL_HITS.with(|c| c.set(c.get() + 1));
-            e.reset(topo.resources().iter().map(|r| r.capacity));
+            e.reset_shared(topo.shared_caps(), topo.rate_domains());
             e
         }
         None => {
             POOL_MISSES.with(|c| c.set(c.get() + 1));
-            let caps: Vec<f64> = topo.resources().iter().map(|r| r.capacity).collect();
-            Engine::new(&caps)
+            Engine::new_shared(topo.shared_caps(), topo.rate_domains())
         }
     }
 }

@@ -48,6 +48,15 @@ pub struct IterOutcome {
     /// Data-plane verification verdict (`None` when not applicable, e.g.
     /// SendRecv mains or verification disabled).
     pub lossless: Option<bool>,
+    /// Kernel events popped across the iteration's executor runs (perf
+    /// counter; not part of any trace serialization).
+    pub events_popped: u64,
+    /// Rate domains visited across all closure recomputes (locality perf
+    /// counter; not part of any trace serialization).
+    pub domains_touched: u64,
+    /// Peak sparse-resident engine resources (perf counter; not part of
+    /// any trace serialization).
+    pub resident_resources: u64,
 }
 
 impl IterOutcome {
@@ -71,6 +80,9 @@ impl IterOutcome {
             strategy,
             timeline: rep.timeline,
             lossless,
+            events_popped: rep.events_popped,
+            domains_touched: rep.domains_touched,
+            resident_resources: rep.resident_resources,
         }
     }
 }

@@ -9,6 +9,9 @@
 //! rollback), then folded into the world's known-failure list so every
 //! subsequent iteration plans around the new health state, exactly like a
 //! long-running job whose communicator re-plans after OOB broadcasts.
+//! Inside an iteration the NIC and switch scripts are delivered by the
+//! event kernel as first-class `Event::Script` calendar entries, merged by
+//! timestamp with flow completions and timers in one queue.
 //!
 //! The emitted [`ScenarioReport`] carries per-iteration times, goodput,
 //! migration/rollback byte counts, the structured executor traces, and
@@ -50,6 +53,15 @@ pub struct IterationRecord {
     pub lossless: Option<bool>,
     /// Structured executor trace of the iteration's scripted collective.
     pub trace: Vec<TimelineEntry>,
+    /// Kernel events popped across the iteration's executor runs (perf
+    /// counter — excluded from `to_json`, so golden traces are unaffected).
+    pub events_popped: u64,
+    /// Rate domains visited across the iteration's closure recomputes
+    /// (perf counter — excluded from `to_json`).
+    pub domains_touched: u64,
+    /// Peak sparse-resident engine resources across the iteration's
+    /// executor runs (perf counter — excluded from `to_json`).
+    pub resident_resources: u64,
 }
 
 /// The deterministic result of a scenario run; `to_json().pretty()` is the
@@ -85,6 +97,16 @@ pub struct ScenarioReport {
     pub path_lost: bool,
     pub lossless: bool,
     pub max_overhead: Option<f64>,
+    /// Total kernel events popped across all iterations (perf counter —
+    /// never serialized; `to_json` stays byte-identical to pre-kernel
+    /// golden traces).
+    pub events_popped: u64,
+    /// Total rate domains visited across all closure recomputes (perf
+    /// counter — never serialized).
+    pub domains_touched: u64,
+    /// Max over iterations of peak sparse-resident engine resources (perf
+    /// counter — never serialized).
+    pub resident_resources: u64,
 }
 
 impl ScenarioReport {
@@ -425,6 +447,9 @@ impl<'a> ScenarioRunner<'a> {
                 crashed: out.crashed,
                 lossless: out.lossless,
                 trace: out.timeline,
+                events_popped: out.events_popped,
+                domains_touched: out.domains_touched,
+                resident_resources: out.resident_resources,
             });
             if out.crashed {
                 crashed = true;
@@ -466,6 +491,13 @@ impl<'a> ScenarioRunner<'a> {
             path_lost,
             lossless: records.iter().all(|r| r.lossless != Some(false)),
             max_overhead: self.scenario.max_overhead,
+            events_popped: records.iter().map(|r| r.events_popped).sum(),
+            domains_touched: records.iter().map(|r| r.domains_touched).sum(),
+            resident_resources: records
+                .iter()
+                .map(|r| r.resident_resources)
+                .max()
+                .unwrap_or(0),
             iterations: records,
         }
     }

@@ -3,8 +3,10 @@
 //! The paper's headline evaluation is large-scale simulation ("hundreds of
 //! GPUs with diverse failure patterns"), not the 2-server testbed. This
 //! sweep drives every [`CollKind`] through the real compile/execute path on
-//! SimAI-style clusters of 32–128 servers (256–1024 GPUs) built over a
-//! rail-optimised leaf/spine fabric, three arms per point:
+//! SimAI-style clusters built over a rail-optimised leaf/spine fabric —
+//! 32–128 servers by default, up to 1024–4096 via `CLUSTER_SERVERS` (see
+//! [`ClusterSweepCfg::apply_env`]; past [`ClusterSweepCfg::ring_cap`] ranks
+//! the arms run on strided server-lead subgroups) — three arms per point:
 //!
 //! * **healthy** — pristine fabric;
 //! * **leaf-down (planned)** — one leaf switch is a standing known failure,
@@ -13,8 +15,9 @@
 //!   exercising detection + per-member-NIC migration at scale.
 //!
 //! `AllToAll` runs on the cross-server lead group (one GPU per server — the
-//! expert-parallel placement); a full 1024-rank AllToAll is quadratic in
-//! flows and adds nothing the lead group doesn't show.
+//! expert-parallel placement), strided down to [`ClusterSweepCfg::a2a_cap`]
+//! ranks; a full many-thousand-rank AllToAll is quadratic in flows and adds
+//! nothing the strided lead group doesn't show.
 //!
 //! The `cluster_sweep` bench (`rust/benches/cluster_sweep.rs`) prints the
 //! table and writes `bench_results/cluster_sweep.json`; `BENCH_QUICK=1`
@@ -35,6 +38,16 @@ pub struct ClusterSweepCfg {
     pub pod_size: usize,
     pub spines: usize,
     pub oversubscription: f64,
+    /// Rank cap for the ring-family arms: a cluster whose world fits under
+    /// the cap runs world collectives (the historical 32–128 sweeps stay
+    /// byte-identical at the default 1024 = 128 servers × 8 GPUs); larger
+    /// clusters run on a strided server-lead subgroup of at most this many
+    /// ranks, so 1024–4096-server sweeps stress the fabric without
+    /// quadratic rank blowup.
+    pub ring_cap: usize,
+    /// Rank cap for the AllToAll arm (always server leads — the
+    /// expert-parallel placement); leads are strided down to this count.
+    pub a2a_cap: usize,
 }
 
 impl ClusterSweepCfg {
@@ -47,12 +60,64 @@ impl ClusterSweepCfg {
             pod_size: 8,
             spines: 4,
             oversubscription: 2.0,
+            ring_cap: 1024,
+            a2a_cap: 128,
         }
     }
 
     /// CI smoke shape (`BENCH_QUICK=1`): the 32-server point only.
     pub fn quick() -> ClusterSweepCfg {
         ClusterSweepCfg { server_counts: vec![32], ..ClusterSweepCfg::full() }
+    }
+
+    /// Override the sweep shape from `CLUSTER_*` environment variables, so
+    /// 1024–4096-server sweeps need no code edits:
+    /// `CLUSTER_SERVERS` (comma list), `CLUSTER_BYTES_PER_RANK`,
+    /// `CLUSTER_CHANNELS`, `CLUSTER_POD_SIZE`, `CLUSTER_SPINES`,
+    /// `CLUSTER_OVERSUB`, `CLUSTER_RING_CAP`, `CLUSTER_A2A_CAP`.
+    /// Unset or unparsable variables keep the current value.
+    pub fn apply_env(self) -> ClusterSweepCfg {
+        self.apply_overrides(|key| std::env::var(key).ok())
+    }
+
+    /// The lookup-injected core of [`Self::apply_env`] (unit-testable
+    /// without mutating process environment).
+    fn apply_overrides(mut self, lookup: impl Fn(&str) -> Option<String>) -> ClusterSweepCfg {
+        fn num<T: std::str::FromStr>(
+            lookup: &impl Fn(&str) -> Option<String>,
+            key: &str,
+        ) -> Option<T> {
+            lookup(key).and_then(|v| v.trim().parse().ok())
+        }
+        if let Some(v) = lookup("CLUSTER_SERVERS") {
+            let counts: Vec<usize> =
+                v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+            if !counts.is_empty() {
+                self.server_counts = counts;
+            }
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_BYTES_PER_RANK") {
+            self.bytes_per_rank = v;
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_CHANNELS") {
+            self.channels = v;
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_POD_SIZE") {
+            self.pod_size = v;
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_SPINES") {
+            self.spines = v;
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_OVERSUB") {
+            self.oversubscription = v;
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_RING_CAP") {
+            self.ring_cap = v;
+        }
+        if let Some(v) = num(&lookup, "CLUSTER_A2A_CAP") {
+            self.a2a_cap = v;
+        }
+        self
     }
 
     fn fabric(&self) -> FabricConfig {
@@ -63,6 +128,28 @@ impl ClusterSweepCfg {
             ..LeafSpineCfg::default()
         })
     }
+}
+
+/// Ranks for the ring-family arms. `None` means the whole world fits under
+/// `ring_cap` (run the world group — the historical behaviour). Otherwise
+/// one lead GPU per `stride`-th server, with the stride chosen so the
+/// subgroup has at most `ring_cap` ranks while spanning every pod.
+fn ring_ranks(n_servers: usize, gpus_per_server: usize, ring_cap: usize) -> Option<Vec<usize>> {
+    let cap = ring_cap.max(1);
+    if n_servers * gpus_per_server <= cap {
+        return None;
+    }
+    let stride = n_servers.div_ceil(cap.min(n_servers));
+    Some((0..n_servers).step_by(stride).map(|s| s * gpus_per_server).collect())
+}
+
+/// Server-lead ranks for the AllToAll arm, strided down to at most
+/// `a2a_cap` ranks (a full many-thousand-rank AllToAll is quadratic in
+/// flows and adds nothing the strided lead group doesn't show).
+fn a2a_ranks(n_servers: usize, gpus_per_server: usize, a2a_cap: usize) -> Vec<usize> {
+    let cap = a2a_cap.max(1);
+    let stride = n_servers.div_ceil(cap.min(n_servers));
+    (0..n_servers).step_by(stride).map(|s| s * gpus_per_server).collect()
 }
 
 /// One (cluster size, collective) sweep point.
@@ -85,6 +172,16 @@ pub struct ClusterSweepRow {
     pub midflight_migrations: usize,
     /// Completion of the mid-flight arm (AllReduce rows only; 0 elsewhere).
     pub midflight_time: f64,
+    /// Kernel events popped during the healthy arm (perf counter).
+    pub events_popped: u64,
+    /// Rate domains visited across the healthy arm's closure recomputes
+    /// (perf counter; `domains_touched / recomputes` near 1 means changes
+    /// stayed pod-local).
+    pub domains_touched: u64,
+    /// Peak sparse-resident engine resources during the healthy arm (perf
+    /// counter; at 4096 servers this stays proportional to the ranks the
+    /// collective actually routes through, not the fabric size).
+    pub resident_resources: u64,
 }
 
 const KINDS: [CollKind; 7] = [
@@ -109,18 +206,36 @@ pub fn cluster_sweep(cfg: &ClusterSweepCfg) -> Vec<ClusterSweepRow> {
         let mut degraded = CommWorld::new_with_fabric(&preset, cfg.channels, &fabric);
         let dead_leaf = degraded.topo().fabric().leaf_id(0, 0);
         degraded.note_switch_failure(SwitchTarget::Leaf(dead_leaf), SwitchAction::Down);
-        let leads: Vec<usize> =
-            (0..n).map(|s| s * preset.topo.gpus_per_server).collect();
+        let gps = preset.topo.gpus_per_server;
+        let leads = a2a_ranks(n, gps, cfg.a2a_cap);
+        // `None` = the world fits under `ring_cap` (historical behaviour);
+        // `Some` = strided server-lead subgroup for 1024–4096-server runs.
+        let ring = ring_ranks(n, gps, cfg.ring_cap);
         for kind in KINDS {
-            // AllToAll runs on the server-lead group (EP placement); the
-            // other collectives on the world group.
-            let (h_group, d_group, ranks) = if kind == CollKind::AllToAll {
-                (healthy.group(&leads), degraded.group(&leads), leads.len())
+            // AllToAll runs on the (capped) server-lead group (EP
+            // placement); the other collectives on the world group, or the
+            // capped ring subgroup past `ring_cap` ranks.
+            let (h_group, d_group) = if kind == CollKind::AllToAll {
+                (healthy.group(&leads), degraded.group(&leads))
             } else {
-                (healthy.world_group(), degraded.world_group(), healthy.topo().n_gpus())
+                match &ring {
+                    Some(r) => (healthy.group(r), degraded.group(r)),
+                    None => (healthy.world_group(), degraded.world_group()),
+                }
             };
-            let t_h = h_group
-                .time_collective(kind, cfg.bytes_per_rank, StrategyChoice::Auto)
+            let ranks = h_group.n_ranks();
+            // `run` rather than `time_collective`: same completion bits,
+            // plus the kernel counters of the healthy arm.
+            let h_rep = h_group.run(
+                kind,
+                cfg.bytes_per_rank,
+                StrategyChoice::Auto,
+                vec![],
+                &mut PhantomPlane,
+                0,
+            );
+            let t_h = h_rep
+                .completion
                 .unwrap_or_else(|| panic!("{kind:?} healthy arm crashed at n={n}"));
             let (_, strategy) =
                 d_group.compile(kind, cfg.bytes_per_rank, 0, StrategyChoice::Auto);
@@ -128,7 +243,8 @@ pub fn cluster_sweep(cfg: &ClusterSweepCfg) -> Vec<ClusterSweepRow> {
                 .time_collective(kind, cfg.bytes_per_rank, StrategyChoice::Auto)
                 .unwrap_or_else(|| panic!("{kind:?} leaf-down arm crashed at n={n}"));
             // Mid-flight leaf outage, AllReduce only: the detection +
-            // migration pipeline at scale.
+            // migration pipeline at scale (same capped group as the other
+            // arms so rank counts agree across the row).
             let (migrations, t_mid) = if kind == CollKind::AllReduce {
                 let world = CommWorld::new_with_fabric(&preset, cfg.channels, &fabric);
                 let script = vec![SwitchFaultEvent {
@@ -136,7 +252,11 @@ pub fn cluster_sweep(cfg: &ClusterSweepCfg) -> Vec<ClusterSweepRow> {
                     target: SwitchTarget::Leaf(dead_leaf),
                     action: SwitchAction::Down,
                 }];
-                let rep = world.world_group().run_scripted(
+                let mid_group = match &ring {
+                    Some(r) => world.group(r),
+                    None => world.world_group(),
+                };
+                let rep = mid_group.run_scripted(
                     kind,
                     cfg.bytes_per_rank,
                     StrategyChoice::Auto,
@@ -166,6 +286,9 @@ pub fn cluster_sweep(cfg: &ClusterSweepCfg) -> Vec<ClusterSweepRow> {
                 overhead: (t_d - t_h) / t_h,
                 midflight_migrations: migrations,
                 midflight_time: t_mid,
+                events_popped: h_rep.events_popped,
+                domains_touched: h_rep.domains_touched,
+                resident_resources: h_rep.resident_resources,
             });
         }
     }
@@ -189,7 +312,10 @@ pub fn cluster_sweep_to_json(cfg: &ClusterSweepCfg, rows: &[ClusterSweepRow]) ->
                 .set("leaf_down_strategy", r.leaf_down_strategy.as_str())
                 .set("overhead", r.overhead)
                 .set("midflight_migrations", r.midflight_migrations)
-                .set("midflight_time", r.midflight_time),
+                .set("midflight_time", r.midflight_time)
+                .set("events_popped", r.events_popped)
+                .set("domains_touched", r.domains_touched)
+                .set("resident_resources", r.resident_resources),
         );
     }
     Json::obj()
@@ -199,6 +325,8 @@ pub fn cluster_sweep_to_json(cfg: &ClusterSweepCfg, rows: &[ClusterSweepRow]) ->
         .set("oversubscription", cfg.oversubscription)
         .set("channels", cfg.channels)
         .set("bytes_per_rank", cfg.bytes_per_rank)
+        .set("ring_cap", cfg.ring_cap)
+        .set("a2a_cap", cfg.a2a_cap)
         .set("rows", arr)
 }
 
@@ -219,6 +347,8 @@ mod tests {
             pod_size: 2,
             spines: 2,
             oversubscription: 2.0,
+            ring_cap: 1024,
+            a2a_cap: 128,
         };
         let rows = cluster_sweep(&cfg);
         assert_eq!(rows.len(), 7);
@@ -226,6 +356,8 @@ mod tests {
             assert!(r.healthy_time > 0.0, "{:?}", r.kind);
             assert!(r.leaf_down_time >= r.healthy_time * 0.99, "{:?}", r.kind);
             assert!(r.healthy_busbw > 0.0);
+            assert!(r.events_popped > 0, "{:?} must pop kernel events", r.kind);
+            assert!(r.resident_resources > 0, "{:?}", r.kind);
         }
         let ar = rows.iter().find(|r| r.kind == CollKind::AllReduce).unwrap();
         assert!(ar.midflight_migrations >= 1);
@@ -233,5 +365,54 @@ mod tests {
         let j = cluster_sweep_to_json(&cfg, &rows).pretty();
         assert!(j.contains("\"rows\""));
         assert!(j.contains("AllToAll"));
+        assert!(j.contains("\"events_popped\""));
+        assert!(j.contains("\"ring_cap\""));
+    }
+
+    #[test]
+    fn ring_ranks_cap_preserves_small_sweeps_and_strides_large_ones() {
+        // Historical sweep points (32–128 servers × 8 GPUs ≤ 1024) keep the
+        // world group — the capped path must not perturb them.
+        for n in [32, 64, 128] {
+            assert!(ring_ranks(n, 8, 1024).is_none(), "n={n}");
+        }
+        // 1024 servers × 8 GPUs = 8192 ranks > 1024: one lead per 1024/1024
+        // servers → 1024 strided leads.
+        let r = ring_ranks(1024, 8, 1024).unwrap();
+        assert_eq!(r.len(), 1024);
+        assert_eq!(r[0], 0);
+        assert_eq!(r[1], 8);
+        // 4096 servers at cap 1024: every 4th server's lead.
+        let r = ring_ranks(4096, 8, 1024).unwrap();
+        assert_eq!(r.len(), 1024);
+        assert_eq!(r[1], 4 * 8);
+        // Cap smaller than the server count strides servers directly.
+        let r = ring_ranks(1024, 8, 256).unwrap();
+        assert_eq!(r.len(), 256);
+        assert_eq!(r[1], 4 * 8);
+    }
+
+    #[test]
+    fn a2a_ranks_are_strided_server_leads() {
+        assert_eq!(a2a_ranks(4, 8, 128), vec![0, 8, 16, 24]);
+        let r = a2a_ranks(1024, 8, 128);
+        assert_eq!(r.len(), 128);
+        assert_eq!(r[1], 8 * 8, "every 8th server's lead");
+    }
+
+    #[test]
+    fn env_overrides_apply_and_ignore_garbage() {
+        let cfg = ClusterSweepCfg::full().apply_overrides(|key| match key {
+            "CLUSTER_SERVERS" => Some("1024, 2048".into()),
+            "CLUSTER_RING_CAP" => Some("256".into()),
+            "CLUSTER_OVERSUB" => Some("4.0".into()),
+            "CLUSTER_CHANNELS" => Some("not-a-number".into()),
+            _ => None,
+        });
+        assert_eq!(cfg.server_counts, vec![1024, 2048]);
+        assert_eq!(cfg.ring_cap, 256);
+        assert_eq!(cfg.oversubscription, 4.0);
+        assert_eq!(cfg.channels, 2, "unparsable override keeps the default");
+        assert_eq!(cfg.a2a_cap, 128, "unset keys keep defaults");
     }
 }

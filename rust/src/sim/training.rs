@@ -199,6 +199,9 @@ pub fn scenario_training_iteration(
         strategy: Strategy::Standard,
         timeline: Vec::new(),
         lossless: None,
+        events_popped: 0,
+        domains_touched: 0,
+        resident_resources: 0,
     };
     let side_bytes = (bytes_per_rank / 8).max(1);
     let mut time = 0.0;

@@ -23,6 +23,7 @@ pub mod path;
 pub mod rankset;
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::fabric::{Fabric, FabricConfig, LeafId, SpineId};
 
@@ -77,6 +78,44 @@ pub enum ResourceKey {
     UplinkTx(LeafId, SpineId),
     /// Spine→leaf downlink (down direction) of the same physical link.
     UplinkRx(LeafId, SpineId),
+}
+
+/// Hierarchical rate-aggregation domains: a partition of the resource
+/// table keyed on fabric tiers. The netsim engine scopes every rate
+/// recompute to the dirty-domain closure, so a change local to one pod
+/// never touches remote pods' resources.
+///
+/// Partition layout:
+/// * flat (ideal) fabric — one domain per server (all its NICs, PCIe
+///   lanes, NVLink pools, UPI links) plus one domain per rail ToR;
+/// * leaf/spine fabric — one domain per *pod* (its servers' resources,
+///   leaf port pools, and uplink halves) plus one domain per spine, with
+///   the unused flat-prefix `TorRail` resources parked in a spare domain.
+///
+/// Every route the path planner emits crosses at most 4 domains (source
+/// server/pod, destination server/pod, one fabric tier), which the engine
+/// exploits with an inline per-flow domain array.
+#[derive(Debug, Clone, Default)]
+pub struct RateDomains {
+    /// resource → domain id; empty ⇒ a single global domain 0.
+    pub domain_of: Vec<u32>,
+    pub n_domains: u32,
+}
+
+impl RateDomains {
+    /// The trivial partition: one global domain (no aggregation).
+    pub fn single() -> RateDomains {
+        RateDomains { domain_of: Vec::new(), n_domains: 1 }
+    }
+
+    #[inline]
+    pub fn domain(&self, r: ResourceId) -> u32 {
+        if self.domain_of.is_empty() {
+            0
+        } else {
+            self.domain_of[r]
+        }
+    }
 }
 
 /// Static description of one resource.
@@ -166,6 +205,11 @@ pub struct Topology {
     /// of allocating a fresh `Vec` on every call inside the migration hot
     /// path.
     failover: Vec<NicId>,
+    /// Base capacities, shared with every engine built over this topology
+    /// (the engine's sparse state keeps no per-engine capacity copy).
+    caps: Arc<[f64]>,
+    /// Tier-keyed rate-domain partition for hierarchical aggregation.
+    domains: Arc<RateDomains>,
 }
 
 impl Topology {
@@ -237,8 +281,68 @@ impl Topology {
                 }
             }
         }
-        let mut topo =
-            Topology { cfg: cfg.clone(), resources, index, fabric, failover: Vec::new() };
+        // Tier-keyed rate domains (see [`RateDomains`]): flat fabrics get
+        // one domain per server + one per rail ToR; leaf/spine fabrics one
+        // per pod + one per spine + a parking domain for the unused
+        // flat-prefix ToRs.
+        let (n_domains, domain_of): (u32, Vec<u32>) = if fabric.is_ideal() {
+            let server_doms = cfg.n_servers as u32;
+            let n = server_doms + cfg.nics_per_server as u32;
+            let map = resources
+                .iter()
+                .map(|r| match r.key {
+                    ResourceKey::NicTx(n)
+                    | ResourceKey::NicRx(n)
+                    | ResourceKey::PcieUp(n)
+                    | ResourceKey::PcieDown(n) => (n / cfg.nics_per_server) as u32,
+                    ResourceKey::NvlTx(g) | ResourceKey::NvlRx(g) => {
+                        (g / cfg.gpus_per_server) as u32
+                    }
+                    ResourceKey::Upi(s, _) => s as u32,
+                    ResourceKey::TorRail(rail) => server_doms + rail as u32,
+                    _ => unreachable!("switch-tier key on an ideal fabric"),
+                })
+                .collect();
+            (n, map)
+        } else {
+            let pods = fabric.n_pods() as u32;
+            let spine_base = pods;
+            let parking = pods + fabric.n_spines() as u32;
+            let n = parking + 1;
+            let pod_of_leaf = |l: LeafId| (l / cfg.nics_per_server) as u32;
+            let map = resources
+                .iter()
+                .map(|r| match r.key {
+                    ResourceKey::NicTx(n)
+                    | ResourceKey::NicRx(n)
+                    | ResourceKey::PcieUp(n)
+                    | ResourceKey::PcieDown(n) => {
+                        fabric.pod_of_server(n / cfg.nics_per_server) as u32
+                    }
+                    ResourceKey::NvlTx(g) | ResourceKey::NvlRx(g) => {
+                        fabric.pod_of_server(g / cfg.gpus_per_server) as u32
+                    }
+                    ResourceKey::Upi(s, _) => fabric.pod_of_server(s) as u32,
+                    // Leaf/spine routes never cross TorRail; park them.
+                    ResourceKey::TorRail(_) => parking,
+                    ResourceKey::LeafIn(l) | ResourceKey::LeafOut(l) => pod_of_leaf(l),
+                    ResourceKey::UplinkTx(l, _) | ResourceKey::UplinkRx(l, _) => pod_of_leaf(l),
+                    ResourceKey::SpineSw(sp) => spine_base + sp as u32,
+                })
+                .collect();
+            (n, map)
+        };
+        let caps: Arc<[f64]> = resources.iter().map(|r| r.capacity).collect();
+        let domains = Arc::new(RateDomains { domain_of, n_domains });
+        let mut topo = Topology {
+            cfg: cfg.clone(),
+            resources,
+            index,
+            fabric,
+            failover: Vec::new(),
+            caps,
+            domains,
+        };
         let mut failover = Vec::with_capacity(n_gpus * cfg.nics_per_server);
         for g in 0..n_gpus {
             let mut nics: Vec<NicId> = topo.nics_of_server(topo.server_of_gpu(g)).collect();
@@ -252,6 +356,17 @@ impl Topology {
     /// The inter-server fabric the topology is built over.
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
+    }
+
+    /// Base capacities as a shared slice — engines over this topology hold
+    /// a clone of the `Arc`, not a copy of the table.
+    pub fn shared_caps(&self) -> Arc<[f64]> {
+        Arc::clone(&self.caps)
+    }
+
+    /// The tier-keyed rate-domain partition (hierarchical aggregation).
+    pub fn rate_domains(&self) -> Arc<RateDomains> {
+        Arc::clone(&self.domains)
     }
 
     // ------------------------------------------------------------------
@@ -513,6 +628,61 @@ mod tests {
         for id in flat.n_resources()..t.n_resources() {
             let key = t.spec(id).key;
             assert_eq!(t.resource(key), id);
+        }
+    }
+
+    #[test]
+    fn flat_rate_domains_partition_by_server_and_rail() {
+        let t = t2x8();
+        let d = t.rate_domains();
+        // 2 servers + 8 rails.
+        assert_eq!(d.n_domains, 10);
+        assert_eq!(d.domain_of.len(), t.n_resources());
+        assert!(d.domain_of.iter().all(|&x| x < d.n_domains));
+        assert_eq!(d.domain(t.resource(ResourceKey::NicTx(0))), 0);
+        assert_eq!(d.domain(t.resource(ResourceKey::NicRx(9))), 1); // server 1
+        assert_eq!(d.domain(t.resource(ResourceKey::NvlTx(15))), 1);
+        assert_eq!(d.domain(t.resource(ResourceKey::Upi(0, 1))), 0);
+        assert_eq!(d.domain(t.resource(ResourceKey::TorRail(3))), 2 + 3);
+        // Shared caps mirror the spec table.
+        let caps = t.shared_caps();
+        assert_eq!(caps.len(), t.n_resources());
+        for id in 0..t.n_resources() {
+            assert_eq!(caps[id], t.spec(id).capacity);
+        }
+    }
+
+    #[test]
+    fn leaf_spine_rate_domains_partition_by_pod_and_spine() {
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        let cfg = TopologyConfig::simai_a100(16);
+        let fab = FabricConfig::leaf_spine_with(LeafSpineCfg {
+            pod_size: 4,
+            spines: 4,
+            ..LeafSpineCfg::default()
+        });
+        let t = Topology::build_with_fabric(&cfg, &fab);
+        let d = t.rate_domains();
+        // 4 pods + 4 spines + 1 parking domain for the unused flat ToRs.
+        assert_eq!(d.n_domains, 9);
+        assert!(d.domain_of.iter().all(|&x| x < d.n_domains));
+        // Server 5 is in pod 1; its NICs/GPUs/UPI share the pod domain with
+        // its leaves and uplink halves.
+        assert_eq!(d.domain(t.resource(ResourceKey::NicTx(5 * 8))), 1);
+        assert_eq!(d.domain(t.resource(ResourceKey::NvlRx(5 * 8 + 7))), 1);
+        assert_eq!(d.domain(t.resource(ResourceKey::LeafIn(8))), 1); // leaf 8 = pod 1 rail 0
+        assert_eq!(d.domain(t.resource(ResourceKey::UplinkTx(8, 2))), 1);
+        assert_eq!(d.domain(t.resource(ResourceKey::SpineSw(2))), 4 + 2);
+        assert_eq!(d.domain(t.resource(ResourceKey::TorRail(0))), 8);
+        // Any planner route crosses at most 4 distinct domains — the
+        // engine's inline per-flow domain array depends on this.
+        let cross_pod = path::Route::default_inter(&t, 0, 127).plan(&t, 0, 127);
+        let adjacent = path::Route::default_inter(&t, 0, 32).plan(&t, 0, 32);
+        for plan in [&cross_pod, &adjacent] {
+            let mut doms: Vec<u32> = plan.path.iter().map(|&r| d.domain(r)).collect();
+            doms.sort_unstable();
+            doms.dedup();
+            assert!(doms.len() <= 4, "route crosses {} domains", doms.len());
         }
     }
 

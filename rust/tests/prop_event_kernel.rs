@@ -1,0 +1,388 @@
+//! Conformance properties for the event-driven simulation kernel
+//! (calendar queue + sparse resources + domain-scoped recomputes):
+//!
+//! * the kernel-backed [`Executor`] — one calendar queue merging flow
+//!   completions, timers, and first-class NIC/switch script events — must
+//!   reproduce the preserved [`BaselineExecutor`] (timer-tag script
+//!   delivery, same engine arithmetic) byte-for-byte across all seven
+//!   collective kinds, random NIC+switch fault scripts, and both flat and
+//!   leaf/spine fabrics. This is the semantic gate of the kernel refactor:
+//!   golden traces cannot move;
+//! * same-seed scenario-corpus runs must be bit-identical at any thread
+//!   count (leaf/spine scenarios included — the kernel's sparse state is
+//!   engine-local, never shared);
+//! * the kernel counters (`events_popped`, `domains_touched`,
+//!   `resident_resources`) must be populated and self-consistent, and must
+//!   never leak into the golden-trace serialization.
+
+use r2ccl::ccl::{CommWorld, StrategyChoice};
+use r2ccl::collectives::exec::{
+    ChannelRouting, ExecOptions, ExecReport, Executor, FaultAction, FaultEvent,
+};
+use r2ccl::collectives::{BaselineExecutor, CollKind, PhantomPlane, Schedule};
+use r2ccl::config::{Preset, TimingConfig};
+use r2ccl::fabric::{FabricConfig, LeafSpineCfg, SwitchAction, SwitchFaultEvent, SwitchTarget};
+use r2ccl::scenario::{run_corpus, ClusterSpec, FaultPattern, FaultScenario, Workload};
+use r2ccl::topology::Topology;
+use r2ccl::util::Rng;
+
+const ALL_KINDS: [CollKind; 7] = [
+    CollKind::AllReduce,
+    CollKind::ReduceScatter,
+    CollKind::AllGather,
+    CollKind::Broadcast,
+    CollKind::Reduce,
+    CollKind::SendRecv,
+    CollKind::AllToAll,
+];
+
+/// The full bit-for-bit report comparison of `prop_hotpath`: event-time
+/// bits, engine recompute/flow counts, timeline (struct and JSON bytes),
+/// and every migration field. The kernel counters are deliberately *not*
+/// compared — the baseline schedules scripts as timers, so its pop count
+/// legitimately differs; `counters_are_populated_and_excluded_from_traces`
+/// covers them.
+fn assert_reports_equal(b: &ExecReport, o: &ExecReport, ctx: &str) {
+    assert_eq!(
+        b.completion.map(f64::to_bits),
+        o.completion.map(f64::to_bits),
+        "{ctx}: completion"
+    );
+    assert_eq!(b.crashed, o.crashed, "{ctx}: crashed");
+    assert_eq!(b.wire_bytes, o.wire_bytes, "{ctx}: wire_bytes");
+    assert_eq!(b.recomputes, o.recomputes, "{ctx}: engine recomputes");
+    assert_eq!(b.flows_created, o.flows_created, "{ctx}: engine flows");
+    assert_eq!(b.timeline, o.timeline, "{ctx}: timeline");
+    let json = |rep: &ExecReport| {
+        rep.timeline.iter().map(|e| e.to_json().pretty()).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(json(b), json(o), "{ctx}: timeline JSON");
+    assert_eq!(b.migrations.len(), o.migrations.len(), "{ctx}: migration count");
+    for (mb, mo) in b.migrations.iter().zip(&o.migrations) {
+        assert_eq!(mb.at.to_bits(), mo.at.to_bits(), "{ctx}: migration time");
+        assert_eq!(mb.nic, mo.nic, "{ctx}");
+        assert_eq!(mb.replacement, mo.replacement, "{ctx}");
+        assert_eq!(mb.diagnosis, mo.diagnosis, "{ctx}");
+        assert_eq!(mb.flows_migrated, mo.flows_migrated, "{ctx}");
+        assert_eq!(mb.retransmitted_bytes, mo.retransmitted_bytes, "{ctx}");
+        assert_eq!(mb.wasted_bytes, mo.wasted_bytes, "{ctx}");
+    }
+}
+
+fn random_nic_script(rng: &mut Rng, n_nics: usize, base: f64) -> Vec<FaultEvent> {
+    let n_events = rng.range(1, 4);
+    let mut script = Vec::new();
+    for _ in 0..n_events {
+        let action = match rng.range(0, 4) {
+            0 => FaultAction::FailNic,
+            1 => FaultAction::CutCable,
+            2 => FaultAction::Degrade(rng.range_f64(0.1, 0.9)),
+            _ => FaultAction::Repair,
+        };
+        script.push(FaultEvent {
+            at: rng.range_f64(0.05, 0.95) * base,
+            nic: rng.range(0, n_nics),
+            action,
+        });
+    }
+    script.sort_by(|a, b| a.at.total_cmp(&b.at));
+    script
+}
+
+/// Random switch events over every target class the fabric supports
+/// (spines degrade-only — `Spine × Down` is rejected by construction).
+fn random_switch_script(
+    rng: &mut Rng,
+    n_leaves: usize,
+    n_spines: usize,
+    base: f64,
+) -> Vec<SwitchFaultEvent> {
+    let n_events = rng.range(1, 4);
+    let mut script = Vec::new();
+    for _ in 0..n_events {
+        let (target, action) = match rng.range(0, 3) {
+            0 => {
+                let action = match rng.range(0, 3) {
+                    0 => SwitchAction::Down,
+                    1 => SwitchAction::Up,
+                    _ => SwitchAction::Degrade(rng.range_f64(0.1, 0.9)),
+                };
+                (SwitchTarget::Leaf(rng.range(0, n_leaves)), action)
+            }
+            1 => {
+                let action = match rng.range(0, 3) {
+                    0 => SwitchAction::Down,
+                    1 => SwitchAction::Up,
+                    _ => SwitchAction::Degrade(rng.range_f64(0.1, 0.9)),
+                };
+                (
+                    SwitchTarget::Uplink(rng.range(0, n_leaves), rng.range(0, n_spines)),
+                    action,
+                )
+            }
+            _ => (
+                SwitchTarget::Spine(rng.range(0, n_spines)),
+                SwitchAction::Degrade(rng.range_f64(0.1, 0.9)),
+            ),
+        };
+        script.push(SwitchFaultEvent { at: rng.range_f64(0.05, 0.95) * base, target, action });
+    }
+    script.sort_by(|a, b| a.at.total_cmp(&b.at));
+    script
+}
+
+/// Run one schedule through both executors with identical NIC + switch
+/// scripts and compare the reports bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn both_runs(
+    topo: &Topology,
+    timing: &TimingConfig,
+    sched: &Schedule,
+    opts: ExecOptions,
+    script: &[FaultEvent],
+    switch_script: &[SwitchFaultEvent],
+    initial: &[(usize, FaultAction)],
+    ctx: &str,
+) -> (ExecReport, ExecReport) {
+    let routing = ChannelRouting::default_rails(topo, 8);
+    let b = BaselineExecutor::new(topo, timing, routing.clone(), opts.clone(), script.to_vec())
+        .with_switch_script(switch_script.to_vec())
+        .with_initial_faults(initial)
+        .run(sched, &mut PhantomPlane);
+    let o = Executor::new(topo, timing, routing, opts, script.to_vec())
+        .with_switch_script(switch_script.to_vec())
+        .with_initial_faults(initial)
+        .run(sched, &mut PhantomPlane);
+    assert_reports_equal(&b, &o, ctx);
+    (b, o)
+}
+
+/// A 8-server SimAI leaf/spine world: 2 pods of 4 servers, 2 spines,
+/// 2:1 oversubscription — small enough for CI, structured enough that
+/// pod-local and cross-pod flows both occur.
+fn leaf_spine_world() -> (Preset, FabricConfig) {
+    let preset = Preset::simai(8);
+    let fabric = FabricConfig::leaf_spine_with(LeafSpineCfg {
+        pod_size: 4,
+        spines: 2,
+        oversubscription: 2.0,
+        ..LeafSpineCfg::default()
+    });
+    (preset, fabric)
+}
+
+#[test]
+fn kernel_matches_baseline_on_every_collkind_flat() {
+    // Flat testbed, standing NIC failure (forces non-Standard plans), all
+    // seven collective kinds — NIC scripts only (a flat fabric has no
+    // switches).
+    let preset = Preset::testbed();
+    let mut world = CommWorld::new(&preset, 8);
+    world.note_failure(0, FaultAction::FailNic);
+    let g = world.world_group();
+    let topo = Topology::build(&preset.topo);
+    let timing = TimingConfig::default();
+    let mut rng = Rng::new(0xCA1E1);
+    let initial = [(0usize, FaultAction::FailNic)];
+    for kind in ALL_KINDS {
+        let (sched, _) = g.compile(kind, 1 << 20, 0, StrategyChoice::Auto);
+        let base = g
+            .time_collective(kind, 1 << 20, StrategyChoice::Auto)
+            .expect("collective must complete with 7 of 8 NICs");
+        let script = random_nic_script(&mut rng, topo.n_nics(), base);
+        both_runs(
+            &topo,
+            &timing,
+            &sched,
+            ExecOptions::default(),
+            &script,
+            &[],
+            &initial,
+            &format!("flat {kind:?}"),
+        );
+    }
+}
+
+#[test]
+fn kernel_matches_baseline_on_every_collkind_leaf_spine() {
+    // Leaf/spine fabric: merged NIC + switch scripts land as first-class
+    // kernel events in the optimized executor and as tagged timers in the
+    // baseline; reports must still match bit-for-bit.
+    let (preset, fabric) = leaf_spine_world();
+    let world = CommWorld::new_with_fabric(&preset, 8, &fabric);
+    let g = world.world_group();
+    let topo = Topology::build_with_fabric(&preset.topo, &fabric);
+    let timing = TimingConfig::default();
+    let mut rng = Rng::new(0xCA1E2);
+    for kind in ALL_KINDS {
+        let (sched, _) = g.compile(kind, 1 << 20, 0, StrategyChoice::Auto);
+        let base = g
+            .time_collective(kind, 1 << 20, StrategyChoice::Auto)
+            .expect("healthy leaf/spine collective must complete");
+        let script = random_nic_script(&mut rng, topo.n_nics(), base);
+        let switch_script = random_switch_script(
+            &mut rng,
+            topo.fabric().n_leaves(),
+            topo.fabric().n_spines(),
+            base,
+        );
+        both_runs(
+            &topo,
+            &timing,
+            &sched,
+            ExecOptions::default(),
+            &script,
+            &switch_script,
+            &[],
+            &format!("leaf/spine {kind:?}"),
+        );
+    }
+}
+
+#[test]
+fn kernel_matches_baseline_across_random_merged_scripts() {
+    // Many random trials of the hardest shape: AllReduce on leaf/spine
+    // with interleaved NIC and switch events plus standing initial faults.
+    // The kernel merges all of it into one calendar queue; the baseline
+    // replays the historical timer-tag scheme.
+    let (preset, fabric) = leaf_spine_world();
+    let world = CommWorld::new_with_fabric(&preset, 8, &fabric);
+    let g = world.world_group();
+    let topo = Topology::build_with_fabric(&preset.topo, &fabric);
+    let timing = TimingConfig::default();
+    let (sched, _) = g.compile(CollKind::AllReduce, 1 << 22, 0, StrategyChoice::Auto);
+    let base = g
+        .time_collective(CollKind::AllReduce, 1 << 22, StrategyChoice::Auto)
+        .expect("healthy AllReduce must complete");
+    let mut rng = Rng::new(0xCA1E3);
+    for trial in 0..8 {
+        let script = random_nic_script(&mut rng, topo.n_nics(), base);
+        let switch_script = random_switch_script(
+            &mut rng,
+            topo.fabric().n_leaves(),
+            topo.fabric().n_spines(),
+            base,
+        );
+        let initial: Vec<(usize, FaultAction)> = if rng.chance(0.5) {
+            vec![(rng.range(0, topo.n_nics()), FaultAction::Degrade(rng.range_f64(0.3, 0.9)))]
+        } else {
+            vec![]
+        };
+        both_runs(
+            &topo,
+            &timing,
+            &sched,
+            ExecOptions::default(),
+            &script,
+            &switch_script,
+            &initial,
+            &format!("merged trial {trial}"),
+        );
+    }
+}
+
+#[test]
+fn counters_are_populated_and_excluded_from_traces() {
+    let (preset, fabric) = leaf_spine_world();
+    let world = CommWorld::new_with_fabric(&preset, 8, &fabric);
+    let g = world.world_group();
+    let rep = g.run(
+        CollKind::AllReduce,
+        1 << 22,
+        StrategyChoice::Auto,
+        vec![],
+        &mut PhantomPlane,
+        0,
+    );
+    assert!(rep.events_popped > 0, "every completion pops through the kernel queue");
+    assert!(
+        rep.events_popped >= rep.flows_created,
+        "each flow completion is at least one pop"
+    );
+    assert!(rep.resident_resources > 0, "live flows materialize resources");
+    assert!(
+        rep.domains_touched >= rep.recomputes,
+        "every recompute visits at least one rate domain"
+    );
+    // The counters must never reach the golden-trace wire format.
+    for entry in &rep.timeline {
+        let j = entry.to_json().pretty();
+        assert!(!j.contains("events_popped"), "{j}");
+        assert!(!j.contains("domains_touched"), "{j}");
+        assert!(!j.contains("resident_resources"), "{j}");
+    }
+}
+
+#[test]
+fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
+    // Same-seed determinism at any thread count, leaf/spine scenarios
+    // included: reports (the golden-trace JSON bytes) and the aggregated
+    // kernel counters must be identical to the serial run.
+    let preset = Preset::testbed();
+    let mut meta = Rng::new(0xCA1E4);
+    let mut scenarios: Vec<FaultScenario> = (0..2)
+        .map(|i| FaultScenario {
+            name: format!("kernel-corpus-{i}"),
+            seed: meta.next_u64(),
+            iters: 3,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
+            max_overhead: None,
+            cluster: None,
+            patterns: match i {
+                0 => vec![FaultPattern::OneShot {
+                    at: 1.5,
+                    nic: 0,
+                    action: FaultAction::FailNic,
+                }],
+                _ => vec![FaultPattern::RandomMultiFault { k: 2, at: 1.4 }],
+            },
+        })
+        .collect();
+    scenarios.push(FaultScenario {
+        name: "kernel-corpus-fabric".into(),
+        seed: meta.next_u64(),
+        iters: 3,
+        workload: Workload::Training { tp: 8, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
+        max_overhead: None,
+        cluster: Some(ClusterSpec {
+            n_servers: 16,
+            fabric: FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 4,
+                oversubscription: 2.0,
+                ..LeafSpineCfg::default()
+            }),
+        }),
+        patterns: vec![FaultPattern::LeafSwitchDown {
+            pod: 0,
+            rail: 0,
+            at: 1.4,
+            repair_after: None,
+        }],
+    });
+    let serial = run_corpus(&scenarios, &preset, 1);
+    let serial_json: Vec<String> = serial.iter().map(|r| r.to_json().pretty()).collect();
+    for r in &serial {
+        assert!(r.events_popped > 0, "{}: scenario totals must aggregate", r.scenario);
+        assert!(
+            !r.to_json().pretty().contains("events_popped"),
+            "counters must stay out of golden traces"
+        );
+    }
+    for threads in [2usize, 3, 8] {
+        let par = run_corpus(&scenarios, &preset, threads);
+        let par_json: Vec<String> = par.iter().map(|r| r.to_json().pretty()).collect();
+        assert_eq!(par_json, serial_json, "{threads} threads diverged from serial");
+        for (p, s) in par.iter().zip(&serial) {
+            assert_eq!(p.events_popped, s.events_popped, "{threads} threads: events_popped");
+            assert_eq!(
+                p.domains_touched, s.domains_touched,
+                "{threads} threads: domains_touched"
+            );
+            assert_eq!(
+                p.resident_resources, s.resident_resources,
+                "{threads} threads: resident_resources"
+            );
+        }
+    }
+}
