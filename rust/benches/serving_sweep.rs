@@ -1,0 +1,70 @@
+//! Request-level serving sweep: arrival-rate points × fault arms (healthy /
+//! NIC-down / replica-down) through the continuous-batching request engine.
+//! `SERVE_RPS` and the other `SERVE_*` env vars re-shape the sweep without
+//! code edits (see `ServeSweepCfg::apply_env`).
+//!
+//! Writes `bench_results/serving_sweep.json` (schema in
+//! `bench_results/README.md`). `BENCH_QUICK=1` restricts to the light-load
+//! point — the CI `serve-smoke` job's shape.
+
+use r2ccl::bench::Table;
+use r2ccl::serve::{serve_sweep, serve_sweep_to_json, ServeSweepCfg};
+use r2ccl::util::stats::fmt_time;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let cfg = if quick { ServeSweepCfg::quick() } else { ServeSweepCfg::full() };
+    let cfg = cfg.apply_env();
+    println!(
+        "serving sweep: rps {:?}, {}s window, {} replicas, prompt {} → {} tokens, batch {}, \
+         threads {}{}",
+        cfg.rps_points,
+        cfg.duration,
+        cfg.replicas,
+        cfg.prompt_tokens,
+        cfg.output_tokens,
+        cfg.max_batch,
+        cfg.threads,
+        if quick { " (BENCH_QUICK)" } else { "" }
+    );
+    let rows = serve_sweep(&cfg);
+    let mut table = Table::new(
+        "Request serving under faults (TTFT/TPOT p50/p99, goodput, failover ledger)",
+        &[
+            "point",
+            "arm",
+            "arrivals",
+            "done",
+            "lost",
+            "replayed",
+            "TTFT p50",
+            "TTFT p99",
+            "TPOT p50",
+            "TPOT p99",
+            "goodput tok/s",
+            "migr.",
+        ],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.label.clone(),
+            r.arm.to_string(),
+            r.arrivals.to_string(),
+            r.completed.to_string(),
+            r.lost.to_string(),
+            if r.replayed > 0 { r.replayed.to_string() } else { "-".to_string() },
+            fmt_time(r.ttft_p50),
+            fmt_time(r.ttft_p99),
+            fmt_time(r.tpot_p50),
+            fmt_time(r.tpot_p99),
+            format!("{:.0}", r.goodput_tokens_per_s),
+            if r.migrations > 0 { r.migrations.to_string() } else { "-".to_string() },
+        ]);
+    }
+    table.print();
+    let _ = std::fs::create_dir_all("bench_results");
+    let json = serve_sweep_to_json(&cfg, &rows).pretty();
+    std::fs::write("bench_results/serving_sweep.json", json + "\n")
+        .expect("write bench_results/serving_sweep.json");
+    println!("\nwrote bench_results/serving_sweep.json ({} rows)", rows.len());
+}

@@ -402,6 +402,36 @@ impl CommWorld {
         self.check_layout(layout);
         layout.pp_pair_ranks().iter().map(|r| self.group(r)).collect()
     }
+
+    /// Number of disaggregated serving replicas this world can host:
+    /// replica `r` is the prefill/decode server pair `(2r, 2r+1)`, so a
+    /// world holds `n_servers / 2` replicas (an odd trailing server is a
+    /// spare and hosts none).
+    pub fn n_serving_replicas(&self) -> usize {
+        self.shared.topo.n_servers() / 2
+    }
+
+    /// The `(prefill, decode)` server ids of serving replica `r`.
+    pub fn replica_servers(&self, r: usize) -> (usize, usize) {
+        assert!(r < self.n_serving_replicas(), "replica {r} out of range");
+        (2 * r, 2 * r + 1)
+    }
+
+    /// Every rank of serving replica `r` (both servers of the pair, in
+    /// rank order).
+    pub fn replica_ranks(&self, r: usize) -> Vec<GpuId> {
+        let (p, d) = self.replica_servers(r);
+        let g = self.shared.topo.cfg.gpus_per_server;
+        (p * g..(d + 1) * g).collect()
+    }
+
+    /// The communicator group of serving replica `r`: its PD KV SendRecv
+    /// and its decode-step TP allreduce both run on this pair group. On
+    /// the 2-server testbed this is exactly the group `pd_kv_pair` opens,
+    /// so plans (and plan-cache entries) are shared.
+    pub fn replica_pair_group(&self, r: usize) -> CommGroup {
+        self.group(&self.replica_ranks(r))
+    }
 }
 
 /// A communicator group: the `compile / run / time_collective /

@@ -32,6 +32,7 @@ pub mod schedule;
 pub mod ccl;
 pub mod baselines;
 pub mod scenario;
+pub mod serve;
 pub mod sim;
 // The PJRT runtime and the end-to-end trainer need the `xla` bindings,
 // which the offline build image does not provide; they are feature-gated

@@ -13,6 +13,11 @@
 //!                     [--spines 4] [--oversub 2.0] [--channels 2]
 //!                     [--ring-cap 1024] [--a2a-cap 128] [--quick] [--json]
 //!                     (CLUSTER_* env vars apply first; flags win)
+//!   serve-sweep       [--rps 50,200,1000] [--duration 2.0] [--trace t0,t1,...]
+//!                     [--replicas 2] [--prompt 2000] [--output 32]
+//!                     [--max-batch 16] [--fabric flat|leaf-spine] [--threads N]
+//!                     [--seed 42] [--quick] [--json]
+//!                     (SERVE_* env vars apply first; flags win)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -335,6 +340,66 @@ fn main() -> anyhow::Result<()> {
                 println!("{}", cluster_sweep_to_json(&cfg, &rows).pretty());
             }
         }
+        "serve-sweep" => {
+            // The serving_sweep bench's shape, CLI-driven: `SERVE_*` env
+            // vars apply first (same knobs CI uses), explicit flags win.
+            //   serve-sweep --rps 50,1000 --replicas 4 --json
+            use r2ccl::serve::{serve_sweep, serve_sweep_to_json, ServeSweepCfg};
+            let base =
+                if args.has("quick") { ServeSweepCfg::quick() } else { ServeSweepCfg::full() };
+            let mut cfg = base.apply_env();
+            if let Some(v) = args.get("rps") {
+                let points: Vec<f64> = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                if !points.is_empty() {
+                    cfg.rps_points = points;
+                }
+            }
+            if let Some(v) = args.get("trace") {
+                let times: Vec<f64> = v.split(',').filter_map(|s| s.trim().parse().ok()).collect();
+                if !times.is_empty() {
+                    cfg.trace = Some(times);
+                }
+            }
+            cfg.duration = args.get_f64("duration", cfg.duration);
+            cfg.replicas = args.get_usize("replicas", cfg.replicas);
+            cfg.prompt_tokens = args.get_usize("prompt", cfg.prompt_tokens);
+            cfg.output_tokens = args.get_usize("output", cfg.output_tokens);
+            cfg.max_batch = args.get_usize("max-batch", cfg.max_batch);
+            cfg.seed = args.get_u64("seed", cfg.seed);
+            cfg.threads = args.get_usize("threads", cfg.threads);
+            if let Some(name) = args.get("fabric") {
+                cfg.fabric =
+                    r2ccl::fabric::FabricConfig::from_name(name).map_err(|e| anyhow::anyhow!(e))?;
+            }
+            println!(
+                "serving sweep: rps {:?}, {}s window, {} replicas, prompt {} -> {} tokens, batch {}",
+                cfg.rps_points,
+                cfg.duration,
+                cfg.replicas,
+                cfg.prompt_tokens,
+                cfg.output_tokens,
+                cfg.max_batch
+            );
+            let rows = serve_sweep(&cfg);
+            for r in &rows {
+                println!(
+                    "  {:<16} {:<13} {:>4} reqs ({} lost, {} replayed): TTFT p50/p99 {}/{} TPOT p50/p99 {}/{} | {:.0} tok/s",
+                    r.label,
+                    r.arm,
+                    r.arrivals,
+                    r.lost,
+                    r.replayed,
+                    fmt_time(r.ttft_p50),
+                    fmt_time(r.ttft_p99),
+                    fmt_time(r.tpot_p50),
+                    fmt_time(r.tpot_p99),
+                    r.goodput_tokens_per_s
+                );
+            }
+            if args.has("json") {
+                println!("{}", serve_sweep_to_json(&cfg, &rows).pretty());
+            }
+        }
         #[cfg(feature = "xla")]
         "train-e2e" => {
             let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
@@ -374,7 +439,7 @@ fn main() -> anyhow::Result<()> {
                 world.topo().n_resources()
             );
             println!(
-                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | train-e2e | info"
+                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | serve-sweep | train-e2e | info"
             );
         }
     }

@@ -28,6 +28,7 @@ use crate::collectives::exec::{FaultAction, FaultEvent, TimelineEntry};
 use crate::collectives::CollKind;
 use crate::config::Preset;
 use crate::fabric::{SwitchAction, SwitchFaultEvent, SwitchTarget};
+use crate::serve::{run_request_engine, summarize, EngineCfg, ServingSummary};
 use crate::sim::inference::{kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, InferModel};
 use crate::sim::training::{
     scenario_main_collective, scenario_training_iteration, training_groups, ParallelConfig,
@@ -97,6 +98,10 @@ pub struct ScenarioReport {
     pub path_lost: bool,
     pub lossless: bool,
     pub max_overhead: Option<f64>,
+    /// Per-request SLO summary — request-serving workloads only. Appended
+    /// to the JSON only when present, so every pre-existing golden trace
+    /// (training, iteration-level serving) is byte-identical.
+    pub serving: Option<ServingSummary>,
     /// Total kernel events popped across all iterations (perf counter —
     /// never serialized; `to_json` stays byte-identical to pre-kernel
     /// golden traces).
@@ -130,6 +135,14 @@ impl ScenarioReport {
                 return Err(format!(
                     "scenario {:?}: mean overhead {:.4} exceeds bound {:.4}",
                     self.scenario, self.overhead, bound
+                ));
+            }
+        }
+        if let Some(s) = &self.serving {
+            if s.ledger.lost_while_healthy > 0 {
+                return Err(format!(
+                    "scenario {:?}: dropped {} requests while a healthy replica existed",
+                    self.scenario, s.ledger.lost_while_healthy
                 ));
             }
         }
@@ -196,8 +209,12 @@ impl ScenarioReport {
             .set("crashed", self.crashed)
             .set("path_lost", self.path_lost)
             .set("lossless", self.lossless);
-        match self.max_overhead {
+        let j = match self.max_overhead {
             Some(m) => j.set("max_overhead", m),
+            None => j,
+        };
+        match &self.serving {
+            Some(s) => j.set("serving", s.to_json()),
             None => j,
         }
     }
@@ -328,11 +345,84 @@ impl<'a> ScenarioRunner<'a> {
         }
     }
 
+    /// The request-serving arm of [`Self::run`]: a healthy engine pass for
+    /// the TTFT baseline, then the faulted pass with the compiled scripts
+    /// (times in *seconds*). The report reuses the training-side shape —
+    /// `healthy_iter_time` is the healthy mean TTFT, `overhead` the mean-
+    /// TTFT inflation, `goodput` output tokens/s, `wire_bytes` the payload
+    /// bytes the batch steps shipped — and carries the full per-request
+    /// summary in `serving`.
+    fn run_requests(&self, ecfg: &EngineCfg) -> ScenarioReport {
+        let fabric_cfg = self.scenario.fabric_config();
+        let (events, switch_events) = self.scenario.compile_full(&self.preset.topo);
+        let healthy = run_request_engine(&self.preset, &fabric_cfg, ecfg, &[], &[]);
+        let healthy_summary = summarize(&healthy, ecfg.replicas);
+        let faulted = run_request_engine(&self.preset, &fabric_cfg, ecfg, &events, &switch_events);
+        let summary = summarize(&faulted, ecfg.replicas);
+        let healthy_ttft = if healthy_summary.ttft.n > 0 { healthy_summary.ttft.mean } else { 0.0 };
+        let overhead = if summary.ttft.n > 0 && healthy_ttft > 0.0 {
+            (summary.ttft.mean - healthy_ttft) / healthy_ttft
+        } else {
+            0.0
+        };
+        ScenarioReport {
+            scenario: self.scenario.name.clone(),
+            seed: self.scenario.seed,
+            events,
+            switch_events,
+            healthy_iter_time: healthy_ttft,
+            // Events are already in seconds: the identity base.
+            time_base: 1.0,
+            iterations: Vec::new(),
+            total_time: faulted.total_time,
+            goodput: summary.goodput_tokens_per_s,
+            overhead,
+            migrations: faulted.migrations,
+            retransmitted_bytes: faulted.retransmitted_bytes,
+            wasted_bytes: faulted.wasted_bytes,
+            wire_bytes: faulted.payload_bytes,
+            // A request-serving run "crashes" when it drops requests — only
+            // legal with every replica down (`path_lost`), mirroring the
+            // no-crash-while-a-path-exists invariant.
+            crashed: faulted.ledger.lost > 0,
+            path_lost: faulted.all_down_ever,
+            // No elementwise data plane under batch steps; vacuously true.
+            lossless: true,
+            max_overhead: self.scenario.max_overhead,
+            serving: Some(summary),
+            events_popped: 0,
+            domains_touched: 0,
+            resident_resources: 0,
+        }
+    }
+
     pub fn run(&self) -> ScenarioReport {
         // Malformed scenarios (out-of-range NIC/rail/server/switch indices)
         // are a caller error; the CLI validates first for a clean message.
         if let Err(e) = self.scenario.validate(&self.preset.topo) {
             panic!("{e}");
+        }
+        // Request-serving workloads run on the request engine, not the
+        // iteration loop: their events are in *seconds* and their report
+        // carries the per-request SLO summary.
+        if let Workload::RequestServing {
+            arrivals,
+            replicas,
+            prompt_tokens,
+            output_tokens,
+            max_batch,
+        } = &self.scenario.workload
+        {
+            let ecfg = EngineCfg {
+                model: InferModel::llama70b(),
+                arrivals: arrivals.clone(),
+                replicas: *replicas,
+                prompt_tokens: *prompt_tokens,
+                output_tokens: *output_tokens,
+                max_batch: *max_batch,
+                seed: self.scenario.seed,
+            };
+            return self.run_requests(&ecfg);
         }
         let fabric_cfg = self.scenario.fabric_config();
         let (events, switch_events) = self.scenario.compile_full(&self.preset.topo);
@@ -491,6 +581,7 @@ impl<'a> ScenarioRunner<'a> {
             path_lost,
             lossless: records.iter().all(|r| r.lossless != Some(false)),
             max_overhead: self.scenario.max_overhead,
+            serving: None,
             events_popped: records.iter().map(|r| r.events_popped).sum(),
             domains_touched: records.iter().map(|r| r.domains_touched).sum(),
             resident_resources: records
@@ -674,6 +765,47 @@ mod tests {
         assert!(rep.iterations.iter().all(|r| r.time > 0.0));
         assert_eq!(rep.iterations[1].migrations, 1);
         assert!(rep.wire_bytes > 0);
+    }
+
+    #[test]
+    fn request_serving_scenario_reports_slo_summary() {
+        use crate::fabric::FabricConfig;
+        use crate::scenario::spec::ClusterSpec;
+        use crate::serve::ArrivalSpec;
+        let sc = FaultScenario {
+            name: "req-serve".into(),
+            seed: 9,
+            iters: 1,
+            workload: Workload::RequestServing {
+                arrivals: ArrivalSpec::Poisson { rps: 40.0, duration: 1.0 },
+                replicas: 2,
+                prompt_tokens: 2000,
+                output_tokens: 8,
+                max_batch: 8,
+            },
+            max_overhead: None,
+            cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
+            patterns: vec![FaultPattern::ReplicaDown {
+                replica: 1,
+                at: 0.3,
+                restore_after: None,
+            }],
+        };
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        let s = rep.serving.as_ref().unwrap();
+        assert_eq!(s.ledger.lost, 0, "replica 0 survives: nothing may drop");
+        assert!(s.ledger.replayed + s.ledger.rerouted > 0, "replica 1 had work at 0.3s");
+        assert!(s.ttft.n > 0 && s.ttft.p99 >= s.ttft.p50);
+        assert!(!rep.crashed && !rep.path_lost);
+        assert!(rep.iterations.is_empty(), "request runs have no iteration records");
+        assert_eq!(rep.time_base, 1.0, "events are already in seconds");
+        assert!(rep.goodput > 0.0, "goodput is output tokens/s");
+        assert!(rep.overhead > 0.0, "losing a replica must inflate mean TTFT");
+        let j = rep.to_json().pretty();
+        assert!(j.contains("\"serving\""));
+        assert!(j.contains("\"ttft\""));
+        assert!(j.contains("\"requests\""));
     }
 
     fn leaf_spine16(patterns: Vec<FaultPattern>, iters: usize, seed: u64) -> FaultScenario {

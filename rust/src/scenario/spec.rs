@@ -14,6 +14,7 @@
 
 use crate::collectives::exec::FaultAction;
 use crate::fabric::{Fabric, FabricConfig, FabricMode, LeafSpineCfg, SwitchAction, SwitchTarget};
+use crate::serve::ArrivalSpec;
 use crate::topology::{NicId, TopologyConfig};
 use crate::util::{Json, Rng};
 
@@ -121,6 +122,13 @@ pub enum FaultPattern {
     /// `duration` — the congestion profile of an oversubscribed spine tier
     /// under a synchronized collective burst.
     OversubSaturation { at: f64, factor: f64, duration: f64 },
+    /// A whole serving replica dies: every NIC of both servers of replica
+    /// `replica`'s prefill/decode pair fails at `at` (optionally all
+    /// repaired `restore_after` later). Only meaningful under
+    /// [`Workload::RequestServing`], whose time base is *seconds* — the
+    /// request engine re-routes the replica's in-flight requests, replays
+    /// their lost prefills, and counts the wasted work.
+    ReplicaDown { replica: usize, at: f64, restore_after: Option<f64> },
 }
 
 /// The seeded NIC draw shared by [`FaultPattern::RandomMultiFault`] and the
@@ -145,6 +153,7 @@ impl FaultPattern {
             FaultPattern::SpineDegrade { .. } => "spine_degrade",
             FaultPattern::UplinkFlap { .. } => "uplink_flap",
             FaultPattern::OversubSaturation { .. } => "oversub_saturation",
+            FaultPattern::ReplicaDown { .. } => "replica_down",
         }
     }
 
@@ -340,6 +349,25 @@ impl FaultPattern {
                     out.push(ScenarioEvent { at_iter: *at, nic, action: FaultAction::FailNic });
                 }
             }
+            FaultPattern::ReplicaDown { replica, at, restore_after } => {
+                for server in [2 * replica, 2 * replica + 1] {
+                    for rail in 0..topo.nics_per_server {
+                        let nic = server * topo.nics_per_server + rail;
+                        out.push(ScenarioEvent {
+                            at_iter: *at,
+                            nic,
+                            action: FaultAction::FailNic,
+                        });
+                        if let Some(after) = restore_after {
+                            out.push(ScenarioEvent {
+                                at_iter: at + after,
+                                nic,
+                                action: FaultAction::Repair,
+                            });
+                        }
+                    }
+                }
+            }
             // Switch-scoped patterns compile through `compile_switch`.
             FaultPattern::LeafSwitchDown { .. }
             | FaultPattern::SpineDegrade { .. }
@@ -418,6 +446,13 @@ impl FaultPattern {
                 .set("jitter", *jitter),
             FaultPattern::OversubSaturation { at, factor, duration } => {
                 j.set("at", *at).set("factor", *factor).set("duration", *duration)
+            }
+            FaultPattern::ReplicaDown { replica, at, restore_after } => {
+                let j = j.set("replica", *replica).set("at", *at);
+                match restore_after {
+                    Some(a) => j.set("restore_after", *a),
+                    None => j,
+                }
             }
         }
     }
@@ -499,6 +534,11 @@ impl FaultPattern {
                 factor: req_f64(j, "factor")?,
                 duration: req_f64(j, "duration")?,
             }),
+            "replica_down" => Ok(FaultPattern::ReplicaDown {
+                replica: req_usize(j, "replica")?,
+                at: req_f64(j, "at")?,
+                restore_after: j.get("restore_after").and_then(Json::as_f64),
+            }),
             other => Err(format!("unknown pattern kind {other:?}")),
         }
     }
@@ -514,6 +554,17 @@ pub enum Workload {
     /// PD-disaggregated serving: each iteration is one request's prefill +
     /// KV-cache shipment on the prefill→decode stage-pair group.
     Serving { prompt_tokens: usize },
+    /// Request-level serving (`crate::serve`): a seeded arrival process
+    /// drives continuous batching over `replicas` PD server-pair replicas
+    /// with replica-level failover. Pattern times are in **seconds** of
+    /// simulated wall clock (not iteration units) and `iters` is unused.
+    RequestServing {
+        arrivals: ArrivalSpec,
+        replicas: usize,
+        prompt_tokens: usize,
+        output_tokens: usize,
+        max_batch: usize,
+    },
 }
 
 impl Workload {
@@ -528,6 +579,19 @@ impl Workload {
             Workload::Serving { prompt_tokens } => {
                 Json::obj().set("kind", "serving").set("prompt_tokens", *prompt_tokens)
             }
+            Workload::RequestServing {
+                arrivals,
+                replicas,
+                prompt_tokens,
+                output_tokens,
+                max_batch,
+            } => Json::obj()
+                .set("kind", "request_serving")
+                .set("arrivals", arrivals.to_json())
+                .set("replicas", *replicas)
+                .set("prompt_tokens", *prompt_tokens)
+                .set("output_tokens", *output_tokens)
+                .set("max_batch", *max_batch),
         }
     }
 
@@ -547,6 +611,18 @@ impl Workload {
                     .get("prompt_tokens")
                     .and_then(Json::as_usize)
                     .unwrap_or(2000),
+            }),
+            "request_serving" => Ok(Workload::RequestServing {
+                arrivals: ArrivalSpec::from_json(
+                    j.get("arrivals").ok_or_else(|| "missing \"arrivals\"".to_string())?,
+                )?,
+                replicas: req_usize(j, "replicas")?,
+                prompt_tokens: j
+                    .get("prompt_tokens")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(2000),
+                output_tokens: j.get("output_tokens").and_then(Json::as_usize).unwrap_or(32),
+                max_batch: j.get("max_batch").and_then(Json::as_usize).unwrap_or(16),
             }),
             other => Err(format!("unknown workload kind {other:?}")),
         }
@@ -777,6 +853,16 @@ impl FaultPattern {
                 servers.as_deref().map_or(Ok(()), servers_ok)
             }
             FaultPattern::RandomMultiFault { .. } => Ok(()),
+            FaultPattern::ReplicaDown { replica, .. } => {
+                if 2 * replica + 1 >= topo.n_servers {
+                    return Err(format!(
+                        "replica_down: replica {replica} out of range (cluster holds {} \
+                         server-pair replicas)",
+                        topo.n_servers / 2
+                    ));
+                }
+                Ok(())
+            }
             // Switch-scoped patterns were fully handled above.
             _ => unreachable!(),
         }
@@ -806,6 +892,31 @@ impl FaultScenario {
                     self.name
                 ));
             }
+        }
+        if let Workload::RequestServing { arrivals, replicas, output_tokens, max_batch, .. } =
+            &self.workload
+        {
+            arrivals.validate().map_err(|e| format!("scenario {:?}: {e}", self.name))?;
+            if *replicas < 1 || *output_tokens < 1 || *max_batch < 1 {
+                return Err(format!(
+                    "scenario {:?}: replicas, output_tokens and max_batch must be >= 1",
+                    self.name
+                ));
+            }
+            if topo.n_servers != 2 * replicas {
+                return Err(format!(
+                    "scenario {:?}: {replicas} server-pair replicas need a {}-server cluster \
+                     (topology has {})",
+                    self.name,
+                    2 * replicas,
+                    topo.n_servers
+                ));
+            }
+        } else if self.patterns.iter().any(|p| matches!(p, FaultPattern::ReplicaDown { .. })) {
+            return Err(format!(
+                "scenario {:?}: replica_down requires the request_serving workload",
+                self.name
+            ));
         }
         let fabric = Fabric::build(topo, &self.fabric_config());
         for p in &self.patterns {
@@ -1217,6 +1328,79 @@ mod tests {
         let s = sc.to_json().pretty();
         let back = FaultScenario::from_json_str(&s).unwrap();
         assert_eq!(sc, back);
+    }
+
+    fn request_serving_scenario(replicas: usize, patterns: Vec<FaultPattern>) -> FaultScenario {
+        FaultScenario {
+            name: "rs".into(),
+            seed: 7,
+            iters: 1,
+            workload: Workload::RequestServing {
+                arrivals: ArrivalSpec::Poisson { rps: 50.0, duration: 1.0 },
+                replicas,
+                prompt_tokens: 2000,
+                output_tokens: 16,
+                max_batch: 8,
+            },
+            max_overhead: None,
+            cluster: Some(ClusterSpec { n_servers: 2 * replicas, fabric: FabricConfig::ideal() }),
+            patterns,
+        }
+    }
+
+    #[test]
+    fn replica_down_compiles_to_full_server_pair_outage() {
+        let sc = request_serving_scenario(
+            2,
+            vec![FaultPattern::ReplicaDown { replica: 1, at: 0.5, restore_after: Some(1.0) }],
+        );
+        let t = TopologyConfig::simai_a100(4);
+        sc.validate(&t).unwrap();
+        let ev = sc.compile(&t);
+        // Every NIC of servers 2 and 3 fails, then repairs.
+        assert_eq!(ev.len(), 2 * t.nics_per_server * 2);
+        for e in &ev {
+            let server = e.nic / t.nics_per_server;
+            assert!(server == 2 || server == 3, "nic {} outside replica 1", e.nic);
+            match e.action {
+                FaultAction::FailNic => assert_eq!(e.at_iter, 0.5),
+                FaultAction::Repair => assert_eq!(e.at_iter, 1.5),
+                other => panic!("unexpected action {other:?}"),
+            }
+        }
+        assert_eq!(
+            ev.iter().filter(|e| e.action == FaultAction::FailNic).count(),
+            t.nics_per_server * 2
+        );
+    }
+
+    #[test]
+    fn request_serving_roundtrip_and_validation() {
+        let sc = request_serving_scenario(
+            2,
+            vec![FaultPattern::ReplicaDown { replica: 0, at: 0.25, restore_after: None }],
+        );
+        let back = FaultScenario::from_json_str(&sc.to_json().pretty()).unwrap();
+        assert_eq!(sc, back);
+        // Replica index out of range.
+        let bad = request_serving_scenario(
+            2,
+            vec![FaultPattern::ReplicaDown { replica: 2, at: 0.5, restore_after: None }],
+        );
+        let err = bad.validate(&TopologyConfig::simai_a100(4)).unwrap_err();
+        assert!(err.contains("replica 2"), "{err}");
+        // replica_down outside the request_serving workload.
+        let mut wrong = request_serving_scenario(
+            1,
+            vec![FaultPattern::ReplicaDown { replica: 0, at: 0.5, restore_after: None }],
+        );
+        wrong.workload = Workload::Serving { prompt_tokens: 2000 };
+        let err = wrong.validate(&topo()).unwrap_err();
+        assert!(err.contains("request_serving"), "{err}");
+        // Replica count must match the cluster's server count.
+        let mismatched = request_serving_scenario(2, vec![]);
+        let err = mismatched.validate(&TopologyConfig::simai_a100(8)).unwrap_err();
+        assert!(err.contains("servers"), "{err}");
     }
 
     fn cluster16() -> Option<ClusterSpec> {

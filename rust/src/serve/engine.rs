@@ -1,0 +1,708 @@
+//! The request-level serving engine: continuous batching over PD
+//! server-pair replicas with replica-level failover.
+//!
+//! Layout: replica `r` is the prefill/decode server pair `(2r, 2r+1)`
+//! ([`CommWorld::replica_pair_group`]). A request's lifecycle is
+//! prefill-priority continuous batching, exactly the step loop of
+//! `sim::inference::serve_sim` but with *every* cross-server transfer timed
+//! through the real compiled plans:
+//!
+//! * **prefill** — `prompt_tokens / prefill_tps` compute, then the KV-cache
+//!   shard ships prefill→decode as a `SendRecv` on the replica pair group;
+//! * **decode** — one `decode_step` of compute per batch step, then the
+//!   per-token TP allreduce (`2 * hidden` bytes) on the same group.
+//!
+//! Fault scripts from the scenario engine (times in seconds) are folded
+//! into the world as simulated time passes; a step whose communication
+//! window overlaps a scripted event re-runs that transfer through
+//! [`CommGroup::run_scripted`], so NIC and switch faults perturb request
+//! latencies mid-flight. When a replica loses its last path — every NIC of
+//! a server dead, or its leaf dark — it dies: queued requests re-route (no
+//! work lost), in-flight batch members replay their prefill elsewhere, and
+//! the ledger counts the wasted work. Requests are dropped only while *no*
+//! healthy replica exists (the failover invariant, property-tested in
+//! `rust/tests/prop_serving.rs`).
+//!
+//! The engine is single-threaded and advances the globally-earliest action
+//! (replica step or arrival; ties: step first, then lowest replica index),
+//! so a run is a pure function of `(cfg, fault scripts, seed)` — corpus
+//! fan-out parallelism lives a level up in `run_corpus`/`parallel_map`.
+
+use std::collections::VecDeque;
+
+use crate::ccl::{CommGroup, CommWorld, StrategyChoice};
+use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::collectives::{CollKind, PhantomPlane};
+use crate::config::Preset;
+use crate::fabric::{FabricConfig, SwitchAction, SwitchFaultEvent, SwitchTarget};
+use crate::scenario::{ScenarioEvent, SwitchScenarioEvent};
+use crate::serve::arrivals::ArrivalSpec;
+use crate::serve::metrics::{RequestRecord, ServingLedger};
+use crate::sim::inference::{decode_allreduce_bytes, kv_shard_bytes, InferModel};
+
+/// Engine shape: the request-serving workload knobs.
+#[derive(Debug, Clone)]
+pub struct EngineCfg {
+    pub model: InferModel,
+    pub arrivals: ArrivalSpec,
+    pub replicas: usize,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub max_batch: usize,
+    pub seed: u64,
+}
+
+/// Outcome of one engine run.
+#[derive(Debug, Clone)]
+pub struct EngineResult {
+    /// Completed requests, sorted by request id.
+    pub records: Vec<RequestRecord>,
+    pub ledger: ServingLedger,
+    /// Requests the arrival process generated.
+    pub arrivals: usize,
+    /// End of the simulation: latest of last arrival, last completion and
+    /// every replica clock.
+    pub total_time: f64,
+    pub total_output_tokens: u64,
+    /// NIC migrations across all scripted (mid-flight-perturbed) transfers.
+    pub migrations: usize,
+    pub retransmitted_bytes: u64,
+    pub wasted_bytes: u64,
+    /// Analytic payload bytes of successful transfers
+    /// (`bytes_per_rank × group ranks` per step).
+    pub payload_bytes: u64,
+    /// True when at some point no healthy replica existed.
+    pub all_down_ever: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Req {
+    id: usize,
+    arrival: f64,
+    /// Earliest time a replica may start this request's prefill: the
+    /// arrival, pushed forward on re-route to the re-route instant.
+    ready_at: f64,
+    ttft: Option<f64>,
+    tokens_done: usize,
+    replays: usize,
+}
+
+struct Replica {
+    group: CommGroup,
+    clock: f64,
+    queue: VecDeque<Req>,
+    batch: Vec<Req>,
+    alive: bool,
+    /// Nominal KV-transfer / decode-allreduce times under the world's
+    /// current health epoch.
+    kv_time: f64,
+    ar_time: f64,
+}
+
+impl Replica {
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.batch.is_empty()
+    }
+
+    fn load(&self) -> usize {
+        self.queue.len() + self.batch.len()
+    }
+
+    fn next_step_time(&self, max_batch: usize) -> f64 {
+        if !self.queue.is_empty() && self.batch.len() < max_batch {
+            self.clock.max(self.queue[0].ready_at)
+        } else {
+            self.clock
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Fault {
+    Nic(ScenarioEvent),
+    Switch(SwitchScenarioEvent),
+}
+
+impl Fault {
+    fn at(&self) -> f64 {
+        match self {
+            Fault::Nic(e) => e.at_iter,
+            Fault::Switch(e) => e.at_iter,
+        }
+    }
+}
+
+/// Merge the two compiled scripts (each already sorted) into one global
+/// stream; NIC events win ties, matching the training runner's merge.
+fn merge_faults(nic: &[ScenarioEvent], switch: &[SwitchScenarioEvent]) -> Vec<Fault> {
+    let mut out = Vec::with_capacity(nic.len() + switch.len());
+    let (mut ni, mut si) = (0, 0);
+    while ni < nic.len() || si < switch.len() {
+        let take_switch =
+            ni >= nic.len() || (si < switch.len() && switch[si].at_iter < nic[ni].at_iter);
+        if take_switch {
+            out.push(Fault::Switch(switch[si]));
+            si += 1;
+        } else {
+            out.push(Fault::Nic(nic[ni]));
+            ni += 1;
+        }
+    }
+    out
+}
+
+struct Engine {
+    cfg: EngineCfg,
+    world: CommWorld,
+    replicas: Vec<Replica>,
+    faults: Vec<Fault>,
+    /// Next unfolded fault index.
+    fi: usize,
+    last_epoch: u64,
+    choice: StrategyChoice,
+    kv_bytes: u64,
+    ar_bytes: u64,
+    prefill_compute: f64,
+    /// Ground-truth NIC usability (mirrors the training runner's
+    /// bookkeeping) so replica liveness never requires compiling a plan
+    /// over a fully-partitioned server.
+    nic_up: Vec<bool>,
+    leaf_up: Vec<bool>,
+    records: Vec<RequestRecord>,
+    ledger: ServingLedger,
+    total_output_tokens: u64,
+    migrations: usize,
+    retransmitted_bytes: u64,
+    wasted_bytes: u64,
+    payload_bytes: u64,
+    all_down_ever: bool,
+}
+
+impl Engine {
+    /// Apply every fault at or before `t` to the world, then refresh
+    /// replica liveness and nominal comm times if the health epoch moved.
+    fn fold_until(&mut self, t: f64) {
+        let mut changed = false;
+        while self.fi < self.faults.len() && self.faults[self.fi].at() <= t {
+            match self.faults[self.fi] {
+                Fault::Nic(e) => {
+                    self.world.note_failure(e.nic, e.action);
+                    match e.action {
+                        FaultAction::FailNic | FaultAction::CutCable => self.nic_up[e.nic] = false,
+                        FaultAction::Repair | FaultAction::Degrade(_) => self.nic_up[e.nic] = true,
+                    }
+                }
+                Fault::Switch(e) => {
+                    self.world.note_switch_failure(e.target, e.action);
+                    if let SwitchTarget::Leaf(l) = e.target {
+                        match e.action {
+                            SwitchAction::Down => self.leaf_up[l] = false,
+                            SwitchAction::Up => self.leaf_up[l] = true,
+                            SwitchAction::Degrade(_) => {}
+                        }
+                    }
+                }
+            }
+            self.fi += 1;
+            changed = true;
+        }
+        if changed && self.world.epoch() != self.last_epoch {
+            self.last_epoch = self.world.epoch();
+            self.reprobe_all(t);
+        }
+    }
+
+    /// A replica is connected when both its servers still have a usable,
+    /// leaf-connected NIC.
+    fn replica_connected(&self, r: usize) -> bool {
+        let topo = self.world.topo();
+        let (a, b) = self.world.replica_servers(r);
+        [a, b].iter().all(|&s| {
+            topo.nics_of_server(s).any(|n| {
+                self.nic_up[n]
+                    && (topo.fabric().is_ideal() || self.leaf_up[topo.fabric().leaf_of_nic(n)])
+            })
+        })
+    }
+
+    fn reprobe_all(&mut self, t: f64) {
+        for i in 0..self.replicas.len() {
+            if !self.replica_connected(i) {
+                self.kill_replica(i, t);
+                continue;
+            }
+            let probe = {
+                let g = &self.replicas[i].group;
+                let kv = g.time_collective(CollKind::SendRecv, self.kv_bytes, self.choice);
+                let ar = g.time_collective(CollKind::AllReduce, self.ar_bytes, self.choice);
+                kv.zip(ar)
+            };
+            match probe {
+                Some((kv, ar)) => {
+                    let r = &mut self.replicas[i];
+                    if !r.alive {
+                        // Restored (e.g. replica_down with restore_after):
+                        // resumes serving from the restore instant.
+                        r.alive = true;
+                        r.clock = r.clock.max(t);
+                    }
+                    r.kv_time = kv;
+                    r.ar_time = ar;
+                }
+                // Connected by ground truth but the planner found no
+                // usable schedule — treat as down all the same.
+                None => self.kill_replica(i, t),
+            }
+        }
+    }
+
+    /// Replica `i` dies at `t`: in-flight batch members lose their prefill
+    /// and decoded tokens (replayed), queued members just move (rerouted).
+    fn kill_replica(&mut self, i: usize, t: f64) {
+        if !self.replicas[i].alive {
+            return;
+        }
+        let mut displaced = Vec::new();
+        {
+            let r = &mut self.replicas[i];
+            r.alive = false;
+            for mut req in r.batch.drain(..) {
+                self.ledger.replayed += 1;
+                self.ledger.wasted_prefill_s += self.prefill_compute;
+                self.ledger.wasted_decode_tokens += req.tokens_done as u64;
+                req.replays += 1;
+                req.ttft = None;
+                req.tokens_done = 0;
+                req.ready_at = t;
+                displaced.push(req);
+            }
+            for mut req in r.queue.drain(..) {
+                self.ledger.rerouted += 1;
+                req.ready_at = req.ready_at.max(t);
+                displaced.push(req);
+            }
+        }
+        if self.replicas.iter().all(|r| !r.alive) {
+            self.all_down_ever = true;
+        }
+        for req in displaced {
+            self.route(req);
+        }
+    }
+
+    /// Join-shortest-queue over healthy replicas (ties: lowest index). With
+    /// none alive the request is lost — `lost_while_healthy` stays zero by
+    /// construction and is re-counted here as a checked invariant.
+    fn route(&mut self, req: Req) {
+        let mut best: Option<usize> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.alive && best.is_none_or(|b| r.load() < self.replicas[b].load()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => self.replicas[i].queue.push_back(req),
+            None => {
+                self.all_down_ever = true;
+                self.ledger.lost += 1;
+                if self.replicas.iter().any(|r| r.alive) {
+                    self.ledger.lost_while_healthy += 1;
+                }
+            }
+        }
+    }
+
+    /// Unfolded faults inside a step's communication window
+    /// `(step_start, comm_end)`, rebased to the transfer clock. Events
+    /// during the compute phase land at offset 0 (the transfer starts with
+    /// the fault already present).
+    fn pending_window(
+        &self,
+        step_start: f64,
+        comm_start: f64,
+        comm_end: f64,
+    ) -> (Vec<FaultEvent>, Vec<SwitchFaultEvent>) {
+        let mut nic = Vec::new();
+        let mut sw = Vec::new();
+        for f in &self.faults[self.fi..] {
+            let at = f.at();
+            if at <= step_start {
+                continue;
+            }
+            if at >= comm_end {
+                break;
+            }
+            let off = (at - comm_start).max(0.0);
+            match f {
+                Fault::Nic(e) => nic.push(FaultEvent { at: off, nic: e.nic, action: e.action }),
+                Fault::Switch(e) => {
+                    sw.push(SwitchFaultEvent { at: off, target: e.target, action: e.action })
+                }
+            }
+        }
+        (nic, sw)
+    }
+
+    /// Run one perturbed transfer through the executor. Returns the elapsed
+    /// communication time and whether the replica crashed mid-transfer (a
+    /// crash reports the nominal duration as its time-of-death proxy).
+    fn scripted_comm(
+        &mut self,
+        i: usize,
+        kind: CollKind,
+        bytes: u64,
+        script: Vec<FaultEvent>,
+        switch_script: Vec<SwitchFaultEvent>,
+        nominal: f64,
+    ) -> (f64, bool) {
+        let rep = self.replicas[i].group.run_scripted(
+            kind,
+            bytes,
+            self.choice,
+            script,
+            switch_script,
+            &mut PhantomPlane,
+            0,
+        );
+        self.migrations += rep.migrations.len();
+        for m in &rep.migrations {
+            self.retransmitted_bytes += m.retransmitted_bytes;
+            self.wasted_bytes += m.wasted_bytes;
+        }
+        match (rep.crashed, rep.completion) {
+            (false, Some(c)) => (c, false),
+            _ => (nominal, true),
+        }
+    }
+
+    fn comm_time(
+        &mut self,
+        i: usize,
+        kind: CollKind,
+        bytes: u64,
+        step_start: f64,
+        comm_start: f64,
+        nominal: f64,
+    ) -> (f64, bool) {
+        let (script, sw) = self.pending_window(step_start, comm_start, comm_start + nominal);
+        if script.is_empty() && sw.is_empty() {
+            (nominal, false)
+        } else {
+            self.scripted_comm(i, kind, bytes, script, sw, nominal)
+        }
+    }
+
+    fn prefill_step(&mut self, i: usize) {
+        let (s, nominal) = {
+            let r = &self.replicas[i];
+            (r.clock.max(r.queue[0].ready_at), r.kv_time)
+        };
+        let comm_start = s + self.prefill_compute;
+        let (comm, crashed) =
+            self.comm_time(i, CollKind::SendRecv, self.kv_bytes, s, comm_start, nominal);
+        let mut req = self.replicas[i].queue.pop_front().expect("prefill pops the queue head");
+        if crashed {
+            let t_dead = comm_start + comm;
+            self.ledger.replayed += 1;
+            self.ledger.wasted_prefill_s += self.prefill_compute;
+            req.replays += 1;
+            req.ttft = None;
+            req.tokens_done = 0;
+            req.ready_at = t_dead;
+            self.kill_replica(i, t_dead);
+            self.route(req);
+            return;
+        }
+        self.payload_bytes += self.kv_bytes * self.replicas[i].group.n_ranks() as u64;
+        let end = comm_start + comm;
+        self.replicas[i].clock = end;
+        req.ttft = Some(end - req.arrival);
+        req.tokens_done = 1;
+        if req.tokens_done >= self.cfg.output_tokens {
+            self.complete(req, end, i);
+        } else {
+            self.replicas[i].batch.push(req);
+        }
+    }
+
+    fn decode_step(&mut self, i: usize) {
+        let (s, nominal) = {
+            let r = &self.replicas[i];
+            (r.clock, r.ar_time)
+        };
+        let comm_start = s + self.cfg.model.decode_step;
+        let (comm, crashed) =
+            self.comm_time(i, CollKind::AllReduce, self.ar_bytes, s, comm_start, nominal);
+        if crashed {
+            self.kill_replica(i, comm_start + comm);
+            return;
+        }
+        self.payload_bytes += self.ar_bytes * self.replicas[i].group.n_ranks() as u64;
+        let end = comm_start + comm;
+        let mut done = Vec::new();
+        {
+            let r = &mut self.replicas[i];
+            r.clock = end;
+            let mut still = Vec::new();
+            for mut req in r.batch.drain(..) {
+                req.tokens_done += 1;
+                if req.tokens_done >= self.cfg.output_tokens {
+                    done.push(req);
+                } else {
+                    still.push(req);
+                }
+            }
+            r.batch = still;
+        }
+        for req in done {
+            self.complete(req, end, i);
+        }
+    }
+
+    fn complete(&mut self, req: Req, finish: f64, replica: usize) {
+        self.ledger.completed += 1;
+        self.total_output_tokens += req.tokens_done as u64;
+        self.records.push(RequestRecord {
+            id: req.id,
+            arrival: req.arrival,
+            ttft: req.ttft.expect("completed request has a TTFT"),
+            finish,
+            tokens: req.tokens_done,
+            replica,
+            replays: req.replays,
+        });
+    }
+
+    fn step_replica(&mut self, i: usize) {
+        let prefill = {
+            let r = &self.replicas[i];
+            !r.queue.is_empty() && r.batch.len() < self.cfg.max_batch
+        };
+        if prefill {
+            self.prefill_step(i);
+        } else {
+            self.decode_step(i);
+        }
+    }
+
+    fn run(mut self) -> EngineResult {
+        let arrivals = self.cfg.arrivals.generate(self.cfg.seed);
+        let mut ai = 0usize;
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000_000, "serving engine failed to terminate");
+            let mut best: Option<(f64, usize)> = None;
+            for (i, r) in self.replicas.iter().enumerate() {
+                if !r.alive || !r.has_work() {
+                    continue;
+                }
+                let t = r.next_step_time(self.cfg.max_batch);
+                if best.is_none_or(|(bt, _)| t < bt) {
+                    best = Some((t, i));
+                }
+            }
+            let next_arrival = arrivals.get(ai).copied();
+            match (best, next_arrival) {
+                // A replica step is due no later than the next arrival.
+                (Some((t, i)), arr) if arr.is_none_or(|a| t <= a) => {
+                    self.fold_until(t);
+                    // The fold may have killed (and drained) the chosen
+                    // replica; re-select on the next turn of the loop.
+                    if self.replicas[i].alive && self.replicas[i].has_work() {
+                        self.step_replica(i);
+                    }
+                }
+                (_, Some(a)) => {
+                    self.fold_until(a);
+                    let req = Req {
+                        id: ai,
+                        arrival: a,
+                        ready_at: a,
+                        ttft: None,
+                        tokens_done: 0,
+                        replays: 0,
+                    };
+                    ai += 1;
+                    self.route(req);
+                }
+                (None, None) => break,
+            }
+        }
+        let mut records = self.records;
+        records.sort_by_key(|r| r.id);
+        let total_time = records
+            .iter()
+            .map(|r| r.finish)
+            .chain(arrivals.last().copied())
+            .chain(self.replicas.iter().map(|r| r.clock))
+            .fold(0.0, f64::max);
+        self.ledger.completed = records.len();
+        EngineResult {
+            records,
+            ledger: self.ledger,
+            arrivals: arrivals.len(),
+            total_time,
+            total_output_tokens: self.total_output_tokens,
+            migrations: self.migrations,
+            retransmitted_bytes: self.retransmitted_bytes,
+            wasted_bytes: self.wasted_bytes,
+            payload_bytes: self.payload_bytes,
+            all_down_ever: self.all_down_ever,
+        }
+    }
+}
+
+/// Run the request engine over a fresh world built from `preset` +
+/// `fabric`, driving the scenario fault scripts (times in seconds) against
+/// the arrival process. Deterministic in every argument.
+pub fn run_request_engine(
+    preset: &Preset,
+    fabric: &FabricConfig,
+    cfg: &EngineCfg,
+    nic_events: &[ScenarioEvent],
+    switch_events: &[SwitchScenarioEvent],
+) -> EngineResult {
+    let channels = preset.topo.nics_per_server;
+    let world = CommWorld::new_with_fabric(preset, channels, fabric);
+    assert!(cfg.replicas >= 1, "need at least one replica");
+    assert!(
+        cfg.replicas <= world.n_serving_replicas(),
+        "{} replicas need {} servers (world has {})",
+        cfg.replicas,
+        2 * cfg.replicas,
+        world.topo().n_servers()
+    );
+    let kv_bytes = kv_shard_bytes(&cfg.model, cfg.prompt_tokens);
+    let ar_bytes = decode_allreduce_bytes(&cfg.model);
+    let choice = StrategyChoice::Auto;
+    let replicas = (0..cfg.replicas)
+        .map(|r| {
+            let group = world.replica_pair_group(r);
+            let kv = group
+                .time_collective(CollKind::SendRecv, kv_bytes, choice)
+                .expect("healthy replica times its KV transfer");
+            let ar = group
+                .time_collective(CollKind::AllReduce, ar_bytes, choice)
+                .expect("healthy replica times its decode allreduce");
+            Replica {
+                group,
+                clock: 0.0,
+                queue: VecDeque::new(),
+                batch: Vec::new(),
+                alive: true,
+                kv_time: kv,
+                ar_time: ar,
+            }
+        })
+        .collect();
+    let nic_up = vec![true; world.topo().n_nics()];
+    let leaf_up = vec![true; world.topo().fabric().n_leaves()];
+    let last_epoch = world.epoch();
+    Engine {
+        cfg: cfg.clone(),
+        prefill_compute: cfg.prompt_tokens as f64 / cfg.model.prefill_tps,
+        world,
+        replicas,
+        faults: merge_faults(nic_events, switch_events),
+        fi: 0,
+        last_epoch,
+        choice,
+        kv_bytes,
+        ar_bytes,
+        nic_up,
+        leaf_up,
+        records: Vec::new(),
+        ledger: ServingLedger::default(),
+        total_output_tokens: 0,
+        migrations: 0,
+        retransmitted_bytes: 0,
+        wasted_bytes: 0,
+        payload_bytes: 0,
+        all_down_ever: false,
+    }
+    .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::FaultAction;
+
+    fn cfg(rps: f64, duration: f64, replicas: usize) -> EngineCfg {
+        EngineCfg {
+            model: InferModel::llama70b(),
+            arrivals: ArrivalSpec::Poisson { rps, duration },
+            replicas,
+            prompt_tokens: 2000,
+            output_tokens: 8,
+            max_batch: 8,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn healthy_run_completes_every_request() {
+        let preset = Preset::simai(4);
+        let cfg = cfg(30.0, 1.0, 2);
+        let res = run_request_engine(&preset, &FabricConfig::ideal(), &cfg, &[], &[]);
+        assert!(res.arrivals > 0);
+        assert_eq!(res.records.len(), res.arrivals);
+        assert_eq!(res.ledger.lost, 0);
+        assert_eq!(res.ledger.replayed, 0);
+        assert!(!res.all_down_ever);
+        assert!(res.total_output_tokens == (res.arrivals * 8) as u64);
+        // TTFT at least prefill compute + KV transfer.
+        let min_ttft = 2000.0 / InferModel::llama70b().prefill_tps;
+        assert!(res.records.iter().all(|r| r.ttft >= min_ttft));
+        // Deterministic.
+        let again = run_request_engine(&preset, &FabricConfig::ideal(), &cfg, &[], &[]);
+        assert_eq!(res.records, again.records);
+    }
+
+    #[test]
+    fn replica_death_reroutes_without_loss() {
+        let preset = Preset::simai(4);
+        let topo = &preset.topo;
+        let cfg = cfg(40.0, 1.5, 2);
+        // Replica 1 (servers 2, 3) dies at t=0.4: every NIC fails.
+        let events: Vec<ScenarioEvent> = (2 * topo.nics_per_server..4 * topo.nics_per_server)
+            .map(|nic| ScenarioEvent { at_iter: 0.4, nic, action: FaultAction::FailNic })
+            .collect();
+        let res = run_request_engine(&preset, &FabricConfig::ideal(), &cfg, &events, &[]);
+        assert_eq!(res.ledger.lost, 0, "replica 0 stays healthy");
+        assert_eq!(res.ledger.lost_while_healthy, 0);
+        assert_eq!(res.records.len(), res.arrivals);
+        assert!(res.ledger.replayed + res.ledger.rerouted > 0, "replica 1 had work at t=0.4");
+        assert!(!res.all_down_ever);
+        // Everything after the death completes on replica 0.
+        assert!(res.records.iter().filter(|r| r.replica == 1).all(|r| r.finish <= 0.4 + 1.0));
+        assert!(res.records.iter().any(|r| r.replays > 0), "some prefills replayed");
+    }
+
+    #[test]
+    fn total_outage_loses_requests_and_restore_resumes() {
+        let preset = Preset::simai(2);
+        let topo = &preset.topo;
+        let cfg = EngineCfg {
+            arrivals: ArrivalSpec::Poisson { rps: 30.0, duration: 2.0 },
+            ..cfg(30.0, 2.0, 1)
+        };
+        // The only replica dies at 0.5 and is restored at 1.0.
+        let mut events: Vec<ScenarioEvent> = Vec::new();
+        for nic in 0..2 * topo.nics_per_server {
+            events.push(ScenarioEvent { at_iter: 0.5, nic, action: FaultAction::FailNic });
+            events.push(ScenarioEvent { at_iter: 1.0, nic, action: FaultAction::Repair });
+        }
+        events.sort_by(|a, b| a.at_iter.total_cmp(&b.at_iter).then(a.nic.cmp(&b.nic)));
+        let res = run_request_engine(&preset, &FabricConfig::ideal(), &cfg, &events, &[]);
+        assert!(res.all_down_ever);
+        assert!(res.ledger.lost > 0, "arrivals during the outage are lost");
+        assert_eq!(res.ledger.lost_while_healthy, 0);
+        assert!(
+            res.records.iter().any(|r| r.arrival > 1.0),
+            "arrivals after the restore are served"
+        );
+        assert_eq!(res.records.len() + res.ledger.lost, res.arrivals);
+    }
+}

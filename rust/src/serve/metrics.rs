@@ -1,0 +1,193 @@
+//! Per-request SLO metrics and the lost/replayed-work ledger.
+//!
+//! The request engine produces one [`RequestRecord`] per *completed*
+//! request plus a [`ServingLedger`] of everything that went wrong along the
+//! way; [`summarize`] folds them into the [`ServingSummary`] that scenario
+//! reports serialize — TTFT/TPOT distributions (p50/p95/p99), goodput in
+//! output tokens/s, and the ledger. All JSON is deterministic, so serving
+//! corpora byte-compare against golden fixtures like everything else.
+
+use crate::serve::engine::EngineResult;
+use crate::util::stats::SummaryStats;
+use crate::util::{Json, Samples};
+
+/// One completed request, absolute times in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    /// Time-to-first-token of the *final successful* stream, relative to
+    /// arrival (a replayed request's clock restarts at zero work but its
+    /// TTFT still counts from the original arrival).
+    pub ttft: f64,
+    pub finish: f64,
+    /// Output tokens produced (== the workload's `output_tokens`).
+    pub tokens: usize,
+    /// Replica that completed the request.
+    pub replica: usize,
+    /// Times this request's prefill was re-run after a replica death.
+    pub replays: usize,
+}
+
+impl RequestRecord {
+    /// Time-per-output-token over the decode phase; `None` for single-token
+    /// requests.
+    pub fn tpot(&self) -> Option<f64> {
+        (self.tokens > 1)
+            .then(|| (self.finish - (self.arrival + self.ttft)) / (self.tokens - 1) as f64)
+    }
+
+    /// Compact array form `[id, arrival, ttft, finish, tokens, replica,
+    /// replays]` — keeps golden fixtures small at hundreds of requests.
+    pub fn to_json(&self) -> Json {
+        let mut a = Json::arr();
+        a.push(self.id);
+        a.push(self.arrival);
+        a.push(self.ttft);
+        a.push(self.finish);
+        a.push(self.tokens);
+        a.push(self.replica);
+        a.push(self.replays);
+        a
+    }
+}
+
+/// What the fault cost: requests lost/replayed/rerouted and the work thrown
+/// away.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServingLedger {
+    pub completed: usize,
+    /// Requests dropped — only legal while *no* healthy replica exists.
+    pub lost: usize,
+    /// Requests whose prefill (and any decoded tokens) were discarded by a
+    /// replica death and re-run elsewhere.
+    pub replayed: usize,
+    /// Queued-but-unstarted requests moved to another replica (no work
+    /// lost).
+    pub rerouted: usize,
+    /// Invariant counter: requests dropped while a healthy replica existed.
+    /// Structurally zero — property-tested, and a scenario report with a
+    /// non-zero value fails `check_invariants`.
+    pub lost_while_healthy: usize,
+    /// Prefill compute seconds discarded by replica deaths.
+    pub wasted_prefill_s: f64,
+    /// Decoded tokens discarded by replica deaths.
+    pub wasted_decode_tokens: u64,
+}
+
+impl ServingLedger {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("completed", self.completed)
+            .set("lost", self.lost)
+            .set("replayed", self.replayed)
+            .set("rerouted", self.rerouted)
+            .set("lost_while_healthy", self.lost_while_healthy)
+            .set("wasted_prefill_s", self.wasted_prefill_s)
+            .set("wasted_decode_tokens", self.wasted_decode_tokens)
+    }
+}
+
+/// The per-scenario serving outcome a [`crate::scenario::ScenarioReport`]
+/// carries (and serializes) for request-serving workloads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSummary {
+    pub replicas: usize,
+    pub ttft: SummaryStats,
+    pub tpot: SummaryStats,
+    /// Completed output tokens per second of simulated wall clock.
+    pub goodput_tokens_per_s: f64,
+    pub ledger: ServingLedger,
+    pub requests: Vec<RequestRecord>,
+}
+
+fn summary_json(s: &SummaryStats) -> Json {
+    Json::obj()
+        .set("n", s.n)
+        .set("mean", s.mean)
+        .set("p50", s.p50)
+        .set("p95", s.p95)
+        .set("p99", s.p99)
+        .set("min", s.min)
+        .set("max", s.max)
+}
+
+impl ServingSummary {
+    pub fn to_json(&self) -> Json {
+        let mut requests = Json::arr();
+        for r in &self.requests {
+            requests.push(r.to_json());
+        }
+        Json::obj()
+            .set("replicas", self.replicas)
+            .set("ttft", summary_json(&self.ttft))
+            .set("tpot", summary_json(&self.tpot))
+            .set("goodput_tokens_per_s", self.goodput_tokens_per_s)
+            .set("ledger", self.ledger.to_json())
+            .set("requests", requests)
+    }
+}
+
+/// Fold an engine run into its SLO summary.
+pub fn summarize(result: &EngineResult, replicas: usize) -> ServingSummary {
+    let mut ttft = Samples::new();
+    let mut tpot = Samples::new();
+    for r in &result.records {
+        ttft.push(r.ttft);
+        if let Some(t) = r.tpot() {
+            tpot.push(t);
+        }
+    }
+    let goodput = if result.total_time > 0.0 {
+        result.total_output_tokens as f64 / result.total_time
+    } else {
+        0.0
+    };
+    ServingSummary {
+        replicas,
+        ttft: ttft.summary(),
+        tpot: tpot.summary(),
+        goodput_tokens_per_s: goodput,
+        ledger: result.ledger.clone(),
+        requests: result.records.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_is_decode_time_per_token() {
+        let r = RequestRecord {
+            id: 0,
+            arrival: 1.0,
+            ttft: 0.5,
+            finish: 2.5,
+            tokens: 11,
+            replica: 0,
+            replays: 0,
+        };
+        // Decode span 2.5 - 1.5 = 1.0 over 10 decode tokens.
+        assert!((r.tpot().unwrap() - 0.1).abs() < 1e-12);
+        let single = RequestRecord { tokens: 1, ..r };
+        assert_eq!(single.tpot(), None);
+    }
+
+    #[test]
+    fn record_json_is_the_compact_array() {
+        let r = RequestRecord {
+            id: 3,
+            arrival: 0.5,
+            ttft: 0.25,
+            finish: 1.0,
+            tokens: 4,
+            replica: 1,
+            replays: 2,
+        };
+        assert_eq!(
+            r.to_json().pretty().split_whitespace().collect::<String>(),
+            "[3,0.5,0.25,1,4,1,2]"
+        );
+    }
+}

@@ -1,0 +1,39 @@
+//! Request-level serving simulator: production traffic, continuous
+//! batching and replica failover under faults.
+//!
+//! The training-side scenario engine answers "what does a fault cost an
+//! iteration?"; this module answers the serving-side question — "what does
+//! a fault cost a *request*?" — at production arrival rates:
+//!
+//! * [`arrivals`] — seeded Poisson / burst / trace-driven arrival
+//!   processes ([`ArrivalSpec`]); same spec + seed ⇒ same requests.
+//! * [`engine`] — the request engine ([`run_request_engine`]): continuous
+//!   batching with per-request prefill/decode phases on prefill/decode
+//!   server-pair replicas, every cross-server transfer (PD KV shipment,
+//!   per-token TP allreduce) timed through the real
+//!   [`crate::ccl::CommWorld`] compiled plans so scenario fault scripts
+//!   perturb request latencies mid-flight. A replica-level death (a whole
+//!   server, not just a NIC) re-routes queued requests, replays in-flight
+//!   prefills on the survivors and counts the wasted work; requests drop
+//!   only while *no* healthy replica exists.
+//! * [`metrics`] — per-request records, the lost/replayed-work
+//!   [`ServingLedger`] and the TTFT/TPOT/goodput [`ServingSummary`] that
+//!   scenario reports serialize into golden traces.
+//! * [`sweep`] — the `SERVE_*`-parameterised arrival-rate × fault-arm
+//!   sweep behind the `serving_sweep` bench and the `serve-sweep` CLI
+//!   subcommand.
+//!
+//! Everything is deterministic and seeded: serving corpora byte-compare
+//! against golden fixtures, and `rust/tests/prop_serving.rs`
+//! property-tests thread-count-invariant determinism and the failover
+//! invariant.
+
+pub mod arrivals;
+pub mod engine;
+pub mod metrics;
+pub mod sweep;
+
+pub use arrivals::ArrivalSpec;
+pub use engine::{run_request_engine, EngineCfg, EngineResult};
+pub use metrics::{summarize, RequestRecord, ServingLedger, ServingSummary};
+pub use sweep::{serve_sweep, serve_sweep_to_json, ServeSweepCfg, ServeSweepRow};

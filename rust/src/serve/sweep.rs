@@ -1,0 +1,387 @@
+//! Request-serving sweep: arrival-rate points × fault arms.
+//!
+//! Mirrors the cluster sweep's shape: a [`ServeSweepCfg`] built from
+//! [`ServeSweepCfg::full`]/[`ServeSweepCfg::quick`] (the `BENCH_QUICK=1` CI
+//! smoke shape), overridable via `SERVE_*` environment variables and the
+//! `serve-sweep` CLI subcommand, fanned out over
+//! [`crate::util::par::parallel_map`] — every (point, arm) engine run is
+//! independent and deterministic, so the sweep is bit-identical at any
+//! thread count. Three arms per arrival point:
+//!
+//! * **healthy** — no faults; the continuous-batching baseline;
+//! * **nic_down** — NIC 0 (replica 0's prefill server, rail 0) dies at 30%
+//!   of the horizon: the planner reroutes around the lost rail and request
+//!   latencies absorb the hit;
+//! * **replica_down** — the *last* replica's server pair goes dark at 30%
+//!   of the horizon (skipped at 1 replica): in-flight work replays on the
+//!   survivors and the failover invariant (`lost == 0`) is asserted.
+//!
+//! The `serving_sweep` bench (`rust/benches/serving_sweep.rs`) prints the
+//! table and writes `bench_results/serving_sweep.json`.
+
+use crate::collectives::exec::FaultAction;
+use crate::config::Preset;
+use crate::fabric::FabricConfig;
+use crate::scenario::ScenarioEvent;
+use crate::serve::arrivals::ArrivalSpec;
+use crate::serve::engine::{run_request_engine, EngineCfg};
+use crate::serve::metrics::summarize;
+use crate::sim::inference::InferModel;
+use crate::util::par::{available_threads, parallel_map};
+use crate::util::Json;
+
+/// Sweep shape.
+#[derive(Debug, Clone)]
+pub struct ServeSweepCfg {
+    /// Poisson arrival-rate points (requests/s). Ignored when `trace` is
+    /// set.
+    pub rps_points: Vec<f64>,
+    /// Arrival window in seconds for the Poisson points.
+    pub duration: f64,
+    /// Trace-driven arrivals: explicit timestamps replacing the Poisson
+    /// points (one sweep point labelled `trace`).
+    pub trace: Option<Vec<f64>>,
+    pub replicas: usize,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub max_batch: usize,
+    pub fabric: FabricConfig,
+    pub seed: u64,
+    /// Worker threads for the (point × arm) fan-out; results are
+    /// bit-identical at any count.
+    pub threads: usize,
+}
+
+impl ServeSweepCfg {
+    /// The full three-point sweep: light, moderate and saturating load.
+    pub fn full() -> ServeSweepCfg {
+        ServeSweepCfg {
+            rps_points: vec![50.0, 200.0, 1000.0],
+            duration: 2.0,
+            trace: None,
+            replicas: 2,
+            prompt_tokens: 2000,
+            output_tokens: 32,
+            max_batch: 16,
+            fabric: FabricConfig::ideal(),
+            seed: 42,
+            threads: available_threads(),
+        }
+    }
+
+    /// CI smoke shape (`BENCH_QUICK=1`): the light-load point only, a
+    /// shorter window and fewer output tokens.
+    pub fn quick() -> ServeSweepCfg {
+        ServeSweepCfg {
+            rps_points: vec![50.0],
+            duration: 1.0,
+            output_tokens: 8,
+            ..ServeSweepCfg::full()
+        }
+    }
+
+    /// Override the sweep shape from `SERVE_*` environment variables:
+    /// `SERVE_RPS` (comma list), `SERVE_DURATION`, `SERVE_TRACE` (comma
+    /// list of timestamps), `SERVE_REPLICAS`, `SERVE_PROMPT_TOKENS`,
+    /// `SERVE_OUTPUT_TOKENS`, `SERVE_MAX_BATCH`, `SERVE_FABRIC`
+    /// (`flat`|`leaf-spine`), `SERVE_SEED`, `SERVE_THREADS`. Unset or
+    /// unparsable variables keep the current value.
+    pub fn apply_env(self) -> ServeSweepCfg {
+        self.apply_overrides(|key| std::env::var(key).ok())
+    }
+
+    /// The lookup-injected core of [`Self::apply_env`] (unit-testable
+    /// without mutating process environment).
+    fn apply_overrides(mut self, lookup: impl Fn(&str) -> Option<String>) -> ServeSweepCfg {
+        fn num<T: std::str::FromStr>(
+            lookup: &impl Fn(&str) -> Option<String>,
+            key: &str,
+        ) -> Option<T> {
+            lookup(key).and_then(|v| v.trim().parse().ok())
+        }
+        fn list(lookup: &impl Fn(&str) -> Option<String>, key: &str) -> Option<Vec<f64>> {
+            let vals: Vec<f64> = lookup(key)?
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            (!vals.is_empty()).then_some(vals)
+        }
+        if let Some(v) = list(&lookup, "SERVE_RPS") {
+            self.rps_points = v;
+        }
+        if let Some(v) = num(&lookup, "SERVE_DURATION") {
+            self.duration = v;
+        }
+        if let Some(v) = list(&lookup, "SERVE_TRACE") {
+            self.trace = Some(v);
+        }
+        if let Some(v) = num(&lookup, "SERVE_REPLICAS") {
+            self.replicas = v;
+        }
+        if let Some(v) = num(&lookup, "SERVE_PROMPT_TOKENS") {
+            self.prompt_tokens = v;
+        }
+        if let Some(v) = num(&lookup, "SERVE_OUTPUT_TOKENS") {
+            self.output_tokens = v;
+        }
+        if let Some(v) = num(&lookup, "SERVE_MAX_BATCH") {
+            self.max_batch = v;
+        }
+        if let Some(v) = lookup("SERVE_FABRIC") {
+            if let Ok(f) = FabricConfig::from_name(v.trim()) {
+                self.fabric = f;
+            }
+        }
+        if let Some(v) = num(&lookup, "SERVE_SEED") {
+            self.seed = v;
+        }
+        if let Some(v) = num(&lookup, "SERVE_THREADS") {
+            self.threads = v;
+        }
+        self
+    }
+
+    /// The sweep's arrival points: `(label, rps-or-0, spec)`.
+    fn points(&self) -> Vec<(String, f64, ArrivalSpec)> {
+        match &self.trace {
+            Some(times) => {
+                vec![("trace".to_string(), 0.0, ArrivalSpec::Trace { times: times.clone() })]
+            }
+            None => self
+                .rps_points
+                .iter()
+                .map(|&rps| {
+                    let spec = ArrivalSpec::Poisson { rps, duration: self.duration };
+                    (format!("poisson@{rps}"), rps, spec)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One (arrival point, fault arm) sweep outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSweepRow {
+    pub label: String,
+    /// `healthy`, `nic_down` or `replica_down`.
+    pub arm: &'static str,
+    /// Poisson rate of the point (0 for trace points).
+    pub rps: f64,
+    pub arrivals: usize,
+    pub completed: usize,
+    pub lost: usize,
+    pub replayed: usize,
+    pub rerouted: usize,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    pub goodput_tokens_per_s: f64,
+    pub migrations: usize,
+    pub wasted_prefill_s: f64,
+}
+
+const FAULT_FRACTION: f64 = 0.3;
+
+/// Fail every NIC of the last replica's server pair at `at` (no restore).
+fn replica_down_events(replicas: usize, nics_per_server: usize, at: f64) -> Vec<ScenarioEvent> {
+    let (a, b) = (2 * (replicas - 1), 2 * (replicas - 1) + 1);
+    (a * nics_per_server..(b + 1) * nics_per_server)
+        .map(|nic| ScenarioEvent { at_iter: at, nic, action: FaultAction::FailNic })
+        .collect()
+}
+
+/// Run the sweep: every arrival point through the healthy / nic-down /
+/// replica-down arms (the last skipped at 1 replica). Panics if the
+/// healthy arm drops a request or the replica-down arm violates the
+/// failover invariant — with a surviving replica nothing may be lost.
+pub fn serve_sweep(cfg: &ServeSweepCfg) -> Vec<ServeSweepRow> {
+    let preset = Preset::simai(2 * cfg.replicas);
+    let nics_per_server = preset.topo.nics_per_server;
+    let mut jobs: Vec<(String, f64, &'static str, ArrivalSpec, Vec<ScenarioEvent>)> = Vec::new();
+    for (label, rps, spec) in cfg.points() {
+        let at = FAULT_FRACTION * spec.horizon();
+        jobs.push((label.clone(), rps, "healthy", spec.clone(), vec![]));
+        jobs.push((
+            label.clone(),
+            rps,
+            "nic_down",
+            spec.clone(),
+            vec![ScenarioEvent { at_iter: at, nic: 0, action: FaultAction::FailNic }],
+        ));
+        if cfg.replicas >= 2 {
+            jobs.push((
+                label,
+                rps,
+                "replica_down",
+                spec,
+                replica_down_events(cfg.replicas, nics_per_server, at),
+            ));
+        }
+    }
+    let rows = parallel_map(&jobs, cfg.threads, |(label, rps, arm, spec, events)| {
+        let ecfg = EngineCfg {
+            model: InferModel::llama70b(),
+            arrivals: spec.clone(),
+            replicas: cfg.replicas,
+            prompt_tokens: cfg.prompt_tokens,
+            output_tokens: cfg.output_tokens,
+            max_batch: cfg.max_batch,
+            seed: cfg.seed,
+        };
+        let res = run_request_engine(&preset, &cfg.fabric, &ecfg, events, &[]);
+        let s = summarize(&res, cfg.replicas);
+        ServeSweepRow {
+            label: label.clone(),
+            arm: *arm,
+            rps: *rps,
+            arrivals: res.arrivals,
+            completed: s.ledger.completed,
+            lost: s.ledger.lost,
+            replayed: s.ledger.replayed,
+            rerouted: s.ledger.rerouted,
+            ttft_p50: s.ttft.p50,
+            ttft_p99: s.ttft.p99,
+            tpot_p50: s.tpot.p50,
+            tpot_p99: s.tpot.p99,
+            goodput_tokens_per_s: s.goodput_tokens_per_s,
+            migrations: res.migrations,
+            wasted_prefill_s: s.ledger.wasted_prefill_s,
+        }
+    });
+    for r in &rows {
+        if r.arm == "healthy" {
+            assert_eq!(r.lost, 0, "healthy arm dropped requests at {}", r.label);
+        }
+        if r.arm == "replica_down" && cfg.replicas >= 2 {
+            assert_eq!(
+                r.lost, 0,
+                "failover invariant: {} lost requests with a surviving replica at {}",
+                r.lost, r.label
+            );
+        }
+    }
+    rows
+}
+
+/// Deterministic JSON form of the sweep (the
+/// `bench_results/serving_sweep.json` schema).
+pub fn serve_sweep_to_json(cfg: &ServeSweepCfg, rows: &[ServeSweepRow]) -> Json {
+    let mut arr = Json::arr();
+    for r in rows {
+        arr.push(
+            Json::obj()
+                .set("label", r.label.as_str())
+                .set("arm", r.arm)
+                .set("rps", r.rps)
+                .set("arrivals", r.arrivals)
+                .set("completed", r.completed)
+                .set("lost", r.lost)
+                .set("replayed", r.replayed)
+                .set("rerouted", r.rerouted)
+                .set("ttft_p50", r.ttft_p50)
+                .set("ttft_p99", r.ttft_p99)
+                .set("tpot_p50", r.tpot_p50)
+                .set("tpot_p99", r.tpot_p99)
+                .set("goodput_tokens_per_s", r.goodput_tokens_per_s)
+                .set("migrations", r.migrations)
+                .set("wasted_prefill_s", r.wasted_prefill_s),
+        );
+    }
+    Json::obj()
+        .set("fabric", if cfg.fabric.is_ideal() { "flat" } else { "leaf_spine" })
+        .set("replicas", cfg.replicas)
+        .set("prompt_tokens", cfg.prompt_tokens)
+        .set("output_tokens", cfg.output_tokens)
+        .set("max_batch", cfg.max_batch)
+        .set("duration", cfg.duration)
+        .set("seed", cfg.seed)
+        .set("rows", arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServeSweepCfg {
+        ServeSweepCfg {
+            rps_points: vec![40.0],
+            duration: 1.0,
+            output_tokens: 4,
+            max_batch: 8,
+            ..ServeSweepCfg::full()
+        }
+    }
+
+    #[test]
+    fn sweep_runs_all_arms_and_holds_the_failover_invariant() {
+        let cfg = tiny();
+        let rows = serve_sweep(&cfg);
+        assert_eq!(rows.len(), 3, "healthy + nic_down + replica_down");
+        for r in &rows {
+            assert_eq!(r.completed + r.lost, r.arrivals, "{}/{}", r.label, r.arm);
+            assert_eq!(r.lost, 0, "{}", r.arm);
+            assert!(r.ttft_p50 > 0.0 && r.ttft_p99 >= r.ttft_p50, "{}", r.arm);
+            assert!(r.goodput_tokens_per_s > 0.0, "{}", r.arm);
+        }
+        let healthy = rows.iter().find(|r| r.arm == "healthy").unwrap();
+        let rep_down = rows.iter().find(|r| r.arm == "replica_down").unwrap();
+        assert!(
+            rep_down.replayed + rep_down.rerouted > 0,
+            "the dying replica had work at 30% of the horizon"
+        );
+        assert!(rep_down.ttft_p99 >= healthy.ttft_p99, "failover can't speed requests up");
+    }
+
+    #[test]
+    fn sweep_is_thread_count_invariant() {
+        let cfg = tiny();
+        let one = serve_sweep(&ServeSweepCfg { threads: 1, ..cfg.clone() });
+        let four = serve_sweep(&ServeSweepCfg { threads: 4, ..cfg });
+        assert_eq!(one, four);
+    }
+
+    #[test]
+    fn trace_points_replace_the_poisson_grid() {
+        let cfg = ServeSweepCfg { trace: Some(vec![0.05, 0.1, 0.1, 0.4, 0.9]), ..tiny() };
+        let rows = serve_sweep(&cfg);
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.label == "trace" && r.rps == 0.0));
+        assert_eq!(rows[0].arrivals, 5);
+    }
+
+    #[test]
+    fn single_replica_skips_the_replica_down_arm() {
+        let cfg = ServeSweepCfg { replicas: 1, ..tiny() };
+        let rows = serve_sweep(&cfg);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.arm != "replica_down"));
+    }
+
+    #[test]
+    fn env_overrides_apply_and_ignore_garbage() {
+        let cfg = ServeSweepCfg::full().apply_overrides(|key| match key {
+            "SERVE_RPS" => Some("25, 75".into()),
+            "SERVE_REPLICAS" => Some("4".into()),
+            "SERVE_FABRIC" => Some("leaf-spine".into()),
+            "SERVE_MAX_BATCH" => Some("not-a-number".into()),
+            _ => None,
+        });
+        assert_eq!(cfg.rps_points, vec![25.0, 75.0]);
+        assert_eq!(cfg.replicas, 4);
+        assert!(!cfg.fabric.is_ideal());
+        assert_eq!(cfg.max_batch, 16, "unparsable override keeps the default");
+        assert_eq!(cfg.seed, 42, "unset keys keep defaults");
+    }
+
+    #[test]
+    fn json_schema_holds_every_row() {
+        let cfg = tiny();
+        let rows = serve_sweep(&cfg);
+        let j = serve_sweep_to_json(&cfg, &rows).pretty();
+        assert!(j.contains("\"rows\""));
+        assert!(j.contains("\"replica_down\""));
+        assert!(j.contains("\"ttft_p99\""));
+        assert!(j.contains("\"goodput_tokens_per_s\""));
+    }
+}

@@ -184,6 +184,14 @@ pub fn kv_shard_bytes(model: &InferModel, prompt_tokens: usize) -> u64 {
     ((model.kv_per_token * prompt_tokens as f64 / 8.0) as u64).max(1)
 }
 
+/// Per-rank bytes of the per-token tensor-parallel allreduce a decode step
+/// performs: one hidden-dim activation row at bf16. The request-level
+/// serving engine ([`crate::serve`]) times this through the compiled plans
+/// on each batch step.
+pub fn decode_allreduce_bytes(model: &InferModel) -> u64 {
+    ((model.hidden * 2) as u64).max(1)
+}
+
 /// The prefill→decode KV-transfer communicator of a disaggregated TP8/PP2
 /// serving instance on the 2-server testbed: the stage-pair group all
 /// eight shard transfers ride concurrently.

@@ -16,6 +16,7 @@ use crate::sim::training::{
     overhead_vs, simai_iteration, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
 };
 use crate::util::par::{available_threads, parallel_map};
+use crate::util::stats::mean_max_min;
 use crate::util::{Json, Rng};
 
 /// One sampled failure pattern: lost-NIC count per server. The NIC draw is
@@ -156,14 +157,8 @@ pub fn multi_failure_sweep_threads(
         .map(|(ki, &k)| {
             let chunk = &overheads[ki * trials..(ki + 1) * trials];
             let vals: Vec<f64> = chunk.iter().flatten().copied().collect();
-            let n = vals.len().max(1) as f64;
-            MonteCarloPoint {
-                k,
-                mean_overhead: vals.iter().sum::<f64>() / n,
-                max_overhead: vals.iter().copied().fold(0.0, f64::max),
-                min_overhead: vals.iter().copied().fold(f64::INFINITY, f64::min),
-                patterns: vals.len(),
-            }
+            let (mean_overhead, max_overhead, min_overhead) = mean_max_min(&vals);
+            MonteCarloPoint { k, mean_overhead, max_overhead, min_overhead, patterns: vals.len() }
         })
         .collect()
 }

@@ -91,6 +91,79 @@ impl Samples {
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
+
+    /// One-shot distribution summary (count, mean, p50/p95/p99, extrema) —
+    /// the SLO record shape the serving simulator and the bench harness
+    /// report per scenario.
+    pub fn summary(&mut self) -> SummaryStats {
+        SummaryStats {
+            n: self.len(),
+            mean: self.mean(),
+            p50: self.p50(),
+            p95: self.p95(),
+            p99: self.p99(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
+    /// Equi-width histogram over `[min, max]` with `bins` buckets. The last
+    /// bucket is closed on both sides so `max` lands inside it. Empty
+    /// samples yield an all-zero histogram over `[0, 0]`.
+    pub fn histogram(&mut self, bins: usize) -> Histogram {
+        let bins = bins.max(1);
+        if self.is_empty() {
+            return Histogram { lo: 0.0, hi: 0.0, counts: vec![0; bins] };
+        }
+        self.ensure_sorted();
+        let (lo, hi) = (self.values[0], *self.values.last().unwrap());
+        let mut counts = vec![0usize; bins];
+        let width = (hi - lo) / bins as f64;
+        for &v in &self.values {
+            let b = if width > 0.0 {
+                (((v - lo) / width) as usize).min(bins - 1)
+            } else {
+                0
+            };
+            counts[b] += 1;
+        }
+        Histogram { lo, hi, counts }
+    }
+}
+
+/// Summary of a sample distribution (see [`Samples::summary`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SummaryStats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Equi-width histogram (see [`Samples::histogram`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+}
+
+/// The Monte-Carlo merge fold: `(mean, max, min)` of a value chunk with the
+/// historical seeding conventions — the denominator clamps to ≥1 (an empty
+/// chunk folds to mean 0), `max` seeds at 0.0 and `min` at +∞ (overhead
+/// semantics: an empty chunk reports max 0 / min ∞). Extracted from the
+/// Fig 10 sweep's in-loop accumulation so call sites share one bit-exact
+/// implementation.
+pub fn mean_max_min(vals: &[f64]) -> (f64, f64, f64) {
+    let n = vals.len().max(1) as f64;
+    (
+        vals.iter().sum::<f64>() / n,
+        vals.iter().copied().fold(0.0, f64::max),
+        vals.iter().copied().fold(f64::INFINITY, f64::min),
+    )
 }
 
 /// Percentile of an already-sorted slice, linear interpolation.
@@ -183,6 +256,50 @@ mod tests {
     fn percentile_unsorted_input() {
         let mut s = Samples::from_vec(vec![9.0, 1.0, 5.0]);
         assert_eq!(s.p50(), 5.0);
+    }
+
+    #[test]
+    fn summary_matches_individual_accessors() {
+        let mut s = Samples::from_vec(vec![4.0, 1.0, 3.0, 2.0]);
+        let sum = s.summary();
+        assert_eq!(sum.n, 4);
+        assert!((sum.mean - 2.5).abs() < 1e-12);
+        assert!((sum.p50 - 2.5).abs() < 1e-12);
+        assert_eq!(sum.min, 1.0);
+        assert_eq!(sum.max, 4.0);
+        assert!(sum.p99 <= sum.max && sum.p95 <= sum.p99 && sum.p50 <= sum.p95);
+    }
+
+    #[test]
+    fn histogram_counts_all_samples() {
+        let mut s = Samples::from_vec(vec![0.0, 0.1, 0.4, 0.5, 0.9, 1.0]);
+        let h = s.histogram(2);
+        assert_eq!(h.lo, 0.0);
+        assert_eq!(h.hi, 1.0);
+        assert_eq!(h.counts.iter().sum::<usize>(), 6);
+        // max lands in the last (closed) bucket.
+        assert!(h.counts[1] >= 1);
+    }
+
+    #[test]
+    fn histogram_degenerate_cases() {
+        assert_eq!(Samples::new().histogram(3).counts, vec![0, 0, 0]);
+        // All-equal samples: zero width, everything in bucket 0.
+        let h = Samples::from_vec(vec![2.0, 2.0]).histogram(4);
+        assert_eq!(h.counts, vec![2, 0, 0, 0]);
+    }
+
+    #[test]
+    fn mean_max_min_fold_conventions() {
+        let (m, hi, lo) = mean_max_min(&[1.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert_eq!(hi, 3.0);
+        assert_eq!(lo, 1.0);
+        // Historical Monte-Carlo seeding: empty chunk → (0, 0, ∞).
+        let (m, hi, lo) = mean_max_min(&[]);
+        assert_eq!(m, 0.0);
+        assert_eq!(hi, 0.0);
+        assert_eq!(lo, f64::INFINITY);
     }
 
     #[test]

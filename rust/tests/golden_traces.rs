@@ -137,6 +137,21 @@ fn golden_oversub_saturation() {
 }
 
 #[test]
+fn golden_serving_burst_nic_flap() {
+    golden("serving_burst_nic_flap");
+}
+
+#[test]
+fn golden_serving_leaf_down_load() {
+    golden("serving_leaf_down_load");
+}
+
+#[test]
+fn golden_serving_replica_down() {
+    golden("serving_replica_down");
+}
+
+#[test]
 fn corpus_covers_required_scenario_kinds() {
     // The acceptance floor: ≥6 distinct scenario kinds in the committed
     // corpus, including flapping, correlated-rail and a fluctuation ramp.
@@ -167,8 +182,10 @@ fn corpus_covers_required_scenario_kinds() {
         "spine_degrade",
         "uplink_flap",
         "oversub_saturation",
+        // Serving fault pattern of the request-serving corpus.
+        "replica_down",
     ] {
         assert!(kinds.contains(required), "corpus is missing a {required:?} scenario");
     }
-    assert!(kinds.len() >= 10, "only {} distinct kinds", kinds.len());
+    assert!(kinds.len() >= 11, "only {} distinct kinds", kinds.len());
 }

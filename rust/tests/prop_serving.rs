@@ -1,0 +1,198 @@
+//! Property tests for the request-level serving simulator.
+//!
+//! Three claims, matching the serving subsystem's contract:
+//! * **thread-count-invariant determinism** — the same seed yields a
+//!   bit-identical request trace and SLO metrics whether a serving corpus
+//!   runs on 1, 2 or 4 worker threads;
+//! * **failover** — no request is dropped while at least one healthy
+//!   replica exists; drops happen only in a total outage, and the
+//!   `lost_while_healthy` invariant counter stays zero always;
+//! * **spec round-trip** — Poisson, burst and trace-driven arrival specs
+//!   survive JSON serialization *exactly* (bit-for-bit f64s), so a
+//!   scenario file is a complete description of its traffic.
+
+use r2ccl::collectives::exec::FaultAction;
+use r2ccl::config::Preset;
+use r2ccl::fabric::FabricConfig;
+use r2ccl::scenario::{run_corpus, FaultPattern, FaultScenario, ScenarioEvent, Workload};
+use r2ccl::scenario::{ClusterSpec, ScenarioRunner};
+use r2ccl::serve::{run_request_engine, ArrivalSpec, EngineCfg, ServeSweepCfg};
+use r2ccl::sim::inference::InferModel;
+
+fn request_scenario(name: &str, seed: u64, patterns: Vec<FaultPattern>) -> FaultScenario {
+    FaultScenario {
+        name: name.into(),
+        seed,
+        iters: 1,
+        workload: Workload::RequestServing {
+            arrivals: ArrivalSpec::Poisson { rps: 40.0, duration: 1.2 },
+            replicas: 2,
+            prompt_tokens: 2000,
+            output_tokens: 8,
+            max_batch: 8,
+        },
+        max_overhead: None,
+        cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
+        patterns,
+    }
+}
+
+fn engine_cfg(rps: f64, duration: f64, replicas: usize, seed: u64) -> EngineCfg {
+    EngineCfg {
+        model: InferModel::llama70b(),
+        arrivals: ArrivalSpec::Poisson { rps, duration },
+        replicas,
+        prompt_tokens: 2000,
+        output_tokens: 8,
+        max_batch: 8,
+        seed,
+    }
+}
+
+#[test]
+fn serving_corpus_is_thread_count_invariant() {
+    let corpus: Vec<FaultScenario> = vec![
+        request_scenario("prop-healthy", 3, vec![]),
+        request_scenario(
+            "prop-replica-down",
+            5,
+            vec![FaultPattern::ReplicaDown { replica: 1, at: 0.3, restore_after: Some(0.4) }],
+        ),
+        request_scenario(
+            "prop-nic-flap",
+            7,
+            vec![FaultPattern::Flapping {
+                nic: 0,
+                start: 0.2,
+                cycles: 2,
+                down: 0.1,
+                up: 0.15,
+                jitter: 0.02,
+            }],
+        ),
+    ];
+    let preset = Preset::testbed();
+    let serial: Vec<String> =
+        run_corpus(&corpus, &preset, 1).iter().map(|r| r.to_json().pretty()).collect();
+    for threads in [2, 4] {
+        let par: Vec<String> =
+            run_corpus(&corpus, &preset, threads).iter().map(|r| r.to_json().pretty()).collect();
+        assert_eq!(serial, par, "corpus diverged at {threads} threads");
+    }
+    // The traces really carry the per-request SLO payload.
+    assert!(serial.iter().all(|t| t.contains("\"serving\"") && t.contains("\"ttft\"")));
+}
+
+#[test]
+fn same_seed_reproduces_the_request_trace_bit_for_bit() {
+    let sc = request_scenario(
+        "prop-repro",
+        11,
+        vec![FaultPattern::ReplicaDown { replica: 0, at: 0.5, restore_after: None }],
+    );
+    let a = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+    let b = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    let s = a.serving.as_ref().unwrap();
+    assert_eq!(s.ledger.lost, 0, "replica 1 survives");
+    assert!(s.requests.iter().any(|r| r.replays > 0), "replica 0's in-flight work replayed");
+}
+
+#[test]
+fn no_request_drops_while_a_healthy_replica_exists() {
+    // Kill each replica in turn (restoring in between), at several seeds:
+    // with the other replica alive, every arrival must complete.
+    for seed in [1, 2, 3, 4, 5] {
+        let sc = request_scenario(
+            "prop-failover",
+            seed,
+            vec![
+                FaultPattern::ReplicaDown { replica: 1, at: 0.2, restore_after: Some(0.3) },
+                FaultPattern::ReplicaDown { replica: 0, at: 0.7, restore_after: Some(0.3) },
+            ],
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        let s = rep.serving.as_ref().unwrap();
+        assert_eq!(s.ledger.lost, 0, "seed {seed}: a healthy replica always existed");
+        assert_eq!(s.ledger.lost_while_healthy, 0);
+        assert_eq!(s.ledger.completed, s.requests.len());
+        assert!(!rep.crashed && !rep.path_lost, "seed {seed}");
+    }
+}
+
+#[test]
+fn total_outage_drops_only_while_all_replicas_are_down() {
+    // Kill *both* replicas of a 1-replica world mid-run with no restore:
+    // arrivals after the outage are lost, `path_lost` is set, and the
+    // invariant counter stays zero (drops only happened with nothing
+    // healthy).
+    let preset = Preset::simai(2);
+    let cfg = engine_cfg(30.0, 1.5, 1, 13);
+    let events: Vec<ScenarioEvent> = (0..2 * preset.topo.nics_per_server)
+        .map(|nic| ScenarioEvent { at_iter: 0.5, nic, action: FaultAction::FailNic })
+        .collect();
+    let res = run_request_engine(&preset, &FabricConfig::ideal(), &cfg, &events, &[]);
+    assert!(res.all_down_ever);
+    assert!(res.ledger.lost > 0, "arrivals after 0.5s had nowhere to go");
+    assert_eq!(res.ledger.lost_while_healthy, 0);
+    assert_eq!(res.records.len() + res.ledger.lost, res.arrivals);
+    assert!(res.records.iter().all(|r| r.arrival < 0.5), "only pre-outage arrivals complete");
+}
+
+#[test]
+fn arrival_specs_round_trip_their_json_exactly() {
+    use r2ccl::util::Json;
+    // Bit-awkward f64s on purpose: the printer must emit shortest
+    // round-trip forms that parse back to the identical spec.
+    let specs = vec![
+        ArrivalSpec::Poisson { rps: 123.456789012345, duration: 0.1 + 0.2 },
+        ArrivalSpec::Burst {
+            base_rps: 50.0,
+            burst_rps: 1000.0 / 3.0,
+            burst_start: 0.123456789,
+            burst_duration: 2.0f64.sqrt(),
+            duration: 5.0,
+        },
+        ArrivalSpec::Trace { times: vec![0.1, 0.30000000000000004, 1.0 / 3.0, 2.5] },
+    ];
+    for spec in specs {
+        let text = spec.to_json().pretty();
+        let back = ArrivalSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(spec, back, "{text}");
+        // And through the full workload wrapper a scenario file uses.
+        let w = Workload::RequestServing {
+            arrivals: spec.clone(),
+            replicas: 2,
+            prompt_tokens: 2000,
+            output_tokens: 8,
+            max_batch: 8,
+        };
+        let w2 = Workload::from_json(&Json::parse(&w.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(w, w2);
+    }
+}
+
+#[test]
+fn trace_and_poisson_sweep_arms_agree_on_the_schema() {
+    // A trace arm built from a Poisson draw reproduces that draw's arrival
+    // count exactly — the two arms are interchangeable descriptions.
+    let spec = ArrivalSpec::Poisson { rps: 40.0, duration: 1.0 };
+    let times = spec.generate(42);
+    let poisson = ServeSweepCfg {
+        rps_points: vec![40.0],
+        duration: 1.0,
+        output_tokens: 4,
+        ..ServeSweepCfg::full()
+    };
+    let trace = ServeSweepCfg { trace: Some(times.clone()), ..poisson.clone() };
+    let p_rows = r2ccl::serve::serve_sweep(&poisson);
+    let t_rows = r2ccl::serve::serve_sweep(&trace);
+    assert_eq!(p_rows.len(), t_rows.len());
+    for (p, t) in p_rows.iter().zip(&t_rows) {
+        assert_eq!(p.arm, t.arm);
+        assert_eq!(p.arrivals, times.len());
+        assert_eq!(p.arrivals, t.arrivals, "same arrivals either way");
+        assert_eq!(p.completed, t.completed);
+    }
+}
