@@ -1,0 +1,97 @@
+//! Corpus-wide three-arm recovery comparison: every committed scenario
+//! evaluated under R²CCL lossless failover, checkpoint/restart, and
+//! FFTrainer-style fast failover, with wasted GPU-hours per arm and the
+//! paper-style speedup ratios.
+//!
+//! Writes `bench_results/recovery_compare.json` (schema in
+//! `bench_results/README.md`), reproducible via the `recovery-compare`
+//! CLI subcommand. `BENCH_QUICK=1` restricts to the three recovery
+//! scenarios — the CI `recovery-smoke` job's shape.
+//!
+//! Asserts the acceptance floor: on the fault-heavy training scenarios
+//! the lossless-vs-checkpoint speedup exceeds 10×.
+
+use r2ccl::bench::Table;
+use r2ccl::config::Preset;
+use r2ccl::recovery::{recovery_sweep, recovery_sweep_to_json};
+use r2ccl::scenario::FaultScenario;
+
+const RECOVERY_SCENARIOS: [&str; 3] =
+    ["training_ckpt_rollback", "training_fast_failover", "serving_dejavu_restart"];
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let preset = Preset::testbed();
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir("scenarios")
+        .expect("run from the repository root (scenarios/ not found)")
+        .filter_map(|ent| ent.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut scenarios: Vec<FaultScenario> = Vec::with_capacity(paths.len());
+    for path in &paths {
+        let text = std::fs::read_to_string(path).unwrap();
+        let sc = FaultScenario::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        if quick && !RECOVERY_SCENARIOS.contains(&sc.name.as_str()) {
+            continue;
+        }
+        let eff_topo = match &sc.cluster {
+            Some(c) if c.n_servers != preset.topo.n_servers => Preset::simai(c.n_servers).topo,
+            _ => preset.topo.clone(),
+        };
+        sc.validate(&eff_topo).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        scenarios.push(sc);
+    }
+    println!(
+        "recovery compare: {} scenario(s){}",
+        scenarios.len(),
+        if quick { " (BENCH_QUICK: recovery corpus only)" } else { "" }
+    );
+    let threads = r2ccl::util::par::available_threads();
+    let rows = recovery_sweep(&scenarios, &preset, threads);
+
+    let mut table = Table::new(
+        "Recovery arms: wasted GPU-hours and lossless speedup per scenario",
+        &["scenario", "gpus", "lossless gh", "ckpt gh", "fast gh", "restarts", "x ckpt", "x fast"],
+    );
+    let ratio = |v: Option<f64>| match v {
+        Some(x) => format!("{x:.1}x"),
+        None => "-".to_string(),
+    };
+    for row in &rows {
+        let c = &row.compare;
+        table.row(vec![
+            row.scenario.clone(),
+            c.n_gpus.to_string(),
+            format!("{:.4}", c.lossless.gpu_hours_wasted),
+            format!("{:.4}", c.checkpoint.gpu_hours_wasted),
+            format!("{:.4}", c.fast.gpu_hours_wasted),
+            c.checkpoint.restarts.to_string(),
+            ratio(c.speedup_vs_checkpoint),
+            ratio(c.speedup_vs_fast),
+        ]);
+    }
+    table.print();
+
+    // Acceptance floor: fault-heavy training scenarios must show the
+    // paper-shaped lossless-vs-checkpoint gap.
+    for name in ["training_ckpt_rollback", "training_fast_failover"] {
+        let row = rows
+            .iter()
+            .find(|r| r.scenario == name)
+            .unwrap_or_else(|| panic!("{name} missing from the corpus"));
+        let speedup = row
+            .compare
+            .speedup_vs_checkpoint
+            .unwrap_or_else(|| panic!("{name}: lossless arm wasted nothing to compare"));
+        assert!(speedup > 10.0, "{name}: lossless-vs-checkpoint speedup {speedup:.1}x <= 10x");
+        println!("{name}: lossless-vs-checkpoint speedup {speedup:.1}x (> 10x)");
+    }
+
+    let _ = std::fs::create_dir_all("bench_results");
+    let json = recovery_sweep_to_json(&rows).pretty();
+    std::fs::write("bench_results/recovery_compare.json", json + "\n")
+        .expect("write bench_results/recovery_compare.json");
+    println!("\nwrote bench_results/recovery_compare.json ({} scenarios)", rows.len());
+}

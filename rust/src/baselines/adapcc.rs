@@ -10,6 +10,8 @@
 //!   failover);
 //! * removing a rank violates TP/PP partitioning → cannot operate there.
 
+use crate::util::Rng;
+
 /// Model parameters.
 #[derive(Debug, Clone)]
 pub struct AdapCcModel {
@@ -31,6 +33,20 @@ impl AdapCcModel {
     /// Per-collective reconfiguration overhead (heartbeat round).
     pub fn per_collective_overhead(&self) -> f64 {
         self.heartbeat_overhead
+    }
+
+    /// Steady-state coordination tax over `n_collectives` launches —
+    /// what the recovery arms charge per iteration.
+    pub fn steady_overhead(&self, n_collectives: usize) -> f64 {
+        n_collectives as f64 * self.heartbeat_overhead
+    }
+
+    /// Seeded Bernoulli draw of the crash-vs-exclusion fate of one fault:
+    /// `true` means the fault struck mid-collective and the job crashes
+    /// anyway (no in-flight failover). Deterministic given the `Rng`
+    /// stream, so recovery reports are reproducible bit-for-bit.
+    pub fn fault_lands_mid_collective(&self, rng: &mut Rng) -> bool {
+        rng.chance(self.mid_collective_fraction)
     }
 
     /// Remaining compute capacity after excluding the GPUs attached to
@@ -62,6 +78,65 @@ mod tests {
         let m = AdapCcModel::default();
         assert!((m.capacity_factor(16, 1) - 15.0 / 16.0).abs() < 1e-12);
         assert_eq!(m.capacity_factor(4, 8), 0.0);
+    }
+
+    #[test]
+    fn capacity_factor_bounds_and_clamping() {
+        let m = AdapCcModel::default();
+        // No failures: full capacity, exactly.
+        assert_eq!(m.capacity_factor(16, 0), 1.0);
+        // failed_units == n_gpus: clamped to zero, not negative.
+        assert_eq!(m.capacity_factor(16, 16), 0.0);
+        // failed_units > n_gpus: still clamped to zero.
+        assert_eq!(m.capacity_factor(16, 1000), 0.0);
+        // Monotone non-increasing in failed units, always within [0, 1].
+        let mut prev = 1.0;
+        for failed in 0..=20 {
+            let c = m.capacity_factor(16, failed);
+            assert!((0.0..=1.0).contains(&c), "capacity {c} out of bounds");
+            assert!(c <= prev, "capacity must not grow with more failures");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn steady_overhead_accumulates_per_collective() {
+        let m = AdapCcModel::default();
+        assert_eq!(m.steady_overhead(0), 0.0);
+        assert!((m.steady_overhead(1) - m.per_collective_overhead()).abs() < 1e-15);
+        assert!((m.steady_overhead(7) - 7.0 * m.heartbeat_overhead).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mid_collective_draws_are_deterministic_per_seed() {
+        let m = AdapCcModel::default();
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..64).map(|_| m.fault_lands_mid_collective(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42), "same seed ⇒ same fate sequence");
+        assert_ne!(draw(1), draw(2), "different seeds diverge");
+    }
+
+    #[test]
+    fn mid_collective_fraction_sets_empirical_crash_rate() {
+        let m = AdapCcModel::default();
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let crashes =
+            (0..n).filter(|_| m.fault_lands_mid_collective(&mut rng)).count();
+        let rate = crashes as f64 / n as f64;
+        assert!(
+            (rate - m.mid_collective_fraction).abs() < 0.01,
+            "empirical {rate} vs configured {}",
+            m.mid_collective_fraction
+        );
+        // Probability edge cases: p=0 never crashes, p=1 always does.
+        let never = AdapCcModel { mid_collective_fraction: 0.0, ..m.clone() };
+        let always = AdapCcModel { mid_collective_fraction: 1.0, ..m };
+        let mut rng = Rng::new(11);
+        assert!((0..1000).all(|_| !never.fault_lands_mid_collective(&mut rng)));
+        assert!((0..1000).all(|_| always.fault_lands_mid_collective(&mut rng)));
     }
 
     #[test]

@@ -32,9 +32,55 @@ impl Default for DejaVuModel {
 }
 
 impl DejaVuModel {
+    /// Reject parameterisations outside the model's meaningful range.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.replicated_fraction) {
+            return Err(format!(
+                "dejavu: replicated_fraction {} must be in [0, 1]",
+                self.replicated_fraction
+            ));
+        }
+        if !(self.replication_slowdown.is_finite() && self.replication_slowdown >= 1.0) {
+            return Err(format!(
+                "dejavu: replication_slowdown {} must be finite and >= 1",
+                self.replication_slowdown
+            ));
+        }
+        if !(self.worker_restart.is_finite() && self.worker_restart >= 0.0) {
+            return Err(format!(
+                "dejavu: worker_restart {} must be finite and >= 0",
+                self.worker_restart
+            ));
+        }
+        if !(self.fetch_bw.is_finite() && self.fetch_bw > 0.0) {
+            return Err(format!("dejavu: fetch_bw {} must be finite and > 0", self.fetch_bw));
+        }
+        Ok(())
+    }
+
     /// Per-token decode latency including the replication tax.
     pub fn decode_latency(&self, base: f64) -> f64 {
         base * self.replication_slowdown
+    }
+
+    /// Steady-state time lost to replication over `tokens` decode steps of
+    /// `base_decode` each — the 14–33% tax paid even when nothing fails.
+    pub fn steady_tax(&self, base_decode: f64, tokens: usize) -> f64 {
+        (self.decode_latency(base_decode) - base_decode) * tokens as f64
+    }
+
+    /// Total disruption of one failure over a window that decoded `tokens`
+    /// tokens: the steady replication tax *composed with* the restart-time
+    /// recovery — the two costs the recovery arms charge together.
+    pub fn total_disruption(
+        &self,
+        base_decode: f64,
+        tokens: usize,
+        kv_bytes: f64,
+        recompute_per_token: f64,
+    ) -> f64 {
+        self.steady_tax(base_decode, tokens)
+            + self.recovery_time(kv_bytes, tokens, recompute_per_token)
     }
 
     /// Recovery time at failure: restart + fetch replicated KV + recompute
@@ -68,6 +114,49 @@ mod tests {
         let t = m.recovery_time(8.0e9, 800, 0.002);
         assert!(t > m.worker_restart);
         assert!(m.worker_restart / t > 0.5, "restart share {}", m.worker_restart / t);
+    }
+
+    #[test]
+    fn validate_bounds_the_parameters() {
+        DejaVuModel::default().validate().unwrap();
+        let mut m = DejaVuModel::default();
+        m.replicated_fraction = 1.2;
+        assert!(m.validate().unwrap_err().contains("replicated_fraction"));
+        let mut m = DejaVuModel::default();
+        m.replicated_fraction = -0.1;
+        assert!(m.validate().is_err());
+        let mut m = DejaVuModel::default();
+        m.replication_slowdown = 0.97;
+        assert!(m.validate().unwrap_err().contains("replication_slowdown"));
+        let mut m = DejaVuModel::default();
+        m.worker_restart = f64::NAN;
+        assert!(m.validate().is_err());
+        let mut m = DejaVuModel::default();
+        m.fetch_bw = 0.0;
+        assert!(m.validate().unwrap_err().contains("fetch_bw"));
+        // Boundary values are legal: no replication, no slowdown.
+        let m = DejaVuModel {
+            replicated_fraction: 0.0,
+            replication_slowdown: 1.0,
+            ..DejaVuModel::default()
+        };
+        m.validate().unwrap();
+        assert_eq!(m.steady_tax(0.05, 1000), 0.0);
+    }
+
+    #[test]
+    fn slowdown_composes_with_restart_delay() {
+        let m = DejaVuModel::default();
+        let (base, tokens, kv, rc) = (0.05, 800, 8.0e9, 0.002);
+        let total = m.total_disruption(base, tokens, kv, rc);
+        let tax = m.steady_tax(base, tokens);
+        let recovery = m.recovery_time(kv, tokens, rc);
+        assert!((total - (tax + recovery)).abs() < 1e-12, "costs compose additively");
+        assert!(tax > 0.0, "the 3% slowdown must tax 800 decode steps");
+        assert!(total > m.worker_restart, "disruption exceeds the bare restart");
+        // More replication: steady tax unchanged, recovery fetch grows but
+        // recompute shrinks — still restart-dominated at defaults.
+        assert!(recovery / total < 1.0 && m.worker_restart / recovery > 0.5);
     }
 
     #[test]

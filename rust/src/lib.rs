@@ -31,6 +31,7 @@ pub mod collectives;
 pub mod schedule;
 pub mod ccl;
 pub mod baselines;
+pub mod recovery;
 pub mod scenario;
 pub mod serve;
 pub mod sim;

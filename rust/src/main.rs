@@ -18,6 +18,10 @@
 //!                     [--max-batch 16] [--fabric flat|leaf-spine] [--threads N]
 //!                     [--seed 42] [--quick] [--json]
 //!                     (SERVE_* env vars apply first; flags win)
+//!   recovery-compare  [--file scenarios/x.json | --dir scenarios] [--threads N]
+//!                     [--out bench_results/recovery_compare.json] [--json]
+//!                     (three recovery arms — lossless / checkpoint-restart /
+//!                     fast-failover — for every scenario in the corpus)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -400,6 +404,77 @@ fn main() -> anyhow::Result<()> {
                 println!("{}", serve_sweep_to_json(&cfg, &rows).pretty());
             }
         }
+        "recovery-compare" => {
+            // Corpus-wide three-arm recovery sweep: run every scenario and
+            // overlay the checkpoint/restart and fast-failover baselines on
+            // its report. Scenarios with their own "recovery" block use it;
+            // the rest use the default RecoveryConfig. `--out` writes the
+            // deterministic JSON (the recovery_compare bench's artifact).
+            use r2ccl::recovery::{recovery_sweep, recovery_sweep_to_json};
+            use r2ccl::scenario::FaultScenario;
+            let preset = Preset::testbed();
+            let threads =
+                args.get_usize("threads", r2ccl::util::par::available_threads());
+            let paths: Vec<std::path::PathBuf> = if let Some(f) = args.get("file") {
+                vec![f.into()]
+            } else {
+                let dir = args.get_or("dir", "scenarios");
+                let mut ps: Vec<_> = std::fs::read_dir(dir)
+                    .map_err(|e| anyhow::anyhow!("cannot read scenario dir {dir}: {e}"))?
+                    .filter_map(|ent| ent.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+                    .collect();
+                ps.sort();
+                ps
+            };
+            let mut scenarios: Vec<FaultScenario> = Vec::with_capacity(paths.len());
+            for path in &paths {
+                let text = std::fs::read_to_string(path)?;
+                let sc = FaultScenario::from_json_str(&text)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                let eff_topo = match &sc.cluster {
+                    Some(c) if c.n_servers != preset.topo.n_servers => {
+                        Preset::simai(c.n_servers).topo
+                    }
+                    _ => preset.topo.clone(),
+                };
+                sc.validate(&eff_topo).map_err(|e| anyhow::anyhow!(e))?;
+                scenarios.push(sc);
+            }
+            let rows = recovery_sweep(&scenarios, &preset, threads);
+            println!(
+                "{:<24} {:>5}  {:>12} {:>12} {:>12}  {:>9} {:>9}",
+                "scenario", "gpus", "lossless", "ckpt", "fast", "x ckpt", "x fast"
+            );
+            for row in &rows {
+                let c = &row.compare;
+                let ratio = |v: Option<f64>| match v {
+                    Some(x) => format!("{x:.1}x"),
+                    None => "-".to_string(),
+                };
+                println!(
+                    "{:<24} {:>5}  {:>10.3}gh {:>10.3}gh {:>10.3}gh  {:>9} {:>9}",
+                    row.scenario,
+                    c.n_gpus,
+                    c.lossless.gpu_hours_wasted,
+                    c.checkpoint.gpu_hours_wasted,
+                    c.fast.gpu_hours_wasted,
+                    ratio(c.speedup_vs_checkpoint),
+                    ratio(c.speedup_vs_fast),
+                );
+            }
+            let json = recovery_sweep_to_json(&rows).pretty() + "\n";
+            if let Some(out) = args.get("out") {
+                if let Some(dir) = std::path::Path::new(out).parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(out, &json)?;
+                println!("wrote {out}");
+            }
+            if args.has("json") {
+                println!("{json}");
+            }
+        }
         #[cfg(feature = "xla")]
         "train-e2e" => {
             let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
@@ -439,7 +514,7 @@ fn main() -> anyhow::Result<()> {
                 world.topo().n_resources()
             );
             println!(
-                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | serve-sweep | train-e2e | info"
+                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | serve-sweep | recovery-compare | train-e2e | info"
             );
         }
     }

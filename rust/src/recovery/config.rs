@@ -1,0 +1,214 @@
+//! Knobs of the job-recovery baseline arms.
+//!
+//! Training-side costs are expressed in *healthy-iteration units* — the
+//! same time base the scenario event scripts use — so one config is
+//! meaningful across workloads whose absolute iteration times differ by
+//! orders of magnitude; the arm evaluator converts to seconds through the
+//! report's `healthy_iter_time`. The request-serving knob
+//! (`fast_restart_s`) is in seconds, matching that workload's time base.
+//!
+//! Defaults follow the paper's §2.2 recovery-pipeline shape (detection and
+//! isolation dominate, reload next, communicator rebuild scaling with the
+//! cluster) scaled down to scenario-sized horizons, with the fast-failover
+//! arm anchored on FFTrainer's "almost-free state management" and
+//! Mnemosyne's communication-free communicator re-initialization.
+
+use crate::util::Json;
+
+/// Configuration of the checkpoint/restart and fast-failover arms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryConfig {
+    /// Periodic checkpoint cadence: a checkpoint is written after every
+    /// `checkpoint_interval` completed iterations (≥ 1).
+    pub checkpoint_interval: usize,
+    /// Stall charged to the iteration that writes a periodic checkpoint
+    /// (iteration units).
+    pub checkpoint_stall: f64,
+    /// Fault detection + isolation before a whole-job restart (iteration
+    /// units) — the §2.2 "3–30 min detect, 9–14 min isolate" stages.
+    pub detect: f64,
+    /// Checkpoint reload at restart (iteration units).
+    pub restore: f64,
+    /// Communicator re-initialization at restart: fixed base cost
+    /// (iteration units)…
+    pub reinit_base: f64,
+    /// …plus a per-server term (iteration units × n_servers): NCCL-style
+    /// bootstrap all-gathers grow with the cluster.
+    pub reinit_per_server: f64,
+    /// AdapCC exclusion-path reconfiguration cost when a boundary fault is
+    /// survivable (iteration units).
+    pub exclusion_reconfigure: f64,
+    /// Fast-failover steady-state tax per iteration (fraction) — the
+    /// in-memory state-management overhead FFTrainer reports as almost
+    /// free.
+    pub fast_steady_overhead: f64,
+    /// Fault-signal detection before the just-in-time checkpoint
+    /// (iteration units).
+    pub fast_detect: f64,
+    /// Just-in-time checkpoint written on the fault signal (iteration
+    /// units) — no rollback, so no lost iterations.
+    pub jit_checkpoint_stall: f64,
+    /// State restore from the in-memory JIT checkpoint (iteration units).
+    pub fast_restore: f64,
+    /// Mnemosyne-style communication-free communicator re-init (iteration
+    /// units, deliberately *not* scaled by n_servers).
+    pub fast_reinit: f64,
+    /// Request-serving fast-failover replica reconnection (seconds).
+    pub fast_restart_s: f64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            checkpoint_interval: 10,
+            checkpoint_stall: 0.25,
+            detect: 20.0,
+            restore: 30.0,
+            reinit_base: 5.0,
+            reinit_per_server: 0.25,
+            exclusion_reconfigure: 2.0,
+            fast_steady_overhead: 0.01,
+            fast_detect: 0.5,
+            jit_checkpoint_stall: 0.25,
+            fast_restore: 0.5,
+            fast_reinit: 0.25,
+            fast_restart_s: 0.25,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    /// Reject configs the arm evaluator cannot interpret. Mirrors the
+    /// clean-error contract of every other scenario-file field.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.checkpoint_interval < 1 {
+            return Err("recovery: checkpoint_interval must be >= 1".to_string());
+        }
+        for (name, v) in [
+            ("checkpoint_stall", self.checkpoint_stall),
+            ("detect", self.detect),
+            ("restore", self.restore),
+            ("reinit_base", self.reinit_base),
+            ("reinit_per_server", self.reinit_per_server),
+            ("exclusion_reconfigure", self.exclusion_reconfigure),
+            ("fast_steady_overhead", self.fast_steady_overhead),
+            ("fast_detect", self.fast_detect),
+            ("jit_checkpoint_stall", self.jit_checkpoint_stall),
+            ("fast_restore", self.fast_restore),
+            ("fast_reinit", self.fast_reinit),
+            ("fast_restart_s", self.fast_restart_s),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("recovery: {name} must be finite and >= 0"));
+            }
+        }
+        if self.fast_steady_overhead >= 1.0 {
+            return Err("recovery: fast_steady_overhead must be < 1".to_string());
+        }
+        Ok(())
+    }
+
+    /// Deterministic serialization; [`RecoveryConfig::from_json`] is its
+    /// exact inverse (property-tested in `rust/tests/prop_recovery.rs`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("checkpoint_interval", self.checkpoint_interval)
+            .set("checkpoint_stall", self.checkpoint_stall)
+            .set("detect", self.detect)
+            .set("restore", self.restore)
+            .set("reinit_base", self.reinit_base)
+            .set("reinit_per_server", self.reinit_per_server)
+            .set("exclusion_reconfigure", self.exclusion_reconfigure)
+            .set("fast_steady_overhead", self.fast_steady_overhead)
+            .set("fast_detect", self.fast_detect)
+            .set("jit_checkpoint_stall", self.jit_checkpoint_stall)
+            .set("fast_restore", self.fast_restore)
+            .set("fast_reinit", self.fast_reinit)
+            .set("fast_restart_s", self.fast_restart_s)
+    }
+
+    /// Parse from a scenario file's `"recovery"` block; every omitted field
+    /// takes its [`Default`] value, so `{"checkpoint_interval": 4}` is a
+    /// complete config.
+    pub fn from_json(j: &Json) -> Result<RecoveryConfig, String> {
+        let d = RecoveryConfig::default();
+        let f = |k: &str, dv: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let cfg = RecoveryConfig {
+            checkpoint_interval: j
+                .get("checkpoint_interval")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.checkpoint_interval),
+            checkpoint_stall: f("checkpoint_stall", d.checkpoint_stall),
+            detect: f("detect", d.detect),
+            restore: f("restore", d.restore),
+            reinit_base: f("reinit_base", d.reinit_base),
+            reinit_per_server: f("reinit_per_server", d.reinit_per_server),
+            exclusion_reconfigure: f("exclusion_reconfigure", d.exclusion_reconfigure),
+            fast_steady_overhead: f("fast_steady_overhead", d.fast_steady_overhead),
+            fast_detect: f("fast_detect", d.fast_detect),
+            jit_checkpoint_stall: f("jit_checkpoint_stall", d.jit_checkpoint_stall),
+            fast_restore: f("fast_restore", d.fast_restore),
+            fast_reinit: f("fast_reinit", d.fast_reinit),
+            fast_restart_s: f("fast_restart_s", d.fast_restart_s),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        RecoveryConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_interval_and_negative_times() {
+        let mut c = RecoveryConfig::default();
+        c.checkpoint_interval = 0;
+        assert!(c.validate().unwrap_err().contains("checkpoint_interval"));
+        let mut c = RecoveryConfig::default();
+        c.detect = -1.0;
+        assert!(c.validate().unwrap_err().contains("detect"));
+        let mut c = RecoveryConfig::default();
+        c.fast_steady_overhead = 1.0;
+        assert!(c.validate().unwrap_err().contains("fast_steady_overhead"));
+        let mut c = RecoveryConfig::default();
+        c.restore = f64::INFINITY;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn partial_json_fills_defaults() {
+        let j = Json::parse(r#"{"checkpoint_interval": 4, "detect": 2.5}"#).unwrap();
+        let c = RecoveryConfig::from_json(&j).unwrap();
+        assert_eq!(c.checkpoint_interval, 4);
+        assert_eq!(c.detect, 2.5);
+        assert_eq!(c.restore, RecoveryConfig::default().restore);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let c = RecoveryConfig {
+            checkpoint_interval: 3,
+            checkpoint_stall: 0.1 + 0.2, // deliberately non-representable
+            detect: 19.75,
+            restore: 31.5,
+            reinit_base: 4.125,
+            reinit_per_server: 1.0 / 3.0,
+            exclusion_reconfigure: 2.5,
+            fast_steady_overhead: 0.0125,
+            fast_detect: 0.75,
+            jit_checkpoint_stall: 0.3,
+            fast_restore: 0.6,
+            fast_reinit: 0.2,
+            fast_restart_s: 0.125,
+        };
+        let s = c.to_json().pretty();
+        let back = RecoveryConfig::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(c, back, "f64 fields must survive the JSON round-trip bit-exactly");
+    }
+}

@@ -1,0 +1,31 @@
+//! Job-recovery baselines: checkpoint/restart and fast failover, compared
+//! arm-by-arm against R²CCL's lossless in-flight failover.
+//!
+//! The paper's headline claim is not that faults are rare but that the
+//! *recovery discipline* determines their cost: a conventional job reacts
+//! to an unrecoverable fault by detecting it (minutes), isolating the bad
+//! node, reloading the last periodic checkpoint (losing every iteration
+//! since), and re-initialising the communicator — a cost that grows with
+//! cluster size. FFTrainer-style fast failover shrinks that pipeline with
+//! just-in-time checkpoints and Mnemosyne-style communication-free
+//! communicator re-init; R²CCL removes it entirely by migrating in-flight
+//! collectives around the fault. This module prices all three disciplines
+//! against the *same* deterministic fault script and reports the
+//! difference as wasted GPU-hours.
+//!
+//! * [`config`] — [`RecoveryConfig`]: checkpoint interval/stall, rollback
+//!   pipeline stages, fast-failover stage costs; JSON round-trips exactly.
+//! * [`arms`] — [`compare_arms`]: the pure analytic overlay that replays a
+//!   finished [`crate::scenario::ScenarioReport`] under each baseline and
+//!   emits the [`RecoveryCompare`] block scenario reports serialize.
+//! * [`sweep`] — [`recovery_sweep`]: every corpus scenario under all three
+//!   arms, backing the `recovery-compare` CLI subcommand and
+//!   `bench_results/recovery_compare.json`.
+
+pub mod arms;
+pub mod config;
+pub mod sweep;
+
+pub use arms::{compare_arms, ArmOutcome, RecoveryCompare};
+pub use config::RecoveryConfig;
+pub use sweep::{recovery_sweep, recovery_sweep_to_json, RecoverySweepRow};

@@ -1,0 +1,127 @@
+//! Corpus-wide recovery sweep: every scenario in a corpus evaluated under
+//! all three recovery arms, regardless of whether the scenario file asked
+//! for a `recovery` block.
+//!
+//! This is the data source of the `recovery-compare` CLI subcommand and
+//! the `recovery_compare` bench, which writes
+//! `bench_results/recovery_compare.json`. Scenarios that *do* carry a
+//! `recovery` block are swept with their own config; all others use
+//! [`RecoveryConfig::default`] — so the sweep covers the whole corpus
+//! while golden traces stay gated on the explicit opt-in.
+
+use crate::config::Preset;
+use crate::scenario::{effective_preset, FaultScenario, ScenarioRunner};
+use crate::util::Json;
+
+use super::{compare_arms, RecoveryCompare, RecoveryConfig};
+
+/// One corpus scenario's three-arm outcome.
+#[derive(Debug, Clone)]
+pub struct RecoverySweepRow {
+    pub scenario: String,
+    pub compare: RecoveryCompare,
+}
+
+impl RecoverySweepRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("compare", self.compare.to_json())
+    }
+}
+
+/// Run every scenario and overlay the three recovery arms on its report.
+/// Rows come back in input order; the whole sweep is deterministic at any
+/// thread count (each run is independent and the overlay is seeded from
+/// the scenario).
+pub fn recovery_sweep(
+    scenarios: &[FaultScenario],
+    preset: &Preset,
+    threads: usize,
+) -> Vec<RecoverySweepRow> {
+    crate::util::par::parallel_map(scenarios, threads, |sc| {
+        let eff = effective_preset(sc, preset);
+        let report = ScenarioRunner::new(sc, preset).run();
+        let cfg = sc.recovery.clone().unwrap_or_default();
+        RecoverySweepRow {
+            scenario: sc.name.clone(),
+            compare: compare_arms(sc, &report, &eff, &cfg),
+        }
+    })
+}
+
+/// Deterministic serialization of a sweep — the schema of
+/// `bench_results/recovery_compare.json` (see `bench_results/README.md`).
+pub fn recovery_sweep_to_json(rows: &[RecoverySweepRow]) -> Json {
+    let mut arr = Json::arr();
+    for r in rows {
+        arr.push(r.to_json());
+    }
+    Json::obj().set("scenarios", arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::FaultAction;
+    use crate::scenario::{FaultPattern, Workload};
+
+    fn corpus() -> Vec<FaultScenario> {
+        vec![
+            FaultScenario {
+                name: "sweep-a".into(),
+                seed: 11,
+                iters: 4,
+                workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+                max_overhead: None,
+                cluster: None,
+                recovery: None, // swept with the default config anyway
+                patterns: vec![FaultPattern::OneShot {
+                    at: 1.5,
+                    nic: 0,
+                    action: FaultAction::FailNic,
+                }],
+            },
+            FaultScenario {
+                name: "sweep-b".into(),
+                seed: 12,
+                iters: 3,
+                workload: Workload::Serving { prompt_tokens: 2000 },
+                max_overhead: None,
+                cluster: None,
+                recovery: Some(RecoveryConfig { checkpoint_interval: 2, ..Default::default() }),
+                patterns: vec![],
+            },
+        ]
+    }
+
+    #[test]
+    fn sweep_covers_every_scenario_in_order() {
+        let corpus = corpus();
+        let rows = recovery_sweep(&corpus, &Preset::testbed(), 1);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].scenario, "sweep-a");
+        assert_eq!(rows[1].scenario, "sweep-b");
+        // Every row carries all three arms with the GPU-hours metric.
+        for row in &rows {
+            assert_eq!(row.compare.lossless.arm, "lossless");
+            assert_eq!(row.compare.checkpoint.arm, "checkpoint_restart");
+            assert_eq!(row.compare.fast.arm, "fast_failover");
+            assert!(row.compare.checkpoint.gpu_hours_wasted >= 0.0);
+        }
+        // The fault-carrying training scenario shows the paper ordering.
+        assert!(rows[0].compare.speedup_vs_checkpoint.unwrap() > 1.0);
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_thread_counts() {
+        let corpus = corpus();
+        let serial = recovery_sweep(&corpus, &Preset::testbed(), 1);
+        let parallel = recovery_sweep(&corpus, &Preset::testbed(), 4);
+        let js = recovery_sweep_to_json(&serial).pretty();
+        let jp = recovery_sweep_to_json(&parallel).pretty();
+        assert_eq!(js, jp, "sweep JSON must be bit-identical at any thread count");
+        assert!(js.contains("\"scenarios\""));
+        assert!(js.contains("\"speedup_vs_checkpoint\""));
+    }
+}

@@ -18,7 +18,7 @@
 pub mod runner;
 pub mod spec;
 
-pub use runner::{run_corpus, IterationRecord, ScenarioReport, ScenarioRunner};
+pub use runner::{effective_preset, run_corpus, IterationRecord, ScenarioReport, ScenarioRunner};
 pub use spec::{
     fabric_from_json, fabric_to_json, sample_multi_fault, ClusterSpec, FaultPattern,
     FaultScenario, ScenarioEvent, SwitchScenarioEvent, Workload,

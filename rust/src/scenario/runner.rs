@@ -28,6 +28,7 @@ use crate::collectives::exec::{FaultAction, FaultEvent, TimelineEntry};
 use crate::collectives::CollKind;
 use crate::config::Preset;
 use crate::fabric::{SwitchAction, SwitchFaultEvent, SwitchTarget};
+use crate::recovery::{compare_arms, RecoveryCompare};
 use crate::serve::{run_request_engine, summarize, EngineCfg, ServingSummary};
 use crate::sim::inference::{kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, InferModel};
 use crate::sim::training::{
@@ -102,6 +103,10 @@ pub struct ScenarioReport {
     /// to the JSON only when present, so every pre-existing golden trace
     /// (training, iteration-level serving) is byte-identical.
     pub serving: Option<ServingSummary>,
+    /// Three-arm recovery comparison (`crate::recovery`) — present only
+    /// when the scenario carries a `recovery` block. Appended to the JSON
+    /// only when present, so pre-recovery golden traces are byte-identical.
+    pub recovery: Option<RecoveryCompare>,
     /// Total kernel events popped across all iterations (perf counter —
     /// never serialized; `to_json` stays byte-identical to pre-kernel
     /// golden traces).
@@ -213,8 +218,12 @@ impl ScenarioReport {
             Some(m) => j.set("max_overhead", m),
             None => j,
         };
-        match &self.serving {
+        let j = match &self.serving {
             Some(s) => j.set("serving", s.to_json()),
+            None => j,
+        };
+        match &self.recovery {
+            Some(r) => j.set("recovery", r.to_json()),
             None => j,
         }
     }
@@ -284,10 +293,7 @@ impl<'a> ScenarioRunner<'a> {
     /// hardware model — so `--fabric leaf-spine` changes only the fabric,
     /// never the NIC/GPU speeds, of a flat scenario.
     pub fn new(scenario: &'a FaultScenario, preset: &Preset) -> ScenarioRunner<'a> {
-        let preset = match &scenario.cluster {
-            Some(c) if c.n_servers != preset.topo.n_servers => Preset::simai(c.n_servers),
-            _ => preset.clone(),
-        };
+        let preset = effective_preset(scenario, preset);
         let channels = preset.topo.nics_per_server;
         ScenarioRunner {
             scenario,
@@ -390,6 +396,7 @@ impl<'a> ScenarioRunner<'a> {
             lossless: true,
             max_overhead: self.scenario.max_overhead,
             serving: Some(summary),
+            recovery: None,
             events_popped: 0,
             domains_touched: 0,
             resident_resources: 0,
@@ -397,6 +404,14 @@ impl<'a> ScenarioRunner<'a> {
     }
 
     pub fn run(&self) -> ScenarioReport {
+        let mut report = self.run_workload();
+        if let Some(cfg) = &self.scenario.recovery {
+            report.recovery = Some(compare_arms(self.scenario, &report, &self.preset, cfg));
+        }
+        report
+    }
+
+    fn run_workload(&self) -> ScenarioReport {
         // Malformed scenarios (out-of-range NIC/rail/server/switch indices)
         // are a caller error; the CLI validates first for a clean message.
         if let Err(e) = self.scenario.validate(&self.preset.topo) {
@@ -582,6 +597,7 @@ impl<'a> ScenarioRunner<'a> {
             lossless: records.iter().all(|r| r.lossless != Some(false)),
             max_overhead: self.scenario.max_overhead,
             serving: None,
+            recovery: None,
             events_popped: records.iter().map(|r| r.events_popped).sum(),
             domains_touched: records.iter().map(|r| r.domains_touched).sum(),
             resident_resources: records
@@ -610,6 +626,20 @@ pub fn run_corpus(
     threads: usize,
 ) -> Vec<ScenarioReport> {
     crate::util::par::parallel_map(scenarios, threads, |sc| ScenarioRunner::new(sc, preset).run())
+}
+
+/// The preset a scenario actually runs on: a scenario carrying a
+/// [`super::spec::ClusterSpec`] with a *different* server count runs on
+/// the SimAI preset of that size; otherwise the default preset is kept
+/// (see [`ScenarioRunner::new`]). Exposed so overlays that post-process a
+/// report — the recovery sweep in [`crate::recovery::sweep`] — price
+/// cluster-scaling costs (communicator re-init, GPU-hours) on the same
+/// topology the report was produced with.
+pub fn effective_preset(scenario: &FaultScenario, preset: &Preset) -> Preset {
+    match &scenario.cluster {
+        Some(c) if c.n_servers != preset.topo.n_servers => Preset::simai(c.n_servers),
+        _ => preset.clone(),
+    }
 }
 
 /// Ground-truth usability update for the no-crash-while-a-path-exists
@@ -658,6 +688,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns,
         }
     }
@@ -753,6 +784,7 @@ mod tests {
             workload: Workload::Serving { prompt_tokens: 2000 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 1,
@@ -785,6 +817,7 @@ mod tests {
             },
             max_overhead: None,
             cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
+            recovery: None,
             patterns: vec![FaultPattern::ReplicaDown {
                 replica: 1,
                 at: 0.3,
@@ -828,6 +861,7 @@ mod tests {
                     ..LeafSpineCfg::default()
                 }),
             }),
+            recovery: None,
             patterns,
         }
     }
@@ -867,6 +901,55 @@ mod tests {
         let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
         assert!(rep.switch_events.is_empty());
         assert!(!rep.to_json().pretty().contains("switch_events"));
+    }
+
+    #[test]
+    fn recovery_block_attaches_the_three_arm_comparison() {
+        use crate::recovery::RecoveryConfig;
+        let mut sc = dp16(
+            vec![FaultPattern::OneShot { at: 1.5, nic: 0, action: FaultAction::FailNic }],
+            4,
+            7,
+        );
+        sc.recovery = Some(RecoveryConfig::default());
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        let cmp = rep.recovery.as_ref().expect("recovery block requested");
+        assert_eq!(cmp.n_gpus, 16);
+        assert_eq!(cmp.lossless.arm, "lossless");
+        // A mid-flight NIC failure: the lossless run pays a migration, the
+        // checkpoint arm a full rollback — the paper-shaped ordering.
+        assert!(cmp.lossless.wasted_time > 0.0);
+        assert!(cmp.checkpoint.wasted_time > cmp.lossless.wasted_time);
+        let j = rep.to_json().pretty();
+        assert!(j.contains("\"recovery\""));
+        assert!(j.contains("\"checkpoint_restart\""));
+        assert!(j.contains("\"fast_failover\""));
+        assert!(j.contains("\"gpu_hours_wasted\""));
+    }
+
+    #[test]
+    fn reports_without_recovery_block_omit_the_key() {
+        let sc = dp16(
+            vec![FaultPattern::OneShot { at: 1.5, nic: 0, action: FaultAction::FailNic }],
+            3,
+            7,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.recovery.is_none());
+        assert!(!rep.to_json().pretty().contains("\"recovery\""));
+    }
+
+    #[test]
+    fn effective_preset_matches_runner_override() {
+        use crate::fabric::FabricConfig;
+        use crate::scenario::spec::ClusterSpec;
+        let mut sc = dp16(vec![], 2, 1);
+        assert_eq!(effective_preset(&sc, &Preset::testbed()).topo.n_servers, 2);
+        sc.cluster = Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() });
+        let eff = effective_preset(&sc, &Preset::testbed());
+        assert_eq!(eff.topo.n_servers, 4);
+        assert_eq!(eff.name, Preset::simai(4).name);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use crate::collectives::exec::FaultAction;
 use crate::fabric::{Fabric, FabricConfig, FabricMode, LeafSpineCfg, SwitchAction, SwitchTarget};
+use crate::recovery::RecoveryConfig;
 use crate::serve::ArrivalSpec;
 use crate::topology::{NicId, TopologyConfig};
 use crate::util::{Json, Rng};
@@ -740,6 +741,12 @@ pub struct FaultScenario {
     /// Optional cluster override: server count + inter-server fabric.
     /// `None` = the runner's default preset over the flat fabric.
     pub cluster: Option<ClusterSpec>,
+    /// Optional job-recovery comparison (`crate::recovery`): when present,
+    /// the runner evaluates the checkpoint/restart and fast-failover
+    /// baseline arms against the lossless run and the report carries a
+    /// `recovery` block. `None` = no arm evaluation and no report key, so
+    /// pre-recovery golden traces are byte-identical.
+    pub recovery: Option<RecoveryConfig>,
     pub patterns: Vec<FaultPattern>,
 }
 
@@ -879,6 +886,9 @@ impl FaultScenario {
     /// by the runner (panics with the message on library misuse) and by the
     /// CLI (reported as a clean error for user-authored scenario files).
     pub fn validate(&self, topo: &TopologyConfig) -> Result<(), String> {
+        if let Some(cfg) = &self.recovery {
+            cfg.validate().map_err(|e| format!("scenario {:?}: {e}", self.name))?;
+        }
         if let Some(cluster) = &self.cluster {
             if cluster.n_servers != topo.n_servers {
                 return Err(format!(
@@ -987,6 +997,10 @@ impl FaultScenario {
             Some(c) => j.set("cluster", c.to_json()),
             None => j,
         };
+        let j = match &self.recovery {
+            Some(r) => j.set("recovery", r.to_json()),
+            None => j,
+        };
         j.set("patterns", patterns)
     }
 
@@ -1008,6 +1022,10 @@ impl FaultScenario {
             max_overhead: j.get("max_overhead").and_then(Json::as_f64),
             cluster: match j.get("cluster") {
                 Some(c) => Some(ClusterSpec::from_json(c)?),
+                None => None,
+            },
+            recovery: match j.get("recovery") {
+                Some(r) => Some(RecoveryConfig::from_json(r)?),
                 None => None,
             },
             patterns,
@@ -1072,6 +1090,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![
                 FaultPattern::Flapping {
                     nic: 0,
@@ -1110,6 +1129,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![FaultPattern::Flapping {
                 nic: 0,
                 start: 0.5,
@@ -1131,6 +1151,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![FaultPattern::CorrelatedRail {
                 rail: 3,
                 servers: vec![0, 1],
@@ -1160,6 +1181,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.8,
                 count: 4,
@@ -1192,6 +1214,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![FaultPattern::DegradeRamp {
                 nic: 2,
                 start: 1.0,
@@ -1221,6 +1244,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![p],
         };
         let bad_nic =
@@ -1255,6 +1279,7 @@ mod tests {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.5,
                 count: 3,
@@ -1289,6 +1314,7 @@ mod tests {
             workload: Workload::Serving { prompt_tokens: 2000 },
             max_overhead: Some(2.5),
             cluster: None,
+            recovery: None,
             patterns: vec![
                 FaultPattern::OneShot { at: 1.35, nic: 0, action: FaultAction::Degrade(0.4) },
                 FaultPattern::Flapping {
@@ -1330,6 +1356,41 @@ mod tests {
         assert_eq!(sc, back);
     }
 
+    #[test]
+    fn recovery_block_roundtrips_and_gates_serialization() {
+        let mut sc = dp_sc();
+        assert!(
+            !sc.to_json().pretty().contains("\"recovery\""),
+            "no recovery block ⇒ no recovery key"
+        );
+        sc.recovery = Some(RecoveryConfig { checkpoint_interval: 4, ..RecoveryConfig::default() });
+        let s = sc.to_json().pretty();
+        assert!(s.contains("\"recovery\""));
+        let back = FaultScenario::from_json_str(&s).unwrap();
+        assert_eq!(sc, back);
+        // A malformed recovery block fails validation with a clean message.
+        sc.recovery = Some(RecoveryConfig { checkpoint_interval: 0, ..RecoveryConfig::default() });
+        let err = sc.validate(&topo()).unwrap_err();
+        assert!(err.contains("checkpoint_interval"), "{err}");
+    }
+
+    fn dp_sc() -> FaultScenario {
+        FaultScenario {
+            name: "rec".into(),
+            seed: 17,
+            iters: 4,
+            workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
+            max_overhead: None,
+            cluster: None,
+            recovery: None,
+            patterns: vec![FaultPattern::OneShot {
+                at: 1.5,
+                nic: 0,
+                action: FaultAction::FailNic,
+            }],
+        }
+    }
+
     fn request_serving_scenario(replicas: usize, patterns: Vec<FaultPattern>) -> FaultScenario {
         FaultScenario {
             name: "rs".into(),
@@ -1344,6 +1405,7 @@ mod tests {
             },
             max_overhead: None,
             cluster: Some(ClusterSpec { n_servers: 2 * replicas, fabric: FabricConfig::ideal() }),
+            recovery: None,
             patterns,
         }
     }
@@ -1423,6 +1485,7 @@ mod tests {
             workload: Workload::Training { tp: 8, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
             max_overhead: None,
             cluster: cluster16(),
+            recovery: None,
             patterns,
         }
     }

@@ -76,6 +76,14 @@ pub struct ServingLedger {
 }
 
 impl ServingLedger {
+    /// Compute seconds thrown away by replica deaths: discarded prefill
+    /// plus discarded decode tokens at `decode_token_s` seconds each (the
+    /// per-token share of a batch decode step). This is the lossless arm's
+    /// wasted-work measure for request-serving recovery comparisons.
+    pub fn wasted_compute_s(&self, decode_token_s: f64) -> f64 {
+        self.wasted_prefill_s + self.wasted_decode_tokens as f64 * decode_token_s
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("completed", self.completed)
@@ -172,6 +180,17 @@ mod tests {
         assert!((r.tpot().unwrap() - 0.1).abs() < 1e-12);
         let single = RequestRecord { tokens: 1, ..r };
         assert_eq!(single.tpot(), None);
+    }
+
+    #[test]
+    fn wasted_compute_counts_prefill_and_decode_tokens() {
+        let ledger = ServingLedger {
+            wasted_prefill_s: 1.5,
+            wasted_decode_tokens: 200,
+            ..ServingLedger::default()
+        };
+        assert!((ledger.wasted_compute_s(0.01) - (1.5 + 2.0)).abs() < 1e-12);
+        assert_eq!(ServingLedger::default().wasted_compute_s(0.01), 0.0);
     }
 
     #[test]

@@ -16,8 +16,8 @@ pub use montecarlo::{
     scenario_for_k, MonteCarloPoint,
 };
 pub use training::{
-    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs, scenario_main_collective,
-    scenario_training_iteration, simai_compiled_iteration, simai_iteration, testbed_training,
-    training_groups, CommVolumes, ModelConfig, ParallelConfig, TrainMethod, TrainResult,
-    TrainingGroups,
+    analytic_allreduce_time, comm_volumes, compute_time, overhead_vs,
+    scenario_collectives_per_iteration, scenario_main_collective, scenario_training_iteration,
+    simai_compiled_iteration, simai_iteration, testbed_training, training_groups, CommVolumes,
+    ModelConfig, ParallelConfig, TrainMethod, TrainResult, TrainingGroups,
 };

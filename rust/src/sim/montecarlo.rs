@@ -44,6 +44,7 @@ pub fn scenario_for_k(name: &str, k: usize, seed: u64) -> FaultScenario {
         workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 24 },
         max_overhead: None,
         cluster: None,
+        recovery: None,
         patterns: vec![FaultPattern::RandomMultiFault { k, at: 1.5 }],
     }
 }

@@ -171,6 +171,15 @@ pub fn scenario_main_collective<'g>(
     }
 }
 
+/// Cross-rank collective launches per scenario training iteration — the
+/// count the recovery arms charge AdapCC's per-collective heartbeat to.
+/// Mirrors [`scenario_training_iteration`] exactly: 4 TP AllReduces when
+/// `tp > 1`, 2 PP boundary crossings when `pp > 1 && dp > 1`, plus the
+/// dominant main collective.
+pub fn scenario_collectives_per_iteration(tp: usize, dp: usize, pp: usize) -> usize {
+    (if tp > 1 { 4 } else { 0 }) + (if pp > 1 && dp > 1 { 2 } else { 0 }) + 1
+}
+
 /// One scenario-driven training iteration over live process groups: TP
 /// AllReduce (4 calls) and PP boundary SendRecv (2 crossings) are timed
 /// under the standing plan-time health state, then the dominant
@@ -568,6 +577,18 @@ mod tests {
 
     fn tp8pp2() -> ParallelConfig {
         ParallelConfig { dp: 1, tp: 8, pp: 2, global_batch: 64, microbatch: 2 }
+    }
+
+    #[test]
+    fn collectives_per_iteration_matches_iteration_structure() {
+        // Pure DP: just the main DP AllReduce.
+        assert_eq!(scenario_collectives_per_iteration(1, 16, 1), 1);
+        // TP adds its 4 side AllReduces.
+        assert_eq!(scenario_collectives_per_iteration(8, 2, 1), 5);
+        // PP crossings only run alongside DP (the main is the PP SendRecv
+        // otherwise).
+        assert_eq!(scenario_collectives_per_iteration(8, 1, 2), 5);
+        assert_eq!(scenario_collectives_per_iteration(8, 2, 2), 7);
     }
 
     #[test]

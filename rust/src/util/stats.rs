@@ -290,6 +290,62 @@ mod tests {
     }
 
     #[test]
+    fn summary_of_empty_samples_uses_fold_seeds() {
+        // The empty distribution keeps each accessor's seed convention:
+        // NaN means "no samples", the extrema are the fold identities.
+        let sum = Samples::new().summary();
+        assert_eq!(sum.n, 0);
+        assert!(sum.mean.is_nan());
+        assert!(sum.p50.is_nan() && sum.p95.is_nan() && sum.p99.is_nan());
+        assert_eq!(sum.min, f64::INFINITY);
+        assert_eq!(sum.max, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn summary_of_single_sample_is_that_sample_everywhere() {
+        let mut s = Samples::from_vec(vec![7.5]);
+        let sum = s.summary();
+        assert_eq!(sum.n, 1);
+        for v in [sum.mean, sum.p50, sum.p95, sum.p99, sum.min, sum.max] {
+            assert_eq!(v, 7.5);
+        }
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn all_equal_samples_collapse_every_percentile() {
+        let mut s = Samples::from_vec(vec![3.0; 17]);
+        for p in [0.0, 12.5, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile(p), 3.0, "p{p}");
+        }
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn percentile_extremes_hit_min_and_max_exactly() {
+        // p0/p100 must return the extrema bit-for-bit — no interpolation
+        // residue — on unsorted, negative-valued input.
+        let mut s = Samples::from_vec(vec![10.0, -2.0, 4.0, 8.0, 0.5]);
+        assert_eq!(s.percentile(0.0), s.min());
+        assert_eq!(s.percentile(100.0), s.max());
+        assert_eq!(s.percentile(0.0), -2.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_clamps_zero_bins_to_one() {
+        let h = Samples::from_vec(vec![1.0, 2.0]).histogram(0);
+        assert_eq!((h.lo, h.hi), (1.0, 2.0));
+        assert_eq!(h.counts, vec![2]);
+    }
+
+    #[test]
+    fn sorted_percentile_and_geomean_of_empty_are_nan() {
+        assert!(percentile_of_sorted(&[], 50.0).is_nan());
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
     fn mean_max_min_fold_conventions() {
         let (m, hi, lo) = mean_max_min(&[1.0, 3.0]);
         assert!((m - 2.0).abs() < 1e-12);

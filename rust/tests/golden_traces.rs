@@ -152,6 +152,65 @@ fn golden_serving_replica_down() {
 }
 
 #[test]
+fn golden_training_ckpt_rollback() {
+    golden("training_ckpt_rollback");
+}
+
+#[test]
+fn golden_training_fast_failover() {
+    golden("training_fast_failover");
+}
+
+#[test]
+fn golden_serving_dejavu_restart() {
+    golden("serving_dejavu_restart");
+}
+
+#[test]
+fn recovery_scenarios_carry_the_recovery_block() {
+    // The three recovery scenarios opt in via their "recovery" key, so
+    // their reports — and goldens — must carry the three-arm comparison.
+    for name in ["training_ckpt_rollback", "training_fast_failover", "serving_dejavu_restart"] {
+        let sc = load(name);
+        assert!(sc.recovery.is_some(), "{name} must declare a recovery block");
+        let trace = trace_of(&sc);
+        for key in ["\"recovery\"", "\"checkpoint_restart\"", "\"fast_failover\"", "\"gpu_hours_wasted\""]
+        {
+            assert!(trace.contains(key), "{name}: trace missing {key}");
+        }
+    }
+}
+
+#[test]
+fn pre_recovery_fixtures_carry_no_recovery_key() {
+    // The recovery report key is additive-only: scenarios without a
+    // "recovery" block — the entire pre-existing corpus — must keep their
+    // fixtures byte-identical, which in particular means no "recovery"
+    // key ever appears in them.
+    let recovery_scenarios =
+        ["training_ckpt_rollback", "training_fast_failover", "serving_dejavu_restart"];
+    let dir = repo_root().join("rust/tests/fixtures");
+    let mut checked = 0usize;
+    for ent in fs::read_dir(&dir).unwrap() {
+        let path = ent.unwrap().path();
+        let fname = path.file_name().unwrap().to_string_lossy().into_owned();
+        let Some(stem) = fname.strip_suffix(".golden.json") else { continue };
+        if recovery_scenarios.contains(&stem) {
+            continue;
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(
+            !text.contains("\"recovery\""),
+            "{fname}: pre-recovery fixture must not carry a recovery key"
+        );
+        checked += 1;
+    }
+    // Fixtures bootstrap on first run; once the corpus goldens exist this
+    // guards all of them.
+    eprintln!("checked {checked} pre-recovery fixtures");
+}
+
+#[test]
 fn corpus_covers_required_scenario_kinds() {
     // The acceptance floor: ≥6 distinct scenario kinds in the committed
     // corpus, including flapping, correlated-rail and a fluctuation ramp.

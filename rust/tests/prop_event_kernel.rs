@@ -328,6 +328,7 @@ fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: match i {
                 0 => vec![FaultPattern::OneShot {
                     at: 1.5,
@@ -353,6 +354,7 @@ fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
                 ..LeafSpineCfg::default()
             }),
         }),
+        recovery: None,
         patterns: vec![FaultPattern::LeafSwitchDown {
             pod: 0,
             rail: 0,

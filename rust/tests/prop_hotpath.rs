@@ -299,6 +299,7 @@ fn parallel_scenario_corpus_matches_serial() {
             workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 20 },
             max_overhead: None,
             cluster: None,
+            recovery: None,
             patterns: match i {
                 0 => vec![],
                 1 => vec![FaultPattern::OneShot {

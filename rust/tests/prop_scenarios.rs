@@ -65,6 +65,7 @@ fn random_scenario(rng: &mut Rng) -> FaultScenario {
         workload: Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
         max_overhead: None,
         cluster: None,
+        recovery: None,
         patterns,
     }
 }
