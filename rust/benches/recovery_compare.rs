@@ -1,23 +1,29 @@
-//! Corpus-wide three-arm recovery comparison: every committed scenario
-//! evaluated under R²CCL lossless failover, checkpoint/restart, and
-//! FFTrainer-style fast failover, with wasted GPU-hours per arm and the
-//! paper-style speedup ratios.
+//! Corpus-wide four-arm recovery comparison: every committed scenario
+//! evaluated under R²CCL lossless failover, R²CCL elastic shrink,
+//! checkpoint/restart, and FFTrainer-style fast failover, with wasted
+//! GPU-hours per arm and the paper-style speedup ratios.
 //!
 //! Writes `bench_results/recovery_compare.json` (schema in
 //! `bench_results/README.md`), reproducible via the `recovery-compare`
-//! CLI subcommand. `BENCH_QUICK=1` restricts to the three recovery
-//! scenarios — the CI `recovery-smoke` job's shape.
+//! CLI subcommand. `BENCH_QUICK=1` restricts to the four recovery
+//! scenarios — the CI `recovery-smoke`/`elastic-smoke` jobs' shape.
 //!
-//! Asserts the acceptance floor: on the fault-heavy training scenarios
-//! the lossless-vs-checkpoint speedup exceeds 10×.
+//! Asserts the acceptance floors: on the fault-heavy training scenarios
+//! the lossless-vs-checkpoint speedup exceeds 10×, and on the
+//! whole-server-death scenario the elastic arm wastes fewer GPU-hours
+//! than checkpoint/restart.
 
 use r2ccl::bench::Table;
 use r2ccl::config::Preset;
 use r2ccl::recovery::{recovery_sweep, recovery_sweep_to_json};
 use r2ccl::scenario::FaultScenario;
 
-const RECOVERY_SCENARIOS: [&str; 3] =
-    ["training_ckpt_rollback", "training_fast_failover", "serving_dejavu_restart"];
+const RECOVERY_SCENARIOS: [&str; 4] = [
+    "training_ckpt_rollback",
+    "training_fast_failover",
+    "serving_dejavu_restart",
+    "elastic_server_down",
+];
 
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok();
@@ -53,7 +59,18 @@ fn main() {
 
     let mut table = Table::new(
         "Recovery arms: wasted GPU-hours and lossless speedup per scenario",
-        &["scenario", "gpus", "lossless gh", "ckpt gh", "fast gh", "restarts", "x ckpt", "x fast"],
+        &[
+            "scenario",
+            "gpus",
+            "lossless gh",
+            "elastic gh",
+            "ckpt gh",
+            "fast gh",
+            "restarts",
+            "x elast",
+            "x ckpt",
+            "x fast",
+        ],
     );
     let ratio = |v: Option<f64>| match v {
         Some(x) => format!("{x:.1}x"),
@@ -65,9 +82,11 @@ fn main() {
             row.scenario.clone(),
             c.n_gpus.to_string(),
             format!("{:.4}", c.lossless.gpu_hours_wasted),
+            format!("{:.4}", c.elastic.gpu_hours_wasted),
             format!("{:.4}", c.checkpoint.gpu_hours_wasted),
             format!("{:.4}", c.fast.gpu_hours_wasted),
             c.checkpoint.restarts.to_string(),
+            ratio(c.speedup_vs_elastic),
             ratio(c.speedup_vs_checkpoint),
             ratio(c.speedup_vs_fast),
         ]);
@@ -87,6 +106,25 @@ fn main() {
             .unwrap_or_else(|| panic!("{name}: lossless arm wasted nothing to compare"));
         assert!(speedup > 10.0, "{name}: lossless-vs-checkpoint speedup {speedup:.1}x <= 10x");
         println!("{name}: lossless-vs-checkpoint speedup {speedup:.1}x (> 10x)");
+    }
+
+    // Elastic acceptance floor: shrinking past a whole-server death must
+    // waste fewer GPU-hours than rolling the job back to a checkpoint.
+    if let Some(row) = rows.iter().find(|r| r.scenario == "elastic_server_down") {
+        let c = &row.compare;
+        assert!(
+            c.elastic.gpu_hours_wasted < c.checkpoint.gpu_hours_wasted,
+            "elastic_server_down: elastic {} gh >= checkpoint {} gh",
+            c.elastic.gpu_hours_wasted,
+            c.checkpoint.gpu_hours_wasted
+        );
+        assert!(!c.elastic.crashed, "elastic_server_down: the elastic arm must survive");
+        println!(
+            "elastic_server_down: elastic {:.4} gh vs checkpoint {:.4} gh",
+            c.elastic.gpu_hours_wasted, c.checkpoint.gpu_hours_wasted
+        );
+    } else {
+        panic!("elastic_server_down missing from the corpus");
     }
 
     let _ = std::fs::create_dir_all("bench_results");

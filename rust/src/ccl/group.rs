@@ -50,6 +50,51 @@ use super::health::HealthState;
 use super::plan_cache::{PlanCache, PlanKey};
 use super::StrategyChoice;
 
+/// Kind of one elastic membership transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElasticKind {
+    /// Servers left the active membership (whole-server loss).
+    Shrink,
+    /// Servers (re)joined the active membership (repair / scale-up).
+    Expand,
+    /// A registered spare replaced a dead active server in one transition.
+    Promote,
+}
+
+impl ElasticKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ElasticKind::Shrink => "shrink",
+            ElasticKind::Expand => "expand",
+            ElasticKind::Promote => "promote",
+        }
+    }
+}
+
+/// Record of one elastic membership transition. Each transition bumps the
+/// failure epoch exactly once — `epoch` is the world epoch *after* the
+/// transition, so the plan cache is invalidated exactly once per
+/// membership change regardless of how many servers move.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ElasticTransition {
+    pub kind: ElasticKind,
+    /// Servers that moved. For `Promote` this is `[dead, spare]`.
+    pub servers: Vec<ServerId>,
+    /// World failure epoch after the transition.
+    pub epoch: u64,
+    /// Active-server count after the transition.
+    pub active_after: usize,
+}
+
+/// Elastic membership state: which servers are currently active (own
+/// ranks in elastic layouts), which inactive servers are registered as
+/// promotable spares, and the log of every transition so far.
+struct MembershipState {
+    active: Vec<bool>,
+    spares: Vec<ServerId>,
+    log: Vec<ElasticTransition>,
+}
+
 /// A 3D parallelism layout over a world of `tp × dp × pp` ranks, mapped to
 /// GPUs in Megatron's default order: tensor-parallel innermost (contiguous
 /// ranks — intra-server for tp ≤ gpus_per_server), then data-parallel, then
@@ -143,6 +188,9 @@ struct WorldShared {
     cache: RefCell<PlanCache>,
     /// Interned rank sets → group id (group identity is the rank set).
     group_ids: RefCell<HashMap<Vec<GpuId>, u64>>,
+    /// Elastic membership: active servers, registered spares, transition
+    /// log. All servers are active at construction.
+    membership: RefCell<MembershipState>,
 }
 
 impl WorldShared {
@@ -195,6 +243,11 @@ impl CommWorld {
     ) -> CommWorld {
         let topo = Topology::build_with_fabric(&preset.topo, fabric);
         let routing = Arc::new(ChannelRouting::default_rails(&topo, channels));
+        let membership = MembershipState {
+            active: vec![true; topo.n_servers()],
+            spares: Vec::new(),
+            log: Vec::new(),
+        };
         CommWorld {
             shared: Rc::new(WorldShared {
                 topo,
@@ -208,6 +261,7 @@ impl CommWorld {
                 health: RefCell::new(None),
                 cache: RefCell::new(PlanCache::default()),
                 group_ids: RefCell::new(HashMap::new()),
+                membership: RefCell::new(membership),
             }),
         }
     }
@@ -431,6 +485,242 @@ impl CommWorld {
     /// so plans (and plan-cache entries) are shared.
     pub fn replica_pair_group(&self, r: usize) -> CommGroup {
         self.group(&self.replica_ranks(r))
+    }
+
+    // ---- elastic membership -------------------------------------------
+
+    /// Hold `spares` out of the active membership at bootstrap and register
+    /// them as promotable spares (in the given order). Elastic layouts then
+    /// fill only the remaining active servers; [`CommWorld::promote_spare`]
+    /// swaps a spare in for a dead server later without changing the world
+    /// size. Not logged as a transition — it is initial-state setup, but it
+    /// does bump the epoch (once) when it changes the membership.
+    pub fn set_spares(&mut self, spares: &[ServerId]) {
+        if spares.is_empty() {
+            return;
+        }
+        let n = self.shared.topo.n_servers();
+        {
+            let mut m = self.shared.membership.borrow_mut();
+            for &s in spares {
+                assert!(s < n, "spare server {s} out of range (n_servers {n})");
+                assert!(m.active[s], "server {s} is already inactive or a duplicate spare");
+                m.active[s] = false;
+                m.spares.push(s);
+            }
+            assert!(
+                m.active.iter().any(|&a| a),
+                "cannot hold every server out as a spare"
+            );
+        }
+        self.shared.bump_epoch();
+    }
+
+    /// Shrink the active membership around `dead_servers`: the surviving
+    /// GPUs are re-ranked (see [`CommWorld::active_ranks`]) and every
+    /// elastic layout group rebuilt afterwards excludes the dead servers.
+    /// The failure epoch — and with it the plan cache — is bumped exactly
+    /// once for the whole transition, however many servers die together.
+    pub fn shrink(&mut self, dead_servers: &[ServerId]) -> Result<ElasticTransition, String> {
+        if dead_servers.is_empty() {
+            return Err("shrink of zero servers".into());
+        }
+        let n = self.shared.topo.n_servers();
+        let tr = {
+            let mut m = self.shared.membership.borrow_mut();
+            let mut seen = Vec::new();
+            for &s in dead_servers {
+                if s >= n {
+                    return Err(format!("server {s} out of range (n_servers {n})"));
+                }
+                if !m.active[s] {
+                    return Err(format!("server {s} is not active"));
+                }
+                if seen.contains(&s) {
+                    return Err(format!("server {s} listed twice"));
+                }
+                seen.push(s);
+            }
+            if m.active.iter().filter(|&&a| a).count() == seen.len() {
+                return Err("shrink would leave no active server".into());
+            }
+            for &s in &seen {
+                m.active[s] = false;
+            }
+            let mut servers = seen;
+            servers.sort_unstable();
+            ElasticTransition {
+                kind: ElasticKind::Shrink,
+                servers,
+                epoch: self.shared.epoch.get() + 1,
+                active_after: m.active.iter().filter(|&&a| a).count(),
+            }
+        };
+        self.shared.bump_epoch();
+        self.shared.membership.borrow_mut().log.push(tr.clone());
+        Ok(tr)
+    }
+
+    /// Expand the active membership with `new_servers` (currently inactive
+    /// servers: repaired ones, or registered spares — which are then
+    /// unregistered). Same exactly-one-epoch-bump discipline as `shrink`.
+    pub fn expand(&mut self, new_servers: &[ServerId]) -> Result<ElasticTransition, String> {
+        if new_servers.is_empty() {
+            return Err("expand of zero servers".into());
+        }
+        let n = self.shared.topo.n_servers();
+        let tr = {
+            let mut m = self.shared.membership.borrow_mut();
+            let mut seen = Vec::new();
+            for &s in new_servers {
+                if s >= n {
+                    return Err(format!("server {s} out of range (n_servers {n})"));
+                }
+                if m.active[s] {
+                    return Err(format!("server {s} is already active"));
+                }
+                if seen.contains(&s) {
+                    return Err(format!("server {s} listed twice"));
+                }
+                seen.push(s);
+            }
+            for &s in &seen {
+                m.active[s] = true;
+                m.spares.retain(|&sp| sp != s);
+            }
+            let mut servers = seen;
+            servers.sort_unstable();
+            ElasticTransition {
+                kind: ElasticKind::Expand,
+                servers,
+                epoch: self.shared.epoch.get() + 1,
+                active_after: m.active.iter().filter(|&&a| a).count(),
+            }
+        };
+        self.shared.bump_epoch();
+        self.shared.membership.borrow_mut().log.push(tr.clone());
+        Ok(tr)
+    }
+
+    /// Promote the first registered spare in place of dead active server
+    /// `dead`: one transition, one epoch bump, world size unchanged. The
+    /// transition's `servers` field is `[dead, spare]`.
+    pub fn promote_spare(&mut self, dead: ServerId) -> Result<ElasticTransition, String> {
+        let n = self.shared.topo.n_servers();
+        let tr = {
+            let mut m = self.shared.membership.borrow_mut();
+            if dead >= n {
+                return Err(format!("server {dead} out of range (n_servers {n})"));
+            }
+            if !m.active[dead] {
+                return Err(format!("server {dead} is not active"));
+            }
+            if m.spares.is_empty() {
+                return Err("no spare server registered".into());
+            }
+            let spare = m.spares.remove(0);
+            m.active[dead] = false;
+            m.active[spare] = true;
+            ElasticTransition {
+                kind: ElasticKind::Promote,
+                servers: vec![dead, spare],
+                epoch: self.shared.epoch.get() + 1,
+                active_after: m.active.iter().filter(|&&a| a).count(),
+            }
+        };
+        self.shared.bump_epoch();
+        self.shared.membership.borrow_mut().log.push(tr.clone());
+        Ok(tr)
+    }
+
+    /// Active servers, ascending.
+    pub fn active_servers(&self) -> Vec<ServerId> {
+        let m = self.shared.membership.borrow();
+        (0..self.shared.topo.n_servers()).filter(|&s| m.active[s]).collect()
+    }
+
+    pub fn n_active_servers(&self) -> usize {
+        self.shared.membership.borrow().active.iter().filter(|&&a| a).count()
+    }
+
+    pub fn is_active(&self, server: ServerId) -> bool {
+        let m = self.shared.membership.borrow();
+        server < m.active.len() && m.active[server]
+    }
+
+    /// Registered spare servers in promotion order.
+    pub fn spare_servers(&self) -> Vec<ServerId> {
+        self.shared.membership.borrow().spares.clone()
+    }
+
+    /// The elastic transition log (shrinks, expands, promotions) since
+    /// construction, in order.
+    pub fn elastic_log(&self) -> Vec<ElasticTransition> {
+        self.shared.membership.borrow().log.clone()
+    }
+
+    /// The surviving-GPU re-ranking: elastic rank `i` maps to global GPU
+    /// `active_ranks()[i]`. Active servers contribute their GPUs in global
+    /// order, so with every server active this is the identity map and
+    /// elastic layout groups equal the plain layout groups bit-for-bit.
+    pub fn active_ranks(&self) -> Vec<GpuId> {
+        let g = self.shared.topo.cfg.gpus_per_server;
+        let m = self.shared.membership.borrow();
+        let mut out = Vec::new();
+        for s in 0..self.shared.topo.n_servers() {
+            if m.active[s] {
+                out.extend(s * g..(s + 1) * g);
+            }
+        }
+        out
+    }
+
+    pub fn n_active_ranks(&self) -> usize {
+        self.n_active_servers() * self.shared.topo.cfg.gpus_per_server
+    }
+
+    /// The group covering every rank of the active membership.
+    pub fn active_group(&self) -> CommGroup {
+        self.group(&self.active_ranks())
+    }
+
+    fn check_elastic_layout(&self, layout: &ParallelLayout) {
+        assert_eq!(
+            layout.n_ranks(),
+            self.n_active_ranks(),
+            "parallel layout must exactly fill the active membership"
+        );
+    }
+
+    fn remap_elastic(&self, sets: Vec<Vec<usize>>) -> Vec<CommGroup> {
+        let act = self.active_ranks();
+        sets.into_iter()
+            .map(|ranks| {
+                let mapped: Vec<GpuId> = ranks.into_iter().map(|r| act[r]).collect();
+                self.group(&mapped)
+            })
+            .collect()
+    }
+
+    /// Tensor-parallel groups of a layout over the *active* membership:
+    /// layout ranks are mapped through the surviving-GPU re-ranking.
+    pub fn tp_groups_elastic(&self, layout: &ParallelLayout) -> Vec<CommGroup> {
+        self.check_elastic_layout(layout);
+        self.remap_elastic(layout.tp_ranks())
+    }
+
+    /// Data-parallel replica groups over the active membership (DP-shrink:
+    /// after a shrink, rebuild with `dp` reduced so the layout fills the
+    /// surviving ranks — replicas are redistributed, not restarted).
+    pub fn dp_groups_elastic(&self, layout: &ParallelLayout) -> Vec<CommGroup> {
+        self.check_elastic_layout(layout);
+        self.remap_elastic(layout.dp_ranks())
+    }
+
+    /// Pipeline stage-pair groups over the active membership.
+    pub fn pp_pairs_elastic(&self, layout: &ParallelLayout) -> Vec<CommGroup> {
+        self.check_elastic_layout(layout);
+        self.remap_elastic(layout.pp_pair_ranks())
     }
 }
 
@@ -995,5 +1285,127 @@ mod tests {
         // The *existing* handle sees the new epoch.
         let (_, s1) = g.compile(CollKind::AllGather, 1 << 22, 0, StrategyChoice::Auto);
         assert_eq!(s1, Strategy::Balance);
+    }
+
+    #[test]
+    fn shrink_bumps_epoch_exactly_once_and_reranks_survivors() {
+        let mut w = CommWorld::new(&Preset::simai(4), 8);
+        assert_eq!(w.active_servers(), vec![0, 1, 2, 3]);
+        let e0 = w.epoch();
+        let tr = w.shrink(&[1]).unwrap();
+        assert_eq!(tr.kind, ElasticKind::Shrink);
+        assert_eq!(tr.servers, vec![1]);
+        assert_eq!(tr.active_after, 3);
+        assert_eq!(w.epoch(), e0 + 1, "one membership change = one epoch bump");
+        assert_eq!(tr.epoch, w.epoch());
+        // Surviving GPUs re-rank contiguously around the hole.
+        let act = w.active_ranks();
+        assert_eq!(act.len(), 24);
+        assert_eq!(act[7], 7);
+        assert_eq!(act[8], 16, "rank 8 re-maps to server 2's first GPU");
+        // Multi-server shrink is still a single transition / single bump.
+        let e1 = w.epoch();
+        let tr2 = w.shrink(&[3, 0]).unwrap();
+        assert_eq!(tr2.servers, vec![0, 3], "recorded sorted");
+        assert_eq!(w.epoch(), e1 + 1);
+        assert_eq!(w.active_servers(), vec![2]);
+        // Shrinking the last server is rejected.
+        assert!(w.shrink(&[2]).is_err());
+        // As is re-shrinking a dead one.
+        assert!(w.shrink(&[1]).is_err());
+    }
+
+    #[test]
+    fn elastic_dp_groups_shrink_around_the_dead_server() {
+        let mut w = CommWorld::new(&Preset::simai(4), 8);
+        let full = ParallelLayout::new(8, 4, 1);
+        let dp_full = w.dp_groups_elastic(&full);
+        assert_eq!(dp_full.len(), 8);
+        assert_eq!(dp_full[0].ranks(), &[0, 8, 16, 24]);
+        w.shrink(&[2]).unwrap();
+        let shrunk = ParallelLayout::new(8, 3, 1);
+        let dp = w.dp_groups_elastic(&shrunk);
+        assert_eq!(dp.len(), 8);
+        // Replica groups skip server 2's ranks: one rank per surviving server.
+        assert_eq!(dp[0].ranks(), &[0, 8, 24]);
+        assert_eq!(dp[7].ranks(), &[7, 15, 31]);
+        let tp = w.tp_groups_elastic(&shrunk);
+        assert_eq!(tp.len(), 3);
+        assert_eq!(tp[2].ranks(), (24..32).collect::<Vec<_>>().as_slice());
+        // A collective over the shrunken DP group completes even though
+        // every NIC of the dead server is down.
+        for nic in w.topo().nics_of_server(2) {
+            w.note_failure(nic, FaultAction::FailNic);
+        }
+        let t = dp[0].time_collective(CollKind::AllReduce, 1 << 20, StrategyChoice::Auto);
+        assert!(t.is_some(), "shrunken DP allreduce must not touch the dead server");
+    }
+
+    #[test]
+    fn expand_back_restores_identity_and_plans_match_fresh_world() {
+        let mut w = CommWorld::new(&Preset::simai(4), 8);
+        let layout = ParallelLayout::new(8, 4, 1);
+        let before: Vec<_> = w
+            .dp_groups_elastic(&layout)
+            .iter()
+            .map(|g| g.compile_uncached(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto))
+            .collect();
+        w.shrink(&[1, 3]).unwrap();
+        let tr = w.expand(&[1, 3]).unwrap();
+        assert_eq!(tr.kind, ElasticKind::Expand);
+        assert_eq!(w.active_servers(), vec![0, 1, 2, 3]);
+        assert_eq!(w.epoch(), 2, "shrink + expand = two epochs");
+        assert_eq!(
+            w.active_ranks(),
+            (0..32).collect::<Vec<_>>(),
+            "full membership re-rank is the identity"
+        );
+        let after: Vec<_> = w
+            .dp_groups_elastic(&layout)
+            .iter()
+            .map(|g| g.compile_uncached(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto))
+            .collect();
+        for ((s0, st0), (s1, st1)) in before.iter().zip(&after) {
+            assert_eq!(st0, st1);
+            assert_eq!(s0, s1, "round-trip membership must restore bit-identical plans");
+        }
+        // Double-expand is rejected.
+        assert!(w.expand(&[1]).is_err());
+    }
+
+    #[test]
+    fn spare_promotion_swaps_membership_in_one_bump() {
+        let mut w = CommWorld::new(&Preset::simai(4), 8);
+        w.set_spares(&[3]);
+        assert_eq!(w.active_servers(), vec![0, 1, 2]);
+        assert_eq!(w.spare_servers(), vec![3]);
+        let e = w.epoch();
+        let tr = w.promote_spare(1).unwrap();
+        assert_eq!(tr.kind, ElasticKind::Promote);
+        assert_eq!(tr.servers, vec![1, 3]);
+        assert_eq!(tr.active_after, 3);
+        assert_eq!(w.epoch(), e + 1, "promotion is one transition, one bump");
+        assert_eq!(w.active_servers(), vec![0, 2, 3]);
+        assert!(w.spare_servers().is_empty());
+        assert!(w.promote_spare(0).is_err(), "no spare left");
+        assert_eq!(w.elastic_log().len(), 1, "set_spares is setup, not a transition");
+    }
+
+    #[test]
+    fn plan_cache_invalidates_exactly_once_per_membership_change() {
+        let mut w = CommWorld::new(&Preset::simai(4), 8);
+        let layout = ParallelLayout::new(8, 4, 1);
+        let g = w.dp_groups_elastic(&layout).remove(0);
+        let (s0, _) = g.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        let (s0b, _) = g.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(Arc::ptr_eq(&s0, &s0b));
+        w.shrink(&[3]).unwrap();
+        // Old-epoch entry no longer hits; recompiling under the new epoch
+        // is a single fresh miss, then hits again.
+        let (s1, _) = g.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(!Arc::ptr_eq(&s0, &s1));
+        let (s1b, _) = g.compile(CollKind::AllReduce, 1 << 20, 0, StrategyChoice::Auto);
+        assert!(Arc::ptr_eq(&s1, &s1b));
+        assert_eq!(w.plan_cache_stats(), (2, 2));
     }
 }

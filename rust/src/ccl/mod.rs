@@ -47,7 +47,7 @@ use crate::config::{Preset, TimingConfig};
 use crate::schedule::{PlanInput, Strategy};
 use crate::topology::{NicId, Topology};
 
-pub use group::{CommGroup, CommWorld, ParallelLayout};
+pub use group::{CommGroup, CommWorld, ElasticKind, ElasticTransition, ParallelLayout};
 pub use health::{clamp_degrade_factor, sanitize_action, HealthState, MIN_DEGRADE_FACTOR};
 pub use plan_cache::{PlanCache, PlanKey, DEFAULT_PLAN_CACHE_CAPACITY};
 

@@ -9,6 +9,7 @@
 //!                     [--golden-dir rust/tests/fixtures] [--regen] [--json]
 //!                     [--threads N]   (default: available parallelism)
 //!                     [--fabric leaf-spine|flat]   (override flat scenarios)
+//!                     [--quorum 0.75]   (override the elastic survival bar)
 //!   cluster-sweep     [--servers 1024,4096] [--bytes-per-rank N] [--pod-size 8]
 //!                     [--spines 4] [--oversub 2.0] [--channels 2]
 //!                     [--ring-cap 1024] [--a2a-cap 128] [--quick] [--json]
@@ -20,8 +21,9 @@
 //!                     (SERVE_* env vars apply first; flags win)
 //!   recovery-compare  [--file scenarios/x.json | --dir scenarios] [--threads N]
 //!                     [--out bench_results/recovery_compare.json] [--json]
-//!                     (three recovery arms — lossless / checkpoint-restart /
-//!                     fast-failover — for every scenario in the corpus)
+//!                     (four recovery arms — lossless / elastic-shrink /
+//!                     checkpoint-restart / fast-failover — for every
+//!                     scenario in the corpus)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -198,6 +200,18 @@ fn main() -> anyhow::Result<()> {
                 }
                 None => None,
             };
+            // `--quorum 0.75` overrides every scenario's survival bar (the
+            // fraction of servers that must keep a usable path before an
+            // elastic run may crash). Like `--fabric`, it is an ad-hoc
+            // what-if lens: golden comparisons are skipped for overridden
+            // scenarios.
+            let quorum_override: Option<f64> = match args.get("quorum") {
+                Some(v) => Some(
+                    v.parse::<f64>()
+                        .map_err(|e| anyhow::anyhow!("--quorum {v}: {e}"))?,
+                ),
+                None => None,
+            };
             let paths: Vec<std::path::PathBuf> = if let Some(f) = args.get("file") {
                 vec![f.into()]
             } else {
@@ -225,6 +239,10 @@ fn main() -> anyhow::Result<()> {
                         n_servers: preset.topo.n_servers,
                         fabric: fabric.clone(),
                     });
+                    was_overridden = true;
+                }
+                if let Some(q) = quorum_override {
+                    sc.quorum = Some(q);
                     was_overridden = true;
                 }
                 // Validate against the topology the scenario actually runs
@@ -264,7 +282,9 @@ fn main() -> anyhow::Result<()> {
                     println!("{}", report.to_json().pretty());
                 }
                 if was_overridden && golden_dir.is_some() {
-                    println!("  golden comparison skipped (--fabric override changes the trace)");
+                    println!(
+                        "  golden comparison skipped (--fabric/--quorum override changes the trace)"
+                    );
                 }
                 if let Some(dir) = golden_dir.as_ref().filter(|_| !was_overridden) {
                     let trace = report.to_json().pretty() + "\n";
@@ -405,9 +425,10 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "recovery-compare" => {
-            // Corpus-wide three-arm recovery sweep: run every scenario and
-            // overlay the checkpoint/restart and fast-failover baselines on
-            // its report. Scenarios with their own "recovery" block use it;
+            // Corpus-wide four-arm recovery sweep: run every scenario and
+            // overlay the elastic-shrink discipline and the
+            // checkpoint/restart and fast-failover baselines on its
+            // report. Scenarios with their own "recovery" block use it;
             // the rest use the default RecoveryConfig. `--out` writes the
             // deterministic JSON (the recovery_compare bench's artifact).
             use r2ccl::recovery::{recovery_sweep, recovery_sweep_to_json};
@@ -443,8 +464,9 @@ fn main() -> anyhow::Result<()> {
             }
             let rows = recovery_sweep(&scenarios, &preset, threads);
             println!(
-                "{:<24} {:>5}  {:>12} {:>12} {:>12}  {:>9} {:>9}",
-                "scenario", "gpus", "lossless", "ckpt", "fast", "x ckpt", "x fast"
+                "{:<24} {:>5}  {:>12} {:>12} {:>12} {:>12}  {:>9} {:>9} {:>9}",
+                "scenario", "gpus", "lossless", "elastic", "ckpt", "fast", "x elast", "x ckpt",
+                "x fast"
             );
             for row in &rows {
                 let c = &row.compare;
@@ -453,12 +475,14 @@ fn main() -> anyhow::Result<()> {
                     None => "-".to_string(),
                 };
                 println!(
-                    "{:<24} {:>5}  {:>10.3}gh {:>10.3}gh {:>10.3}gh  {:>9} {:>9}",
+                    "{:<24} {:>5}  {:>10.3}gh {:>10.3}gh {:>10.3}gh {:>10.3}gh  {:>9} {:>9} {:>9}",
                     row.scenario,
                     c.n_gpus,
                     c.lossless.gpu_hours_wasted,
+                    c.elastic.gpu_hours_wasted,
                     c.checkpoint.gpu_hours_wasted,
                     c.fast.gpu_hours_wasted,
+                    ratio(c.speedup_vs_elastic),
                     ratio(c.speedup_vs_checkpoint),
                     ratio(c.speedup_vs_fast),
                 );

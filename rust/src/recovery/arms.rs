@@ -1,14 +1,15 @@
-//! The three-arm recovery comparison: R²CCL lossless failover vs
-//! checkpoint/restart vs FFTrainer-style fast failover.
+//! The four-arm recovery comparison: R²CCL lossless failover vs R²CCL
+//! elastic shrink vs checkpoint/restart vs FFTrainer-style fast failover.
 //!
 //! [`compare_arms`] is a *pure analytic overlay* over a finished
 //! [`ScenarioReport`]: it replays the scenario's compiled fault script
 //! against behavioural models of the two baseline recovery disciplines and
-//! reads the lossless arm straight off the report. Nothing is re-simulated,
-//! so the overlay is deterministic, cheap enough to run for every corpus
-//! scenario, and re-evaluable against one report under different
-//! [`RecoveryConfig`]s (which is what the checkpoint-interval monotonicity
-//! properties in `rust/tests/prop_recovery.rs` do).
+//! the elastic-membership discipline, and reads the lossless arm straight
+//! off the report. Nothing is re-simulated, so the overlay is
+//! deterministic, cheap enough to run for every corpus scenario, and
+//! re-evaluable against one report under different [`RecoveryConfig`]s
+//! (which is what the checkpoint-interval monotonicity properties in
+//! `rust/tests/prop_recovery.rs` do).
 //!
 //! Baseline fate rules, per the paper's §2.1/§8.2–8.3 characterisation:
 //!
@@ -29,6 +30,12 @@
 //! * **DejaVu (serving)** — continuous KV replication taxes every decode
 //!   step; a fault restarts the worker and pays fetch + recompute of the
 //!   non-replicated tail.
+//! * **elastic shrink (R²CCL)** — the membership discipline of this repo's
+//!   runner: single-NIC faults are absorbed losslessly (no membership
+//!   change), a whole-server death shrinks the communicator once
+//!   ([`RecoveryConfig::elastic_reconfigure`] plus the in-flight fraction
+//!   retried), excluded servers cost capacity until repair expands them
+//!   back, and the arm only crashes when the scenario's quorum is lost.
 //!
 //! Both baseline arms run over the *same* degraded network as the lossless
 //! run, so their per-iteration slowdown is never allowed below the measured
@@ -68,7 +75,9 @@ pub struct ArmOutcome {
     pub wasted_time: f64,
     /// The headline metric: wasted GPU-hours over the whole cluster.
     pub gpu_hours_wasted: f64,
-    /// Whole-job (or worker) restarts paid.
+    /// Whole-job (or worker) restarts paid. For the elastic arm this
+    /// counts membership reconfigurations (shrinks + expands) instead —
+    /// elastic recovery never restarts the job.
     pub restarts: usize,
     /// Checkpoints written (periodic for the restart arm, just-in-time for
     /// the fast arm).
@@ -94,7 +103,7 @@ impl ArmOutcome {
     }
 }
 
-/// The three arms side by side, plus the paper-style speedup ratios
+/// The four arms side by side, plus the paper-style speedup ratios
 /// (baseline wasted time over lossless wasted time). Speedups are `None`
 /// (JSON `null`) when the lossless arm crashed or wasted effectively
 /// nothing — a ratio against ~0 carries no information.
@@ -102,27 +111,38 @@ impl ArmOutcome {
 pub struct RecoveryCompare {
     pub n_gpus: usize,
     pub lossless: ArmOutcome,
+    pub elastic: ArmOutcome,
     pub checkpoint: ArmOutcome,
     pub fast: ArmOutcome,
     pub speedup_vs_checkpoint: Option<f64>,
     pub speedup_vs_fast: Option<f64>,
+    pub speedup_vs_elastic: Option<f64>,
 }
 
 impl RecoveryCompare {
-    fn new(n_gpus: usize, lossless: ArmOutcome, checkpoint: ArmOutcome, fast: ArmOutcome) -> Self {
+    fn new(
+        n_gpus: usize,
+        lossless: ArmOutcome,
+        elastic: ArmOutcome,
+        checkpoint: ArmOutcome,
+        fast: ArmOutcome,
+    ) -> Self {
         let speedup = |arm: &ArmOutcome| {
             (!lossless.crashed && lossless.wasted_time > 1e-9)
                 .then(|| arm.wasted_time / lossless.wasted_time)
         };
         let speedup_vs_checkpoint = speedup(&checkpoint);
         let speedup_vs_fast = speedup(&fast);
+        let speedup_vs_elastic = speedup(&elastic);
         RecoveryCompare {
             n_gpus,
             lossless,
+            elastic,
             checkpoint,
             fast,
             speedup_vs_checkpoint,
             speedup_vs_fast,
+            speedup_vs_elastic,
         }
     }
 
@@ -134,10 +154,12 @@ impl RecoveryCompare {
         Json::obj()
             .set("n_gpus", self.n_gpus)
             .set("lossless", self.lossless.to_json())
+            .set("elastic_shrink", self.elastic.to_json())
             .set("checkpoint_restart", self.checkpoint.to_json())
             .set("fast_failover", self.fast.to_json())
             .set("speedup_vs_checkpoint", opt(self.speedup_vs_checkpoint))
             .set("speedup_vs_fast", opt(self.speedup_vs_fast))
+            .set("speedup_vs_elastic", opt(self.speedup_vs_elastic))
     }
 }
 
@@ -151,14 +173,16 @@ pub fn compare_arms(
     cfg: &RecoveryConfig,
 ) -> RecoveryCompare {
     let n_gpus = preset.topo.n_servers * preset.topo.gpus_per_server;
-    let (lossless, checkpoint, fast) = match &scenario.workload {
+    let (lossless, elastic, checkpoint, fast) = match &scenario.workload {
         Workload::Training { tp, dp, pp, .. } => (
             lossless_iteration_arm(scenario, report, n_gpus),
+            replay_elastic(scenario, report, preset, cfg, n_gpus),
             replay_training(false, scenario, report, preset, cfg, *tp, *dp, *pp, n_gpus),
             replay_training(true, scenario, report, preset, cfg, *tp, *dp, *pp, n_gpus),
         ),
         Workload::Serving { prompt_tokens } => (
             lossless_iteration_arm(scenario, report, n_gpus),
+            replay_elastic(scenario, report, preset, cfg, n_gpus),
             replay_serving(false, scenario, report, preset, cfg, *prompt_tokens, n_gpus),
             replay_serving(true, scenario, report, preset, cfg, *prompt_tokens, n_gpus),
         ),
@@ -166,7 +190,7 @@ pub fn compare_arms(
             request_arms(report, preset, cfg, *prompt_tokens, *max_batch, n_gpus)
         }
     };
-    RecoveryCompare::new(n_gpus, lossless, checkpoint, fast)
+    RecoveryCompare::new(n_gpus, lossless, elastic, checkpoint, fast)
 }
 
 fn gpu_hours(wasted_s: f64, n_gpus: usize) -> f64 {
@@ -317,6 +341,31 @@ fn coalesce_incident(
     down
 }
 
+/// Consume every switch event sharing `t` starting at `*si`: degrades and
+/// repairs update the standing state, leaf outages are *counted* instead
+/// of applied. A leaf-down at the instant of a NIC incident is part of the
+/// SAME incident — the dying ToR is what took its member NICs down, so
+/// billing the leaf event as a second rollback would double-charge one
+/// physical fault.
+fn coalesce_switch_instant(
+    sw: &[SwitchScenarioEvent],
+    si: &mut usize,
+    t: f64,
+    state: &mut DegradeState,
+) -> usize {
+    let mut leaf_downs = 0usize;
+    while *si < sw.len() && sw[*si].at_iter == t {
+        let e = sw[*si];
+        *si += 1;
+        if matches!((e.target, e.action), (SwitchTarget::Leaf(_), SwitchAction::Down)) {
+            leaf_downs += 1;
+        } else {
+            state.apply_switch(&e);
+        }
+    }
+    leaf_downs
+}
+
 /// Per-restart downtime of the two baseline disciplines, in iteration
 /// units. The checkpoint pipeline's re-init scales with the cluster; the
 /// fast arm's Mnemosyne-style re-init deliberately does not.
@@ -402,10 +451,14 @@ fn replay_training(
             };
             if take_switch {
                 let e = sw[si];
-                si += 1;
                 if matches!((e.target, e.action), (SwitchTarget::Leaf(_), SwitchAction::Down)) {
                     // A ToR outage severs a whole rail of the pod at once:
                     // fatal for any discipline without in-flight failover.
+                    // Every switch event sharing the instant (including
+                    // further leaf outages) is the same incident. NIC
+                    // events never share it here: ties route to the NIC
+                    // branch below, which consumes the leaf events itself.
+                    coalesce_switch_instant(sw, &mut si, e.at_iter, &mut state);
                     fatal_at(
                         e.at_iter,
                         &mut wasted,
@@ -416,6 +469,7 @@ fn replay_training(
                         &mut failed_units,
                     );
                 } else {
+                    si += 1;
                     state.apply_switch(&e);
                 }
             } else {
@@ -433,10 +487,11 @@ fn replay_training(
                         let t = e.at_iter;
                         let down =
                             coalesce_incident(events, &mut ei, t, &mut state, &mut failed_units);
-                        if down == 0 {
+                        let leaf_downs = coalesce_switch_instant(sw, &mut si, t, &mut state);
+                        if down == 0 && leaf_downs == 0 {
                             continue;
                         }
-                        if fast {
+                        if fast || leaf_downs > 0 {
                             fatal_at(
                                 t,
                                 &mut wasted,
@@ -580,8 +635,10 @@ fn replay_serving(
             };
             if take_switch {
                 let e = sw[si];
-                si += 1;
                 if matches!((e.target, e.action), (SwitchTarget::Leaf(_), SwitchAction::Down)) {
+                    // Same-instant switch events are one incident; NIC ties
+                    // route to the branch below, which consumes leaf events.
+                    coalesce_switch_instant(sw, &mut si, e.at_iter, &mut state);
                     incident_at(
                         e.at_iter,
                         &mut wasted,
@@ -591,6 +648,7 @@ fn replay_serving(
                         &mut failed_units,
                     );
                 } else {
+                    si += 1;
                     state.apply_switch(&e);
                 }
             } else {
@@ -608,7 +666,8 @@ fn replay_serving(
                         let t = e.at_iter;
                         let down =
                             coalesce_incident(events, &mut ei, t, &mut state, &mut failed_units);
-                        if down > 0 {
+                        let leaf_downs = coalesce_switch_instant(sw, &mut si, t, &mut state);
+                        if down > 0 || leaf_downs > 0 {
                             incident_at(
                                 t,
                                 &mut wasted,
@@ -641,9 +700,143 @@ fn replay_serving(
     }
 }
 
+/// The R²CCL elastic-membership arm. Unlike the baselines it keeps the
+/// lossless library underneath — single-NIC faults cost exactly what the
+/// measured lossless run paid — and adds the membership discipline on top:
+/// a fatal instant that leaves whole servers with no live NIC shrinks the
+/// communicator once (one [`RecoveryConfig::elastic_reconfigure`] plus the
+/// in-flight fraction of the interrupted iteration, retried), excluded
+/// servers cost DP-shrunk capacity until a repair expands them back in
+/// (another reconfigure), and the arm crashes only when fewer than the
+/// scenario's quorum of servers remain — the same invariant the elastic
+/// runner enforces.
+fn replay_elastic(
+    scenario: &FaultScenario,
+    report: &ScenarioReport,
+    preset: &Preset,
+    cfg: &RecoveryConfig,
+    n_gpus: usize,
+) -> ArmOutcome {
+    let topo = &preset.topo;
+    let n_servers = topo.n_servers;
+    let nics_per = topo.nics_per_server;
+    let h = report.healthy_iter_time.max(1e-12);
+    let quorum_needed =
+        ((scenario.quorum_frac() * n_servers as f64).ceil() as usize).max(1);
+
+    let mut state = DegradeState::new(n_servers * nics_per);
+    let mut failed_units = 0usize;
+    let mut excluded = vec![false; n_servers];
+    let mut wasted = 0.0f64; // iteration units
+    let mut reconfigs = 0usize;
+    let mut crashed = false;
+    let mut completed = scenario.iters;
+
+    let events = &report.events;
+    let sw = &report.switch_events;
+    let (mut ei, mut si) = (0usize, 0usize);
+
+    'iters: for k in 0..scenario.iters {
+        let lim = (k + 1) as f64;
+        loop {
+            let nic_due = ei < events.len() && events[ei].at_iter < lim;
+            let sw_due = si < sw.len() && sw[si].at_iter < lim;
+            let take_switch = match (nic_due, sw_due) {
+                (false, false) => break,
+                (true, true) => sw[si].at_iter < events[ei].at_iter,
+                (false, true) => true,
+                (true, false) => false,
+            };
+            if take_switch {
+                // Leaf outages are rerouted across the surviving rails by
+                // the lossless layer; the measured per-iteration floor
+                // already carries that cost, so they neither degrade the
+                // standing state nor change membership here.
+                let t = sw[si].at_iter;
+                coalesce_switch_instant(sw, &mut si, t, &mut state);
+            } else {
+                let e = events[ei];
+                match e.action {
+                    FaultAction::Repair => {
+                        ei += 1;
+                        state.repair_nic(e.nic, &mut failed_units);
+                        let s = e.nic / nics_per;
+                        if excluded[s] {
+                            // The server is reachable again: expand it back
+                            // into the job — one more epoch bump.
+                            excluded[s] = false;
+                            wasted += cfg.elastic_reconfigure;
+                            reconfigs += 1;
+                        }
+                    }
+                    FaultAction::Degrade(f) => {
+                        ei += 1;
+                        state.nic_factor[e.nic] = f.max(MIN_FACTOR);
+                    }
+                    FaultAction::FailNic | FaultAction::CutCable => {
+                        let t = e.at_iter;
+                        let down =
+                            coalesce_incident(events, &mut ei, t, &mut state, &mut failed_units);
+                        coalesce_switch_instant(sw, &mut si, t, &mut state);
+                        if down == 0 {
+                            continue;
+                        }
+                        let newly = (0..n_servers)
+                            .filter(|&s| {
+                                !excluded[s]
+                                    && state.nic_up[s * nics_per..(s + 1) * nics_per]
+                                        .iter()
+                                        .all(|up| !up)
+                            })
+                            .collect::<Vec<_>>();
+                        if newly.is_empty() {
+                            // Partial-NIC fault: the lossless layer migrates
+                            // flows in place, no membership change.
+                            continue;
+                        }
+                        newly.iter().for_each(|&s| excluded[s] = true);
+                        let live = n_servers - excluded.iter().filter(|x| **x).count();
+                        if live < quorum_needed {
+                            crashed = true;
+                            completed = k;
+                            break 'iters;
+                        }
+                        // One shrink per incident (the epoch bumps once no
+                        // matter how many servers the instant took), plus
+                        // the interrupted iteration's in-flight fraction,
+                        // which is retried on the shrunk world.
+                        wasted += cfg.elastic_reconfigure + t.fract();
+                        reconfigs += 1;
+                    }
+                }
+            }
+        }
+        // Accrue iteration k: the measured lossless overhead (the library
+        // underneath IS the lossless one) plus the DP-shrink capacity loss
+        // of any currently excluded servers.
+        let capacity =
+            (n_servers - excluded.iter().filter(|x| **x).count()) as f64 / n_servers as f64;
+        wasted += lossless_overhead_at(report, k, h) + (1.0 / capacity.max(MIN_FACTOR) - 1.0);
+    }
+
+    let useful = completed as f64 * h;
+    let wasted_s = wasted * h;
+    ArmOutcome {
+        arm: "elastic_shrink",
+        total_time: useful + wasted_s,
+        useful_time: useful,
+        wasted_time: wasted_s,
+        gpu_hours_wasted: gpu_hours(wasted_s, n_gpus),
+        restarts: reconfigs,
+        checkpoints: 0,
+        lost_iterations: (scenario.iters - completed) as f64,
+        crashed,
+    }
+}
+
 /// Count fault incidents (distinct fatal instants) in a compiled script:
-/// every same-timestamp group of fresh NIC failures is one incident, as is
-/// every leaf outage.
+/// every same-timestamp group of fresh NIC failures and/or leaf outages is
+/// one incident.
 fn count_incidents(
     events: &[ScenarioEvent],
     sw: &[SwitchScenarioEvent],
@@ -652,36 +845,57 @@ fn count_incidents(
     let mut state = DegradeState::new(total_nics);
     let mut failed_units = 0usize;
     let mut incidents = 0usize;
-    let mut ei = 0usize;
-    while ei < events.len() {
-        let e = events[ei];
-        match e.action {
-            FaultAction::Repair => {
-                ei += 1;
-                state.repair_nic(e.nic, &mut failed_units);
+    let (mut ei, mut si) = (0usize, 0usize);
+    loop {
+        let nic_due = ei < events.len();
+        let sw_due = si < sw.len();
+        let take_switch = match (nic_due, sw_due) {
+            (false, false) => break,
+            (true, true) => sw[si].at_iter < events[ei].at_iter,
+            (false, true) => true,
+            (true, false) => false,
+        };
+        if take_switch {
+            let e = sw[si];
+            if matches!((e.target, e.action), (SwitchTarget::Leaf(_), SwitchAction::Down)) {
+                // NIC events cannot share the instant here (ties route to
+                // the NIC branch), so the leaf group alone is the incident.
+                coalesce_switch_instant(sw, &mut si, e.at_iter, &mut state);
+                incidents += 1;
+            } else {
+                si += 1;
+                state.apply_switch(&e);
             }
-            FaultAction::Degrade(_) => ei += 1,
-            FaultAction::FailNic | FaultAction::CutCable => {
-                if coalesce_incident(events, &mut ei, e.at_iter, &mut state, &mut failed_units) > 0
-                {
-                    incidents += 1;
+        } else {
+            let e = events[ei];
+            match e.action {
+                FaultAction::Repair => {
+                    ei += 1;
+                    state.repair_nic(e.nic, &mut failed_units);
+                }
+                FaultAction::Degrade(_) => ei += 1,
+                FaultAction::FailNic | FaultAction::CutCable => {
+                    let t = e.at_iter;
+                    let down =
+                        coalesce_incident(events, &mut ei, t, &mut state, &mut failed_units);
+                    let leaf_downs = coalesce_switch_instant(sw, &mut si, t, &mut state);
+                    if down > 0 || leaf_downs > 0 {
+                        incidents += 1;
+                    }
                 }
             }
         }
     }
     incidents
-        + sw.iter()
-            .filter(|e| {
-                matches!((e.target, e.action), (SwitchTarget::Leaf(_), SwitchAction::Down))
-            })
-            .count()
 }
 
-/// The three arms of a request-serving scenario, all in seconds (that
+/// The four arms of a request-serving scenario, all in seconds (that
 /// workload's native time base). The lossless arm's waste is the engine
-/// ledger's discarded compute; the DejaVu arm pays the replication tax
-/// over the whole window plus one worker recovery per incident; the fast
-/// arm pays a near-free replica reconnection per incident.
+/// ledger's discarded compute; the elastic arm adds one communicator
+/// reconfiguration (replica retirement/adoption) per incident on top of
+/// it; the DejaVu arm pays the replication tax over the whole window plus
+/// one worker recovery per incident; the fast arm pays a near-free replica
+/// reconnection per incident.
 fn request_arms(
     report: &ScenarioReport,
     preset: &Preset,
@@ -689,7 +903,7 @@ fn request_arms(
     prompt_tokens: usize,
     max_batch: usize,
     n_gpus: usize,
-) -> (ArmOutcome, ArmOutcome, ArmOutcome) {
+) -> (ArmOutcome, ArmOutcome, ArmOutcome, ArmOutcome) {
     let model = InferModel::llama70b();
     let dv = DejaVuModel::default();
     let window = report.total_time;
@@ -716,6 +930,22 @@ fn request_arms(
         &report.switch_events,
         preset.topo.n_servers * preset.topo.nics_per_server,
     );
+    // Elastic: the router already absorbs the loss; membership just pays
+    // one epoch bump per incident, converted to seconds through the
+    // healthy TTFT (the report's iteration-unit time base).
+    let elastic_wasted =
+        lossless_wasted + incidents as f64 * cfg.elastic_reconfigure * report.healthy_iter_time;
+    let elastic = ArmOutcome {
+        arm: "elastic_shrink",
+        total_time: window + elastic_wasted,
+        useful_time: window,
+        wasted_time: elastic_wasted,
+        gpu_hours_wasted: gpu_hours(elastic_wasted, n_gpus),
+        restarts: incidents,
+        checkpoints: 0,
+        lost_iterations: 0.0,
+        crashed: false,
+    };
     // The whole decode batch's KV shards are in flight on a dying replica.
     let kv = kv_shard_bytes(&model, prompt_tokens) as f64 * max_batch.max(1) as f64;
     // Every discipline re-runs the compute the dead replica was holding —
@@ -751,7 +981,7 @@ fn request_arms(
         lost_iterations: 0.0,
         crashed: false,
     };
-    (lossless, checkpoint, fast)
+    (lossless, elastic, checkpoint, fast)
 }
 
 #[cfg(test)]
@@ -768,6 +998,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: Some(RecoveryConfig::default()),
+            quorum: None,
             patterns: vec![FaultPattern::OneShot {
                 at,
                 nic: 0,
@@ -821,6 +1052,7 @@ mod tests {
             max_overhead: None,
             serving: None,
             recovery: None,
+            elastic: None,
             events_popped: 0,
             domains_touched: 0,
             resident_resources: 0,
@@ -924,12 +1156,109 @@ mod tests {
     }
 
     #[test]
+    fn leaf_down_with_member_nic_failures_bills_one_incident() {
+        // A dying ToR takes its member NICs down at the same instant; the
+        // merged script carries both the switch event and the NIC events.
+        // That is ONE physical fault ⇒ one rollback, not two.
+        let sc = training_scenario(6, 2.5, 9);
+        let events = vec![fail_at(2.5, 0), fail_at(2.5, 1)];
+        let mut report = synthetic_report(events, 6, 1.0, 0.0);
+        report.switch_events = vec![SwitchScenarioEvent {
+            at_iter: 2.5,
+            target: SwitchTarget::Leaf(0),
+            action: SwitchAction::Down,
+        }];
+        let cmp = compare_arms(&sc, &report, &Preset::testbed(), &RecoveryConfig::default());
+        assert_eq!(cmp.checkpoint.restarts, 1, "leaf + member NICs ⇒ one rollback");
+        assert_eq!(cmp.fast.restarts, 1, "leaf + member NICs ⇒ one failover");
+        assert_eq!(count_incidents(&report.events, &report.switch_events, 16), 1);
+        // A leaf outage at a *different* instant is its own incident again.
+        report.switch_events.push(SwitchScenarioEvent {
+            at_iter: 4.5,
+            target: SwitchTarget::Leaf(1),
+            action: SwitchAction::Down,
+        });
+        let cmp = compare_arms(&sc, &report, &Preset::testbed(), &RecoveryConfig::default());
+        assert_eq!(cmp.fast.restarts, 2);
+        assert_eq!(count_incidents(&report.events, &report.switch_events, 16), 2);
+    }
+
+    #[test]
+    fn elastic_arm_shrinks_past_a_server_death_cheaper_than_a_rollback() {
+        // Every NIC of testbed server 0 dies at one fractional instant: the
+        // checkpoint arm rolls back and re-provisions; the elastic arm pays
+        // one reconfigure + the in-flight fraction, then runs DP-shrunk.
+        let sc = training_scenario(8, 2.5, 7);
+        let events: Vec<ScenarioEvent> = (0..8).map(|n| fail_at(2.5, n)).collect();
+        let report = synthetic_report(events, 8, 1.0, 0.0);
+        let cfg = RecoveryConfig::default();
+        let cmp = compare_arms(&sc, &report, &Preset::testbed(), &cfg);
+        assert_eq!(cmp.elastic.arm, "elastic_shrink");
+        assert!(!cmp.elastic.crashed);
+        assert_eq!(cmp.elastic.restarts, 1, "one shrink; the server never repairs");
+        assert_eq!(cmp.elastic.checkpoints, 0);
+        assert_eq!(cmp.elastic.lost_iterations, 0.0, "retried, not lost");
+        // reconfigure (1.0) + in-flight (0.5) + 6 half-capacity iterations.
+        assert!((cmp.elastic.wasted_time - 7.5).abs() < 1e-9, "{}", cmp.elastic.wasted_time);
+        assert!(cmp.elastic.wasted_time < cmp.checkpoint.wasted_time);
+        assert!(cmp.speedup_vs_elastic.is_none(), "lossless report wasted nothing");
+    }
+
+    #[test]
+    fn elastic_arm_expands_back_when_the_dead_server_repairs() {
+        let sc = training_scenario(8, 2.5, 7);
+        let mut events: Vec<ScenarioEvent> = (0..8).map(|n| fail_at(2.5, n)).collect();
+        events.push(ScenarioEvent { at_iter: 4.5, nic: 0, action: FaultAction::Repair });
+        let report = synthetic_report(events, 8, 1.0, 0.0);
+        let cmp = compare_arms(&sc, &report, &Preset::testbed(), &RecoveryConfig::default());
+        // Shrink at 2.5, expand at 4.5: two reconfigurations, and only
+        // iterations 2 and 3 run at half capacity.
+        assert_eq!(cmp.elastic.restarts, 2);
+        assert!((cmp.elastic.wasted_time - (1.0 + 0.5 + 2.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elastic_arm_crashes_only_on_quorum_loss() {
+        // Both testbed servers die: no quorum (default 0.5 ⇒ 1 of 2), so
+        // even the elastic discipline has nothing left to shrink onto.
+        let sc = training_scenario(8, 2.5, 7);
+        let events: Vec<ScenarioEvent> = (0..16).map(|n| fail_at(2.5, n)).collect();
+        let report = synthetic_report(events, 8, 1.0, 0.0);
+        let cmp = compare_arms(&sc, &report, &Preset::testbed(), &RecoveryConfig::default());
+        assert!(cmp.elastic.crashed);
+        assert_eq!(cmp.elastic.lost_iterations, 6.0, "iterations 2..8 never ran");
+        // Tightening the quorum to "everyone" makes even a one-server loss
+        // fatal for the elastic arm.
+        let mut sc1 = training_scenario(8, 2.5, 7);
+        sc1.quorum = Some(1.0);
+        let events1: Vec<ScenarioEvent> = (0..8).map(|n| fail_at(2.5, n)).collect();
+        let report1 = synthetic_report(events1, 8, 1.0, 0.0);
+        let cmp1 = compare_arms(&sc1, &report1, &Preset::testbed(), &RecoveryConfig::default());
+        assert!(cmp1.elastic.crashed);
+    }
+
+    #[test]
+    fn elastic_arm_ignores_partial_nic_faults_beyond_the_lossless_floor() {
+        // One NIC of eight dies: the lossless layer migrates in place, so
+        // the elastic arm pays exactly the measured lossless overhead — no
+        // reconfiguration, no capacity loss.
+        let sc = training_scenario(8, 2.5, 7);
+        let report = synthetic_report(vec![fail_at(2.5, 0)], 8, 1.0, 0.3);
+        let cmp = compare_arms(&sc, &report, &Preset::testbed(), &RecoveryConfig::default());
+        assert_eq!(cmp.elastic.restarts, 0);
+        assert!(!cmp.elastic.crashed);
+        assert!((cmp.elastic.wasted_time - 0.3).abs() < 1e-9, "{}", cmp.elastic.wasted_time);
+        assert!((cmp.elastic.wasted_time - cmp.lossless.wasted_time).abs() < 1e-9);
+    }
+
+    #[test]
     fn healthy_scenario_reports_null_speedups() {
         let sc = FaultScenario { patterns: vec![], ..training_scenario(4, 0.0, 1) };
         let report = synthetic_report(vec![], 4, 1.0, 0.0);
         let cmp = compare_arms(&sc, &report, &Preset::testbed(), &RecoveryConfig::default());
         assert_eq!(cmp.speedup_vs_checkpoint, None, "no waste to compare against");
         assert_eq!(cmp.speedup_vs_fast, None);
+        assert_eq!(cmp.speedup_vs_elastic, None);
         // The baselines still pay their steady taxes.
         assert!(cmp.checkpoint.wasted_time > 0.0);
         assert!(cmp.fast.wasted_time > 0.0);
@@ -986,6 +1315,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: Some(RecoveryConfig::default()),
+            quorum: None,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 1,
@@ -1030,10 +1360,12 @@ mod tests {
         for key in [
             "\"n_gpus\"",
             "\"lossless\"",
+            "\"elastic_shrink\"",
             "\"checkpoint_restart\"",
             "\"fast_failover\"",
             "\"speedup_vs_checkpoint\"",
             "\"speedup_vs_fast\"",
+            "\"speedup_vs_elastic\"",
             "\"wasted_time\"",
             "\"gpu_hours_wasted\"",
             "\"lost_iterations\"",

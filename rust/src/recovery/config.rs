@@ -55,6 +55,11 @@ pub struct RecoveryConfig {
     pub fast_reinit: f64,
     /// Request-serving fast-failover replica reconnection (seconds).
     pub fast_restart_s: f64,
+    /// Elastic-shrink arm: one communicator shrink/expand/promotion —
+    /// re-rank survivors and rebuild the TP/PP/DP groups (iteration
+    /// units). Charged once per whole-server incident and once per
+    /// expand-back, matching the single epoch bump each transition costs.
+    pub elastic_reconfigure: f64,
 }
 
 impl Default for RecoveryConfig {
@@ -73,6 +78,7 @@ impl Default for RecoveryConfig {
             fast_restore: 0.5,
             fast_reinit: 0.25,
             fast_restart_s: 0.25,
+            elastic_reconfigure: 1.0,
         }
     }
 }
@@ -97,6 +103,7 @@ impl RecoveryConfig {
             ("fast_restore", self.fast_restore),
             ("fast_reinit", self.fast_reinit),
             ("fast_restart_s", self.fast_restart_s),
+            ("elastic_reconfigure", self.elastic_reconfigure),
         ] {
             if !(v.is_finite() && v >= 0.0) {
                 return Err(format!("recovery: {name} must be finite and >= 0"));
@@ -125,6 +132,7 @@ impl RecoveryConfig {
             .set("fast_restore", self.fast_restore)
             .set("fast_reinit", self.fast_reinit)
             .set("fast_restart_s", self.fast_restart_s)
+            .set("elastic_reconfigure", self.elastic_reconfigure)
     }
 
     /// Parse from a scenario file's `"recovery"` block; every omitted field
@@ -150,6 +158,7 @@ impl RecoveryConfig {
             fast_restore: f("fast_restore", d.fast_restore),
             fast_reinit: f("fast_reinit", d.fast_reinit),
             fast_restart_s: f("fast_restart_s", d.fast_restart_s),
+            elastic_reconfigure: f("elastic_reconfigure", d.elastic_reconfigure),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -206,6 +215,7 @@ mod tests {
             fast_restore: 0.6,
             fast_reinit: 0.2,
             fast_restart_s: 0.125,
+            elastic_reconfigure: 0.875,
         };
         let s = c.to_json().pretty();
         let back = RecoveryConfig::from_json(&Json::parse(&s).unwrap()).unwrap();

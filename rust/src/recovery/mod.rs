@@ -1,5 +1,6 @@
 //! Job-recovery baselines: checkpoint/restart and fast failover, compared
-//! arm-by-arm against R²CCL's lossless in-flight failover.
+//! arm-by-arm against R²CCL's lossless in-flight failover and its
+//! elastic-membership shrink discipline.
 //!
 //! The paper's headline claim is not that faults are rare but that the
 //! *recovery discipline* determines their cost: a conventional job reacts
@@ -9,16 +10,17 @@
 //! cluster size. FFTrainer-style fast failover shrinks that pipeline with
 //! just-in-time checkpoints and Mnemosyne-style communication-free
 //! communicator re-init; R²CCL removes it entirely by migrating in-flight
-//! collectives around the fault. This module prices all three disciplines
-//! against the *same* deterministic fault script and reports the
-//! difference as wasted GPU-hours.
+//! collectives around the fault, and its elastic membership layer shrinks
+//! the communicator past whole-server deaths instead of restarting. This
+//! module prices all four disciplines against the *same* deterministic
+//! fault script and reports the difference as wasted GPU-hours.
 //!
 //! * [`config`] — [`RecoveryConfig`]: checkpoint interval/stall, rollback
 //!   pipeline stages, fast-failover stage costs; JSON round-trips exactly.
 //! * [`arms`] — [`compare_arms`]: the pure analytic overlay that replays a
 //!   finished [`crate::scenario::ScenarioReport`] under each baseline and
 //!   emits the [`RecoveryCompare`] block scenario reports serialize.
-//! * [`sweep`] — [`recovery_sweep`]: every corpus scenario under all three
+//! * [`sweep`] — [`recovery_sweep`]: every corpus scenario under all four
 //!   arms, backing the `recovery-compare` CLI subcommand and
 //!   `bench_results/recovery_compare.json`.
 

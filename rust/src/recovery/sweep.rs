@@ -1,5 +1,5 @@
 //! Corpus-wide recovery sweep: every scenario in a corpus evaluated under
-//! all three recovery arms, regardless of whether the scenario file asked
+//! all four recovery arms, regardless of whether the scenario file asked
 //! for a `recovery` block.
 //!
 //! This is the data source of the `recovery-compare` CLI subcommand and
@@ -15,7 +15,7 @@ use crate::util::Json;
 
 use super::{compare_arms, RecoveryCompare, RecoveryConfig};
 
-/// One corpus scenario's three-arm outcome.
+/// One corpus scenario's four-arm outcome.
 #[derive(Debug, Clone)]
 pub struct RecoverySweepRow {
     pub scenario: String,
@@ -30,7 +30,7 @@ impl RecoverySweepRow {
     }
 }
 
-/// Run every scenario and overlay the three recovery arms on its report.
+/// Run every scenario and overlay the four recovery arms on its report.
 /// Rows come back in input order; the whole sweep is deterministic at any
 /// thread count (each run is independent and the overlay is seeded from
 /// the scenario).
@@ -76,6 +76,7 @@ mod tests {
                 max_overhead: None,
                 cluster: None,
                 recovery: None, // swept with the default config anyway
+                quorum: None,
                 patterns: vec![FaultPattern::OneShot {
                     at: 1.5,
                     nic: 0,
@@ -90,6 +91,7 @@ mod tests {
                 max_overhead: None,
                 cluster: None,
                 recovery: Some(RecoveryConfig { checkpoint_interval: 2, ..Default::default() }),
+                quorum: None,
                 patterns: vec![],
             },
         ]
@@ -102,9 +104,10 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].scenario, "sweep-a");
         assert_eq!(rows[1].scenario, "sweep-b");
-        // Every row carries all three arms with the GPU-hours metric.
+        // Every row carries all four arms with the GPU-hours metric.
         for row in &rows {
             assert_eq!(row.compare.lossless.arm, "lossless");
+            assert_eq!(row.compare.elastic.arm, "elastic_shrink");
             assert_eq!(row.compare.checkpoint.arm, "checkpoint_restart");
             assert_eq!(row.compare.fast.arm, "fast_failover");
             assert!(row.compare.checkpoint.gpu_hours_wasted >= 0.0);
@@ -123,5 +126,6 @@ mod tests {
         assert_eq!(js, jp, "sweep JSON must be bit-identical at any thread count");
         assert!(js.contains("\"scenarios\""));
         assert!(js.contains("\"speedup_vs_checkpoint\""));
+        assert!(js.contains("\"elastic_shrink\""));
     }
 }

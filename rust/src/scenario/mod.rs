@@ -18,10 +18,14 @@
 pub mod runner;
 pub mod spec;
 
-pub use runner::{effective_preset, run_corpus, IterationRecord, ScenarioReport, ScenarioRunner};
+pub use runner::{
+    effective_preset, run_corpus, ElasticEventRecord, ElasticSummary, IterationRecord,
+    ScenarioReport, ScenarioRunner,
+};
 pub use spec::{
     fabric_from_json, fabric_to_json, sample_multi_fault, ClusterSpec, FaultPattern,
-    FaultScenario, ScenarioEvent, SwitchScenarioEvent, Workload,
+    FaultScenario, MembershipChange, MembershipEvent, ScenarioEvent, SwitchScenarioEvent,
+    Workload, DEFAULT_QUORUM,
 };
 
 use std::path::{Path, PathBuf};

@@ -23,7 +23,7 @@
 //! * **bounded overhead** — when the scenario declares `max_overhead`, the
 //!   mean per-iteration overhead vs the healthy baseline must stay below.
 
-use crate::ccl::{CommGroup, CommWorld, StrategyChoice};
+use crate::ccl::{CommGroup, CommWorld, ElasticKind, StrategyChoice};
 use crate::collectives::exec::{FaultAction, FaultEvent, TimelineEntry};
 use crate::collectives::CollKind;
 use crate::config::Preset;
@@ -32,13 +32,15 @@ use crate::recovery::{compare_arms, RecoveryCompare};
 use crate::serve::{run_request_engine, summarize, EngineCfg, ServingSummary};
 use crate::sim::inference::{kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, InferModel};
 use crate::sim::training::{
-    scenario_main_collective, scenario_training_iteration, training_groups, ParallelConfig,
-    TrainingGroups,
+    dp_shrink, scenario_main_collective, scenario_training_iteration, training_groups,
+    training_groups_elastic, ParallelConfig, TrainingGroups,
 };
 use crate::topology::{NicId, ServerId, Topology};
 use crate::util::Json;
 
-use super::spec::{FaultScenario, ScenarioEvent, SwitchScenarioEvent, Workload};
+use super::spec::{
+    FaultScenario, MembershipChange, ScenarioEvent, SwitchScenarioEvent, Workload,
+};
 use super::IterOutcome;
 
 /// One iteration's record in the report.
@@ -64,6 +66,73 @@ pub struct IterationRecord {
     /// Peak sparse-resident engine resources across the iteration's
     /// executor runs (perf counter — excluded from `to_json`).
     pub resident_resources: u64,
+}
+
+/// One membership transition the runner actually performed, stamped with
+/// the iteration it landed on.
+#[derive(Debug, Clone)]
+pub struct ElasticEventRecord {
+    pub iter: usize,
+    pub kind: ElasticKind,
+    /// Servers involved — the shrunk/expanded set (sorted), or
+    /// `[dead, spare]` for a promotion (matching
+    /// [`crate::ccl::ElasticTransition::servers`]).
+    pub servers: Vec<ServerId>,
+    /// World epoch after the transition — one bump per transition, which is
+    /// what "plan cache invalidated exactly once per membership change"
+    /// means on the wire.
+    pub epoch: u64,
+}
+
+impl ElasticEventRecord {
+    pub fn to_json(&self) -> Json {
+        let mut servers = Json::arr();
+        for &s in &self.servers {
+            servers.push(s);
+        }
+        Json::obj()
+            .set("iter", self.iter)
+            .set("kind", self.kind.label())
+            .set("servers", servers)
+            .set("epoch", self.epoch)
+    }
+}
+
+/// Elastic-membership summary of a run — elastic scenarios only. Appended
+/// to the report JSON only when present, so every pre-elastic golden trace
+/// is byte-identical (the "serving"/"recovery" key discipline).
+#[derive(Debug, Clone)]
+pub struct ElasticSummary {
+    pub shrinks: usize,
+    pub expands: usize,
+    pub promotions: usize,
+    /// Iterations that crashed mid-flight and were re-run to completion on
+    /// the shrunken membership instead of killing the job.
+    pub retried_iterations: usize,
+    pub quorum_frac: f64,
+    /// True once fewer than ⌈quorum · n_servers⌉ servers had a usable
+    /// path — the only state in which an elastic run may crash.
+    pub quorum_lost: bool,
+    pub final_active_servers: usize,
+    pub events: Vec<ElasticEventRecord>,
+}
+
+impl ElasticSummary {
+    pub fn to_json(&self) -> Json {
+        let mut events = Json::arr();
+        for e in &self.events {
+            events.push(e.to_json());
+        }
+        Json::obj()
+            .set("shrinks", self.shrinks)
+            .set("expands", self.expands)
+            .set("promotions", self.promotions)
+            .set("retried_iterations", self.retried_iterations)
+            .set("quorum_frac", self.quorum_frac)
+            .set("quorum_lost", self.quorum_lost)
+            .set("final_active_servers", self.final_active_servers)
+            .set("events", events)
+    }
 }
 
 /// The deterministic result of a scenario run; `to_json().pretty()` is the
@@ -107,6 +176,11 @@ pub struct ScenarioReport {
     /// when the scenario carries a `recovery` block. Appended to the JSON
     /// only when present, so pre-recovery golden traces are byte-identical.
     pub recovery: Option<RecoveryCompare>,
+    /// Elastic-membership summary — present only on scenarios carrying
+    /// elastic patterns (`ServerDown` / `ServerReplace` /
+    /// `RollingMaintenance`). Appended to the JSON only when present, so
+    /// pre-elastic golden traces are byte-identical.
+    pub elastic: Option<ElasticSummary>,
     /// Total kernel events popped across all iterations (perf counter —
     /// never serialized; `to_json` stays byte-identical to pre-kernel
     /// golden traces).
@@ -123,7 +197,16 @@ impl ScenarioReport {
     /// The scenario harness's built-in invariants. `Err` carries the first
     /// violated claim.
     pub fn check_invariants(&self) -> Result<(), String> {
-        if self.crashed && !self.path_lost {
+        if let Some(el) = &self.elastic {
+            // Elastic runs shrink around dead servers: the only legitimate
+            // crash is losing quorum itself.
+            if self.crashed && !el.quorum_lost {
+                return Err(format!(
+                    "scenario {:?}: crashed while ≥ quorum servers had a usable path",
+                    self.scenario
+                ));
+            }
+        } else if self.crashed && !self.path_lost {
             return Err(format!(
                 "scenario {:?}: crashed while every server still had a usable NIC",
                 self.scenario
@@ -222,8 +305,12 @@ impl ScenarioReport {
             Some(s) => j.set("serving", s.to_json()),
             None => j,
         };
-        match &self.recovery {
+        let j = match &self.recovery {
             Some(r) => j.set("recovery", r.to_json()),
+            None => j,
+        };
+        match &self.elastic {
+            Some(e) => j.set("elastic", e.to_json()),
             None => j,
         }
     }
@@ -246,12 +333,20 @@ impl Ctx {
                     global_batch: 64,
                     microbatch: 2,
                 };
+                // Elastic scenarios hold spares out of the initial
+                // membership; the workload then fills the *active* world
+                // and groups come from the elastic (re-ranked) builders.
+                let elastic = world.n_active_ranks() != world.topo().n_gpus();
                 assert_eq!(
                     par.n_gpus(),
-                    world.topo().n_gpus(),
-                    "training workload must exactly fill the topology"
+                    world.n_active_ranks(),
+                    "training workload must exactly fill the (active) topology"
                 );
-                let groups = training_groups(world, &par);
+                let groups = if elastic {
+                    training_groups_elastic(world, &par)
+                } else {
+                    training_groups(world, &par)
+                };
                 Ctx::Training { par, groups, bytes_per_rank: *bytes_per_rank }
             }
             Workload::Serving { prompt_tokens } => Ctx::Serving {
@@ -259,6 +354,17 @@ impl Ctx {
                 pair: pd_kv_pair(world),
                 prompt_tokens: *prompt_tokens,
             },
+        }
+    }
+
+    /// Rebuild the training groups after a membership change: dp absorbs
+    /// the whole change (DP-shrink semantics — the global batch is kept,
+    /// surviving replicas take larger shares), tp/pp stay structural.
+    /// No-op for serving contexts (elastic patterns are training-only).
+    fn rebuild_elastic(&mut self, world: &CommWorld) {
+        if let Ctx::Training { par, groups, .. } = self {
+            *par = dp_shrink(par, world.n_active_ranks());
+            *groups = training_groups_elastic(world, par);
         }
     }
 
@@ -397,6 +503,7 @@ impl<'a> ScenarioRunner<'a> {
             max_overhead: self.scenario.max_overhead,
             serving: Some(summary),
             recovery: None,
+            elastic: None,
             events_popped: 0,
             domains_touched: 0,
             resident_resources: 0,
@@ -441,11 +548,20 @@ impl<'a> ScenarioRunner<'a> {
         }
         let fabric_cfg = self.scenario.fabric_config();
         let (events, switch_events) = self.scenario.compile_full(&self.preset.topo);
+        let elastic = self.scenario.is_elastic();
+        let spares = self.scenario.spare_servers();
+        let membership = self.scenario.compile_membership();
 
         // Healthy baseline: same workload, pristine world. `time_base` (the
         // main collective's healthy completion) maps fractional event times
-        // onto executor seconds.
-        let healthy_world = CommWorld::new_with_fabric(&self.preset, self.channels, &fabric_cfg);
+        // onto executor seconds. Elastic scenarios hold their spares out of
+        // the baseline too, so it times the same active membership the run
+        // starts on.
+        let mut healthy_world =
+            CommWorld::new_with_fabric(&self.preset, self.channels, &fabric_cfg);
+        if elastic {
+            healthy_world.set_spares(&spares);
+        }
         let healthy_ctx = Ctx::build(&healthy_world, &self.scenario.workload);
         let (main, main_kind, main_bytes) = healthy_ctx.main_info();
         let time_base = main
@@ -460,7 +576,10 @@ impl<'a> ScenarioRunner<'a> {
         // The scenario world: fault-plane state accumulates across
         // iterations through `note_failure` / `note_switch_failure`.
         let mut world = CommWorld::new_with_fabric(&self.preset, self.channels, &fabric_cfg);
-        let ctx = Ctx::build(&world, &self.scenario.workload);
+        if elastic {
+            world.set_spares(&spares);
+        }
+        let mut ctx = Ctx::build(&world, &self.scenario.workload);
         let topo = Topology::build_with_fabric(&self.preset.topo, &fabric_cfg);
         let mut usable: Vec<bool> = vec![true; topo.n_nics()];
         let mut leaf_ok: Vec<bool> = vec![true; topo.fabric().n_leaves()];
@@ -468,8 +587,16 @@ impl<'a> ScenarioRunner<'a> {
         let mut records: Vec<IterationRecord> = Vec::new();
         let mut ei = 0usize;
         let mut si = 0usize;
+        let mut mi = 0usize;
         let mut crashed = false;
         let mut total_time = 0.0f64;
+        // Elastic ground truth: the job survives while at least
+        // ⌈quorum · n_servers⌉ servers still have a usable path.
+        let quorum_needed =
+            ((self.scenario.quorum_frac() * topo.n_servers() as f64).ceil() as usize).max(1);
+        let mut quorum_lost = false;
+        let mut el_events: Vec<ElasticEventRecord> = Vec::new();
+        let mut retried_iterations = 0usize;
 
         for k in 0..self.scenario.iters {
             let mut script: Vec<FaultEvent> = Vec::new();
@@ -497,6 +624,9 @@ impl<'a> ScenarioRunner<'a> {
                     if !path_exists(&topo, &usable, &leaf_ok, &main_servers) {
                         path_lost = true;
                     }
+                    if elastic && usable_servers(&topo, &usable, &leaf_ok) < quorum_needed {
+                        quorum_lost = true;
+                    }
                     let frac = e.at_iter - k as f64;
                     if frac <= 0.0 {
                         world.note_switch_failure(e.target, e.action);
@@ -515,6 +645,9 @@ impl<'a> ScenarioRunner<'a> {
                     if !path_exists(&topo, &usable, &leaf_ok, &main_servers) {
                         path_lost = true;
                     }
+                    if elastic && usable_servers(&topo, &usable, &leaf_ok) < quorum_needed {
+                        quorum_lost = true;
+                    }
                     let frac = e.at_iter - k as f64;
                     if frac <= 0.0 {
                         // On-the-boundary events are known before the
@@ -531,7 +664,20 @@ impl<'a> ScenarioRunner<'a> {
                     }
                 }
             }
-            let out = self.drive(&world, &ctx, script, switch_script, self.verify_data);
+            // Membership changes on (or before) this boundary are standing
+            // knowledge too: the NIC repairs an expand rides on were just
+            // noted plan-time above, so the rejoining server comes back
+            // healthy. Each applied change is one transition = one epoch
+            // bump = one plan-cache invalidation.
+            let mut changed = false;
+            while mi < membership.len() && membership[mi].at_iter <= k as f64 {
+                changed |= apply_membership(&mut world, &membership[mi].change, k, &mut el_events);
+                mi += 1;
+            }
+            if changed {
+                ctx.rebuild_elastic(&world);
+            }
+            let mut out = self.drive(&world, &ctx, script, switch_script, self.verify_data);
             // Mid-flight events become standing knowledge for the *next*
             // iteration (the OOB broadcast of §4.1).
             for e in folds {
@@ -539,6 +685,76 @@ impl<'a> ScenarioRunner<'a> {
             }
             for e in switch_folds {
                 world.note_switch_failure(e.target, e.action);
+            }
+            if out.crashed && elastic {
+                // Elastic recovery — the no-crash-while-quorum-exists path:
+                // consume the membership events landing inside this
+                // iteration (shrinks, promotions), shrink around any active
+                // server the ground truth says has no usable path left,
+                // rebuild the groups on the survivors, and re-run the
+                // iteration. Repeats while it makes progress; gives up —
+                // crashing legitimately — only when quorum itself is gone.
+                loop {
+                    if usable_servers(&topo, &usable, &leaf_ok) < quorum_needed {
+                        quorum_lost = true;
+                        break;
+                    }
+                    let mut progressed = false;
+                    while mi < membership.len() && membership[mi].at_iter < (k + 1) as f64 {
+                        progressed |=
+                            apply_membership(&mut world, &membership[mi].change, k, &mut el_events);
+                        mi += 1;
+                    }
+                    let dead: Vec<ServerId> = world
+                        .active_servers()
+                        .into_iter()
+                        .filter(|&s| {
+                            !topo
+                                .nics_of_server(s)
+                                .any(|n| nic_connected(&topo, &usable, &leaf_ok, n))
+                        })
+                        .collect();
+                    if !dead.is_empty() {
+                        match world.shrink(&dead) {
+                            Ok(tr) => {
+                                el_events.push(ElasticEventRecord {
+                                    iter: k,
+                                    kind: tr.kind,
+                                    servers: tr.servers,
+                                    epoch: tr.epoch,
+                                });
+                                progressed = true;
+                            }
+                            Err(_) => {
+                                // Shrinking would leave no active server.
+                                quorum_lost = true;
+                                break;
+                            }
+                        }
+                    }
+                    if !progressed {
+                        break;
+                    }
+                    ctx.rebuild_elastic(&world);
+                    let retry = self.drive(&world, &ctx, Vec::new(), Vec::new(), self.verify_data);
+                    retried_iterations += 1;
+                    // The crashed attempt's partial work is real: its time
+                    // and byte counters accumulate into the iteration.
+                    let attempt = out;
+                    out = retry;
+                    out.time += attempt.time;
+                    out.migrations += attempt.migrations;
+                    out.retransmitted_bytes += attempt.retransmitted_bytes;
+                    out.wasted_bytes += attempt.wasted_bytes;
+                    out.wire_bytes += attempt.wire_bytes;
+                    out.events_popped += attempt.events_popped;
+                    out.domains_touched += attempt.domains_touched;
+                    out.resident_resources =
+                        out.resident_resources.max(attempt.resident_resources);
+                    if !out.crashed {
+                        break;
+                    }
+                }
             }
             total_time += out.time;
             records.push(IterationRecord {
@@ -598,6 +814,23 @@ impl<'a> ScenarioRunner<'a> {
             max_overhead: self.scenario.max_overhead,
             serving: None,
             recovery: None,
+            elastic: if elastic {
+                Some(ElasticSummary {
+                    shrinks: el_events.iter().filter(|e| e.kind == ElasticKind::Shrink).count(),
+                    expands: el_events.iter().filter(|e| e.kind == ElasticKind::Expand).count(),
+                    promotions: el_events
+                        .iter()
+                        .filter(|e| e.kind == ElasticKind::Promote)
+                        .count(),
+                    retried_iterations,
+                    quorum_frac: self.scenario.quorum_frac(),
+                    quorum_lost,
+                    final_active_servers: world.n_active_servers(),
+                    events: el_events,
+                })
+            } else {
+                None
+            },
             events_popped: records.iter().map(|r| r.events_popped).sum(),
             domains_touched: records.iter().map(|r| r.domains_touched).sum(),
             resident_resources: records
@@ -675,6 +908,46 @@ fn path_exists(topo: &Topology, usable: &[bool], leaf_ok: &[bool], servers: &[Se
         .all(|&s| topo.nics_of_server(s).any(|n| nic_connected(topo, usable, leaf_ok, n)))
 }
 
+/// Servers with at least one connected NIC — the ground truth the
+/// no-crash-while-quorum-exists invariant counts against.
+fn usable_servers(topo: &Topology, usable: &[bool], leaf_ok: &[bool]) -> usize {
+    (0..topo.n_servers())
+        .filter(|&s| topo.nics_of_server(s).any(|n| nic_connected(topo, usable, leaf_ok, n)))
+        .count()
+}
+
+/// Apply one compiled membership change to the world, recording the
+/// transition. Guarded so a change the crash-recovery path already
+/// performed (e.g. a ground-truth shrink of a server whose `server_down`
+/// membership event is only now being consumed) is a clean no-op.
+fn apply_membership(
+    world: &mut CommWorld,
+    change: &MembershipChange,
+    iter: usize,
+    out: &mut Vec<ElasticEventRecord>,
+) -> bool {
+    let tr = match change {
+        MembershipChange::Down(s) if world.is_active(*s) => world.shrink(&[*s]).ok(),
+        MembershipChange::Up(s) if !world.is_active(*s) => world.expand(&[*s]).ok(),
+        MembershipChange::Promote { dead, .. } if world.is_active(*dead) => {
+            world.promote_spare(*dead).ok()
+        }
+        _ => None,
+    };
+    match tr {
+        Some(tr) => {
+            out.push(ElasticEventRecord {
+                iter,
+                kind: tr.kind,
+                servers: tr.servers,
+                epoch: tr.epoch,
+            });
+            true
+        }
+        None => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -689,6 +962,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns,
         }
     }
@@ -785,6 +1059,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 1,
@@ -818,6 +1093,7 @@ mod tests {
             max_overhead: None,
             cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::ReplicaDown {
                 replica: 1,
                 at: 0.3,
@@ -862,6 +1138,7 @@ mod tests {
                 }),
             }),
             recovery: None,
+            quorum: None,
             patterns,
         }
     }
@@ -950,6 +1227,162 @@ mod tests {
         let eff = effective_preset(&sc, &Preset::testbed());
         assert_eq!(eff.topo.n_servers, 4);
         assert_eq!(eff.name, Preset::simai(4).name);
+    }
+
+    #[test]
+    fn server_down_shrinks_dp_and_completes_all_iterations() {
+        // The acceptance scenario: a `server_down` killing every NIC of
+        // server 3 on the 16-server leaf/spine cluster. The iteration it
+        // lands in crashes mid-flight, elastic recovery shrinks the DP
+        // membership around the dead server (one transition, one epoch
+        // bump = one plan-cache invalidation), and every iteration
+        // completes — the no-crash-while-quorum-exists invariant.
+        let sc = leaf_spine16(
+            vec![FaultPattern::ServerDown { server: 3, at: 1.4, restore_after: None }],
+            5,
+            11,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed, "elastic run must survive the whole-server loss");
+        assert_eq!(rep.iterations.len(), 5, "every iteration completes");
+        let el = rep.elastic.as_ref().expect("elastic scenario carries the summary");
+        assert_eq!(el.shrinks, 1);
+        assert_eq!(el.expands, 0);
+        assert_eq!(el.retried_iterations, 1, "the crashed iteration is re-run once");
+        assert!(!el.quorum_lost);
+        assert_eq!(el.final_active_servers, 15);
+        assert_eq!(el.events.len(), 1, "one membership change = one transition");
+        assert_eq!(el.events[0].servers, vec![3]);
+        assert_eq!(el.events[0].iter, 1);
+        // Post-shrink iterations plan on the survivors: no migrations, and
+        // the shrunk DP ring times close to healthy (the dead server's
+        // standing NIC failures are invisible to the rebuilt groups).
+        for r in &rep.iterations[2..] {
+            assert!(!r.crashed);
+            assert_eq!(r.migrations, 0, "rebuilt groups exclude the dead server");
+        }
+        let j = rep.to_json().pretty();
+        assert!(j.contains("\"elastic\""));
+        assert!(j.contains("\"shrink\""));
+    }
+
+    #[test]
+    fn server_replace_promotes_the_spare_and_keeps_dp_width() {
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        use crate::scenario::spec::ClusterSpec;
+        // Server 15 is held out as a spare, so the workload fills 15
+        // servers; when server 2 dies, the spare is promoted in one
+        // transition and the DP width never changes.
+        let sc = FaultScenario {
+            name: "replace-unit".into(),
+            seed: 13,
+            iters: 5,
+            workload: Workload::Training { tp: 8, dp: 15, pp: 1, bytes_per_rank: 1 << 22 },
+            max_overhead: None,
+            cluster: Some(ClusterSpec {
+                n_servers: 16,
+                fabric: FabricConfig::leaf_spine_with(LeafSpineCfg {
+                    pod_size: 4,
+                    spines: 4,
+                    oversubscription: 2.0,
+                    ..LeafSpineCfg::default()
+                }),
+            }),
+            recovery: None,
+            quorum: None,
+            patterns: vec![FaultPattern::ServerReplace { server: 2, spare: 15, at: 1.4 }],
+        };
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed);
+        assert_eq!(rep.iterations.len(), 5);
+        let el = rep.elastic.as_ref().unwrap();
+        assert_eq!(el.promotions, 1);
+        assert_eq!(el.shrinks, 0);
+        assert_eq!(el.final_active_servers, 15, "promotion keeps the world size");
+        assert_eq!(el.events[0].servers, vec![2, 15], "[dead, spare]");
+        assert!(rep.to_json().pretty().contains("\"promote\""));
+    }
+
+    #[test]
+    fn rolling_maintenance_shrinks_then_expands_at_boundaries() {
+        // Maintenance windows land on iteration boundaries: the runner
+        // shrinks proactively (no crash, no retry) and expands the server
+        // back when its NICs repair at the window end.
+        let sc = dp16(
+            vec![FaultPattern::RollingMaintenance {
+                servers: vec![0],
+                start: 1.0,
+                window: 1.0,
+            }],
+            4,
+            3,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed);
+        assert_eq!(rep.iterations.len(), 4);
+        let el = rep.elastic.as_ref().unwrap();
+        assert_eq!(el.shrinks, 1);
+        assert_eq!(el.expands, 1);
+        assert_eq!(el.retried_iterations, 0, "boundary changes never crash");
+        assert_eq!(el.final_active_servers, 2, "expanded back to full");
+        // The maintenance iteration runs on half the world; afterwards the
+        // expanded world is healthy again.
+        assert!(!rep.iterations[3].crashed);
+    }
+
+    #[test]
+    fn quorum_loss_is_the_only_legal_elastic_crash() {
+        // Killing both testbed servers busts any quorum: the run crashes,
+        // and the invariant checker accepts it only because quorum was
+        // genuinely lost.
+        let sc = dp16(
+            vec![
+                FaultPattern::ServerDown { server: 0, at: 1.3, restore_after: None },
+                FaultPattern::ServerDown { server: 1, at: 1.3, restore_after: None },
+            ],
+            4,
+            5,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.crashed);
+        let el = rep.elastic.as_ref().unwrap();
+        assert!(el.quorum_lost);
+        rep.check_invariants().unwrap();
+        assert!(rep.iterations.len() < 4, "run stops at the quorum loss");
+    }
+
+    #[test]
+    fn quorum_override_tightens_the_survival_bar() {
+        // With `quorum: 1.0`, losing even one of 16 servers is a quorum
+        // loss: the same scenario that survives at the default 0.5 now
+        // crashes — and legally so.
+        let mut sc = leaf_spine16(
+            vec![FaultPattern::ServerDown { server: 3, at: 1.4, restore_after: None }],
+            5,
+            11,
+        );
+        sc.quorum = Some(1.0);
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.crashed);
+        let el = rep.elastic.as_ref().unwrap();
+        assert!(el.quorum_lost);
+        assert!((el.quorum_frac - 1.0).abs() < 1e-12);
+        rep.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn non_elastic_reports_omit_the_elastic_key() {
+        let sc = dp16(
+            vec![FaultPattern::OneShot { at: 1.5, nic: 0, action: FaultAction::FailNic }],
+            3,
+            7,
+        );
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(rep.elastic.is_none());
+        assert!(!rep.to_json().pretty().contains("\"elastic\""));
     }
 
     #[test]

@@ -130,6 +130,42 @@ pub enum FaultPattern {
     /// request engine re-routes the replica's in-flight requests, replays
     /// their lost prefills, and counts the wasted work.
     ReplicaDown { replica: usize, at: f64, restore_after: Option<f64> },
+    /// Whole-server loss under a *training* workload: every NIC of `server`
+    /// fails at `at` (optionally all repaired `restore_after` later). The
+    /// runner reacts elastically — `CommWorld::shrink` re-ranks the
+    /// survivors, DP shrinks around the lost server, and the job keeps
+    /// iterating instead of crashing while quorum holds; a restore expands
+    /// the membership back.
+    ServerDown { server: usize, at: f64, restore_after: Option<f64> },
+    /// Whole-server loss with a registered spare: `spare` is held out of
+    /// the initial membership (the layout fills one server fewer), every
+    /// NIC of `server` fails at `at`, and the runner promotes the spare in
+    /// its place — one membership transition, world size unchanged.
+    ServerReplace { server: usize, spare: usize, at: f64 },
+    /// Rolling maintenance: each listed server is drained in turn — all
+    /// its NICs down at `start + i × window`, repaired a `window` later —
+    /// so the membership shrinks and re-expands server by server.
+    RollingMaintenance { servers: Vec<usize>, start: f64, window: f64 },
+}
+
+/// Every NIC of `server` fails at `at`; all repaired `restore_after` later
+/// when given. The whole-server building block `ServerDown`,
+/// `ServerReplace` and `RollingMaintenance` compile through (the
+/// NIC-script shape `ReplicaDown` established, one server at a time).
+fn server_outage(
+    topo: &TopologyConfig,
+    server: usize,
+    at: f64,
+    restore_after: Option<f64>,
+    out: &mut Vec<ScenarioEvent>,
+) {
+    for rail in 0..topo.nics_per_server {
+        let nic = server * topo.nics_per_server + rail;
+        out.push(ScenarioEvent { at_iter: at, nic, action: FaultAction::FailNic });
+        if let Some(after) = restore_after {
+            out.push(ScenarioEvent { at_iter: at + after, nic, action: FaultAction::Repair });
+        }
+    }
 }
 
 /// The seeded NIC draw shared by [`FaultPattern::RandomMultiFault`] and the
@@ -155,7 +191,21 @@ impl FaultPattern {
             FaultPattern::UplinkFlap { .. } => "uplink_flap",
             FaultPattern::OversubSaturation { .. } => "oversub_saturation",
             FaultPattern::ReplicaDown { .. } => "replica_down",
+            FaultPattern::ServerDown { .. } => "server_down",
+            FaultPattern::ServerReplace { .. } => "server_replace",
+            FaultPattern::RollingMaintenance { .. } => "rolling_maintenance",
         }
+    }
+
+    /// Whether this pattern drives elastic membership changes (whole-server
+    /// shrink/expand/promotion) in the runner.
+    pub fn is_elastic(&self) -> bool {
+        matches!(
+            self,
+            FaultPattern::ServerDown { .. }
+                | FaultPattern::ServerReplace { .. }
+                | FaultPattern::RollingMaintenance { .. }
+        )
     }
 
     /// Whether this pattern targets the switch tier (and therefore needs a
@@ -369,6 +419,20 @@ impl FaultPattern {
                     }
                 }
             }
+            FaultPattern::ServerDown { server, at, restore_after } => {
+                server_outage(topo, *server, *at, *restore_after, out);
+            }
+            FaultPattern::ServerReplace { server, at, .. } => {
+                // The dead server never repairs — its replacement is the
+                // promoted spare, whose NICs were healthy all along.
+                server_outage(topo, *server, *at, None, out);
+            }
+            FaultPattern::RollingMaintenance { servers, start, window } => {
+                for (i, &server) in servers.iter().enumerate() {
+                    let at = start + i as f64 * window;
+                    server_outage(topo, server, at, Some(*window), out);
+                }
+            }
             // Switch-scoped patterns compile through `compile_switch`.
             FaultPattern::LeafSwitchDown { .. }
             | FaultPattern::SpineDegrade { .. }
@@ -455,6 +519,20 @@ impl FaultPattern {
                     None => j,
                 }
             }
+            FaultPattern::ServerDown { server, at, restore_after } => {
+                let j = j.set("server", *server).set("at", *at);
+                match restore_after {
+                    Some(a) => j.set("restore_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::ServerReplace { server, spare, at } => {
+                j.set("server", *server).set("spare", *spare).set("at", *at)
+            }
+            FaultPattern::RollingMaintenance { servers, start, window } => j
+                .set("servers", usize_arr(servers))
+                .set("start", *start)
+                .set("window", *window),
         }
     }
 
@@ -539,6 +617,21 @@ impl FaultPattern {
                 replica: req_usize(j, "replica")?,
                 at: req_f64(j, "at")?,
                 restore_after: j.get("restore_after").and_then(Json::as_f64),
+            }),
+            "server_down" => Ok(FaultPattern::ServerDown {
+                server: req_usize(j, "server")?,
+                at: req_f64(j, "at")?,
+                restore_after: j.get("restore_after").and_then(Json::as_f64),
+            }),
+            "server_replace" => Ok(FaultPattern::ServerReplace {
+                server: req_usize(j, "server")?,
+                spare: req_usize(j, "spare")?,
+                at: req_f64(j, "at")?,
+            }),
+            "rolling_maintenance" => Ok(FaultPattern::RollingMaintenance {
+                servers: req_usize_arr(j, "servers")?,
+                start: req_f64(j, "start")?,
+                window: req_f64(j, "window")?,
             }),
             other => Err(format!("unknown pattern kind {other:?}")),
         }
@@ -747,7 +840,51 @@ pub struct FaultScenario {
     /// `recovery` block. `None` = no arm evaluation and no report key, so
     /// pre-recovery golden traces are byte-identical.
     pub recovery: Option<RecoveryConfig>,
+    /// Quorum fraction for elastic scenarios: the job survives whole-server
+    /// loss as long as at least `ceil(quorum × n_servers)` servers keep a
+    /// usable path. `None` = the default [`DEFAULT_QUORUM`]; serialized only
+    /// when set, so pre-elastic scenario files (and traces) are unchanged.
+    pub quorum: Option<f64>,
     pub patterns: Vec<FaultPattern>,
+}
+
+/// Default quorum fraction for elastic scenarios: a strict majority of the
+/// cluster's servers must keep a usable path for the job to keep going.
+pub const DEFAULT_QUORUM: f64 = 0.5;
+
+/// One elastic membership change, in the same iteration-relative time base
+/// as [`ScenarioEvent`]. Compiled from the elastic patterns by
+/// [`FaultScenario::compile_membership`]; the runner folds due changes into
+/// `CommWorld::shrink` / `expand` / `promote_spare` at iteration
+/// boundaries (or mid-iteration, when the change is what rescues a crashed
+/// collective).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MembershipEvent {
+    pub at_iter: f64,
+    pub change: MembershipChange,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum MembershipChange {
+    /// The server leaves the active membership (shrink).
+    Down(usize),
+    /// The server rejoins the active membership (expand).
+    Up(usize),
+    /// The dead server is replaced by the registered spare (promotion).
+    Promote { dead: usize, spare: usize },
+}
+
+impl MembershipChange {
+    fn sort_key(&self) -> (u8, usize) {
+        match self {
+            // Ups sort before downs at the same instant so a rolling
+            // pattern's back-to-back expand/shrink keeps the membership
+            // maximal between windows.
+            MembershipChange::Up(s) => (0, *s),
+            MembershipChange::Promote { dead, .. } => (1, *dead),
+            MembershipChange::Down(s) => (2, *s),
+        }
+    }
 }
 
 impl FaultPattern {
@@ -870,6 +1007,35 @@ impl FaultPattern {
                 }
                 Ok(())
             }
+            FaultPattern::ServerDown { server, .. } => servers_ok(&[*server]),
+            FaultPattern::ServerReplace { server, spare, .. } => {
+                servers_ok(&[*server, *spare])?;
+                if server == spare {
+                    return Err(format!(
+                        "server_replace: server {server} cannot be its own spare"
+                    ));
+                }
+                Ok(())
+            }
+            FaultPattern::RollingMaintenance { servers, window, .. } => {
+                if servers.is_empty() {
+                    return Err("rolling_maintenance: servers must be non-empty".to_string());
+                }
+                if !(*window > 0.0 && window.is_finite()) {
+                    return Err(
+                        "rolling_maintenance: window must be a positive finite time".to_string()
+                    );
+                }
+                let mut seen = servers.clone();
+                seen.sort_unstable();
+                seen.dedup();
+                if seen.len() != servers.len() {
+                    return Err(
+                        "rolling_maintenance: servers must be distinct".to_string()
+                    );
+                }
+                servers_ok(servers)
+            }
             // Switch-scoped patterns were fully handled above.
             _ => unreachable!(),
         }
@@ -880,6 +1046,77 @@ impl FaultScenario {
     /// The fabric this scenario's topology is built over.
     pub fn fabric_config(&self) -> FabricConfig {
         self.cluster.as_ref().map(|c| c.fabric.clone()).unwrap_or_else(FabricConfig::ideal)
+    }
+
+    /// Whether any pattern drives elastic membership changes.
+    pub fn is_elastic(&self) -> bool {
+        self.patterns.iter().any(FaultPattern::is_elastic)
+    }
+
+    /// The effective quorum fraction (explicit `quorum` or the default).
+    pub fn quorum_frac(&self) -> f64 {
+        self.quorum.unwrap_or(DEFAULT_QUORUM)
+    }
+
+    /// Spare servers held out of the initial membership (the
+    /// `server_replace` spares, in declaration order).
+    pub fn spare_servers(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for p in &self.patterns {
+            if let FaultPattern::ServerReplace { spare, .. } = p {
+                if !out.contains(spare) {
+                    out.push(*spare);
+                }
+            }
+        }
+        out
+    }
+
+    /// Expand the elastic patterns into the deterministic membership-change
+    /// script (sorted by time; same-instant ups sort before downs). Empty
+    /// for non-elastic scenarios.
+    pub fn compile_membership(&self) -> Vec<MembershipEvent> {
+        let mut out = Vec::new();
+        for p in &self.patterns {
+            match p {
+                FaultPattern::ServerDown { server, at, restore_after } => {
+                    out.push(MembershipEvent {
+                        at_iter: *at,
+                        change: MembershipChange::Down(*server),
+                    });
+                    if let Some(after) = restore_after {
+                        out.push(MembershipEvent {
+                            at_iter: at + after,
+                            change: MembershipChange::Up(*server),
+                        });
+                    }
+                }
+                FaultPattern::ServerReplace { server, spare, at } => {
+                    out.push(MembershipEvent {
+                        at_iter: *at,
+                        change: MembershipChange::Promote { dead: *server, spare: *spare },
+                    });
+                }
+                FaultPattern::RollingMaintenance { servers, start, window } => {
+                    for (i, &server) in servers.iter().enumerate() {
+                        let at = start + i as f64 * window;
+                        out.push(MembershipEvent {
+                            at_iter: at,
+                            change: MembershipChange::Down(server),
+                        });
+                        out.push(MembershipEvent {
+                            at_iter: at + window,
+                            change: MembershipChange::Up(server),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.sort_by(|a, b| {
+            a.at_iter.total_cmp(&b.at_iter).then(a.change.sort_key().cmp(&b.change.sort_key()))
+        });
+        out
     }
 
     /// Validate every pattern against the topology and fabric shape. Called
@@ -927,6 +1164,55 @@ impl FaultScenario {
                 "scenario {:?}: replica_down requires the request_serving workload",
                 self.name
             ));
+        }
+        if let Some(q) = self.quorum {
+            if !(q.is_finite() && q > 0.0 && q <= 1.0) {
+                return Err(format!(
+                    "scenario {:?}: quorum must be a fraction in (0, 1]",
+                    self.name
+                ));
+            }
+        }
+        if self.is_elastic() {
+            let Workload::Training { tp, pp, dp, .. } = &self.workload else {
+                return Err(format!(
+                    "scenario {:?}: elastic patterns (server_down / server_replace / \
+                     rolling_maintenance) require a training workload — use replica_down \
+                     for serving",
+                    self.name
+                ));
+            };
+            if topo.gpus_per_server % (tp * pp) != 0 {
+                return Err(format!(
+                    "scenario {:?}: DP-shrink needs tp×pp ({}) to divide gpus_per_server \
+                     ({}) so any surviving membership still fills the layout",
+                    self.name,
+                    tp * pp,
+                    topo.gpus_per_server
+                ));
+            }
+            let spares = self.spare_servers();
+            let active = topo.n_servers - spares.len();
+            if tp * dp * pp != active * topo.gpus_per_server {
+                return Err(format!(
+                    "scenario {:?}: elastic training workload must fill the initial \
+                     membership of {} servers ({} ranks), got tp×dp×pp = {}",
+                    self.name,
+                    active,
+                    active * topo.gpus_per_server,
+                    tp * dp * pp
+                ));
+            }
+            for p in &self.patterns {
+                if let FaultPattern::ServerReplace { server, spare, .. } = p {
+                    if server == spare || spares.contains(server) {
+                        return Err(format!(
+                            "scenario {:?}: server_replace target {server} is itself a spare",
+                            self.name
+                        ));
+                    }
+                }
+            }
         }
         let fabric = Fabric::build(topo, &self.fabric_config());
         for p in &self.patterns {
@@ -1001,6 +1287,10 @@ impl FaultScenario {
             Some(r) => j.set("recovery", r.to_json()),
             None => j,
         };
+        let j = match self.quorum {
+            Some(q) => j.set("quorum", q),
+            None => j,
+        };
         j.set("patterns", patterns)
     }
 
@@ -1028,6 +1318,7 @@ impl FaultScenario {
                 Some(r) => Some(RecoveryConfig::from_json(r)?),
                 None => None,
             },
+            quorum: j.get("quorum").and_then(Json::as_f64),
             patterns,
         })
     }
@@ -1091,6 +1382,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![
                 FaultPattern::Flapping {
                     nic: 0,
@@ -1130,6 +1422,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::Flapping {
                 nic: 0,
                 start: 0.5,
@@ -1152,6 +1445,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::CorrelatedRail {
                 rail: 3,
                 servers: vec![0, 1],
@@ -1182,6 +1476,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.8,
                 count: 4,
@@ -1215,6 +1510,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::DegradeRamp {
                 nic: 2,
                 start: 1.0,
@@ -1245,6 +1541,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![p],
         };
         let bad_nic =
@@ -1280,6 +1577,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.5,
                 count: 3,
@@ -1315,6 +1613,7 @@ mod tests {
             max_overhead: Some(2.5),
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![
                 FaultPattern::OneShot { at: 1.35, nic: 0, action: FaultAction::Degrade(0.4) },
                 FaultPattern::Flapping {
@@ -1383,6 +1682,7 @@ mod tests {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 0,
@@ -1406,6 +1706,7 @@ mod tests {
             max_overhead: None,
             cluster: Some(ClusterSpec { n_servers: 2 * replicas, fabric: FabricConfig::ideal() }),
             recovery: None,
+            quorum: None,
             patterns,
         }
     }
@@ -1486,6 +1787,7 @@ mod tests {
             max_overhead: None,
             cluster: cluster16(),
             recovery: None,
+            quorum: None,
             patterns,
         }
     }

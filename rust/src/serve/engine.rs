@@ -181,34 +181,44 @@ struct Engine {
 impl Engine {
     /// Apply every fault at or before `t` to the world, then refresh
     /// replica liveness and nominal comm times if the health epoch moved.
+    /// Faults are processed one timestamp-group at a time and the reprobe
+    /// runs at the *event's* time, not the caller's ceiling: a server whose
+    /// NICs all repair at 0.8 is revived at 0.8 even when the engine's next
+    /// action is much later — the same reprobe path NIC repairs take, so a
+    /// whole-server repair is never treated as a permanent loss.
     fn fold_until(&mut self, t: f64) {
-        let mut changed = false;
         while self.fi < self.faults.len() && self.faults[self.fi].at() <= t {
-            match self.faults[self.fi] {
-                Fault::Nic(e) => {
-                    self.world.note_failure(e.nic, e.action);
-                    match e.action {
-                        FaultAction::FailNic | FaultAction::CutCable => self.nic_up[e.nic] = false,
-                        FaultAction::Repair | FaultAction::Degrade(_) => self.nic_up[e.nic] = true,
-                    }
-                }
-                Fault::Switch(e) => {
-                    self.world.note_switch_failure(e.target, e.action);
-                    if let SwitchTarget::Leaf(l) = e.target {
+            let at = self.faults[self.fi].at();
+            while self.fi < self.faults.len() && self.faults[self.fi].at() <= at {
+                match self.faults[self.fi] {
+                    Fault::Nic(e) => {
+                        self.world.note_failure(e.nic, e.action);
                         match e.action {
-                            SwitchAction::Down => self.leaf_up[l] = false,
-                            SwitchAction::Up => self.leaf_up[l] = true,
-                            SwitchAction::Degrade(_) => {}
+                            FaultAction::FailNic | FaultAction::CutCable => {
+                                self.nic_up[e.nic] = false
+                            }
+                            FaultAction::Repair | FaultAction::Degrade(_) => {
+                                self.nic_up[e.nic] = true
+                            }
+                        }
+                    }
+                    Fault::Switch(e) => {
+                        self.world.note_switch_failure(e.target, e.action);
+                        if let SwitchTarget::Leaf(l) = e.target {
+                            match e.action {
+                                SwitchAction::Down => self.leaf_up[l] = false,
+                                SwitchAction::Up => self.leaf_up[l] = true,
+                                SwitchAction::Degrade(_) => {}
+                            }
                         }
                     }
                 }
+                self.fi += 1;
             }
-            self.fi += 1;
-            changed = true;
-        }
-        if changed && self.world.epoch() != self.last_epoch {
-            self.last_epoch = self.world.epoch();
-            self.reprobe_all(t);
+            if self.world.epoch() != self.last_epoch {
+                self.last_epoch = self.world.epoch();
+                self.reprobe_all(at);
+            }
         }
     }
 
@@ -226,6 +236,7 @@ impl Engine {
     }
 
     fn reprobe_all(&mut self, t: f64) {
+        let mut revived = Vec::new();
         for i in 0..self.replicas.len() {
             if !self.replica_connected(i) {
                 self.kill_replica(i, t);
@@ -241,10 +252,12 @@ impl Engine {
                 Some((kv, ar)) => {
                     let r = &mut self.replicas[i];
                     if !r.alive {
-                        // Restored (e.g. replica_down with restore_after):
-                        // resumes serving from the restore instant.
+                        // Restored (e.g. replica_down with restore_after, or
+                        // a whole-server repair): resumes serving from the
+                        // restore instant.
                         r.alive = true;
                         r.clock = r.clock.max(t);
+                        revived.push(i);
                     }
                     r.kv_time = kv;
                     r.ar_time = ar;
@@ -253,6 +266,37 @@ impl Engine {
                 // usable schedule — treat as down all the same.
                 None => self.kill_replica(i, t),
             }
+        }
+        for i in revived {
+            self.adopt_queued(i, t);
+        }
+    }
+
+    /// A revived replica adopts queued (not in-flight) work from the
+    /// busiest survivor, so a repair actually restores serving capacity
+    /// instead of leaving the replica idle behind someone else's backlog:
+    /// requests move from the back of the longest live queue while it runs
+    /// more than one deeper than the revived replica's. Deterministic
+    /// (longest queue, ties to the lowest index).
+    fn adopt_queued(&mut self, i: usize, t: f64) {
+        loop {
+            let mut longest: Option<usize> = None;
+            for (j, r) in self.replicas.iter().enumerate() {
+                if j != i
+                    && r.alive
+                    && longest.is_none_or(|l| r.queue.len() > self.replicas[l].queue.len())
+                {
+                    longest = Some(j);
+                }
+            }
+            let Some(j) = longest else { break };
+            if self.replicas[j].queue.len() <= self.replicas[i].queue.len() + 1 {
+                break;
+            }
+            let mut req = self.replicas[j].queue.pop_back().expect("longest queue is non-empty");
+            req.ready_at = req.ready_at.max(t);
+            self.ledger.rerouted += 1;
+            self.replicas[i].queue.push_back(req);
         }
     }
 
@@ -678,6 +722,40 @@ mod tests {
         // Everything after the death completes on replica 0.
         assert!(res.records.iter().filter(|r| r.replica == 1).all(|r| r.finish <= 0.4 + 1.0));
         assert!(res.records.iter().any(|r| r.replays > 0), "some prefills replayed");
+    }
+
+    #[test]
+    fn dead_replica_is_revived_and_adopts_queued_work_after_repair() {
+        let preset = Preset::simai(4);
+        let topo = &preset.topo;
+        // Heavy load that ends *before* the repair window closes: anything
+        // the revived replica completes after t=0.8 is adopted backlog, not
+        // a fresh arrival routed to it.
+        let cfg = EngineCfg {
+            arrivals: ArrivalSpec::Poisson { rps: 200.0, duration: 0.75 },
+            ..cfg(200.0, 0.75, 2)
+        };
+        // Replica 1 (servers 2, 3) fully dies at 0.4 — every NIC of both
+        // servers — and every NIC repairs at 0.8 (the repair window).
+        let mut events: Vec<ScenarioEvent> = Vec::new();
+        for nic in 2 * topo.nics_per_server..4 * topo.nics_per_server {
+            events.push(ScenarioEvent { at_iter: 0.4, nic, action: FaultAction::FailNic });
+            events.push(ScenarioEvent { at_iter: 0.8, nic, action: FaultAction::Repair });
+        }
+        events.sort_by(|a, b| a.at_iter.total_cmp(&b.at_iter).then(a.nic.cmp(&b.nic)));
+        let res = run_request_engine(&preset, &FabricConfig::ideal(), &cfg, &events, &[]);
+        assert_eq!(res.ledger.lost, 0, "replica 0 stays healthy: nothing may drop");
+        assert_eq!(res.ledger.lost_while_healthy, 0);
+        assert_eq!(res.records.len(), res.arrivals, "every request completes");
+        assert!(!res.all_down_ever);
+        // The regression: a fully-dead server pair must come back through
+        // the repair reprobe and serve again — queued work from replica 0's
+        // backlog is re-adopted after the repair window.
+        assert!(
+            res.records.iter().any(|r| r.replica == 1 && r.finish > 0.8),
+            "repaired replica must be re-adopted into service"
+        );
+        assert!(res.ledger.rerouted > 0, "backlog moved to the revived replica");
     }
 
     #[test]

@@ -45,6 +45,7 @@ pub fn scenario_for_k(name: &str, k: usize, seed: u64) -> FaultScenario {
         max_overhead: None,
         cluster: None,
         recovery: None,
+        quorum: None,
         patterns: vec![FaultPattern::RandomMultiFault { k, at: 1.5 }],
     }
 }

@@ -152,6 +152,33 @@ pub fn training_groups(world: &CommWorld, par: &ParallelConfig) -> TrainingGroup
     }
 }
 
+/// Build the process groups of a parallel layout over the *active*
+/// membership of an elastic world: layout ranks are re-mapped through the
+/// surviving-GPU re-ranking (`CommWorld::active_ranks`), so every group
+/// excludes shrunk-away servers. With full membership this is bit-identical
+/// to [`training_groups`].
+pub fn training_groups_elastic(world: &CommWorld, par: &ParallelConfig) -> TrainingGroups {
+    let layout = ParallelLayout::new(par.tp, par.dp, par.pp);
+    TrainingGroups {
+        tp: world.tp_groups_elastic(&layout),
+        pp: world.pp_pairs_elastic(&layout),
+        dp: world.dp_groups_elastic(&layout),
+    }
+}
+
+/// DP-shrink (or re-expand) a parallel config onto `n_active_ranks`
+/// surviving GPUs: tp and pp are structural and fixed, dp absorbs the whole
+/// membership change. The global batch is preserved — surviving replicas
+/// each process more microbatches rather than shrinking the batch.
+pub fn dp_shrink(par: &ParallelConfig, n_active_ranks: usize) -> ParallelConfig {
+    assert!(
+        n_active_ranks % (par.tp * par.pp) == 0 && n_active_ranks > 0,
+        "active ranks {n_active_ranks} not divisible by tp*pp = {}",
+        par.tp * par.pp
+    );
+    ParallelConfig { dp: n_active_ranks / (par.tp * par.pp), ..par.clone() }
+}
+
 /// The iteration's dominant cross-server collective — where scenario fault
 /// scripts land mid-flight: the DP gradient AllReduce when there is data
 /// parallelism, else the PP boundary SendRecv, else the TP AllReduce

@@ -167,15 +167,40 @@ fn golden_serving_dejavu_restart() {
 }
 
 #[test]
+fn golden_elastic_server_down() {
+    golden("elastic_server_down");
+}
+
+#[test]
+fn golden_elastic_server_replace() {
+    golden("elastic_server_replace");
+}
+
+#[test]
+fn golden_elastic_rolling_maintenance() {
+    golden("elastic_rolling_maintenance");
+}
+
+#[test]
 fn recovery_scenarios_carry_the_recovery_block() {
-    // The three recovery scenarios opt in via their "recovery" key, so
-    // their reports — and goldens — must carry the three-arm comparison.
-    for name in ["training_ckpt_rollback", "training_fast_failover", "serving_dejavu_restart"] {
+    // The recovery scenarios opt in via their "recovery" key, so their
+    // reports — and goldens — must carry the four-arm comparison.
+    for name in [
+        "training_ckpt_rollback",
+        "training_fast_failover",
+        "serving_dejavu_restart",
+        "elastic_server_down",
+    ] {
         let sc = load(name);
         assert!(sc.recovery.is_some(), "{name} must declare a recovery block");
         let trace = trace_of(&sc);
-        for key in ["\"recovery\"", "\"checkpoint_restart\"", "\"fast_failover\"", "\"gpu_hours_wasted\""]
-        {
+        for key in [
+            "\"recovery\"",
+            "\"elastic_shrink\"",
+            "\"checkpoint_restart\"",
+            "\"fast_failover\"",
+            "\"gpu_hours_wasted\"",
+        ] {
             assert!(trace.contains(key), "{name}: trace missing {key}");
         }
     }
@@ -187,8 +212,12 @@ fn pre_recovery_fixtures_carry_no_recovery_key() {
     // "recovery" block — the entire pre-existing corpus — must keep their
     // fixtures byte-identical, which in particular means no "recovery"
     // key ever appears in them.
-    let recovery_scenarios =
-        ["training_ckpt_rollback", "training_fast_failover", "serving_dejavu_restart"];
+    let recovery_scenarios = [
+        "training_ckpt_rollback",
+        "training_fast_failover",
+        "serving_dejavu_restart",
+        "elastic_server_down",
+    ];
     let dir = repo_root().join("rust/tests/fixtures");
     let mut checked = 0usize;
     for ent in fs::read_dir(&dir).unwrap() {
@@ -211,9 +240,37 @@ fn pre_recovery_fixtures_carry_no_recovery_key() {
 }
 
 #[test]
+fn pre_elastic_fixtures_carry_no_elastic_key() {
+    // The elastic membership summary is additive-only: scenarios without an
+    // elastic fault pattern — the entire pre-elastic corpus — must keep
+    // their fixtures byte-identical, which in particular means no top-level
+    // "elastic" report key ever appears in them.
+    let elastic_scenarios =
+        ["elastic_server_down", "elastic_server_replace", "elastic_rolling_maintenance"];
+    let dir = repo_root().join("rust/tests/fixtures");
+    let mut checked = 0usize;
+    for ent in fs::read_dir(&dir).unwrap() {
+        let path = ent.unwrap().path();
+        let fname = path.file_name().unwrap().to_string_lossy().into_owned();
+        let Some(stem) = fname.strip_suffix(".golden.json") else { continue };
+        if elastic_scenarios.contains(&stem) {
+            continue;
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(
+            !text.contains("\"elastic\":"),
+            "{fname}: pre-elastic fixture must not carry an elastic key"
+        );
+        checked += 1;
+    }
+    eprintln!("checked {checked} pre-elastic fixtures");
+}
+
+#[test]
 fn corpus_covers_required_scenario_kinds() {
-    // The acceptance floor: ≥6 distinct scenario kinds in the committed
-    // corpus, including flapping, correlated-rail and a fluctuation ramp.
+    // The acceptance floor: ≥14 distinct scenario kinds in the committed
+    // corpus, including flapping, correlated-rail, a fluctuation ramp and
+    // the elastic whole-server patterns.
     let dir = repo_root().join("scenarios");
     let mut kinds = std::collections::BTreeSet::new();
     let mut files = 0usize;
@@ -228,7 +285,7 @@ fn corpus_covers_required_scenario_kinds() {
             }
         }
     }
-    assert!(files >= 6, "corpus has only {files} scenarios");
+    assert!(files >= 20, "corpus has only {files} scenarios");
     for required in [
         "flapping",
         "correlated_rail",
@@ -243,8 +300,12 @@ fn corpus_covers_required_scenario_kinds() {
         "oversub_saturation",
         // Serving fault pattern of the request-serving corpus.
         "replica_down",
+        // Elastic-membership patterns (whole-server shrink/expand/promote).
+        "server_down",
+        "server_replace",
+        "rolling_maintenance",
     ] {
         assert!(kinds.contains(required), "corpus is missing a {required:?} scenario");
     }
-    assert!(kinds.len() >= 11, "only {} distinct kinds", kinds.len());
+    assert!(kinds.len() >= 14, "only {} distinct kinds", kinds.len());
 }

@@ -1,0 +1,212 @@
+//! Property tests for elastic world membership:
+//!
+//! 1. Shrinking a random server subset out of a world and expanding it back
+//!    yields elastic layout groups whose plans are bit-identical to a fresh
+//!    world's — membership round-trips leave no residue.
+//! 2. Random `server_down` sequences never crash the runner while quorum
+//!    holds (flat and leaf/spine clusters); conversely, killing past the
+//!    quorum bar crashes with `quorum_lost` — the only legal elastic crash.
+//! 3. Elastic scenario reports are bit-identical across same-seed runs.
+//!
+//! (`util::prop` is the mini driver — failures report a replayable seed.)
+
+use r2ccl::ccl::{CommWorld, ParallelLayout, StrategyChoice};
+use r2ccl::collectives::CollKind;
+use r2ccl::config::Preset;
+use r2ccl::fabric::{FabricConfig, LeafSpineCfg};
+use r2ccl::scenario::{ClusterSpec, FaultPattern, FaultScenario, ScenarioRunner, Workload};
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+const KINDS: [CollKind; 4] =
+    [CollKind::AllReduce, CollKind::ReduceScatter, CollKind::AllGather, CollKind::Broadcast];
+
+#[test]
+fn prop_shrink_then_expand_restores_fresh_world_plans() {
+    check("shrink+expand == fresh world", 20, |rng| {
+        let n_servers = *rng.choose(&[2usize, 4]);
+        let channels = *rng.choose(&[1usize, 2, 4]);
+        let preset = Preset::simai(n_servers);
+        let mut w = CommWorld::new(&preset, channels);
+        let fresh = CommWorld::new(&preset, channels);
+        let layout = ParallelLayout::new(8, n_servers, 1);
+
+        // Kill a random non-empty proper subset, compile on the shrunken
+        // membership (dirtying the plan cache), then bring everyone back.
+        let k = rng.range(1, n_servers);
+        let dead = rng.sample_indices(n_servers, k);
+        w.shrink(&dead).unwrap();
+        let shrunk = ParallelLayout::new(8, n_servers - k, 1);
+        for g in w.dp_groups_elastic(&shrunk) {
+            let _ = g.compile(CollKind::AllReduce, 1 << 18, 0, StrategyChoice::Auto);
+        }
+        w.expand(&dead).unwrap();
+        assert_eq!(
+            w.active_ranks(),
+            (0..n_servers * 8).collect::<Vec<_>>(),
+            "full membership re-rank must be the identity"
+        );
+
+        let kind = *rng.choose(&KINDS);
+        let bytes = rng.next_below(1 << 22) + 1;
+        let choice = StrategyChoice::Auto;
+        let pairs = [
+            (w.tp_groups_elastic(&layout), fresh.tp_groups_elastic(&layout)),
+            (w.dp_groups_elastic(&layout), fresh.dp_groups_elastic(&layout)),
+        ];
+        for (ours, theirs) in &pairs {
+            assert_eq!(ours.len(), theirs.len());
+            for (ga, gb) in ours.iter().zip(theirs) {
+                assert_eq!(ga.ranks(), gb.ranks(), "dead={dead:?}");
+                let (sa, ta) = ga.compile_uncached(kind, bytes, 0, choice);
+                let (sb, tb) = gb.compile_uncached(kind, bytes, 0, choice);
+                assert_eq!(ta, tb, "{kind:?} dead={dead:?}: strategy drifted");
+                assert_eq!(sa, sb, "{kind:?} dead={dead:?}: round-trip plan must be bit-identical");
+            }
+        }
+    });
+}
+
+/// A training scenario sized to `n_servers` (tp intra-server, one DP rank
+/// per server), on the flat testbed (`cluster: None`, 2 servers), a flat
+/// ideal fabric, or the 16-server leaf/spine cluster.
+fn training_scenario(n_servers: usize, leaf_spine: bool, iters: usize, seed: u64) -> FaultScenario {
+    let cluster = if leaf_spine {
+        Some(ClusterSpec {
+            n_servers,
+            fabric: FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 4,
+                oversubscription: 2.0,
+                ..LeafSpineCfg::default()
+            }),
+        })
+    } else if n_servers == 2 {
+        None
+    } else {
+        Some(ClusterSpec { n_servers, fabric: FabricConfig::ideal() })
+    };
+    FaultScenario {
+        name: "prop-elastic".into(),
+        seed,
+        iters,
+        workload: Workload::Training { tp: 8, dp: n_servers, pp: 1, bytes_per_rank: 1 << 22 },
+        max_overhead: None,
+        cluster,
+        recovery: None,
+        quorum: None,
+        patterns: vec![],
+    }
+}
+
+fn quorum_needed(n_servers: usize) -> usize {
+    ((0.5 * n_servers as f64).ceil() as usize).max(1)
+}
+
+#[test]
+fn prop_server_down_sequences_never_crash_while_quorum_holds() {
+    check("ServerDown under quorum", 12, |rng| {
+        // Flat 2/4/8-server clusters and the 16-server leaf/spine fabric.
+        let (n_servers, leaf_spine) = *rng.choose(&[(2, false), (4, false), (8, false), (16, true)]);
+        let iters = rng.range(3, 6);
+        let max_safe = n_servers - quorum_needed(n_servers);
+        let k = rng.range(1, max_safe + 1);
+        let dead = rng.sample_indices(n_servers, k);
+        let mut sc = training_scenario(n_servers, leaf_spine, iters, rng.next_u64());
+        for &s in &dead {
+            sc.patterns.push(FaultPattern::ServerDown {
+                server: s,
+                at: rng.range_f64(0.6, iters as f64 - 0.4),
+                restore_after: if rng.chance(0.3) { Some(rng.range_f64(0.5, 1.5)) } else { None },
+            });
+        }
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(!rep.crashed, "n={n_servers} dead={dead:?}: quorum held, run must survive");
+        assert_eq!(rep.iterations.len(), iters, "every iteration completes");
+        let el = rep.elastic.as_ref().expect("elastic scenario carries the summary");
+        assert!(!el.quorum_lost);
+        assert!(el.final_active_servers >= quorum_needed(n_servers));
+        // Every dead server appears in exactly one shrink transition
+        // (simultaneous deaths may coalesce into one multi-server shrink).
+        let shrunk: usize = el
+            .events
+            .iter()
+            .filter(|e| e.kind.label() == "shrink")
+            .map(|e| e.servers.len())
+            .sum();
+        assert_eq!(shrunk, k, "n={n_servers} dead={dead:?}");
+    });
+}
+
+#[test]
+fn prop_quorum_loss_crashes_and_is_flagged() {
+    check("quorum loss is the only elastic crash", 8, |rng| {
+        let (n_servers, leaf_spine) = *rng.choose(&[(2, false), (4, false), (16, true)]);
+        let iters = rng.range(3, 6);
+        // One server past the survival bar, all dying at the same instant.
+        let k = n_servers - quorum_needed(n_servers) + 1;
+        let at = rng.range_f64(1.1, iters as f64 - 0.4);
+        let mut sc = training_scenario(n_servers, leaf_spine, iters, rng.next_u64());
+        for s in rng.sample_indices(n_servers, k) {
+            sc.patterns.push(FaultPattern::ServerDown { server: s, at, restore_after: None });
+        }
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        rep.check_invariants().unwrap();
+        assert!(rep.crashed, "n={n_servers}: losing {k} servers busts the quorum");
+        let el = rep.elastic.as_ref().expect("elastic scenario carries the summary");
+        assert!(el.quorum_lost, "an elastic crash must be a quorum loss");
+        assert!(rep.iterations.len() < iters, "run stops at the quorum loss");
+    });
+}
+
+#[test]
+fn prop_same_seed_elastic_reports_are_bit_identical() {
+    check("same-seed elastic determinism", 10, |rng| {
+        let (n_servers, leaf_spine) = *rng.choose(&[(2, false), (4, false), (16, true)]);
+        let iters = rng.range(3, 6);
+        let mut sc = training_scenario(n_servers, leaf_spine, iters, rng.next_u64());
+        match rng.range(0, 3) {
+            0 => {
+                // A survivable-or-not random death sequence — crashes are
+                // fine here, they just have to be reproducible.
+                let k = rng.range(1, n_servers);
+                for s in rng.sample_indices(n_servers, k) {
+                    sc.patterns.push(FaultPattern::ServerDown {
+                        server: s,
+                        at: rng.range_f64(0.6, iters as f64 - 0.4),
+                        restore_after: if rng.chance(0.3) {
+                            Some(rng.range_f64(0.5, 1.5))
+                        } else {
+                            None
+                        },
+                    });
+                }
+            }
+            1 => {
+                // Hold the last server out as a spare and promote it.
+                let spare = n_servers - 1;
+                sc.workload =
+                    Workload::Training { tp: 8, dp: n_servers - 1, pp: 1, bytes_per_rank: 1 << 22 };
+                sc.patterns.push(FaultPattern::ServerReplace {
+                    server: rng.range(0, spare),
+                    spare,
+                    at: rng.range_f64(0.6, iters as f64 - 0.4),
+                });
+            }
+            _ => {
+                let k = rng.range(1, quorum_needed(n_servers) + 1);
+                sc.patterns.push(FaultPattern::RollingMaintenance {
+                    servers: rng.sample_indices(n_servers, k),
+                    start: rng.range_f64(0.6, 1.6),
+                    window: rng.range_f64(0.4, 1.2),
+                });
+            }
+        }
+        let a = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        a.check_invariants().unwrap();
+        let b = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        let (ja, jb) = (a.to_json().pretty(), b.to_json().pretty());
+        assert_eq!(ja, jb, "same seed must reproduce the elastic trace bit-for-bit");
+    });
+}

@@ -329,6 +329,7 @@ fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: match i {
                 0 => vec![FaultPattern::OneShot {
                     at: 1.5,
@@ -355,6 +356,7 @@ fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
             }),
         }),
         recovery: None,
+        quorum: None,
         patterns: vec![FaultPattern::LeafSwitchDown {
             pod: 0,
             rail: 0,

@@ -300,6 +300,7 @@ fn parallel_scenario_corpus_matches_serial() {
             max_overhead: None,
             cluster: None,
             recovery: None,
+            quorum: None,
             patterns: match i {
                 0 => vec![],
                 1 => vec![FaultPattern::OneShot {

@@ -61,6 +61,7 @@ fn rollback_scenario() -> FaultScenario {
         max_overhead: None,
         cluster: None,
         recovery: Some(RecoveryConfig::default()),
+        quorum: None,
         patterns: vec![FaultPattern::OneShot { at: 6.5, nic: 0, action: FaultAction::FailNic }],
     }
 }
@@ -132,9 +133,9 @@ fn lossless_never_wastes_more_than_any_baseline_arm_across_corpus() {
     let mut compared = 0usize;
     for row in &rows {
         let c = &row.compare;
-        // Every scenario reports all three arms with the GPU-hours metric.
+        // Every scenario reports all four arms with the GPU-hours metric.
         assert!(c.n_gpus > 0);
-        for arm in [&c.lossless, &c.checkpoint, &c.fast] {
+        for arm in [&c.lossless, &c.elastic, &c.checkpoint, &c.fast] {
             assert!(arm.gpu_hours_wasted.is_finite() && arm.gpu_hours_wasted >= 0.0);
             assert!(arm.total_time >= arm.useful_time - 1e-9, "{}", row.scenario);
         }
@@ -156,6 +157,15 @@ fn lossless_never_wastes_more_than_any_baseline_arm_across_corpus() {
             row.scenario,
             c.lossless.wasted_time,
             c.fast.wasted_time
+        );
+        // The elastic arm is the lossless library plus membership costs,
+        // so the same dominance is structural for it too.
+        assert!(
+            c.lossless.wasted_time <= c.elastic.wasted_time + 1e-9,
+            "{}: lossless wasted {} > elastic wasted {}",
+            row.scenario,
+            c.lossless.wasted_time,
+            c.elastic.wasted_time
         );
         if let Some(s) = c.speedup_vs_checkpoint {
             assert!(s >= 1.0 - 1e-9, "{}: speedup {s} below 1", row.scenario);
@@ -182,6 +192,7 @@ fn recovery_config_json_roundtrip_is_exact() {
         fast_restore: 0.45,
         fast_reinit: 0.21,
         fast_restart_s: 0.3,
+        elastic_reconfigure: 0.9375,
     };
     let j = cfg.to_json().pretty();
     let back = RecoveryConfig::from_json(&r2ccl::util::Json::parse(&j).unwrap()).unwrap();

@@ -66,6 +66,7 @@ fn random_scenario(rng: &mut Rng) -> FaultScenario {
         max_overhead: None,
         cluster: None,
         recovery: None,
+        quorum: None,
         patterns,
     }
 }

@@ -34,6 +34,7 @@ fn request_scenario(name: &str, seed: u64, patterns: Vec<FaultPattern>) -> Fault
         max_overhead: None,
         cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
         recovery: None,
+        quorum: None,
         patterns,
     }
 }
