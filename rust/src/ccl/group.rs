@@ -32,7 +32,7 @@ use std::rc::Rc;
 use std::sync::Arc;
 
 use crate::collectives::exec::{
-    ChannelRouting, ExecOptions, ExecReport, Executor, FaultAction, FaultEvent,
+    ChannelRouting, ExecOptions, ExecReport, Executor, FaultAction, FaultEvent, ObserveOptions,
 };
 use crate::collectives::{
     busbw, p2p, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter,
@@ -983,9 +983,38 @@ impl CommGroup {
         plane: &mut dyn DataPlane,
         elems: usize,
     ) -> ExecReport {
+        self.run_observed(
+            kind,
+            bytes_per_rank,
+            choice,
+            script,
+            switch_script,
+            ObserveOptions::default(),
+            plane,
+            elems,
+        )
+    }
+
+    /// Run a group collective with crisp fault scripts *plus* the
+    /// observability layer: a gray-fault script, standing gray state from
+    /// earlier iterations, and optional per-collective telemetry
+    /// collection. With a default [`ObserveOptions`] this is exactly
+    /// [`CommGroup::run_scripted`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_observed(
+        &self,
+        kind: CollKind,
+        bytes_per_rank: u64,
+        choice: StrategyChoice,
+        script: Vec<FaultEvent>,
+        switch_script: Vec<SwitchFaultEvent>,
+        observe: ObserveOptions,
+        plane: &mut dyn DataPlane,
+        elems: usize,
+    ) -> ExecReport {
         let (sched, _strategy) = self.compile(kind, bytes_per_rank, elems, choice);
         let shared = &self.shared;
-        Executor::new(
+        let mut exec = Executor::new(
             &shared.topo,
             &shared.timing,
             Arc::clone(&shared.routing),
@@ -994,8 +1023,17 @@ impl CommGroup {
         )
         .with_switch_script(switch_script)
         .with_initial_switch_faults(&shared.switch_failures.borrow())
-        .with_initial_faults(&shared.failures.borrow())
-        .run(&sched, plane)
+        .with_initial_faults(&shared.failures.borrow());
+        if !observe.gray_script.is_empty() || observe.gray_seed != 0 {
+            exec = exec.with_gray_script(observe.gray_script, observe.gray_seed);
+        }
+        if !observe.standing_gray.is_empty() {
+            exec = exec.with_initial_gray(&observe.standing_gray);
+        }
+        if observe.telemetry {
+            exec = exec.with_telemetry();
+        }
+        exec.run(&sched, plane)
     }
 
     /// Timing-only convenience: completion time of one group collective.

@@ -8,14 +8,18 @@
 //! and hot repair; R²CCL-Balance / R²CCL-AllReduce act earlier, at the
 //! schedule level, and then execute here unchanged.
 
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::sync::Arc;
 
 use crate::config::TimingConfig;
-use crate::detect::{pick_aux_nic, triangulate, Diagnosis};
+use crate::detect::{
+    pick_aux_nic, timed_probe, triangulate, Diagnosis, PairSample, RttSample,
+};
 use crate::fabric::{LeafId, SwitchAction, SwitchFaultEvent, SwitchTarget};
 use crate::netsim::{
-    clamp_degrade_factor, engine_for, recycle, Engine, Event, FaultPlane, FlowId, ScriptKind,
+    clamp_degrade_factor, engine_for, recycle, Engine, Event, FaultPlane, FlowId, GrayState,
+    GrayTarget, ScriptKind,
 };
 use crate::topology::{NicId, ResourceKey, Route, Topology};
 use crate::transport::{BackupPolicy, RegPolicy, RollbackCursor};
@@ -47,6 +51,16 @@ pub enum FaultAction {
     CutCable,
     Repair,
     Degrade(f64),
+}
+
+/// Scripted gray-fault injection: at time `at`, the element takes on the
+/// given gray state (which never trips the crisp detection pipeline — that
+/// is the definition of gray).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GrayFaultEvent {
+    pub at: f64,
+    pub target: GrayTarget,
+    pub gray: GrayState,
 }
 
 impl FaultAction {
@@ -154,6 +168,10 @@ pub enum TimelineEvent {
     Reprobed { nic: NicId },
     /// A scripted switch-scoped fault fired (leaf/spine fabrics only).
     SwitchFault { target: SwitchTarget, action: SwitchAction },
+    /// A scripted gray fault fired: the element now silently drops, jitters
+    /// or straggles. Only gray scenarios emit this entry, so pre-gray
+    /// golden traces never see it.
+    GrayFault { target: GrayTarget, gray: GrayState },
 }
 
 impl fmt::Display for TimelineEvent {
@@ -186,6 +204,14 @@ impl fmt::Display for TimelineEvent {
             TimelineEvent::SwitchFault { target, action } => {
                 write!(f, "switch fault: {} {}", action.label(), target.label())
             }
+            TimelineEvent::GrayFault { target, gray } => write!(
+                f,
+                "gray fault: {} loss {:.3} jitter {:.3} straggler {:.3}",
+                target.label(),
+                gray.loss_rate,
+                gray.latency_jitter,
+                gray.straggler_factor
+            ),
         }
     }
 }
@@ -239,6 +265,12 @@ impl TimelineEntry {
                     None => j,
                 }
             }
+            TimelineEvent::GrayFault { target, gray } => j
+                .set("event", "gray_fault")
+                .set("target", target.label())
+                .set("loss_rate", gray.loss_rate)
+                .set("latency_jitter", gray.latency_jitter)
+                .set("straggler_factor", gray.straggler_factor),
         }
     }
 }
@@ -253,6 +285,68 @@ pub struct MigrationRecord {
     pub flows_migrated: usize,
     pub retransmitted_bytes: u64,
     pub wasted_bytes: u64,
+}
+
+/// Per-collective telemetry: what a production CCL would export to its
+/// observability pipeline after each collective. Collected only when the
+/// executor runs with [`Executor::with_telemetry`] — the default path
+/// allocates nothing — and never serialized into the executor timeline
+/// (the scenario layer decides whether a report carries it).
+#[derive(Debug, Clone, Default)]
+pub struct CollectiveTelemetry {
+    /// Per-(src NIC, dst NIC) aggregates: goodput bytes, busy time and
+    /// retransmitted wire bytes. Sorted by (src, dst) — deterministic.
+    pub pairs: Vec<PairSample>,
+    /// Timed probe sweep from three auxiliary vantages per NIC that moved
+    /// data, taken at collective-completion time.
+    pub rtts: Vec<RttSample>,
+    /// Completion skew: latest minus earliest last-flow-completion across
+    /// the servers that moved data (0 for single-server runs).
+    pub completion_skew: f64,
+}
+
+/// Observability options for a run: the gray-fault script, standing gray
+/// state carried over from earlier iterations, the jitter seed, and
+/// whether to collect [`CollectiveTelemetry`]. `Default` = none of it —
+/// the executor behaves bit-identically to the pre-gray kernel.
+#[derive(Debug, Clone, Default)]
+pub struct ObserveOptions {
+    pub gray_script: Vec<GrayFaultEvent>,
+    pub standing_gray: Vec<(GrayTarget, GrayState)>,
+    pub gray_seed: u64,
+    pub telemetry: bool,
+}
+
+impl ObserveOptions {
+    /// True when the options change nothing about a run.
+    pub fn is_noop(&self) -> bool {
+        self.gray_script.is_empty() && self.standing_gray.is_empty() && !self.telemetry
+    }
+}
+
+impl CollectiveTelemetry {
+    /// Fold another collective's telemetry into this one (per-iteration
+    /// aggregation: pairs merge by key, probe sweeps concatenate, skew
+    /// takes the max).
+    pub fn merge(&mut self, other: &CollectiveTelemetry) {
+        let mut map: BTreeMap<(NicId, NicId), PairSample> =
+            self.pairs.drain(..).map(|p| ((p.src_nic, p.dst_nic), p)).collect();
+        for p in &other.pairs {
+            let e = map.entry((p.src_nic, p.dst_nic)).or_insert(PairSample {
+                src_nic: p.src_nic,
+                dst_nic: p.dst_nic,
+                bytes: 0,
+                busy: 0.0,
+                retrans: 0,
+            });
+            e.bytes += p.bytes;
+            e.busy += p.busy;
+            e.retrans += p.retrans;
+        }
+        self.pairs = map.into_values().collect();
+        self.rtts.extend_from_slice(&other.rtts);
+        self.completion_skew = self.completion_skew.max(other.completion_skew);
+    }
 }
 
 /// Result of an execution.
@@ -286,6 +380,10 @@ pub struct ExecReport {
     /// materialized by live flows or standing faults, out of the
     /// topology's full table (not part of any trace serialization).
     pub resident_resources: u64,
+    /// Per-collective telemetry, present only when the executor ran with
+    /// [`Executor::with_telemetry`] (never part of the timeline
+    /// serialization; the scenario layer gates whether it reaches a trace).
+    pub telemetry: Option<CollectiveTelemetry>,
 }
 
 impl ExecReport {
@@ -309,6 +407,23 @@ struct FlowInfo {
     sub: usize,
     /// This flow's size (the remainder of the sub after prior migrations).
     size: u64,
+    /// Composed gray loss rate along the flow's path at issue time (0 on
+    /// the gray-free fast path — silent loss taxes flows issued while the
+    /// gray state stands).
+    loss: f64,
+    /// Endpoint NICs for inter-server flows (None intra-server); feeds the
+    /// telemetry pair aggregation.
+    nics: Option<(NicId, NicId)>,
+    /// Engine time the flow was issued (busy-time accounting).
+    issued_at: f64,
+}
+
+/// Telemetry accumulator (allocated only under `with_telemetry`).
+struct TelemetryAcc {
+    /// (src NIC, dst NIC) → (goodput bytes, busy seconds, retrans bytes).
+    pairs: BTreeMap<(NicId, NicId), (u64, f64, u64)>,
+    /// Last flow-completion time per server (NaN = server moved no data).
+    server_last: Vec<f64>,
 }
 
 /// The leaf whose member NICs lose (or effectively lose) fabric
@@ -360,6 +475,15 @@ pub struct Executor<'a> {
     script: Vec<FaultEvent>,
     /// Scripted switch-scoped faults (leaf/spine fabrics only).
     switch_script: Vec<SwitchFaultEvent>,
+    /// Scripted gray faults (silent loss / jitter / stragglers).
+    gray_script: Vec<GrayFaultEvent>,
+    /// Seed of the deterministic per-flow jitter stream (only drawn from
+    /// while gray state is present, so gray-free runs never touch it).
+    gray_seed: u64,
+    /// Flows issued while gray state was present (jitter stream counter).
+    gray_flows: u64,
+    /// Telemetry accumulator; `None` = collection disabled (default).
+    telemetry: Option<TelemetryAcc>,
     /// failed NIC → replacement (resolution chain for hinted routes),
     /// dense by `NicId`.
     migrated_to: Vec<Option<NicId>>,
@@ -394,6 +518,10 @@ impl<'a> Executor<'a> {
             engine,
             script,
             switch_script: Vec::new(),
+            gray_script: Vec::new(),
+            gray_seed: 0,
+            gray_flows: 0,
+            telemetry: None,
             migrated_to: vec![None; topo.n_nics()],
             flows: Vec::new(),
             victims: Vec::new(),
@@ -408,8 +536,39 @@ impl<'a> Executor<'a> {
                 events_popped: 0,
                 domains_touched: 0,
                 resident_resources: 0,
+                telemetry: None,
             },
         }
+    }
+
+    /// Schedule gray faults to fire mid-collective. `seed` drives the
+    /// deterministic per-flow completion-time jitter stream (same seed +
+    /// same schedule → bit-identical run).
+    pub fn with_gray_script(mut self, script: Vec<GrayFaultEvent>, seed: u64) -> Self {
+        self.gray_script = script;
+        self.gray_seed = seed;
+        self
+    }
+
+    /// Apply standing gray state before the collective starts (gray faults
+    /// carried over from earlier iterations). Unlike crisp standing faults
+    /// this rewrites no routing: gray is exactly the impairment the planner
+    /// cannot see.
+    pub fn with_initial_gray(mut self, grays: &[(GrayTarget, GrayState)]) -> Self {
+        for &(target, gray) in grays {
+            self.faults.set_gray(self.topo, &mut self.engine, target, gray);
+        }
+        self
+    }
+
+    /// Enable per-collective telemetry collection (pair aggregates, probe
+    /// RTT sweep, completion skew) into [`ExecReport::telemetry`].
+    pub fn with_telemetry(mut self) -> Self {
+        self.telemetry = Some(TelemetryAcc {
+            pairs: BTreeMap::new(),
+            server_last: vec![f64::NAN; self.topo.n_servers()],
+        });
+        self
     }
 
     /// Schedule switch-scoped faults to fire mid-collective (the
@@ -487,6 +646,7 @@ impl<'a> Executor<'a> {
     /// engine arena is recycled into the thread-local pool on the way out.
     pub fn run(mut self, sched: &Schedule, plane: &mut dyn DataPlane) -> ExecReport {
         self.run_inner(sched, plane);
+        self.finalize_telemetry();
         let Executor { engine, mut report, .. } = self;
         report.recomputes = engine.recomputes;
         report.flows_created = engine.flows_created;
@@ -532,6 +692,10 @@ impl<'a> Executor<'a> {
             let at = self.switch_script[i].at;
             self.engine.schedule_script(at, ScriptKind::Switch, i as u32);
         }
+        for i in 0..self.gray_script.len() {
+            let at = self.gray_script[i].at;
+            self.engine.schedule_script(at, ScriptKind::Gray, i as u32);
+        }
 
         for i in 0..n {
             if indeg[i] == 0 {
@@ -543,7 +707,20 @@ impl<'a> Executor<'a> {
             match ev {
                 Event::FlowCompleted(fid) => {
                     let Some(info) = self.take_flow(fid) else { continue };
-                    self.report.wire_bytes += info.size;
+                    // Silent loss inflates wire traffic: the goodput crossed
+                    // plus every retransmitted byte the loss forced.
+                    let retrans = Self::retrans_bytes(&info);
+                    self.report.wire_bytes += info.size + retrans;
+                    if let (Some(acc), Some((src, dst))) = (&mut self.telemetry, info.nics) {
+                        let e = acc.pairs.entry((src, dst)).or_insert((0, 0.0, 0));
+                        e.0 += info.size;
+                        e.1 += t - info.issued_at;
+                        e.2 += retrans;
+                        for s in [self.topo.server_of_nic(src), self.topo.server_of_nic(dst)] {
+                            let last = &mut acc.server_last[s];
+                            *last = if last.is_nan() { t } else { last.max(t) };
+                        }
+                    }
                     let g = info.group;
                     subs_left[g] -= 1;
                     if subs_left[g] == 0 {
@@ -683,6 +860,16 @@ impl<'a> Executor<'a> {
                     // Spine events and mild degrades are capacity-only;
                     // the fluid engine carries them (scenario patterns
                     // express spine trouble as Degrade, never Down).
+                }
+                Event::Script(ScriptKind::Gray, idx) => {
+                    // Gray faults fold into engine rates (sub-threshold by
+                    // construction) and tax subsequently issued flows with
+                    // loss/jitter — they deliberately never arm the
+                    // detection pipeline. Catching them is the telemetry
+                    // layer's job, not the error CQE's.
+                    let ge = self.gray_script[idx as usize];
+                    self.log(t, TimelineEvent::GrayFault { target: ge.target, gray: ge.gray });
+                    self.faults.set_gray(self.topo, &mut self.engine, ge.target, ge.gray);
                 }
                 Event::Timer(_, tag) => match tag & TAG_MASK {
                     TAG_DETECT => {
@@ -824,9 +1011,123 @@ impl<'a> Executor<'a> {
         for (si, sub) in grp.subs.iter().enumerate() {
             let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
             let plan = route.plan(self.topo, sub.src, sub.dst);
-            let fid = self.engine.add_flow(plan.path, sub.bytes as f64, plan.latency, g as u64);
-            self.insert_flow(fid, FlowInfo { group: g, sub: si, size: sub.bytes });
+            self.issue_flow(plan, g, si, sub.bytes);
         }
+    }
+
+    /// Hand one sub-transfer to the engine, folding any standing gray
+    /// state on its path: silent loss inflates the wire size by
+    /// `1/(1-loss)` (goodput tax — the engine moves the retransmits too),
+    /// and the seeded jitter stream perturbs the latency. The gray-free
+    /// path is bit-identical to the pre-gray executor (no arithmetic is
+    /// applied at all).
+    fn issue_flow(&mut self, plan: crate::topology::RoutePlan, g: usize, si: usize, bytes: u64) {
+        let nics = match plan.route {
+            Route::Inter { src_nic, dst_nic, .. } => Some((src_nic, dst_nic)),
+            Route::Intra => None,
+        };
+        let (loss, jitter) = self.gray_flow_terms(&plan.path, plan.latency);
+        let (size, latency) = if loss > 0.0 || jitter > 0.0 {
+            (bytes as f64 / (1.0 - loss), plan.latency + jitter)
+        } else {
+            (bytes as f64, plan.latency)
+        };
+        let issued_at = self.engine.now();
+        let fid = self.engine.add_flow(plan.path, size, latency, g as u64);
+        self.insert_flow(fid, FlowInfo { group: g, sub: si, size: bytes, loss, nics, issued_at });
+    }
+
+    /// Composed gray (loss, latency-jitter) terms for a flow about to be
+    /// issued over `path`. Draws one value from the seeded jitter stream
+    /// per flow *issued while gray state is present* — gray-free runs never
+    /// advance the stream, which is what makes zero-gray runs bit-identical
+    /// to the pre-gray kernel.
+    fn gray_flow_terms(&mut self, path: &[crate::topology::ResourceId], base_latency: f64) -> (f64, f64) {
+        if !self.faults.has_gray() {
+            return (0.0, 0.0);
+        }
+        // SplitMix64 finalizer over (seed, flow ordinal): deterministic and
+        // independent of everything but issue order.
+        let mut z = self
+            .gray_seed
+            .wrapping_add(self.gray_flows.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .wrapping_add(0x9e37_79b9_7f4a_7c15);
+        self.gray_flows += 1;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        let mut g = GrayState::HEALTHY;
+        for &rid in path {
+            let elem = self.faults.gray_of_key(self.topo.spec(rid).key);
+            if !elem.is_healthy() {
+                g = g.compose(&elem);
+            }
+        }
+        if g.is_healthy() {
+            return (0.0, 0.0);
+        }
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        (g.loss_rate, base_latency * g.latency_jitter * u)
+    }
+
+    /// Wire bytes this flow retransmitted beyond its goodput.
+    fn retrans_bytes(info: &FlowInfo) -> u64 {
+        if info.loss > 0.0 {
+            (info.size as f64 * info.loss / (1.0 - info.loss)).round() as u64
+        } else {
+            0
+        }
+    }
+
+    /// Fold the accumulated telemetry into the report: pair aggregates,
+    /// the three-vantage probe sweep over every NIC that moved data, and
+    /// the cross-server completion skew.
+    fn finalize_telemetry(&mut self) {
+        let Some(acc) = self.telemetry.take() else { return };
+        let mut nics: BTreeSet<NicId> = BTreeSet::new();
+        let pairs: Vec<PairSample> = acc
+            .pairs
+            .into_iter()
+            .map(|((src, dst), (bytes, busy, retrans))| {
+                nics.insert(src);
+                nics.insert(dst);
+                PairSample { src_nic: src, dst_nic: dst, bytes, busy, retrans }
+            })
+            .collect();
+        let mut rtts = Vec::new();
+        for &n in &nics {
+            for v in self.probe_vantages(n) {
+                if v == n {
+                    continue;
+                }
+                let p = timed_probe(self.timing, &self.faults, v, n);
+                rtts.push(RttSample { from: v, to: n, rtt: p.rtt });
+            }
+        }
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &t in &acc.server_last {
+            if !t.is_nan() {
+                lo = lo.min(t);
+                hi = hi.max(t);
+            }
+        }
+        let completion_skew = if hi > lo { hi - lo } else { 0.0 };
+        self.report.telemetry = Some(CollectiveTelemetry { pairs, rtts, completion_skew });
+    }
+
+    /// Three auxiliary probe vantages for `nic`: same rail on the next
+    /// server, the neighbouring rail there, and the neighbouring rail two
+    /// servers over. Distinct vantage points break endpoint symmetry in
+    /// the localizer (a NIC's constant flow peers share its pair set; its
+    /// probe set is its own).
+    fn probe_vantages(&self, nic: NicId) -> [NicId; 3] {
+        let k = self.topo.cfg.nics_per_server;
+        let ns = self.topo.n_servers();
+        let s = self.topo.server_of_nic(nic);
+        let r = self.topo.rail_of_nic(nic);
+        let s1 = (s + 1) % ns;
+        let s2 = (s + 2) % ns;
+        [s1 * k + r, s1 * k + (r + 1) % k, s2 * k + (r + 1) % k]
     }
 
     /// The live-migration step: runs at detection-complete time for `nic`.
@@ -878,7 +1179,12 @@ impl<'a> Executor<'a> {
         };
         for &fid in &victims {
             let Some(info) = self.take_flow(fid) else { continue };
-            let progress = self.engine.abort_flow(fid);
+            let wire_progress = self.engine.abort_flow(fid);
+            // Retransmitted wire bytes never advance the rollback cursor:
+            // under gray loss the engine moved `1/(1-loss)` wire bytes per
+            // goodput byte, so convert back before chunk accounting.
+            let progress =
+                if info.loss > 0.0 { wire_progress * (1.0 - info.loss) } else { wire_progress };
             // Chunk-quantised rollback (§4.3 Technique II).
             let cursor = RollbackCursor::new(info.size, self.timing.chunk_bytes);
             let acked = cursor.acked_bytes(progress);
@@ -893,9 +1199,7 @@ impl<'a> Executor<'a> {
             let sub = &grp.subs[info.sub];
             let route = self.route_for(grp.channel, sub.src, sub.dst, sub.nic_hint);
             let plan = route.plan(self.topo, sub.src, sub.dst);
-            let new_fid =
-                self.engine.add_flow(plan.path, remaining as f64, plan.latency, info.group as u64);
-            self.insert_flow(new_fid, FlowInfo { group: info.group, sub: info.sub, size: remaining });
+            self.issue_flow(plan, info.group, info.sub, remaining);
         }
         self.victims = victims;
         self.log(

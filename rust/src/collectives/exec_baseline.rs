@@ -114,6 +114,7 @@ impl<'a> BaselineExecutor<'a> {
                 events_popped: 0,
                 domains_touched: 0,
                 resident_resources: 0,
+                telemetry: None,
             },
         }
     }

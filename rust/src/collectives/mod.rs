@@ -18,8 +18,9 @@ pub mod tree;
 
 pub use dataplane::{DataPlane, PhantomPlane, RealPlane};
 pub use exec::{
-    ChannelRouting, ExecOptions, ExecReport, Executor, FailurePolicy, FaultAction, FaultEvent,
-    MigrationRecord, TimelineEntry, TimelineEvent,
+    ChannelRouting, CollectiveTelemetry, ExecOptions, ExecReport, Executor, FailurePolicy,
+    FaultAction, FaultEvent, GrayFaultEvent, MigrationRecord, ObserveOptions, TimelineEntry,
+    TimelineEvent,
 };
 pub use ring::{
     nccl_rings, ring_all_gather, ring_allreduce, ring_broadcast, ring_reduce_scatter,

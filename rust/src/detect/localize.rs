@@ -1,0 +1,324 @@
+//! Online gray-fault localization (SHIFT-style skew attribution).
+//!
+//! Crisp faults are easy: the NIC throws an error CQE and [`triangulate`]
+//! names the culprit in one round. Gray faults never announce themselves —
+//! a silently lossy uplink or a straggling NIC only shows up as *skew* in
+//! the per-collective telemetry: some NIC pairs retransmit more than their
+//! peers, some probe RTTs run long. The localizer turns one telemetry
+//! window into a ranked list of suspect elements by walking the skew down
+//! the topology tiers:
+//!
+//! 1. every sample (a pair's retransmit rate, a probe's RTT) is z-scored
+//!    against its own signal family, so families with different units pool;
+//! 2. every fabric element a sample's path crosses (endpoint NICs, leaves,
+//!    the ECMP-pinned spine, uplink halves — the same walk as
+//!    `FaultPlane::path_gray`) is a candidate;
+//! 3. a candidate's score is the mean z of samples *crossing* it minus the
+//!    mean z of samples that avoid it — an element is suspicious exactly
+//!    when the traffic through it is elevated *and* the traffic around it
+//!    is not. Dilution does the tier separation: a gray uplink's crossing
+//!    set covers all elevated samples while each endpoint NIC's covers
+//!    only a slice, and vice versa for a gray NIC.
+//!
+//! The function is pure (no RNG, no fault-plane access — it sees only what
+//! real telemetry would carry), so the scenario runner can score it against
+//! the ground-truth gray script it compiled.
+//!
+//! [`triangulate`]: crate::detect::triangulate
+
+use std::collections::BTreeMap;
+
+use crate::netsim::GrayTarget;
+use crate::topology::{NicId, Topology};
+
+/// Aggregated data-path telemetry for one (src NIC, dst NIC) pair over a
+/// telemetry window: how much the pair moved and how much of it the wire
+/// made them resend.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairSample {
+    pub src_nic: NicId,
+    pub dst_nic: NicId,
+    /// Goodput bytes delivered between the pair.
+    pub bytes: u64,
+    /// Seconds the pair had flows in flight (busy time).
+    pub busy: f64,
+    /// Extra wire bytes spent on retransmits.
+    pub retrans: u64,
+}
+
+impl PairSample {
+    /// Fraction of wire bytes that were retransmits, in `[0, 1)`.
+    pub fn retrans_rate(&self) -> f64 {
+        let total = self.bytes + self.retrans;
+        if total == 0 {
+            0.0
+        } else {
+            self.retrans as f64 / total as f64
+        }
+    }
+}
+
+/// One timed probe observation between two NICs (see
+/// [`timed_probe`](crate::detect::timed_probe)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RttSample {
+    pub from: NicId,
+    pub to: NicId,
+    /// Measured round-trip time in seconds.
+    pub rtt: f64,
+}
+
+/// A telemetry window: everything the localizer is allowed to see.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LocalizeWindow<'a> {
+    pub pairs: &'a [PairSample],
+    pub rtts: &'a [RttSample],
+}
+
+/// A ranked suspect: a fabric element and its attribution score (higher =
+/// more suspicious; healthy elements sit near zero or below).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Suspect {
+    pub target: GrayTarget,
+    pub score: f64,
+}
+
+/// The fabric elements a (from, to) path crosses — the candidate set and
+/// crossing relation. Mirrors `FaultPlane::path_gray`'s walk exactly so a
+/// gray element is always a candidate for the samples it taints.
+fn path_elements(topo: &Topology, from: NicId, to: NicId, out: &mut Vec<GrayTarget>) {
+    use crate::fabric::SwitchTarget;
+    out.clear();
+    out.push(GrayTarget::Nic(from));
+    if to != from {
+        out.push(GrayTarget::Nic(to));
+    }
+    let nps = topo.cfg.nics_per_server;
+    let fabric = topo.fabric();
+    if from / nps != to / nps && !fabric.is_ideal() {
+        let lf = fabric.leaf_of_nic(from);
+        let lt = fabric.leaf_of_nic(to);
+        out.push(GrayTarget::Switch(SwitchTarget::Leaf(lf)));
+        if lt != lf {
+            out.push(GrayTarget::Switch(SwitchTarget::Leaf(lt)));
+            let s = fabric.ecmp_spine(from, to);
+            out.push(GrayTarget::Switch(SwitchTarget::Spine(s)));
+            out.push(GrayTarget::Switch(SwitchTarget::Uplink(lf, s)));
+            out.push(GrayTarget::Switch(SwitchTarget::Uplink(lt, s)));
+        }
+    }
+}
+
+/// Per-candidate accumulator: z-mass of samples crossing the element, per
+/// signal family, plus the crossing count.
+#[derive(Default, Clone, Copy)]
+struct Tally {
+    z_sum: [f64; 2],
+    n: [usize; 2],
+}
+
+const FAMILY_RETRANS: usize = 0;
+const FAMILY_RTT: usize = 1;
+
+/// Z-score a signal family in place; returns `None` (family carries no
+/// attribution signal) when it is empty or has no variance.
+fn zscores(xs: &[f64]) -> Option<Vec<f64>> {
+    if xs.is_empty() {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let sd = var.sqrt();
+    if !(sd > 1e-15) {
+        return None;
+    }
+    Some(xs.iter().map(|x| (x - mean) / sd).collect())
+}
+
+/// Rank fabric elements by how strongly the telemetry window implicates
+/// them. Returns suspects sorted by descending score (ties broken by the
+/// element's total order, so the ranking is deterministic). An empty or
+/// perfectly uniform window returns an empty ranking — nothing to blame.
+pub fn localize(topo: &Topology, window: &LocalizeWindow) -> Vec<Suspect> {
+    // Family z-scores. A family that is empty or flat contributes nothing.
+    let pair_z = zscores(&window.pairs.iter().map(|p| p.retrans_rate()).collect::<Vec<_>>());
+    let rtt_z = zscores(&window.rtts.iter().map(|r| r.rtt).collect::<Vec<_>>());
+    if pair_z.is_none() && rtt_z.is_none() {
+        return Vec::new();
+    }
+
+    // Accumulate crossing z-mass per candidate element.
+    let mut tallies: BTreeMap<(u8, usize, usize), (GrayTarget, Tally)> = BTreeMap::new();
+    let mut path = Vec::with_capacity(8);
+    let mut family_n = [0usize; 2];
+    let mut family_total = [0.0f64; 2];
+    let mut fold = |family: usize,
+                    z: f64,
+                    elems: &[GrayTarget],
+                    tallies: &mut BTreeMap<(u8, usize, usize), (GrayTarget, Tally)>| {
+        family_n[family] += 1;
+        family_total[family] += z;
+        for &t in elems {
+            let e = tallies.entry(t.sort_key()).or_insert((t, Tally::default()));
+            e.1.z_sum[family] += z;
+            e.1.n[family] += 1;
+        }
+    };
+    if let Some(zs) = &pair_z {
+        for (p, &z) in window.pairs.iter().zip(zs) {
+            path_elements(topo, p.src_nic, p.dst_nic, &mut path);
+            fold(FAMILY_RETRANS, z, &path, &mut tallies);
+        }
+    }
+    if let Some(zs) = &rtt_z {
+        for (r, &z) in window.rtts.iter().zip(zs) {
+            path_elements(topo, r.from, r.to, &mut path);
+            fold(FAMILY_RTT, z, &path, &mut tallies);
+        }
+    }
+
+    // Score: mean z of crossing samples minus mean z of the rest, summed
+    // over the families the element appears in. An element every sample
+    // crosses cannot be separated from the baseline and scores 0 for that
+    // family.
+    let mut suspects: Vec<Suspect> = tallies
+        .into_values()
+        .map(|(target, t)| {
+            let mut score = 0.0;
+            for f in 0..2 {
+                let n_in = t.n[f];
+                let n_out = family_n[f] - n_in;
+                if n_in == 0 || n_out == 0 {
+                    continue;
+                }
+                let mean_in = t.z_sum[f] / n_in as f64;
+                let mean_out = (family_total[f] - t.z_sum[f]) / n_out as f64;
+                score += mean_in - mean_out;
+            }
+            Suspect { target, score }
+        })
+        .collect();
+    suspects.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.target.sort_key().cmp(&b.target.sort_key()))
+    });
+    suspects
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::SwitchTarget;
+    use crate::topology::{Topology, TopologyConfig};
+
+    fn flat_topo() -> Topology {
+        let mut cfg = TopologyConfig::testbed_h100();
+        cfg.n_servers = 4;
+        Topology::build(&cfg)
+    }
+
+    fn pair(src: usize, dst: usize, retrans: u64) -> PairSample {
+        PairSample { src_nic: src, dst_nic: dst, bytes: 1_000_000, busy: 1.0e-3, retrans }
+    }
+
+    #[test]
+    fn empty_window_blames_nobody() {
+        let t = flat_topo();
+        assert!(localize(&t, &LocalizeWindow::default()).is_empty());
+        // Uniform telemetry (no variance) likewise.
+        let pairs = [pair(0, 8, 0), pair(8, 16, 0), pair(16, 24, 0)];
+        let w = LocalizeWindow { pairs: &pairs, rtts: &[] };
+        assert!(localize(&t, &w).is_empty());
+    }
+
+    #[test]
+    fn lossy_nic_tops_the_ranking_on_flat_fabric() {
+        let t = flat_topo();
+        // NIC 8 silently drops: every pair touching it retransmits, the
+        // rest are clean. Probes from third vantages break the endpoint
+        // tie (pairs alone cannot tell NIC 8 from its constant peers).
+        let pairs = [pair(0, 8, 50_000), pair(8, 16, 50_000), pair(16, 24, 0), pair(24, 0, 0)];
+        let rtts = [
+            RttSample { from: 16, to: 8, rtt: 4.0e-5 },
+            RttSample { from: 24, to: 8, rtt: 4.0e-5 },
+            RttSample { from: 16, to: 0, rtt: 1.0e-5 },
+            RttSample { from: 24, to: 16, rtt: 1.0e-5 },
+        ];
+        let w = LocalizeWindow { pairs: &pairs, rtts: &rtts };
+        let ranked = localize(&t, &w);
+        assert_eq!(ranked[0].target, GrayTarget::Nic(8), "ranking: {ranked:?}");
+        assert!(ranked[0].score > 0.0);
+    }
+
+    #[test]
+    fn shared_uplink_outranks_its_endpoint_nics() {
+        // Leaf/spine fabric: many distinct NIC pairs all crossing one
+        // uplink retransmit. No single NIC explains all of them — the
+        // uplink's crossing set does, so dilution pushes it to the top.
+        use crate::fabric::{FabricConfig, LeafSpineCfg};
+        let mut cfg = TopologyConfig::testbed_h100();
+        cfg.n_servers = 16;
+        let t = Topology::build_with_fabric(
+            &cfg,
+            &FabricConfig::leaf_spine_with(LeafSpineCfg {
+                pod_size: 4,
+                spines: 2,
+                ..LeafSpineCfg::default()
+            }),
+        );
+        let fabric = t.fabric();
+        assert!(!fabric.is_ideal());
+        // Rail-0 NICs of servers 0..8 vs 8..16: always cross-leaf. Bucket
+        // pairs so every confounder of the gray uplink (lf0, sp0) gets
+        // clean dilution traffic: the source leaf alone (other spine), the
+        // spine alone (other leaf), and fully disjoint pairs.
+        let (mut tainted, mut clean) = (Vec::new(), Vec::new());
+        let (mut lf0, mut sp0) = (usize::MAX, usize::MAX);
+        for src in (0..8).map(|s| s * 8) {
+            for dst in (8..16).map(|s| s * 8) {
+                let lf = fabric.leaf_of_nic(src);
+                assert_ne!(lf, fabric.leaf_of_nic(dst));
+                let s = fabric.ecmp_spine(src, dst);
+                if lf0 == usize::MAX {
+                    (lf0, sp0) = (lf, s);
+                }
+                let on_uplink = lf == lf0 && s == sp0;
+                if on_uplink && tainted.len() < 6 {
+                    tainted.push(pair(src, dst, 80_000));
+                } else if !on_uplink {
+                    clean.push(pair(src, dst, 0));
+                }
+            }
+        }
+        assert!(tainted.len() >= 3, "need several pairs over one uplink");
+        assert!(clean.iter().any(|p| {
+            fabric.leaf_of_nic(p.src_nic) == lf0
+                && fabric.ecmp_spine(p.src_nic, p.dst_nic) != sp0
+        }));
+        assert!(clean.iter().any(|p| {
+            fabric.leaf_of_nic(p.src_nic) != lf0
+                && fabric.ecmp_spine(p.src_nic, p.dst_nic) == sp0
+        }));
+        let pairs: Vec<_> = tainted.iter().chain(&clean).copied().collect();
+        let w = LocalizeWindow { pairs: &pairs, rtts: &[] };
+        let ranked = localize(&t, &w);
+        assert_eq!(
+            ranked[0].target,
+            GrayTarget::Switch(SwitchTarget::Uplink(lf0, sp0)),
+            "ranking: {ranked:?}"
+        );
+    }
+
+    #[test]
+    fn ranking_is_deterministic() {
+        let t = flat_topo();
+        let pairs = [pair(0, 8, 10_000), pair(8, 16, 10_000), pair(16, 24, 0)];
+        let w = LocalizeWindow { pairs: &pairs, rtts: &[] };
+        let a = localize(&t, &w);
+        let b = localize(&t, &w);
+        assert_eq!(a, b);
+    }
+}

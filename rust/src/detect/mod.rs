@@ -10,9 +10,17 @@
 //!   died" and "the cable died".
 //! * Periodic reprobing detects component recovery (NIC resets, cable
 //!   fixes) so repaired links rejoin the pool.
+//! * Gray-fault localization ([`localize`]): crisp faults announce
+//!   themselves through error CQEs, gray ones only skew telemetry — the
+//!   localizer turns a per-collective telemetry window into a ranked list
+//!   of suspect elements, SHIFT-style.
 
+pub mod localize;
 pub mod oob;
 pub mod probe;
 
+pub use localize::{localize, LocalizeWindow, PairSample, RttSample, Suspect};
 pub use oob::OobNetwork;
-pub use probe::{pick_aux_nic, reprobe_recovered, triangulate, Diagnosis, ProbeReport};
+pub use probe::{
+    pick_aux_nic, reprobe_recovered, timed_probe, triangulate, Diagnosis, ProbeReport, TimedProbe,
+};

@@ -105,6 +105,62 @@ pub fn triangulate(
     ProbeReport { diagnosis, elapsed, local_probe, peer_probe, aux_to_local, aux_to_peer }
 }
 
+/// A probe outcome plus the round-trip latency sample it measured.
+///
+/// [`triangulate`] only needs the outcome pattern (which endpoint answered),
+/// so its cost model is the coarse `probe_rtt`/`probe_timeout` pair and is
+/// deliberately left untouched — detection latency feeds completion times
+/// and therefore the golden traces. Telemetry wants more: a probe over a
+/// degraded or gray path comes back *late*, and that lateness is exactly
+/// the signal the localizer ranks on. `timed_probe` models it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedProbe {
+    pub outcome: ProbeOutcome,
+    /// Measured round-trip time in seconds. `probe_rtt` on a clean path,
+    /// inflated by crisp degradation (capacity factor) and gray state
+    /// (straggler slowdown, loss-driven retransmits, expected jitter) on an
+    /// impaired one, and pinned to `probe_timeout` when the probe dies.
+    pub rtt: f64,
+}
+
+/// Issue one telemetry probe from `from` to `to` and time it.
+///
+/// The RTT model is deterministic (no RNG — jitter enters as its expected
+/// value, the summed jitter amplitude along the path):
+///
+/// * outcome `Timeout` → `probe_timeout`; `LocalError` → `probe_rtt` (the
+///   error CQE surfaces immediately, nothing crossed the wire);
+/// * outcome `Ok` → `probe_rtt` stretched by the slowest endpoint's crisp
+///   `capacity_factor`, then by the path's composed gray state:
+///   `straggler_factor / (1 - loss_rate)` (a straggler serializes the
+///   zero-byte write's doorbell/CQE handling; loss forces retransmits even
+///   on tiny messages), plus `probe_rtt · latency_jitter` of expected
+///   jitter.
+pub fn timed_probe(
+    timing: &TimingConfig,
+    faults: &FaultPlane,
+    from: NicId,
+    to: NicId,
+) -> TimedProbe {
+    let outcome = faults.probe(from, to);
+    let rtt = match outcome {
+        ProbeOutcome::Timeout => timing.probe_timeout,
+        ProbeOutcome::LocalError => timing.probe_rtt,
+        ProbeOutcome::Ok => {
+            let crisp = faults
+                .capacity_factor(from)
+                .min(faults.capacity_factor(to))
+                .max(crate::netsim::MIN_DEGRADE_FACTOR);
+            let g = faults.path_gray(from, to);
+            let gray_stretch = g.straggler_factor / (1.0 - g.loss_rate);
+            let base = timing.probe_rtt / crisp * gray_stretch;
+            // Expected jitter contribution: amplitude × nominal RTT.
+            (base + timing.probe_rtt * g.latency_jitter).min(timing.probe_timeout)
+        }
+    };
+    TimedProbe { outcome, rtt }
+}
+
 /// Pick an auxiliary NIC for triangulation: prefer a NIC on a third server;
 /// in a two-server cluster use another healthy NIC pair on the same servers
 /// (the probe still distinguishes endpoint vs link for the *failed* pair).
@@ -224,6 +280,56 @@ mod tests {
         assert!(!reprobe_recovered(&fp, 0, 8));
         fp.repair(&t, &mut eng, 0);
         assert!(reprobe_recovered(&fp, 0, 8));
+    }
+
+    #[test]
+    fn timed_probe_healthy_is_nominal_rtt() {
+        let (_t, _eng, fp, tm) = setup3();
+        let p = timed_probe(&tm, &fp, 0, 8);
+        assert_eq!(p.outcome, ProbeOutcome::Ok);
+        assert_eq!(p.rtt, tm.probe_rtt);
+    }
+
+    #[test]
+    fn timed_probe_stretches_with_crisp_degradation() {
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.set_state(&t, &mut eng, 8, crate::netsim::NicState::Degraded(0.25));
+        let p = timed_probe(&tm, &fp, 0, 8);
+        assert_eq!(p.outcome, ProbeOutcome::Ok);
+        // Slowest endpoint at 25% capacity → 4× the nominal RTT.
+        assert!((p.rtt - tm.probe_rtt / 0.25).abs() < 1e-12, "rtt {}", p.rtt);
+    }
+
+    #[test]
+    fn timed_probe_sees_gray_loss_straggle_and_jitter() {
+        use crate::netsim::{GrayState, GrayTarget};
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.set_gray(
+            &t,
+            &mut eng,
+            GrayTarget::Nic(8),
+            GrayState { loss_rate: 0.2, latency_jitter: 0.5, straggler_factor: 2.0 },
+        );
+        let p = timed_probe(&tm, &fp, 0, 8);
+        assert_eq!(p.outcome, ProbeOutcome::Ok);
+        // 2× straggler / (1 − 0.2) loss + 0.5 expected jitter = 3× nominal.
+        let want = tm.probe_rtt * (2.0 / 0.8) + tm.probe_rtt * 0.5;
+        assert!((p.rtt - want).abs() < 1e-12, "rtt {} want {}", p.rtt, want);
+        // Gray never flips the probe outcome — that is the whole point of a
+        // gray fault: the crisp oracle still says everything is fine.
+        assert!(p.rtt < tm.probe_timeout);
+    }
+
+    #[test]
+    fn timed_probe_pins_failures_to_coarse_costs() {
+        let (t, mut eng, mut fp, tm) = setup3();
+        fp.fail_nic(&t, &mut eng, 0);
+        let local = timed_probe(&tm, &fp, 0, 8);
+        assert_eq!(local.outcome, ProbeOutcome::LocalError);
+        assert_eq!(local.rtt, tm.probe_rtt);
+        let toward = timed_probe(&tm, &fp, 8, 0);
+        assert_eq!(toward.outcome, ProbeOutcome::Timeout);
+        assert_eq!(toward.rtt, tm.probe_timeout);
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!                     (four recovery arms — lossless / elastic-shrink /
 //!                     checkpoint-restart / fast-failover — for every
 //!                     scenario in the corpus)
+//!   localize-score    [--file scenarios/x.json | --dir scenarios] [--threads N]
+//!                     [--out bench_results/localize_score.json] [--json]
+//!                     [--min-top1 0.9]   (exit-code accuracy gate)
+//!                     (score the online gray-fault localizer against each
+//!                     gray scenario's compiled ground truth)
 //!   train-e2e         --artifacts artifacts/tiny --steps 20 --dp 4 [--fail-at 10]
 //!   info              topology / planner state dump
 
@@ -499,6 +504,149 @@ fn main() -> anyhow::Result<()> {
                 println!("{json}");
             }
         }
+        "localize-score" => {
+            // Score the online gray-fault localizer against ground truth:
+            // run every corpus scenario carrying gray patterns with
+            // telemetry forced on, take the whole-run suspect ranking,
+            // and check the top suspect against the compiled gray
+            // script's element set. `--min-top1` turns the accuracy into
+            // an exit-code gate (the CI floor); `--out` writes the
+            // deterministic JSON artifact.
+            use r2ccl::scenario::{FaultScenario, ScenarioRunner};
+            use r2ccl::util::Json;
+            let preset = Preset::testbed();
+            let threads =
+                args.get_usize("threads", r2ccl::util::par::available_threads());
+            let min_top1 = args.get_f64("min-top1", 0.0);
+            let paths: Vec<std::path::PathBuf> = if let Some(f) = args.get("file") {
+                vec![f.into()]
+            } else {
+                let dir = args.get_or("dir", "scenarios");
+                let mut ps: Vec<_> = std::fs::read_dir(dir)
+                    .map_err(|e| anyhow::anyhow!("cannot read scenario dir {dir}: {e}"))?
+                    .filter_map(|ent| ent.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+                    .collect();
+                ps.sort();
+                ps
+            };
+            let mut scenarios: Vec<FaultScenario> = Vec::with_capacity(paths.len());
+            for path in &paths {
+                let text = std::fs::read_to_string(path)?;
+                let sc = FaultScenario::from_json_str(&text)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                let eff_topo = match &sc.cluster {
+                    Some(c) if c.n_servers != preset.topo.n_servers => {
+                        Preset::simai(c.n_servers).topo
+                    }
+                    _ => preset.topo.clone(),
+                };
+                sc.validate(&eff_topo).map_err(|e| anyhow::anyhow!(e))?;
+                if sc.has_gray() {
+                    scenarios.push(sc);
+                }
+            }
+            if scenarios.is_empty() {
+                return Err(anyhow::anyhow!(
+                    "no scenario with gray patterns found — nothing to score"
+                ));
+            }
+            let reports = r2ccl::util::par::parallel_map(&scenarios, threads, |sc| {
+                ScenarioRunner::new(sc, &preset).with_telemetry().run()
+            });
+            let mut rows = Json::arr();
+            let mut hits = 0usize;
+            let (mut single_n, mut single_hits) = (0usize, 0usize);
+            for (sc, rep) in scenarios.iter().zip(&reports) {
+                // Ground truth: the distinct elements the gray script
+                // actually impairs (clears back to healthy don't count).
+                let mut truth: Vec<String> = Vec::new();
+                for e in &rep.gray_events {
+                    if !e.gray.is_healthy() {
+                        let label = e.target.label();
+                        if !truth.contains(&label) {
+                            truth.push(label);
+                        }
+                    }
+                }
+                let top = rep
+                    .telemetry
+                    .as_ref()
+                    .and_then(|t| t.suspects.first())
+                    .map(|s| s.target.label());
+                let hit = top.as_ref().map(|t| truth.contains(t)).unwrap_or(false);
+                hits += hit as usize;
+                if truth.len() == 1 {
+                    single_n += 1;
+                    single_hits += hit as usize;
+                }
+                println!(
+                    "{:<24} truth {:<18} top1 {:<18} {}",
+                    sc.name,
+                    truth.join(","),
+                    top.clone().unwrap_or_else(|| "-".into()),
+                    if hit { "HIT" } else { "MISS" },
+                );
+                let mut truth_arr = Json::arr();
+                for t in &truth {
+                    truth_arr.push(t.as_str());
+                }
+                rows.push(
+                    Json::obj()
+                        .set("scenario", sc.name.as_str())
+                        .set("gray_elements", truth_arr)
+                        .set(
+                            "top1",
+                            match &top {
+                                Some(t) => Json::from(t.as_str()),
+                                None => Json::Null,
+                            },
+                        )
+                        .set("hit", hit),
+                );
+            }
+            let n = scenarios.len();
+            let accuracy = hits as f64 / n as f64;
+            let single_accuracy =
+                if single_n > 0 { single_hits as f64 / single_n as f64 } else { 1.0 };
+            println!(
+                "top-1 accuracy: {hits}/{n} = {:.1}%  (single-element scenarios: \
+                 {single_hits}/{single_n} = {:.1}%)",
+                accuracy * 100.0,
+                single_accuracy * 100.0
+            );
+            let json = Json::obj()
+                .set("scenarios", rows)
+                .set("n_scenarios", n)
+                .set("top1_hits", hits)
+                .set("top1_accuracy", accuracy)
+                .set(
+                    "single_element",
+                    Json::obj()
+                        .set("n", single_n)
+                        .set("hits", single_hits)
+                        .set("accuracy", single_accuracy),
+                )
+                .pretty()
+                + "\n";
+            if let Some(out) = args.get("out") {
+                if let Some(dir) = std::path::Path::new(out).parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(out, &json)?;
+                println!("wrote {out}");
+            }
+            if args.has("json") {
+                println!("{json}");
+            }
+            if accuracy < min_top1 {
+                return Err(anyhow::anyhow!(
+                    "localizer top-1 accuracy {:.3} is below the required floor {:.3}",
+                    accuracy,
+                    min_top1
+                ));
+            }
+        }
         #[cfg(feature = "xla")]
         "train-e2e" => {
             let rt = r2ccl::runtime::Runtime::load(args.get_or("artifacts", "artifacts/tiny"))?;
@@ -538,7 +686,7 @@ fn main() -> anyhow::Result<()> {
                 world.topo().n_resources()
             );
             println!(
-                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | serve-sweep | recovery-compare | train-e2e | info"
+                "subcommands: bench-collective | train-sim | serve-sim | scenario | cluster-sweep | serve-sweep | recovery-compare | localize-score | train-e2e | info"
             );
         }
     }

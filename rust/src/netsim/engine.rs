@@ -62,6 +62,8 @@ pub enum ScriptKind {
     Nic,
     /// Switch-plane fault script (leaf / spine / uplink events).
     Switch,
+    /// Gray-fault script (silent loss / jitter / straggler state changes).
+    Gray,
 }
 
 /// Events surfaced to the driver (collective runner / workload simulator).
@@ -548,6 +550,17 @@ impl Engine {
     pub fn resource_is_up(&self, rid: ResourceId) -> bool {
         let s = self.slot[rid];
         s == NO_ENTRY || self.entries[s as usize].up
+    }
+
+    /// Current capacity factor of a resource (1.0 for pristine,
+    /// non-resident entries).
+    pub fn resource_factor(&self, rid: ResourceId) -> f64 {
+        let s = self.slot[rid];
+        if s == NO_ENTRY {
+            1.0
+        } else {
+            self.entries[s as usize].factor
+        }
     }
 
     // ------------------------------------------------------------------

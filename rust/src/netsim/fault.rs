@@ -97,6 +97,157 @@ pub fn clamp_degrade_factor(f: f64) -> f64 {
     }
 }
 
+/// Ceiling on a gray loss rate: loss is clamped into `[0, MAX_LOSS_RATE]`.
+/// A loss rate of 1.0 would mean *no* bytes ever get through — that is a
+/// dead link (a crisp `CableBroken` fault), not a gray one, and it would
+/// divide by zero in the retransmit-inflation term `loss / (1 - loss)`.
+pub const MAX_LOSS_RATE: f64 = 0.9;
+
+/// Ceiling on a gray straggler factor (slowdown multiplier ≥ 1).
+pub const MAX_STRAGGLER_FACTOR: f64 = 20.0;
+
+/// Floor on the effective capacity share `(1 - loss) / straggler` of a
+/// gray element. Matches the default `degrade_detect_threshold` (0.05):
+/// gray faults are *by definition* sub-threshold — an element slowed past
+/// this floor would trip the fluctuation detector and stop being gray, so
+/// [`GrayState::sanitized`] rescales the straggler factor to hold the
+/// floor.
+pub const MIN_GRAY_CAPACITY: f64 = 0.05;
+
+/// Clamp a gray loss rate into `[0, MAX_LOSS_RATE]`. `!(r > 0.0)` catches
+/// NaN and negatives (both become 0 — no loss).
+pub fn clamp_loss_rate(r: f64) -> f64 {
+    if !(r > 0.0) {
+        0.0
+    } else {
+        r.min(MAX_LOSS_RATE)
+    }
+}
+
+/// Clamp a gray straggler factor into `[1, MAX_STRAGGLER_FACTOR]`.
+/// `!(f > 1.0)` catches NaN, negatives and sub-unity values (all become
+/// 1 — no slowdown).
+pub fn clamp_straggler_factor(f: f64) -> f64 {
+    if !(f > 1.0) {
+        1.0
+    } else {
+        f.min(MAX_STRAGGLER_FACTOR)
+    }
+}
+
+/// Clamp a gray latency-jitter amplitude into `[0, 1]` seconds (NaN and
+/// negatives become 0 — no jitter).
+pub fn clamp_latency_jitter(j: f64) -> f64 {
+    if !(j > 0.0) {
+        0.0
+    } else {
+        j.min(1.0)
+    }
+}
+
+/// Gray-fault state of one element: the cluster *lies* instead of dying.
+///
+/// * `loss_rate` — fraction of bytes silently lost and retransmitted.
+///   Surfaces as a goodput tax (the element's effective capacity shrinks
+///   by `1 - loss_rate`) plus extra wire bytes (`size · loss / (1 - loss)`
+///   of retransmitted copies) on every flow crossing the element.
+/// * `latency_jitter` — completion-time jitter amplitude in seconds,
+///   folded into flow latency as a seeded deterministic draw.
+/// * `straggler_factor` — slow-NIC multiplier ≥ 1: the element runs at
+///   `1 / straggler_factor` of nominal without ever tripping a timeout.
+///
+/// The identity state (`loss 0, jitter 0, straggler 1`) is a strict
+/// no-op: folding it into the engine reproduces the gray-free kernel
+/// bit for bit (property-tested by `prop_gray`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GrayState {
+    pub loss_rate: f64,
+    pub latency_jitter: f64,
+    pub straggler_factor: f64,
+}
+
+impl GrayState {
+    /// The identity: a perfectly honest element.
+    pub const HEALTHY: GrayState = GrayState {
+        loss_rate: 0.0,
+        latency_jitter: 0.0,
+        straggler_factor: 1.0,
+    };
+
+    pub fn is_healthy(&self) -> bool {
+        self.loss_rate == 0.0 && self.latency_jitter == 0.0 && self.straggler_factor == 1.0
+    }
+
+    /// Clamp every knob into its documented range (the gray sibling of
+    /// [`clamp_degrade_factor`]): loss into `[0, MAX_LOSS_RATE]`,
+    /// straggler into `[1, MAX_STRAGGLER_FACTOR]`, jitter into `[0, 1]`
+    /// seconds — then rescale the straggler so the effective capacity
+    /// share holds the [`MIN_GRAY_CAPACITY`] sub-threshold floor. Both
+    /// `note_gray` and scripted gray events funnel through this.
+    pub fn sanitized(&self) -> GrayState {
+        let loss_rate = clamp_loss_rate(self.loss_rate);
+        let mut straggler_factor = clamp_straggler_factor(self.straggler_factor);
+        let max_straggler = (1.0 - loss_rate) / MIN_GRAY_CAPACITY;
+        if straggler_factor > max_straggler {
+            straggler_factor = max_straggler;
+        }
+        GrayState {
+            loss_rate,
+            latency_jitter: clamp_latency_jitter(self.latency_jitter),
+            straggler_factor,
+        }
+    }
+
+    /// Effective capacity share of the element: the goodput tax of silent
+    /// loss times the straggler slowdown. 1.0 for the identity state;
+    /// ≥ [`MIN_GRAY_CAPACITY`] after [`GrayState::sanitized`].
+    pub fn capacity_share(&self) -> f64 {
+        (1.0 - self.loss_rate) / self.straggler_factor
+    }
+
+    /// Serial composition of two gray elements on one path: losses
+    /// compose as independent drops, jitter amplitudes add, straggler
+    /// factors multiply.
+    pub fn compose(&self, other: &GrayState) -> GrayState {
+        GrayState {
+            loss_rate: 1.0 - (1.0 - self.loss_rate) * (1.0 - other.loss_rate),
+            latency_jitter: self.latency_jitter + other.latency_jitter,
+            straggler_factor: self.straggler_factor * other.straggler_factor,
+        }
+    }
+}
+
+/// An element a gray fault can sit on: a NIC, or any switch tier of a
+/// leaf/spine fabric (reusing [`SwitchTarget`] so the element naming rule
+/// lives in one place).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrayTarget {
+    Nic(NicId),
+    Switch(SwitchTarget),
+}
+
+impl GrayTarget {
+    /// Stable serialization label (`nic:3`, `leaf:1`, `uplink:3:1`).
+    pub fn label(&self) -> String {
+        match self {
+            GrayTarget::Nic(n) => format!("nic:{n}"),
+            GrayTarget::Switch(t) => t.label(),
+        }
+    }
+
+    /// Total order used when sorting compiled gray scripts and suspect
+    /// rankings.
+    pub fn sort_key(&self) -> (u8, usize, usize) {
+        match *self {
+            GrayTarget::Nic(n) => (0, n, 0),
+            GrayTarget::Switch(t) => {
+                let (tier, a, b) = t.sort_key();
+                (tier + 1, a, b)
+            }
+        }
+    }
+}
+
 /// Ground-truth fault state of the cluster + application onto the fluid
 /// engine. The detection layer may only query it through `probe()` — the
 /// same information a real probe QP would reveal.
@@ -124,6 +275,19 @@ pub struct FaultPlane {
     /// spine` indexed.
     uplink_up: Vec<bool>,
     uplink_factor: Vec<f64>,
+    // Gray-fault tier, lazily allocated on the first gray injection (same
+    // empty-means-healthy discipline as the switch tables above): runs
+    // that never see a gray fault pay nothing, and the engine mirroring
+    // below is bit-identical to the pre-gray kernel when every gray state
+    // is the identity.
+    gray_nic: Vec<GrayState>,
+    gray_leaf: Vec<GrayState>,
+    gray_spine: Vec<GrayState>,
+    /// `leaf * n_spines + spine` indexed, like `uplink_up`.
+    gray_uplink: Vec<GrayState>,
+    /// NICs per server, cached for server-locality checks in
+    /// [`FaultPlane::path_gray`].
+    nics_per_server: usize,
 }
 
 impl FaultPlane {
@@ -137,6 +301,11 @@ impl FaultPlane {
             spine_factor: Vec::new(),
             uplink_up: Vec::new(),
             uplink_factor: Vec::new(),
+            gray_nic: Vec::new(),
+            gray_leaf: Vec::new(),
+            gray_spine: Vec::new(),
+            gray_uplink: Vec::new(),
+            nics_per_server: topo.cfg.nics_per_server,
         }
     }
 
@@ -237,21 +406,28 @@ impl FaultPlane {
     /// [`FaultPlane::note_state`] — fault scripts inject raw values here.
     pub fn set_state(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId, s: NicState) {
         self.note_state(nic, s);
-        let s = self.states[nic];
+        self.mirror_nic(topo, engine, nic);
+    }
+
+    /// Project one NIC's effective state — crisp state × gray capacity
+    /// share — onto its two engine resources. With no gray state this is
+    /// exactly the pre-gray mirroring (the gray share is 1.0, and
+    /// `f * 1.0 == f` bitwise for every finite factor).
+    fn mirror_nic(&self, topo: &Topology, engine: &mut Engine, nic: NicId) {
         let tx = topo.resource(ResourceKey::NicTx(nic));
         let rx = topo.resource(ResourceKey::NicRx(nic));
-        match s {
-            NicState::Healthy => {
-                engine.set_resource_up(tx, true);
-                engine.set_resource_up(rx, true);
-                engine.set_resource_factor(tx, 1.0);
-                engine.set_resource_factor(rx, 1.0);
-            }
+        match self.states[nic] {
             NicState::NicBroken | NicState::CableBroken => {
                 engine.set_resource_up(tx, false);
                 engine.set_resource_up(rx, false);
             }
-            NicState::Degraded(f) => {
+            state => {
+                let crisp = match state {
+                    NicState::Degraded(f) => f,
+                    _ => 1.0,
+                };
+                let f = (crisp * self.gray_of_nic(nic).capacity_share())
+                    .max(MIN_DEGRADE_FACTOR);
                 engine.set_resource_up(tx, true);
                 engine.set_resource_up(rx, true);
                 engine.set_resource_factor(tx, f);
@@ -318,10 +494,17 @@ impl FaultPlane {
         action: SwitchAction,
     ) {
         self.note_switch(topo, target, action);
+        self.mirror_switch(topo, engine, target);
+    }
+
+    /// Project one switch element's effective state — crisp liveness and
+    /// degradation × gray capacity share — onto its engine resources.
+    fn mirror_switch(&self, topo: &Topology, engine: &mut Engine, target: SwitchTarget) {
         match target {
             SwitchTarget::Leaf(l) => {
                 let up = self.leaf_up[l];
-                let f = self.leaf_factor[l];
+                let f = (self.leaf_factor[l] * self.gray_of_leaf(l).capacity_share())
+                    .max(MIN_DEGRADE_FACTOR);
                 for key in [ResourceKey::LeafIn(l), ResourceKey::LeafOut(l)] {
                     let rid = topo.resource(key);
                     engine.set_resource_up(rid, up);
@@ -337,7 +520,9 @@ impl FaultPlane {
                 let rid = topo.resource(ResourceKey::SpineSw(s));
                 engine.set_resource_up(rid, self.spine_up[s]);
                 if self.spine_up[s] {
-                    engine.set_resource_factor(rid, self.spine_factor[s]);
+                    let f = (self.spine_factor[s] * self.gray_of_spine(s).capacity_share())
+                        .max(MIN_DEGRADE_FACTOR);
+                    engine.set_resource_factor(rid, f);
                 }
             }
             SwitchTarget::Uplink(l, s) => self.mirror_uplink(topo, engine, l, s),
@@ -345,15 +530,18 @@ impl FaultPlane {
     }
 
     /// Project one uplink's effective state (own liveness ∧ owning leaf's
-    /// liveness) onto its two engine resources.
+    /// liveness, degradation × gray capacity share) onto its two engine
+    /// resources.
     fn mirror_uplink(&self, topo: &Topology, engine: &mut Engine, l: LeafId, s: SpineId) {
         let i = l * self.fabric.n_spines() + s;
         let up = self.uplink_up[i] && self.leaf_up[l];
+        let f = (self.uplink_factor[i] * self.gray_of_uplink(l, s).capacity_share())
+            .max(MIN_DEGRADE_FACTOR);
         for key in [ResourceKey::UplinkTx(l, s), ResourceKey::UplinkRx(l, s)] {
             let rid = topo.resource(key);
             engine.set_resource_up(rid, up);
             if up {
-                engine.set_resource_factor(rid, self.uplink_factor[i]);
+                engine.set_resource_factor(rid, f);
             }
         }
     }
@@ -371,6 +559,158 @@ impl FaultPlane {
     /// Repair a NIC/cable.
     pub fn repair(&mut self, topo: &Topology, engine: &mut Engine, nic: NicId) {
         self.set_state(topo, engine, nic, NicState::Healthy);
+    }
+
+    // ------------------------------------------------------------------
+    // Gray faults: the cluster lies instead of dying.
+    // ------------------------------------------------------------------
+
+    /// Whether any gray state has ever been injected. The fast gate the
+    /// executor uses to skip all gray bookkeeping — zero-gray runs never
+    /// allocate the tables and stay on the pre-gray hot path.
+    pub fn has_gray(&self) -> bool {
+        !self.gray_nic.is_empty()
+    }
+
+    /// Allocate the gray tables on first use (empty = all-identity).
+    fn ensure_gray_state(&mut self) {
+        if self.gray_nic.is_empty() {
+            self.gray_nic = vec![GrayState::HEALTHY; self.states.len()];
+            if !self.fabric.is_ideal() {
+                let (l, s) = (self.fabric.n_leaves(), self.fabric.n_spines());
+                self.gray_leaf = vec![GrayState::HEALTHY; l];
+                self.gray_spine = vec![GrayState::HEALTHY; s];
+                self.gray_uplink = vec![GrayState::HEALTHY; l * s];
+            }
+        }
+    }
+
+    /// Record a gray state without mirroring it into a fluid engine (the
+    /// plan-time path, mirroring [`FaultPlane::note_state`]). Malformed
+    /// knobs — NaN/negative loss or straggler, loss ≥ 1 — are clamped via
+    /// [`GrayState::sanitized`], so every gray-setting path shares the
+    /// invariant. Switch-tier targets require a leaf/spine fabric.
+    pub fn note_gray(&mut self, target: GrayTarget, gray: GrayState) {
+        if let GrayTarget::Switch(_) = target {
+            assert!(
+                !self.fabric.is_ideal(),
+                "switch-tier gray faults need a leaf/spine fabric (topology is flat)"
+            );
+        }
+        self.ensure_gray_state();
+        let gray = gray.sanitized();
+        match target {
+            GrayTarget::Nic(n) => self.gray_nic[n] = gray,
+            GrayTarget::Switch(SwitchTarget::Leaf(l)) => self.gray_leaf[l] = gray,
+            GrayTarget::Switch(SwitchTarget::Spine(s)) => self.gray_spine[s] = gray,
+            GrayTarget::Switch(SwitchTarget::Uplink(l, s)) => {
+                self.gray_uplink[l * self.fabric.n_spines() + s] = gray;
+            }
+        }
+    }
+
+    /// Apply a gray state and mirror its goodput tax + straggler slowdown
+    /// onto the element's engine resources (loss and jitter additionally
+    /// surface per-flow in the executor). Setting the identity state
+    /// clears the element.
+    pub fn set_gray(
+        &mut self,
+        topo: &Topology,
+        engine: &mut Engine,
+        target: GrayTarget,
+        gray: GrayState,
+    ) {
+        self.note_gray(target, gray);
+        match target {
+            GrayTarget::Nic(n) => self.mirror_nic(topo, engine, n),
+            GrayTarget::Switch(t) => {
+                // Switch-resource mirroring reads the crisp switch tables;
+                // make sure they exist even if no crisp switch fault ever
+                // fired (all-true/1.0 is behaviour-identical to empty).
+                self.ensure_switch_state();
+                self.mirror_switch(topo, engine, t);
+            }
+        }
+    }
+
+    /// The gray state of one NIC (identity when the tables were never
+    /// allocated).
+    pub fn gray_of_nic(&self, nic: NicId) -> GrayState {
+        if self.gray_nic.is_empty() {
+            GrayState::HEALTHY
+        } else {
+            self.gray_nic[nic]
+        }
+    }
+
+    fn gray_of_leaf(&self, l: LeafId) -> GrayState {
+        if self.gray_leaf.is_empty() {
+            GrayState::HEALTHY
+        } else {
+            self.gray_leaf[l]
+        }
+    }
+
+    fn gray_of_spine(&self, s: SpineId) -> GrayState {
+        if self.gray_spine.is_empty() {
+            GrayState::HEALTHY
+        } else {
+            self.gray_spine[s]
+        }
+    }
+
+    fn gray_of_uplink(&self, l: LeafId, s: SpineId) -> GrayState {
+        if self.gray_uplink.is_empty() {
+            GrayState::HEALTHY
+        } else {
+            self.gray_uplink[l * self.fabric.n_spines() + s]
+        }
+    }
+
+    /// The gray state sitting on one engine resource, keyed the way the
+    /// executor walks a flow's compiled path. Resources no gray fault can
+    /// sit on (NVLink, PCIe, UPI, the flat ToR) answer the identity.
+    pub fn gray_of_key(&self, key: ResourceKey) -> GrayState {
+        if !self.has_gray() {
+            return GrayState::HEALTHY;
+        }
+        match key {
+            ResourceKey::NicTx(n) | ResourceKey::NicRx(n) => self.gray_of_nic(n),
+            ResourceKey::LeafIn(l) | ResourceKey::LeafOut(l) => self.gray_of_leaf(l),
+            ResourceKey::SpineSw(s) => self.gray_of_spine(s),
+            ResourceKey::UplinkTx(l, s) | ResourceKey::UplinkRx(l, s) => self.gray_of_uplink(l, s),
+            _ => GrayState::HEALTHY,
+        }
+    }
+
+    /// Combined gray state along the (unmigrated) path between two NICs:
+    /// both endpoint NICs, plus — for cross-server pairs on a leaf/spine
+    /// fabric — the endpoint leaves and, when the leaves differ, the
+    /// ECMP-pinned spine and both uplink halves. This is what a probe
+    /// between the two NICs traverses, so it is also what the probe
+    /// latency sample reflects.
+    pub fn path_gray(&self, from: NicId, to: NicId) -> GrayState {
+        if !self.has_gray() {
+            return GrayState::HEALTHY;
+        }
+        let mut g = self.gray_of_nic(from);
+        if to != from {
+            g = g.compose(&self.gray_of_nic(to));
+        }
+        let cross_server = from / self.nics_per_server != to / self.nics_per_server;
+        if cross_server && !self.fabric.is_ideal() {
+            let lf = self.fabric.leaf_of_nic(from);
+            let lt = self.fabric.leaf_of_nic(to);
+            g = g.compose(&self.gray_of_leaf(lf));
+            if lt != lf {
+                g = g.compose(&self.gray_of_leaf(lt));
+                let s = self.fabric.ecmp_spine(from, to);
+                g = g.compose(&self.gray_of_spine(s));
+                g = g.compose(&self.gray_of_uplink(lf, s));
+                g = g.compose(&self.gray_of_uplink(lt, s));
+            }
+        }
+        g
     }
 
     /// Outcome of a zero-byte RDMA write probe from `from` to `to`.
@@ -638,6 +978,86 @@ mod tests {
         assert!(fp.leaf_alive(0));
         assert_eq!(fp.fabric_factor(0), 1.0);
         assert_eq!(fp.capacity_factor(0), 1.0);
+    }
+
+    #[test]
+    fn gray_knobs_are_sanitized_at_the_note_boundary() {
+        let (_, _, mut fp) = setup();
+        assert!(!fp.has_gray());
+        // NaN/negative loss and straggler clamp to the identity.
+        fp.note_gray(
+            GrayTarget::Nic(2),
+            GrayState { loss_rate: f64::NAN, latency_jitter: -1.0, straggler_factor: -3.0 },
+        );
+        assert!(fp.has_gray());
+        assert_eq!(fp.gray_of_nic(2), GrayState::HEALTHY);
+        // Loss is capped below 1 (MAX_LOSS_RATE), straggler at its ceiling.
+        fp.note_gray(
+            GrayTarget::Nic(2),
+            GrayState { loss_rate: 1.5, latency_jitter: f64::INFINITY, straggler_factor: 50.0 },
+        );
+        let g = fp.gray_of_nic(2);
+        assert_eq!(g.loss_rate, MAX_LOSS_RATE);
+        assert_eq!(g.latency_jitter, 1.0);
+        // The capacity-share floor rescales the straggler: never below the
+        // sub-threshold boundary.
+        assert!(g.capacity_share() >= MIN_GRAY_CAPACITY - 1e-12);
+    }
+
+    #[test]
+    fn gray_capacity_folds_into_engine_factors() {
+        let (topo, mut eng, mut fp) = setup();
+        let tx = topo.resource(ResourceKey::NicTx(4));
+        fp.set_gray(
+            &topo,
+            &mut eng,
+            GrayTarget::Nic(4),
+            GrayState { loss_rate: 0.2, latency_jitter: 0.0, straggler_factor: 2.0 },
+        );
+        // Goodput tax × straggler slowdown: (1 - 0.2) / 2 = 0.4.
+        assert!((eng.resource_factor(tx) - 0.4).abs() < 1e-12);
+        // Gray is invisible to the planner: capacity_factor stays crisp.
+        assert_eq!(fp.capacity_factor(4), 1.0);
+        assert!(fp.is_usable(4));
+        assert_eq!(fp.probe(4, 10), ProbeOutcome::Ok);
+        // Gray composes with a crisp degradation multiplicatively.
+        fp.set_state(&topo, &mut eng, 4, NicState::Degraded(0.5));
+        assert!((eng.resource_factor(tx) - 0.2).abs() < 1e-12);
+        // Clearing the gray restores exactly the crisp factor.
+        fp.set_gray(&topo, &mut eng, GrayTarget::Nic(4), GrayState::HEALTHY);
+        assert!((eng.resource_factor(tx) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_tier_gray_mirrors_and_composes_on_paths() {
+        let (topo, mut eng, mut fp) = leaf_spine_setup();
+        let leaf = topo.fabric().leaf_id(0, 0);
+        let g = GrayState { loss_rate: 0.25, latency_jitter: 10.0e-6, straggler_factor: 1.0 };
+        fp.set_gray(&topo, &mut eng, GrayTarget::Switch(SwitchTarget::Uplink(leaf, 1)), g);
+        let rid = topo.resource(ResourceKey::UplinkTx(leaf, 1));
+        assert!((eng.resource_factor(rid) - 0.75).abs() < 1e-12);
+        // path_gray folds the uplink in exactly for pairs ECMP-pinned to
+        // spine 1 across the leaf.
+        let far = 4 * 8; // rail 0 NIC of the other pod
+        let pinned = topo.fabric().ecmp_spine(0, far);
+        let pg = fp.path_gray(0, far);
+        if pinned == 1 {
+            assert!((pg.loss_rate - 0.25).abs() < 1e-12);
+            assert!((pg.latency_jitter - 10.0e-6).abs() < 1e-15);
+        } else {
+            assert!(pg.is_healthy());
+        }
+        // Same-server pairs never cross the fabric.
+        assert!(fp.path_gray(0, 1).is_healthy());
+    }
+
+    #[test]
+    fn switch_gray_on_flat_fabric_is_rejected() {
+        let (_, _, mut fp) = setup();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fp.note_gray(GrayTarget::Switch(SwitchTarget::Spine(0)), GrayState::HEALTHY);
+        }));
+        assert!(r.is_err(), "flat fabrics have no switch tier to be gray");
     }
 
     #[test]

@@ -15,8 +15,9 @@ pub mod fault;
 
 pub use engine::{Engine, Event, FlowId, ScriptKind, SimTime, TimerId};
 pub use fault::{
-    clamp_degrade_factor, FailureKind, FaultPlane, NicState, ProbeOutcome, Support,
-    MIN_DEGRADE_FACTOR,
+    clamp_degrade_factor, clamp_latency_jitter, clamp_loss_rate, clamp_straggler_factor,
+    FailureKind, FaultPlane, GrayState, GrayTarget, NicState, ProbeOutcome, Support,
+    MAX_LOSS_RATE, MAX_STRAGGLER_FACTOR, MIN_DEGRADE_FACTOR, MIN_GRAY_CAPACITY,
 };
 
 use std::cell::{Cell, RefCell};

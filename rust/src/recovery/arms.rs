@@ -999,6 +999,7 @@ mod tests {
             cluster: None,
             recovery: Some(RecoveryConfig::default()),
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::OneShot {
                 at,
                 nic: 0,
@@ -1053,6 +1054,8 @@ mod tests {
             serving: None,
             recovery: None,
             elastic: None,
+            gray_events: Vec::new(),
+            telemetry: None,
             events_popped: 0,
             domains_touched: 0,
             resident_resources: 0,
@@ -1316,6 +1319,7 @@ mod tests {
             cluster: None,
             recovery: Some(RecoveryConfig::default()),
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 1,

@@ -77,6 +77,7 @@ mod tests {
                 cluster: None,
                 recovery: None, // swept with the default config anyway
                 quorum: None,
+                telemetry: false,
                 patterns: vec![FaultPattern::OneShot {
                     at: 1.5,
                     nic: 0,
@@ -92,6 +93,7 @@ mod tests {
                 cluster: None,
                 recovery: Some(RecoveryConfig { checkpoint_interval: 2, ..Default::default() }),
                 quorum: None,
+                telemetry: false,
                 patterns: vec![],
             },
         ]

@@ -20,17 +20,17 @@ pub mod spec;
 
 pub use runner::{
     effective_preset, run_corpus, ElasticEventRecord, ElasticSummary, IterationRecord,
-    ScenarioReport, ScenarioRunner,
+    ScenarioReport, ScenarioRunner, TelemetryIterRecord, TelemetrySummary,
 };
 pub use spec::{
     fabric_from_json, fabric_to_json, sample_multi_fault, ClusterSpec, FaultPattern,
-    FaultScenario, MembershipChange, MembershipEvent, ScenarioEvent, SwitchScenarioEvent,
-    Workload, DEFAULT_QUORUM,
+    FaultScenario, GrayScenarioEvent, MembershipChange, MembershipEvent, ScenarioEvent,
+    SwitchScenarioEvent, Workload, DEFAULT_QUORUM, GRAY_SEED_SALT,
 };
 
 use std::path::{Path, PathBuf};
 
-use crate::collectives::exec::{ExecReport, TimelineEntry};
+use crate::collectives::exec::{CollectiveTelemetry, ExecReport, TimelineEntry};
 use crate::schedule::Strategy;
 
 /// Executor-level aggregates of one scenario-driven workload iteration —
@@ -61,6 +61,9 @@ pub struct IterOutcome {
     /// Peak sparse-resident engine resources (perf counter; not part of
     /// any trace serialization).
     pub resident_resources: u64,
+    /// Per-collective telemetry of the scripted main collective (`None`
+    /// unless the scenario declares `telemetry`).
+    pub telemetry: Option<CollectiveTelemetry>,
 }
 
 impl IterOutcome {
@@ -75,6 +78,7 @@ impl IterOutcome {
         lossless: Option<bool>,
     ) -> IterOutcome {
         IterOutcome {
+            telemetry: rep.telemetry.clone(),
             time: extra_time + rep.completion.unwrap_or(0.0),
             crashed: rep.crashed || rep.completion.is_none(),
             migrations: rep.migrations.len(),

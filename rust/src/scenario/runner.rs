@@ -23,11 +23,17 @@
 //! * **bounded overhead** — when the scenario declares `max_overhead`, the
 //!   mean per-iteration overhead vs the healthy baseline must stay below.
 
+use std::collections::BTreeMap;
+
 use crate::ccl::{CommGroup, CommWorld, ElasticKind, StrategyChoice};
-use crate::collectives::exec::{FaultAction, FaultEvent, TimelineEntry};
+use crate::collectives::exec::{
+    CollectiveTelemetry, FaultAction, FaultEvent, GrayFaultEvent, ObserveOptions, TimelineEntry,
+};
 use crate::collectives::CollKind;
 use crate::config::Preset;
+use crate::detect::{localize, LocalizeWindow, Suspect};
 use crate::fabric::{SwitchAction, SwitchFaultEvent, SwitchTarget};
+use crate::netsim::{GrayState, GrayTarget};
 use crate::recovery::{compare_arms, RecoveryCompare};
 use crate::serve::{run_request_engine, summarize, EngineCfg, ServingSummary};
 use crate::sim::inference::{kv_shard_bytes, pd_kv_pair, scenario_serving_iteration, InferModel};
@@ -39,7 +45,8 @@ use crate::topology::{NicId, ServerId, Topology};
 use crate::util::Json;
 
 use super::spec::{
-    FaultScenario, MembershipChange, ScenarioEvent, SwitchScenarioEvent, Workload,
+    FaultScenario, GrayScenarioEvent, MembershipChange, ScenarioEvent, SwitchScenarioEvent,
+    Workload, GRAY_SEED_SALT,
 };
 use super::IterOutcome;
 
@@ -135,6 +142,67 @@ impl ElasticSummary {
     }
 }
 
+/// Telemetry aggregate of one iteration's scripted main collective, plus
+/// the online localizer's ranking over that iteration's window.
+#[derive(Debug, Clone)]
+pub struct TelemetryIterRecord {
+    pub iter: usize,
+    /// Distinct (src NIC, dst NIC) pairs that moved payload bytes.
+    pub pairs: usize,
+    /// Payload bytes across the window's pairs.
+    pub bytes: u64,
+    /// Retransmitted wire bytes (the gray goodput tax) across the pairs.
+    pub retrans_bytes: u64,
+    /// Timed-probe RTT samples swept at collective completion.
+    pub rtt_samples: usize,
+    /// Latest minus earliest last-completion across data-moving servers.
+    pub completion_skew: f64,
+    /// Localizer ranking over this iteration's window (top suspects).
+    pub suspects: Vec<Suspect>,
+}
+
+impl TelemetryIterRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("iter", self.iter)
+            .set("pairs", self.pairs)
+            .set("bytes", self.bytes)
+            .set("retrans_bytes", self.retrans_bytes)
+            .set("rtt_samples", self.rtt_samples)
+            .set("completion_skew", self.completion_skew)
+            .set("suspects", suspects_json(&self.suspects))
+    }
+}
+
+fn suspects_json(suspects: &[Suspect]) -> Json {
+    let mut arr = Json::arr();
+    for s in suspects {
+        arr.push(Json::obj().set("target", s.target.label()).set("score", s.score));
+    }
+    arr
+}
+
+/// Telemetry block of a report — present only when the scenario declares
+/// `telemetry` (or the CLI forces it), so pre-telemetry golden traces are
+/// byte-identical.
+#[derive(Debug, Clone)]
+pub struct TelemetrySummary {
+    pub iterations: Vec<TelemetryIterRecord>,
+    /// Localizer ranking over the merged whole-run window — what the
+    /// `localize-score` CLI scores against the compiled gray script.
+    pub suspects: Vec<Suspect>,
+}
+
+impl TelemetrySummary {
+    pub fn to_json(&self) -> Json {
+        let mut iters = Json::arr();
+        for r in &self.iterations {
+            iters.push(r.to_json());
+        }
+        Json::obj().set("iterations", iters).set("suspects", suspects_json(&self.suspects))
+    }
+}
+
 /// The deterministic result of a scenario run; `to_json().pretty()` is the
 /// golden-trace wire format.
 #[derive(Debug, Clone)]
@@ -146,6 +214,9 @@ pub struct ScenarioReport {
     /// empty — and absent from the JSON — on flat-fabric scenarios, so
     /// pre-fabric golden traces are byte-identical).
     pub switch_events: Vec<SwitchScenarioEvent>,
+    /// Compiled gray-fault script (ground truth for the localizer). Empty
+    /// — and absent from the JSON — on scenarios without gray patterns.
+    pub gray_events: Vec<GrayScenarioEvent>,
     /// Healthy-baseline iteration time (no faults, same workload).
     pub healthy_iter_time: f64,
     /// Healthy completion time of the main collective — the base that maps
@@ -181,6 +252,10 @@ pub struct ScenarioReport {
     /// `RollingMaintenance`). Appended to the JSON only when present, so
     /// pre-elastic golden traces are byte-identical.
     pub elastic: Option<ElasticSummary>,
+    /// Per-iteration telemetry + localizer rankings — present only when
+    /// the scenario declares `telemetry`. Appended to the JSON only when
+    /// present, so pre-telemetry golden traces are byte-identical.
+    pub telemetry: Option<TelemetrySummary>,
     /// Total kernel events popped across all iterations (perf counter —
     /// never serialized; `to_json` stays byte-identical to pre-kernel
     /// golden traces).
@@ -283,6 +358,15 @@ impl ScenarioReport {
             }
             j.set("switch_events", sw)
         };
+        let j = if self.gray_events.is_empty() {
+            j
+        } else {
+            let mut gr = Json::arr();
+            for e in &self.gray_events {
+                gr.push(e.to_json());
+            }
+            j.set("gray_events", gr)
+        };
         let j = j
             .set("healthy_iter_time", self.healthy_iter_time)
             .set("time_base", self.time_base)
@@ -309,8 +393,12 @@ impl ScenarioReport {
             Some(r) => j.set("recovery", r.to_json()),
             None => j,
         };
-        match &self.elastic {
+        let j = match &self.elastic {
             Some(e) => j.set("elastic", e.to_json()),
+            None => j,
+        };
+        match &self.telemetry {
+            Some(t) => j.set("telemetry", t.to_json()),
             None => j,
         }
     }
@@ -388,6 +476,7 @@ pub struct ScenarioRunner<'a> {
     channels: usize,
     choice: StrategyChoice,
     verify_data: bool,
+    force_telemetry: bool,
 }
 
 impl<'a> ScenarioRunner<'a> {
@@ -407,6 +496,7 @@ impl<'a> ScenarioRunner<'a> {
             channels,
             choice: StrategyChoice::Auto,
             verify_data: true,
+            force_telemetry: false,
         }
     }
 
@@ -426,12 +516,21 @@ impl<'a> ScenarioRunner<'a> {
         self
     }
 
+    /// Collect per-collective telemetry (and run the localizer) even when
+    /// the scenario does not declare `telemetry` — the `localize-score`
+    /// CLI's override.
+    pub fn with_telemetry(mut self) -> Self {
+        self.force_telemetry = true;
+        self
+    }
+
     fn drive(
         &self,
         world: &CommWorld,
         ctx: &Ctx,
         script: Vec<FaultEvent>,
         switch_script: Vec<SwitchFaultEvent>,
+        observe: ObserveOptions,
         verify: bool,
     ) -> IterOutcome {
         match ctx {
@@ -443,6 +542,7 @@ impl<'a> ScenarioRunner<'a> {
                 self.choice,
                 script,
                 switch_script,
+                observe,
                 verify,
             ),
             Ctx::Serving { model, pair, prompt_tokens } => scenario_serving_iteration(
@@ -453,6 +553,7 @@ impl<'a> ScenarioRunner<'a> {
                 self.choice,
                 script,
                 switch_script,
+                observe,
             ),
         }
     }
@@ -504,6 +605,8 @@ impl<'a> ScenarioRunner<'a> {
             serving: Some(summary),
             recovery: None,
             elastic: None,
+            gray_events: Vec::new(),
+            telemetry: None,
             events_popped: 0,
             domains_touched: 0,
             resident_resources: 0,
@@ -548,6 +651,10 @@ impl<'a> ScenarioRunner<'a> {
         }
         let fabric_cfg = self.scenario.fabric_config();
         let (events, switch_events) = self.scenario.compile_full(&self.preset.topo);
+        let gray_events = self.scenario.compile_gray(&self.preset.topo);
+        let telemetry_on = self.scenario.telemetry || self.force_telemetry;
+        let observe_active = telemetry_on || !gray_events.is_empty();
+        let gray_seed = self.scenario.seed ^ GRAY_SEED_SALT;
         let elastic = self.scenario.is_elastic();
         let spares = self.scenario.spare_servers();
         let membership = self.scenario.compile_membership();
@@ -569,7 +676,14 @@ impl<'a> ScenarioRunner<'a> {
             .expect("healthy main collective must complete");
         let payload_per_iter = main_bytes.saturating_mul(main.n_ranks() as u64);
         let main_servers: Vec<ServerId> = main.servers().to_vec();
-        let healthy_out = self.drive(&healthy_world, &healthy_ctx, Vec::new(), Vec::new(), false);
+        let healthy_out = self.drive(
+            &healthy_world,
+            &healthy_ctx,
+            Vec::new(),
+            Vec::new(),
+            ObserveOptions::default(),
+            false,
+        );
         assert!(!healthy_out.crashed, "healthy baseline iteration crashed");
         let healthy_iter_time = healthy_out.time;
 
@@ -597,6 +711,13 @@ impl<'a> ScenarioRunner<'a> {
         let mut quorum_lost = false;
         let mut el_events: Vec<ElasticEventRecord> = Vec::new();
         let mut retried_iterations = 0usize;
+        // Gray state carried across iterations (latest state per element,
+        // in target order) + the run-wide telemetry accumulators.
+        let mut gi = 0usize;
+        let mut standing_gray: BTreeMap<(u8, usize, usize), (GrayTarget, GrayState)> =
+            BTreeMap::new();
+        let mut telem_iters: Vec<TelemetryIterRecord> = Vec::new();
+        let mut merged_window = CollectiveTelemetry::default();
 
         for k in 0..self.scenario.iters {
             let mut script: Vec<FaultEvent> = Vec::new();
@@ -664,6 +785,38 @@ impl<'a> ScenarioRunner<'a> {
                     }
                 }
             }
+            // Gray events split the same way crisp ones do: boundary events
+            // are standing state for the whole iteration, fractional ones
+            // land mid-collective via the executor's gray script. Gray
+            // state never feeds the ground-truth trackers above — the
+            // element stays "usable", that is the point.
+            let mut gray_script: Vec<GrayFaultEvent> = Vec::new();
+            let mut gray_folds: Vec<GrayScenarioEvent> = Vec::new();
+            while gi < gray_events.len() && gray_events[gi].at_iter < (k + 1) as f64 {
+                let e = gray_events[gi];
+                gi += 1;
+                let frac = e.at_iter - k as f64;
+                if frac <= 0.0 {
+                    standing_gray.insert(e.target.sort_key(), (e.target, e.gray));
+                } else {
+                    gray_script.push(GrayFaultEvent {
+                        at: frac * time_base,
+                        target: e.target,
+                        gray: e.gray,
+                    });
+                    gray_folds.push(e);
+                }
+            }
+            let observe = if observe_active {
+                ObserveOptions {
+                    gray_script,
+                    standing_gray: standing_gray.values().copied().collect(),
+                    gray_seed: gray_seed ^ (k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                    telemetry: telemetry_on,
+                }
+            } else {
+                ObserveOptions::default()
+            };
             // Membership changes on (or before) this boundary are standing
             // knowledge too: the NIC repairs an expand rides on were just
             // noted plan-time above, so the rejoining server comes back
@@ -677,7 +830,7 @@ impl<'a> ScenarioRunner<'a> {
             if changed {
                 ctx.rebuild_elastic(&world);
             }
-            let mut out = self.drive(&world, &ctx, script, switch_script, self.verify_data);
+            let mut out = self.drive(&world, &ctx, script, switch_script, observe, self.verify_data);
             // Mid-flight events become standing knowledge for the *next*
             // iteration (the OOB broadcast of §4.1).
             for e in folds {
@@ -685,6 +838,9 @@ impl<'a> ScenarioRunner<'a> {
             }
             for e in switch_folds {
                 world.note_switch_failure(e.target, e.action);
+            }
+            for e in gray_folds {
+                standing_gray.insert(e.target.sort_key(), (e.target, e.gray));
             }
             if out.crashed && elastic {
                 // Elastic recovery — the no-crash-while-quorum-exists path:
@@ -736,12 +892,35 @@ impl<'a> ScenarioRunner<'a> {
                         break;
                     }
                     ctx.rebuild_elastic(&world);
-                    let retry = self.drive(&world, &ctx, Vec::new(), Vec::new(), self.verify_data);
+                    let retry_observe = if observe_active {
+                        ObserveOptions {
+                            gray_script: Vec::new(),
+                            standing_gray: standing_gray.values().copied().collect(),
+                            gray_seed: gray_seed
+                                ^ (k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                            telemetry: telemetry_on,
+                        }
+                    } else {
+                        ObserveOptions::default()
+                    };
+                    let retry = self.drive(
+                        &world,
+                        &ctx,
+                        Vec::new(),
+                        Vec::new(),
+                        retry_observe,
+                        self.verify_data,
+                    );
                     retried_iterations += 1;
                     // The crashed attempt's partial work is real: its time
                     // and byte counters accumulate into the iteration.
                     let attempt = out;
                     out = retry;
+                    match (&mut out.telemetry, &attempt.telemetry) {
+                        (Some(t), Some(a)) => t.merge(a),
+                        (None, Some(_)) => out.telemetry = attempt.telemetry.clone(),
+                        _ => {}
+                    }
                     out.time += attempt.time;
                     out.migrations += attempt.migrations;
                     out.retransmitted_bytes += attempt.retransmitted_bytes;
@@ -754,6 +933,23 @@ impl<'a> ScenarioRunner<'a> {
                     if !out.crashed {
                         break;
                     }
+                }
+            }
+            if telemetry_on {
+                if let Some(t) = &out.telemetry {
+                    let window = LocalizeWindow { pairs: &t.pairs, rtts: &t.rtts };
+                    let mut suspects = localize(&topo, &window);
+                    suspects.truncate(5);
+                    telem_iters.push(TelemetryIterRecord {
+                        iter: k,
+                        pairs: t.pairs.len(),
+                        bytes: t.pairs.iter().map(|p| p.bytes).sum(),
+                        retrans_bytes: t.pairs.iter().map(|p| p.retrans).sum(),
+                        rtt_samples: t.rtts.len(),
+                        completion_skew: t.completion_skew,
+                        suspects,
+                    });
+                    merged_window.merge(t);
                 }
             }
             total_time += out.time;
@@ -828,6 +1024,16 @@ impl<'a> ScenarioRunner<'a> {
                     final_active_servers: world.n_active_servers(),
                     events: el_events,
                 })
+            } else {
+                None
+            },
+            gray_events,
+            telemetry: if telemetry_on {
+                let window =
+                    LocalizeWindow { pairs: &merged_window.pairs, rtts: &merged_window.rtts };
+                let mut suspects = localize(&topo, &window);
+                suspects.truncate(8);
+                Some(TelemetrySummary { iterations: telem_iters, suspects })
             } else {
                 None
             },
@@ -963,6 +1169,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns,
         }
     }
@@ -1060,6 +1267,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 1,
@@ -1094,6 +1302,7 @@ mod tests {
             cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::ReplicaDown {
                 replica: 1,
                 at: 0.3,
@@ -1139,6 +1348,7 @@ mod tests {
             }),
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns,
         }
     }
@@ -1291,6 +1501,7 @@ mod tests {
             }),
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::ServerReplace { server: 2, spare: 15, at: 1.4 }],
         };
         let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();

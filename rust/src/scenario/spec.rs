@@ -14,6 +14,10 @@
 
 use crate::collectives::exec::FaultAction;
 use crate::fabric::{Fabric, FabricConfig, FabricMode, LeafSpineCfg, SwitchAction, SwitchTarget};
+use crate::netsim::{
+    clamp_latency_jitter, clamp_loss_rate, clamp_straggler_factor, GrayState, GrayTarget,
+    MAX_LOSS_RATE, MAX_STRAGGLER_FACTOR,
+};
 use crate::recovery::RecoveryConfig;
 use crate::serve::ArrivalSpec;
 use crate::topology::{NicId, TopologyConfig};
@@ -63,6 +67,29 @@ impl SwitchScenarioEvent {
             Some(f) => j.set("factor", f),
             None => j,
         }
+    }
+}
+
+/// One compiled *gray-fault* occurrence, in the same iteration-relative
+/// time base as [`ScenarioEvent`]. Gray events never touch the crisp fault
+/// plane the planner reacts to — they set the sub-threshold [`GrayState`]
+/// of one element, which the executor folds into flow arithmetic and the
+/// localizer is later scored against as ground truth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GrayScenarioEvent {
+    pub at_iter: f64,
+    pub target: GrayTarget,
+    pub gray: GrayState,
+}
+
+impl GrayScenarioEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("at_iter", self.at_iter)
+            .set("target", self.target.label())
+            .set("loss_rate", self.gray.loss_rate)
+            .set("latency_jitter", self.gray.latency_jitter)
+            .set("straggler_factor", self.gray.straggler_factor)
     }
 }
 
@@ -146,6 +173,35 @@ pub enum FaultPattern {
     /// its NICs down at `start + i × window`, repaired a `window` later —
     /// so the membership shrinks and re-expands server by server.
     RollingMaintenance { servers: Vec<usize>, start: f64, window: f64 },
+    /// A silently-lossy NIC (SHIFT's classic gray failure): the NIC starts
+    /// dropping a fraction `loss` of its bytes at `at` — invisible to
+    /// probes and the degrade detector — and goes clean `clear_after`
+    /// later when given. Compiles to the gray script, never the crisp one.
+    SilentLoss { nic: NicId, at: f64, loss: f64, clear_after: Option<f64> },
+    /// A straggler NIC: completion times through it stretch by `factor`
+    /// (plus seedable per-flow jitter amplitude `jitter`) starting at
+    /// `at`, clean again `clear_after` later when given. Stays below the
+    /// degrade-detect threshold so the planner never migrates around it.
+    StragglerNic { nic: NicId, at: f64, factor: f64, jitter: f64, clear_after: Option<f64> },
+    /// An asymmetric path: one leaf→spine uplink silently drops `loss` of
+    /// its bytes and jitters latencies by `jitter` from `at` — only the
+    /// ECMP subset of cross-leaf pairs pinned to that uplink suffers.
+    /// Requires a leaf/spine fabric ([`ClusterSpec`]).
+    AsymmetricPath {
+        pod: usize,
+        rail: usize,
+        spine: usize,
+        at: f64,
+        loss: f64,
+        jitter: f64,
+        clear_after: Option<f64>,
+    },
+    /// A gray ramp: the NIC's loss rate climbs linearly from 0 towards
+    /// `peak_loss` in `steps` gray events spaced `dt` apart (each with
+    /// seeded multiplicative noise in [0.9, 1.1], clamped to the peak),
+    /// latency jitter ramping alongside towards `jitter`. Never recovers —
+    /// the slow-burn fault the localizer must catch early.
+    GrayRamp { nic: NicId, start: f64, steps: usize, dt: f64, peak_loss: f64, jitter: f64 },
 }
 
 /// Every NIC of `server` fails at `at`; all repaired `restore_after` later
@@ -194,7 +250,24 @@ impl FaultPattern {
             FaultPattern::ServerDown { .. } => "server_down",
             FaultPattern::ServerReplace { .. } => "server_replace",
             FaultPattern::RollingMaintenance { .. } => "rolling_maintenance",
+            FaultPattern::SilentLoss { .. } => "silent_loss",
+            FaultPattern::StragglerNic { .. } => "straggler_nic",
+            FaultPattern::AsymmetricPath { .. } => "asymmetric_path",
+            FaultPattern::GrayRamp { .. } => "gray_ramp",
         }
+    }
+
+    /// Whether this pattern compiles to the *gray* script (sub-threshold
+    /// impairments the planner cannot see) instead of the crisp NIC /
+    /// switch scripts.
+    pub fn is_gray(&self) -> bool {
+        matches!(
+            self,
+            FaultPattern::SilentLoss { .. }
+                | FaultPattern::StragglerNic { .. }
+                | FaultPattern::AsymmetricPath { .. }
+                | FaultPattern::GrayRamp { .. }
+        )
     }
 
     /// Whether this pattern drives elastic membership changes (whole-server
@@ -433,11 +506,91 @@ impl FaultPattern {
                     server_outage(topo, server, at, Some(*window), out);
                 }
             }
-            // Switch-scoped patterns compile through `compile_switch`.
+            // Switch-scoped patterns compile through `compile_switch`;
+            // gray patterns compile through `compile_gray` (their own
+            // seeded stream, so adding one never perturbs these scripts).
             FaultPattern::LeafSwitchDown { .. }
             | FaultPattern::SpineDegrade { .. }
             | FaultPattern::UplinkFlap { .. }
-            | FaultPattern::OversubSaturation { .. } => {}
+            | FaultPattern::OversubSaturation { .. }
+            | FaultPattern::SilentLoss { .. }
+            | FaultPattern::StragglerNic { .. }
+            | FaultPattern::AsymmetricPath { .. }
+            | FaultPattern::GrayRamp { .. } => {}
+        }
+    }
+
+    /// Expand a gray pattern into the gray script. Crisp patterns emit
+    /// nothing here. Gray patterns draw from a *separate* seeded RNG
+    /// stream (see [`FaultScenario::compile_gray`]), so the crisp scripts
+    /// of a scenario are bit-identical with and without gray patterns.
+    fn compile_gray(&self, fabric: &Fabric, rng: &mut Rng, out: &mut Vec<GrayScenarioEvent>) {
+        match self {
+            FaultPattern::SilentLoss { nic, at, loss, clear_after } => {
+                let gray = GrayState {
+                    loss_rate: clamp_loss_rate(*loss),
+                    ..GrayState::HEALTHY
+                };
+                out.push(GrayScenarioEvent { at_iter: *at, target: GrayTarget::Nic(*nic), gray });
+                if let Some(after) = clear_after {
+                    out.push(GrayScenarioEvent {
+                        at_iter: at + after,
+                        target: GrayTarget::Nic(*nic),
+                        gray: GrayState::HEALTHY,
+                    });
+                }
+            }
+            FaultPattern::StragglerNic { nic, at, factor, jitter, clear_after } => {
+                let gray = GrayState {
+                    loss_rate: 0.0,
+                    latency_jitter: clamp_latency_jitter(*jitter),
+                    straggler_factor: clamp_straggler_factor(*factor),
+                };
+                out.push(GrayScenarioEvent { at_iter: *at, target: GrayTarget::Nic(*nic), gray });
+                if let Some(after) = clear_after {
+                    out.push(GrayScenarioEvent {
+                        at_iter: at + after,
+                        target: GrayTarget::Nic(*nic),
+                        gray: GrayState::HEALTHY,
+                    });
+                }
+            }
+            FaultPattern::AsymmetricPath { pod, rail, spine, at, loss, jitter, clear_after } => {
+                let target =
+                    GrayTarget::Switch(SwitchTarget::Uplink(fabric.leaf_id(*pod, *rail), *spine));
+                let gray = GrayState {
+                    loss_rate: clamp_loss_rate(*loss),
+                    latency_jitter: clamp_latency_jitter(*jitter),
+                    straggler_factor: 1.0,
+                };
+                out.push(GrayScenarioEvent { at_iter: *at, target, gray });
+                if let Some(after) = clear_after {
+                    out.push(GrayScenarioEvent {
+                        at_iter: at + after,
+                        target,
+                        gray: GrayState::HEALTHY,
+                    });
+                }
+            }
+            FaultPattern::GrayRamp { nic, start, steps, dt, peak_loss, jitter } => {
+                let steps = (*steps).max(1);
+                for s in 1..=steps {
+                    let frac = s as f64 / steps as f64;
+                    let noisy =
+                        (peak_loss * frac * rng.range_f64(0.9, 1.1)).clamp(0.0, *peak_loss);
+                    let gray = GrayState {
+                        loss_rate: clamp_loss_rate(noisy),
+                        latency_jitter: clamp_latency_jitter(jitter * frac),
+                        straggler_factor: 1.0,
+                    };
+                    out.push(GrayScenarioEvent {
+                        at_iter: start + s as f64 * dt,
+                        target: GrayTarget::Nic(*nic),
+                        gray,
+                    });
+                }
+            }
+            _ => {}
         }
     }
 
@@ -533,6 +686,44 @@ impl FaultPattern {
                 .set("servers", usize_arr(servers))
                 .set("start", *start)
                 .set("window", *window),
+            FaultPattern::SilentLoss { nic, at, loss, clear_after } => {
+                let j = j.set("nic", *nic).set("at", *at).set("loss", *loss);
+                match clear_after {
+                    Some(a) => j.set("clear_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::StragglerNic { nic, at, factor, jitter, clear_after } => {
+                let j = j
+                    .set("nic", *nic)
+                    .set("at", *at)
+                    .set("factor", *factor)
+                    .set("jitter", *jitter);
+                match clear_after {
+                    Some(a) => j.set("clear_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::AsymmetricPath { pod, rail, spine, at, loss, jitter, clear_after } => {
+                let j = j
+                    .set("pod", *pod)
+                    .set("rail", *rail)
+                    .set("spine", *spine)
+                    .set("at", *at)
+                    .set("loss", *loss)
+                    .set("jitter", *jitter);
+                match clear_after {
+                    Some(a) => j.set("clear_after", *a),
+                    None => j,
+                }
+            }
+            FaultPattern::GrayRamp { nic, start, steps, dt, peak_loss, jitter } => j
+                .set("nic", *nic)
+                .set("start", *start)
+                .set("steps", *steps)
+                .set("dt", *dt)
+                .set("peak_loss", *peak_loss)
+                .set("jitter", *jitter),
         }
     }
 
@@ -632,6 +823,36 @@ impl FaultPattern {
                 servers: req_usize_arr(j, "servers")?,
                 start: req_f64(j, "start")?,
                 window: req_f64(j, "window")?,
+            }),
+            "silent_loss" => Ok(FaultPattern::SilentLoss {
+                nic: req_usize(j, "nic")?,
+                at: req_f64(j, "at")?,
+                loss: req_f64(j, "loss")?,
+                clear_after: j.get("clear_after").and_then(Json::as_f64),
+            }),
+            "straggler_nic" => Ok(FaultPattern::StragglerNic {
+                nic: req_usize(j, "nic")?,
+                at: req_f64(j, "at")?,
+                factor: req_f64(j, "factor")?,
+                jitter: j.get("jitter").and_then(Json::as_f64).unwrap_or(0.0),
+                clear_after: j.get("clear_after").and_then(Json::as_f64),
+            }),
+            "asymmetric_path" => Ok(FaultPattern::AsymmetricPath {
+                pod: req_usize(j, "pod")?,
+                rail: req_usize(j, "rail")?,
+                spine: req_usize(j, "spine")?,
+                at: req_f64(j, "at")?,
+                loss: req_f64(j, "loss")?,
+                jitter: j.get("jitter").and_then(Json::as_f64).unwrap_or(0.0),
+                clear_after: j.get("clear_after").and_then(Json::as_f64),
+            }),
+            "gray_ramp" => Ok(FaultPattern::GrayRamp {
+                nic: req_usize(j, "nic")?,
+                start: req_f64(j, "start")?,
+                steps: req_usize(j, "steps")?,
+                dt: req_f64(j, "dt")?,
+                peak_loss: req_f64(j, "peak_loss")?,
+                jitter: j.get("jitter").and_then(Json::as_f64).unwrap_or(0.0),
             }),
             other => Err(format!("unknown pattern kind {other:?}")),
         }
@@ -845,12 +1066,22 @@ pub struct FaultScenario {
     /// usable path. `None` = the default [`DEFAULT_QUORUM`]; serialized only
     /// when set, so pre-elastic scenario files (and traces) are unchanged.
     pub quorum: Option<f64>,
+    /// Opt-in per-collective telemetry: when set, the runner collects
+    /// per-pair byte/busy/retransmit counters and probe RTT sweeps each
+    /// iteration, runs the online localizer over them, and the report
+    /// carries a `telemetry` block. `false` = no collection and no report
+    /// key, so pre-telemetry golden traces are byte-identical.
+    pub telemetry: bool,
     pub patterns: Vec<FaultPattern>,
 }
 
 /// Default quorum fraction for elastic scenarios: a strict majority of the
 /// cluster's servers must keep a usable path for the job to keep going.
 pub const DEFAULT_QUORUM: f64 = 0.5;
+
+/// XOR salt separating the gray-compilation RNG stream from the crisp one
+/// seeded directly with `FaultScenario::seed` ("gray" in ASCII).
+pub const GRAY_SEED_SALT: u64 = 0x6772_6179;
 
 /// One elastic membership change, in the same iteration-relative time base
 /// as [`ScenarioEvent`]. Compiled from the elastic patterns by
@@ -892,6 +1123,9 @@ impl FaultPattern {
     /// and fabric shape, so a malformed scenario file surfaces as an error
     /// instead of an out-of-bounds panic deep inside the runner.
     fn validate(&self, topo: &TopologyConfig, fabric: &Fabric) -> Result<(), String> {
+        if self.is_gray() {
+            return self.validate_gray(topo, fabric);
+        }
         if self.is_switch_scoped() {
             if fabric.is_ideal() {
                 return Err(format!(
@@ -1036,7 +1270,97 @@ impl FaultPattern {
                 }
                 servers_ok(servers)
             }
-            // Switch-scoped patterns were fully handled above.
+            // Switch-scoped and gray patterns were fully handled above.
+            _ => unreachable!(),
+        }
+    }
+
+    /// Range- and sanity-check a gray pattern: indices against the
+    /// topology/fabric shape, knobs against the documented gray clamps
+    /// ([`MAX_LOSS_RATE`], [`MAX_STRAGGLER_FACTOR`], jitter in [0, 1]) —
+    /// rejected here as a clean scenario-file error rather than silently
+    /// clamped at the `note_gray` boundary.
+    fn validate_gray(&self, topo: &TopologyConfig, fabric: &Fabric) -> Result<(), String> {
+        let total = topo.n_servers * topo.nics_per_server;
+        let nic_ok = |nic: usize| {
+            if nic < total {
+                Ok(())
+            } else {
+                Err(format!("{}: nic {nic} out of range (cluster has {total} NICs)", self.kind()))
+            }
+        };
+        let loss_ok = |loss: f64| {
+            if loss.is_finite() && (0.0..=MAX_LOSS_RATE).contains(&loss) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{}: loss must be a finite fraction in [0, {MAX_LOSS_RATE}]",
+                    self.kind()
+                ))
+            }
+        };
+        let jitter_ok = |jitter: f64| {
+            if jitter.is_finite() && (0.0..=1.0).contains(&jitter) {
+                Ok(())
+            } else {
+                Err(format!("{}: jitter must be a finite amplitude in [0, 1]", self.kind()))
+            }
+        };
+        match self {
+            FaultPattern::SilentLoss { nic, loss, .. } => {
+                nic_ok(*nic)?;
+                loss_ok(*loss)
+            }
+            FaultPattern::StragglerNic { nic, factor, jitter, .. } => {
+                nic_ok(*nic)?;
+                jitter_ok(*jitter)?;
+                if factor.is_finite() && (1.0..=MAX_STRAGGLER_FACTOR).contains(factor) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "straggler_nic: factor must be a finite stretch in \
+                         [1, {MAX_STRAGGLER_FACTOR}]"
+                    ))
+                }
+            }
+            FaultPattern::AsymmetricPath { pod, rail, spine, loss, jitter, .. } => {
+                if fabric.is_ideal() {
+                    return Err(
+                        "asymmetric_path: requires a leaf_spine fabric (scenario runs on \
+                         the flat fabric)"
+                            .to_string(),
+                    );
+                }
+                if *pod >= fabric.n_pods() {
+                    return Err(format!(
+                        "asymmetric_path: pod {pod} out of range (fabric has {})",
+                        fabric.n_pods()
+                    ));
+                }
+                if *rail >= topo.nics_per_server {
+                    return Err(format!(
+                        "asymmetric_path: rail {rail} out of range ({} NICs per server)",
+                        topo.nics_per_server
+                    ));
+                }
+                if *spine >= fabric.n_spines() {
+                    return Err(format!(
+                        "asymmetric_path: spine {spine} out of range (fabric has {})",
+                        fabric.n_spines()
+                    ));
+                }
+                loss_ok(*loss)?;
+                jitter_ok(*jitter)
+            }
+            FaultPattern::GrayRamp { nic, peak_loss, jitter, dt, .. } => {
+                nic_ok(*nic)?;
+                loss_ok(*peak_loss)?;
+                jitter_ok(*jitter)?;
+                if !(*dt > 0.0 && dt.is_finite()) {
+                    return Err("gray_ramp: dt must be a positive finite time".to_string());
+                }
+                Ok(())
+            }
             _ => unreachable!(),
         }
     }
@@ -1051,6 +1375,11 @@ impl FaultScenario {
     /// Whether any pattern drives elastic membership changes.
     pub fn is_elastic(&self) -> bool {
         self.patterns.iter().any(FaultPattern::is_elastic)
+    }
+
+    /// Whether any pattern compiles to the gray script.
+    pub fn has_gray(&self) -> bool {
+        self.patterns.iter().any(FaultPattern::is_gray)
     }
 
     /// The effective quorum fraction (explicit `quorum` or the default).
@@ -1144,6 +1473,13 @@ impl FaultScenario {
             &self.workload
         {
             arrivals.validate().map_err(|e| format!("scenario {:?}: {e}", self.name))?;
+            if self.telemetry || self.has_gray() {
+                return Err(format!(
+                    "scenario {:?}: gray patterns and telemetry run on the iteration \
+                     loop — not supported under the request_serving workload",
+                    self.name
+                ));
+            }
             if *replicas < 1 || *output_tokens < 1 || *max_batch < 1 {
                 return Err(format!(
                     "scenario {:?}: replicas, output_tokens and max_batch must be >= 1",
@@ -1265,6 +1601,30 @@ impl FaultScenario {
         (out, switch_out)
     }
 
+    /// Expand the gray patterns into the deterministic gray-fault script.
+    /// Gray compilation draws from its *own* seeded stream
+    /// (`seed ^ GRAY_SEED_SALT`), never the crisp stream of
+    /// [`FaultScenario::compile_full`] — so adding gray patterns to an
+    /// existing scenario leaves its crisp NIC/switch scripts bit-identical.
+    /// Empty for scenarios without gray patterns.
+    pub fn compile_gray(&self, topo: &TopologyConfig) -> Vec<GrayScenarioEvent> {
+        let fabric = Fabric::build(topo, &self.fabric_config());
+        let mut rng = Rng::new(self.seed ^ GRAY_SEED_SALT);
+        let mut out = Vec::new();
+        for p in &self.patterns {
+            p.compile_gray(&fabric, &mut rng, &mut out);
+        }
+        out.sort_by(|a, b| {
+            a.at_iter
+                .total_cmp(&b.at_iter)
+                .then(a.target.sort_key().cmp(&b.target.sort_key()))
+                .then(a.gray.loss_rate.total_cmp(&b.gray.loss_rate))
+                .then(a.gray.straggler_factor.total_cmp(&b.gray.straggler_factor))
+                .then(a.gray.latency_jitter.total_cmp(&b.gray.latency_jitter))
+        });
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         let mut patterns = Json::arr();
         for p in &self.patterns {
@@ -1291,6 +1651,7 @@ impl FaultScenario {
             Some(q) => j.set("quorum", q),
             None => j,
         };
+        let j = if self.telemetry { j.set("telemetry", true) } else { j };
         j.set("patterns", patterns)
     }
 
@@ -1319,6 +1680,7 @@ impl FaultScenario {
                 None => None,
             },
             quorum: j.get("quorum").and_then(Json::as_f64),
+            telemetry: j.get("telemetry").and_then(Json::as_bool).unwrap_or(false),
             patterns,
         })
     }
@@ -1383,6 +1745,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![
                 FaultPattern::Flapping {
                     nic: 0,
@@ -1423,6 +1786,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::Flapping {
                 nic: 0,
                 start: 0.5,
@@ -1446,6 +1810,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::CorrelatedRail {
                 rail: 3,
                 servers: vec![0, 1],
@@ -1477,6 +1842,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.8,
                 count: 4,
@@ -1511,6 +1877,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::DegradeRamp {
                 nic: 2,
                 start: 1.0,
@@ -1542,6 +1909,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![p],
         };
         let bad_nic =
@@ -1578,6 +1946,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::Cascade {
                 start: 0.5,
                 count: 3,
@@ -1614,6 +1983,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![
                 FaultPattern::OneShot { at: 1.35, nic: 0, action: FaultAction::Degrade(0.4) },
                 FaultPattern::Flapping {
@@ -1683,6 +2053,7 @@ mod tests {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: vec![FaultPattern::OneShot {
                 at: 1.5,
                 nic: 0,
@@ -1707,6 +2078,7 @@ mod tests {
             cluster: Some(ClusterSpec { n_servers: 2 * replicas, fabric: FabricConfig::ideal() }),
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns,
         }
     }
@@ -1788,6 +2160,7 @@ mod tests {
             cluster: cluster16(),
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns,
         }
     }

@@ -19,7 +19,7 @@
 
 use crate::baselines::DejaVuModel;
 use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
-use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::collectives::exec::{FaultAction, FaultEvent, ObserveOptions};
 use crate::fabric::SwitchFaultEvent;
 use crate::collectives::{CollKind, PhantomPlane};
 use crate::config::{Preset, TimingConfig};
@@ -213,15 +213,17 @@ pub fn scenario_serving_iteration(
     choice: StrategyChoice,
     script: Vec<FaultEvent>,
     switch_script: Vec<SwitchFaultEvent>,
+    observe: ObserveOptions,
 ) -> IterOutcome {
     let bytes = kv_shard_bytes(model, prompt_tokens);
     let (_, strategy) = pd_pair.compile(CollKind::SendRecv, bytes, 0, choice);
-    let rep = pd_pair.run_scripted(
+    let rep = pd_pair.run_observed(
         CollKind::SendRecv,
         bytes,
         choice,
         script,
         switch_script,
+        observe,
         &mut PhantomPlane,
         0,
     );

@@ -46,6 +46,7 @@ pub fn scenario_for_k(name: &str, k: usize, seed: u64) -> FaultScenario {
         cluster: None,
         recovery: None,
         quorum: None,
+        telemetry: false,
         patterns: vec![FaultPattern::RandomMultiFault { k, at: 1.5 }],
     }
 }

@@ -20,7 +20,7 @@
 
 use crate::baselines::adapcc::AdapCcModel;
 use crate::ccl::{CommGroup, CommWorld, ParallelLayout, StrategyChoice};
-use crate::collectives::exec::{FaultAction, FaultEvent};
+use crate::collectives::exec::{FaultAction, FaultEvent, ObserveOptions};
 use crate::fabric::SwitchFaultEvent;
 use crate::collectives::{CollKind, PhantomPlane, RealPlane};
 use crate::config::{GpuComputeConfig, Preset};
@@ -223,6 +223,7 @@ pub fn scenario_training_iteration(
     choice: StrategyChoice,
     script: Vec<FaultEvent>,
     switch_script: Vec<SwitchFaultEvent>,
+    observe: ObserveOptions,
     verify_data: bool,
 ) -> IterOutcome {
     let crash_outcome = |time: f64| IterOutcome {
@@ -238,6 +239,7 @@ pub fn scenario_training_iteration(
         events_popped: 0,
         domains_touched: 0,
         resident_resources: 0,
+        telemetry: None,
     };
     let side_bytes = (bytes_per_rank / 8).max(1);
     let mut time = 0.0;
@@ -263,18 +265,27 @@ pub fn scenario_training_iteration(
         let mut plane = RealPlane::new(world.topo().n_gpus(), elems);
         plane.fill_pattern();
         let expected = plane.expected_allreduce_over(main.ranks());
-        let rep =
-            main.run_scripted(kind, main_bytes, choice, script, switch_script, &mut plane, elems);
-        let verdict =
-            if rep.crashed { None } else { Some(plane.ranks_equal(main.ranks(), &expected)) };
-        (rep, verdict)
-    } else {
-        let rep = main.run_scripted(
+        let rep = main.run_observed(
             kind,
             main_bytes,
             choice,
             script,
             switch_script,
+            observe,
+            &mut plane,
+            elems,
+        );
+        let verdict =
+            if rep.crashed { None } else { Some(plane.ranks_equal(main.ranks(), &expected)) };
+        (rep, verdict)
+    } else {
+        let rep = main.run_observed(
+            kind,
+            main_bytes,
+            choice,
+            script,
+            switch_script,
+            observe,
             &mut PhantomPlane,
             0,
         );

@@ -182,6 +182,37 @@ fn golden_elastic_rolling_maintenance() {
 }
 
 #[test]
+fn golden_gray_silent_loss() {
+    golden("gray_silent_loss");
+}
+
+#[test]
+fn golden_gray_straggler_nic() {
+    golden("gray_straggler_nic");
+}
+
+#[test]
+fn golden_gray_asym_path() {
+    golden("gray_asym_path");
+}
+
+#[test]
+fn gray_scenarios_carry_telemetry_and_ground_truth() {
+    // The gray scenarios opt in via "telemetry", so their reports — and
+    // goldens — must carry the compiled gray ground truth alongside the
+    // telemetry + localizer block it is scored against.
+    for name in ["gray_silent_loss", "gray_straggler_nic", "gray_asym_path"] {
+        let sc = load(name);
+        assert!(sc.telemetry, "{name} must declare telemetry");
+        assert!(sc.has_gray(), "{name} must carry a gray pattern");
+        let trace = trace_of(&sc);
+        for key in ["\"gray_events\"", "\"telemetry\"", "\"suspects\"", "\"completion_skew\""] {
+            assert!(trace.contains(key), "{name}: trace missing {key}");
+        }
+    }
+}
+
+#[test]
 fn recovery_scenarios_carry_the_recovery_block() {
     // The recovery scenarios opt in via their "recovery" key, so their
     // reports — and goldens — must carry the four-arm comparison.
@@ -267,6 +298,37 @@ fn pre_elastic_fixtures_carry_no_elastic_key() {
 }
 
 #[test]
+fn pre_gray_fixtures_carry_no_gray_or_telemetry_key() {
+    // The gray ground-truth script and the telemetry block are
+    // additive-only: scenarios without gray patterns or a telemetry
+    // declaration — the entire pre-gray corpus — must keep their fixtures
+    // byte-identical, which in particular means neither new top-level key
+    // ever appears in them.
+    let gray_scenarios = ["gray_silent_loss", "gray_straggler_nic", "gray_asym_path"];
+    let dir = repo_root().join("rust/tests/fixtures");
+    let mut checked = 0usize;
+    for ent in fs::read_dir(&dir).unwrap() {
+        let path = ent.unwrap().path();
+        let fname = path.file_name().unwrap().to_string_lossy().into_owned();
+        let Some(stem) = fname.strip_suffix(".golden.json") else { continue };
+        if gray_scenarios.contains(&stem) {
+            continue;
+        }
+        let text = fs::read_to_string(&path).unwrap();
+        assert!(
+            !text.contains("\"gray_events\""),
+            "{fname}: pre-gray fixture must not carry a gray_events key"
+        );
+        assert!(
+            !text.contains("\"telemetry\""),
+            "{fname}: pre-gray fixture must not carry a telemetry key"
+        );
+        checked += 1;
+    }
+    eprintln!("checked {checked} pre-gray fixtures");
+}
+
+#[test]
 fn corpus_covers_required_scenario_kinds() {
     // The acceptance floor: ≥14 distinct scenario kinds in the committed
     // corpus, including flapping, correlated-rail, a fluctuation ramp and
@@ -285,7 +347,7 @@ fn corpus_covers_required_scenario_kinds() {
             }
         }
     }
-    assert!(files >= 20, "corpus has only {files} scenarios");
+    assert!(files >= 26, "corpus has only {files} scenarios");
     for required in [
         "flapping",
         "correlated_rail",
@@ -304,8 +366,12 @@ fn corpus_covers_required_scenario_kinds() {
         "server_down",
         "server_replace",
         "rolling_maintenance",
+        // Gray-fault patterns scored by the online localizer.
+        "silent_loss",
+        "straggler_nic",
+        "asymmetric_path",
     ] {
         assert!(kinds.contains(required), "corpus is missing a {required:?} scenario");
     }
-    assert!(kinds.len() >= 14, "only {} distinct kinds", kinds.len());
+    assert!(kinds.len() >= 17, "only {} distinct kinds", kinds.len());
 }

@@ -95,6 +95,7 @@ fn training_scenario(n_servers: usize, leaf_spine: bool, iters: usize, seed: u64
         cluster,
         recovery: None,
         quorum: None,
+        telemetry: false,
         patterns: vec![],
     }
 }

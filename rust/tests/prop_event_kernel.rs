@@ -330,6 +330,7 @@ fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: match i {
                 0 => vec![FaultPattern::OneShot {
                     at: 1.5,
@@ -357,6 +358,7 @@ fn scenario_corpus_is_thread_count_invariant_under_the_kernel() {
         }),
         recovery: None,
         quorum: None,
+        telemetry: false,
         patterns: vec![FaultPattern::LeafSwitchDown {
             pod: 0,
             rail: 0,

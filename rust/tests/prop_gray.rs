@@ -1,0 +1,371 @@
+//! Property tests for the gray-fault plane, per-collective telemetry and
+//! the online localizer:
+//!
+//! 1. Gray scenario reports are bit-identical across same-seed runs (the
+//!    gray script, jitter draws and telemetry all come from seeded
+//!    deterministic streams).
+//! 2. The identity gray state is a strict no-op: a scenario carrying a
+//!    zero-loss / zero-jitter / unity-straggler gray pattern reproduces
+//!    the pattern-free run bit for bit, and telemetry observation never
+//!    perturbs what it observes.
+//! 3. Gray patterns compile on their own salted RNG stream
+//!    ([`GRAY_SEED_SALT`]) — adding them never shifts the crisp event
+//!    script, so every pre-gray golden trace is byte-identical.
+//! 4. The localizer names the planted element top-1 on ≥ 90% of
+//!    single-gray-element scenarios (flat testbed and leaf/spine).
+//! 5. Gray patterns and the `telemetry` flag round-trip through JSON, and
+//!    every compiled gray state honours the documented clamp ranges.
+//!
+//! (`util::prop` is the mini driver — failures report a replayable seed.)
+
+use r2ccl::collectives::FaultAction;
+use r2ccl::config::Preset;
+use r2ccl::fabric::{FabricConfig, LeafSpineCfg};
+use r2ccl::netsim::{
+    clamp_latency_jitter, clamp_loss_rate, clamp_straggler_factor, GrayState, MAX_LOSS_RATE,
+    MAX_STRAGGLER_FACTOR, MIN_GRAY_CAPACITY,
+};
+use r2ccl::scenario::{ClusterSpec, FaultPattern, FaultScenario, ScenarioRunner, Workload};
+use r2ccl::util::prop::check;
+use r2ccl::util::Rng;
+
+/// A training scenario on the flat 2-server testbed (16 NICs) or the
+/// 16-server leaf/spine cluster (128 NICs, 4 pods × 2 spines).
+fn training_scenario(leaf_spine: bool, iters: usize, seed: u64) -> FaultScenario {
+    let (cluster, workload) = if leaf_spine {
+        (
+            Some(ClusterSpec {
+                n_servers: 16,
+                fabric: FabricConfig::leaf_spine_with(LeafSpineCfg {
+                    pod_size: 4,
+                    spines: 2,
+                    ..LeafSpineCfg::default()
+                }),
+            }),
+            Workload::Training { tp: 8, dp: 16, pp: 1, bytes_per_rank: 1 << 22 },
+        )
+    } else {
+        (None, Workload::Training { tp: 1, dp: 16, pp: 1, bytes_per_rank: 1 << 22 })
+    };
+    FaultScenario {
+        name: "prop-gray".into(),
+        seed,
+        iters,
+        workload,
+        max_overhead: None,
+        cluster,
+        recovery: None,
+        quorum: None,
+        telemetry: false,
+        patterns: vec![],
+    }
+}
+
+fn n_nics(leaf_spine: bool) -> usize {
+    if leaf_spine {
+        16 * 8
+    } else {
+        2 * 8
+    }
+}
+
+/// A random gray pattern targeting one NIC, active from `at` onward.
+fn random_nic_gray(rng: &mut Rng, nic: usize, at: f64) -> FaultPattern {
+    if rng.chance(0.5) {
+        FaultPattern::SilentLoss { nic, at, loss: rng.range_f64(0.08, 0.3), clear_after: None }
+    } else {
+        FaultPattern::StragglerNic {
+            nic,
+            at,
+            factor: rng.range_f64(3.0, 8.0),
+            jitter: rng.range_f64(1.0e-5, 5.0e-5),
+            clear_after: None,
+        }
+    }
+}
+
+#[test]
+fn prop_gray_reports_bit_identical_same_seed() {
+    check("gray report determinism", 10, |rng| {
+        let leaf_spine = rng.chance(0.4);
+        let iters = rng.range(2, 5);
+        let mut sc = training_scenario(leaf_spine, iters, rng.next_u64());
+        sc.telemetry = rng.chance(0.7);
+        let faults = rng.range(1, 4);
+        for _ in 0..faults {
+            let nic = rng.next_below(n_nics(leaf_spine));
+            let at = rng.range_f64(0.2, iters as f64 - 0.2);
+            sc.patterns.push(random_nic_gray(rng, nic, at));
+        }
+        if leaf_spine && rng.chance(0.5) {
+            sc.patterns.push(FaultPattern::AsymmetricPath {
+                pod: rng.next_below(4),
+                rail: rng.next_below(8),
+                spine: rng.next_below(2),
+                at: rng.range_f64(0.2, iters as f64 - 0.2),
+                loss: rng.range_f64(0.05, 0.25),
+                jitter: rng.range_f64(0.0, 3.0e-5),
+                clear_after: if rng.chance(0.4) { Some(rng.range_f64(0.4, 1.2)) } else { None },
+            });
+        }
+        let preset = Preset::testbed();
+        let a = ScenarioRunner::new(&sc, &preset).run();
+        let b = ScenarioRunner::new(&sc, &preset).run();
+        assert!(!a.crashed, "gray faults never kill a path — the run must survive");
+        assert_eq!(
+            a.to_json().pretty(),
+            b.to_json().pretty(),
+            "same seed must reproduce the gray trace bit-for-bit"
+        );
+    });
+}
+
+#[test]
+fn prop_identity_gray_state_is_a_strict_noop() {
+    check("identity gray == no gray", 8, |rng| {
+        let leaf_spine = rng.chance(0.4);
+        let iters = rng.range(2, 5);
+        let base = training_scenario(leaf_spine, iters, rng.next_u64());
+        // Variant: the same scenario plus an identity-state gray pattern
+        // (loss 0, jitter 0) that still compiles, scripts and folds into
+        // the engine — arming the gray plane must not perturb the kernel.
+        let mut armed = base.clone();
+        armed.patterns.push(FaultPattern::SilentLoss {
+            nic: rng.next_below(n_nics(leaf_spine)),
+            at: rng.range_f64(0.2, iters as f64 - 0.2),
+            loss: 0.0,
+            clear_after: None,
+        });
+        let preset = Preset::testbed();
+        let plain = ScenarioRunner::new(&base, &preset).run();
+        let rep = ScenarioRunner::new(&armed, &preset).run();
+        assert!(!rep.gray_events.is_empty(), "the identity pattern still compiles to a script");
+        assert_eq!(plain.iterations.len(), rep.iterations.len());
+        for (p, g) in plain.iterations.iter().zip(&rep.iterations) {
+            assert_eq!(p.time.to_bits(), g.time.to_bits(), "iter {}: time drifted", p.iter);
+            assert_eq!(p.wire_bytes, g.wire_bytes, "iter {}: wire bytes drifted", p.iter);
+            assert_eq!(p.strategy, g.strategy);
+        }
+        assert_eq!(plain.total_time.to_bits(), rep.total_time.to_bits());
+        // The plain report predates gray/telemetry and must not carry the
+        // new keys — that is the byte-identity guarantee for the
+        // pre-existing golden corpus.
+        let plain_json = plain.to_json().pretty();
+        assert!(!plain_json.contains("\"gray_events\""));
+        assert!(!plain_json.contains("\"telemetry\""));
+        assert!(rep.to_json().pretty().contains("\"gray_events\""));
+    });
+}
+
+#[test]
+fn prop_telemetry_observation_is_passive() {
+    check("telemetry is passive", 8, |rng| {
+        let leaf_spine = rng.chance(0.4);
+        let iters = rng.range(2, 5);
+        let mut sc = training_scenario(leaf_spine, iters, rng.next_u64());
+        if rng.chance(0.6) {
+            let nic = rng.next_below(n_nics(leaf_spine));
+            let at = rng.range_f64(0.2, iters as f64 - 0.2);
+            sc.patterns.push(random_nic_gray(rng, nic, at));
+        }
+        let mut observed = sc.clone();
+        observed.telemetry = true;
+        let preset = Preset::testbed();
+        let blind = ScenarioRunner::new(&sc, &preset).run();
+        let seen = ScenarioRunner::new(&observed, &preset).run();
+        for (b, s) in blind.iterations.iter().zip(&seen.iterations) {
+            assert_eq!(b.time.to_bits(), s.time.to_bits(), "iter {}: observation perturbed", b.iter);
+            assert_eq!(b.wire_bytes, s.wire_bytes);
+        }
+        assert_eq!(blind.total_time.to_bits(), seen.total_time.to_bits());
+        assert!(blind.telemetry.is_none());
+        let telem = seen.telemetry.as_ref().expect("declared telemetry must be collected");
+        assert_eq!(telem.iterations.len(), seen.iterations.len());
+        for t in &telem.iterations {
+            assert!(t.pairs > 0, "iter {}: a training iteration moves bytes", t.iter);
+            assert!(t.rtt_samples > 0, "iter {}: probe sweep must run", t.iter);
+        }
+    });
+}
+
+#[test]
+fn prop_gray_compiles_on_a_salted_stream() {
+    check("gray stream is salted", 10, |rng| {
+        let leaf_spine = rng.chance(0.4);
+        let iters = rng.range(3, 6);
+        // Crisp patterns that consume RNG draws during compilation.
+        let mut crisp = training_scenario(leaf_spine, iters, rng.next_u64());
+        crisp.patterns.push(FaultPattern::Flapping {
+            nic: rng.next_below(n_nics(leaf_spine)),
+            start: 0.6,
+            cycles: rng.range(1, 4),
+            down: 0.2,
+            up: 0.3,
+            jitter: 0.05,
+        });
+        crisp.patterns.push(FaultPattern::OneShot {
+            at: rng.range_f64(0.2, iters as f64 - 0.2),
+            nic: rng.next_below(n_nics(leaf_spine)),
+            action: FaultAction::FailNic,
+        });
+        let mut grayed = crisp.clone();
+        grayed.patterns.push(FaultPattern::GrayRamp {
+            nic: rng.next_below(n_nics(leaf_spine)),
+            start: 0.5,
+            steps: rng.range(2, 6),
+            dt: 0.4,
+            peak_loss: rng.range_f64(0.05, 0.3),
+            jitter: rng.range_f64(0.0, 2.0e-5),
+        });
+        let topo_cfg = r2ccl::scenario::effective_preset(&crisp, &Preset::testbed()).topo;
+        // Adding gray patterns must not shift the crisp compile stream —
+        // otherwise every pre-gray golden trace would move.
+        assert_eq!(crisp.compile_full(&topo_cfg), grayed.compile_full(&topo_cfg));
+        assert!(crisp.compile_gray(&topo_cfg).is_empty());
+        let ga = grayed.compile_gray(&topo_cfg);
+        let gb = grayed.compile_gray(&topo_cfg);
+        assert_eq!(ga, gb, "gray compilation is deterministic");
+        assert!(!ga.is_empty());
+        for w in ga.windows(2) {
+            assert!(w[0].at_iter <= w[1].at_iter, "gray script is time-sorted");
+        }
+        for e in &ga {
+            let g = e.gray;
+            assert!((0.0..=MAX_LOSS_RATE).contains(&g.loss_rate));
+            assert!((0.0..=1.0).contains(&g.latency_jitter));
+            assert!((1.0..=MAX_STRAGGLER_FACTOR).contains(&g.straggler_factor));
+        }
+    });
+}
+
+#[test]
+fn localizer_names_the_planted_element_top1() {
+    // The ISSUE acceptance bar: ≥ 90% top-1 on single-gray-element
+    // scenarios, flat testbed and leaf/spine alike. Deterministic seed, so
+    // the measured accuracy is a fixed number — the assert is a floor,
+    // not a flake.
+    let mut rng = Rng::new(0x6772_6179);
+    let cases = 20usize;
+    let mut hits = 0usize;
+    let mut misses = Vec::new();
+    for i in 0..cases {
+        let leaf_spine = i % 2 == 1;
+        let mut sc = training_scenario(leaf_spine, 3, rng.next_u64());
+        sc.telemetry = true;
+        let nic = rng.next_below(n_nics(leaf_spine));
+        sc.patterns.push(random_nic_gray(&mut rng, nic, 0.25));
+        let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+        assert!(!rep.crashed);
+        let truth: Vec<String> = rep
+            .gray_events
+            .iter()
+            .filter(|e| !e.gray.is_healthy())
+            .map(|e| e.target.label())
+            .collect();
+        assert!(truth.contains(&format!("nic:{nic}")), "ground truth carries the planted NIC");
+        let top = rep
+            .telemetry
+            .as_ref()
+            .and_then(|t| t.suspects.first())
+            .map(|s| s.target.label());
+        match top {
+            Some(ref t) if truth.contains(t) => hits += 1,
+            other => misses.push((i, leaf_spine, nic, other)),
+        }
+    }
+    assert!(
+        hits * 10 >= cases * 9,
+        "localizer top-1 {hits}/{cases} < 90%; misses: {misses:?}"
+    );
+}
+
+#[test]
+fn asymmetric_path_gray_scores_the_uplink() {
+    // Structural check for the uplink-level gray fault: the compiled
+    // ground truth names an uplink, the run survives, and the localizer
+    // produces a non-empty ranking from the tainted window.
+    let mut sc = training_scenario(true, 3, 77);
+    sc.telemetry = true;
+    sc.patterns.push(FaultPattern::AsymmetricPath {
+        pod: 0,
+        rail: 0,
+        spine: 0,
+        at: 0.3,
+        loss: 0.25,
+        jitter: 2.0e-5,
+        clear_after: None,
+    });
+    let rep = ScenarioRunner::new(&sc, &Preset::testbed()).run();
+    assert!(!rep.crashed);
+    let truth: Vec<String> = rep.gray_events.iter().map(|e| e.target.label()).collect();
+    assert!(
+        truth.iter().any(|t| t.starts_with("uplink:")),
+        "asymmetric_path compiles to an uplink target: {truth:?}"
+    );
+    let telem = rep.telemetry.as_ref().expect("telemetry declared");
+    assert!(!telem.suspects.is_empty(), "a tainted window must produce a ranking");
+}
+
+#[test]
+fn gray_patterns_round_trip_through_json() {
+    let mut sc = training_scenario(true, 4, 4242);
+    sc.telemetry = true;
+    sc.patterns = vec![
+        FaultPattern::SilentLoss { nic: 3, at: 0.8, loss: 0.12, clear_after: Some(1.5) },
+        FaultPattern::StragglerNic {
+            nic: 17,
+            at: 1.2,
+            factor: 4.0,
+            jitter: 2.5e-5,
+            clear_after: None,
+        },
+        FaultPattern::AsymmetricPath {
+            pod: 1,
+            rail: 2,
+            spine: 1,
+            at: 0.5,
+            loss: 0.2,
+            jitter: 1.0e-5,
+            clear_after: Some(2.0),
+        },
+        FaultPattern::GrayRamp { nic: 9, start: 0.4, steps: 5, dt: 0.5, peak_loss: 0.3, jitter: 0.0 },
+    ];
+    let text = sc.to_json().pretty();
+    let back = FaultScenario::from_json_str(&text).unwrap();
+    assert_eq!(back.patterns, sc.patterns, "gray patterns survive the JSON round trip");
+    assert!(back.telemetry, "the telemetry flag survives the round trip");
+    assert_eq!(back.to_json().pretty(), text, "serialization is a fixed point");
+    // A scenario that never opted in serializes no telemetry key at all.
+    let mut quiet = sc.clone();
+    quiet.telemetry = false;
+    assert!(!quiet.to_json().pretty().contains("\"telemetry\""));
+    assert!(!FaultScenario::from_json_str(&quiet.to_json().pretty()).unwrap().telemetry);
+}
+
+#[test]
+fn gray_knobs_clamp_at_the_documented_boundaries() {
+    // Loss: NaN / negatives → 0; ceiling at MAX_LOSS_RATE (1.0 would be a
+    // dead link, not a gray one).
+    assert_eq!(clamp_loss_rate(f64::NAN), 0.0);
+    assert_eq!(clamp_loss_rate(-0.3), 0.0);
+    assert_eq!(clamp_loss_rate(0.5), 0.5);
+    assert_eq!(clamp_loss_rate(1.0), MAX_LOSS_RATE);
+    assert_eq!(clamp_loss_rate(f64::INFINITY), MAX_LOSS_RATE);
+    // Straggler: sub-unity and NaN → 1 (no slowdown); ceiling at
+    // MAX_STRAGGLER_FACTOR.
+    assert_eq!(clamp_straggler_factor(f64::NAN), 1.0);
+    assert_eq!(clamp_straggler_factor(0.25), 1.0);
+    assert_eq!(clamp_straggler_factor(3.0), 3.0);
+    assert_eq!(clamp_straggler_factor(1.0e9), MAX_STRAGGLER_FACTOR);
+    // Jitter: NaN / negatives → 0; ceiling at 1 second.
+    assert_eq!(clamp_latency_jitter(f64::NAN), 0.0);
+    assert_eq!(clamp_latency_jitter(-1.0), 0.0);
+    assert_eq!(clamp_latency_jitter(5.0), 1.0);
+    // sanitized() additionally holds the sub-threshold capacity floor:
+    // the effective share (1 - loss) / straggler never drops below
+    // MIN_GRAY_CAPACITY — gray faults are by definition sub-threshold.
+    let g = GrayState { loss_rate: 0.9, latency_jitter: 0.0, straggler_factor: 20.0 }.sanitized();
+    let share = (1.0 - g.loss_rate) / g.straggler_factor;
+    assert!(share >= MIN_GRAY_CAPACITY - 1e-12, "capacity share {share} under the floor");
+    assert!(GrayState::HEALTHY.sanitized().is_healthy());
+}

@@ -301,6 +301,7 @@ fn parallel_scenario_corpus_matches_serial() {
             cluster: None,
             recovery: None,
             quorum: None,
+            telemetry: false,
             patterns: match i {
                 0 => vec![],
                 1 => vec![FaultPattern::OneShot {

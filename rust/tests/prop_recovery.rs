@@ -62,6 +62,7 @@ fn rollback_scenario() -> FaultScenario {
         cluster: None,
         recovery: Some(RecoveryConfig::default()),
         quorum: None,
+        telemetry: false,
         patterns: vec![FaultPattern::OneShot { at: 6.5, nic: 0, action: FaultAction::FailNic }],
     }
 }

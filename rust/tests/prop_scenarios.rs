@@ -67,6 +67,7 @@ fn random_scenario(rng: &mut Rng) -> FaultScenario {
         cluster: None,
         recovery: None,
         quorum: None,
+        telemetry: false,
         patterns,
     }
 }

@@ -35,6 +35,7 @@ fn request_scenario(name: &str, seed: u64, patterns: Vec<FaultPattern>) -> Fault
         cluster: Some(ClusterSpec { n_servers: 4, fabric: FabricConfig::ideal() }),
         recovery: None,
         quorum: None,
+        telemetry: false,
         patterns,
     }
 }
